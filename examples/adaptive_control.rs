@@ -1,0 +1,126 @@
+//! EXP-E2E — the required end-to-end driver, proving all layers compose:
+//!
+//! Phase 1 (L3 leader + native workers): PEPG evolves the plasticity
+//! rule on ant-dir's 8 training directions for a few hundred
+//! generations-equivalent of rollouts (budget-reduced here; pass
+//! `--full` for the paper-scale run).
+//!
+//! Phase 2 (L3 + runtime + L2/L1 artifact): the frozen rule θ* is
+//! installed into the AOT-compiled XLA step artifact (the HLO lowered
+//! from the Pallas kernels) and deployed: the controller starts from
+//! **zero weights**, adapts online to a *novel* target direction, and
+//! at mid-episode a leg failure is injected — the rule must develop
+//! compensatory behaviour. Falls back to the native backend when
+//! artifacts aren't built.
+//!
+//! Output: per-phase reward rates, recovery ratio, CSV of the episode,
+//! result lines for EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example adaptive_control [-- --full]`
+
+use firefly_p::backend::{NativeBackend, SnnBackend, XlaBackend};
+use firefly_p::coordinator::adapt_loop::{run_adaptation, AdaptConfig};
+use firefly_p::coordinator::offline::{train_rule, TrainConfig};
+use firefly_p::env::protocol::{eval_grid, TaskFamily};
+use firefly_p::env::Perturbation;
+use firefly_p::es::eval::{rollout_fitness, EvalSpec, GenomeKind};
+use firefly_p::runtime::Registry;
+use firefly_p::snn::NetworkRule;
+use firefly_p::util::csvio::CsvWriter;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    println!("=== EXP-E2E: Phase 1 → Phase 2 with leg failure (ant-dir) ===\n");
+
+    // ------------------------------------------------ Phase 1 (offline)
+    let mut cfg = TrainConfig::quick("ant-dir", GenomeKind::PlasticityRule);
+    if full {
+        cfg = TrainConfig::paper("ant-dir", GenomeKind::PlasticityRule);
+        cfg.hidden = 128; // matches the `ant` AOT artifact geometry
+    } else {
+        cfg.generations = 40;
+        cfg.pairs = 16;
+        cfg.hidden = 128; // keep artifact-compatible even in quick mode
+        cfg.n_tasks = 4;
+    }
+    println!(
+        "[Phase 1] PEPG: {} generations × {} rollouts/gen on {} training directions",
+        cfg.generations,
+        2 * cfg.pairs,
+        cfg.n_tasks
+    );
+    let t0 = std::time::Instant::now();
+    let result = train_rule(&cfg);
+    println!(
+        "[Phase 1] done in {:.1}s: pop-mean fitness {:.2} → {:.2}\n",
+        t0.elapsed().as_secs_f64(),
+        result.history.first().unwrap().mean_fitness,
+        result.history.last().unwrap().mean_fitness
+    );
+
+    // ---------------------------------------------- Phase 2 (deployment)
+    let spec = cfg.spec();
+    let net_cfg = spec.snn_config();
+    let rule = NetworkRule::from_flat(&net_cfg, &result.genome);
+
+    // Generalization check on novel directions (Fig. 3's protocol).
+    let novel = eval_grid(TaskFamily::Direction);
+    let eval_spec = EvalSpec {
+        tasks: novel[..8].to_vec(),
+        ..spec.clone()
+    };
+    let novel_fit = rollout_fitness(&eval_spec, &result.genome);
+    let zero_fit = rollout_fitness(&eval_spec, &vec![0.0; result.genome.len()]);
+    println!(
+        "[Phase 2] novel-direction fitness: trained rule {novel_fit:.2} vs zero rule {zero_fit:.2}"
+    );
+
+    // Deploy through the production path (XLA artifact) when available.
+    let mut backend: Box<dyn SnnBackend> = match Registry::open_default() {
+        Ok(_) => match XlaBackend::plastic("ant", &rule) {
+            Ok(b) => {
+                println!("[Phase 2] backend: AOT XLA artifact (ant_step.hlo.txt via PJRT)");
+                Box::new(b)
+            }
+            Err(e) => {
+                println!("[Phase 2] backend: native (xla unavailable: {e})");
+                Box::new(NativeBackend::plastic(net_cfg.clone(), rule.clone()))
+            }
+        },
+        Err(e) => {
+            println!("[Phase 2] backend: native ({e})");
+            Box::new(NativeBackend::plastic(net_cfg.clone(), rule.clone()))
+        }
+    };
+
+    // Online adaptation on a novel direction with a mid-episode leg
+    // failure.
+    let task = novel[17].clone();
+    let acfg = AdaptConfig {
+        env_name: "ant-dir".into(),
+        perturbation: Some(Perturbation::leg_failure(vec![0])),
+        perturb_at: 100,
+        seed: 11,
+        window: 20,
+    };
+    println!(
+        "[Phase 2] adapting online to novel direction {:.1}° with leg-0 failure at t=100 ...",
+        task.value.to_degrees()
+    );
+    let log = run_adaptation(backend.as_mut(), &acfg, &task);
+
+    let mut csv = CsvWriter::create("results/exp_e2e_episode.csv", &["t", "reward"]).unwrap();
+    for (t, r) in log.rewards.iter().enumerate() {
+        csv.row_f64(&[t as f64, *r]).unwrap();
+    }
+    let path = csv.finish().unwrap();
+
+    println!("\n=== EXP-E2E results ===");
+    println!("backend                = {}", backend.name());
+    println!("total episode reward   = {:.2}", log.total_reward);
+    println!("pre-perturbation rate  = {:.3}", log.pre_perturb_rate);
+    println!("post-shock rate        = {:.3}", log.shock_rate);
+    println!("final rate             = {:.3}", log.final_rate);
+    println!("recovery ratio         = {:.3}", log.recovery_ratio());
+    println!("episode CSV            = {}", path.display());
+}

@@ -1,0 +1,66 @@
+//! FPGA latency walk-through: step the cycle-accurate simulator on the
+//! paper's control network and print where the cycles go — prologue,
+//! Phase A / Phase B overlap, memory-arbitration stalls — plus the
+//! end-to-end µs/step against the paper's 8 µs claim.
+//!
+//! Run: `cargo run --release --example fpga_latency`
+
+use firefly_p::fpga::power::{Activity, PowerModel};
+use firefly_p::fpga::resources::{NetGeometry, ResourceReport};
+use firefly_p::fpga::{layout, FpgaSim, HwConfig};
+use firefly_p::snn::plasticity::RuleParams;
+use firefly_p::snn::SnnConfig;
+use firefly_p::util::rng::Pcg64;
+
+fn main() {
+    println!("=== FireFly-P cycle-accurate latency walk-through ===\n");
+    // The paper's hardware instance: 32-128-8 control network, 16 PEs,
+    // 200 MHz (Table I geometry).
+    let geo = NetGeometry::paper_control();
+    let mut cfg = SnnConfig::control(geo.n_in, geo.n_out);
+    cfg.n_hidden = geo.n_hidden;
+
+    let mut rng = Pcg64::new(1, 0);
+    let l1 = RuleParams::random(cfg.n_in, cfg.n_hidden, 0.2, &mut rng);
+    let l2 = RuleParams::random(cfg.n_hidden, cfg.n_out, 0.2, &mut rng);
+
+    for (label, hw) in [
+        ("overlapped dual-engine (paper)", HwConfig::default()),
+        ("sequential ablation", HwConfig::sequential()),
+    ] {
+        let mut sim = FpgaSim::new_plastic(cfg.clone(), l1.clone(), l2.clone(), hw.clone());
+        let steps = 200;
+        for _ in 0..steps {
+            let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(0.5)).collect();
+            sim.step(&spikes);
+        }
+        sim.finish();
+        let c = &sim.cycles;
+        println!("--- {label}");
+        println!(
+            "    cycles/step {:.0}  ⇒  {:.2} µs/step @ {} MHz  ({:.0} steps/s)",
+            sim.steady_state_cycles_per_step(),
+            sim.latency_us(),
+            hw.clock_mhz,
+            sim.fps()
+        );
+        println!(
+            "    prologue {}  phaseA {}  phaseB {}  epilogue {}  total {}",
+            c.prologue, c.phase_a, c.phase_b, c.epilogue, c.total
+        );
+        println!(
+            "    engine busy: forward {:.0}%  plasticity {:.0}%   BRAM conflicts: {}",
+            100.0 * c.fwd_busy as f64 / c.total as f64,
+            100.0 * c.plast_busy as f64 / c.total as f64,
+            sim.mem.total_conflicts()
+        );
+        let act = Activity::from_sim(&sim);
+        let report = ResourceReport::build(&hw, &geo);
+        let p = PowerModel::new(report).estimate(&act);
+        println!("    power at measured activity: {:.3} W\n", p.total());
+    }
+
+    println!("paper claims: 8 µs end-to-end, 0.713 W\n");
+    let report = ResourceReport::build(&HwConfig::default(), &geo);
+    print!("{}", layout::render_floorplan(&report));
+}

@@ -1,0 +1,53 @@
+//! MNIST online-learning demo (the Table II workload, reduced budget):
+//! the learnable FireFly-P rule vs. the fixed pair-based STDP baseline
+//! on the synthetic digit corpus, with the end-to-end (inference +
+//! learning) FPS estimated by the cycle-accurate FPGA model.
+//!
+//! Run: `cargo run --release --example mnist_online_learning`
+
+use firefly_p::fpga::resources::NetGeometry;
+use firefly_p::fpga::HwConfig;
+use firefly_p::mnist::{generate, MnistConfig, OnlineMnist, UpdateRule};
+
+fn main() {
+    println!("=== MNIST online learning (Table II workload, synthetic corpus) ===\n");
+    let train = generate(300, 1);
+    let test = generate(100, 2);
+
+    let cfg = MnistConfig {
+        hidden: 256,
+        k_winners: 8,
+        t_present: 20,
+        ..Default::default()
+    };
+
+    for (name, rule) in [
+        ("FireFly-P learnable rule", UpdateRule::learnable_default()),
+        ("pair-based STDP baseline", UpdateRule::pair_stdp_default()),
+    ] {
+        let mut m = OnlineMnist::new(cfg.clone(), rule);
+        print!("{name:<28}");
+        for epoch in 0..4 {
+            m.train_epoch(&train);
+            print!(" e{epoch}:{:.2}", m.accuracy(&test));
+        }
+        println!();
+    }
+
+    // End-to-end FPS at the paper's geometry from the cycle model:
+    // per-timestep cycles ≈ L1 update (dominant) with overlap, ×
+    // t_present timesteps per frame, at 200 MHz.
+    let hw = HwConfig::default();
+    let geo = NetGeometry::mnist();
+    let l1_syn = geo.n_in * geo.n_hidden;
+    let l2_syn = geo.n_hidden * geo.n_out;
+    let update_cycles = (l1_syn + l2_syn).div_ceil(hw.syn_per_cycle) + 2 * hw.plast_pipe_depth;
+    let t_present = 30; // paper's ~31 timesteps/frame at 32 FPS
+    let frame_cycles = (update_cycles * t_present) as f64;
+    let fps = hw.clock_mhz * 1e6 / frame_cycles;
+    println!(
+        "\nFPGA model (784-1024-10, {} syn/cycle, {} MHz): {:.0} cycles/step × {} steps ⇒ {:.1} end-to-end FPS (paper: 32)",
+        hw.syn_per_cycle, hw.clock_mhz, update_cycles as f64, t_present, fps
+    );
+    println!("(full sweep: `cargo bench --bench bench_table2_mnist`)");
+}

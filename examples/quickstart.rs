@@ -1,0 +1,84 @@
+//! Quickstart: the whole FireFly-P pipeline in one minute.
+//!
+//! 1. Train a plasticity rule offline on a reduced budget (Phase 1).
+//! 2. Deploy it: run an online-adaptation episode from zero weights
+//!    (Phase 2) on the native backend and — when `make artifacts` has
+//!    run — the AOT XLA artifact (the production path).
+//! 3. Print the FPGA resource/latency headline numbers.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use firefly_p::backend::{NativeBackend, XlaBackend};
+use firefly_p::coordinator::adapt_loop::{run_adaptation, AdaptConfig};
+use firefly_p::coordinator::offline::{train_rule, TrainConfig};
+use firefly_p::env::protocol::{train_grid, TaskFamily};
+use firefly_p::es::eval::GenomeKind;
+use firefly_p::fpga::power::{Activity, PowerModel};
+use firefly_p::fpga::resources::{NetGeometry, ResourceReport};
+use firefly_p::fpga::HwConfig;
+use firefly_p::runtime::Registry;
+use firefly_p::snn::NetworkRule;
+
+fn main() {
+    println!("=== FireFly-P quickstart ===\n");
+
+    // ---- Phase 1: offline rule optimization (reduced budget) ----------
+    println!("[1/3] Phase 1 — evolving a plasticity rule on cheetah-vel ...");
+    let mut cfg = TrainConfig::quick("cheetah-vel", GenomeKind::PlasticityRule);
+    cfg.generations = 20;
+    cfg.pairs = 12;
+    cfg.hidden = 32;
+    let result = train_rule(&cfg);
+    println!(
+        "      fitness: gen0 {:.2} → gen{} {:.2}",
+        result.history.first().unwrap().mean_fitness,
+        result.history.len() - 1,
+        result.history.last().unwrap().mean_fitness
+    );
+
+    // ---- Phase 2: online adaptation from zero weights ------------------
+    println!("\n[2/3] Phase 2 — online adaptation on a training velocity ...");
+    let spec = cfg.spec();
+    let net_cfg = spec.snn_config();
+    let rule = NetworkRule::from_flat(&net_cfg, &result.genome);
+    let task = train_grid(TaskFamily::Velocity)[3].clone();
+    let acfg = AdaptConfig {
+        env_name: "cheetah-vel".into(),
+        seed: 1,
+        ..Default::default()
+    };
+
+    let mut native = NativeBackend::plastic(net_cfg.clone(), rule.clone());
+    let log = run_adaptation(&mut native, &acfg, &task);
+    println!("      native backend: episode reward {:.2}", log.total_reward);
+
+    // the AOT/XLA production path needs `make artifacts` and the
+    // matching geometry (hidden=128); demonstrate loading when present.
+    match Registry::open_default() {
+        Ok(_) if net_cfg.n_hidden == 128 => match XlaBackend::plastic("cheetah", &rule) {
+            Ok(mut xla) => {
+                let log = run_adaptation(&mut xla, &acfg, &task);
+                println!("      xla backend:    episode reward {:.2}", log.total_reward);
+            }
+            Err(e) => println!("      (xla backend unavailable: {e})"),
+        },
+        Ok(_) => println!("      (xla path skipped: quickstart uses hidden=32, artifacts are 128)"),
+        Err(e) => println!("      ({e})"),
+    }
+
+    // ---- Hardware headline numbers -------------------------------------
+    println!("\n[3/3] FPGA instance (Table I geometry) ...");
+    let hw = HwConfig::default();
+    let report = ResourceReport::build(&hw, &NetGeometry::paper_control());
+    let t = report.total();
+    let p = PowerModel::new(report).estimate(&Activity::nominal());
+    println!(
+        "      {:.1} kLUTs, {} DSPs, {:.1} BRAMs @ {} MHz — {:.3} W",
+        t.luts / 1000.0,
+        t.dsps as u64,
+        t.brams,
+        hw.clock_mhz,
+        p.total()
+    );
+    println!("\nDone. Next: examples/adaptive_control.rs for the full EXP-E2E run.");
+}

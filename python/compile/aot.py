@@ -1,0 +1,112 @@
+"""AOT bridge: lower the Layer-2 step function to HLO **text** artifacts
+the Rust runtime loads through the PJRT CPU client.
+
+HLO text — NOT `.serialize()` / serialized HloModuleProto — is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+that the xla crate's XLA (xla_extension 0.5.1) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Each network geometry × variant produces:
+    artifacts/<name>.hlo.txt    the module
+    artifacts/<name>.meta       shapes + arg order (parsed by
+                                rust/src/runtime/artifact.rs)
+
+Usage:  python -m compile.aot --outdir ../artifacts [--only tiny]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import ARG_ORDER, OUT_ORDER, example_args, snn_step, snn_step_forward_only
+
+#: name → (n_in, n_hidden, n_out). Control geometries follow the
+#: population encoder (8 neurons/obs-dim) and paired action decoding
+#: (2 neurons/action-dim) of rust/src/es/eval.rs; hidden = 128 per the
+#: paper (§IV-A), 1024 for MNIST.
+GEOMETRIES = {
+    "tiny": (8, 16, 4),               # test geometry (SnnConfig::tiny)
+    "ant": (64, 128, 8),              # 8 obs dims, 4 actions
+    "cheetah": (48, 128, 12),         # 6 obs dims, 6 actions
+    "reacher": (80, 128, 4),          # 10 obs dims, 2 actions
+    "mnist": (784, 1024, 10),         # Table II network
+}
+
+VARIANTS = {
+    "step": snn_step,                 # inference + plasticity
+    "fwd": snn_step_forward_only,     # inference only (baseline serving)
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    Rust side unwraps one tuple of OUT_ORDER arrays)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def meta_text(name, variant, dims) -> str:
+    """Key=value sidecar (parsed by the Rust artifact registry)."""
+    n_in, n_hidden, n_out = dims
+    lines = [
+        f"name={name}",
+        f"variant={variant}",
+        f"n_in={n_in}",
+        f"n_hidden={n_hidden}",
+        f"n_out={n_out}",
+        f"args={','.join(ARG_ORDER)}",
+        f"outputs={','.join(OUT_ORDER)}",
+        "dtype=f32",
+    ]
+    return "\n".join(lines) + "\n"
+
+
+def build_one(outdir, geom_name, dims, variant_name, fn) -> str:
+    lowered = jax.jit(fn).lower(*example_args(*dims))
+    text = to_hlo_text(lowered)
+    base = f"{geom_name}_{variant_name}"
+    hlo_path = os.path.join(outdir, f"{base}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    with open(os.path.join(outdir, f"{base}.meta"), "w") as f:
+        f.write(meta_text(geom_name, variant_name, dims))
+    return hlo_path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="build a single geometry")
+    ap.add_argument(
+        "--out", default=None, help="legacy single-file mode (tiny step artifact)"
+    )
+    args = ap.parse_args()
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        lowered = jax.jit(snn_step).lower(*example_args(*GEOMETRIES["tiny"]))
+        with open(args.out, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"wrote {args.out}")
+        return 0
+
+    os.makedirs(args.outdir, exist_ok=True)
+    names = [args.only] if args.only else list(GEOMETRIES)
+    for geom_name in names:
+        dims = GEOMETRIES[geom_name]
+        for variant_name, fn in VARIANTS.items():
+            path = build_one(args.outdir, geom_name, dims, variant_name, fn)
+            size_kb = os.path.getsize(path) / 1024
+            print(f"  {path}  ({size_kb:.0f} KiB)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

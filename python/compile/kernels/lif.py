@@ -1,0 +1,92 @@
+"""Layer-1 Pallas kernel: fused forward pass of one SNN layer.
+
+The FPGA Forward Engine (§III-B) is a three-stage pipeline — psum
+accumulation in PE registers, LIF Neuron Dynamic Unit, Trace Update
+Unit — whose whole point is that partial sums and membrane state never
+leave the local memory between stages. The TPU-shaped analogue (see
+DESIGN.md §Hardware-Adaptation) is a single Pallas kernel per output
+tile: the matmul (MXU work), the LIF update and the trace decay are
+fused so V/currents/trace round-trip VMEM exactly once instead of
+bouncing through HBM between three separate XLA ops.
+
+Tiling: the grid runs over output-neuron tiles of `block_post`; every
+tile fetches the full spike vector (small — it is one timestep of one
+network) and its `(pre, block_post)` weight slab.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the AOT
+bridge ships to the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_POST = 128
+
+
+def _fwd_kernel(spikes_ref, w_ref, v_ref, trace_ref, v_out_ref, spk_out_ref, trace_out_ref, *, v_th, lam):
+    """One output tile: psum → LIF → trace, all in VMEM."""
+    spikes = spikes_ref[...]          # (pre,)
+    w = w_ref[...]                    # (pre, block_post)
+    v = v_ref[...]                    # (block_post,)
+    trace = trace_ref[...]            # (block_post,)
+
+    # Psum stage — the MXU matmul replaces the PE accumulation loop.
+    currents = spikes @ w             # (block_post,)
+
+    # Neuron Dynamic Unit: τ_m = 2 ⇒ V/2 + I/2 (shift-add in hardware).
+    nv = 0.5 * v + 0.5 * currents
+    spk = (nv > v_th).astype(v.dtype)
+    v_new = jnp.where(spk > 0, nv - v_th, nv)
+
+    # Trace Update Unit, fused in the same tile visit.
+    trace_new = lam * trace + spk
+
+    v_out_ref[...] = v_new
+    spk_out_ref[...] = spk
+    trace_out_ref[...] = trace_new
+
+
+@functools.partial(jax.jit, static_argnames=("v_th", "lam", "block_post"))
+def forward_layer(w, in_spikes, v, trace_post, *, v_th=1.0, lam=0.5, block_post=DEFAULT_BLOCK_POST):
+    """Fused forward pass of one layer.
+
+    Args:
+      w:          (pre, post) synaptic weights.
+      in_spikes:  (pre,) 0/1 f32 spike vector.
+      v:          (post,) membrane potentials.
+      trace_post: (post,) postsynaptic traces (pre-update values).
+
+    Returns:
+      (new_v, out_spikes, new_trace_post), each (post,).
+    """
+    pre, post = w.shape
+    block = min(block_post, post)
+    grid = (pl.cdiv(post, block),)
+
+    kernel = functools.partial(_fwd_kernel, v_th=v_th, lam=lam)
+    out_shape = [
+        jax.ShapeDtypeStruct((post,), w.dtype),  # v
+        jax.ShapeDtypeStruct((post,), w.dtype),  # spikes
+        jax.ShapeDtypeStruct((post,), w.dtype),  # trace
+    ]
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    return tuple(
+        pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((pre,), lambda i: (0,)),        # spikes: replicated
+                pl.BlockSpec((pre, block), lambda i: (0, i)), # weight slab
+                vec_spec,                                     # v tile
+                vec_spec,                                     # trace tile
+            ],
+            out_specs=[vec_spec, vec_spec, vec_spec],
+            out_shape=out_shape,
+            interpret=True,
+        )(in_spikes, w, v, trace_post)
+    )

@@ -1,0 +1,91 @@
+"""Layer-1 Pallas kernel: the four-term plasticity update — the paper's
+compute hot-spot.
+
+FPGA insight (§III-B): "the four plasticity parameters {α, β, γ, δ} for
+each synapse are packed and fetched in a single, wide memory access",
+feeding a parallel DSP array and an adder tree. The TPU-shaped mapping
+(DESIGN.md §Hardware-Adaptation): θ is stacked as a (4, pre, post)
+array and the BlockSpec carries the leading 4-plane axis *whole* into
+VMEM, so one tile fetch delivers all four coefficient planes of the
+synapse block — the VMEM analogue of the packed wide word. The four
+term products and the adder-tree sum are elementwise/broadcast vector
+ops (VPU work, like the DSP array — there is no contraction here, so
+the MXU is rightly idle).
+
+Tiling: grid over (pre, post) synapse blocks. Trace vectors ride along
+per tile edge; weights are read-modified-written in place shape-wise.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_PRE = 128
+DEFAULT_BLOCK_POST = 128
+
+
+def _plast_kernel(theta_ref, w_ref, pre_t_ref, post_t_ref, w_out_ref, *, eta, w_clip):
+    theta = theta_ref[...]       # (4, bp, bq) — packed fetch
+    w = w_ref[...]               # (bp, bq)
+    sj = pre_t_ref[...][:, None]  # (bp, 1)
+    si = post_t_ref[...][None, :] # (1, bq)
+
+    # Four concurrent products + adder tree.
+    assoc = theta[0] * sj * si
+    presyn = theta[1] * sj
+    postsyn = theta[2] * si
+    decay = theta[3]
+    dw = (assoc + presyn) + (postsyn + decay)
+
+    w_out_ref[...] = jnp.clip(w + eta * dw, -w_clip, w_clip)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eta", "w_clip", "block_pre", "block_post")
+)
+def plasticity_update(
+    theta,
+    w,
+    pre_trace,
+    post_trace,
+    *,
+    eta=0.05,
+    w_clip=4.0,
+    block_pre=DEFAULT_BLOCK_PRE,
+    block_post=DEFAULT_BLOCK_POST,
+):
+    """Apply one plasticity step to a layer's weight matrix.
+
+    Args:
+      theta:      (4, pre, post) packed coefficient planes [α, β, γ, δ].
+      w:          (pre, post) weights.
+      pre_trace:  (pre,) presynaptic traces S_j (current timestep).
+      post_trace: (post,) postsynaptic traces S_i.
+
+    Returns the updated (pre, post) weight matrix.
+    """
+    _, pre, post = theta.shape
+    assert w.shape == (pre, post), (w.shape, theta.shape)
+    bp = min(block_pre, pre)
+    bq = min(block_post, post)
+    grid = (pl.cdiv(pre, bp), pl.cdiv(post, bq))
+
+    kernel = functools.partial(_plast_kernel, eta=eta, w_clip=w_clip)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # The packed fetch: all 4 planes of the (bp, bq) block in one
+            # VMEM tile (leading axis not split across the grid).
+            pl.BlockSpec((4, bp, bq), lambda i, j: (0, i, j)),
+            pl.BlockSpec((bp, bq), lambda i, j: (i, j)),
+            pl.BlockSpec((bp,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bp, bq), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pre, post), w.dtype),
+        interpret=True,
+    )(theta, w, pre_trace, post_trace)

@@ -1,0 +1,88 @@
+"""Pure-jnp reference oracle for the FireFly-P compute kernels.
+
+This file is the *correctness contract* for Layer 1: every Pallas kernel
+in this package must match these functions exactly (pytest asserts
+allclose with tight tolerances, including hypothesis-driven shape/value
+sweeps). The formulas mirror the paper (§II-A, §III-B) and the Rust
+golden model (`rust/src/snn/`):
+
+    LIF (τ_m = 2):   V(t) = V(t-1)/2 + I(t)/2 ; spike if V > V_th ;
+                     soft reset V ← V − V_th on spike
+    Trace:           S(t) = λ·S(t−1) + s(t)
+    Plasticity:      Δw = α·S_j·S_i + β·S_j + γ·S_i + δ
+                     w ← clip(w + η·Δw, ±w_clip)
+"""
+
+import jax.numpy as jnp
+
+
+def lif_ref(v, current, v_th):
+    """LIF membrane update. Returns (new_v, spikes) with spikes as f32 0/1."""
+    nv = 0.5 * v + 0.5 * current
+    spikes = (nv > v_th).astype(v.dtype)
+    new_v = jnp.where(spikes > 0, nv - v_th, nv)
+    return new_v, spikes
+
+
+def trace_ref(trace, spikes, lam):
+    """Exponentially decaying spike trace."""
+    return lam * trace + spikes
+
+
+def forward_layer_ref(w, in_spikes, v, v_th):
+    """One layer's forward pass: psum accumulate + LIF.
+
+    w: (pre, post); in_spikes: (pre,) 0/1 f32; v: (post,).
+    Returns (new_v, out_spikes, currents).
+    """
+    currents = in_spikes @ w
+    new_v, spikes = lif_ref(v, currents, v_th)
+    return new_v, spikes, currents
+
+
+def plasticity_ref(theta, w, pre_trace, post_trace, eta, w_clip):
+    """Four-term synaptic update (the paper's core rule).
+
+    theta: (4, pre, post) packed coefficient planes [α, β, γ, δ];
+    w: (pre, post); pre_trace: (pre,); post_trace: (post,).
+    """
+    sj = pre_trace[:, None]
+    si = post_trace[None, :]
+    dw = theta[0] * sj * si + theta[1] * sj + theta[2] * si + theta[3]
+    return jnp.clip(w + eta * dw, -w_clip, w_clip)
+
+
+def snn_step_ref(
+    w1,
+    w2,
+    v1,
+    v2,
+    t_in,
+    t_hid,
+    t_out,
+    theta1,
+    theta2,
+    in_spikes,
+    *,
+    v_th=1.0,
+    lam=0.5,
+    eta=0.05,
+    w_clip=4.0,
+    plastic=True,
+):
+    """One full network timestep (golden order, identical to
+    SnnNetwork::step_spikes in rust/src/snn/network.rs):
+
+    1. L1 forward  2. L2 forward  3. trace updates  4. plasticity.
+    Returns the new state tuple (w1, w2, v1, v2, t_in, t_hid, t_out,
+    out_spikes).
+    """
+    v1, s_hid, _ = forward_layer_ref(w1, in_spikes, v1, v_th)
+    v2, s_out, _ = forward_layer_ref(w2, s_hid, v2, v_th)
+    t_in = trace_ref(t_in, in_spikes, lam)
+    t_hid = trace_ref(t_hid, s_hid, lam)
+    t_out = trace_ref(t_out, s_out, lam)
+    if plastic:
+        w1 = plasticity_ref(theta1, w1, t_in, t_hid, eta, w_clip)
+        w2 = plasticity_ref(theta2, w2, t_hid, t_out, eta, w_clip)
+    return w1, w2, v1, v2, t_in, t_hid, t_out, s_out

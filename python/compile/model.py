@@ -1,0 +1,93 @@
+"""Layer-2 JAX model: the full FireFly-P network step.
+
+One call = one control timestep of the three-layer SNN (§IV-A): L1
+forward → L2 forward → trace updates → plasticity on both layers, in
+the exact order of the Rust golden model (`SnnNetwork::step_spikes`)
+and of `kernels.ref.snn_step_ref`. The forward passes and the two
+plasticity updates run through the Pallas kernels so they lower into
+the same HLO module the Rust runtime executes.
+
+The function is pure state-in/state-out — the Rust coordinator owns the
+state between calls (weights, membranes, traces live in PjRt buffers on
+the request path; Python never runs at serve time).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.lif import forward_layer
+from compile.kernels.plasticity import plasticity_update
+
+
+#: State/arg order of the step function — the runtime contract. Keep in
+#: sync with rust/src/runtime/artifact.rs::ARG_ORDER.
+ARG_ORDER = (
+    "w1",      # (n_in, n_hidden)
+    "w2",      # (n_hidden, n_out)
+    "v1",      # (n_hidden,)
+    "v2",      # (n_out,)
+    "t_in",    # (n_in,)
+    "t_hid",   # (n_hidden,)
+    "t_out",   # (n_out,)
+    "theta1",  # (4, n_in, n_hidden)
+    "theta2",  # (4, n_hidden, n_out)
+    "spikes",  # (n_in,) 0/1
+)
+
+#: Output order: updated state + output spikes.
+OUT_ORDER = ("w1", "w2", "v1", "v2", "t_in", "t_hid", "t_out", "out_spikes")
+
+HYPER = dict(v_th=1.0, lam=0.5, eta=0.05, w_clip=4.0)
+
+
+def snn_step(w1, w2, v1, v2, t_in, t_hid, t_out, theta1, theta2, spikes, *, plastic=True):
+    """One network timestep. Returns the tuple in OUT_ORDER."""
+    v_th = HYPER["v_th"]
+    lam = HYPER["lam"]
+
+    # L1 / L2 forward passes (fused Pallas kernels: psum → LIF → trace).
+    v1, s_hid, t_hid = forward_layer(w1, spikes, v1, t_hid, v_th=v_th, lam=lam)
+    v2, s_out, t_out = forward_layer(w2, s_hid, v2, t_out, v_th=v_th, lam=lam)
+
+    # Input-population trace (no neuron dynamics on the input layer).
+    t_in = lam * t_in + spikes
+
+    if plastic:
+        w1 = plasticity_update(
+            theta1, w1, t_in, t_hid, eta=HYPER["eta"], w_clip=HYPER["w_clip"]
+        )
+        w2 = plasticity_update(
+            theta2, w2, t_hid, t_out, eta=HYPER["eta"], w_clip=HYPER["w_clip"]
+        )
+    return w1, w2, v1, v2, t_in, t_hid, t_out, s_out
+
+
+def snn_step_forward_only(w1, w2, v1, v2, t_in, t_hid, t_out, theta1, theta2, spikes):
+    """Inference-only variant (weight-trained baseline serving). Same
+    signature so the runtime can swap artifacts without replumbing."""
+    return snn_step(w1, w2, v1, v2, t_in, t_hid, t_out, theta1, theta2, spikes, plastic=False)
+
+
+def example_args(n_in, n_hidden, n_out, dtype=jnp.float32):
+    """ShapeDtypeStructs in ARG_ORDER for AOT lowering."""
+    f = lambda *shape: jax.ShapeDtypeStruct(shape, dtype)
+    return (
+        f(n_in, n_hidden),
+        f(n_hidden, n_out),
+        f(n_hidden),
+        f(n_out),
+        f(n_in),
+        f(n_hidden),
+        f(n_out),
+        f(4, n_in, n_hidden),
+        f(4, n_hidden, n_out),
+        f(n_in),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_step(plastic=True):
+    fn = snn_step if plastic else snn_step_forward_only
+    return jax.jit(fn)

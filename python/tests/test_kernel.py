@@ -1,0 +1,237 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal of the build path — the HLO the
+Rust runtime executes is lowered from exactly these kernels. Includes
+hypothesis sweeps over shapes/values/block sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lif import forward_layer
+from compile.kernels.plasticity import plasticity_update
+from compile.kernels.ref import (
+    forward_layer_ref,
+    lif_ref,
+    plasticity_ref,
+    snn_step_ref,
+    trace_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- forward
+
+
+class TestForwardKernel:
+    @pytest.mark.parametrize("pre,post", [(8, 16), (64, 128), (33, 7), (1, 1), (128, 300)])
+    def test_matches_ref(self, pre, post):
+        r = rng(pre * 1000 + post)
+        w = jnp.array(r.normal(0, 1, (pre, post)), jnp.float32)
+        spikes = jnp.array((r.random(pre) < 0.4).astype(np.float32))
+        v = jnp.array(r.normal(0, 0.5, post), jnp.float32)
+        trace = jnp.array(r.random(post), jnp.float32)
+
+        v_k, s_k, t_k = forward_layer(w, spikes, v, trace)
+        v_r, s_r, _cur = forward_layer_ref(w, spikes, v, 1.0)
+        t_r = trace_ref(trace, s_r, 0.5)
+
+        np.testing.assert_allclose(v_k, v_r, rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        np.testing.assert_allclose(t_k, t_r, rtol=1e-6, atol=1e-6)
+
+    def test_block_size_invariance(self):
+        r = rng(7)
+        w = jnp.array(r.normal(0, 1, (32, 100)), jnp.float32)
+        spikes = jnp.array((r.random(32) < 0.5).astype(np.float32))
+        v = jnp.zeros(100, jnp.float32)
+        trace = jnp.zeros(100, jnp.float32)
+        full = forward_layer(w, spikes, v, trace, block_post=128)
+        small = forward_layer(w, spikes, v, trace, block_post=32)
+        tiny = forward_layer(w, spikes, v, trace, block_post=16)
+        for a, b in zip(full, small):
+            np.testing.assert_allclose(a, b, rtol=1e-6)
+        for a, b in zip(full, tiny):
+            np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_no_input_spikes_decays(self):
+        w = jnp.ones((4, 4), jnp.float32)
+        spikes = jnp.zeros(4, jnp.float32)
+        v = jnp.full(4, 0.8, jnp.float32)
+        trace = jnp.full(4, 1.0, jnp.float32)
+        v2, s2, t2 = forward_layer(w, spikes, v, trace)
+        np.testing.assert_allclose(v2, 0.4, rtol=1e-6)
+        assert np.all(np.asarray(s2) == 0)
+        np.testing.assert_allclose(t2, 0.5, rtol=1e-6)
+
+    def test_soft_reset_preserves_overshoot(self):
+        w = jnp.full((1, 1), 10.0, jnp.float32)
+        spikes = jnp.ones(1, jnp.float32)
+        v = jnp.zeros(1, jnp.float32)
+        trace = jnp.zeros(1, jnp.float32)
+        v2, s2, _ = forward_layer(w, spikes, v, trace)
+        assert np.asarray(s2)[0] == 1.0
+        np.testing.assert_allclose(np.asarray(v2)[0], 5.0 - 1.0, rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        pre=st.integers(1, 96),
+        post=st.integers(1, 160),
+        seed=st.integers(0, 2**31 - 1),
+        rate=st.floats(0.0, 1.0),
+    )
+    def test_hypothesis_shapes_and_rates(self, pre, post, seed, rate):
+        r = rng(seed)
+        w = jnp.array(r.normal(0, 1.5, (pre, post)), jnp.float32)
+        spikes = jnp.array((r.random(pre) < rate).astype(np.float32))
+        v = jnp.array(r.normal(0, 1, post), jnp.float32)
+        trace = jnp.array(r.random(post) * 2, jnp.float32)
+        v_k, s_k, t_k = forward_layer(w, spikes, v, trace)
+        v_r, s_r, _ = forward_layer_ref(w, spikes, v, 1.0)
+        t_r = trace_ref(trace, s_r, 0.5)
+        np.testing.assert_allclose(v_k, v_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        np.testing.assert_allclose(t_k, t_r, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- plasticity
+
+
+class TestPlasticityKernel:
+    @pytest.mark.parametrize("pre,post", [(8, 16), (64, 128), (33, 7), (1, 1), (130, 250)])
+    def test_matches_ref(self, pre, post):
+        r = rng(pre * 77 + post)
+        theta = jnp.array(r.normal(0, 0.3, (4, pre, post)), jnp.float32)
+        w = jnp.array(r.normal(0, 0.5, (pre, post)), jnp.float32)
+        pre_t = jnp.array(r.random(pre) * 2, jnp.float32)
+        post_t = jnp.array(r.random(post) * 2, jnp.float32)
+        got = plasticity_update(theta, w, pre_t, post_t)
+        want = plasticity_ref(theta, w, pre_t, post_t, 0.05, 4.0)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_block_size_invariance(self):
+        r = rng(3)
+        theta = jnp.array(r.normal(0, 0.3, (4, 50, 70)), jnp.float32)
+        w = jnp.zeros((50, 70), jnp.float32)
+        pre_t = jnp.array(r.random(50), jnp.float32)
+        post_t = jnp.array(r.random(70), jnp.float32)
+        a = plasticity_update(theta, w, pre_t, post_t, block_pre=128, block_post=128)
+        b = plasticity_update(theta, w, pre_t, post_t, block_pre=16, block_post=32)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_clip_saturates(self):
+        theta = jnp.zeros((4, 2, 2), jnp.float32).at[1].set(100.0)  # huge β
+        w = jnp.zeros((2, 2), jnp.float32)
+        pre_t = jnp.ones(2, jnp.float32)
+        post_t = jnp.zeros(2, jnp.float32)
+        got = plasticity_update(theta, w, pre_t, post_t, eta=1.0, w_clip=2.0)
+        np.testing.assert_allclose(got, 2.0)
+
+    def test_zero_traces_only_delta(self):
+        r = rng(9)
+        theta = jnp.array(r.normal(0, 0.3, (4, 5, 6)), jnp.float32)
+        w = jnp.zeros((5, 6), jnp.float32)
+        z5 = jnp.zeros(5, jnp.float32)
+        z6 = jnp.zeros(6, jnp.float32)
+        got = plasticity_update(theta, w, z5, z6, eta=1.0)
+        np.testing.assert_allclose(got, np.asarray(theta)[3], rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        pre=st.integers(1, 80),
+        post=st.integers(1, 140),
+        seed=st.integers(0, 2**31 - 1),
+        eta=st.floats(0.001, 1.0),
+        clip=st.floats(0.5, 16.0),
+    )
+    def test_hypothesis_sweep(self, pre, post, seed, eta, clip):
+        r = rng(seed)
+        theta = jnp.array(r.normal(0, 0.5, (4, pre, post)), jnp.float32)
+        w = jnp.array(r.normal(0, 1.0, (pre, post)), jnp.float32)
+        pre_t = jnp.array(r.random(pre) * 2, jnp.float32)
+        post_t = jnp.array(r.random(post) * 2, jnp.float32)
+        got = plasticity_update(theta, w, pre_t, post_t, eta=eta, w_clip=clip)
+        want = plasticity_ref(theta, w, pre_t, post_t, eta, clip)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        assert np.all(np.abs(np.asarray(got)) <= clip + 1e-6)
+
+
+# ------------------------------------------------------------- invariants
+
+
+class TestRuleProperties:
+    """Semantic invariants of the four-term rule (mirrors the Rust
+    property tests — the same facts must hold at every layer)."""
+
+    def test_hebbian_needs_both_traces(self):
+        theta = jnp.zeros((4, 1, 1), jnp.float32).at[0].set(1.0)  # pure α
+        w = jnp.zeros((1, 1), jnp.float32)
+        one = jnp.ones(1, jnp.float32)
+        zero = jnp.zeros(1, jnp.float32)
+        both = plasticity_update(theta, w, one, one, eta=1.0)
+        pre_only = plasticity_update(theta, w, one, zero, eta=1.0)
+        post_only = plasticity_update(theta, w, zero, one, eta=1.0)
+        assert np.asarray(both)[0, 0] == 1.0
+        assert np.asarray(pre_only)[0, 0] == 0.0
+        assert np.asarray(post_only)[0, 0] == 0.0
+
+    def test_rule_is_additive_in_terms(self):
+        r = rng(11)
+        pre_t = jnp.array(r.random(6), jnp.float32)
+        post_t = jnp.array(r.random(5), jnp.float32)
+        w = jnp.zeros((6, 5), jnp.float32)
+        full = jnp.array(r.normal(0, 0.3, (4, 6, 5)), jnp.float32)
+        total = plasticity_update(full, w, pre_t, post_t, eta=1.0, w_clip=1e9)
+        parts = sum(
+            np.asarray(
+                plasticity_update(
+                    jnp.zeros_like(full).at[k].set(full[k]),
+                    w,
+                    pre_t,
+                    post_t,
+                    eta=1.0,
+                    w_clip=1e9,
+                )
+            )
+            for k in range(4)
+        )
+        np.testing.assert_allclose(total, parts, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------- full-step ref
+
+
+def test_snn_step_ref_self_consistency():
+    """snn_step_ref applies layers in the documented order — spot-check
+    a hand-computed single step."""
+    w1 = jnp.full((1, 1), 4.0, jnp.float32)
+    w2 = jnp.full((1, 1), 4.0, jnp.float32)
+    z = jnp.zeros(1, jnp.float32)
+    theta = jnp.zeros((4, 1, 1), jnp.float32)
+    out = snn_step_ref(w1, w2, z, z, z, z, z, theta, theta, jnp.ones(1, jnp.float32))
+    w1n, w2n, v1n, v2n, t_in, t_hid, t_out, s_out = out
+    # L1: V = 0/2 + 4/2 = 2 > 1 → spike, soft reset to 1.
+    assert np.asarray(v1n)[0] == pytest.approx(1.0)
+    # L2 sees the spike in the same step: V = 2 → spike.
+    assert np.asarray(s_out)[0] == 1.0
+    assert np.asarray(t_in)[0] == 1.0
+    assert np.asarray(t_hid)[0] == 1.0
+    assert np.asarray(t_out)[0] == 1.0
+    # zero rule → weights unchanged
+    assert np.asarray(w1n)[0, 0] == 4.0 and np.asarray(w2n)[0, 0] == 4.0
+
+
+def test_lif_ref_threshold_strictness():
+    v = jnp.zeros(1, jnp.float32)
+    # exactly at threshold: no spike (strict >)
+    nv, s = lif_ref(v, jnp.full(1, 2.0, jnp.float32), 1.0)
+    assert np.asarray(s)[0] == 0.0
+    assert np.asarray(nv)[0] == pytest.approx(1.0)

@@ -1,0 +1,136 @@
+"""L2 correctness: the jitted snn_step (Pallas-kernel composition) vs the
+pure-jnp reference over multi-step episodes, plus semantic behaviour the
+paper depends on (zero-weight bootstrap, bounded weights, variant
+equivalence)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import snn_step_ref
+from compile.model import (
+    ARG_ORDER,
+    OUT_ORDER,
+    example_args,
+    snn_step,
+    snn_step_forward_only,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_state(n_in, n_h, n_o, seed=0, theta_sigma=0.2):
+    r = np.random.default_rng(seed)
+    return dict(
+        w1=jnp.zeros((n_in, n_h), jnp.float32),
+        w2=jnp.zeros((n_h, n_o), jnp.float32),
+        v1=jnp.zeros(n_h, jnp.float32),
+        v2=jnp.zeros(n_o, jnp.float32),
+        t_in=jnp.zeros(n_in, jnp.float32),
+        t_hid=jnp.zeros(n_h, jnp.float32),
+        t_out=jnp.zeros(n_o, jnp.float32),
+        theta1=jnp.array(r.normal(0, theta_sigma, (4, n_in, n_h)), jnp.float32),
+        theta2=jnp.array(r.normal(0, theta_sigma, (4, n_h, n_o)), jnp.float32),
+    )
+
+
+def run_episode(step_fn, state, spikes_seq):
+    outs = []
+    s = dict(state)
+    for sp in spikes_seq:
+        res = step_fn(
+            s["w1"], s["w2"], s["v1"], s["v2"], s["t_in"], s["t_hid"], s["t_out"],
+            s["theta1"], s["theta2"], sp,
+        )
+        for k, v in zip(OUT_ORDER[:7], res[:7]):
+            s[k] = v
+        outs.append(res[7])
+    return s, outs
+
+
+@pytest.mark.parametrize("dims", [(8, 16, 4), (64, 128, 8), (48, 128, 12)])
+def test_model_matches_ref_over_episode(dims):
+    n_in, n_h, n_o = dims
+    state = make_state(*dims, seed=42)
+    r = np.random.default_rng(1)
+    spikes_seq = [
+        jnp.array((r.random(n_in) < 0.5).astype(np.float32)) for _ in range(30)
+    ]
+    s_model, out_model = run_episode(jax.jit(snn_step), state, spikes_seq)
+    s_ref, out_ref = run_episode(snn_step_ref, state, spikes_seq)
+    for a, b in zip(out_model, out_ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in OUT_ORDER[:7]:
+        np.testing.assert_allclose(
+            s_model[k], s_ref[k], rtol=1e-5, atol=1e-6, err_msg=k
+        )
+
+
+def test_zero_rule_keeps_weights_zero_and_silent():
+    state = make_state(8, 16, 4, theta_sigma=0.0)
+    r = np.random.default_rng(2)
+    spikes_seq = [jnp.ones(8, jnp.float32) for _ in range(10)]
+    s, outs = run_episode(jax.jit(snn_step), state, spikes_seq)
+    assert float(jnp.abs(s["w1"]).max()) == 0.0
+    for o in outs:
+        assert float(o.sum()) == 0.0
+    del r
+
+
+def test_presynaptic_beta_bootstraps_activity():
+    state = make_state(8, 16, 4, theta_sigma=0.0)
+    state["theta1"] = state["theta1"].at[1].set(0.5)
+    state["theta2"] = state["theta2"].at[1].set(0.5)
+    spikes_seq = [jnp.ones(8, jnp.float32) for _ in range(60)]
+    s, outs = run_episode(jax.jit(snn_step), state, spikes_seq)
+    assert float(jnp.abs(s["w1"]).max()) > 0.0
+    assert any(float(o.sum()) > 0 for o in outs), "output layer never fired"
+
+
+def test_weights_stay_clipped():
+    state = make_state(8, 16, 4, seed=3, theta_sigma=2.0)  # aggressive rule
+    spikes_seq = [jnp.ones(8, jnp.float32) for _ in range(100)]
+    s, _ = run_episode(jax.jit(snn_step), state, spikes_seq)
+    assert float(jnp.abs(s["w1"]).max()) <= 4.0 + 1e-5
+    assert float(jnp.abs(s["w2"]).max()) <= 4.0 + 1e-5
+    assert bool(jnp.all(jnp.isfinite(s["w1"])))
+
+
+def test_forward_only_variant_freezes_weights():
+    state = make_state(8, 16, 4, seed=4)
+    state["w1"] = state["w1"] + 0.5
+    r = np.random.default_rng(5)
+    spikes_seq = [
+        jnp.array((r.random(8) < 0.5).astype(np.float32)) for _ in range(20)
+    ]
+    s, _ = run_episode(jax.jit(snn_step_forward_only), state, spikes_seq)
+    np.testing.assert_array_equal(np.asarray(s["w1"]), np.asarray(state["w1"]))
+    np.testing.assert_array_equal(np.asarray(s["w2"]), np.asarray(state["w2"]))
+    # but dynamics still ran
+    assert float(s["t_in"].sum()) > 0
+
+
+def test_variants_agree_when_rule_is_zero():
+    state = make_state(8, 16, 4, theta_sigma=0.0)
+    state["w1"] = state["w1"] + 0.8
+    state["w2"] = state["w2"] + 0.8
+    r = np.random.default_rng(6)
+    spikes_seq = [
+        jnp.array((r.random(8) < 0.6).astype(np.float32)) for _ in range(15)
+    ]
+    s_a, out_a = run_episode(jax.jit(snn_step), state, spikes_seq)
+    s_b, out_b = run_episode(jax.jit(snn_step_forward_only), state, spikes_seq)
+    for a, b in zip(out_a, out_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in OUT_ORDER[:7]:
+        np.testing.assert_allclose(s_a[k], s_b[k], rtol=1e-6, err_msg=k)
+
+
+def test_example_args_order_matches_contract():
+    args = example_args(8, 16, 4)
+    assert len(args) == len(ARG_ORDER) == 10
+    shapes = [a.shape for a in args]
+    assert shapes[0] == (8, 16)      # w1
+    assert shapes[7] == (4, 8, 16)   # theta1
+    assert shapes[9] == (8,)         # spikes

@@ -1,0 +1,89 @@
+//! EXP-LAT — the paper's headline hardware numbers: 8 µs end-to-end
+//! latency (inference + plasticity per timestep) and 0.713 W, measured
+//! on the cycle-accurate simulator at the Table I geometry, including
+//! the overlap-vs-sequential ablation and an input-activity sweep.
+//!
+//! Run: `cargo bench --bench bench_latency_power`
+
+use firefly_p::fpga::power::{Activity, PowerModel};
+use firefly_p::fpga::resources::{NetGeometry, ResourceReport};
+use firefly_p::fpga::{FpgaSim, HwConfig};
+use firefly_p::snn::plasticity::RuleParams;
+use firefly_p::snn::SnnConfig;
+use firefly_p::util::csvio::CsvWriter;
+use firefly_p::util::rng::Pcg64;
+
+fn run(hw: &HwConfig, cfg: &SnnConfig, rate: f64, steps: usize, seed: u64) -> FpgaSim {
+    let mut rng = Pcg64::new(seed, 0);
+    let l1 = RuleParams::random(cfg.n_in, cfg.n_hidden, 0.2, &mut rng);
+    let l2 = RuleParams::random(cfg.n_hidden, cfg.n_out, 0.2, &mut rng);
+    let mut sim = FpgaSim::new_plastic(cfg.clone(), l1, l2, hw.clone());
+    for _ in 0..steps {
+        let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(rate)).collect();
+        sim.step(&spikes);
+    }
+    sim.finish();
+    sim
+}
+
+fn main() {
+    let geo = NetGeometry::paper_control();
+    let mut cfg = SnnConfig::control(geo.n_in, geo.n_out);
+    cfg.n_hidden = geo.n_hidden;
+
+    println!("=== EXP-LAT: end-to-end latency & power (paper: 8 µs, 0.713 W) ===\n");
+    let mut csv = CsvWriter::create(
+        "results/latency_power.csv",
+        &["mode", "input_rate", "cycles_per_step", "latency_us", "fps", "power_w", "conflicts"],
+    )
+    .unwrap();
+
+    for (mode, hw) in [("overlap", HwConfig::default()), ("sequential", HwConfig::sequential())] {
+        for rate in [0.25, 0.5, 0.75] {
+            let sim = run(&hw, &cfg, rate, 300, 7);
+            let report = ResourceReport::build(&hw, &geo);
+            let p = PowerModel::new(report).estimate(&Activity::from_sim(&sim));
+            println!(
+                "{mode:<11} rate {rate:.2}: {:>7.0} cycles/step  {:>6.2} µs  {:>9.0} steps/s  {:.3} W  ({} BRAM conflicts)",
+                sim.steady_state_cycles_per_step(),
+                sim.latency_us(),
+                sim.fps(),
+                p.total(),
+                sim.mem.total_conflicts()
+            );
+            csv.row(&[
+                &mode,
+                &rate,
+                &sim.steady_state_cycles_per_step(),
+                &sim.latency_us(),
+                &sim.fps(),
+                &p.total(),
+                &sim.mem.total_conflicts(),
+            ])
+            .unwrap();
+        }
+    }
+
+    // Headline comparison at the nominal operating point.
+    let sim = run(&HwConfig::default(), &cfg, 0.5, 300, 7);
+    let seq = run(&HwConfig::sequential(), &cfg, 0.5, 300, 7);
+    let speedup = seq.steady_state_cycles_per_step() / sim.steady_state_cycles_per_step();
+    println!(
+        "\nheadline: {:.2} µs/step overlapped (paper 8 µs) — sequential ablation {:.2} µs ({:.2}× from multi-level pipelining)",
+        sim.latency_us(),
+        seq.latency_us(),
+        speedup
+    );
+    assert!(
+        sim.latency_us() < 12.0,
+        "latency {:.2} µs is out of the paper's regime",
+        sim.latency_us()
+    );
+    // At this geometry the plasticity burst dominates both phases, so
+    // the overlap hides the (smaller) forward passes: a real but modest
+    // gain. The paper's Table II workload (heavier forwards) benefits
+    // more — see bench_table2_mnist's pipelined-vs-sequential ratio.
+    assert!(speedup > 1.05, "overlap must deliver real speedup");
+    let path = csv.finish().unwrap();
+    println!("csv: {}", path.display());
+}

@@ -1,0 +1,90 @@
+//! EXP-HP — request-path microbenchmarks (our system metric, not a
+//! paper table): per-step latency of each backend on the control
+//! geometry, XLA executor throughput, and the allocation-free native
+//! hot loop. Used by the §Perf pass in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench bench_runtime_hotpath`
+
+use std::time::Instant;
+
+use firefly_p::backend::{FpgaBackend, NativeBackend, SnnBackend, XlaBackend};
+use firefly_p::fpga::HwConfig;
+use firefly_p::runtime::Registry;
+use firefly_p::snn::{NetworkRule, SnnConfig};
+use firefly_p::util::csvio::CsvWriter;
+use firefly_p::util::rng::Pcg64;
+use firefly_p::util::stats;
+
+fn bench_backend(b: &mut dyn SnnBackend, n_in: usize, steps: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed, 0);
+    let mut lat = Vec::with_capacity(steps);
+    // warmup
+    for _ in 0..20 {
+        let spikes: Vec<bool> = (0..n_in).map(|_| rng.bernoulli(0.5)).collect();
+        b.step(&spikes);
+    }
+    for _ in 0..steps {
+        let spikes: Vec<bool> = (0..n_in).map(|_| rng.bernoulli(0.5)).collect();
+        let t0 = Instant::now();
+        b.step(&spikes);
+        lat.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    lat
+}
+
+fn main() {
+    println!("=== EXP-HP: request-path step latency (ant geometry 64-128-8) ===\n");
+    let mut cfg = SnnConfig::control(64, 8);
+    cfg.n_hidden = 128;
+    let mut rng = Pcg64::new(3, 0);
+    let mut genome = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut genome, 0.1);
+    let rule = NetworkRule::from_flat(&cfg, &genome);
+
+    let mut csv = CsvWriter::create(
+        "results/runtime_hotpath.csv",
+        &["backend", "mean_us", "p50_us", "p99_us", "steps_per_s"],
+    )
+    .unwrap();
+
+    let mut entries: Vec<(&str, Vec<f64>)> = Vec::new();
+
+    let mut native = NativeBackend::plastic(cfg.clone(), rule.clone());
+    entries.push(("native-f32", bench_backend(&mut native, cfg.n_in, 500, 9)));
+
+    let mut fpga = FpgaBackend::plastic(cfg.clone(), rule.clone(), HwConfig::default());
+    entries.push(("fpga-sim", bench_backend(&mut fpga, cfg.n_in, 100, 9)));
+
+    match Registry::open_default() {
+        Ok(_) => match XlaBackend::plastic("ant", &rule) {
+            Ok(mut xla) => entries.push(("xla-pjrt", bench_backend(&mut xla, cfg.n_in, 300, 9))),
+            Err(e) => println!("(xla backend skipped: {e})"),
+        },
+        Err(e) => println!("(xla backend skipped: {e})"),
+    }
+
+    for (name, lat) in &entries {
+        let mean = stats::mean(lat);
+        let p50 = stats::percentile(lat, 50.0);
+        let p99 = stats::percentile(lat, 99.0);
+        println!(
+            "{name:<12} mean {mean:>9.1} µs   p50 {p50:>9.1}   p99 {p99:>9.1}   {:>10.0} steps/s",
+            1e6 / mean
+        );
+        csv.row(&[name, &mean, &p50, &p99, &(1e6 / mean)]).unwrap();
+    }
+
+    // Simulated-hardware throughput for contrast: the fpga-sim backend's
+    // wall-clock cost is the *simulation* cost; its modelled silicon
+    // latency is printed here.
+    let sim = fpga.sim();
+    println!(
+        "\nfpga-sim models {:>6.2} µs/step on silicon @ {} MHz ({:.0} steps/s) — simulation overhead {:.0}×",
+        sim.latency_us(),
+        sim.hw.clock_mhz,
+        sim.fps(),
+        stats::mean(&entries[1].1) / sim.latency_us()
+    );
+    let path = csv.finish().unwrap();
+    println!("csv: {}", path.display());
+}

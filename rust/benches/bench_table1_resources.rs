@@ -1,0 +1,96 @@
+//! EXP-T1 — regenerates Table I: resource breakdown of FireFly-P for
+//! continuous control on the XC7A35T, from the analytic model, printed
+//! in the paper's row format and written to results/table1.csv with the
+//! paper's published numbers side by side.
+//!
+//! Run: `cargo bench --bench bench_table1_resources`
+
+use firefly_p::fpga::resources::{NetGeometry, ResourceReport, XC7A35T};
+use firefly_p::fpga::HwConfig;
+use firefly_p::util::csvio::CsvWriter;
+
+/// Table I as published (kLUTs, kREGs, BRAMs, DSPs per row).
+const PAPER: [(&str, f64, f64, f64, f64); 6] = [
+    ("L1 Forward", 2.9, 3.5, 2.0, 12.0),
+    ("L1 Update", 3.1, 4.8, 0.0, 16.0),
+    ("L2 Forward", 1.6, 2.2, 0.5, 3.0),
+    ("L2 Update", 3.2, 4.8, 0.0, 16.0),
+    ("Others", 0.1, 1.3, 18.0, 0.0),
+    ("Total", 10.9, 16.6, 20.5, 47.0),
+];
+
+fn main() {
+    let hw = HwConfig::default();
+    let report = ResourceReport::build(&hw, &NetGeometry::paper_control());
+
+    println!("=== EXP-T1: Table I — resource breakdown (model vs paper) ===\n");
+    print!("{}", report.render());
+
+    let mut csv = CsvWriter::create(
+        "results/table1.csv",
+        &[
+            "component",
+            "kluts",
+            "kregs",
+            "brams",
+            "dsps",
+            "paper_kluts",
+            "paper_kregs",
+            "paper_brams",
+            "paper_dsps",
+        ],
+    )
+    .unwrap();
+
+    let mut rows: Vec<(String, firefly_p::fpga::Resources)> = report
+        .rows
+        .iter()
+        .map(|r| (r.name.to_string(), r.res))
+        .collect();
+    rows.push(("Total".to_string(), report.total()));
+
+    println!("\ncomponent     ours(kLUT/kREG/BRAM/DSP)        paper               Δ");
+    for ((name, res), paper) in rows.iter().zip(PAPER.iter()) {
+        assert_eq!(name, paper.0, "row order drifted from Table I");
+        println!(
+            "{:<12}  {:>5.1} /{:>5.1} /{:>5.1} /{:>3}   {:>5.1} /{:>5.1} /{:>5.1} /{:>3}   LUTs {:+.1}%",
+            name,
+            res.luts / 1000.0,
+            res.regs / 1000.0,
+            res.brams,
+            res.dsps as u64,
+            paper.1,
+            paper.2,
+            paper.3,
+            paper.4 as u64,
+            100.0 * (res.luts / 1000.0 - paper.1) / paper.1.max(0.01),
+        );
+        csv.row(&[
+            &name,
+            &(res.luts / 1000.0),
+            &(res.regs / 1000.0),
+            &res.brams,
+            &res.dsps,
+            &paper.1,
+            &paper.2,
+            &paper.3,
+            &paper.4,
+        ])
+        .unwrap();
+    }
+    let path = csv.finish().unwrap();
+
+    // headline checks the bench asserts (so CI catches model drift)
+    let total = report.total();
+    assert!((total.luts / 1000.0 - 10.9).abs() < 0.4, "total kLUTs drifted");
+    assert_eq!(total.dsps, 47.0, "total DSPs must match Table I exactly");
+    assert!(total.brams <= XC7A35T.brams);
+    println!(
+        "\nutilization: {:.1}% LUTs, {:.1}% REGs, {:.1}% BRAM, {:.1}% DSP (paper: 52.8/40.0/41.0/52.2)",
+        100.0 * total.luts / XC7A35T.luts,
+        100.0 * total.regs / XC7A35T.regs,
+        100.0 * total.brams / XC7A35T.brams,
+        100.0 * total.dsps / XC7A35T.dsps
+    );
+    println!("csv: {}", path.display());
+}

@@ -1,0 +1,146 @@
+//! EXP-T2 — regenerates Table II: edge SNN hardware on MNIST. Prior-work
+//! rows are reproduced from the paper (published constants); our row is
+//! *measured*: accuracy from the online learnable-rule trainer on the
+//! synthetic corpus, end-to-end FPS from the cycle-accurate model at
+//! 200 MHz, including the pipelined-vs-sequential ablation the paper's
+//! footnote calls out ("Our method pipelines these two stages").
+//!
+//! Accuracy caveat (documented in DESIGN.md/EXPERIMENTS.md): the corpus
+//! is synthetic, so absolute accuracy is not comparable to true MNIST;
+//! the *structure* — learnable rule > fixed pair-STDP, pipelined FPS >
+//! sequential — is the reproduced claim.
+//!
+//! Run: `cargo bench --bench bench_table2_mnist`
+
+use firefly_p::fpga::resources::NetGeometry;
+use firefly_p::fpga::HwConfig;
+use firefly_p::mnist::{generate, MnistConfig, OnlineMnist, UpdateRule};
+use firefly_p::util::csvio::CsvWriter;
+
+/// Table II prior-work rows as published: (work, rule, network, acc, fps, MHz).
+const PAPER_ROWS: [(&str, &str, &str, f64, &str, u32); 6] = [
+    ("[34]", "Stochastic STDP", "784-6400-10", 95.7, "-", 100),
+    ("[35]", "Pair-based STDP", "784-200-100-10", 92.93, "317 / 61", 100),
+    ("[36]", "Persistent CD", "784-500-500-10", 92.0, "1.89 / -", 75),
+    ("[37]", "Pair-based STDP", "784-800", 89.1, "0.12 / 0.06", 120),
+    ("[38]", "Persistent CD", "784-500-500-10", 93.8, "6.25 / -", 25),
+    ("[39]", "Triplet R-STDP", "784-2048-100", 93.0, "30 / 22.5", 200),
+];
+
+fn envvar(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// End-to-end FPS from the cycle model for the MNIST geometry.
+fn model_fps(hw: &HwConfig, t_present: usize, pipelined: bool) -> f64 {
+    let geo = NetGeometry::mnist();
+    let l1_syn = geo.n_in * geo.n_hidden;
+    let l2_syn = geo.n_hidden * geo.n_out;
+    // forward cycles: tiles × mean active inputs (rate-coded ~0.25) +
+    // pipeline drains — small next to the update burst.
+    let fwd1 = (geo.n_hidden / hw.n_pe) * (geo.n_in / 4 + hw.fwd_pipe_depth + 1);
+    let fwd2 = geo.n_out.div_ceil(hw.n_pe) * (geo.n_hidden / 4 + hw.fwd_pipe_depth + 1);
+    let upd1 = l1_syn.div_ceil(hw.syn_per_cycle) + hw.plast_pipe_depth;
+    let upd2 = l2_syn.div_ceil(hw.syn_per_cycle) + hw.plast_pipe_depth;
+    let per_step = if pipelined {
+        // Phase A: L1 update ∥ L2 fwd; Phase B: L2 update ∥ L1 fwd.
+        upd1.max(fwd2) + upd2.max(fwd1)
+    } else {
+        fwd1 + fwd2 + upd1 + upd2
+    };
+    hw.clock_mhz * 1e6 / (per_step * t_present) as f64
+}
+
+fn main() {
+    println!("=== EXP-T2: Table II — edge SNN hardware on MNIST ===\n");
+    let n_train = envvar("T2_TRAIN", 400);
+    let n_test = envvar("T2_TEST", 150);
+    let hidden = envvar("T2_HIDDEN", 1024);
+    let epochs = envvar("T2_EPOCHS", 4);
+
+    let train = generate(n_train, 1);
+    let test = generate(n_test, 2);
+
+    let mut measured = Vec::new();
+    for (name, rule) in [
+        ("Learnable STDP (ours)", UpdateRule::learnable_default()),
+        ("Pair-based STDP", UpdateRule::pair_stdp_default()),
+    ] {
+        let cfg = MnistConfig {
+            hidden,
+            k_winners: (hidden / 32).max(4),
+            t_present: 30,
+            ..Default::default()
+        };
+        let mut m = OnlineMnist::new(cfg, rule);
+        let t0 = std::time::Instant::now();
+        let mut acc = 0.0;
+        for _ in 0..epochs {
+            m.train_epoch(&train);
+            acc = m.accuracy(&test);
+        }
+        println!(
+            "measured: {name:<24} 784-{hidden}-10   acc {:.1}%   [{:.0}s, {n_train} imgs × {epochs} epochs]",
+            100.0 * acc,
+            t0.elapsed().as_secs_f64()
+        );
+        measured.push((name, acc));
+    }
+
+    let hw = HwConfig::default();
+    let fps_pipe = model_fps(&hw, 30, true);
+    let fps_seq = model_fps(&hw, 30, false);
+    println!(
+        "\ncycle model (784-1024-10 @ {} MHz, 30 steps/frame): {:.1} FPS pipelined vs {:.1} FPS sequential ({:.2}×; paper reports 32 end-to-end)",
+        hw.clock_mhz,
+        fps_pipe,
+        fps_seq,
+        fps_pipe / fps_seq
+    );
+
+    // Render the full Table II.
+    println!("\n{:<6} {:<18} {:<16} {:>6} {:>12} {:>6}", "Work", "Learning Rule", "Network", "Acc.", "FPS", "Freq.");
+    for (w, r, n, a, f, mhz) in PAPER_ROWS {
+        println!("{w:<6} {r:<18} {n:<16} {a:>6.2} {f:>12} {mhz:>6}");
+    }
+    println!(
+        "{:<6} {:<18} {:<16} {:>6.1} {:>12.0} {:>6}  ← measured (synthetic corpus; see caveat)",
+        "Ours",
+        "Learnable STDP",
+        format!("784-{hidden}-10"),
+        100.0 * measured[0].1,
+        fps_pipe,
+        hw.clock_mhz as u32
+    );
+
+    let mut csv = CsvWriter::create(
+        "results/table2.csv",
+        &["work", "rule", "network", "accuracy", "fps_end_to_end", "freq_mhz"],
+    )
+    .unwrap();
+    for (w, r, n, a, f, mhz) in PAPER_ROWS {
+        csv.row(&[&w, &r, &n, &a, &f, &mhz]).unwrap();
+    }
+    let ours_net = format!("784-{hidden}-10");
+    let ours_acc = 100.0 * measured[0].1;
+    csv.row(&[&"Ours", &"Learnable STDP", &ours_net.as_str(), &ours_acc, &fps_pipe, &200])
+        .unwrap();
+    let ours_stdp_acc = 100.0 * measured[1].1;
+    csv.row(&[&"Ours-ablation", &"Pair-based STDP", &ours_net.as_str(), &ours_stdp_acc, &fps_pipe, &200])
+        .unwrap();
+    let path = csv.finish().unwrap();
+
+    // The reproduced structural claims:
+    assert!(
+        measured[0].1 > measured[1].1,
+        "learnable rule must beat fixed pair-STDP ({:.2} vs {:.2})",
+        measured[0].1,
+        measured[1].1
+    );
+    assert!(fps_pipe > fps_seq, "pipelining must raise end-to-end FPS");
+    assert!(
+        (fps_pipe - 32.0).abs() < 16.0,
+        "modelled FPS {fps_pipe:.1} should be in the paper's 32-FPS regime"
+    );
+    println!("\ncsv: {}", path.display());
+}

@@ -1,0 +1,118 @@
+//! FPGA backend: the cycle-accurate simulator behind the common trait.
+
+use super::SnnBackend;
+use crate::fpga::{FpgaSim, HwConfig};
+use crate::snn::{NetworkRule, SnnConfig};
+
+pub struct FpgaBackend {
+    sim: FpgaSim,
+    cfg: SnnConfig,
+    rule: Option<NetworkRule>,
+    fixed_weights: Option<Vec<f32>>,
+    hw: HwConfig,
+    /// Output traces mirrored on the host for decoding (the hardware
+    /// exposes them over the readout port).
+    out_traces: Vec<f32>,
+}
+
+impl FpgaBackend {
+    pub fn plastic(cfg: SnnConfig, rule: NetworkRule, hw: HwConfig) -> Self {
+        let sim = FpgaSim::new_plastic(cfg.clone(), rule.l1.clone(), rule.l2.clone(), hw.clone());
+        FpgaBackend {
+            out_traces: vec![0.0; cfg.n_out],
+            rule: Some(rule),
+            fixed_weights: None,
+            sim,
+            cfg,
+            hw,
+        }
+    }
+
+    pub fn fixed(cfg: SnnConfig, weights: &[f32], hw: HwConfig) -> Self {
+        let sim = FpgaSim::new_fixed(cfg.clone(), weights, hw.clone());
+        FpgaBackend {
+            out_traces: vec![0.0; cfg.n_out],
+            rule: None,
+            fixed_weights: Some(weights.to_vec()),
+            sim,
+            cfg,
+            hw,
+        }
+    }
+
+    pub fn sim(&self) -> &FpgaSim {
+        &self.sim
+    }
+
+    pub fn sim_mut(&mut self) -> &mut FpgaSim {
+        &mut self.sim
+    }
+}
+
+impl SnnBackend for FpgaBackend {
+    fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+
+    fn step(&mut self, input_spikes: &[bool]) -> Vec<bool> {
+        let out = self.sim.step(input_spikes);
+        // Mirror the FP16 output traces for the decoder.
+        let lam = self.cfg.lambda;
+        for (t, &s) in self.out_traces.iter_mut().zip(&out) {
+            *t = lam * *t + if s { 1.0 } else { 0.0 };
+        }
+        out
+    }
+
+    fn output_traces(&self) -> Vec<f32> {
+        self.out_traces.clone()
+    }
+
+    fn reset(&mut self) {
+        // Rebuild the simulator (cheap relative to an episode) — the
+        // hardware analogue is the global state-clear the Scheduler
+        // performs between deployments.
+        self.sim = match (&self.rule, &self.fixed_weights) {
+            (Some(rule), _) => FpgaSim::new_plastic(
+                self.cfg.clone(),
+                rule.l1.clone(),
+                rule.l2.clone(),
+                self.hw.clone(),
+            ),
+            (None, Some(w)) => FpgaSim::new_fixed(self.cfg.clone(), w, self.hw.clone()),
+            (None, None) => unreachable!("backend built without rule or weights"),
+        };
+        for t in self.out_traces.iter_mut() {
+            *t = 0.0;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fpga"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn fpga_backend_steps_and_resets() {
+        let cfg = SnnConfig::tiny();
+        let mut rng = Pcg64::new(0, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.3);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+        let mut b = FpgaBackend::plastic(cfg.clone(), rule, HwConfig::default());
+        for _ in 0..10 {
+            let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(0.5)).collect();
+            let out = b.step(&spikes);
+            assert_eq!(out.len(), cfg.n_out);
+        }
+        assert!(b.sim().cycles.total > 0);
+        let cycles_before = b.sim().cycles.total;
+        b.reset();
+        assert!(b.sim().cycles.total < cycles_before);
+    }
+}

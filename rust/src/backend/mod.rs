@@ -1,0 +1,73 @@
+//! Backend abstraction: one network-step contract, three engines.
+//!
+//! | backend  | substrate                      | role                      |
+//! |----------|--------------------------------|---------------------------|
+//! | native   | pure-Rust f32 golden model     | ES rollouts, ground truth |
+//! | xla      | AOT artifact via PJRT          | the production request path|
+//! | fpga     | cycle-accurate FP16 simulator  | latency/power/Table-II    |
+//!
+//! Cross-backend equivalence is tested in `tests/` (integration): the
+//! same rule + same spike streams must produce closely matching
+//! behaviour everywhere (bit-exact between native-FP16 and fpga;
+//! float-level between native-f32 and xla).
+
+pub mod fpga;
+pub mod native;
+pub mod xla;
+
+pub use fpga::FpgaBackend;
+pub use native::NativeBackend;
+pub use xla::XlaBackend;
+
+use crate::snn::SnnConfig;
+
+/// One SNN controller instance stepping one timestep at a time.
+///
+/// Not `Send`: the XLA backend wraps `!Send` PJRT handles. The request
+/// path is single-threaded (one accelerator pipeline); parallel ES
+/// rollouts construct native backends per worker thread instead of
+/// sharing one.
+pub trait SnnBackend {
+    /// Network geometry.
+    fn config(&self) -> &SnnConfig;
+    /// Advance one timestep; returns output spikes.
+    fn step(&mut self, input_spikes: &[bool]) -> Vec<bool>;
+    /// Output-population traces (action decoding).
+    fn output_traces(&self) -> Vec<f32>;
+    /// Reset dynamic state (zero weights again in plastic mode).
+    fn reset(&mut self);
+    /// Identifier for logs/CSV.
+    fn name(&self) -> &'static str;
+}
+
+/// Which backend to instantiate (CLI-facing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Xla,
+    Fpga,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "native" => Some(BackendKind::Native),
+            "xla" => Some(BackendKind::Xla),
+            "fpga" => Some(BackendKind::Fpga),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("fpga"), Some(BackendKind::Fpga));
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("gpu"), None);
+    }
+}

@@ -1,0 +1,70 @@
+//! Native backend: the pure-Rust golden model (`SnnNetwork<f32>`).
+
+use super::SnnBackend;
+use crate::snn::{Mode, NetworkRule, SnnConfig, SnnNetwork};
+
+pub struct NativeBackend {
+    net: SnnNetwork<f32>,
+}
+
+impl NativeBackend {
+    pub fn plastic(cfg: SnnConfig, rule: NetworkRule) -> Self {
+        NativeBackend {
+            net: SnnNetwork::new(cfg, Mode::Plastic(rule)),
+        }
+    }
+
+    pub fn fixed(cfg: SnnConfig, weights: &[f32]) -> Self {
+        let mut net = SnnNetwork::new(cfg, Mode::Fixed);
+        net.load_weights(weights);
+        NativeBackend { net }
+    }
+
+    pub fn network(&self) -> &SnnNetwork<f32> {
+        &self.net
+    }
+}
+
+impl SnnBackend for NativeBackend {
+    fn config(&self) -> &SnnConfig {
+        &self.net.cfg
+    }
+
+    fn step(&mut self, input_spikes: &[bool]) -> Vec<bool> {
+        self.net.step_spikes(input_spikes).to_vec()
+    }
+
+    fn output_traces(&self) -> Vec<f32> {
+        self.net.output_traces_f32()
+    }
+
+    fn reset(&mut self) {
+        self.net.reset();
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn native_backend_round_trip() {
+        let cfg = SnnConfig::tiny();
+        let mut rng = Pcg64::new(0, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.2);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+        let mut b = NativeBackend::plastic(cfg.clone(), rule);
+        let spikes = vec![true; cfg.n_in];
+        let out = b.step(&spikes);
+        assert_eq!(out.len(), cfg.n_out);
+        assert_eq!(b.output_traces().len(), cfg.n_out);
+        b.reset();
+        assert_eq!(b.network().weight_mean_abs(), 0.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! XLA backend: the AOT artifact executed through PJRT — the production
+//! request path (Python never runs here).
+
+use super::SnnBackend;
+use crate::runtime::{Registry, SnnStepExecutable, Variant, XlaClient};
+use crate::snn::{NetworkRule, SnnConfig};
+
+pub struct XlaBackend {
+    exe: SnnStepExecutable,
+    cfg: SnnConfig,
+    plastic: bool,
+}
+
+impl XlaBackend {
+    /// Plastic (FireFly-P) deployment of the `<geometry>_step` artifact.
+    pub fn plastic(geometry: &str, rule: &NetworkRule) -> Result<XlaBackend, String> {
+        let registry = Registry::open_default()?;
+        let meta = registry
+            .find(geometry, Variant::Step)
+            .ok_or_else(|| format!("no step artifact for geometry {geometry:?}"))?;
+        let client = XlaClient::global()?;
+        let mut exe = client.load(meta)?;
+        let mut cfg = SnnConfig::control(meta.n_in, meta.n_out);
+        cfg.n_hidden = meta.n_hidden;
+        // θ planes: RuleParams stores packed-per-synapse; the artifact
+        // wants [4, pre, post] planes.
+        let p1 = rule.l1.unpack_planes();
+        let p2 = rule.l2.unpack_planes();
+        let flat1: Vec<f32> = p1.iter().flat_map(|p| p.iter().copied()).collect();
+        let flat2: Vec<f32> = p2.iter().flat_map(|p| p.iter().copied()).collect();
+        exe.set_rule(&flat1, &flat2)?;
+        Ok(XlaBackend {
+            exe,
+            cfg,
+            plastic: true,
+        })
+    }
+
+    /// Fixed-weight deployment of the `<geometry>_fwd` artifact.
+    pub fn fixed(geometry: &str, weights: &[f32]) -> Result<XlaBackend, String> {
+        let registry = Registry::open_default()?;
+        let meta = registry
+            .find(geometry, Variant::Fwd)
+            .ok_or_else(|| format!("no fwd artifact for geometry {geometry:?}"))?;
+        let client = XlaClient::global()?;
+        let mut exe = client.load(meta)?;
+        let mut cfg = SnnConfig::control(meta.n_in, meta.n_out);
+        cfg.n_hidden = meta.n_hidden;
+        let split = meta.n_in * meta.n_hidden;
+        exe.set_weights(&weights[..split], &weights[split..])?;
+        Ok(XlaBackend {
+            exe,
+            cfg,
+            plastic: false,
+        })
+    }
+
+    pub fn executable(&self) -> &SnnStepExecutable {
+        &self.exe
+    }
+}
+
+impl SnnBackend for XlaBackend {
+    fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+
+    fn step(&mut self, input_spikes: &[bool]) -> Vec<bool> {
+        self.exe.step(input_spikes).expect("XLA step failed")
+    }
+
+    fn output_traces(&self) -> Vec<f32> {
+        self.exe.output_traces().expect("trace fetch failed")
+    }
+
+    fn reset(&mut self) {
+        // Plastic deployments restart from w = 0 (Phase 2 contract);
+        // fixed deployments keep their installed weights.
+        self.exe.reset(self.plastic);
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

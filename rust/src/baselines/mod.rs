@@ -1,0 +1,14 @@
+//! Baselines the paper compares against.
+//!
+//! - [`weight_trained`]: SNNs with directly evolved synaptic weights and
+//!   no online plasticity — Fig. 3's comparator ("SNNs with directly
+//!   trained synaptic weights").
+//! - [`stdp`]: classic fixed plasticity rules (pair-based STDP, and a
+//!   [16]-style triplet variant) — Table II's prior-work learning rules,
+//!   plus the rows of published systems for the rendered table.
+
+pub mod stdp;
+pub mod weight_trained;
+
+pub use stdp::{PairStdpRule, TripletStdpRule};
+pub use weight_trained::train_weight_baseline;

@@ -1,0 +1,182 @@
+//! Fixed plasticity-rule baselines (the learning rules of Table II's
+//! prior systems), expressed in the same θ parameterization where
+//! possible so they run on the identical engines.
+//!
+//! Pair-based STDP with traces,
+//!
+//! ```text
+//! Δw = A⁺·S_j·s_i − A⁻·S_i·s_j
+//! ```
+//!
+//! is *not* a special case of the four-term rule (it gates on the spike
+//! indicators s, not the traces S), which is precisely the expressivity
+//! gap the learnable rule exploits. We therefore provide the honest
+//! event-gated implementations here and, for the ablation bench, the
+//! best *trace-approximated* projection onto θ.
+
+use crate::util::rng::Pcg64;
+
+/// Classic pair-based STDP (Table II rows [35], [37]).
+#[derive(Clone, Copy, Debug)]
+pub struct PairStdpRule {
+    pub a_plus: f32,
+    pub a_minus: f32,
+}
+
+impl Default for PairStdpRule {
+    fn default() -> Self {
+        PairStdpRule {
+            a_plus: 0.6,
+            a_minus: 0.3,
+        }
+    }
+}
+
+impl PairStdpRule {
+    /// Event-gated update for one synapse.
+    #[inline]
+    pub fn delta(&self, pre_trace: f32, post_trace: f32, pre_spike: bool, post_spike: bool) -> f32 {
+        let mut dw = 0.0;
+        if post_spike {
+            dw += self.a_plus * pre_trace;
+        }
+        if pre_spike {
+            dw -= self.a_minus * post_trace;
+        }
+        dw
+    }
+
+    /// Trace-approximated projection onto the four-term θ: spikes are
+    /// replaced by their expectation given the trace (s ≈ (1−λ)·S for a
+    /// stationary rate), giving α = A⁺(1−λ) − A⁻(1−λ), β = γ = δ = 0.
+    /// Used by the ablation bench to quantify what the approximation
+    /// loses.
+    pub fn theta_projection(&self, lambda: f32) -> [f32; 4] {
+        let g = 1.0 - lambda;
+        [(self.a_plus - self.a_minus) * g, 0.0, 0.0, 0.0]
+    }
+}
+
+/// Triplet STDP (Pfister & Gerstner 2006 — reference [16]; Table II row
+/// [39] uses the reward-modulated variant). Adds a second, slower
+/// postsynaptic trace so potentiation depends on post-spike history.
+#[derive(Clone, Debug)]
+pub struct TripletStdpRule {
+    pub a2_plus: f32,
+    pub a2_minus: f32,
+    pub a3_plus: f32,
+    /// Slow postsynaptic trace state (per neuron) and its decay.
+    pub lambda_slow: f32,
+    slow_post: Vec<f32>,
+}
+
+impl TripletStdpRule {
+    pub fn new(n_post: usize) -> TripletStdpRule {
+        TripletStdpRule {
+            a2_plus: 0.5,
+            a2_minus: 0.3,
+            a3_plus: 0.4,
+            lambda_slow: 0.8,
+            slow_post: vec![0.0; n_post],
+        }
+    }
+
+    /// Advance the slow traces (call once per timestep after spikes).
+    pub fn tick(&mut self, post_spikes: &[bool]) {
+        for (t, &s) in self.slow_post.iter_mut().zip(post_spikes) {
+            *t = self.lambda_slow * *t + if s { 1.0 } else { 0.0 };
+        }
+    }
+
+    #[inline]
+    pub fn delta(
+        &self,
+        i_post: usize,
+        pre_trace: f32,
+        post_trace: f32,
+        pre_spike: bool,
+        post_spike: bool,
+    ) -> f32 {
+        let mut dw = 0.0;
+        if post_spike {
+            // pair + triplet potentiation (gated by the slow trace)
+            dw += pre_trace * (self.a2_plus + self.a3_plus * self.slow_post[i_post]);
+        }
+        if pre_spike {
+            dw -= self.a2_minus * post_trace;
+        }
+        dw
+    }
+}
+
+/// Smoke-level behavioural check helper: run a Poisson pre/post pair
+/// under a rule and report the net drift (used by tests to verify the
+/// causal-potentiation signature of STDP).
+pub fn pair_drift(rule: &PairStdpRule, causal: bool, steps: usize, seed: u64) -> f32 {
+    let mut rng = Pcg64::new(seed, 0);
+    let (mut s_pre, mut s_post) = (0.0f32, 0.0f32);
+    let mut w = 0.0f32;
+    let lam = 0.5;
+    for _ in 0..steps {
+        let pre = rng.bernoulli(0.3);
+        // causal: post tends to follow pre; anti-causal: post leads.
+        let post = if causal {
+            s_pre > 0.4 && rng.bernoulli(0.8)
+        } else {
+            rng.bernoulli(0.3)
+        };
+        s_pre = lam * s_pre + if pre { 1.0 } else { 0.0 };
+        s_post = lam * s_post + if post { 1.0 } else { 0.0 };
+        w += 0.05 * rule.delta(s_pre, s_post, pre, post);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn causal_firing_potentiates() {
+        let rule = PairStdpRule::default();
+        let causal = pair_drift(&rule, true, 2000, 1);
+        let random = pair_drift(&rule, false, 2000, 1);
+        assert!(
+            causal > random,
+            "causal drift {causal} must exceed random {random}"
+        );
+    }
+
+    #[test]
+    fn depression_dominates_uncorrelated_high_rate() {
+        // With A⁻ balanced against A⁺ and uncorrelated firing, pre-spike
+        // depression events accumulate (classic STDP stability story).
+        let rule = PairStdpRule {
+            a_plus: 0.3,
+            a_minus: 0.6,
+        };
+        let drift = pair_drift(&rule, false, 3000, 2);
+        assert!(drift < 0.0, "drift {drift}");
+    }
+
+    #[test]
+    fn theta_projection_shape() {
+        let rule = PairStdpRule::default();
+        let theta = rule.theta_projection(0.5);
+        assert!((theta[0] - 0.15).abs() < 1e-6);
+        assert_eq!(&theta[1..], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn triplet_slow_trace_gates_potentiation() {
+        let mut rule = TripletStdpRule::new(1);
+        // no post history: only pair potentiation
+        let base = rule.delta(0, 1.0, 0.0, false, true);
+        // build post history
+        for _ in 0..5 {
+            rule.tick(&[true]);
+        }
+        let gated = rule.delta(0, 1.0, 0.0, false, true);
+        assert!(gated > base, "triplet term must add potentiation");
+    }
+}

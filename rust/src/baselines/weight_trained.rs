@@ -1,0 +1,38 @@
+//! The weight-trained baseline of Fig. 3: identical SNN architecture,
+//! identical PEPG optimizer, identical task grid and budget — but the
+//! genome is the synaptic weight vector itself and **no online
+//! adaptation happens at deployment**. The comparison isolates exactly
+//! one variable: whether the evolved object is a *learning rule* or a
+//! *weight configuration*.
+
+use crate::coordinator::offline::{train_rule, TrainConfig, TrainResult};
+use crate::es::eval::GenomeKind;
+
+/// Train the weight baseline with a budget mirrored from `rule_cfg`.
+pub fn train_weight_baseline(rule_cfg: &TrainConfig) -> TrainResult {
+    let mut cfg = rule_cfg.clone();
+    cfg.kind = GenomeKind::Weights;
+    train_rule(&cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::offline::TrainConfig;
+    use crate::es::eval::{rollout_fitness, EvalSpec, GenomeKind};
+
+    #[test]
+    fn baseline_trains_and_deploys_fixed() {
+        let mut cfg = TrainConfig::quick("cheetah-vel", GenomeKind::PlasticityRule);
+        cfg.generations = 5;
+        let result = train_weight_baseline(&cfg);
+        // genome is a weight vector, evaluable under Weights semantics
+        let spec = EvalSpec {
+            kind: GenomeKind::Weights,
+            ..cfg.spec()
+        };
+        assert_eq!(result.genome.len(), spec.genome_dim());
+        let fit = rollout_fitness(&spec, &result.genome);
+        assert!(fit.is_finite());
+    }
+}

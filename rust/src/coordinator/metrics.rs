@@ -1,0 +1,92 @@
+//! Named metrics registry: online Welford accumulators + counters with
+//! a stable text report. Used by the adaptation loop, the server and
+//! the benches; designed for zero allocation on the hot path after the
+//! first `observe` of each name.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::Welford;
+
+#[derive(Default)]
+pub struct Metrics {
+    series: BTreeMap<&'static str, Welford>,
+    counters: BTreeMap<&'static str, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn observe(&mut self, name: &'static str, value: f64) {
+        self.series.entry(name).or_insert_with(Welford::new).add(value);
+    }
+
+    pub fn incr(&mut self, name: &'static str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &'static str, n: u64) {
+        *self.counters.entry(name).or_insert(0) += n;
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn mean(&self, name: &str) -> f64 {
+        self.series.get(name).map(|w| w.mean()).unwrap_or(0.0)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Welford> {
+        self.series.get(name)
+    }
+
+    pub fn report(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        for (name, w) in &self.series {
+            let _ = writeln!(
+                s,
+                "{name:<28} n={:<8} mean={:<12.4} std={:<12.4} min={:<12.4} max={:.4}",
+                w.n,
+                w.mean(),
+                w.std_dev(),
+                w.min,
+                w.max
+            );
+        }
+        for (name, c) in &self.counters {
+            let _ = writeln!(s, "{name:<28} count={c}");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_and_report() {
+        let mut m = Metrics::new();
+        for i in 0..10 {
+            m.observe("latency_us", i as f64);
+        }
+        m.incr("requests");
+        m.add("requests", 4);
+        assert_eq!(m.count("requests"), 5);
+        assert!((m.mean("latency_us") - 4.5).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("latency_us"));
+        assert!(r.contains("count=5"));
+    }
+
+    #[test]
+    fn missing_names_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.count("nope"), 0);
+        assert_eq!(m.mean("nope"), 0.0);
+        assert!(m.get("nope").is_none());
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator: the processes around the compute core.
+//!
+//! - [`offline`]: Phase-1 leader — PEPG over rule coefficients, fanned
+//!   out to worker threads (the computationally heavy, off-robot part).
+//! - [`adapt_loop`]: Phase-2 driver — online adaptation episodes with
+//!   mid-episode perturbation injection and recovery metrics.
+//! - [`server`]: a TCP control server exposing the deployed controller
+//!   (observation in → action out) — the robot-side request loop.
+//! - [`metrics`]: lightweight named metrics registry for all of the
+//!   above.
+
+pub mod adapt_loop;
+pub mod metrics;
+pub mod offline;
+pub mod server;
+
+pub use adapt_loop::{AdaptConfig, AdaptLog, run_adaptation};
+pub use metrics::Metrics;
+pub use offline::{train_rule, TrainConfig, TrainResult};

@@ -1,0 +1,258 @@
+//! Phase-1 leader: offline rule optimization (§II-B).
+//!
+//! "A population of SNNs, each configured with a candidate parameter
+//! set, is evaluated on a representative task. Through iterative
+//! selection and mutation, the ES converges on a parameter set θ* that
+//! produces robust adaptive behavior."
+//!
+//! The same driver trains the weight-trained baseline (Fig. 3's
+//! comparator): `GenomeKind::Weights` swaps the genome semantics while
+//! keeping optimizer, tasks, seeds and budget identical.
+
+use crate::env::{family_of, train_grid};
+use crate::es::eval::{evaluate_population, EvalSpec, GenomeKind};
+use crate::es::pepg::{Pepg, PepgConfig};
+use crate::es::Optimizer;
+use crate::util::stats;
+use crate::util::threadpool::default_workers;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub env_name: &'static str,
+    pub kind: GenomeKind,
+    pub generations: usize,
+    pub pairs: usize,
+    pub hidden: usize,
+    pub episodes_per_task: usize,
+    pub seed: u64,
+    pub workers: usize,
+    /// Use only the first `n_tasks` of the 8-task training grid (speeds
+    /// up tests; full runs use 8).
+    pub n_tasks: usize,
+    pub sigma_init: f32,
+    /// Print a progress line every generation.
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn quick(env_name: &'static str, kind: GenomeKind) -> TrainConfig {
+        TrainConfig {
+            env_name,
+            kind,
+            generations: 10,
+            pairs: 8,
+            hidden: 32,
+            episodes_per_task: 1,
+            seed: 42,
+            workers: default_workers(),
+            n_tasks: 2,
+            sigma_init: 0.05,
+            verbose: false,
+        }
+    }
+
+    pub fn paper(env_name: &'static str, kind: GenomeKind) -> TrainConfig {
+        TrainConfig {
+            env_name,
+            kind,
+            generations: 150,
+            pairs: 32,
+            hidden: 128,
+            episodes_per_task: 1,
+            seed: 42,
+            workers: default_workers(),
+            n_tasks: 8,
+            sigma_init: 0.05,
+            verbose: true,
+        }
+    }
+
+    pub fn spec(&self) -> EvalSpec {
+        let family = family_of(self.env_name).expect("unknown env");
+        EvalSpec {
+            env_name: self.env_name,
+            kind: self.kind,
+            tasks: train_grid(family)[..self.n_tasks].to_vec(),
+            episodes_per_task: self.episodes_per_task,
+            seed: self.seed,
+            hidden: self.hidden,
+        }
+    }
+}
+
+/// One generation's record (drives the Fig. 3 learning curves).
+#[derive(Clone, Copy, Debug)]
+pub struct GenRecord {
+    pub generation: usize,
+    pub mean_fitness: f64,
+    pub best_fitness: f64,
+    pub mean_genome_fitness: f64,
+    pub sigma_mean: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub genome: Vec<f32>,
+    pub history: Vec<GenRecord>,
+    pub spec_hidden: usize,
+}
+
+/// Run Phase 1 and return the optimized genome (θ* or W*).
+pub fn train_rule(cfg: &TrainConfig) -> TrainResult {
+    let spec = cfg.spec();
+    let dim = spec.genome_dim();
+    let mut opt = Pepg::new(
+        dim,
+        PepgConfig {
+            pairs: cfg.pairs,
+            sigma_init: cfg.sigma_init,
+            ..PepgConfig::default()
+        },
+        cfg.seed,
+    );
+    let mut history = Vec::with_capacity(cfg.generations);
+    for gen in 0..cfg.generations {
+        let pop = opt.ask();
+        let fitness = evaluate_population(&spec, &pop, cfg.workers);
+        opt.tell(&fitness);
+        // Track the distribution mean's own fitness every few
+        // generations (the deployable artifact's quality).
+        let mean_fit = if gen % 5 == 0 || gen + 1 == cfg.generations {
+            crate::es::eval::rollout_fitness(&spec, opt.mean())
+        } else {
+            f64::NAN
+        };
+        let rec = GenRecord {
+            generation: gen,
+            mean_fitness: stats::mean(&fitness),
+            best_fitness: stats::max(&fitness),
+            mean_genome_fitness: mean_fit,
+            sigma_mean: opt.sigma_mean(),
+        };
+        if cfg.verbose {
+            crate::log_info!(
+                "gen {:>4}  pop mean {:>9.3}  best {:>9.3}  μ-fitness {:>9.3}  σ {:.4}",
+                rec.generation,
+                rec.mean_fitness,
+                rec.best_fitness,
+                rec.mean_genome_fitness,
+                rec.sigma_mean
+            );
+        }
+        history.push(rec);
+    }
+    TrainResult {
+        genome: opt.mean().to_vec(),
+        history,
+        spec_hidden: cfg.hidden,
+    }
+}
+
+/// Save/load genomes as little-endian f32 blobs with a text header.
+pub mod genome_io {
+    use std::io::{Read, Write};
+    use std::path::Path;
+
+    pub fn save(path: &Path, env: &str, kind: &str, hidden: usize, genome: &[f32]) -> std::io::Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "fireflyp-genome env={env} kind={kind} hidden={hidden} len={}", genome.len())?;
+        for x in genome {
+            f.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<(String, String, usize, Vec<f32>)> {
+        let mut f = std::fs::File::open(path)?;
+        let mut all = Vec::new();
+        f.read_to_end(&mut all)?;
+        let nl = all
+            .iter()
+            .position(|&b| b == b'\n')
+            .ok_or_else(|| std::io::Error::other("missing genome header"))?;
+        let header = String::from_utf8_lossy(&all[..nl]).to_string();
+        let mut env = String::new();
+        let mut kind = String::new();
+        let mut hidden = 0usize;
+        let mut len = 0usize;
+        for tok in header.split_whitespace().skip(1) {
+            if let Some((k, v)) = tok.split_once('=') {
+                match k {
+                    "env" => env = v.to_string(),
+                    "kind" => kind = v.to_string(),
+                    "hidden" => hidden = v.parse().unwrap_or(0),
+                    "len" => len = v.parse().unwrap_or(0),
+                    _ => {}
+                }
+            }
+        }
+        let body = &all[nl + 1..];
+        if body.len() != len * 4 {
+            return Err(std::io::Error::other(format!(
+                "genome body {} bytes, expected {}",
+                body.len(),
+                len * 4
+            )));
+        }
+        let genome: Vec<f32> = body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok((env, kind, hidden, genome))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_training_improves_fitness() {
+        let mut cfg = TrainConfig::quick("cheetah-vel", GenomeKind::PlasticityRule);
+        cfg.generations = 8;
+        let result = train_rule(&cfg);
+        assert_eq!(result.history.len(), 8);
+        let first = result.history.first().unwrap().mean_fitness;
+        let last = result.history.last().unwrap().mean_fitness;
+        assert!(
+            last > first,
+            "fitness should improve: {first} → {last}"
+        );
+        assert_eq!(result.genome.len(), cfg.spec().genome_dim());
+    }
+
+    #[test]
+    fn weight_baseline_uses_smaller_genome() {
+        let rule_cfg = TrainConfig::quick("cheetah-vel", GenomeKind::PlasticityRule);
+        let w_cfg = TrainConfig::quick("cheetah-vel", GenomeKind::Weights);
+        assert_eq!(rule_cfg.spec().genome_dim(), 4 * w_cfg.spec().genome_dim());
+    }
+
+    #[test]
+    fn genome_io_round_trip() {
+        let dir = std::env::temp_dir().join("fireflyp_genome_test");
+        let path = dir.join("g.bin");
+        let genome: Vec<f32> = (0..100).map(|i| i as f32 * 0.25 - 10.0).collect();
+        genome_io::save(&path, "ant-dir", "rule", 128, &genome).unwrap();
+        let (env, kind, hidden, loaded) = genome_io::load(&path).unwrap();
+        assert_eq!(env, "ant-dir");
+        assert_eq!(kind, "rule");
+        assert_eq!(hidden, 128);
+        assert_eq!(loaded, genome);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let mut cfg = TrainConfig::quick("cheetah-vel", GenomeKind::Weights);
+        cfg.generations = 3;
+        cfg.workers = 1;
+        let a = train_rule(&cfg);
+        cfg.workers = 4;
+        let b = train_rule(&cfg);
+        assert_eq!(a.genome, b.genome, "training must not depend on thread count");
+    }
+}

@@ -1,0 +1,238 @@
+//! Control server: the deployed controller as a network service — the
+//! robot-side request loop of the L3 coordinator.
+//!
+//! Line-oriented TCP protocol (one controller per connection, matching
+//! the one-pipeline accelerator):
+//!
+//! ```text
+//! → OBS <f32>,<f32>,...        observation vector
+//! ← ACT <f32>,<f32>,...        action vector
+//! → RESET                      reset controller state (Phase-2 w := 0)
+//! ← OK
+//! → STATS                      request metrics
+//! ← STATS requests=<n> mean_latency_us=<x>
+//! → PING                       liveness
+//! ← PONG
+//! ```
+//!
+//! The server owns the encoder/decoder pair so clients speak raw
+//! observations/actions; spike coding stays an implementation detail of
+//! the accelerator — as it would on the real robot bus.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use crate::backend::SnnBackend;
+use crate::coordinator::metrics::Metrics;
+use crate::es::eval::NEURONS_PER_DIM;
+use crate::snn::encoding::{PopulationEncoder, TraceDecoder};
+use crate::util::rng::Pcg64;
+
+pub struct ControlServer {
+    backend: Box<dyn SnnBackend>,
+    encoder: PopulationEncoder,
+    decoder: TraceDecoder,
+    rng: Pcg64,
+    pub metrics: Metrics,
+    spikes: Vec<bool>,
+    action: Vec<f32>,
+}
+
+impl ControlServer {
+    pub fn new(backend: Box<dyn SnnBackend>, obs_dim: usize, act_dim: usize, seed: u64) -> Self {
+        let cfg = backend.config();
+        assert_eq!(cfg.n_in, obs_dim * NEURONS_PER_DIM, "geometry mismatch");
+        assert_eq!(cfg.n_out, 2 * act_dim, "decoder geometry mismatch");
+        let lambda = cfg.lambda;
+        let n_in = cfg.n_in;
+        ControlServer {
+            encoder: PopulationEncoder::symmetric(obs_dim, NEURONS_PER_DIM, 3.0),
+            decoder: TraceDecoder::new(act_dim, lambda),
+            rng: Pcg64::new(seed, 0x5E),
+            metrics: Metrics::new(),
+            spikes: vec![false; n_in],
+            action: vec![0.0; act_dim],
+            backend,
+        }
+    }
+
+    /// Handle one request line; returns the response line.
+    pub fn handle(&mut self, line: &str) -> String {
+        let line = line.trim();
+        let started = Instant::now();
+        let resp = if line == "PING" {
+            "PONG".to_string()
+        } else if line == "RESET" {
+            self.backend.reset();
+            self.metrics.incr("resets");
+            "OK".to_string()
+        } else if line == "STATS" {
+            format!(
+                "STATS requests={} mean_latency_us={:.2}",
+                self.metrics.count("requests"),
+                self.metrics.mean("latency_us")
+            )
+        } else if let Some(rest) = line.strip_prefix("OBS ") {
+            match parse_floats(rest, self.encoder.dims) {
+                Ok(obs) => {
+                    self.encoder.encode(&obs, &mut self.rng, &mut self.spikes);
+                    self.backend.step(&self.spikes);
+                    self.decoder
+                        .decode(&self.backend.output_traces(), &mut self.action);
+                    self.metrics.incr("requests");
+                    let mut s = String::from("ACT ");
+                    for (i, a) in self.action.iter().enumerate() {
+                        if i > 0 {
+                            s.push(',');
+                        }
+                        s.push_str(&format!("{a:.6}"));
+                    }
+                    s
+                }
+                Err(e) => format!("ERR {e}"),
+            }
+        } else {
+            self.metrics.incr("bad_requests");
+            format!("ERR unknown command {line:?}")
+        };
+        self.metrics
+            .observe("latency_us", started.elapsed().as_secs_f64() * 1e6);
+        resp
+    }
+
+    /// Serve one TCP connection until EOF.
+    pub fn serve_connection(&mut self, stream: TcpStream) -> std::io::Result<()> {
+        let peer = stream.peer_addr()?;
+        crate::log_info!("connection from {peer}");
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            let resp = self.handle(&line);
+            writer.write_all(resp.as_bytes())?;
+            writer.write_all(b"\n")?;
+        }
+        Ok(())
+    }
+
+    /// Bind and serve connections sequentially (one accelerator, one
+    /// control stream at a time). `max_connections` bounds the loop for
+    /// tests; pass `None` to run forever.
+    pub fn serve(&mut self, addr: &str, max_connections: Option<usize>) -> std::io::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        crate::log_info!("control server listening on {}", listener.local_addr()?);
+        let mut served = 0usize;
+        for stream in listener.incoming() {
+            self.serve_connection(stream?)?;
+            served += 1;
+            if let Some(max) = max_connections {
+                if served >= max {
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_floats(s: &str, expect: usize) -> Result<Vec<f32>, String> {
+    let vals: Result<Vec<f32>, _> = s.split(',').map(|t| t.trim().parse::<f32>()).collect();
+    let vals = vals.map_err(|e| format!("bad float: {e}"))?;
+    if vals.len() != expect {
+        return Err(format!("expected {expect} obs dims, got {}", vals.len()));
+    }
+    Ok(vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::snn::{NetworkRule, SnnConfig};
+
+    fn server() -> ControlServer {
+        // cheetah-vel geometry: 6 obs dims × 8 = 48 in, 2·6 = 12 out.
+        let mut cfg = SnnConfig::control(48, 12);
+        cfg.n_hidden = 16;
+        let mut rng = Pcg64::new(0, 0);
+        let mut genome = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut genome, 0.05);
+        let rule = NetworkRule::from_flat(&cfg, &genome);
+        ControlServer::new(Box::new(NativeBackend::plastic(cfg, rule)), 6, 6, 1)
+    }
+
+    #[test]
+    fn ping_and_reset() {
+        let mut s = server();
+        assert_eq!(s.handle("PING"), "PONG");
+        assert_eq!(s.handle("RESET"), "OK");
+        assert_eq!(s.metrics.count("resets"), 1);
+    }
+
+    #[test]
+    fn obs_returns_action_of_right_arity() {
+        let mut s = server();
+        let resp = s.handle("OBS 0.1,0.2,0.3,0.4,0.5,1.0");
+        assert!(resp.starts_with("ACT "), "{resp}");
+        let acts: Vec<&str> = resp[4..].split(',').collect();
+        assert_eq!(acts.len(), 6);
+        for a in acts {
+            let v: f32 = a.parse().unwrap();
+            assert!((-1.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn malformed_obs_is_err_not_panic() {
+        let mut s = server();
+        assert!(s.handle("OBS 1,2").starts_with("ERR expected 6"));
+        assert!(s.handle("OBS a,b,c,d,e,f").starts_with("ERR bad float"));
+        assert!(s.handle("NONSENSE").starts_with("ERR unknown"));
+        assert_eq!(s.metrics.count("bad_requests"), 1);
+    }
+
+    #[test]
+    fn stats_reports_requests() {
+        let mut s = server();
+        s.handle("OBS 0,0,0,0,0,1");
+        s.handle("OBS 0,0,0,0,0,1");
+        let stats = s.handle("STATS");
+        assert!(stats.contains("requests=2"), "{stats}");
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        use std::io::{BufRead, BufReader, Write};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+
+        let handle = std::thread::spawn(move || {
+            let mut s = server();
+            s.serve(&addr.to_string(), Some(1)).unwrap();
+            s.metrics.count("requests")
+        });
+        // give the server a moment to bind
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream;
+        w.write_all(b"PING\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "PONG");
+        w.write_all(b"OBS 0,0,0,0,0,1\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ACT "));
+        drop(w);
+        drop(reader);
+        let served_requests = handle.join().unwrap();
+        assert_eq!(served_requests, 1);
+    }
+}

@@ -1,0 +1,324 @@
+//! AntDir — planar quadruped locomotion toward a commanded direction
+//! (the Brax *ant* direction-generalization task, §IV-A).
+//!
+//! Model: a rigid body in the plane with four legs modeled as thrust
+//! generators mounted at 45°/135°/225°/315° in the body frame. Each leg's
+//! action in [−1, 1] produces thrust along its mount direction plus a yaw
+//! torque proportional to its tangential lever arm. Linear/angular drag
+//! make velocities bounded; the controller must coordinate legs to move
+//! the body along the commanded world-frame direction.
+//!
+//! Reward per step = (body velocity · target direction) − control cost,
+//! the same shaping Brax's `ant` direction task uses. A leg failure
+//! (actuator zeroed) breaks the thrust symmetry, so sustained progress
+//! requires online compensation by the remaining legs — the paper's
+//! recovery scenario.
+
+use super::perturb::Perturbation;
+use super::protocol::{TaskFamily, TaskParam};
+use super::Env;
+use crate::util::rng::Pcg64;
+
+const N_LEGS: usize = 4;
+const DT: f32 = 0.05;
+const MASS: f32 = 1.0;
+const INERTIA: f32 = 0.2;
+const LIN_DRAG: f32 = 1.2;
+const ANG_DRAG: f32 = 1.5;
+const THRUST_GAIN: f32 = 3.0;
+const TORQUE_GAIN: f32 = 0.6;
+const CTRL_COST: f32 = 0.05;
+const HORIZON: usize = 200;
+
+pub struct AntDir {
+    // body state (world frame)
+    x: f32,
+    y: f32,
+    vx: f32,
+    vy: f32,
+    heading: f32,
+    omega: f32,
+    target_dir: f32,
+    t: usize,
+    perturbation: Option<Perturbation>,
+    /// Leg mount angles in the body frame.
+    leg_angles: [f32; N_LEGS],
+}
+
+impl AntDir {
+    pub fn new() -> Self {
+        AntDir {
+            x: 0.0,
+            y: 0.0,
+            vx: 0.0,
+            vy: 0.0,
+            heading: 0.0,
+            omega: 0.0,
+            target_dir: 0.0,
+            t: 0,
+            perturbation: None,
+            leg_angles: [
+                std::f32::consts::FRAC_PI_4,
+                3.0 * std::f32::consts::FRAC_PI_4,
+                5.0 * std::f32::consts::FRAC_PI_4,
+                7.0 * std::f32::consts::FRAC_PI_4,
+            ],
+        }
+    }
+
+    fn observation(&self) -> Vec<f32> {
+        // Direction error expressed in the body frame so the policy can
+        // be rotation-equivariant; plus egocentric velocities.
+        let err = angle_wrap(self.target_dir - self.heading);
+        let (sh, ch) = self.heading.sin_cos();
+        // world→body rotation
+        let vbx = ch * self.vx + sh * self.vy;
+        let vby = -sh * self.vx + ch * self.vy;
+        let speed = (self.vx * self.vx + self.vy * self.vy).sqrt();
+        let mut obs = vec![
+            err.cos(),
+            err.sin(),
+            vbx,
+            vby,
+            self.omega,
+            speed,
+            // progress rate along the target direction
+            self.vx * self.target_dir.cos() + self.vy * self.target_dir.sin(),
+            1.0, // bias input
+        ];
+        if let Some(p) = &self.perturbation {
+            p.filter_obs(&mut obs);
+        }
+        obs
+    }
+}
+
+impl Default for AntDir {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for AntDir {
+    fn obs_dim(&self) -> usize {
+        8
+    }
+
+    fn act_dim(&self) -> usize {
+        N_LEGS
+    }
+
+    fn reset(&mut self, task: &TaskParam, rng: &mut Pcg64) -> Vec<f32> {
+        assert_eq!(task.family, TaskFamily::Direction, "AntDir needs a direction task");
+        self.x = 0.0;
+        self.y = 0.0;
+        self.vx = 0.0;
+        self.vy = 0.0;
+        self.omega = 0.0;
+        // Small heading jitter so the rule cannot memorize an exact pose.
+        self.heading = (rng.uniform_range(-0.1, 0.1)) as f32;
+        self.target_dir = task.value as f32;
+        self.t = 0;
+        self.perturbation = None;
+        self.observation()
+    }
+
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool) {
+        assert_eq!(action.len(), N_LEGS);
+        let mut a: Vec<f32> = action.iter().map(|x| x.clamp(-1.0, 1.0)).collect();
+        if let Some(p) = &self.perturbation {
+            p.filter_action(&mut a);
+        }
+
+        // Legs: thrust along mount direction (body frame) + yaw torque.
+        let mut fbx = 0.0f32;
+        let mut fby = 0.0f32;
+        let mut torque = 0.0f32;
+        for (k, &ak) in a.iter().enumerate() {
+            let ang = self.leg_angles[k];
+            fbx += THRUST_GAIN * ak * ang.cos();
+            fby += THRUST_GAIN * ak * ang.sin();
+            // diagonal pairs twist in opposite senses
+            let sense = if k % 2 == 0 { 1.0 } else { -1.0 };
+            torque += TORQUE_GAIN * sense * ak;
+        }
+
+        // body→world rotation
+        let (sh, ch) = self.heading.sin_cos();
+        let mut fx = ch * fbx - sh * fby;
+        let mut fy = sh * fbx + ch * fby;
+        if let Some(p) = &self.perturbation {
+            let (ex, ey) = p.external_force();
+            fx += ex;
+            fy += ey;
+        }
+        fx -= LIN_DRAG * self.vx;
+        fy -= LIN_DRAG * self.vy;
+        torque -= ANG_DRAG * self.omega;
+
+        self.vx += fx / MASS * DT;
+        self.vy += fy / MASS * DT;
+        self.omega += torque / INERTIA * DT;
+        self.x += self.vx * DT;
+        self.y += self.vy * DT;
+        self.heading = angle_wrap(self.heading + self.omega * DT);
+
+        let progress = self.vx * self.target_dir.cos() + self.vy * self.target_dir.sin();
+        let ctrl: f32 = a.iter().map(|x| x * x).sum::<f32>() * CTRL_COST;
+        let reward = progress - ctrl;
+
+        self.t += 1;
+        (self.observation(), reward, self.t >= HORIZON)
+    }
+
+    fn set_perturbation(&mut self, p: Option<Perturbation>) {
+        self.perturbation = p;
+    }
+
+    fn horizon(&self) -> usize {
+        HORIZON
+    }
+
+    fn name(&self) -> &'static str {
+        "ant-dir"
+    }
+}
+
+fn angle_wrap(a: f32) -> f32 {
+    let mut a = a % std::f32::consts::TAU;
+    if a > std::f32::consts::PI {
+        a -= std::f32::consts::TAU;
+    } else if a < -std::f32::consts::PI {
+        a += std::f32::consts::TAU;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::protocol::train_grid;
+
+    fn task(dir_deg: f64) -> TaskParam {
+        TaskParam {
+            family: TaskFamily::Direction,
+            value: dir_deg.to_radians(),
+            value2: 0.0,
+            id: 0,
+        }
+    }
+
+    /// Oracle controller: thrust legs toward the direction error.
+    fn oracle_action(obs: &[f32]) -> Vec<f32> {
+        let (cos_e, sin_e) = (obs[0], obs[1]);
+        // command a body-frame force along the error direction
+        let angles = [
+            std::f32::consts::FRAC_PI_4,
+            3.0 * std::f32::consts::FRAC_PI_4,
+            5.0 * std::f32::consts::FRAC_PI_4,
+            7.0 * std::f32::consts::FRAC_PI_4,
+        ];
+        angles
+            .iter()
+            .map(|a| (cos_e * a.cos() + sin_e * a.sin()).clamp(-1.0, 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn oracle_moves_along_target() {
+        for dir in [0.0, 90.0, 215.0] {
+            let mut env = AntDir::new();
+            let mut rng = Pcg64::new(1, 0);
+            let mut obs = env.reset(&task(dir), &mut rng);
+            let mut total = 0.0;
+            for _ in 0..HORIZON {
+                let a = oracle_action(&obs);
+                let (o, r, _) = env.step(&a);
+                obs = o;
+                total += r;
+            }
+            assert!(total > 50.0, "oracle reward {total} for dir {dir}");
+            // displacement roughly along target
+            let disp = (env.x * (dir as f32).to_radians().cos()
+                + env.y * (dir as f32).to_radians().sin()) as f64;
+            assert!(disp > 1.0, "displacement {disp}");
+        }
+    }
+
+    #[test]
+    fn zero_action_earns_nothing() {
+        let mut env = AntDir::new();
+        let mut rng = Pcg64::new(2, 0);
+        env.reset(&task(0.0), &mut rng);
+        let mut total = 0.0;
+        for _ in 0..50 {
+            let (_, r, _) = env.step(&[0.0; 4]);
+            total += r;
+        }
+        assert!(total.abs() < 1.0);
+    }
+
+    #[test]
+    fn leg_failure_hurts_oracle() {
+        let run = |perturb: bool| {
+            let mut env = AntDir::new();
+            let mut rng = Pcg64::new(3, 0);
+            let mut obs = env.reset(&task(0.0), &mut rng);
+            if perturb {
+                env.set_perturbation(Some(Perturbation::leg_failure(vec![0, 1])));
+            }
+            let mut total = 0.0;
+            for _ in 0..HORIZON {
+                let a = oracle_action(&obs);
+                let (o, r, _) = env.step(&a);
+                obs = o;
+                total += r;
+            }
+            total
+        };
+        let healthy = run(false);
+        let broken = run(true);
+        assert!(
+            broken < healthy * 0.8,
+            "failure should cost reward: {broken} vs {healthy}"
+        );
+    }
+
+    #[test]
+    fn episode_terminates_at_horizon() {
+        let mut env = AntDir::new();
+        let mut rng = Pcg64::new(4, 0);
+        env.reset(&train_grid(TaskFamily::Direction)[0], &mut rng);
+        let mut done = false;
+        let mut steps = 0;
+        while !done {
+            let (_, _, d) = env.step(&[0.5; 4]);
+            done = d;
+            steps += 1;
+            assert!(steps <= HORIZON);
+        }
+        assert_eq!(steps, HORIZON);
+    }
+
+    #[test]
+    fn dynamics_are_bounded() {
+        let mut env = AntDir::new();
+        let mut rng = Pcg64::new(5, 0);
+        env.reset(&task(45.0), &mut rng);
+        for _ in 0..500 {
+            let (obs, r, _) = env.step(&[1.0, -1.0, 1.0, -1.0]);
+            assert!(r.is_finite());
+            for o in &obs {
+                assert!(o.is_finite() && o.abs() < 100.0);
+            }
+        }
+    }
+
+    #[test]
+    fn angle_wrap_stays_in_pi() {
+        for a in [-10.0f32, -3.2, 0.0, 3.2, 10.0, 100.0] {
+            let w = angle_wrap(a);
+            assert!((-std::f32::consts::PI..=std::f32::consts::PI).contains(&w));
+        }
+    }
+}

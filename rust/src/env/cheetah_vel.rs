@@ -1,0 +1,283 @@
+//! CheetahVel — planar runner tracking a commanded forward velocity
+//! (the Brax *halfcheetah* velocity-generalization task, §IV-A).
+//!
+//! Model: a body constrained to the x axis with six "joint" actuators
+//! whose useful thrust depends on a gait phase — the actuators are
+//! arranged in two tripods and thrust is produced when an actuator is
+//! driven *in phase* with its tripod's stance window (driving against
+//! the phase wastes energy and brakes). This preserves the essential
+//! difficulty of halfcheetah velocity tracking: the controller cannot
+//! just push a constant; it must produce a rhythmic, coordinated pattern
+//! whose amplitude modulates speed.
+//!
+//! Reward per step = −|v − v*| − control cost (the standard velocity-
+//! task shaping), so per-step reward is ≤ 0 and perfect tracking → 0.
+
+use super::perturb::Perturbation;
+use super::protocol::{TaskFamily, TaskParam};
+use super::Env;
+use crate::util::rng::Pcg64;
+
+const N_JOINTS: usize = 6;
+const DT: f32 = 0.05;
+const MASS: f32 = 1.0;
+const DRAG: f32 = 0.8;
+const THRUST_GAIN: f32 = 1.6;
+const BRAKE_GAIN: f32 = 0.4;
+const CTRL_COST: f32 = 0.02;
+const HORIZON: usize = 200;
+/// Gait oscillator frequency (rad per step).
+const PHASE_RATE: f32 = 0.45;
+
+pub struct CheetahVel {
+    x: f32,
+    v: f32,
+    phase: f32,
+    v_target: f32,
+    t: usize,
+    perturbation: Option<Perturbation>,
+}
+
+impl CheetahVel {
+    pub fn new() -> Self {
+        CheetahVel {
+            x: 0.0,
+            v: 0.0,
+            phase: 0.0,
+            v_target: 1.0,
+            t: 0,
+            perturbation: None,
+        }
+    }
+
+    /// Stance weight of joint `k` at the current phase: tripod A
+    /// (joints 0,2,4) is in stance for sin(φ) > 0, tripod B (1,3,5) for
+    /// sin(φ) < 0; weight is the positive half-wave.
+    fn stance(&self, k: usize) -> f32 {
+        let s = self.phase.sin();
+        if k % 2 == 0 {
+            s.max(0.0)
+        } else {
+            (-s).max(0.0)
+        }
+    }
+
+    fn observation(&self) -> Vec<f32> {
+        let mut obs = vec![
+            self.v,
+            self.v_target,
+            self.v_target - self.v,
+            self.phase.sin(),
+            self.phase.cos(),
+            1.0, // bias
+        ];
+        if let Some(p) = &self.perturbation {
+            p.filter_obs(&mut obs);
+        }
+        obs
+    }
+}
+
+impl Default for CheetahVel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for CheetahVel {
+    fn obs_dim(&self) -> usize {
+        6
+    }
+
+    fn act_dim(&self) -> usize {
+        N_JOINTS
+    }
+
+    fn reset(&mut self, task: &TaskParam, rng: &mut Pcg64) -> Vec<f32> {
+        assert_eq!(task.family, TaskFamily::Velocity, "CheetahVel needs a velocity task");
+        self.x = 0.0;
+        self.v = 0.0;
+        self.phase = rng.uniform_range(0.0, std::f64::consts::TAU) as f32;
+        self.v_target = task.value as f32;
+        self.t = 0;
+        self.perturbation = None;
+        self.observation()
+    }
+
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool) {
+        assert_eq!(action.len(), N_JOINTS);
+        let mut a: Vec<f32> = action.iter().map(|x| x.clamp(-1.0, 1.0)).collect();
+        if let Some(p) = &self.perturbation {
+            p.filter_action(&mut a);
+        }
+
+        // Thrust: in-stance drive propels; out-of-stance drive brakes.
+        let mut thrust = 0.0f32;
+        for (k, &ak) in a.iter().enumerate() {
+            let w = self.stance(k);
+            thrust += THRUST_GAIN * w * ak.max(0.0);
+            thrust -= BRAKE_GAIN * (1.0 - w) * ak.abs();
+        }
+        let mut force = thrust - DRAG * self.v;
+        if let Some(p) = &self.perturbation {
+            force += p.external_force().0;
+        }
+
+        self.v += force / MASS * DT;
+        self.x += self.v * DT;
+        self.phase += PHASE_RATE;
+        if self.phase > std::f32::consts::TAU {
+            self.phase -= std::f32::consts::TAU;
+        }
+
+        let track_err = (self.v - self.v_target).abs();
+        let ctrl: f32 = a.iter().map(|x| x * x).sum::<f32>() * CTRL_COST;
+        let reward = -track_err - ctrl;
+
+        self.t += 1;
+        (self.observation(), reward, self.t >= HORIZON)
+    }
+
+    fn set_perturbation(&mut self, p: Option<Perturbation>) {
+        self.perturbation = p;
+    }
+
+    fn horizon(&self) -> usize {
+        HORIZON
+    }
+
+    fn name(&self) -> &'static str {
+        "cheetah-vel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(v: f64) -> TaskParam {
+        TaskParam {
+            family: TaskFamily::Velocity,
+            value: v,
+            value2: 0.0,
+            id: 0,
+        }
+    }
+
+    /// Oracle: proportional drive on the in-stance tripod.
+    fn oracle_action(obs: &[f32]) -> Vec<f32> {
+        let v_err = obs[2];
+        let sin_phase = obs[3];
+        let drive = (v_err * 1.5).clamp(0.0, 1.0);
+        (0..N_JOINTS)
+            .map(|k| {
+                let in_stance = if k % 2 == 0 { sin_phase > 0.0 } else { sin_phase < 0.0 };
+                if in_stance {
+                    drive
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn oracle_tracks_targets() {
+        for v in [1.0, 2.5, 4.0] {
+            let mut env = CheetahVel::new();
+            let mut rng = Pcg64::new(1, 0);
+            let mut obs = env.reset(&task(v), &mut rng);
+            let mut late_err = 0.0;
+            for t in 0..HORIZON {
+                let a = oracle_action(&obs);
+                let (o, _, _) = env.step(&a);
+                obs = o;
+                if t >= HORIZON - 50 {
+                    late_err += (env.v - env.v_target).abs();
+                }
+            }
+            let mean_err = late_err / 50.0;
+            assert!(mean_err < 0.8, "target {v}: steady-state err {mean_err}");
+        }
+    }
+
+    #[test]
+    fn constant_full_drive_is_suboptimal() {
+        // Driving all joints at 1 regardless of phase brakes against the
+        // swing tripod; the gait-aware oracle must do better.
+        let score = |gait_aware: bool| {
+            let mut env = CheetahVel::new();
+            let mut rng = Pcg64::new(2, 0);
+            let mut obs = env.reset(&task(2.0), &mut rng);
+            let mut total = 0.0;
+            for _ in 0..HORIZON {
+                let a = if gait_aware {
+                    oracle_action(&obs)
+                } else {
+                    vec![1.0; N_JOINTS]
+                };
+                let (o, r, _) = env.step(&a);
+                obs = o;
+                total += r;
+            }
+            total
+        };
+        assert!(score(true) > score(false) + 5.0);
+    }
+
+    #[test]
+    fn zero_action_decays_to_rest() {
+        let mut env = CheetahVel::new();
+        let mut rng = Pcg64::new(3, 0);
+        env.reset(&task(1.0), &mut rng);
+        env.v = 3.0;
+        for _ in 0..HORIZON {
+            env.step(&vec![0.0; N_JOINTS]);
+        }
+        assert!(env.v.abs() < 0.1);
+    }
+
+    #[test]
+    fn perfect_tracking_reward_near_zero() {
+        let mut env = CheetahVel::new();
+        let mut rng = Pcg64::new(4, 0);
+        env.reset(&task(0.5), &mut rng);
+        // force exact tracking, measure the reward ceiling
+        env.v = 0.5;
+        let (_, r, _) = env.step(&vec![0.0; N_JOINTS]);
+        assert!(r > -0.2, "near-perfect tracking reward {r}");
+    }
+
+    #[test]
+    fn weak_motors_reduce_top_speed() {
+        let run = |gain: Option<f32>| {
+            let mut env = CheetahVel::new();
+            let mut rng = Pcg64::new(5, 0);
+            let mut obs = env.reset(&task(4.5), &mut rng);
+            if let Some(g) = gain {
+                env.set_perturbation(Some(Perturbation::weak_motors(g)));
+            }
+            for _ in 0..HORIZON {
+                let a = oracle_action(&obs);
+                let (o, _, _) = env.step(&a);
+                obs = o;
+            }
+            env.v
+        };
+        assert!(run(Some(0.3)) < run(None) - 0.3);
+    }
+
+    #[test]
+    fn dynamics_bounded() {
+        let mut env = CheetahVel::new();
+        let mut rng = Pcg64::new(6, 0);
+        env.reset(&task(4.5), &mut rng);
+        for _ in 0..1000 {
+            let (obs, r, _) = env.step(&vec![1.0; N_JOINTS]);
+            assert!(r.is_finite());
+            for o in &obs {
+                assert!(o.is_finite() && o.abs() < 50.0);
+            }
+        }
+    }
+}

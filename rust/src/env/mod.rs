@@ -1,0 +1,110 @@
+//! Continuous-control environments (Brax substitute — see DESIGN.md §2).
+//!
+//! The paper evaluates on three Brax tasks (§IV-A): *ant* trained on 8
+//! target directions and evaluated on 72 novel ones, *halfcheetah*
+//! trained on 8 target velocities and evaluated on 72 unseen ones, and a
+//! *ur5e* reaching task with random goals. Brax is unavailable offline,
+//! so this module implements physics substrates from scratch that
+//! preserve what the experiment actually measures: **generalization of a
+//! learned plasticity rule across a parametric task family**, plus online
+//! recovery from actuator failure.
+//!
+//! All three are deterministic given (task, seed), time-discretized at
+//! `dt`, with continuous observation/action spaces and per-step rewards.
+
+pub mod ant_dir;
+pub mod cheetah_vel;
+pub mod perturb;
+pub mod protocol;
+pub mod reacher;
+
+pub use ant_dir::AntDir;
+pub use cheetah_vel::CheetahVel;
+pub use perturb::{Perturbation, PerturbationKind};
+pub use protocol::{eval_grid, train_grid, TaskFamily, TaskParam};
+pub use reacher::Reacher;
+
+use crate::util::rng::Pcg64;
+
+/// A task-parameterized continuous-control environment.
+pub trait Env: Send {
+    /// Observation dimensionality.
+    fn obs_dim(&self) -> usize;
+    /// Action dimensionality (actions are clipped to [−1, 1] per dim).
+    fn act_dim(&self) -> usize;
+    /// Reset to the start state for task parameter `task`, seeded
+    /// deterministically. Returns the initial observation.
+    fn reset(&mut self, task: &TaskParam, rng: &mut Pcg64) -> Vec<f32>;
+    /// Advance one control tick. Returns (observation, reward, done).
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool);
+    /// Apply/clear a perturbation mid-episode (leg failure etc.).
+    fn set_perturbation(&mut self, p: Option<Perturbation>);
+    /// Episode length used by the paper-style evaluation.
+    fn horizon(&self) -> usize;
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+}
+
+/// Environment registry keyed by CLI name.
+pub fn make_env(name: &str) -> Option<Box<dyn Env>> {
+    match name {
+        "ant-dir" | "ant" => Some(Box::new(AntDir::new())),
+        "cheetah-vel" | "halfcheetah" => Some(Box::new(CheetahVel::new())),
+        "reacher" | "ur5e" => Some(Box::new(Reacher::new())),
+        _ => None,
+    }
+}
+
+/// The task family an environment name belongs to.
+pub fn family_of(name: &str) -> Option<TaskFamily> {
+    match name {
+        "ant-dir" | "ant" => Some(TaskFamily::Direction),
+        "cheetah-vel" | "halfcheetah" => Some(TaskFamily::Velocity),
+        "reacher" | "ur5e" => Some(TaskFamily::Position),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for n in ["ant-dir", "ant", "cheetah-vel", "halfcheetah", "reacher", "ur5e"] {
+            assert!(make_env(n).is_some(), "missing env {n}");
+            assert!(family_of(n).is_some());
+        }
+        assert!(make_env("nope").is_none());
+    }
+
+    #[test]
+    fn envs_obey_basic_contract() {
+        let mut rng = Pcg64::new(0, 0);
+        for name in ["ant-dir", "cheetah-vel", "reacher"] {
+            let mut env = make_env(name).unwrap();
+            let task = train_grid(family_of(name).unwrap())[0].clone();
+            let obs = env.reset(&task, &mut rng);
+            assert_eq!(obs.len(), env.obs_dim(), "{name} obs_dim");
+            let action = vec![0.1; env.act_dim()];
+            let (obs2, r, done) = env.step(&action);
+            assert_eq!(obs2.len(), env.obs_dim());
+            assert!(r.is_finite(), "{name} reward finite");
+            assert!(!done, "{name} done on first step");
+            assert!(env.horizon() > 10);
+        }
+    }
+
+    #[test]
+    fn reset_is_deterministic_per_seed() {
+        for name in ["ant-dir", "cheetah-vel", "reacher"] {
+            let mut env = make_env(name).unwrap();
+            let task = train_grid(family_of(name).unwrap())[1].clone();
+            let mut r1 = Pcg64::new(7, 0);
+            let mut r2 = Pcg64::new(7, 0);
+            let o1 = env.reset(&task, &mut r1);
+            let o2 = env.reset(&task, &mut r2);
+            assert_eq!(o1, o2, "{name} reset not deterministic");
+        }
+    }
+}

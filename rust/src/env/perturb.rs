@@ -1,0 +1,212 @@
+//! Mid-episode perturbations (§I, §II-B: "sudden changes in morphology,
+//! novel environmental dynamics, or unexpected external forces", with
+//! "simulated leg failure" as the paper's canonical example).
+//!
+//! A [`Perturbation`] is applied by the coordinator at a chosen timestep;
+//! the environment then filters every action/dynamics update through it
+//! until cleared. This is the stressor the online plasticity rule must
+//! compensate for in EXP-E2E.
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum PerturbationKind {
+    /// Actuator(s) produce zero torque — "leg failure".
+    ActuatorFailure { indices: Vec<usize> },
+    /// All actuator outputs scaled by a factor (weakness / gain error).
+    ActuatorGain { factor: f32 },
+    /// Constant external force in the world frame (wind / payload shift).
+    ExternalForce { fx: f32, fy: f32 },
+    /// Action channels permuted (cable swap / morphology change).
+    ActionRemap { map: Vec<usize> },
+    /// Sensor bias added to every observation component.
+    SensorBias { bias: f32 },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Perturbation {
+    pub kind: PerturbationKind,
+    pub label: &'static str,
+}
+
+impl Perturbation {
+    pub fn leg_failure(indices: Vec<usize>) -> Self {
+        Perturbation {
+            kind: PerturbationKind::ActuatorFailure { indices },
+            label: "leg-failure",
+        }
+    }
+
+    pub fn weak_motors(factor: f32) -> Self {
+        Perturbation {
+            kind: PerturbationKind::ActuatorGain { factor },
+            label: "weak-motors",
+        }
+    }
+
+    pub fn wind(fx: f32, fy: f32) -> Self {
+        Perturbation {
+            kind: PerturbationKind::ExternalForce { fx, fy },
+            label: "wind",
+        }
+    }
+
+    pub fn remap(map: Vec<usize>) -> Self {
+        Perturbation {
+            kind: PerturbationKind::ActionRemap { map },
+            label: "action-remap",
+        }
+    }
+
+    pub fn sensor_bias(bias: f32) -> Self {
+        Perturbation {
+            kind: PerturbationKind::SensorBias { bias },
+            label: "sensor-bias",
+        }
+    }
+
+    /// Transform a raw action vector in place.
+    pub fn filter_action(&self, action: &mut [f32]) {
+        match &self.kind {
+            PerturbationKind::ActuatorFailure { indices } => {
+                for &i in indices {
+                    if i < action.len() {
+                        action[i] = 0.0;
+                    }
+                }
+            }
+            PerturbationKind::ActuatorGain { factor } => {
+                for a in action.iter_mut() {
+                    *a *= factor;
+                }
+            }
+            PerturbationKind::ActionRemap { map } => {
+                let orig = action.to_vec();
+                for (i, &src) in map.iter().enumerate() {
+                    if i < action.len() && src < orig.len() {
+                        action[i] = orig[src];
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// External force to inject into the dynamics, if any.
+    pub fn external_force(&self) -> (f32, f32) {
+        match self.kind {
+            PerturbationKind::ExternalForce { fx, fy } => (fx, fy),
+            _ => (0.0, 0.0),
+        }
+    }
+
+    /// Transform an observation in place.
+    pub fn filter_obs(&self, obs: &mut [f32]) {
+        if let PerturbationKind::SensorBias { bias } = self.kind {
+            for o in obs.iter_mut() {
+                *o += bias;
+            }
+        }
+    }
+
+    /// Parse from CLI syntax, e.g. `leg:0,2`, `gain:0.3`, `wind:1.0,-0.5`,
+    /// `remap:1,0,3,2`, `bias:0.2`.
+    pub fn parse(spec: &str) -> Result<Perturbation, String> {
+        let (kind, args) = spec.split_once(':').unwrap_or((spec, ""));
+        match kind {
+            "leg" => {
+                let indices: Result<Vec<usize>, _> =
+                    args.split(',').map(|s| s.trim().parse()).collect();
+                Ok(Perturbation::leg_failure(
+                    indices.map_err(|e| format!("bad leg indices: {e}"))?,
+                ))
+            }
+            "gain" => Ok(Perturbation::weak_motors(
+                args.parse().map_err(|e| format!("bad gain: {e}"))?,
+            )),
+            "wind" => {
+                let parts: Vec<&str> = args.split(',').collect();
+                if parts.len() != 2 {
+                    return Err("wind needs fx,fy".into());
+                }
+                Ok(Perturbation::wind(
+                    parts[0].trim().parse().map_err(|e| format!("bad fx: {e}"))?,
+                    parts[1].trim().parse().map_err(|e| format!("bad fy: {e}"))?,
+                ))
+            }
+            "remap" => {
+                let map: Result<Vec<usize>, _> =
+                    args.split(',').map(|s| s.trim().parse()).collect();
+                Ok(Perturbation::remap(
+                    map.map_err(|e| format!("bad remap: {e}"))?,
+                ))
+            }
+            "bias" => Ok(Perturbation::sensor_bias(
+                args.parse().map_err(|e| format!("bad bias: {e}"))?,
+            )),
+            _ => Err(format!("unknown perturbation {kind:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leg_failure_zeroes_selected() {
+        let p = Perturbation::leg_failure(vec![0, 2]);
+        let mut a = vec![1.0, 1.0, 1.0, 1.0];
+        p.filter_action(&mut a);
+        assert_eq!(a, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn gain_scales_all() {
+        let p = Perturbation::weak_motors(0.5);
+        let mut a = vec![1.0, -2.0];
+        p.filter_action(&mut a);
+        assert_eq!(a, vec![0.5, -1.0]);
+    }
+
+    #[test]
+    fn remap_permutes() {
+        let p = Perturbation::remap(vec![1, 0]);
+        let mut a = vec![3.0, 7.0];
+        p.filter_action(&mut a);
+        assert_eq!(a, vec![7.0, 3.0]);
+    }
+
+    #[test]
+    fn wind_reports_force() {
+        let p = Perturbation::wind(1.0, -0.5);
+        assert_eq!(p.external_force(), (1.0, -0.5));
+        let mut a = vec![1.0];
+        p.filter_action(&mut a); // no action effect
+        assert_eq!(a, vec![1.0]);
+    }
+
+    #[test]
+    fn sensor_bias_shifts_obs() {
+        let p = Perturbation::sensor_bias(0.25);
+        let mut o = vec![0.0, 1.0];
+        p.filter_obs(&mut o);
+        assert_eq!(o, vec![0.25, 1.25]);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(
+            Perturbation::parse("leg:0,2").unwrap(),
+            Perturbation::leg_failure(vec![0, 2])
+        );
+        assert_eq!(
+            Perturbation::parse("gain:0.3").unwrap(),
+            Perturbation::weak_motors(0.3)
+        );
+        assert_eq!(
+            Perturbation::parse("wind:1.0,-0.5").unwrap(),
+            Perturbation::wind(1.0, -0.5)
+        );
+        assert!(Perturbation::parse("bogus:1").is_err());
+        assert!(Perturbation::parse("leg:x").is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! The paper's generalization protocol (§IV-A): train on a sparse grid of
+//! task parameters, evaluate on a dense grid of *novel* parameters.
+//!
+//! - Direction (ant): train on 8 directions (every 45°), evaluate on the
+//!   72 directions at 5° spacing **excluding** the 8 training ones.
+//! - Velocity (halfcheetah): train on 8 target velocities, evaluate on 72
+//!   unseen velocities interleaved over the same range.
+//! - Position (ur5e reacher): goals sampled randomly; "train" tasks use
+//!   one seed set, "eval" uses disjoint seeds.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskFamily {
+    Direction,
+    Velocity,
+    Position,
+}
+
+/// One task instance within a family.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskParam {
+    pub family: TaskFamily,
+    /// Direction: angle in radians. Velocity: target speed (m/s).
+    /// Position: goal index (expanded to coordinates by the env).
+    pub value: f64,
+    /// Optional second coordinate (Position: goal y; unused otherwise).
+    pub value2: f64,
+    /// Stable identifier for CSV output.
+    pub id: usize,
+}
+
+/// Velocity range for the cheetah family (m/s).
+pub const VEL_MIN: f64 = 0.5;
+pub const VEL_MAX: f64 = 4.5;
+
+/// Reacher goal disc radius (m) around the arm base.
+pub const GOAL_RADIUS: f64 = 0.8;
+
+/// The 8 training tasks of a family.
+pub fn train_grid(family: TaskFamily) -> Vec<TaskParam> {
+    match family {
+        TaskFamily::Direction => (0..8)
+            .map(|k| TaskParam {
+                family,
+                value: k as f64 * std::f64::consts::TAU / 8.0,
+                value2: 0.0,
+                id: k,
+            })
+            .collect(),
+        TaskFamily::Velocity => (0..8)
+            .map(|k| TaskParam {
+                family,
+                value: VEL_MIN + (VEL_MAX - VEL_MIN) * k as f64 / 7.0,
+                value2: 0.0,
+                id: k,
+            })
+            .collect(),
+        TaskFamily::Position => goal_set(0xA5EED, 8, 0),
+    }
+}
+
+/// The 72 evaluation tasks — all novel w.r.t. the training grid.
+pub fn eval_grid(family: TaskFamily) -> Vec<TaskParam> {
+    match family {
+        TaskFamily::Direction => {
+            // 80 directions at 4.5° spacing minus the 8 training ones
+            // (every 10th) = 72 novel directions.
+            (0..80)
+                .filter(|k| k % 10 != 0)
+                .enumerate()
+                .map(|(i, k)| TaskParam {
+                    family,
+                    value: k as f64 * std::f64::consts::TAU / 80.0,
+                    value2: 0.0,
+                    id: 100 + i,
+                })
+                .collect()
+        }
+        TaskFamily::Velocity => {
+            // 80 velocities evenly over the range minus the training 8.
+            let train = train_grid(family);
+            (0..80)
+                .map(|k| VEL_MIN + (VEL_MAX - VEL_MIN) * k as f64 / 79.0)
+                .filter(|v| {
+                    train
+                        .iter()
+                        .all(|t| (t.value - v).abs() > 1e-6)
+                })
+                .take(72)
+                .enumerate()
+                .map(|(i, v)| TaskParam {
+                    family,
+                    value: v,
+                    value2: 0.0,
+                    id: 100 + i,
+                })
+                .collect()
+        }
+        TaskFamily::Position => goal_set(0xBEEF5, 72, 100),
+    }
+}
+
+/// Random goal positions in an annulus (min 25% of max reach, so goals
+/// are never trivially at the base).
+fn goal_set(seed: u64, n: usize, id_base: usize) -> Vec<TaskParam> {
+    let mut rng = Pcg64::new(seed, 31);
+    (0..n)
+        .map(|i| {
+            let r = GOAL_RADIUS * (0.25 + 0.75 * rng.uniform());
+            let th = rng.uniform_range(0.0, std::f64::consts::TAU);
+            TaskParam {
+                family: TaskFamily::Position,
+                value: r * th.cos(),
+                value2: r * th.sin(),
+                id: id_base + i,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_have_paper_sizes() {
+        for fam in [TaskFamily::Direction, TaskFamily::Velocity, TaskFamily::Position] {
+            assert_eq!(train_grid(fam).len(), 8, "{fam:?} train");
+            assert_eq!(eval_grid(fam).len(), 72, "{fam:?} eval");
+        }
+    }
+
+    #[test]
+    fn eval_directions_exclude_training() {
+        let train = train_grid(TaskFamily::Direction);
+        let eval = eval_grid(TaskFamily::Direction);
+        for e in &eval {
+            for t in &train {
+                assert!(
+                    (e.value - t.value).abs() > 1e-9,
+                    "eval dir {} collides with train dir {}",
+                    e.value,
+                    t.value
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_velocities_exclude_training() {
+        let train = train_grid(TaskFamily::Velocity);
+        let eval = eval_grid(TaskFamily::Velocity);
+        for e in &eval {
+            for t in &train {
+                assert!((e.value - t.value).abs() > 1e-9);
+            }
+        }
+        for e in &eval {
+            assert!(e.value >= VEL_MIN - 1e-9 && e.value <= VEL_MAX + 1e-9);
+        }
+    }
+
+    #[test]
+    fn position_train_eval_disjoint() {
+        let train = train_grid(TaskFamily::Position);
+        let eval = eval_grid(TaskFamily::Position);
+        for e in &eval {
+            for t in &train {
+                let d = ((e.value - t.value).powi(2) + (e.value2 - t.value2).powi(2)).sqrt();
+                assert!(d > 1e-6);
+            }
+        }
+        // goals inside the annulus
+        for g in train.iter().chain(eval.iter()) {
+            let r = (g.value * g.value + g.value2 * g.value2).sqrt();
+            assert!(r >= 0.25 * GOAL_RADIUS - 1e-9 && r <= GOAL_RADIUS + 1e-9);
+        }
+    }
+
+    #[test]
+    fn grids_deterministic() {
+        assert_eq!(train_grid(TaskFamily::Position), train_grid(TaskFamily::Position));
+        assert_eq!(eval_grid(TaskFamily::Direction), eval_grid(TaskFamily::Direction));
+    }
+}

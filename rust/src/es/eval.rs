@@ -1,0 +1,221 @@
+//! Population evaluation: rollout of candidate genomes on the control
+//! environments, fanned out over a thread pool (the ES "leader/worker"
+//! topology — the L3 coordinator's offline phase).
+//!
+//! A genome is either a plasticity rule θ (FireFly-P, Phase 1) or a flat
+//! weight vector (the weight-trained baseline of Fig. 3); both use the
+//! identical controller harness so the comparison is apples-to-apples.
+
+use crate::env::{make_env, Env, TaskParam};
+use crate::snn::encoding::{PopulationEncoder, TraceDecoder};
+use crate::snn::{Mode, NetworkRule, SnnConfig, SnnNetwork};
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::map_indexed;
+
+/// Neurons per observation dimension in the population encoder.
+pub const NEURONS_PER_DIM: usize = 8;
+
+/// What a genome encodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GenomeKind {
+    /// θ = {α,β,γ,δ} per synapse; weights start at zero online.
+    PlasticityRule,
+    /// Direct synaptic weights; frozen online.
+    Weights,
+}
+
+/// Evaluation specification shared by the whole population.
+#[derive(Clone, Debug)]
+pub struct EvalSpec {
+    pub env_name: &'static str,
+    pub kind: GenomeKind,
+    /// Tasks to average fitness over (the paper's 8 training tasks).
+    pub tasks: Vec<TaskParam>,
+    /// Episode seeds per task (>1 averages out encoder stochasticity).
+    pub episodes_per_task: usize,
+    pub seed: u64,
+    /// Hidden layer width (128 in the paper's control experiments).
+    pub hidden: usize,
+}
+
+impl EvalSpec {
+    /// Build the SNN architecture implied by the environment's I/O shape.
+    pub fn snn_config(&self) -> SnnConfig {
+        let env = make_env(self.env_name).expect("unknown env");
+        let n_in = env.obs_dim() * NEURONS_PER_DIM;
+        let n_out = 2 * env.act_dim(); // positive/negative neuron pairs
+        let mut cfg = SnnConfig::control(n_in, n_out);
+        cfg.n_hidden = self.hidden;
+        cfg
+    }
+
+    /// Genome dimensionality for this spec.
+    pub fn genome_dim(&self) -> usize {
+        let cfg = self.snn_config();
+        match self.kind {
+            GenomeKind::PlasticityRule => cfg.n_rule_params(),
+            GenomeKind::Weights => cfg.n_weights(),
+        }
+    }
+}
+
+/// Controller harness: encoder → SNN → decoder around one environment.
+pub struct Harness {
+    pub env: Box<dyn Env>,
+    pub encoder: PopulationEncoder,
+    pub decoder: TraceDecoder,
+    pub net: SnnNetwork<f32>,
+}
+
+impl Harness {
+    pub fn new(spec: &EvalSpec, genome: &[f32]) -> Harness {
+        let cfg = spec.snn_config();
+        let env = make_env(spec.env_name).expect("unknown env");
+        let encoder = PopulationEncoder::symmetric(env.obs_dim(), NEURONS_PER_DIM, 3.0);
+        let decoder = TraceDecoder::new(env.act_dim(), cfg.lambda);
+        let net = match spec.kind {
+            GenomeKind::PlasticityRule => {
+                let rule = NetworkRule::from_flat(&cfg, genome);
+                SnnNetwork::new(cfg, Mode::Plastic(rule))
+            }
+            GenomeKind::Weights => {
+                let mut n = SnnNetwork::new(cfg, Mode::Fixed);
+                n.load_weights(genome);
+                n
+            }
+        };
+        Harness {
+            env,
+            encoder,
+            decoder,
+            net,
+        }
+    }
+
+    /// Run one full episode on `task`; returns total reward.
+    pub fn episode(&mut self, task: &TaskParam, rng: &mut Pcg64) -> f64 {
+        let mut obs = self.env.reset(task, rng);
+        self.net.reset();
+        let n_in = self.net.cfg.n_in;
+        let mut spikes = vec![false; n_in];
+        let mut action = vec![0.0f32; self.env.act_dim()];
+        let mut total = 0.0f64;
+        let horizon = self.env.horizon();
+        for _ in 0..horizon {
+            self.encoder.encode(&obs, rng, &mut spikes);
+            self.net.step_spikes(&spikes);
+            let traces = self.net.output_traces_f32();
+            self.decoder.decode(&traces, &mut action);
+            let (o, r, done) = self.env.step(&action);
+            obs = o;
+            total += r as f64;
+            if done {
+                break;
+            }
+        }
+        total
+    }
+}
+
+/// Fitness of one genome: mean episodic reward over all tasks × episodes.
+/// Deterministic given (spec.seed, genome index is NOT used — the same
+/// seeds are replayed for every genome, i.e. common random numbers,
+/// which sharply reduces ES gradient variance).
+pub fn rollout_fitness(spec: &EvalSpec, genome: &[f32]) -> f64 {
+    let mut harness = Harness::new(spec, genome);
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for task in &spec.tasks {
+        for ep in 0..spec.episodes_per_task {
+            let mut rng = Pcg64::new(spec.seed ^ (task.id as u64) << 16, ep as u64);
+            total += harness.episode(task, &mut rng);
+            count += 1;
+        }
+    }
+    total / count.max(1) as f64
+}
+
+/// Evaluate a whole population in parallel. Returns fitnesses aligned
+/// with `population`.
+pub fn evaluate_population(spec: &EvalSpec, population: &[Vec<f32>], workers: usize) -> Vec<f64> {
+    map_indexed(population, workers, |_, genome| rollout_fitness(spec, genome))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::protocol::{train_grid, TaskFamily};
+
+    fn tiny_spec(kind: GenomeKind) -> EvalSpec {
+        EvalSpec {
+            env_name: "cheetah-vel",
+            kind,
+            tasks: train_grid(TaskFamily::Velocity)[..2].to_vec(),
+            episodes_per_task: 1,
+            seed: 11,
+            hidden: 16,
+        }
+    }
+
+    #[test]
+    fn genome_dims_match_architecture() {
+        let spec = tiny_spec(GenomeKind::PlasticityRule);
+        let cfg = spec.snn_config();
+        assert_eq!(cfg.n_in, 6 * NEURONS_PER_DIM);
+        assert_eq!(cfg.n_out, 12);
+        assert_eq!(spec.genome_dim(), cfg.n_rule_params());
+        let wspec = tiny_spec(GenomeKind::Weights);
+        assert_eq!(wspec.genome_dim(), cfg.n_weights());
+    }
+
+    #[test]
+    fn fitness_is_deterministic() {
+        let spec = tiny_spec(GenomeKind::PlasticityRule);
+        let genome = vec![0.01f32; spec.genome_dim()];
+        let a = rollout_fitness(&spec, &genome);
+        let b = rollout_fitness(&spec, &genome);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn population_eval_matches_sequential() {
+        let spec = tiny_spec(GenomeKind::Weights);
+        let mut rng = Pcg64::new(3, 0);
+        let pop: Vec<Vec<f32>> = (0..6)
+            .map(|_| {
+                let mut g = vec![0.0f32; spec.genome_dim()];
+                rng.fill_normal_f32(&mut g, 0.3);
+                g
+            })
+            .collect();
+        let par = evaluate_population(&spec, &pop, 4);
+        let seq: Vec<f64> = pop.iter().map(|g| rollout_fitness(&spec, g)).collect();
+        assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn different_genomes_different_fitness() {
+        let spec = tiny_spec(GenomeKind::Weights);
+        let zero = vec![0.0f32; spec.genome_dim()];
+        let mut rng = Pcg64::new(4, 0);
+        let mut active = vec![0.0f32; spec.genome_dim()];
+        rng.fill_normal_f32(&mut active, 1.0);
+        let f0 = rollout_fitness(&spec, &zero);
+        let f1 = rollout_fitness(&spec, &active);
+        assert_ne!(f0, f1);
+    }
+
+    #[test]
+    fn plastic_harness_grows_weights_during_episode() {
+        let spec = tiny_spec(GenomeKind::PlasticityRule);
+        let mut genome = vec![0.0f32; spec.genome_dim()];
+        // seed β slightly positive everywhere so activity grows weights
+        for i in (1..genome.len()).step_by(4) {
+            genome[i] = 0.05;
+        }
+        let mut harness = Harness::new(&spec, &genome);
+        let mut rng = Pcg64::new(5, 0);
+        harness.episode(&spec.tasks[0], &mut rng);
+        assert!(harness.net.weight_mean_abs() > 0.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Evolution strategies for Phase-1 offline rule optimization (§II-B).
+//!
+//! The paper trains the plasticity coefficients θ with Parameter-Exploring
+//! Policy Gradients (PEPG, Sehnke et al. 2010, reference [32]); the
+//! weight-trained baseline of Fig. 3 evolves synaptic weights directly
+//! with the same optimizer. [`pepg`] implements PEPG with symmetric
+//! sampling and adaptive per-parameter σ; [`openes`] is a vanilla
+//! OpenAI-ES used in the ablation benches; [`eval`] fans population
+//! rollouts out to a thread pool.
+
+pub mod eval;
+pub mod openes;
+pub mod pepg;
+
+pub use eval::{evaluate_population, EvalSpec};
+pub use openes::OpenEs;
+pub use pepg::{Pepg, PepgConfig};
+
+/// A population-based optimizer over flat f32 genomes (maximization).
+pub trait Optimizer: Send {
+    /// Sample the population to evaluate this generation.
+    fn ask(&mut self) -> Vec<Vec<f32>>;
+    /// Report fitnesses aligned with the last `ask` and update the
+    /// search distribution.
+    fn tell(&mut self, fitness: &[f64]);
+    /// Current distribution mean (the deployable genome).
+    fn mean(&self) -> &[f32];
+    /// Mean of per-parameter search σ (diagnostic).
+    fn sigma_mean(&self) -> f64;
+    /// Generation counter.
+    fn generation(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Both optimizers must solve a smooth quadratic: f(x) = −‖x − c‖².
+    fn solve_sphere(opt: &mut dyn Optimizer, center: &[f32], gens: usize) -> f64 {
+        for _ in 0..gens {
+            let pop = opt.ask();
+            let fit: Vec<f64> = pop
+                .iter()
+                .map(|g| {
+                    -g.iter()
+                        .zip(center)
+                        .map(|(x, c)| ((x - c) as f64).powi(2))
+                        .sum::<f64>()
+                })
+                .collect();
+            opt.tell(&fit);
+        }
+        let m = opt.mean();
+        -m.iter()
+            .zip(center)
+            .map(|(x, c)| ((x - c) as f64).powi(2))
+            .sum::<f64>()
+    }
+
+    #[test]
+    fn pepg_solves_sphere() {
+        let center: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.2).collect();
+        let mut opt = Pepg::new(16, PepgConfig::default(), 42);
+        let final_fit = solve_sphere(&mut opt, &center, 200);
+        assert!(final_fit > -0.05, "PEPG final fitness {final_fit}");
+    }
+
+    #[test]
+    fn openes_solves_sphere() {
+        let center: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.2).collect();
+        let mut opt = OpenEs::new(16, 64, 0.1, 0.05, 7);
+        let final_fit = solve_sphere(&mut opt, &center, 300);
+        assert!(final_fit > -0.1, "OpenES final fitness {final_fit}");
+    }
+
+    #[test]
+    fn generation_counts_advance() {
+        let mut opt = Pepg::new(4, PepgConfig::default(), 0);
+        assert_eq!(opt.generation(), 0);
+        let pop = opt.ask();
+        opt.tell(&vec![0.0; pop.len()]);
+        assert_eq!(opt.generation(), 1);
+    }
+}

@@ -1,0 +1,135 @@
+//! Vanilla OpenAI-ES (Salimans et al. 2017): isotropic Gaussian
+//! perturbations with antithetic pairs and a fixed σ. Serves as the
+//! ablation baseline against PEPG's per-parameter adaptive σ in
+//! `bench_fig3_adaptation --ablate-optimizer`.
+
+use super::Optimizer;
+use crate::util::rng::Pcg64;
+use crate::util::stats::centered_ranks;
+
+pub struct OpenEs {
+    mu: Vec<f32>,
+    sigma: f32,
+    lr: f32,
+    pairs: usize,
+    eps: Vec<Vec<f32>>,
+    rng: Pcg64,
+    generation: usize,
+    pub best_fitness: f64,
+}
+
+impl OpenEs {
+    /// `pop` is rounded down to an even antithetic population.
+    pub fn new(dim: usize, pop: usize, sigma: f32, lr: f32, seed: u64) -> Self {
+        assert!(pop >= 2);
+        OpenEs {
+            mu: vec![0.0; dim],
+            sigma,
+            lr,
+            pairs: pop / 2,
+            eps: Vec::new(),
+            rng: Pcg64::new(seed, 0x0E5),
+            generation: 0,
+            best_fitness: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn with_mean(mut self, mean: &[f32]) -> Self {
+        assert_eq!(mean.len(), self.mu.len());
+        self.mu.copy_from_slice(mean);
+        self
+    }
+}
+
+impl Optimizer for OpenEs {
+    fn ask(&mut self) -> Vec<Vec<f32>> {
+        let dim = self.mu.len();
+        self.eps.clear();
+        let mut pop = Vec::with_capacity(2 * self.pairs);
+        for _ in 0..self.pairs {
+            let mut e = vec![0.0f32; dim];
+            for v in e.iter_mut() {
+                *v = self.rng.normal() as f32;
+            }
+            pop.push((0..dim).map(|d| self.mu[d] + self.sigma * e[d]).collect());
+            pop.push((0..dim).map(|d| self.mu[d] - self.sigma * e[d]).collect());
+            self.eps.push(e);
+        }
+        pop
+    }
+
+    fn tell(&mut self, fitness: &[f64]) {
+        assert_eq!(fitness.len(), 2 * self.pairs, "fitness/population mismatch");
+        for &f in fitness {
+            if f > self.best_fitness {
+                self.best_fitness = f;
+            }
+        }
+        let shaped = centered_ranks(fitness);
+        let dim = self.mu.len();
+        let scale = self.lr / (self.pairs as f32 * self.sigma);
+        for d in 0..dim {
+            let mut g = 0.0f64;
+            for (k, e) in self.eps.iter().enumerate() {
+                g += (shaped[2 * k] - shaped[2 * k + 1]) / 2.0 * e[d] as f64;
+            }
+            self.mu[d] += scale * g as f32;
+        }
+        self.generation += 1;
+    }
+
+    fn mean(&self) -> &[f32] {
+        &self.mu
+    }
+
+    fn sigma_mean(&self) -> f64 {
+        self.sigma as f64
+    }
+
+    fn generation(&self) -> usize {
+        self.generation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn antithetic_population() {
+        let mut opt = OpenEs::new(5, 10, 0.2, 0.1, 1);
+        let pop = opt.ask();
+        assert_eq!(pop.len(), 10);
+        for k in 0..5 {
+            for d in 0..5 {
+                let mid = (pop[2 * k][d] + pop[2 * k + 1][d]) / 2.0;
+                assert!((mid - opt.mu[d]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn ascends_linear_fitness() {
+        let mut opt = OpenEs::new(3, 32, 0.1, 0.1, 2);
+        for _ in 0..50 {
+            let pop = opt.ask();
+            let fit: Vec<f64> = pop.iter().map(|g| (g[2]) as f64).collect();
+            opt.tell(&fit);
+        }
+        assert!(opt.mean()[2] > 0.3);
+        // untouched dims random-walk but must stay well below the
+        // driven dimension
+        assert!(opt.mean()[0].abs() < opt.mean()[2]);
+    }
+
+    #[test]
+    fn sigma_is_fixed() {
+        let mut opt = OpenEs::new(2, 8, 0.3, 0.1, 3);
+        let s0 = opt.sigma_mean();
+        for _ in 0..10 {
+            let pop = opt.ask();
+            opt.tell(&vec![1.0; pop.len()]);
+        }
+        assert_eq!(opt.sigma_mean(), s0);
+    }
+}

@@ -1,0 +1,286 @@
+//! Parameter-Exploring Policy Gradients (Sehnke et al., *Neural Networks*
+//! 2010 — the paper's reference [32]).
+//!
+//! PEPG searches a Gaussian distribution N(μ, diag(σ²)) over genomes with
+//! **symmetric sampling**: each population member is a ± pair
+//! (μ + σε, μ − σε), which cancels fitness-baseline error in the μ
+//! gradient and gives the σ update a proper exploration gradient:
+//!
+//! ```text
+//! r_diff  = (r⁺ − r⁻)/2                (drives μ)
+//! r_avg   = (r⁺ + r⁻)/2 − baseline     (drives σ)
+//! ∇μ_d    = Σ_k  r_diff_k · ε_{k,d} · σ_d
+//! ∇σ_d    = Σ_k  r_avg_k · (ε_{k,d}² − 1) · σ_d
+//! ```
+//!
+//! Fitness is rank-shaped (centered ranks) for outlier robustness, and
+//! both learning rates use simple constant schedules — matching the
+//! reference implementation's defaults at the scale of this problem.
+
+use super::Optimizer;
+use crate::util::rng::Pcg64;
+use crate::util::stats::centered_ranks;
+
+#[derive(Clone, Debug)]
+pub struct PepgConfig {
+    /// Number of symmetric *pairs* per generation (population = 2·pairs).
+    pub pairs: usize,
+    /// Initial per-parameter search σ.
+    pub sigma_init: f32,
+    /// Learning rate on μ.
+    pub lr_mu: f32,
+    /// Learning rate on σ (0 disables σ adaptation).
+    pub lr_sigma: f32,
+    /// σ floor/ceiling to keep the search well-conditioned.
+    pub sigma_min: f32,
+    pub sigma_max: f32,
+    /// Optional L2 decay on μ (keeps rule coefficients small — the
+    /// hardware stores them in FP16).
+    pub mu_decay: f32,
+    /// Use centered-rank fitness shaping.
+    pub rank_shaping: bool,
+}
+
+impl Default for PepgConfig {
+    fn default() -> Self {
+        PepgConfig {
+            pairs: 32,
+            sigma_init: 0.1,
+            lr_mu: 1.0,
+            lr_sigma: 0.15,
+            sigma_min: 0.01,
+            sigma_max: 1.0,
+            mu_decay: 0.0,
+            rank_shaping: true,
+        }
+    }
+}
+
+pub struct Pepg {
+    cfg: PepgConfig,
+    mu: Vec<f32>,
+    sigma: Vec<f32>,
+    /// ε noise of the last `ask` (pairs × dim).
+    eps: Vec<Vec<f32>>,
+    rng: Pcg64,
+    generation: usize,
+    /// Running baseline for the σ update (EMA of mean fitness).
+    baseline: f64,
+    baseline_init: bool,
+    /// Best raw fitness ever told (bookkeeping for the coordinator).
+    pub best_fitness: f64,
+}
+
+impl Pepg {
+    pub fn new(dim: usize, cfg: PepgConfig, seed: u64) -> Self {
+        let sigma = vec![cfg.sigma_init; dim];
+        Pepg {
+            mu: vec![0.0; dim],
+            sigma,
+            eps: Vec::new(),
+            rng: Pcg64::new(seed, 0xE5),
+            generation: 0,
+            baseline: 0.0,
+            baseline_init: false,
+            best_fitness: f64::NEG_INFINITY,
+            cfg,
+        }
+    }
+
+    pub fn with_mean(mut self, mean: &[f32]) -> Self {
+        assert_eq!(mean.len(), self.mu.len());
+        self.mu.copy_from_slice(mean);
+        self
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mu.len()
+    }
+
+    pub fn population_size(&self) -> usize {
+        2 * self.cfg.pairs
+    }
+}
+
+impl Optimizer for Pepg {
+    fn ask(&mut self) -> Vec<Vec<f32>> {
+        let dim = self.mu.len();
+        self.eps.clear();
+        let mut pop = Vec::with_capacity(2 * self.cfg.pairs);
+        for _ in 0..self.cfg.pairs {
+            let mut e = vec![0.0f32; dim];
+            for v in e.iter_mut() {
+                *v = self.rng.normal() as f32;
+            }
+            let plus: Vec<f32> = (0..dim).map(|d| self.mu[d] + self.sigma[d] * e[d]).collect();
+            let minus: Vec<f32> = (0..dim).map(|d| self.mu[d] - self.sigma[d] * e[d]).collect();
+            pop.push(plus);
+            pop.push(minus);
+            self.eps.push(e);
+        }
+        pop
+    }
+
+    fn tell(&mut self, fitness: &[f64]) {
+        assert_eq!(
+            fitness.len(),
+            2 * self.cfg.pairs,
+            "fitness count must match population size"
+        );
+        for &f in fitness {
+            if f > self.best_fitness {
+                self.best_fitness = f;
+            }
+        }
+        let shaped: Vec<f64> = if self.cfg.rank_shaping {
+            centered_ranks(fitness)
+        } else {
+            fitness.to_vec()
+        };
+
+        let mean_raw: f64 = fitness.iter().sum::<f64>() / fitness.len() as f64;
+        if !self.baseline_init {
+            self.baseline = mean_raw;
+            self.baseline_init = true;
+        } else {
+            self.baseline += 0.2 * (mean_raw - self.baseline);
+        }
+
+        let dim = self.mu.len();
+        let pairs = self.cfg.pairs as f64;
+        // Normalize shaped fitness scale for stable fixed learning rates.
+        for d in 0..dim {
+            let mut grad_mu = 0.0f64;
+            let mut grad_sigma = 0.0f64;
+            for (k, e) in self.eps.iter().enumerate() {
+                let r_plus = shaped[2 * k];
+                let r_minus = shaped[2 * k + 1];
+                let r_diff = (r_plus - r_minus) / 2.0;
+                let r_avg = (r_plus + r_minus) / 2.0;
+                let ek = e[d] as f64;
+                grad_mu += r_diff * ek;
+                grad_sigma += r_avg * (ek * ek - 1.0);
+            }
+            grad_mu /= pairs;
+            grad_sigma /= pairs;
+
+            let s = self.sigma[d] as f64;
+            let mut mu_new = self.mu[d] as f64 + self.cfg.lr_mu as f64 * grad_mu * s;
+            if self.cfg.mu_decay > 0.0 {
+                mu_new *= 1.0 - self.cfg.mu_decay as f64;
+            }
+            self.mu[d] = mu_new as f32;
+
+            if self.cfg.lr_sigma > 0.0 {
+                let s_new = s * (self.cfg.lr_sigma as f64 * grad_sigma).exp();
+                self.sigma[d] =
+                    (s_new as f32).clamp(self.cfg.sigma_min, self.cfg.sigma_max);
+            }
+        }
+        self.generation += 1;
+    }
+
+    fn mean(&self) -> &[f32] {
+        &self.mu
+    }
+
+    fn sigma_mean(&self) -> f64 {
+        self.sigma.iter().map(|&s| s as f64).sum::<f64>() / self.sigma.len() as f64
+    }
+
+    fn generation(&self) -> usize {
+        self.generation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn population_is_symmetric_pairs() {
+        let mut opt = Pepg::new(8, PepgConfig::default(), 1);
+        let pop = opt.ask();
+        assert_eq!(pop.len(), opt.population_size());
+        for k in 0..opt.cfg.pairs {
+            let plus = &pop[2 * k];
+            let minus = &pop[2 * k + 1];
+            for d in 0..8 {
+                let mid = (plus[d] + minus[d]) / 2.0;
+                assert!((mid - opt.mu[d]).abs() < 1e-6, "pair {k} not symmetric");
+            }
+        }
+    }
+
+    #[test]
+    fn moves_toward_better_half() {
+        // Fitness = genome[0]: μ[0] must increase.
+        let mut opt = Pepg::new(4, PepgConfig::default(), 2);
+        for _ in 0..50 {
+            let pop = opt.ask();
+            let fit: Vec<f64> = pop.iter().map(|g| g[0] as f64).collect();
+            opt.tell(&fit);
+        }
+        assert!(opt.mean()[0] > 0.3, "μ[0] = {}", opt.mean()[0]);
+    }
+
+    #[test]
+    fn sigma_stays_bounded() {
+        let mut cfg = PepgConfig::default();
+        cfg.lr_sigma = 0.5;
+        let mut opt = Pepg::new(4, cfg.clone(), 3);
+        for _ in 0..100 {
+            let pop = opt.ask();
+            // adversarial: random fitness
+            let fit: Vec<f64> = pop.iter().map(|g| g[1] as f64 * 1000.0).collect();
+            opt.tell(&fit);
+        }
+        for &s in &opt.sigma {
+            assert!(s >= cfg.sigma_min && s <= cfg.sigma_max);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut opt = Pepg::new(6, PepgConfig::default(), 9);
+            for _ in 0..5 {
+                let pop = opt.ask();
+                let fit: Vec<f64> = pop.iter().map(|g| -(g[0] as f64).powi(2)).collect();
+                opt.tell(&fit);
+            }
+            opt.mean().to_vec()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn best_fitness_tracks_max() {
+        let mut opt = Pepg::new(2, PepgConfig::default(), 4);
+        let pop = opt.ask();
+        let mut fit = vec![0.0; pop.len()];
+        fit[3] = 17.0;
+        opt.tell(&fit);
+        assert_eq!(opt.best_fitness, 17.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "population size")]
+    fn wrong_fitness_len_panics() {
+        let mut opt = Pepg::new(2, PepgConfig::default(), 5);
+        let _ = opt.ask();
+        opt.tell(&[1.0]);
+    }
+
+    #[test]
+    fn mu_decay_shrinks_mean() {
+        let mut cfg = PepgConfig::default();
+        cfg.mu_decay = 0.1;
+        cfg.lr_mu = 0.0;
+        let mut opt = Pepg::new(2, cfg, 6).with_mean(&[1.0, -1.0]);
+        let pop = opt.ask();
+        opt.tell(&vec![0.0; pop.len()]);
+        assert!(opt.mean()[0] < 1.0 && opt.mean()[0] > 0.0);
+        assert!(opt.mean()[1] > -1.0 && opt.mean()[1] < 0.0);
+    }
+}

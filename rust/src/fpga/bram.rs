@@ -1,0 +1,302 @@
+//! On-chip memory system: named dual-port BRAM banks with the paper's
+//! **write-priority arbitration** (§III-B: "a write-priority memory
+//! scheme pauses reads during writes, ensuring [the] Forward Engine
+//! always uses up-to-date weights", avoiding double buffering).
+//!
+//! Model granularity: one access per port per cycle. The Forward Engine
+//! owns port A of every bank, the Plasticity Engine owns port B. A
+//! *conflict* arises only when both engines touch the same bank in the
+//! same cycle and at least one access is a write to a word the other may
+//! read — then the write proceeds and the reader stalls one cycle. The
+//! per-bank stall counts feed the latency report and the dynamic-power
+//! activity factors.
+
+use std::fmt;
+
+/// The accelerator's memory banks (§III-A "On-Chip Memory System").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Bank {
+    /// L1 synaptic weights (layer = 0) / L2 (layer = 1), word = n_pe f16.
+    Weights(u8),
+    /// Packed plasticity coefficients θ per layer, word = 4·n_pe f16.
+    Theta(u8),
+    /// Spike traces: 0 = input, 1 = hidden, 2 = output population.
+    Trace(u8),
+    /// Membrane potentials per layer.
+    Vmem(u8),
+    /// Spike bit buffer between layers.
+    SpikeBuf,
+}
+
+pub const ALL_BANKS: [Bank; 10] = [
+    Bank::Weights(0),
+    Bank::Weights(1),
+    Bank::Theta(0),
+    Bank::Theta(1),
+    Bank::Trace(0),
+    Bank::Trace(1),
+    Bank::Trace(2),
+    Bank::Vmem(0),
+    Bank::Vmem(1),
+    Bank::SpikeBuf,
+];
+
+impl Bank {
+    /// Constant-time index into [`ALL_BANKS`] (hot path: called per
+    /// access per cycle; a linear scan here cost ~8 % of simulation
+    /// wall-clock — see EXPERIMENTS.md §Perf).
+    #[inline]
+    pub const fn index(self) -> usize {
+        match self {
+            Bank::Weights(l) => l as usize,
+            Bank::Theta(l) => 2 + l as usize,
+            Bank::Trace(p) => 4 + p as usize,
+            Bank::Vmem(l) => 7 + l as usize,
+            Bank::SpikeBuf => 9,
+        }
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            Bank::Weights(l) => format!("W{}", l + 1),
+            Bank::Theta(l) => format!("Theta{}", l + 1),
+            Bank::Trace(0) => "TraceIn".into(),
+            Bank::Trace(1) => "TraceHid".into(),
+            Bank::Trace(_) => "TraceOut".into(),
+            Bank::Vmem(l) => format!("V{}", l + 1),
+            Bank::SpikeBuf => "SpikeBuf".into(),
+        }
+    }
+}
+
+/// One engine's accesses in one cycle. Bank sets are precomputed
+/// bitmasks (bit i = `ALL_BANKS[i]`) so the arbiter is a handful of
+/// bitwise ops per cycle instead of vector scans — the simulator's
+/// hottest path (§Perf).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Access {
+    pub read_mask: u16,
+    pub write_mask: u16,
+}
+
+fn mask_of(banks: &[Bank]) -> u16 {
+    banks.iter().fold(0u16, |m, &b| m | (1 << b.index()))
+}
+
+impl Access {
+    pub fn none() -> Self {
+        Access::default()
+    }
+
+    pub fn read(banks: &[Bank]) -> Self {
+        Access {
+            read_mask: mask_of(banks),
+            write_mask: 0,
+        }
+    }
+
+    pub fn rw(reads: &[Bank], writes: &[Bank]) -> Self {
+        Access {
+            read_mask: mask_of(reads),
+            write_mask: mask_of(writes),
+        }
+    }
+
+    pub fn touches(&self, bank: Bank) -> bool {
+        (self.read_mask | self.write_mask) & (1 << bank.index()) != 0
+    }
+
+    pub fn reads_bank(&self, bank: Bank) -> bool {
+        self.read_mask & (1 << bank.index()) != 0
+    }
+
+    pub fn writes_bank(&self, bank: Bank) -> bool {
+        self.write_mask & (1 << bank.index()) != 0
+    }
+}
+
+/// Per-bank traffic statistics.
+#[derive(Clone, Debug, Default)]
+pub struct BankStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub conflicts: u64,
+}
+
+/// The memory system: arbitration + accounting.
+#[derive(Clone, Debug)]
+pub struct MemorySystem {
+    stats: Vec<BankStats>,
+}
+
+impl Default for MemorySystem {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemorySystem {
+    pub fn new() -> Self {
+        MemorySystem {
+            stats: vec![BankStats::default(); ALL_BANKS.len()],
+        }
+    }
+
+    /// Arbitrate one cycle between the Forward Engine (`fwd`) and the
+    /// Plasticity Engine (`plast`). Returns `(fwd_proceeds,
+    /// plast_proceeds)`; a stalled engine must replay the same access
+    /// next cycle. Write priority: the writer proceeds, the reader
+    /// stalls. Writer-vs-writer on the same bank cannot happen by
+    /// construction (each bank has one writing engine per phase); it is
+    /// resolved in favour of the plasticity engine and counted.
+    pub fn arbitrate(&mut self, fwd: &Access, plast: &Access) -> (bool, bool) {
+        let mut fwd_ok = true;
+        let mut plast_ok = true;
+        let f_all = fwd.read_mask | fwd.write_mask;
+        let p_all = plast.read_mask | plast.write_mask;
+        let mut shared = f_all & p_all;
+        // Fast path: disjoint bank sets — no contention possible.
+        while shared != 0 {
+            let i = shared.trailing_zeros() as usize;
+            shared &= shared - 1;
+            let bit = 1u16 << i;
+            let f_w = fwd.write_mask & bit != 0;
+            let p_w = plast.write_mask & bit != 0;
+            // Both engines touch this bank. Dual-port: two pure reads
+            // coexist (one per port). Any write forces the other
+            // engine's access to stall (write priority).
+            match (f_w, p_w) {
+                (false, false) => {} // read/read on the two ports: fine
+                (true, false) => {
+                    plast_ok = false;
+                    self.stats[i].conflicts += 1;
+                }
+                (false, true) | (true, true) => {
+                    fwd_ok = false;
+                    self.stats[i].conflicts += 1;
+                }
+            }
+        }
+        // Commit traffic for the engines that proceed.
+        if fwd_ok {
+            self.commit(fwd);
+        }
+        if plast_ok {
+            self.commit(plast);
+        }
+        (fwd_ok, plast_ok)
+    }
+
+    /// Commit a single engine's access (no contention possible).
+    pub fn commit(&mut self, acc: &Access) {
+        let mut r = acc.read_mask;
+        while r != 0 {
+            let i = r.trailing_zeros() as usize;
+            r &= r - 1;
+            self.stats[i].reads += 1;
+        }
+        let mut w = acc.write_mask;
+        while w != 0 {
+            let i = w.trailing_zeros() as usize;
+            w &= w - 1;
+            self.stats[i].writes += 1;
+        }
+    }
+
+    pub fn stats(&self, bank: Bank) -> &BankStats {
+        &self.stats[bank.index()]
+    }
+
+    pub fn total_conflicts(&self) -> u64 {
+        self.stats.iter().map(|s| s.conflicts).sum()
+    }
+
+    pub fn total_accesses(&self) -> u64 {
+        self.stats.iter().map(|s| s.reads + s.writes).sum()
+    }
+
+    pub fn reset(&mut self) {
+        for s in self.stats.iter_mut() {
+            *s = BankStats::default();
+        }
+    }
+}
+
+impl fmt::Display for MemorySystem {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{:<10} {:>12} {:>12} {:>10}", "bank", "reads", "writes", "conflicts")?;
+        for &b in ALL_BANKS.iter() {
+            let s = self.stats(b);
+            writeln!(f, "{:<10} {:>12} {:>12} {:>10}", b.name(), s.reads, s.writes, s.conflicts)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_banks_no_conflict() {
+        let mut mem = MemorySystem::new();
+        let f = Access::read(&[Bank::Weights(1)]);
+        let p = Access::rw(&[Bank::Theta(0)], &[Bank::Weights(0)]);
+        let (fo, po) = mem.arbitrate(&f, &p);
+        assert!(fo && po);
+        assert_eq!(mem.total_conflicts(), 0);
+        assert_eq!(mem.stats(Bank::Weights(1)).reads, 1);
+        assert_eq!(mem.stats(Bank::Weights(0)).writes, 1);
+    }
+
+    #[test]
+    fn read_read_same_bank_coexists() {
+        let mut mem = MemorySystem::new();
+        let f = Access::read(&[Bank::Trace(1)]);
+        let p = Access::read(&[Bank::Trace(1)]);
+        let (fo, po) = mem.arbitrate(&f, &p);
+        assert!(fo && po);
+        assert_eq!(mem.stats(Bank::Trace(1)).reads, 2);
+        assert_eq!(mem.total_conflicts(), 0);
+    }
+
+    #[test]
+    fn write_priority_stalls_reader() {
+        let mut mem = MemorySystem::new();
+        // Plasticity writes W1 while Forward reads W1 → forward stalls.
+        let f = Access::read(&[Bank::Weights(0)]);
+        let p = Access::rw(&[], &[Bank::Weights(0)]);
+        let (fo, po) = mem.arbitrate(&f, &p);
+        assert!(!fo && po);
+        assert_eq!(mem.stats(Bank::Weights(0)).conflicts, 1);
+        // stalled read not committed
+        assert_eq!(mem.stats(Bank::Weights(0)).reads, 0);
+        assert_eq!(mem.stats(Bank::Weights(0)).writes, 1);
+    }
+
+    #[test]
+    fn forward_write_stalls_plasticity_reader() {
+        let mut mem = MemorySystem::new();
+        let f = Access::rw(&[], &[Bank::Trace(1)]);
+        let p = Access::read(&[Bank::Trace(1)]);
+        let (fo, po) = mem.arbitrate(&f, &p);
+        assert!(fo && !po);
+    }
+
+    #[test]
+    fn idle_engines_cost_nothing() {
+        let mut mem = MemorySystem::new();
+        let (fo, po) = mem.arbitrate(&Access::none(), &Access::none());
+        assert!(fo && po);
+        assert_eq!(mem.total_accesses(), 0);
+    }
+
+    #[test]
+    fn reset_clears_stats() {
+        let mut mem = MemorySystem::new();
+        mem.commit(&Access::read(&[Bank::SpikeBuf]));
+        assert_eq!(mem.total_accesses(), 1);
+        mem.reset();
+        assert_eq!(mem.total_accesses(), 0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Hardware configuration of the simulated accelerator instance.
+//!
+//! Defaults model the paper's implementation: Cmod A7-35T (Artix-7
+//! XC7A35T), 16 PEs for the Dual Engine, 200 MHz target clock (§IV-A).
+
+#[derive(Clone, Debug)]
+pub struct HwConfig {
+    /// Processing elements per engine lane group (paper: 16).
+    pub n_pe: usize,
+    /// Target clock in MHz (paper: 200).
+    pub clock_mhz: f64,
+    /// Forward-engine pipeline depth: psum → neuron dynamic → trace
+    /// update stages per tile (drain cycles at tile boundaries).
+    pub fwd_pipe_depth: usize,
+    /// Plasticity-engine pipeline depth: packed fetch → DSP multiply →
+    /// adder tree → writeback (drain cycles at the end of a burst).
+    pub plast_pipe_depth: usize,
+    /// Synapses the Plasticity Engine retires per cycle. Each retired
+    /// synapse consumes four DSP products (α·Sj·Si needs a cascaded
+    /// pair, β·Sj, γ·Si), so the paper's 16-DSP update engines
+    /// (Table I) retire 4 synapses/cycle from one packed θ word.
+    pub syn_per_cycle: usize,
+    /// Dual-engine overlap (§III-C) on. Off = sequential execution, the
+    /// ablation row of Table II ("prior systems ... sequential execution
+    /// of these stages").
+    pub overlap: bool,
+    /// Event-driven psum: skip cycles for inactive input spikes (the
+    /// spike-gating power/latency optimization of §III-B).
+    pub event_driven: bool,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig {
+            n_pe: 16,
+            clock_mhz: 200.0,
+            fwd_pipe_depth: 3,
+            plast_pipe_depth: 4,
+            syn_per_cycle: 4,
+            overlap: true,
+            event_driven: true,
+        }
+    }
+}
+
+impl HwConfig {
+    /// Sequential-execution ablation variant.
+    pub fn sequential() -> Self {
+        HwConfig {
+            overlap: false,
+            ..Self::default()
+        }
+    }
+
+    /// Nanoseconds per clock cycle.
+    pub fn ns_per_cycle(&self) -> f64 {
+        1000.0 / self.clock_mhz
+    }
+
+    /// Convert a cycle count to microseconds.
+    pub fn cycles_to_us(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.ns_per_cycle() / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let hw = HwConfig::default();
+        assert_eq!(hw.n_pe, 16);
+        assert_eq!(hw.clock_mhz, 200.0);
+        assert!(hw.overlap);
+        assert_eq!(hw.ns_per_cycle(), 5.0);
+        assert_eq!(hw.cycles_to_us(1600), 8.0); // 8 µs = 1600 cycles @200MHz
+    }
+
+    #[test]
+    fn sequential_ablation_differs_only_in_overlap() {
+        let a = HwConfig::default();
+        let b = HwConfig::sequential();
+        assert!(!b.overlap);
+        assert_eq!(a.n_pe, b.n_pe);
+    }
+}

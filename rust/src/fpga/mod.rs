@@ -1,0 +1,28 @@
+//! Cycle-accurate simulator of the FireFly-P accelerator (§III) plus the
+//! analytic resource, power and floorplan models that regenerate Table I,
+//! the 8 µs / 0.713 W headline numbers, and Fig. 4.
+//!
+//! The simulator reproduces the architecture, not the RTL: a Dual-Engine
+//! Computation Core (Forward Engine with psum-stationary PE tiles →
+//! Neuron Dynamic Unit → Trace Update Unit; Plasticity Engine with packed
+//! 4-coefficient wide fetch → parallel DSP array → adder tree), a shared
+//! dual-port BRAM memory system with **write-priority arbitration** (no
+//! double buffering), and the Scheduler's overlapped Prologue / Phase A /
+//! Phase B / Epilogue dataflow (§III-C). All arithmetic is bit-accurate
+//! IEEE FP16 through the same scalar kernels as the golden model, so the
+//! simulator's spikes and weights are bit-identical to
+//! `SnnNetwork<F16>` by construction — verified in `sim::tests`.
+
+pub mod bram;
+pub mod engines;
+pub mod hwconfig;
+pub mod layout;
+pub mod power;
+pub mod resources;
+pub mod sim;
+
+pub use bram::{Bank, MemorySystem};
+pub use hwconfig::HwConfig;
+pub use power::PowerModel;
+pub use resources::{ResourceReport, Resources};
+pub use sim::FpgaSim;

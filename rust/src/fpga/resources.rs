@@ -1,0 +1,359 @@
+//! Analytic FPGA resource model — regenerates Table I.
+//!
+//! The model composes per-module costs from the architecture parameters
+//! (PE lanes, synapse throughput, memory geometry) with unit costs
+//! calibrated against the paper's post-implementation numbers for the
+//! Artix-7 XC7A35T. What the model *derives* (rather than hard-codes):
+//!
+//! - **Forward-engine lanes**: L1 runs all `n_pe` PE lanes; L2's
+//!   bandwidth requirement is scaled by its fan-out ratio
+//!   (`n_pe·n_out/n_hidden`, floor 4) — this is why L2 Forward is ~4×
+//!   cheaper than L1 Forward in Table I.
+//! - **DSP counts**: each update engine spends 4 DSPs per concurrently
+//!   retired synapse (the four rule products), `4 × syn_per_cycle = 16`;
+//!   forward engines implement ¾ of their FP16 adder lanes in DSP48s
+//!   (12 for L1's 16 lanes, 3 for L2's 4).
+//! - **BRAM**: weight memories from capacity (`pre·post·16 bit` /36 Kb),
+//!   θ memory from *bandwidth*: one packed fetch of
+//!   `4·syn_per_cycle·16 = 256` bit/cycle needs `⌈256/72⌉ = 4` RAMB36 in
+//!   72-bit SDP mode — capacity-checked against `4·synapses·16 bit`,
+//!   whichever is larger. The shared θ system serves L1 in Phase A and
+//!   L2 in Phase B (the phases never update both layers at once), which
+//!   is how the design fits a 50-BRAM part.
+//!
+//! The default control-network geometry (32-128-8, the paper's hardware
+//! instance) reproduces Table I's rows; other geometries give honest
+//! scaled estimates.
+
+use super::hwconfig::HwConfig;
+
+/// Resource vector (LUTs, registers, RAMB36-equivalents, DSP48 slices).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Resources {
+    pub luts: f64,
+    pub regs: f64,
+    pub brams: f64,
+    pub dsps: f64,
+}
+
+impl Resources {
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            luts: self.luts + o.luts,
+            regs: self.regs + o.regs,
+            brams: self.brams + o.brams,
+            dsps: self.dsps + o.dsps,
+        }
+    }
+}
+
+/// Device capacity: Xilinx XC7A35T (Cmod A7-35T).
+pub const XC7A35T: Resources = Resources {
+    luts: 20_800.0,
+    regs: 41_600.0,
+    brams: 50.0,
+    dsps: 90.0,
+};
+
+/// Per-module calibrated unit costs (Artix-7, 200 MHz, FP16 datapath).
+mod unit {
+    /// Forward engine: control/FSM base LUTs + per-lane psum/LIF datapath.
+    pub const FWD_LUT_BASE: f64 = 1170.0;
+    pub const FWD_LUT_PER_LANE: f64 = 108.0;
+    pub const FWD_REG_BASE: f64 = 1770.0;
+    pub const FWD_REG_PER_LANE: f64 = 108.0;
+    /// Fraction of FP16 adder lanes mapped to DSP48 slices.
+    pub const FWD_DSP_PER_LANE: f64 = 0.75;
+
+    /// Plasticity engine: packed-fetch decode + DSP array + adder tree.
+    pub const PLAST_LUT_BASE: f64 = 1500.0;
+    pub const PLAST_LUT_PER_SYN_LANE: f64 = 400.0;
+    pub const PLAST_REG_BASE: f64 = 704.0;
+    pub const PLAST_REG_PER_SYN_LANE: f64 = 1024.0;
+    pub const PLAST_DSP_PER_SYN_LANE: f64 = 4.0; // four rule products
+
+    /// L2 update carries the epilogue/phase-B control on top.
+    pub const PLAST_L2_EXTRA_LUT: f64 = 100.0;
+
+    /// Scheduler + arbiter + top-level glue ("Others" row).
+    pub const SCHED_LUT: f64 = 100.0;
+    pub const SCHED_REG: f64 = 1300.0;
+
+    /// RAMB36: 36 Kbit, max 72-bit simple-dual-port width.
+    pub const BRAM_KBIT: f64 = 36.0;
+    pub const BRAM_MAX_WIDTH: f64 = 72.0;
+    /// Memory-system misc: 2 spike-staging + 3 trace banks + 1 config.
+    pub const MISC_BRAMS: f64 = 6.0;
+}
+
+/// Network geometry the hardware instance is sized for.
+#[derive(Clone, Copy, Debug)]
+pub struct NetGeometry {
+    pub n_in: usize,
+    pub n_hidden: usize,
+    pub n_out: usize,
+}
+
+impl NetGeometry {
+    /// The paper's control-network hardware instance (Table I).
+    pub fn paper_control() -> Self {
+        NetGeometry {
+            n_in: 32,
+            n_hidden: 128,
+            n_out: 8,
+        }
+    }
+
+    /// The paper's MNIST instance (Table II): 784-1024-10.
+    pub fn mnist() -> Self {
+        NetGeometry {
+            n_in: 784,
+            n_hidden: 1024,
+            n_out: 10,
+        }
+    }
+}
+
+/// Effective forward-engine lanes for a layer: L1 uses the full PE
+/// array; deeper layers scale with their relative output bandwidth.
+pub fn fwd_lanes(hw: &HwConfig, layer: usize, geo: &NetGeometry) -> usize {
+    if layer == 0 {
+        hw.n_pe
+    } else {
+        ((hw.n_pe * geo.n_out).div_ceil(geo.n_hidden)).max(4)
+    }
+}
+
+fn weight_bram(pre: usize, post: usize) -> f64 {
+    let kbits = (pre * post * 16) as f64 / 1024.0;
+    // quantized to half-BRAM18 granularity like Vivado reports
+    ((kbits / unit::BRAM_KBIT) * 2.0).ceil() / 2.0
+}
+
+/// θ memory: banked **per layer** — Table I shows two independent
+/// 16-DSP update engines, each needing its own packed-fetch port, so
+/// each layer's θ gets its own bank group sized by
+/// max(bandwidth, capacity). Plus the misc buffers of the memory
+/// system: double-buffered input spike staging (2), trace memories
+/// pushed to BRAM for dual-engine porting (3), config/readout (1).
+fn theta_bram(hw: &HwConfig, geo: &NetGeometry) -> f64 {
+    let word_bits = (4 * hw.syn_per_cycle * 16) as f64;
+    let bandwidth_brams = (word_bits / unit::BRAM_MAX_WIDTH).ceil();
+    let mut total = 0.0;
+    for syn in [geo.n_in * geo.n_hidden, geo.n_hidden * geo.n_out] {
+        let capacity_kbits = (syn * 4 * 16) as f64 / 1024.0;
+        let capacity_brams = (capacity_kbits / unit::BRAM_KBIT).ceil();
+        total += bandwidth_brams.max(capacity_brams);
+    }
+    total + unit::MISC_BRAMS
+}
+
+/// One named row of the report.
+#[derive(Clone, Debug)]
+pub struct ModuleRow {
+    pub name: &'static str,
+    pub res: Resources,
+}
+
+/// Full resource report (Table I shape).
+#[derive(Clone, Debug)]
+pub struct ResourceReport {
+    pub rows: Vec<ModuleRow>,
+    pub device: Resources,
+}
+
+impl ResourceReport {
+    /// Build the report for a hardware config + network geometry.
+    pub fn build(hw: &HwConfig, geo: &NetGeometry) -> ResourceReport {
+        let mut rows = Vec::new();
+
+        for layer in 0..2 {
+            let lanes = fwd_lanes(hw, layer, geo) as f64;
+            let (pre, post) = if layer == 0 {
+                (geo.n_in, geo.n_hidden)
+            } else {
+                (geo.n_hidden, geo.n_out)
+            };
+            rows.push(ModuleRow {
+                name: if layer == 0 { "L1 Forward" } else { "L2 Forward" },
+                res: Resources {
+                    luts: unit::FWD_LUT_BASE + unit::FWD_LUT_PER_LANE * lanes,
+                    regs: unit::FWD_REG_BASE + unit::FWD_REG_PER_LANE * lanes,
+                    brams: weight_bram(pre, post),
+                    dsps: (lanes * unit::FWD_DSP_PER_LANE).ceil(),
+                },
+            });
+            let syn_lanes = hw.syn_per_cycle as f64;
+            rows.push(ModuleRow {
+                name: if layer == 0 { "L1 Update" } else { "L2 Update" },
+                res: Resources {
+                    luts: unit::PLAST_LUT_BASE
+                        + unit::PLAST_LUT_PER_SYN_LANE * syn_lanes
+                        + if layer == 1 { unit::PLAST_L2_EXTRA_LUT } else { 0.0 },
+                    regs: unit::PLAST_REG_BASE + unit::PLAST_REG_PER_SYN_LANE * syn_lanes,
+                    brams: 0.0, // weights live in the forward banks; θ in "Others"
+                    dsps: syn_lanes * unit::PLAST_DSP_PER_SYN_LANE,
+                },
+            });
+        }
+        rows.push(ModuleRow {
+            name: "Others",
+            res: Resources {
+                luts: unit::SCHED_LUT,
+                regs: unit::SCHED_REG,
+                brams: theta_bram(hw, geo),
+                dsps: 0.0,
+            },
+        });
+
+        ResourceReport {
+            rows,
+            device: XC7A35T,
+        }
+    }
+
+    pub fn total(&self) -> Resources {
+        self.rows
+            .iter()
+            .fold(Resources::default(), |acc, r| acc.add(&r.res))
+    }
+
+    /// Render in the paper's Table I format.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{:<12} {:>14} {:>14} {:>12} {:>12}",
+            "Component", "kLUTs", "kREGs", "BRAMs", "DSPs"
+        );
+        let dev = &self.device;
+        let mut emit = |name: &str, r: &Resources| {
+            let _ = writeln!(
+                s,
+                "{:<12} {:>6.1} ({:>5.2}%) {:>6.1} ({:>5.2}%) {:>4.1} ({:>5.2}%) {:>4} ({:>5.2}%)",
+                name,
+                r.luts / 1000.0,
+                100.0 * r.luts / dev.luts,
+                r.regs / 1000.0,
+                100.0 * r.regs / dev.regs,
+                r.brams,
+                100.0 * r.brams / dev.brams,
+                r.dsps as u64,
+                100.0 * r.dsps / dev.dsps,
+            );
+        };
+        for row in &self.rows {
+            emit(row.name, &row.res);
+        }
+        emit("Total", &self.total());
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_report() -> ResourceReport {
+        let mut hw = HwConfig::default();
+        hw.syn_per_cycle = 4; // 16 update DSPs / 4 products per synapse
+        ResourceReport::build(&hw, &NetGeometry::paper_control())
+    }
+
+    #[test]
+    fn reproduces_table1_structure() {
+        let rep = paper_report();
+        let names: Vec<&str> = rep.rows.iter().map(|r| r.name).collect();
+        assert_eq!(
+            names,
+            vec!["L1 Forward", "L1 Update", "L2 Forward", "L2 Update", "Others"]
+        );
+    }
+
+    #[test]
+    fn reproduces_table1_dsps_exactly() {
+        let rep = paper_report();
+        let dsps: Vec<f64> = rep.rows.iter().map(|r| r.res.dsps).collect();
+        assert_eq!(dsps, vec![12.0, 16.0, 3.0, 16.0, 0.0]); // Table I
+        assert_eq!(rep.total().dsps, 47.0);
+    }
+
+    #[test]
+    fn reproduces_table1_brams() {
+        let rep = paper_report();
+        // L1 weights 32×128×16b = 64Kb = 2 RAMB36; L2 128×8×16b = 0.5.
+        assert_eq!(rep.rows[0].res.brams, 2.0);
+        assert_eq!(rep.rows[2].res.brams, 0.5);
+        // θ (Others): per-layer banks — L1 capacity 256 Kb → 8, L2
+        // bandwidth-floored at 4 — plus 6 misc memory-system BRAMs = 18
+        // (Table I's Others row); total 20.5 matches the paper.
+        let others = rep.rows[4].res.brams;
+        assert_eq!(others, 18.0);
+        assert_eq!(rep.total().brams, 20.5);
+        assert!(rep.total().brams <= XC7A35T.brams);
+    }
+
+    #[test]
+    fn reproduces_table1_luts_within_tolerance() {
+        let rep = paper_report();
+        let expect_kluts = [2.9, 3.1, 1.6, 3.2, 0.1];
+        for (row, &e) in rep.rows.iter().zip(&expect_kluts) {
+            let got = row.res.luts / 1000.0;
+            assert!(
+                (got - e).abs() / e < 0.05,
+                "{}: {got:.2} kLUT vs paper {e}",
+                row.name
+            );
+        }
+        let total = rep.total().luts / 1000.0;
+        assert!((total - 10.9).abs() < 0.3, "total {total} kLUT vs 10.9");
+    }
+
+    #[test]
+    fn reproduces_table1_regs_within_tolerance() {
+        let rep = paper_report();
+        let expect_kregs = [3.5, 4.8, 2.2, 4.8, 1.3];
+        for (row, &e) in rep.rows.iter().zip(&expect_kregs) {
+            let got = row.res.regs / 1000.0;
+            assert!(
+                (got - e).abs() / e < 0.06,
+                "{}: {got:.2} kREG vs paper {e}",
+                row.name
+            );
+        }
+    }
+
+    #[test]
+    fn fits_the_device() {
+        let rep = paper_report();
+        let t = rep.total();
+        assert!(t.luts < XC7A35T.luts);
+        assert!(t.regs < XC7A35T.regs);
+        assert!(t.brams <= XC7A35T.brams);
+        assert!(t.dsps < XC7A35T.dsps);
+        // utilization ballpark of the paper: ~52% LUTs
+        let lut_util = t.luts / XC7A35T.luts;
+        assert!((0.45..0.60).contains(&lut_util), "LUT util {lut_util}");
+    }
+
+    #[test]
+    fn mnist_geometry_needs_more_memory() {
+        let mut hw = HwConfig::default();
+        hw.syn_per_cycle = 4;
+        let rep = ResourceReport::build(&hw, &NetGeometry::mnist());
+        // 784·1024 synapses: weight+θ memories exceed the on-chip budget
+        // — the MNIST deployment streams weights (documented in
+        // DESIGN.md); the model must report that honestly.
+        assert!(rep.total().brams > XC7A35T.brams);
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let rep = paper_report();
+        let s = rep.render();
+        for name in ["L1 Forward", "L1 Update", "L2 Forward", "L2 Update", "Others", "Total"] {
+            assert!(s.contains(name), "missing {name} in render");
+        }
+    }
+}

@@ -1,0 +1,560 @@
+//! The top-level cycle-accurate simulator: architectural state + the
+//! Scheduler's overlapped dataflow (§III-C).
+//!
+//! Execution follows the paper's three phases for a two-synaptic-layer
+//! SNN:
+//!
+//! ```text
+//! Prologue:  L1 forward (t = 0)
+//! Main loop: Phase A — L1 update(t)   ∥ L2 forward(t)
+//!            Phase B — L2 update(t)   ∥ L1 forward(t+1)
+//! Epilogue:  final L2 update
+//! ```
+//!
+//! The `step()` API delivers the output spikes for timestep `t`, so each
+//! call internally runs *Phase B of the previous iteration* (bringing in
+//! the new input) followed by *Phase A of this iteration*. Functional
+//! semantics are bit-identical to the golden `SnnNetwork<F16>` — the
+//! equivalence test below checks spikes, membrane potentials, traces and
+//! weights bit-for-bit over random episodes.
+//!
+//! Hazard note: in Phase B the Plasticity Engine (L2 update, needing the
+//! *stable* timestep-`t` hidden traces, §III-C) shares the hidden-trace
+//! bank with the Forward Engine's Trace Update Unit (writing `t+1`
+//! values). The write-priority arbiter stalls the reader cycle-wise (the
+//! performance effect is modeled); *data-wise* the engine consumes the
+//! phase-entry snapshot, modeling the design's guarantee that the update
+//! uses "the stable neuronal activities from the just-completed forward
+//! pass" — the trace words a plasticity burst needs are read before the
+//! forward engine's trace writes land on the same addresses.
+
+use super::bram::{Access, MemorySystem};
+use super::engines::{forward_stream_into, plasticity_stream_into, Action, MicroOp};
+use super::hwconfig::HwConfig;
+use crate::snn::lif::lif_step_scalar;
+use crate::snn::network::{Mode, SnnConfig, SnnNetwork};
+use crate::snn::numeric::Scalar;
+use crate::snn::plasticity::{update_synapse, RuleParams, COEFFS_PER_SYNAPSE};
+use crate::snn::trace::trace_step_scalar;
+use crate::util::fp16::F16;
+
+/// FP16 arithmetic-operation counters (dynamic-power activity factors).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpCounts {
+    pub mul: u64,
+    pub add: u64,
+    pub cmp: u64,
+}
+
+/// Cycle accounting per pipeline region.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CycleCounts {
+    pub total: u64,
+    pub prologue: u64,
+    pub phase_a: u64,
+    pub phase_b: u64,
+    pub epilogue: u64,
+    pub steps: u64,
+    /// Busy (non-stalled, non-bubble) cycles per engine.
+    pub fwd_busy: u64,
+    pub plast_busy: u64,
+}
+
+/// The simulated accelerator.
+pub struct FpgaSim {
+    pub hw: HwConfig,
+    pub cfg: SnnConfig,
+    rule: Option<(RuleParams, RuleParams)>,
+    // Architectural state (bit-accurate FP16).
+    w: [Vec<F16>; 2],
+    v: [Vec<F16>; 2],
+    traces: [Vec<F16>; 3],
+    spikes: [Vec<bool>; 3], // input, hidden, output
+    psum: [Vec<F16>; 2],
+    // Quantized rule constants.
+    eta: F16,
+    w_lo: F16,
+    w_hi: F16,
+    lambda: F16,
+    v_th: F16,
+    // Phase-B trace snapshot for the L2 plasticity burst.
+    hid_trace_snapshot: Vec<F16>,
+    out_trace_snapshot: Vec<F16>,
+    pending_l2_update: bool,
+    // Reused micro-op stream buffers (no allocation in the steady state).
+    fwd_ops: Vec<MicroOp>,
+    plast_ops: Vec<MicroOp>,
+    active_scratch: Vec<usize>,
+    pub mem: MemorySystem,
+    pub cycles: CycleCounts,
+    pub ops: OpCounts,
+}
+
+impl FpgaSim {
+    /// Build a plastic (FireFly-P mode) instance: zero weights, rule θ.
+    pub fn new_plastic(cfg: SnnConfig, l1: RuleParams, l2: RuleParams, hw: HwConfig) -> Self {
+        assert_eq!(l1.pre, cfg.n_in);
+        assert_eq!(l1.post, cfg.n_hidden);
+        assert_eq!(l2.pre, cfg.n_hidden);
+        assert_eq!(l2.post, cfg.n_out);
+        Self::build(cfg, Some((l1, l2)), hw)
+    }
+
+    /// Fixed-weight instance (inference only — the Plasticity Engine
+    /// idles, as in a pure-forward deployment).
+    pub fn new_fixed(cfg: SnnConfig, weights_flat: &[f32], hw: HwConfig) -> Self {
+        let mut sim = Self::build(cfg, None, hw);
+        let split = sim.cfg.l1_synapses();
+        assert_eq!(weights_flat.len(), split + sim.cfg.l2_synapses());
+        for (w, &x) in sim.w[0].iter_mut().zip(&weights_flat[..split]) {
+            *w = F16::from_f32(x);
+        }
+        for (w, &x) in sim.w[1].iter_mut().zip(&weights_flat[split..]) {
+            *w = F16::from_f32(x);
+        }
+        sim
+    }
+
+    fn build(cfg: SnnConfig, rule: Option<(RuleParams, RuleParams)>, hw: HwConfig) -> Self {
+        FpgaSim {
+            w: [
+                vec![F16::ZERO; cfg.n_in * cfg.n_hidden],
+                vec![F16::ZERO; cfg.n_hidden * cfg.n_out],
+            ],
+            v: [vec![F16::ZERO; cfg.n_hidden], vec![F16::ZERO; cfg.n_out]],
+            traces: [
+                vec![F16::ZERO; cfg.n_in],
+                vec![F16::ZERO; cfg.n_hidden],
+                vec![F16::ZERO; cfg.n_out],
+            ],
+            spikes: [
+                vec![false; cfg.n_in],
+                vec![false; cfg.n_hidden],
+                vec![false; cfg.n_out],
+            ],
+            psum: [vec![F16::ZERO; cfg.n_hidden], vec![F16::ZERO; cfg.n_out]],
+            eta: F16::from_f32(cfg.plasticity.eta),
+            w_lo: F16::from_f32(-cfg.plasticity.w_clip),
+            w_hi: F16::from_f32(cfg.plasticity.w_clip),
+            lambda: F16::from_f32(cfg.lambda),
+            v_th: F16::from_f32(cfg.v_th),
+            hid_trace_snapshot: vec![F16::ZERO; cfg.n_hidden],
+            out_trace_snapshot: vec![F16::ZERO; cfg.n_out],
+            pending_l2_update: false,
+            fwd_ops: Vec::new(),
+            plast_ops: Vec::new(),
+            active_scratch: Vec::new(),
+            mem: MemorySystem::new(),
+            cycles: CycleCounts::default(),
+            ops: OpCounts::default(),
+            rule,
+            cfg,
+            hw,
+        }
+    }
+
+    /// Layer dimensions: (n_pre, n_post).
+    fn dims(&self, layer: usize) -> (usize, usize) {
+        if layer == 0 {
+            (self.cfg.n_in, self.cfg.n_hidden)
+        } else {
+            (self.cfg.n_hidden, self.cfg.n_out)
+        }
+    }
+
+    /// One control timestep: Phase B (previous L2 update ∥ L1 forward on
+    /// the new input) then Phase A (L1 update ∥ L2 forward). Returns the
+    /// output spikes for this timestep.
+    pub fn step(&mut self, input_spikes: &[bool]) -> Vec<bool> {
+        assert_eq!(input_spikes.len(), self.cfg.n_in);
+        self.spikes[0].copy_from_slice(input_spikes);
+        self.active_scratch.clear();
+        self.active_scratch
+            .extend((0..self.cfg.n_in).filter(|&j| input_spikes[j]));
+
+        // ---- Phase B: L1 forward(t) ∥ L2 update(t−1) -------------------
+        self.hid_trace_snapshot.copy_from_slice(&self.traces[1]);
+        self.out_trace_snapshot.copy_from_slice(&self.traces[2]);
+        let mut fwd1 = std::mem::take(&mut self.fwd_ops);
+        let mut plast2 = std::mem::take(&mut self.plast_ops);
+        forward_stream_into(
+            0,
+            &self.active_scratch,
+            self.cfg.n_in,
+            self.cfg.n_hidden,
+            &self.hw,
+            true,
+            &mut fwd1,
+        );
+        if self.pending_l2_update && self.rule.is_some() {
+            plasticity_stream_into(1, self.cfg.l2_synapses(), &self.hw, &mut plast2);
+        } else {
+            plast2.clear();
+        }
+        let b_cycles = self.run_phase(&fwd1, &plast2);
+        if self.cycles.steps == 0 {
+            self.cycles.prologue += b_cycles;
+        } else {
+            self.cycles.phase_b += b_cycles;
+        }
+
+        // ---- Phase A: L2 forward(t) ∥ L1 update(t) ---------------------
+        // The L1 plasticity burst uses the *current-timestep* traces
+        // (§III-C Phase A), which the L1 forward pass just wrote — no
+        // snapshot needed; both engines see timestep-t values.
+        self.hid_trace_snapshot.copy_from_slice(&self.traces[1]);
+        self.active_scratch.clear();
+        for j in 0..self.cfg.n_hidden {
+            if self.spikes[1][j] {
+                self.active_scratch.push(j);
+            }
+        }
+        forward_stream_into(
+            1,
+            &self.active_scratch,
+            self.cfg.n_hidden,
+            self.cfg.n_out,
+            &self.hw,
+            false,
+            &mut fwd1,
+        );
+        if self.rule.is_some() {
+            plasticity_stream_into(0, self.cfg.l1_synapses(), &self.hw, &mut plast2);
+        } else {
+            plast2.clear();
+        }
+        let a_cycles = self.run_phase(&fwd1, &plast2);
+        self.cycles.phase_a += a_cycles;
+        self.fwd_ops = fwd1;
+        self.plast_ops = plast2;
+
+        self.pending_l2_update = self.rule.is_some();
+        self.cycles.steps += 1;
+        self.spikes[2].clone()
+    }
+
+    /// Epilogue: flush the final L2 synaptic update (§III-C) so all
+    /// weights incorporate the last timestep's activity.
+    pub fn finish(&mut self) {
+        if !self.pending_l2_update || self.rule.is_none() {
+            return;
+        }
+        self.hid_trace_snapshot.copy_from_slice(&self.traces[1]);
+        self.out_trace_snapshot.copy_from_slice(&self.traces[2]);
+        let mut plast2 = std::mem::take(&mut self.plast_ops);
+        plasticity_stream_into(1, self.cfg.l2_synapses(), &self.hw, &mut plast2);
+        let c = self.run_phase(&[], &plast2);
+        self.plast_ops = plast2;
+        self.cycles.epilogue += c;
+        self.pending_l2_update = false;
+    }
+
+    /// Run one phase: merge the two engines' micro-op streams cycle by
+    /// cycle under memory arbitration (overlap mode), or serialize them
+    /// (sequential ablation). Returns the cycles consumed.
+    fn run_phase(&mut self, fwd: &[MicroOp], plast: &[MicroOp]) -> u64 {
+        let mut cycles = 0u64;
+        if self.hw.overlap {
+            let (mut fi, mut pi) = (0usize, 0usize);
+            let none = Access::none();
+            while fi < fwd.len() || pi < plast.len() {
+                let fa = fwd.get(fi).map(|o| &o.access).unwrap_or(&none);
+                let pa = plast.get(pi).map(|o| &o.access).unwrap_or(&none);
+                let (f_ok, p_ok) = self.mem.arbitrate(fa, pa);
+                if f_ok && fi < fwd.len() {
+                    self.execute(&fwd[fi].action, true);
+                    fi += 1;
+                }
+                if p_ok && pi < plast.len() {
+                    self.execute(&plast[pi].action, false);
+                    pi += 1;
+                }
+                cycles += 1;
+            }
+        } else {
+            for op in fwd {
+                self.mem.commit(&op.access);
+                self.execute(&op.action, true);
+                cycles += 1;
+            }
+            for op in plast {
+                self.mem.commit(&op.access);
+                self.execute(&op.action, false);
+                cycles += 1;
+            }
+        }
+        self.cycles.total += cycles;
+        cycles
+    }
+
+    /// Retire one micro-op against the architectural state.
+    fn execute(&mut self, action: &Action, is_fwd: bool) {
+        match *action {
+            Action::Bubble => return,
+            _ => {
+                if is_fwd {
+                    self.cycles.fwd_busy += 1;
+                } else {
+                    self.cycles.plast_busy += 1;
+                }
+            }
+        }
+        match *action {
+            Action::PsumAccum { layer, tile, j } => {
+                let (_, n_post) = self.dims(layer);
+                let lo = tile * self.hw.n_pe;
+                let hi = (lo + self.hw.n_pe).min(n_post);
+                for i in lo..hi {
+                    let wv = self.w[layer][j * n_post + i];
+                    self.psum[layer][i] = self.psum[layer][i].add(wv);
+                    self.ops.add += 1;
+                }
+            }
+            Action::NeuronTile { layer, tile } => {
+                let (_, n_post) = self.dims(layer);
+                let lo = tile * self.hw.n_pe;
+                let hi = (lo + self.hw.n_pe).min(n_post);
+                let pop = layer + 1;
+                for i in lo..hi {
+                    let (nv, sp) =
+                        lif_step_scalar(self.v[layer][i], self.psum[layer][i], self.v_th, true);
+                    self.v[layer][i] = nv;
+                    self.spikes[pop][i] = sp;
+                    self.psum[layer][i] = F16::ZERO; // psum registers cleared
+                    self.ops.add += 3; // two halvings (shift-adds) + reset-subtract path
+                    self.ops.cmp += 1;
+                }
+            }
+            Action::TraceTile { pop, tile } => {
+                let n = self.traces[pop].len();
+                let lo = tile * self.hw.n_pe;
+                let hi = (lo + self.hw.n_pe).min(n);
+                for i in lo..hi {
+                    self.traces[pop][i] =
+                        trace_step_scalar(self.traces[pop][i], self.spikes[pop][i], self.lambda);
+                    self.ops.mul += 1;
+                    self.ops.add += 1;
+                }
+            }
+            Action::PlastGroup { layer, start, len } => {
+                let (_, n_post) = self.dims(layer);
+                let rule = self.rule.as_ref().expect("plasticity without a rule");
+                let params = if layer == 0 { &rule.0 } else { &rule.1 };
+                for s in start..start + len {
+                    let j = s / n_post;
+                    let i = s % n_post;
+                    let k = s * COEFFS_PER_SYNAPSE;
+                    let coeffs = [
+                        F16::from_f32(params.theta[k]),
+                        F16::from_f32(params.theta[k + 1]),
+                        F16::from_f32(params.theta[k + 2]),
+                        F16::from_f32(params.theta[k + 3]),
+                    ];
+                    // Phase B (layer 1) reads the snapshot traces; Phase A
+                    // (layer 0) reads live current-timestep traces.
+                    let (sj, si) = if layer == 0 {
+                        (self.traces[0][j], self.hid_trace_snapshot[i])
+                    } else {
+                        (self.hid_trace_snapshot[j], self.out_trace_snapshot[i])
+                    };
+                    self.w[layer][s] = update_synapse(
+                        coeffs, self.eta, self.w_lo, self.w_hi, self.w[layer][s], sj, si,
+                    );
+                    self.ops.mul += 5; // 4 term products + η scale
+                    self.ops.add += 4; // adder tree (3) + accumulate
+                    self.ops.cmp += 2; // clamp
+                }
+            }
+            Action::Bubble => unreachable!(),
+        }
+    }
+
+    /// Steady-state latency of one full inference-and-learning timestep,
+    /// in cycles (excludes prologue/epilogue).
+    pub fn steady_state_cycles_per_step(&self) -> f64 {
+        if self.cycles.steps <= 1 {
+            return (self.cycles.prologue + self.cycles.phase_a) as f64;
+        }
+        let main = self.cycles.phase_a + self.cycles.phase_b;
+        // phase_a accumulates from step 0, phase_b from step 1.
+        let a = self.cycles.phase_a as f64 / self.cycles.steps as f64;
+        let b = self.cycles.phase_b as f64 / (self.cycles.steps - 1) as f64;
+        let _ = main;
+        a + b
+    }
+
+    /// End-to-end latency per timestep in µs (the paper's 8 µs metric).
+    pub fn latency_us(&self) -> f64 {
+        self.hw.cycles_to_us(self.steady_state_cycles_per_step().round() as u64)
+    }
+
+    /// Sustained end-to-end frames/steps per second (Table II's FPS).
+    pub fn fps(&self) -> f64 {
+        1e6 / self.latency_us().max(1e-9)
+    }
+
+    /// Copy of the current weights as f32 (diagnostics / tests).
+    pub fn weights_f32(&self, layer: usize) -> Vec<f32> {
+        self.w[layer].iter().map(|x| x.to_f32()).collect()
+    }
+
+    /// Mirror golden-model state for the equivalence test.
+    pub fn state_fingerprint(&self) -> (Vec<u16>, Vec<u16>, Vec<u16>) {
+        let w: Vec<u16> = self.w[0].iter().chain(self.w[1].iter()).map(|x| x.to_bits()).collect();
+        let v: Vec<u16> = self.v[0].iter().chain(self.v[1].iter()).map(|x| x.to_bits()).collect();
+        let t: Vec<u16> = self
+            .traces
+            .iter()
+            .flat_map(|tr| tr.iter().map(|x| x.to_bits()))
+            .collect();
+        (w, v, t)
+    }
+}
+
+/// Build the golden-model twin of a plastic simulator instance.
+pub fn golden_twin(cfg: &SnnConfig, l1: &RuleParams, l2: &RuleParams) -> SnnNetwork<F16> {
+    let rule = crate::snn::network::NetworkRule {
+        l1: l1.clone(),
+        l2: l2.clone(),
+    };
+    SnnNetwork::new(cfg.clone(), Mode::Plastic(rule))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_rule(cfg: &SnnConfig, seed: u64) -> (RuleParams, RuleParams) {
+        let mut rng = Pcg64::new(seed, 0);
+        (
+            RuleParams::random(cfg.n_in, cfg.n_hidden, 0.2, &mut rng),
+            RuleParams::random(cfg.n_hidden, cfg.n_out, 0.2, &mut rng),
+        )
+    }
+
+    fn golden_fingerprint(net: &SnnNetwork<F16>) -> (Vec<u16>, Vec<u16>, Vec<u16>) {
+        let w: Vec<u16> = net.w1.iter().chain(net.w2.iter()).map(|x| x.to_bits()).collect();
+        let v: Vec<u16> = net
+            .hidden
+            .v
+            .iter()
+            .chain(net.output.v.iter())
+            .map(|x| x.to_bits())
+            .collect();
+        let t: Vec<u16> = net
+            .trace_in
+            .values
+            .iter()
+            .chain(net.trace_hidden.values.iter())
+            .chain(net.trace_out.values.iter())
+            .map(|x| x.to_bits())
+            .collect();
+        (w, v, t)
+    }
+
+    /// The headline correctness result: the cycle-accurate simulator is
+    /// bit-identical to the golden FP16 network over a random episode —
+    /// output spikes every step, and full (weights, V, traces) state at
+    /// the end.
+    #[test]
+    fn bit_exact_equivalence_with_golden_model() {
+        let cfg = SnnConfig::tiny();
+        let (l1, l2) = random_rule(&cfg, 42);
+        let mut sim = FpgaSim::new_plastic(cfg.clone(), l1.clone(), l2.clone(), HwConfig::default());
+        let mut gold = golden_twin(&cfg, &l1, &l2);
+        let mut rng = Pcg64::new(7, 0);
+        for t in 0..120 {
+            let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(0.4)).collect();
+            let out_sim = sim.step(&spikes);
+            let out_gold: Vec<bool> = gold.step_spikes(&spikes).to_vec();
+            assert_eq!(out_sim, out_gold, "spike mismatch at t={t}");
+        }
+        sim.finish();
+        assert_eq!(sim.state_fingerprint(), golden_fingerprint(&gold));
+    }
+
+    #[test]
+    fn sequential_mode_same_results_more_cycles() {
+        let cfg = SnnConfig::tiny();
+        let (l1, l2) = random_rule(&cfg, 1);
+        let mut over = FpgaSim::new_plastic(cfg.clone(), l1.clone(), l2.clone(), HwConfig::default());
+        let mut seq = FpgaSim::new_plastic(cfg.clone(), l1, l2, HwConfig::sequential());
+        let mut rng = Pcg64::new(2, 0);
+        for _ in 0..40 {
+            let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(0.5)).collect();
+            assert_eq!(over.step(&spikes), seq.step(&spikes));
+        }
+        over.finish();
+        seq.finish();
+        assert_eq!(over.state_fingerprint(), seq.state_fingerprint());
+        assert!(
+            seq.cycles.total > over.cycles.total,
+            "overlap must save cycles: seq {} vs overlap {}",
+            seq.cycles.total,
+            over.cycles.total
+        );
+    }
+
+    #[test]
+    fn fixed_mode_matches_fixed_golden() {
+        let cfg = SnnConfig::tiny();
+        let mut rng = Pcg64::new(3, 0);
+        let mut flat = vec![0.0f32; cfg.n_weights()];
+        rng.fill_normal_f32(&mut flat, 0.8);
+        let mut sim = FpgaSim::new_fixed(cfg.clone(), &flat, HwConfig::default());
+        let mut gold = SnnNetwork::<F16>::new(cfg.clone(), Mode::Fixed);
+        gold.load_weights(&flat);
+        for _ in 0..50 {
+            let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(0.5)).collect();
+            assert_eq!(sim.step(&spikes), gold.step_spikes(&spikes).to_vec());
+        }
+    }
+
+    #[test]
+    fn latency_accounting_sane() {
+        let cfg = SnnConfig::tiny();
+        let (l1, l2) = random_rule(&cfg, 4);
+        let mut sim = FpgaSim::new_plastic(cfg.clone(), l1, l2, HwConfig::default());
+        let mut rng = Pcg64::new(5, 0);
+        for _ in 0..50 {
+            let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(0.3)).collect();
+            sim.step(&spikes);
+        }
+        let per_step = sim.steady_state_cycles_per_step();
+        assert!(per_step > 0.0);
+        assert!(sim.latency_us() > 0.0);
+        assert!(sim.fps() > 0.0);
+        // cycles must be conserved: regions sum to total
+        let c = &sim.cycles;
+        assert_eq!(c.prologue + c.phase_a + c.phase_b + c.epilogue, c.total);
+    }
+
+    #[test]
+    fn write_priority_conflicts_occur_in_overlap() {
+        // Phase B overlaps L1-forward trace writes with L2-update trace
+        // reads on the hidden-trace bank — the arbitration path must
+        // actually fire on a busy network.
+        let cfg = SnnConfig::tiny();
+        let (l1, l2) = random_rule(&cfg, 6);
+        let mut sim = FpgaSim::new_plastic(cfg.clone(), l1, l2, HwConfig::default());
+        let mut rng = Pcg64::new(6, 0);
+        for _ in 0..30 {
+            let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(0.8)).collect();
+            sim.step(&spikes);
+        }
+        assert!(sim.mem.total_conflicts() > 0, "expected RAW arbitration events");
+    }
+
+    #[test]
+    fn op_counts_scale_with_synapses() {
+        let cfg = SnnConfig::tiny();
+        let (l1, l2) = random_rule(&cfg, 7);
+        let mut sim = FpgaSim::new_plastic(cfg.clone(), l1, l2, HwConfig::default());
+        let spikes = vec![true; cfg.n_in];
+        sim.step(&spikes);
+        // at least one full L1 plasticity burst must have retired
+        let syn = cfg.l1_synapses() as u64;
+        assert!(sim.ops.mul >= 5 * syn);
+    }
+}

@@ -1,0 +1,30 @@
+//! # FireFly-P — FPGA-Accelerated SNN Plasticity for Robust Adaptive Control
+//!
+//! Full-system reproduction of Li et al., *FireFly-P* (CS.AR 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L1/L2 (build time)**: the SNN forward pass and four-term plasticity
+//!   update are authored as Pallas kernels inside a JAX step function and
+//!   AOT-lowered to HLO text (`python/compile/`, `make artifacts`).
+//! - **Runtime**: [`runtime`] loads the artifacts through the PJRT CPU
+//!   client (`xla` crate) — Python never runs on the request path.
+//! - **L3 (this crate)**: the coordinator — online adaptation loop,
+//!   offline PEPG rule optimization, control environments, the
+//!   cycle-accurate FPGA simulator, MNIST online learning, baselines,
+//!   metrics, CLI.
+//!
+//! See `DESIGN.md` for the architecture inventory and `EXPERIMENTS.md`
+//! for the paper-vs-measured record.
+
+pub mod util;
+
+pub mod snn;
+pub mod env;
+pub mod es;
+pub mod fpga;
+pub mod runtime;
+pub mod backend;
+pub mod coordinator;
+pub mod mnist;
+pub mod baselines;
+

@@ -1,0 +1,332 @@
+//! firefly-p — command-line entrypoint for the FireFly-P reproduction.
+//!
+//! Subcommands cover the full paper workflow:
+//!   train-rule    Phase 1: offline PEPG over plasticity coefficients
+//!   adapt         Phase 2: online adaptation episode (any backend)
+//!   serve         TCP control server around a deployed controller
+//!   mnist         Table II workload: online MNIST learning
+//!   fpga-report   Table I resources + power + Fig. 4 floorplan
+//!   artifacts     list AOT artifacts the runtime can load
+
+use firefly_p::backend::{BackendKind, FpgaBackend, NativeBackend, SnnBackend, XlaBackend};
+use firefly_p::coordinator::adapt_loop::{run_adaptation, AdaptConfig};
+use firefly_p::coordinator::offline::{genome_io, train_rule, TrainConfig};
+use firefly_p::coordinator::server::ControlServer;
+use firefly_p::env::{family_of, make_env, train_grid, Perturbation};
+use firefly_p::es::eval::GenomeKind;
+use firefly_p::fpga::power::{Activity, PowerModel};
+use firefly_p::fpga::resources::{NetGeometry, ResourceReport};
+use firefly_p::fpga::{layout, HwConfig};
+use firefly_p::mnist;
+use firefly_p::runtime::Registry;
+use firefly_p::snn::NetworkRule;
+use firefly_p::util::argparse::{flag, opt, Args, Parser};
+
+fn parser() -> Parser {
+    Parser::new(
+        "firefly-p",
+        "FPGA-accelerated SNN plasticity for robust adaptive control (full-system reproduction)",
+    )
+    .global_opt("seed", "rng seed", Some("42"))
+    .command(
+        "train-rule",
+        "Phase 1: offline optimization of the plasticity rule (or weight baseline)",
+        vec![
+            opt("env", "environment: ant-dir | cheetah-vel | reacher", "ant-dir"),
+            opt("generations", "PEPG generations", "50"),
+            opt("pairs", "symmetric sample pairs per generation", "16"),
+            opt("hidden", "hidden layer width", "128"),
+            opt("out", "output genome file", "results/rule.bin"),
+            flag("weights", "train the weight baseline instead of a rule"),
+            flag("quiet", "suppress per-generation logs"),
+        ],
+    )
+    .command(
+        "adapt",
+        "Phase 2: online adaptation episode with optional perturbation",
+        vec![
+            opt("env", "environment", "ant-dir"),
+            opt("genome", "genome file from train-rule", "results/rule.bin"),
+            opt("backend", "native | xla | fpga", "native"),
+            opt("perturb", "e.g. leg:0,1 | gain:0.3 | wind:1,-0.5", ""),
+            opt("perturb-at", "timestep to inject the perturbation", "100"),
+            opt("task", "task index in the training grid", "0"),
+        ],
+    )
+    .command(
+        "serve",
+        "serve a deployed controller over TCP",
+        vec![
+            opt("env", "environment (sets I/O geometry)", "cheetah-vel"),
+            opt("genome", "genome file", "results/rule.bin"),
+            opt("backend", "native | xla | fpga", "xla"),
+            opt("addr", "bind address", "127.0.0.1:7690"),
+        ],
+    )
+    .command(
+        "mnist",
+        "Table II workload: online MNIST learning (synthetic corpus)",
+        vec![
+            opt("train", "training images", "300"),
+            opt("test", "test images", "100"),
+            opt("epochs", "training epochs", "3"),
+            opt("hidden", "hidden width (paper: 1024)", "1024"),
+            flag("pair-stdp", "use the fixed pair-STDP baseline rule"),
+        ],
+    )
+    .command(
+        "fpga-report",
+        "Table I resource breakdown, power estimate and Fig. 4 floorplan",
+        vec![
+            flag("layout", "print the Fig. 4-style floorplan"),
+            flag("mnist-geometry", "report for the 784-1024-10 instance"),
+        ],
+    )
+    .command("artifacts", "list AOT artifacts", vec![])
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let p = parser();
+    let args = match p.parse(&argv) {
+        Ok(a) => a,
+        Err(help) => {
+            eprintln!("{help}");
+            std::process::exit(2);
+        }
+    };
+    let seed = args.get_u64("seed", 42);
+    let code = match args.command.as_deref() {
+        Some("train-rule") => cmd_train_rule(&args, seed),
+        Some("adapt") => cmd_adapt(&args, seed),
+        Some("serve") => cmd_serve(&args, seed),
+        Some("mnist") => cmd_mnist(&args, seed),
+        Some("fpga-report") => cmd_fpga_report(&args),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            eprintln!("{}", p.help_text());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_train_rule(args: &Args, seed: u64) -> i32 {
+    let env: &'static str = Box::leak(args.get_or("env", "ant-dir").into_boxed_str());
+    let kind = if args.flag("weights") {
+        GenomeKind::Weights
+    } else {
+        GenomeKind::PlasticityRule
+    };
+    if family_of(env).is_none() {
+        eprintln!("unknown env {env:?}");
+        return 2;
+    }
+    let mut cfg = TrainConfig::paper(env, kind);
+    cfg.generations = args.get_usize("generations", 50);
+    cfg.pairs = args.get_usize("pairs", 16);
+    cfg.hidden = args.get_usize("hidden", 128);
+    cfg.seed = seed;
+    cfg.verbose = !args.flag("quiet");
+    let result = train_rule(&cfg);
+    let out = std::path::PathBuf::from(args.get_or("out", "results/rule.bin"));
+    let kind_str = if args.flag("weights") { "weights" } else { "rule" };
+    if let Err(e) = genome_io::save(&out, env, kind_str, cfg.hidden, &result.genome) {
+        eprintln!("save failed: {e}");
+        return 1;
+    }
+    let last = result.history.last().unwrap();
+    println!(
+        "trained {kind_str} for {env}: final pop-mean fitness {:.3}, saved to {}",
+        last.mean_fitness,
+        out.display()
+    );
+    0
+}
+
+/// Map an env name to its artifact geometry.
+fn geometry_of(env: &str) -> &'static str {
+    match env {
+        "ant-dir" | "ant" => "ant",
+        "cheetah-vel" | "halfcheetah" => "cheetah",
+        _ => "reacher",
+    }
+}
+
+fn load_backend(args: &Args, env: &str) -> Result<Box<dyn SnnBackend>, String> {
+    let kind = BackendKind::parse(&args.get_or("backend", "native"))
+        .ok_or("backend must be native | xla | fpga")?;
+    let genome_path = std::path::PathBuf::from(args.get_or("genome", "results/rule.bin"));
+    let (genome_env, kind_str, hidden, genome) = if genome_path.exists() {
+        genome_io::load(&genome_path).map_err(|e| e.to_string())?
+    } else {
+        eprintln!(
+            "note: genome file {} not found — deploying a zero (untrained) rule",
+            genome_path.display()
+        );
+        (env.to_string(), "rule".to_string(), 128, Vec::new())
+    };
+    if !genome.is_empty() && genome_env != env {
+        return Err(format!("genome was trained for {genome_env}, not {env}"));
+    }
+    let e = make_env(env).ok_or_else(|| format!("unknown env {env:?}"))?;
+    let mut cfg = firefly_p::snn::SnnConfig::control(
+        e.obs_dim() * firefly_p::es::eval::NEURONS_PER_DIM,
+        2 * e.act_dim(),
+    );
+    cfg.n_hidden = hidden;
+    let plastic = kind_str == "rule";
+    let rule = if plastic {
+        if genome.is_empty() {
+            NetworkRule::zeros(&cfg)
+        } else {
+            NetworkRule::from_flat(&cfg, &genome)
+        }
+    } else {
+        NetworkRule::zeros(&cfg)
+    };
+    let backend: Box<dyn SnnBackend> = match (kind, plastic) {
+        (BackendKind::Native, true) => Box::new(NativeBackend::plastic(cfg, rule)),
+        (BackendKind::Native, false) => Box::new(NativeBackend::fixed(cfg, &genome)),
+        (BackendKind::Fpga, true) => Box::new(FpgaBackend::plastic(cfg, rule, HwConfig::default())),
+        (BackendKind::Fpga, false) => {
+            Box::new(FpgaBackend::fixed(cfg, &genome, HwConfig::default()))
+        }
+        (BackendKind::Xla, true) => Box::new(XlaBackend::plastic(geometry_of(env), &rule)?),
+        (BackendKind::Xla, false) => Box::new(XlaBackend::fixed(geometry_of(env), &genome)?),
+    };
+    Ok(backend)
+}
+
+fn cmd_adapt(args: &Args, seed: u64) -> i32 {
+    let env = args.get_or("env", "ant-dir");
+    let mut backend = match load_backend(args, &env) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let perturb_spec = args.get_or("perturb", "");
+    let perturbation = if perturb_spec.is_empty() {
+        None
+    } else {
+        match Perturbation::parse(&perturb_spec) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("bad --perturb: {e}");
+                return 2;
+            }
+        }
+    };
+    let family = family_of(&env).unwrap();
+    let tasks = train_grid(family);
+    let task = tasks[args.get_usize("task", 0).min(tasks.len() - 1)].clone();
+    let cfg = AdaptConfig {
+        env_name: env.clone(),
+        perturbation,
+        perturb_at: args.get_usize("perturb-at", 100),
+        seed,
+        window: 20,
+    };
+    let log = run_adaptation(backend.as_mut(), &cfg, &task);
+    println!(
+        "env={env} backend={} task={} total_reward={:.2} recovery_ratio={:.3}",
+        backend.name(),
+        task.id,
+        log.total_reward,
+        log.recovery_ratio()
+    );
+    0
+}
+
+fn cmd_serve(args: &Args, seed: u64) -> i32 {
+    let env = args.get_or("env", "cheetah-vel");
+    let e = match make_env(&env) {
+        Some(e) => e,
+        None => {
+            eprintln!("unknown env {env:?}");
+            return 2;
+        }
+    };
+    let (obs_dim, act_dim) = (e.obs_dim(), e.act_dim());
+    let backend = match load_backend(args, &env) {
+        Ok(b) => b,
+        Err(err) => {
+            eprintln!("{err}");
+            return 1;
+        }
+    };
+    let mut server = ControlServer::new(backend, obs_dim, act_dim, seed);
+    let addr = args.get_or("addr", "127.0.0.1:7690");
+    if let Err(err) = server.serve(&addr, None) {
+        eprintln!("server: {err}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_mnist(args: &Args, seed: u64) -> i32 {
+    let train = mnist::generate(args.get_usize("train", 300), seed);
+    let test = mnist::generate(args.get_usize("test", 100), seed ^ 0xFF);
+    let rule = if args.flag("pair-stdp") {
+        mnist::UpdateRule::pair_stdp_default()
+    } else {
+        mnist::UpdateRule::learnable_default()
+    };
+    let mut cfg = mnist::MnistConfig {
+        hidden: args.get_usize("hidden", 1024),
+        seed,
+        ..Default::default()
+    };
+    cfg.k_winners = (cfg.hidden / 32).max(4);
+    let mut m = mnist::OnlineMnist::new(cfg, rule);
+    for e in 0..args.get_usize("epochs", 3) {
+        m.train_epoch(&train);
+        println!("epoch {e}: accuracy {:.3}", m.accuracy(&test));
+    }
+    0
+}
+
+fn cmd_fpga_report(args: &Args) -> i32 {
+    let hw = HwConfig::default();
+    let geo = if args.flag("mnist-geometry") {
+        NetGeometry::mnist()
+    } else {
+        NetGeometry::paper_control()
+    };
+    let report = ResourceReport::build(&hw, &geo);
+    println!("=== Table I — resource breakdown ===");
+    print!("{}", report.render());
+    let power = PowerModel::new(report.clone()).estimate(&Activity::nominal());
+    println!("\n=== Power (nominal activity) ===\n{}", power.render());
+    if args.flag("layout") {
+        println!("\n=== Fig. 4 — implemented design layout ===");
+        print!("{}", layout::render_floorplan(&report));
+    }
+    0
+}
+
+fn cmd_artifacts() -> i32 {
+    match Registry::open_default() {
+        Ok(reg) => {
+            println!("artifacts in {}:", reg.dir.display());
+            for m in reg.list() {
+                println!(
+                    "  {}_{}  ({}-{}-{})  {}",
+                    m.name,
+                    m.variant,
+                    m.n_in,
+                    m.n_hidden,
+                    m.n_out,
+                    m.hlo_path.display()
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Synthetic 28×28 digit corpus — the offline-image substitute for MNIST
+//! (no network access in this environment; see DESIGN.md §2).
+//!
+//! Ten structural glyph templates (7×7 stroke grids) are rendered to
+//! 28×28 with per-sample random affine jitter (translation, scale,
+//! shear), stroke-width variation and pixel noise, giving a
+//! 784-dimensional, 10-class, intensity-coded classification problem
+//! with real intra-class variability. Deterministic per (seed, index).
+
+use crate::util::rng::Pcg64;
+
+pub const IMG_SIDE: usize = 28;
+pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+pub const N_CLASSES: usize = 10;
+
+/// 7×7 glyph templates ('#' = stroke).
+const TEMPLATES: [&str; 10] = [
+    // 0
+    ".#####.\n#.....#\n#.....#\n#.....#\n#.....#\n#.....#\n.#####.",
+    // 1
+    "...#...\n..##...\n.#.#...\n...#...\n...#...\n...#...\n.#####.",
+    // 2
+    ".#####.\n#.....#\n......#\n..###..\n.#.....\n#......\n#######",
+    // 3
+    "######.\n......#\n......#\n..####.\n......#\n......#\n######.",
+    // 4
+    "#....#.\n#....#.\n#....#.\n#######\n.....#.\n.....#.\n.....#.",
+    // 5
+    "#######\n#......\n#......\n######.\n......#\n......#\n######.",
+    // 6
+    ".#####.\n#......\n#......\n######.\n#.....#\n#.....#\n.#####.",
+    // 7
+    "#######\n......#\n.....#.\n....#..\n...#...\n..#....\n..#....",
+    // 8
+    ".#####.\n#.....#\n#.....#\n.#####.\n#.....#\n#.....#\n.#####.",
+    // 9
+    ".#####.\n#.....#\n#.....#\n.######\n......#\n......#\n.#####.",
+];
+
+/// One labeled image.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub pixels: Vec<f32>, // 784, in [0, 1]
+    pub label: usize,
+}
+
+/// Parse a template into stroke points in [0, 1]² (cell centers).
+fn template_points(digit: usize) -> Vec<(f32, f32)> {
+    let mut pts = Vec::new();
+    for (r, line) in TEMPLATES[digit].lines().enumerate() {
+        for (c, ch) in line.chars().enumerate() {
+            if ch == '#' {
+                pts.push(((c as f32 + 0.5) / 7.0, (r as f32 + 0.5) / 7.0));
+            }
+        }
+    }
+    pts
+}
+
+/// Render one digit with random augmentation.
+pub fn render_digit(digit: usize, rng: &mut Pcg64) -> Vec<f32> {
+    assert!(digit < N_CLASSES);
+    let pts = template_points(digit);
+    let mut img = vec![0.0f32; IMG_PIXELS];
+
+    // Random affine: scale, shear, translate (kept small so the class
+    // stays recognizable).
+    let scale = 0.80 + 0.20 * rng.uniform() as f32;
+    let shear = (rng.uniform() as f32 - 0.5) * 0.25;
+    let dx = (rng.uniform() as f32 - 0.5) * 0.15;
+    let dy = (rng.uniform() as f32 - 0.5) * 0.15;
+    let stroke = 1.1 + 0.8 * rng.uniform() as f32; // px radius at 28×28
+
+    for &(tx, ty) in &pts {
+        // center, scale, shear, translate
+        let cx = (tx - 0.5) * scale + shear * (ty - 0.5) + 0.5 + dx;
+        let cy = (ty - 0.5) * scale + 0.5 + dy;
+        let px = cx * IMG_SIDE as f32;
+        let py = cy * IMG_SIDE as f32;
+        // stamp a soft disc
+        let r_cells = stroke.ceil() as i32 + 1;
+        let (ix, iy) = (px as i32, py as i32);
+        for oy in -r_cells..=r_cells {
+            for ox in -r_cells..=r_cells {
+                let (x, y) = (ix + ox, iy + oy);
+                if x < 0 || y < 0 || x >= IMG_SIDE as i32 || y >= IMG_SIDE as i32 {
+                    continue;
+                }
+                let d2 = (x as f32 + 0.5 - px).powi(2) + (y as f32 + 0.5 - py).powi(2);
+                let v = (-d2 / (stroke * stroke)).exp();
+                let idx = y as usize * IMG_SIDE + x as usize;
+                img[idx] = (img[idx] + v).min(1.0);
+            }
+        }
+    }
+
+    // Pixel noise + faint background speckle.
+    for p in img.iter_mut() {
+        let noise = (rng.uniform() as f32 - 0.5) * 0.08;
+        *p = (*p + noise).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// A reproducible dataset of `n` samples with balanced classes.
+pub fn generate(n: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = Pcg64::new(seed, 0xD1617);
+    (0..n)
+        .map(|i| {
+            let label = i % N_CLASSES;
+            Sample {
+                pixels: render_digit(label, &mut rng),
+                label,
+            }
+        })
+        .collect()
+}
+
+/// Mean per-class pixel correlation — a sanity measure that classes are
+/// distinguishable (used by tests; a degenerate generator would score
+/// near the off-class level).
+pub fn class_separability(samples: &[Sample]) -> (f64, f64) {
+    let mut same = Vec::new();
+    let mut diff = Vec::new();
+    for (i, a) in samples.iter().enumerate() {
+        for b in samples.iter().skip(i + 1) {
+            let corr = correlation(&a.pixels, &b.pixels);
+            if a.label == b.label {
+                same.push(corr);
+            } else {
+                diff.push(corr);
+            }
+        }
+    }
+    (
+        crate::util::stats::mean(&same),
+        crate::util::stats::mean(&diff),
+    )
+}
+
+fn correlation(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for (&x, &y) in a.iter().zip(b) {
+        let (x, y) = (x as f64 - ma, y as f64 - mb);
+        num += x * y;
+        da += x * x;
+        db += y * y;
+    }
+    num / (da.sqrt() * db.sqrt()).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn templates_are_all_7x7() {
+        for (d, t) in TEMPLATES.iter().enumerate() {
+            let lines: Vec<&str> = t.lines().collect();
+            assert_eq!(lines.len(), 7, "digit {d} rows");
+            for l in lines {
+                assert_eq!(l.len(), 7, "digit {d} cols");
+            }
+            assert!(!template_points(d).is_empty());
+        }
+    }
+
+    #[test]
+    fn images_are_valid() {
+        let data = generate(40, 1);
+        assert_eq!(data.len(), 40);
+        for s in &data {
+            assert_eq!(s.pixels.len(), IMG_PIXELS);
+            assert!(s.label < N_CLASSES);
+            assert!(s.pixels.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            // a digit must have meaningful ink
+            let ink: f32 = s.pixels.iter().sum();
+            assert!(ink > 10.0, "label {} ink {ink}", s.label);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(10, 7);
+        let b = generate(10, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.pixels, y.pixels);
+        }
+        let c = generate(10, 8);
+        assert_ne!(a[0].pixels, c[0].pixels);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        let data = generate(60, 2);
+        let (same, diff) = class_separability(&data);
+        assert!(
+            same > diff + 0.15,
+            "within-class corr {same:.3} must exceed between-class {diff:.3}"
+        );
+    }
+
+    #[test]
+    fn augmentation_varies_within_class() {
+        let data = generate(40, 3);
+        let zeros: Vec<&Sample> = data.iter().filter(|s| s.label == 0).collect();
+        assert!(zeros.len() >= 2);
+        assert_ne!(zeros[0].pixels, zeros[1].pixels);
+    }
+}

@@ -1,0 +1,9 @@
+//! MNIST online-learning workload (Table II) over the synthetic digit
+//! corpus (MNIST itself is download-gated in this environment — see
+//! DESIGN.md §2 for why the substitution preserves the comparison).
+
+pub mod data;
+pub mod train;
+
+pub use data::{generate, Sample, IMG_PIXELS, N_CLASSES};
+pub use train::{MnistConfig, OnlineMnist, UpdateRule};

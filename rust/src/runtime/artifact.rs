@@ -1,0 +1,219 @@
+//! Artifact registry: locates `artifacts/*.hlo.txt` + `.meta` sidecars
+//! emitted by `python/compile/aot.py` and validates the runtime contract
+//! (argument order, geometry).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Argument order of every step artifact — must match
+/// `python/compile/model.py::ARG_ORDER`.
+pub const ARG_ORDER: [&str; 10] = [
+    "w1", "w2", "v1", "v2", "t_in", "t_hid", "t_out", "theta1", "theta2", "spikes",
+];
+
+/// Output order — must match `model.py::OUT_ORDER`.
+pub const OUT_ORDER: [&str; 8] = [
+    "w1", "w2", "v1", "v2", "t_in", "t_hid", "t_out", "out_spikes",
+];
+
+/// Artifact variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Inference + plasticity (`<geom>_step`).
+    Step,
+    /// Inference only (`<geom>_fwd`) — baseline serving.
+    Fwd,
+}
+
+impl Variant {
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Variant::Step => "step",
+            Variant::Fwd => "fwd",
+        }
+    }
+}
+
+/// Parsed `.meta` sidecar.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub variant: String,
+    pub n_in: usize,
+    pub n_hidden: usize,
+    pub n_out: usize,
+    pub hlo_path: PathBuf,
+}
+
+impl ArtifactMeta {
+    pub fn parse(meta_path: &Path) -> Result<ArtifactMeta, String> {
+        let text = std::fs::read_to_string(meta_path)
+            .map_err(|e| format!("read {}: {e}", meta_path.display()))?;
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| {
+            kv.get(k)
+                .cloned()
+                .ok_or_else(|| format!("{}: missing key {k}", meta_path.display()))
+        };
+        let parse_n = |k: &str| -> Result<usize, String> {
+            get(k)?.parse().map_err(|e| format!("{k}: {e}"))
+        };
+        // Validate the argument-order contract.
+        let args = get("args")?;
+        let expected = ARG_ORDER.join(",");
+        if args != expected {
+            return Err(format!(
+                "{}: arg order mismatch\n  artifact: {args}\n  runtime:  {expected}",
+                meta_path.display()
+            ));
+        }
+        let hlo_path = meta_path.with_extension("hlo.txt");
+        if !hlo_path.exists() {
+            return Err(format!("missing HLO file {}", hlo_path.display()));
+        }
+        Ok(ArtifactMeta {
+            name: get("name")?,
+            variant: get("variant")?,
+            n_in: parse_n("n_in")?,
+            n_hidden: parse_n("n_hidden")?,
+            n_out: parse_n("n_out")?,
+            hlo_path,
+        })
+    }
+}
+
+/// Registry over an artifacts directory.
+pub struct Registry {
+    pub dir: PathBuf,
+    entries: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    /// Default artifact locations: `$FIREFLY_ARTIFACTS`, then
+    /// `./artifacts`, then the crate-root artifacts dir.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("FIREFLY_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let cwd = PathBuf::from("artifacts");
+        if cwd.is_dir() {
+            return cwd;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn open_default() -> Result<Registry, String> {
+        Self::open(&Self::default_dir())
+    }
+
+    pub fn open(dir: &Path) -> Result<Registry, String> {
+        if !dir.is_dir() {
+            return Err(format!(
+                "artifact directory {} not found — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        let mut entries = Vec::new();
+        let mut errors = Vec::new();
+        for e in std::fs::read_dir(dir).map_err(|e| e.to_string())? {
+            let path = e.map_err(|e| e.to_string())?.path();
+            if path.extension().and_then(|x| x.to_str()) == Some("meta") {
+                match ArtifactMeta::parse(&path) {
+                    Ok(m) => entries.push(m),
+                    Err(err) => errors.push(err),
+                }
+            }
+        }
+        if entries.is_empty() {
+            return Err(format!(
+                "no artifacts in {} ({}) — run `make artifacts`",
+                dir.display(),
+                errors.join("; ")
+            ));
+        }
+        entries.sort_by(|a, b| (a.name.clone(), a.variant.clone()).cmp(&(b.name.clone(), b.variant.clone())));
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn list(&self) -> &[ArtifactMeta] {
+        &self.entries
+    }
+
+    pub fn find(&self, geometry: &str, variant: Variant) -> Option<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .find(|m| m.name == geometry && m.variant == variant.suffix())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_meta(dir: &Path, name: &str, good: bool) {
+        let args = if good {
+            ARG_ORDER.join(",")
+        } else {
+            "w1,w2".to_string()
+        };
+        std::fs::write(
+            dir.join(format!("{name}.meta")),
+            format!(
+                "name=tiny\nvariant=step\nn_in=8\nn_hidden=16\nn_out=4\nargs={args}\noutputs={}\ndtype=f32\n",
+                OUT_ORDER.join(",")
+            ),
+        )
+        .unwrap();
+        std::fs::write(dir.join(format!("{name}.hlo.txt")), "HloModule fake").unwrap();
+    }
+
+    #[test]
+    fn parses_valid_meta() {
+        let dir = std::env::temp_dir().join("fireflyp_art_test1");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_meta(&dir, "tiny_step", true);
+        let reg = Registry::open(&dir).unwrap();
+        let m = reg.find("tiny", Variant::Step).unwrap();
+        assert_eq!((m.n_in, m.n_hidden, m.n_out), (8, 16, 4));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_arg_order_mismatch() {
+        let dir = std::env::temp_dir().join("fireflyp_art_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_meta(&dir, "bad_step", false);
+        assert!(Registry::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let err = match Registry::open(Path::new("/nonexistent/artifacts")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_artifacts_parse_if_built() {
+        let dir = Registry::default_dir();
+        if !dir.is_dir() {
+            return; // artifacts not built in this checkout
+        }
+        let reg = Registry::open(&dir).unwrap();
+        for geom in ["tiny", "ant", "cheetah", "reacher", "mnist"] {
+            assert!(reg.find(geom, Variant::Step).is_some(), "missing {geom}_step");
+            assert!(reg.find(geom, Variant::Fwd).is_some(), "missing {geom}_fwd");
+        }
+    }
+}

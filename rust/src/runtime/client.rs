@@ -1,0 +1,83 @@
+//! PJRT CPU client wrapper with a compile cache.
+//!
+//! Compilation is the expensive one-time cost (tens of ms per artifact);
+//! executables are cached by path so the coordinator, benches and
+//! examples can all say `XlaClient::global()` and share work.
+//!
+//! The `xla` crate's handles are `!Send` (Rc-backed), so the client is
+//! **per-thread**: `global()` returns this thread's instance. The
+//! request path is single-threaded by design (the paper's accelerator
+//! is one pipeline; parallelism lives in the ES rollout fan-out, which
+//! uses the native backend).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use super::artifact::ArtifactMeta;
+use super::executor::SnnStepExecutable;
+
+pub struct XlaClient {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+thread_local! {
+    static THREAD_CLIENT: RefCell<Option<Rc<XlaClient>>> = const { RefCell::new(None) };
+}
+
+impl XlaClient {
+    pub fn new() -> Result<XlaClient, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e:?}"))?;
+        Ok(XlaClient {
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// This thread's shared client (PJRT clients are heavyweight).
+    pub fn global() -> Result<Rc<XlaClient>, String> {
+        THREAD_CLIENT.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            if let Some(c) = slot.as_ref() {
+                return Ok(Rc::clone(c));
+            }
+            let c = Rc::new(XlaClient::new()?);
+            *slot = Some(Rc::clone(&c));
+            Ok(c)
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text file (cached per thread).
+    pub fn compile_hlo_text(
+        &self,
+        path: &Path,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>, String> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(Rc::clone(exe));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or("non-utf8 path")?)
+            .map_err(|e| format!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {}: {e:?}", path.display()))?;
+        let exe = Rc::new(exe);
+        self.cache
+            .borrow_mut()
+            .insert(path.to_path_buf(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Load an SNN step artifact into a ready-to-run executable wrapper.
+    pub fn load(self: &Rc<Self>, meta: &ArtifactMeta) -> Result<SnnStepExecutable, String> {
+        let exe = self.compile_hlo_text(&meta.hlo_path)?;
+        Ok(SnnStepExecutable::new(meta.clone(), exe))
+    }
+}

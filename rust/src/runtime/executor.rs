@@ -1,0 +1,161 @@
+//! The request-path executor: owns the network state as XLA literals and
+//! advances it one timestep per call by executing the AOT artifact.
+//!
+//! State layout follows the artifact contract (`ARG_ORDER`): the nine
+//! state arrays stay resident as `xla::Literal`s between steps — only
+//! the input spike vector is built per call and only the output spike
+//! vector is copied out, so the steady-state loop does no Python, no
+//! recompilation, and no full-state host round-trips beyond what the
+//! CPU PJRT client requires for argument passing.
+
+use std::rc::Rc;
+
+use super::artifact::ArtifactMeta;
+
+/// A loaded SNN step executable + resident state.
+pub struct SnnStepExecutable {
+    pub meta: ArtifactMeta,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    /// Resident state in ARG_ORDER[0..9]: w1 w2 v1 v2 t_in t_hid t_out
+    /// theta1 theta2.
+    state: Vec<xla::Literal>,
+    /// Reusable staging for the spike input.
+    spike_host: Vec<f32>,
+    pub steps_executed: u64,
+}
+
+impl SnnStepExecutable {
+    pub fn new(meta: ArtifactMeta, exe: Rc<xla::PjRtLoadedExecutable>) -> SnnStepExecutable {
+        let (n_in, n_h, n_o) = (meta.n_in, meta.n_hidden, meta.n_out);
+        let zeros = |dims: &[i64]| -> xla::Literal {
+            let n: i64 = dims.iter().product();
+            xla::Literal::vec1(&vec![0f32; n as usize])
+                .reshape(dims)
+                .expect("zero literal")
+        };
+        let state = vec![
+            zeros(&[n_in as i64, n_h as i64]),
+            zeros(&[n_h as i64, n_o as i64]),
+            zeros(&[n_h as i64]),
+            zeros(&[n_o as i64]),
+            zeros(&[n_in as i64]),
+            zeros(&[n_h as i64]),
+            zeros(&[n_o as i64]),
+            zeros(&[4, n_in as i64, n_h as i64]),
+            zeros(&[4, n_h as i64, n_o as i64]),
+        ];
+        SnnStepExecutable {
+            spike_host: vec![0.0; n_in],
+            state,
+            exe,
+            meta,
+            steps_executed: 0,
+        }
+    }
+
+    /// Install the frozen rule θ (planes flattened `[4, pre, post]`).
+    pub fn set_rule(&mut self, theta1: &[f32], theta2: &[f32]) -> Result<(), String> {
+        let (n_in, n_h, n_o) = (self.meta.n_in, self.meta.n_hidden, self.meta.n_out);
+        if theta1.len() != 4 * n_in * n_h || theta2.len() != 4 * n_h * n_o {
+            return Err(format!(
+                "rule size mismatch: got ({}, {}), want ({}, {})",
+                theta1.len(),
+                theta2.len(),
+                4 * n_in * n_h,
+                4 * n_h * n_o
+            ));
+        }
+        self.state[7] = xla::Literal::vec1(theta1)
+            .reshape(&[4, n_in as i64, n_h as i64])
+            .map_err(|e| format!("{e:?}"))?;
+        self.state[8] = xla::Literal::vec1(theta2)
+            .reshape(&[4, n_h as i64, n_o as i64])
+            .map_err(|e| format!("{e:?}"))?;
+        Ok(())
+    }
+
+    /// Install fixed weights (baseline / fwd-variant serving).
+    pub fn set_weights(&mut self, w1: &[f32], w2: &[f32]) -> Result<(), String> {
+        let (n_in, n_h, n_o) = (self.meta.n_in, self.meta.n_hidden, self.meta.n_out);
+        if w1.len() != n_in * n_h || w2.len() != n_h * n_o {
+            return Err("weight size mismatch".into());
+        }
+        self.state[0] = xla::Literal::vec1(w1)
+            .reshape(&[n_in as i64, n_h as i64])
+            .map_err(|e| format!("{e:?}"))?;
+        self.state[1] = xla::Literal::vec1(w2)
+            .reshape(&[n_h as i64, n_o as i64])
+            .map_err(|e| format!("{e:?}"))?;
+        Ok(())
+    }
+
+    /// Reset dynamic state (weights only in plastic deployments, where
+    /// Phase 2 starts from w = 0; pass `reset_weights=false` to keep
+    /// installed baseline weights).
+    pub fn reset(&mut self, reset_weights: bool) {
+        let (n_in, n_h, n_o) = (self.meta.n_in, self.meta.n_hidden, self.meta.n_out);
+        let zeros = |dims: &[i64]| -> xla::Literal {
+            let n: i64 = dims.iter().product();
+            xla::Literal::vec1(&vec![0f32; n as usize]).reshape(dims).unwrap()
+        };
+        if reset_weights {
+            self.state[0] = zeros(&[n_in as i64, n_h as i64]);
+            self.state[1] = zeros(&[n_h as i64, n_o as i64]);
+        }
+        self.state[2] = zeros(&[n_h as i64]);
+        self.state[3] = zeros(&[n_o as i64]);
+        self.state[4] = zeros(&[n_in as i64]);
+        self.state[5] = zeros(&[n_h as i64]);
+        self.state[6] = zeros(&[n_o as i64]);
+        self.steps_executed = 0;
+    }
+
+    /// One timestep: returns the output spike vector.
+    pub fn step(&mut self, input_spikes: &[bool]) -> Result<Vec<bool>, String> {
+        assert_eq!(input_spikes.len(), self.meta.n_in, "input width mismatch");
+        for (h, &s) in self.spike_host.iter_mut().zip(input_spikes) {
+            *h = if s { 1.0 } else { 0.0 };
+        }
+        let spikes = xla::Literal::vec1(&self.spike_host);
+
+        // `fwd` variants never read θ, and XLA's lowering elides unused
+        // entry parameters — those artifacts take 8 arguments, not 10.
+        let n_state = if self.meta.variant == "fwd" { 7 } else { 9 };
+        let mut args: Vec<&xla::Literal> = self.state.iter().take(n_state).collect();
+        args.push(&spikes);
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| format!("execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch: {e:?}"))?;
+        let mut outs = tuple.to_tuple().map_err(|e| format!("untuple: {e:?}"))?;
+        if outs.len() != 8 {
+            return Err(format!("expected 8 outputs, got {}", outs.len()));
+        }
+        let out_spikes_lit = outs.pop().unwrap();
+        // outs now holds the 7 updated state arrays in OUT_ORDER.
+        for (slot, new) in self.state.iter_mut().take(7).zip(outs.into_iter()) {
+            *slot = new;
+        }
+        let out_f32: Vec<f32> = out_spikes_lit
+            .to_vec::<f32>()
+            .map_err(|e| format!("spike out: {e:?}"))?;
+        self.steps_executed += 1;
+        Ok(out_f32.into_iter().map(|x| x > 0.5).collect())
+    }
+
+    /// Snapshot part of the state as f32 (diagnostics + equivalence
+    /// tests). `idx` follows ARG_ORDER.
+    pub fn state_f32(&self, idx: usize) -> Result<Vec<f32>, String> {
+        self.state[idx]
+            .to_vec::<f32>()
+            .map_err(|e| format!("{e:?}"))
+    }
+
+    /// Output traces (for action decoding).
+    pub fn output_traces(&self) -> Result<Vec<f32>, String> {
+        self.state_f32(6)
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them on the request path. This is the **only** place the system
+//! touches XLA at runtime — Python is build-time-only (`make artifacts`).
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, Registry, Variant};
+pub use client::XlaClient;
+pub use executor::SnnStepExecutable;

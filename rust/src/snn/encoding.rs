@@ -1,0 +1,235 @@
+//! Observation → spike encoding and spike → action decoding.
+//!
+//! The paper feeds continuous observations to the SNN controller and
+//! reads continuous actions out; the concrete codecs are standard SNN-RL
+//! practice and mirror what the FireFly-P hardware's I/O stage performs:
+//!
+//! - **Population coding** (control): each observation dimension is
+//!   represented by `k` neurons with Gaussian tuning curves over the
+//!   dimension's range; firing probability per step = tuning activation.
+//!   Deterministic variant thresholds the activation.
+//! - **Poisson rate coding** (MNIST): pixel intensity → spike probability.
+//! - **Trace decoding** (actions): output-neuron traces, normalized by
+//!   the trace saturation 1/(1−λ), mapped through tanh to [−1, 1] per
+//!   action dimension.
+
+use crate::util::rng::Pcg64;
+
+/// Population encoder: `dims × neurons_per_dim` Gaussian tuning curves.
+#[derive(Clone, Debug)]
+pub struct PopulationEncoder {
+    pub dims: usize,
+    pub neurons_per_dim: usize,
+    /// Per-dimension (lo, hi) observation ranges.
+    pub ranges: Vec<(f32, f32)>,
+    /// Tuning width as a fraction of the inter-center spacing.
+    pub width_factor: f32,
+    /// Deterministic (activation > 0.5 fires) vs stochastic Bernoulli.
+    pub stochastic: bool,
+}
+
+impl PopulationEncoder {
+    pub fn new(dims: usize, neurons_per_dim: usize, ranges: Vec<(f32, f32)>) -> Self {
+        assert_eq!(ranges.len(), dims);
+        assert!(neurons_per_dim >= 2);
+        PopulationEncoder {
+            dims,
+            neurons_per_dim,
+            ranges,
+            width_factor: 1.0,
+            stochastic: false,
+        }
+    }
+
+    /// Uniform-range constructor.
+    pub fn symmetric(dims: usize, neurons_per_dim: usize, half_range: f32) -> Self {
+        Self::new(
+            dims,
+            neurons_per_dim,
+            vec![(-half_range, half_range); dims],
+        )
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.dims * self.neurons_per_dim
+    }
+
+    /// Tuning activation in [0, 1] for every encoder neuron.
+    pub fn activations(&self, obs: &[f32], out: &mut [f32]) {
+        assert_eq!(obs.len(), self.dims);
+        assert_eq!(out.len(), self.n_neurons());
+        for d in 0..self.dims {
+            let (lo, hi) = self.ranges[d];
+            let span = hi - lo;
+            let spacing = span / (self.neurons_per_dim - 1) as f32;
+            let sigma = self.width_factor * spacing;
+            let x = obs[d].clamp(lo, hi);
+            for k in 0..self.neurons_per_dim {
+                let center = lo + spacing * k as f32;
+                let z = (x - center) / sigma;
+                out[d * self.neurons_per_dim + k] = (-0.5 * z * z).exp();
+            }
+        }
+    }
+
+    /// Encode one observation into spikes.
+    pub fn encode(&self, obs: &[f32], rng: &mut Pcg64, spikes: &mut [bool]) {
+        let mut act = vec![0.0f32; self.n_neurons()];
+        self.activations(obs, &mut act);
+        for (s, &a) in spikes.iter_mut().zip(&act) {
+            *s = if self.stochastic {
+                rng.bernoulli(a as f64)
+            } else {
+                a > 0.5
+            };
+        }
+    }
+}
+
+/// Poisson rate encoder for images: intensity in [0,1] → Bernoulli(p·scale).
+#[derive(Clone, Debug)]
+pub struct RateEncoder {
+    /// Maximum per-step firing probability for a saturated pixel.
+    pub max_rate: f64,
+}
+
+impl RateEncoder {
+    pub fn new(max_rate: f64) -> Self {
+        assert!((0.0..=1.0).contains(&max_rate));
+        RateEncoder { max_rate }
+    }
+
+    pub fn encode(&self, intensities: &[f32], rng: &mut Pcg64, spikes: &mut [bool]) {
+        assert_eq!(intensities.len(), spikes.len());
+        for (s, &x) in spikes.iter_mut().zip(intensities) {
+            *s = rng.bernoulli((x.clamp(0.0, 1.0) as f64) * self.max_rate);
+        }
+    }
+}
+
+/// Trace-based action decoder. With `pairs = true`, each action dimension
+/// reads two output neurons (positive/negative) and returns the tanh of
+/// their scaled difference — lets a purely excitatory readout express
+/// signed actions.
+#[derive(Clone, Debug)]
+pub struct TraceDecoder {
+    pub action_dims: usize,
+    pub pairs: bool,
+    /// Gain before tanh.
+    pub gain: f32,
+    /// Trace saturation (1/(1−λ)) used for normalization.
+    pub trace_sat: f32,
+}
+
+impl TraceDecoder {
+    pub fn new(action_dims: usize, lambda: f32) -> Self {
+        TraceDecoder {
+            action_dims,
+            pairs: true,
+            gain: 2.0,
+            trace_sat: 1.0 / (1.0 - lambda),
+        }
+    }
+
+    /// Number of output neurons this decoder expects.
+    pub fn n_neurons(&self) -> usize {
+        if self.pairs {
+            2 * self.action_dims
+        } else {
+            self.action_dims
+        }
+    }
+
+    pub fn decode(&self, traces: &[f32], actions: &mut [f32]) {
+        assert_eq!(traces.len(), self.n_neurons());
+        assert_eq!(actions.len(), self.action_dims);
+        for d in 0..self.action_dims {
+            let raw = if self.pairs {
+                (traces[2 * d] - traces[2 * d + 1]) / self.trace_sat
+            } else {
+                traces[d] / self.trace_sat * 2.0 - 1.0
+            };
+            actions[d] = (self.gain * raw).tanh();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn population_peaks_at_center() {
+        let enc = PopulationEncoder::symmetric(1, 5, 1.0);
+        let mut act = vec![0.0; 5];
+        enc.activations(&[0.0], &mut act); // center of range → middle neuron
+        let (argmax, _) = act
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        assert_eq!(argmax, 2);
+        assert!((act[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn population_encodes_extremes_distinctly() {
+        let enc = PopulationEncoder::symmetric(1, 8, 2.0);
+        let mut lo = vec![false; 8];
+        let mut hi = vec![false; 8];
+        let mut rng = Pcg64::new(0, 0);
+        enc.encode(&[-2.0], &mut rng, &mut lo);
+        enc.encode(&[2.0], &mut rng, &mut hi);
+        assert_ne!(lo, hi);
+        assert!(lo[0]);
+        assert!(hi[7]);
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let enc = PopulationEncoder::symmetric(1, 5, 1.0);
+        let mut a = vec![0.0; 5];
+        let mut b = vec![0.0; 5];
+        enc.activations(&[10.0], &mut a);
+        enc.activations(&[1.0], &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rate_encoder_mean_rate() {
+        let enc = RateEncoder::new(0.8);
+        let mut rng = Pcg64::new(1, 0);
+        let mut count = 0usize;
+        let n = 20_000;
+        let mut spikes = vec![false; 1];
+        for _ in 0..n {
+            enc.encode(&[0.5], &mut rng, &mut spikes);
+            count += spikes[0] as usize;
+        }
+        let rate = count as f64 / n as f64;
+        assert!((rate - 0.4).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn decoder_sign_and_bounds() {
+        let dec = TraceDecoder::new(2, 0.5);
+        // pos neuron saturated, neg silent → strong positive action
+        let traces = vec![2.0, 0.0, 0.0, 2.0];
+        let mut actions = vec![0.0; 2];
+        dec.decode(&traces, &mut actions);
+        assert!(actions[0] > 0.9);
+        assert!(actions[1] < -0.9);
+        for a in &actions {
+            assert!((-1.0..=1.0).contains(a));
+        }
+    }
+
+    #[test]
+    fn decoder_zero_traces_zero_action() {
+        let dec = TraceDecoder::new(3, 0.5);
+        let traces = vec![0.0; 6];
+        let mut actions = vec![1.0; 3];
+        dec.decode(&traces, &mut actions);
+        assert_eq!(actions, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,18 @@
+//! SNN core: LIF dynamics, spike traces, the four-term plasticity rule,
+//! and the three-layer controller network — the software golden model of
+//! the computation FireFly-P performs (generic over f32 / bit-accurate
+//! FP16, so the same code validates both the XLA artifact and the FPGA
+//! simulator).
+
+pub mod encoding;
+pub mod lif;
+pub mod network;
+pub mod numeric;
+pub mod plasticity;
+pub mod trace;
+
+pub use lif::LifLayer;
+pub use network::{Mode, NetworkRule, SnnConfig, SnnNetwork};
+pub use numeric::Scalar;
+pub use plasticity::{PlasticityConfig, RuleParams};
+pub use trace::TraceVector;

@@ -1,0 +1,196 @@
+//! Numeric abstraction over the two arithmetic domains the system runs
+//! in: host `f32` (ES rollouts, XLA artifact) and bit-accurate IEEE
+//! binary16 [`F16`] (the FPGA datapath, §III-A of the paper).
+//!
+//! Every operation on [`Scalar`] rounds like a native ALU of that width:
+//! for `F16` each op converts to f32, computes, and rounds back with RNE —
+//! exactly one rounding per operation, matching a hardware FP16 FPU.
+
+use crate::util::fp16::F16;
+
+/// A scalar the SNN core can compute in.
+pub trait Scalar: Copy + Clone + PartialOrd + std::fmt::Debug + Send + Sync + 'static {
+    const ZERO: Self;
+    const ONE: Self;
+
+    fn from_f32(x: f32) -> Self;
+    fn to_f32(self) -> f32;
+
+    fn add(self, rhs: Self) -> Self;
+    fn sub(self, rhs: Self) -> Self;
+    fn mul(self, rhs: Self) -> Self;
+
+    /// `self * a + b` with the rounding profile of the target hardware:
+    /// f32 uses the host FMA; F16 models a DSP multiply-accumulate with a
+    /// wide internal accumulator (single terminal rounding).
+    fn mul_add(self, a: Self, b: Self) -> Self;
+
+    /// Halve (the τ_m = 2 LIF leak is implemented in hardware as a
+    /// shift/exponent decrement, never a multiplier — §III-B).
+    fn half(self) -> Self;
+
+    /// Saturating add used for weight accumulation (hardware saturates
+    /// rather than overflowing to ±inf).
+    fn saturating_add(self, rhs: Self) -> Self;
+
+    fn clamp(self, lo: Self, hi: Self) -> Self;
+
+    fn is_finite(self) -> bool;
+}
+
+impl Scalar for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+
+    #[inline]
+    fn from_f32(x: f32) -> f32 {
+        x
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+    #[inline]
+    fn add(self, rhs: f32) -> f32 {
+        self + rhs
+    }
+    #[inline]
+    fn sub(self, rhs: f32) -> f32 {
+        self - rhs
+    }
+    #[inline]
+    fn mul(self, rhs: f32) -> f32 {
+        self * rhs
+    }
+    #[inline]
+    fn mul_add(self, a: f32, b: f32) -> f32 {
+        f32::mul_add(self, a, b)
+    }
+    #[inline]
+    fn half(self) -> f32 {
+        self * 0.5
+    }
+    #[inline]
+    fn saturating_add(self, rhs: f32) -> f32 {
+        let s = self + rhs;
+        s.clamp(f32::MIN, f32::MAX)
+    }
+    #[inline]
+    fn clamp(self, lo: f32, hi: f32) -> f32 {
+        f32::clamp(self, lo, hi)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+}
+
+impl Scalar for F16 {
+    const ZERO: F16 = F16(0x0000);
+    const ONE: F16 = F16(0x3C00);
+
+    #[inline]
+    fn from_f32(x: f32) -> F16 {
+        F16::from_f32(x)
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        F16::to_f32(self)
+    }
+    #[inline]
+    fn add(self, rhs: F16) -> F16 {
+        self + rhs
+    }
+    #[inline]
+    fn sub(self, rhs: F16) -> F16 {
+        self - rhs
+    }
+    #[inline]
+    fn mul(self, rhs: F16) -> F16 {
+        self * rhs
+    }
+    #[inline]
+    fn mul_add(self, a: F16, b: F16) -> F16 {
+        F16::mul_add(self, a, b)
+    }
+    #[inline]
+    fn half(self) -> F16 {
+        // Exponent decrement: exact for normals; for subnormals shift the
+        // significand (exact halving in binary16 too, except sub-LSB which
+        // rounds — matching a barrel-shift hardware leak unit with RNE).
+        F16::from_f32(self.to_f32() * 0.5)
+    }
+    #[inline]
+    fn saturating_add(self, rhs: F16) -> F16 {
+        F16::from_f32_saturating(self.to_f32() + rhs.to_f32())
+    }
+    #[inline]
+    fn clamp(self, lo: F16, hi: F16) -> F16 {
+        self.max(lo).min(hi)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        F16::is_finite(self)
+    }
+}
+
+/// Quantize an f32 slice into the scalar domain.
+pub fn quantize_slice<S: Scalar>(xs: &[f32]) -> Vec<S> {
+    xs.iter().map(|&x| S::from_f32(x)).collect()
+}
+
+/// Dequantize back to f32 (for metrics / comparison).
+pub fn dequantize_slice<S: Scalar>(xs: &[S]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_identity() {
+        assert_eq!(f32::from_f32(1.25), 1.25);
+        assert_eq!(1.5f32.half(), 0.75);
+        assert_eq!(2.0f32.mul_add(3.0, 1.0), 7.0);
+    }
+
+    #[test]
+    fn f16_rounds_per_op() {
+        // 1 + 2^-11 rounds to 1 in f16, so adding it twice stays at 1 —
+        // while f32 would accumulate. This is the per-op rounding the
+        // hardware exhibits.
+        let one = F16::ONE;
+        let tiny = F16::from_f32(2f32.powi(-11));
+        assert!(tiny.to_f32() > 0.0); // representable as subnormal-ish value itself
+        let r = one.add(tiny).add(tiny);
+        assert_eq!(r.to_f32(), 1.0);
+    }
+
+    #[test]
+    fn half_is_exact_for_normals() {
+        for x in [1.0f32, 3.0, 0.125, -7.5, 1000.0] {
+            let h = F16::from_f32(x).half();
+            assert_eq!(h.to_f32(), x / 2.0);
+        }
+    }
+
+    #[test]
+    fn saturating_add_clamps() {
+        let max = F16::from_f32(65504.0);
+        let r = max.saturating_add(max);
+        assert_eq!(r.to_f32(), 65504.0);
+        let r = (F16::from_f32(-65504.0)).saturating_add(F16::from_f32(-65504.0));
+        assert_eq!(r.to_f32(), -65504.0);
+    }
+
+    #[test]
+    fn quantize_round_trip() {
+        let xs = vec![0.1f32, -2.5, 100.0];
+        let q: Vec<F16> = quantize_slice(&xs);
+        let back = dequantize_slice(&q);
+        for (a, b) in xs.iter().zip(back.iter()) {
+            assert!((a - b).abs() / a.abs().max(1.0) < 1e-3);
+        }
+    }
+}

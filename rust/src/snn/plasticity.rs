@@ -1,0 +1,323 @@
+//! The four-term parametric plasticity rule (§II-A) — the paper's core
+//! algorithmic contribution:
+//!
+//! ```text
+//! Δw_ij = α_ij·S_j·S_i  +  β_ij·S_j  +  γ_ij·S_i  +  δ_ij
+//!         └─ Associative ┘  └ Presyn ┘  └ Postsyn ┘  └ Decay ┘
+//! ```
+//!
+//! θ = {α, β, γ, δ} is learned **offline** by the evolution strategy
+//! (Phase 1) and then frozen; **online** (Phase 2) the rule continuously
+//! updates the synaptic weights starting from zero.
+//!
+//! Storage layout matches the hardware: the four coefficient planes are
+//! *packed per synapse* (`[α,β,γ,δ]` contiguous) so one wide memory read
+//! feeds all four multipliers of the Plasticity Engine — and, in the
+//! Pallas kernel, one VMEM tile fetch covers all four terms (see
+//! DESIGN.md §Hardware-Adaptation).
+
+use super::numeric::Scalar;
+use crate::util::rng::Pcg64;
+
+/// Per-synapse packed rule coefficients for one layer: `pre × post`
+/// synapses, 4 coefficients each, row-major `[pre][post][4]`.
+#[derive(Clone, Debug)]
+pub struct RuleParams {
+    pub pre: usize,
+    pub post: usize,
+    /// Packed [α, β, γ, δ] × (pre·post), f32 master copy (ES space).
+    pub theta: Vec<f32>,
+}
+
+pub const COEFFS_PER_SYNAPSE: usize = 4;
+
+impl RuleParams {
+    pub fn zeros(pre: usize, post: usize) -> Self {
+        RuleParams {
+            pre,
+            post,
+            theta: vec![0.0; pre * post * COEFFS_PER_SYNAPSE],
+        }
+    }
+
+    /// Random initialization for ES seeding: small centered Gaussians.
+    pub fn random(pre: usize, post: usize, sigma: f32, rng: &mut Pcg64) -> Self {
+        let mut p = Self::zeros(pre, post);
+        rng.fill_normal_f32(&mut p.theta, sigma);
+        p
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.theta.len()
+    }
+
+    #[inline]
+    pub fn idx(&self, j_pre: usize, i_post: usize) -> usize {
+        (j_pre * self.post + i_post) * COEFFS_PER_SYNAPSE
+    }
+
+    /// The packed quadruple for synapse (j → i).
+    #[inline]
+    pub fn coeffs(&self, j_pre: usize, i_post: usize) -> [f32; 4] {
+        let k = self.idx(j_pre, i_post);
+        [
+            self.theta[k],
+            self.theta[k + 1],
+            self.theta[k + 2],
+            self.theta[k + 3],
+        ]
+    }
+
+    /// Copy from a flat ES genome segment.
+    pub fn load_flat(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.theta.len());
+        self.theta.copy_from_slice(flat);
+    }
+
+    /// Split coefficient planes: returns (α, β, γ, δ) as `pre×post`
+    /// row-major matrices — the layout the XLA artifact consumes
+    /// (stacked `[4, pre, post]`).
+    pub fn unpack_planes(&self) -> [Vec<f32>; 4] {
+        let n = self.pre * self.post;
+        let mut planes = [vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]];
+        for s in 0..n {
+            for c in 0..4 {
+                planes[c][s] = self.theta[s * 4 + c];
+            }
+        }
+        planes
+    }
+
+    /// Inverse of [`unpack_planes`].
+    pub fn from_planes(pre: usize, post: usize, planes: &[Vec<f32>; 4]) -> Self {
+        let n = pre * post;
+        let mut p = Self::zeros(pre, post);
+        for s in 0..n {
+            for c in 0..4 {
+                p.theta[s * 4 + c] = planes[c][s];
+            }
+        }
+        p
+    }
+}
+
+/// Hyper-parameters of the online update.
+#[derive(Clone, Copy, Debug)]
+pub struct PlasticityConfig {
+    /// Global learning-rate scale η applied to Δw (the paper folds this
+    /// into θ; keeping it explicit lets the ES search a normalized space).
+    pub eta: f32,
+    /// Symmetric weight clip: w ∈ [−w_clip, +w_clip]. Bounded weights are
+    /// what δ's "synaptic regularization" stabilizes; the clip is the
+    /// hardware's saturation backstop.
+    pub w_clip: f32,
+}
+
+impl Default for PlasticityConfig {
+    fn default() -> Self {
+        PlasticityConfig {
+            eta: 0.05,
+            w_clip: 4.0,
+        }
+    }
+}
+
+/// Apply one plasticity step to a layer's weight matrix.
+///
+/// `weights` is `pre × post` row-major. `pre_trace`/`post_trace` are the
+/// spike traces *after* this timestep's trace update — the paper computes
+/// the synaptic update "based on the spike traces from the current
+/// timestep" (§III-C Phase A).
+///
+/// Generic over the scalar domain so the identical code path serves the
+/// f32 golden model and the FP16 FPGA-equivalent model.
+pub fn apply_update<S: Scalar>(
+    params: &RuleParams,
+    cfg: &PlasticityConfig,
+    weights: &mut [S],
+    pre_trace: &[S],
+    post_trace: &[S],
+) {
+    assert_eq!(weights.len(), params.pre * params.post);
+    assert_eq!(pre_trace.len(), params.pre);
+    assert_eq!(post_trace.len(), params.post);
+    let eta = S::from_f32(cfg.eta);
+    let lo = S::from_f32(-cfg.w_clip);
+    let hi = S::from_f32(cfg.w_clip);
+
+    for j in 0..params.pre {
+        let sj = pre_trace[j];
+        let row = j * params.post;
+        for i in 0..params.post {
+            let si = post_trace[i];
+            let k = (row + i) * COEFFS_PER_SYNAPSE;
+            let coeffs = [
+                S::from_f32(params.theta[k]),
+                S::from_f32(params.theta[k + 1]),
+                S::from_f32(params.theta[k + 2]),
+                S::from_f32(params.theta[k + 3]),
+            ];
+            let w = &mut weights[row + i];
+            *w = update_synapse(coeffs, eta, lo, hi, *w, sj, si);
+        }
+    }
+}
+
+/// One synapse's update — the exact datapath of the Plasticity Engine
+/// (four parallel products + pipelined adder tree + scaled saturating
+/// accumulate). Shared by the golden model and the FPGA simulator so
+/// both are bit-identical by construction:
+/// `w' = clamp(w ⊕ η·((α·Sj·Si + β·Sj) + (γ·Si + δ)))`.
+#[inline]
+pub fn update_synapse<S: Scalar>(
+    coeffs: [S; 4],
+    eta: S,
+    lo: S,
+    hi: S,
+    w: S,
+    sj: S,
+    si: S,
+) -> S {
+    let [alpha, beta, gamma, delta] = coeffs;
+    let assoc = alpha.mul(sj).mul(si);
+    let presyn = beta.mul(sj);
+    let postsyn = gamma.mul(si);
+    let t0 = assoc.add(presyn);
+    let t1 = postsyn.add(delta);
+    let dw = t0.add(t1);
+    w.saturating_add(eta.mul(dw)).clamp(lo, hi)
+}
+
+/// Reference Δw for a single synapse in f64 (oracle for tests).
+pub fn delta_w_reference(coeffs: [f32; 4], sj: f32, si: f32) -> f64 {
+    let [a, b, g, d] = coeffs;
+    a as f64 * sj as f64 * si as f64 + b as f64 * sj as f64 + g as f64 * si as f64 + d as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fp16::F16;
+
+    fn simple_params() -> RuleParams {
+        let mut p = RuleParams::zeros(2, 3);
+        // synapse (0,0): pure Hebbian α=1
+        let k00 = p.idx(0, 0);
+        p.theta[k00] = 1.0;
+        // synapse (1,2): pure decay δ=−1
+        let k = p.idx(1, 2);
+        p.theta[k + 3] = -1.0;
+        p
+    }
+
+    #[test]
+    fn hebbian_term_strengthens_correlated() {
+        let p = simple_params();
+        let cfg = PlasticityConfig {
+            eta: 1.0,
+            w_clip: 10.0,
+        };
+        let mut w = vec![0.0f32; 6];
+        let pre = vec![1.0f32, 0.0];
+        let post = vec![1.0f32, 0.0, 0.0];
+        apply_update(&p, &cfg, &mut w, &pre, &post);
+        assert_eq!(w[0], 1.0); // α·1·1
+        assert_eq!(w[1], 0.0);
+    }
+
+    #[test]
+    fn decay_term_reduces_weight_unconditionally() {
+        let p = simple_params();
+        let cfg = PlasticityConfig {
+            eta: 0.5,
+            w_clip: 10.0,
+        };
+        let mut w = vec![0.0f32; 6];
+        let pre = vec![0.0f32; 2];
+        let post = vec![0.0f32; 3];
+        apply_update(&p, &cfg, &mut w, &pre, &post);
+        // synapse (1,2) is index 1*3+2 = 5
+        assert_eq!(w[5], -0.5);
+    }
+
+    #[test]
+    fn clip_bounds_weights() {
+        let mut p = RuleParams::zeros(1, 1);
+        p.theta[1] = 100.0; // huge β
+        let cfg = PlasticityConfig {
+            eta: 1.0,
+            w_clip: 2.0,
+        };
+        let mut w = vec![0.0f32];
+        apply_update(&p, &cfg, &mut w, &[1.0], &[0.0]);
+        assert_eq!(w[0], 2.0);
+    }
+
+    #[test]
+    fn matches_reference_formula() {
+        let mut rng = Pcg64::new(1, 0);
+        let p = RuleParams::random(4, 5, 0.5, &mut rng);
+        let cfg = PlasticityConfig {
+            eta: 1.0,
+            w_clip: 1e9,
+        };
+        let mut w = vec![0.0f32; 20];
+        let pre: Vec<f32> = (0..4).map(|j| 0.25 * j as f32).collect();
+        let post: Vec<f32> = (0..5).map(|i| 0.5 * i as f32).collect();
+        apply_update(&p, &cfg, &mut w, &pre, &post);
+        for j in 0..4 {
+            for i in 0..5 {
+                let expect = delta_w_reference(p.coeffs(j, i), pre[j], post[i]);
+                let got = w[j * 5 + i] as f64;
+                assert!((got - expect).abs() < 1e-5, "({j},{i}): {got} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_update_close_to_f32() {
+        let mut rng = Pcg64::new(2, 0);
+        let p = RuleParams::random(8, 8, 0.3, &mut rng);
+        let cfg = PlasticityConfig::default();
+        let mut wf = vec![0.0f32; 64];
+        let mut wh = vec![F16::ZERO; 64];
+        let pre_f: Vec<f32> = (0..8).map(|j| (j as f32 * 0.3) % 2.0).collect();
+        let post_f: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7) % 2.0).collect();
+        let pre_h: Vec<F16> = pre_f.iter().map(|&x| F16::from_f32(x)).collect();
+        let post_h: Vec<F16> = post_f.iter().map(|&x| F16::from_f32(x)).collect();
+        for _ in 0..50 {
+            apply_update(&p, &cfg, &mut wf, &pre_f, &post_f);
+            apply_update(&p, &cfg, &mut wh, &pre_h, &post_h);
+        }
+        for k in 0..64 {
+            let err = (wf[k] - wh[k].to_f32()).abs();
+            assert!(err < 0.05, "synapse {k}: f32 {} vs f16 {}", wf[k], wh[k]);
+        }
+    }
+
+    #[test]
+    fn planes_round_trip() {
+        let mut rng = Pcg64::new(3, 0);
+        let p = RuleParams::random(3, 7, 1.0, &mut rng);
+        let planes = p.unpack_planes();
+        let q = RuleParams::from_planes(3, 7, &planes);
+        assert_eq!(p.theta, q.theta);
+    }
+
+    #[test]
+    fn zero_traces_only_delta_acts() {
+        let mut rng = Pcg64::new(4, 0);
+        let p = RuleParams::random(2, 2, 0.5, &mut rng);
+        let cfg = PlasticityConfig {
+            eta: 1.0,
+            w_clip: 100.0,
+        };
+        let mut w = vec![0.0f32; 4];
+        apply_update(&p, &cfg, &mut w, &[0.0, 0.0], &[0.0, 0.0]);
+        for j in 0..2 {
+            for i in 0..2 {
+                assert!((w[j * 2 + i] - p.coeffs(j, i)[3]).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! Minimal command-line argument parser (the offline registry has no
+//! `clap`). Supports subcommands, `--flag`, `--key value`, `--key=value`,
+//! positional arguments, typed accessors with defaults, and auto-generated
+//! `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative specification of one option.
+#[derive(Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Default, Debug, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get_f64(key, default as f64) as f32
+    }
+}
+
+/// Parser with subcommand registry.
+pub struct Parser {
+    pub program: &'static str,
+    pub about: &'static str,
+    commands: Vec<(&'static str, &'static str, Vec<OptSpec>)>,
+    global_opts: Vec<OptSpec>,
+}
+
+impl Parser {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Parser {
+            program,
+            about,
+            commands: Vec::new(),
+            global_opts: Vec::new(),
+        }
+    }
+
+    pub fn global_opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.global_opts.push(OptSpec {
+            name,
+            help,
+            default,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn command(mut self, name: &'static str, help: &'static str, opts: Vec<OptSpec>) -> Self {
+        self.commands.push((name, help, opts));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.program, self.about);
+        let _ = writeln!(s, "USAGE: {} <command> [options]\n", self.program);
+        let _ = writeln!(s, "COMMANDS:");
+        for (name, help, _) in &self.commands {
+            let _ = writeln!(s, "  {name:<18} {help}");
+        }
+        let _ = writeln!(s, "\nGLOBAL OPTIONS:");
+        for o in &self.global_opts {
+            let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(s, "  --{:<16} {}{}", o.name, o.help, d);
+        }
+        let _ = writeln!(s, "\nRun `{} <command> --help` for command options.", self.program);
+        s
+    }
+
+    pub fn command_help(&self, cmd: &str) -> String {
+        let mut s = String::new();
+        if let Some((name, help, opts)) = self.commands.iter().find(|(n, _, _)| *n == cmd) {
+            let _ = writeln!(s, "{} {} — {}\n\nOPTIONS:", self.program, name, help);
+            for o in opts.iter().chain(self.global_opts.iter()) {
+                let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                let kind = if o.is_flag { "(flag)" } else { "" };
+                let _ = writeln!(s, "  --{:<16} {} {}{}", o.name, o.help, kind, d);
+            }
+        }
+        s
+    }
+
+    /// Parse a raw argv (excluding argv[0]). Returns Err(help_text) when
+    /// help was requested or the input is malformed.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+
+        let cmd = match it.peek() {
+            None => return Err(self.help_text()),
+            Some(a) if *a == "--help" || *a == "-h" => return Err(self.help_text()),
+            Some(a) if a.starts_with('-') => None,
+            Some(_) => {
+                let c = it.next().unwrap().clone();
+                if !self.commands.iter().any(|(n, _, _)| *n == c) {
+                    return Err(format!("unknown command {c:?}\n\n{}", self.help_text()));
+                }
+                Some(c)
+            }
+        };
+        args.command = cmd.clone();
+
+        let specs: Vec<&OptSpec> = self
+            .commands
+            .iter()
+            .find(|(n, _, _)| Some(*n) == cmd.as_deref())
+            .map(|(_, _, o)| o.iter().collect::<Vec<_>>())
+            .unwrap_or_default()
+            .into_iter()
+            .chain(self.global_opts.iter())
+            .collect();
+
+        // Seed defaults.
+        for s in &specs {
+            if let Some(d) = s.default {
+                args.values.insert(s.name.to_string(), d.to_string());
+            }
+        }
+
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(match &cmd {
+                    Some(c) => self.command_help(c),
+                    None => self.help_text(),
+                });
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = specs.iter().find(|s| s.name == key);
+                let is_flag = spec.map(|s| s.is_flag).unwrap_or_else(|| {
+                    // Unknown option: treat as value-taking if followed by
+                    // a non-dash token, else as a flag. Lenient by design
+                    // so examples can pass through extra options.
+                    inline_val.is_none()
+                        && !matches!(it.peek(), Some(n) if !n.starts_with('-'))
+                });
+                if is_flag {
+                    args.flags.push(key);
+                } else if let Some(v) = inline_val {
+                    args.values.insert(key, v);
+                } else if let Some(v) = it.next() {
+                    args.values.insert(key, v.clone());
+                } else {
+                    return Err(format!("option --{key} expects a value"));
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+}
+
+/// Helper to build an OptSpec list tersely.
+pub fn opt(name: &'static str, help: &'static str, default: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: Some(default),
+        is_flag: false,
+    }
+}
+
+pub fn opt_req(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: None,
+        is_flag: false,
+    }
+}
+
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: None,
+        is_flag: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> Parser {
+        Parser::new("firefly-p", "test")
+            .global_opt("seed", "rng seed", Some("42"))
+            .command(
+                "adapt",
+                "run online adaptation",
+                vec![
+                    opt("env", "environment", "ant-dir"),
+                    opt("steps", "episode steps", "1000"),
+                    flag("fpga", "use the fpga simulator backend"),
+                ],
+            )
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let argv: Vec<String> = ["adapt", "--env", "reacher", "--steps=250", "--fpga"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = parser().parse(&argv).unwrap();
+        assert_eq!(a.command.as_deref(), Some("adapt"));
+        assert_eq!(a.get("env"), Some("reacher"));
+        assert_eq!(a.get_usize("steps", 0), 250);
+        assert!(a.flag("fpga"));
+        assert_eq!(a.get_u64("seed", 0), 42); // global default
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let argv = vec!["adapt".to_string()];
+        let a = parser().parse(&argv).unwrap();
+        assert_eq!(a.get("env"), Some("ant-dir"));
+        assert!(!a.flag("fpga"));
+    }
+
+    #[test]
+    fn help_is_err() {
+        let argv = vec!["--help".to_string()];
+        assert!(parser().parse(&argv).is_err());
+        let argv = vec!["adapt".to_string(), "--help".to_string()];
+        let err = parser().parse(&argv).unwrap_err();
+        assert!(err.contains("--env"));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let argv = vec!["bogus".to_string()];
+        assert!(parser().parse(&argv).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let argv: Vec<String> = ["adapt", "outfile.csv"].iter().map(|s| s.to_string()).collect();
+        let a = parser().parse(&argv).unwrap();
+        assert_eq!(a.positional, vec!["outfile.csv"]);
+    }
+}

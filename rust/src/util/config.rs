@@ -1,0 +1,284 @@
+//! Minimal configuration-file parser (TOML subset; no `serde`/`toml`
+//! offline). Supports `[section]` headers, `key = value` pairs with
+//! string / number / bool / flat-array values, `#` comments, and typed
+//! accessors. Every experiment binary can take `--config path.toml`;
+//! CLI options override file values.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Num(n) => write!(f, "{n}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::List(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parsed config: `section.key → value`. Keys outside any section live
+/// under the empty section `""`.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug)]
+pub struct ConfigError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner.strip_suffix(']').ok_or(ConfigError {
+                    line: lineno + 1,
+                    message: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or(ConfigError {
+                line: lineno + 1,
+                message: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = parse_value(val.trim()).map_err(|message| ConfigError {
+                line: lineno + 1,
+                message,
+            })?;
+            cfg.entries.insert(full_key, value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Config, Box<dyn std::error::Error>> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Config::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn f64_list(&self, key: &str) -> Option<Vec<f64>> {
+        self.get(key)
+            .and_then(|v| v.as_list())
+            .map(|l| l.iter().filter_map(|x| x.as_f64()).collect())
+    }
+
+    /// Merge another config on top of this one (other wins).
+    pub fn overlay(&mut self, other: &Config) {
+        for (k, v) in &other.entries {
+            self.entries.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.entries.insert(key.to_string(), value);
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated list".to_string())?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value {s:?} (bare strings must be quoted)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+seed = 42
+name = "fig3-ant"           # inline comment
+[es]
+population = 256
+sigma = 0.1
+adaptive = true
+[env]
+train_dirs = [0, 45, 90, 135, 180, 225, 270, 315]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.f64_or("seed", 0.0), 42.0);
+        assert_eq!(c.str_or("name", ""), "fig3-ant");
+        assert_eq!(c.usize_or("es.population", 0), 256);
+        assert_eq!(c.f64_or("es.sigma", 0.0), 0.1);
+        assert!(c.bool_or("es.adaptive", false));
+        assert_eq!(c.f64_list("env.train_dirs").unwrap().len(), 8);
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("nope", 7), 7);
+        assert_eq!(c.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn overlay_overrides() {
+        let mut base = Config::parse("a = 1\nb = 2").unwrap();
+        let top = Config::parse("b = 3").unwrap();
+        base.overlay(&top);
+        assert_eq!(base.f64_or("a", 0.0), 1.0);
+        assert_eq!(base.f64_or("b", 0.0), 3.0);
+    }
+
+    #[test]
+    fn bad_syntax_reports_line() {
+        let err = Config::parse("x = 1\noops").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Config::parse("x = bare").unwrap_err();
+        assert!(err.message.contains("quoted"));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let c = Config::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(c.str_or("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn empty_list() {
+        let c = Config::parse("xs = []").unwrap();
+        assert_eq!(c.f64_list("xs").unwrap().len(), 0);
+    }
+}

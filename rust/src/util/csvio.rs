@@ -1,0 +1,152 @@
+//! CSV writing for experiment outputs. All benchmark harnesses emit their
+//! tables/series through this module so EXPERIMENTS.md can point at stable
+//! file formats under `results/`.
+
+use std::fmt::Display;
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// A CSV writer with a fixed header checked against every row.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    pub path: PathBuf,
+    columns: usize,
+    rows: usize,
+}
+
+impl CsvWriter {
+    /// Create (and truncate) `path`, writing the header row. Parent
+    /// directories are created as needed.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<CsvWriter> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(&path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            path,
+            columns: header.len(),
+            rows: 0,
+        })
+    }
+
+    /// Write one row; panics if the column count mismatches the header
+    /// (a schema bug, not a runtime condition).
+    pub fn row(&mut self, fields: &[&dyn Display]) -> std::io::Result<()> {
+        assert_eq!(
+            fields.len(),
+            self.columns,
+            "csv row arity mismatch in {}",
+            self.path.display()
+        );
+        let mut line = String::new();
+        for (i, f) in fields.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&escape(&f.to_string()));
+        }
+        writeln!(self.out, "{line}")?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Convenience for all-numeric rows.
+    pub fn row_f64(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let refs: Vec<&dyn Display> = fields.iter().map(|f| f as &dyn Display).collect();
+        self.row(&refs)
+    }
+
+    pub fn rows_written(&self) -> usize {
+        self.rows
+    }
+
+    pub fn finish(mut self) -> std::io::Result<PathBuf> {
+        self.out.flush()?;
+        Ok(self.path)
+    }
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Read a CSV produced by [`CsvWriter`] back into (header, rows of
+/// strings). Only used by tests and the figure aggregator; handles the
+/// quoting `escape` can produce.
+pub fn read_csv(path: impl AsRef<Path>) -> std::io::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .map(|h| split_row(h))
+        .unwrap_or_default();
+    let rows = lines.map(split_row).collect();
+    Ok((header, rows))
+}
+
+fn split_row(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                fields.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_with_quoting() {
+        let dir = std::env::temp_dir().join("fireflyp_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["name", "value"]).unwrap();
+        w.row(&[&"plain", &1.5]).unwrap();
+        w.row(&[&"with,comma", &2.0]).unwrap();
+        w.row(&[&"with\"quote", &3.0]).unwrap();
+        assert_eq!(w.rows_written(), 3);
+        w.finish().unwrap();
+
+        let (header, rows) = read_csv(&path).unwrap();
+        assert_eq!(header, vec!["name", "value"]);
+        assert_eq!(rows[0], vec!["plain", "1.5"]);
+        assert_eq!(rows[1], vec!["with,comma", "2"]);
+        assert_eq!(rows[2], vec!["with\"quote", "3"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let dir = std::env::temp_dir().join("fireflyp_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        let _ = w.row(&[&1.0]);
+    }
+}

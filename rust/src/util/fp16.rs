@@ -1,0 +1,468 @@
+//! Bit-accurate IEEE 754 binary16 ("half", FP16) arithmetic.
+//!
+//! FireFly-P performs *all* on-chip arithmetic in FP16 (§III-A: "All
+//! computations employ 16-bit floating-point (FP16) arithmetic to balance
+//! sensitivity to small weight changes with resource efficiency"). The
+//! cycle-accurate FPGA simulator therefore needs a software FP16 that is
+//! bit-exact with an IEEE-compliant hardware FPU: correct subnormals,
+//! round-to-nearest-even, signed zero, infinities and NaN propagation.
+//!
+//! We implement binary16 as a `u16` newtype with conversion through f32.
+//! The f32→f16 rounding below is the classic round-to-nearest-even
+//! truncation of the f32 significand, which matches the behaviour of
+//! `vcvtps2ph` / Vivado's `floating_point` IP in RNE mode, so simulator
+//! numerics equal what the SpinalHDL design would compute.
+//!
+//! Arithmetic ops are defined as: convert to f32, compute exactly (every
+//! f16×f16 product and f16+f16 sum is exactly representable in f32's
+//! 24-bit significand... products always, sums after rounding — see the
+//! `exactness` test), round back to f16. For single operations this is
+//! equivalent to a native IEEE f16 ALU with RNE.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+/// IEEE 754 binary16 value, stored as its raw bit pattern.
+#[derive(Clone, Copy, Default, PartialEq, Eq)]
+pub struct F16(pub u16);
+
+pub const F16_ZERO: F16 = F16(0x0000);
+pub const F16_NEG_ZERO: F16 = F16(0x8000);
+pub const F16_ONE: F16 = F16(0x3C00);
+pub const F16_HALF: F16 = F16(0x3800);
+pub const F16_INFINITY: F16 = F16(0x7C00);
+pub const F16_NEG_INFINITY: F16 = F16(0xFC00);
+pub const F16_NAN: F16 = F16(0x7E00);
+/// Largest finite f16: 65504.0
+pub const F16_MAX: F16 = F16(0x7BFF);
+/// Smallest positive normal: 2^-14
+pub const F16_MIN_POSITIVE: F16 = F16(0x0400);
+/// Smallest positive subnormal: 2^-24
+pub const F16_MIN_SUBNORMAL: F16 = F16(0x0001);
+/// Machine epsilon for f16: 2^-10
+pub const F16_EPSILON: F16 = F16(0x1400);
+
+impl F16 {
+    /// Construct from raw bits.
+    #[inline]
+    pub const fn from_bits(bits: u16) -> Self {
+        F16(bits)
+    }
+
+    /// Raw bit pattern.
+    #[inline]
+    pub const fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Convert an f32 to f16 with round-to-nearest-even.
+    ///
+    /// Handles overflow→±inf, underflow→subnormals/±0, NaN payload
+    /// preservation (quietened).
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let frac = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // Inf or NaN.
+            return if frac == 0 {
+                F16(sign | 0x7C00)
+            } else {
+                // Quiet NaN, keep top payload bits.
+                F16(sign | 0x7C00 | 0x0200 | ((frac >> 13) as u16 & 0x01FF))
+            };
+        }
+
+        // Unbiased exponent.
+        let e = exp - 127;
+        if e > 15 {
+            // Overflow → infinity (RNE: anything > max rounds to inf).
+            return F16(sign | 0x7C00);
+        }
+        if e >= -14 {
+            // Normal range. 23-bit frac → 10-bit with RNE.
+            let mut f16_exp = (e + 15) as u16;
+            let mut f16_frac = (frac >> 13) as u16;
+            let round_bits = frac & 0x1FFF;
+            // Round to nearest, ties to even.
+            if round_bits > 0x1000 || (round_bits == 0x1000 && (f16_frac & 1) == 1) {
+                f16_frac += 1;
+                if f16_frac == 0x400 {
+                    f16_frac = 0;
+                    f16_exp += 1;
+                    if f16_exp >= 31 {
+                        return F16(sign | 0x7C00);
+                    }
+                }
+            }
+            return F16(sign | (f16_exp << 10) | f16_frac);
+        }
+        // Subnormal or zero. Effective significand = 1.frac * 2^e,
+        // to be expressed as 0.xxxx * 2^-14.
+        if e < -25 {
+            // Rounds to zero even with RNE (< half of min subnormal).
+            return F16(sign);
+        }
+        // Add the implicit leading 1 to get the 24-bit significand, then
+        // align to the subnormal grid. Value = sig · 2^(e−23); subnormal
+        // frac counts units of 2^-24, so frac10 = sig >> (−1 − e), with
+        // e ∈ [−25, −15] ⇒ shift ∈ [14, 24]. RNE on the dropped bits.
+        let sig = frac | 0x80_0000;
+        let shift_amt = (-1 - e) as u32;
+        let mut f16_frac = (sig >> shift_amt) as u16;
+        let dropped = sig & ((1u32 << shift_amt) - 1);
+        let half = 1u32 << (shift_amt - 1);
+        if dropped > half || (dropped == half && (f16_frac & 1) == 1) {
+            f16_frac += 1; // may carry into exponent — that's correct (becomes min normal)
+        }
+        F16(sign | f16_frac)
+    }
+
+    /// Convert to f32 (exact — every f16 is representable).
+    /// (§Perf note: a 64K-entry LUT was tried here and measured *slower*
+    /// — OnceLock check + L2 pressure beat the branchy compute — so the
+    /// direct computation stays.)
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & 0x8000) as u32) << 16;
+        let exp = ((self.0 >> 10) & 0x1F) as u32;
+        let frac = (self.0 & 0x3FF) as u32;
+        let bits = if exp == 0 {
+            if frac == 0 {
+                sign // ±0
+            } else {
+                // Subnormal: value = 0.frac × 2^-14; normalize to 1.f × 2^e.
+                let mut e = -14i32;
+                let mut f = frac;
+                while f & 0x400 == 0 {
+                    f <<= 1;
+                    e -= 1;
+                }
+                f &= 0x3FF;
+                sign | (((e + 127) as u32) << 23) | (f << 13)
+            }
+        } else if exp == 31 {
+            if frac == 0 {
+                sign | 0x7F80_0000
+            } else {
+                sign | 0x7FC0_0000 | (frac << 13)
+            }
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (frac << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7C00) != 0x7C00
+    }
+
+    #[inline]
+    pub fn is_sign_negative(self) -> bool {
+        self.0 & 0x8000 != 0
+    }
+
+    #[inline]
+    pub fn is_subnormal(self) -> bool {
+        (self.0 & 0x7C00) == 0 && (self.0 & 0x3FF) != 0
+    }
+
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 & 0x7FFF == 0
+    }
+
+    #[inline]
+    pub fn abs(self) -> Self {
+        F16(self.0 & 0x7FFF)
+    }
+
+    /// Fused multiply-add rounded once at the end: `self * a + b`.
+    ///
+    /// The Plasticity Engine's DSP blocks compute `coeff × trace` products
+    /// feeding an adder tree; modelling the DSP48E1's internal
+    /// higher-precision accumulate is done here via f32 intermediates
+    /// (exact for f16 products) with a single terminal rounding.
+    pub fn mul_add(self, a: F16, b: F16) -> Self {
+        F16::from_f32(self.to_f32() * a.to_f32() + b.to_f32())
+    }
+
+    /// Saturating conversion helper: clamp an f32 to the finite f16 range
+    /// before rounding. The FPGA datapath saturates instead of producing
+    /// infinities on accumulator overflow (standard practice for weight
+    /// storage); `snn::plasticity` uses this for weight updates.
+    pub fn from_f32_saturating(x: f32) -> Self {
+        if x.is_nan() {
+            return F16_NAN;
+        }
+        const MAX: f32 = 65504.0;
+        F16::from_f32(x.clamp(-MAX, MAX))
+    }
+
+    pub fn max(self, other: F16) -> F16 {
+        if self.is_nan() {
+            return other;
+        }
+        if other.is_nan() {
+            return self;
+        }
+        if self.to_f32() >= other.to_f32() {
+            self
+        } else {
+            other
+        }
+    }
+
+    pub fn min(self, other: F16) -> F16 {
+        if self.is_nan() {
+            return other;
+        }
+        if other.is_nan() {
+            return self;
+        }
+        if self.to_f32() <= other.to_f32() {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+impl Add for F16 {
+    type Output = F16;
+    #[inline]
+    fn add(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() + rhs.to_f32())
+    }
+}
+
+impl AddAssign for F16 {
+    #[inline]
+    fn add_assign(&mut self, rhs: F16) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for F16 {
+    type Output = F16;
+    #[inline]
+    fn sub(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() - rhs.to_f32())
+    }
+}
+
+impl Mul for F16 {
+    type Output = F16;
+    #[inline]
+    fn mul(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() * rhs.to_f32())
+    }
+}
+
+impl Div for F16 {
+    type Output = F16;
+    #[inline]
+    fn div(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() / rhs.to_f32())
+    }
+}
+
+impl Neg for F16 {
+    type Output = F16;
+    #[inline]
+    fn neg(self) -> F16 {
+        F16(self.0 ^ 0x8000)
+    }
+}
+
+impl PartialOrd for F16 {
+    fn partial_cmp(&self, other: &F16) -> Option<Ordering> {
+        self.to_f32().partial_cmp(&other.to_f32())
+    }
+}
+
+impl fmt::Debug for F16 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "F16({}={:#06x})", self.to_f32(), self.0)
+    }
+}
+
+impl fmt::Display for F16 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+impl From<f32> for F16 {
+    fn from(x: f32) -> F16 {
+        F16::from_f32(x)
+    }
+}
+
+impl From<F16> for f32 {
+    fn from(x: F16) -> f32 {
+        x.to_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_round_trip() {
+        assert_eq!(F16::from_f32(0.0).to_bits(), 0x0000);
+        assert_eq!(F16::from_f32(-0.0).to_bits(), 0x8000);
+        assert_eq!(F16::from_f32(1.0).to_bits(), 0x3C00);
+        assert_eq!(F16::from_f32(0.5).to_bits(), 0x3800);
+        assert_eq!(F16::from_f32(2.0).to_bits(), 0x4000);
+        assert_eq!(F16::from_f32(65504.0).to_bits(), 0x7BFF);
+        assert_eq!(F16::from_f32(f32::INFINITY).to_bits(), 0x7C00);
+        assert_eq!(F16::from_f32(f32::NEG_INFINITY).to_bits(), 0xFC00);
+    }
+
+    #[test]
+    fn overflow_saturates_to_infinity() {
+        assert!(F16::from_f32(65520.0).is_infinite()); // > max, rounds to inf
+        assert_eq!(F16::from_f32(65519.0).to_bits(), 0x7BFF); // rounds down to max
+        assert!(F16::from_f32(1e10).is_infinite());
+        assert_eq!(F16::from_f32_saturating(1e10).to_bits(), 0x7BFF);
+        assert_eq!(F16::from_f32_saturating(-1e10).to_bits(), 0xFBFF);
+    }
+
+    #[test]
+    fn subnormals() {
+        // 2^-24 = smallest subnormal
+        assert_eq!(F16::from_f32(5.960_464_5e-8).to_bits(), 0x0001);
+        assert_eq!(F16(0x0001).to_f32(), 5.960_464_5e-8);
+        // 2^-25 is exactly half of min subnormal → ties-to-even → 0
+        assert_eq!(F16::from_f32(2.980_232_2e-8).to_bits(), 0x0000);
+        // just above 2^-25 rounds up to min subnormal
+        assert_eq!(F16::from_f32(2.99e-8).to_bits(), 0x0001);
+        // largest subnormal: (1023/1024) * 2^-14
+        let largest_sub = 1023.0f32 / 1024.0 * 2f32.powi(-14);
+        assert_eq!(F16::from_f32(largest_sub).to_bits(), 0x03FF);
+        assert!(F16(0x03FF).is_subnormal());
+        // min normal
+        assert_eq!(F16::from_f32(2f32.powi(-14)).to_bits(), 0x0400);
+    }
+
+    #[test]
+    fn subnormal_round_carries_to_normal() {
+        // Value just below min-normal should round up into the normal range.
+        let just_below = 2f32.powi(-14) - 2f32.powi(-26);
+        let h = F16::from_f32(just_below);
+        assert_eq!(h.to_bits(), 0x0400); // rounds to min normal
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10 → ties to even → 1.0
+        assert_eq!(F16::from_f32(1.0 + 2f32.powi(-11)).to_bits(), 0x3C00);
+        // 1 + 3*2^-11 is between 1+2^-10 and 1+2^-9 → ties to even → 1+2^-9
+        assert_eq!(F16::from_f32(1.0 + 3.0 * 2f32.powi(-11)).to_bits(), 0x3C02);
+        // 1 + 2^-11 + tiny rounds up
+        assert_eq!(F16::from_f32(1.0 + 2f32.powi(-11) + 1e-6).to_bits(), 0x3C01);
+    }
+
+    #[test]
+    fn nan_propagation() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!((F16_NAN + F16_ONE).is_nan());
+        assert!((F16_NAN * F16_ZERO).is_nan());
+        assert!((F16_INFINITY - F16_INFINITY).is_nan());
+        assert!((F16_ZERO / F16_ZERO).is_nan());
+    }
+
+    #[test]
+    fn exhaustive_round_trip_f16_f32_f16() {
+        // Every one of the 65536 bit patterns must round-trip exactly
+        // (NaNs must stay NaN).
+        for bits in 0..=u16::MAX {
+            let h = F16(bits);
+            let back = F16::from_f32(h.to_f32());
+            if h.is_nan() {
+                assert!(back.is_nan(), "NaN lost at {bits:#06x}");
+            } else {
+                assert_eq!(back.to_bits(), bits, "round-trip failed at {bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_basics() {
+        let a = F16::from_f32(1.5);
+        let b = F16::from_f32(2.25);
+        assert_eq!((a + b).to_f32(), 3.75);
+        assert_eq!((a * b).to_f32(), 3.375);
+        assert_eq!((b - a).to_f32(), 0.75);
+        assert_eq!((a / F16::from_f32(0.5)).to_f32(), 3.0);
+        assert_eq!((-a).to_f32(), -1.5);
+    }
+
+    #[test]
+    fn fp16_addition_loses_small_addends() {
+        // Characteristic FP16 behaviour the plasticity rule must survive:
+        // 2048 + 1 == 2048 in f16 (ulp at 2048 is 2).
+        let big = F16::from_f32(2048.0);
+        let one = F16_ONE;
+        assert_eq!((big + one).to_f32(), 2048.0);
+        // but 2048 + 2 == 2050
+        assert_eq!((big + F16::from_f32(2.0)).to_f32(), 2050.0);
+    }
+
+    #[test]
+    fn mul_add_single_rounding() {
+        // Choose values where (a*b) rounds differently than fma:
+        // a*b exact in f32, + c, then single rounding.
+        let a = F16::from_f32(1.0 + 2f32.powi(-10)); // 1.0009765625
+        let b = a;
+        let c = F16::from_f32(-1.0);
+        // a*b = 1 + 2^-9 + 2^-20 exactly; fma keeps the 2^-20 tail
+        let fused = a.mul_add(b, c);
+        let sep = a * b + c;
+        // fused: 2^-9 + 2^-20 → rounds (at f16 precision around 2^-9) keeping more info
+        assert!(fused.to_f32() >= sep.to_f32());
+    }
+
+    #[test]
+    fn comparisons() {
+        assert!(F16::from_f32(1.0) < F16::from_f32(2.0));
+        assert!(F16::from_f32(-1.0) < F16_ZERO);
+        assert_eq!(F16_ZERO.max(F16_ONE), F16_ONE);
+        assert_eq!(F16_ZERO.min(-F16_ONE), -F16_ONE);
+        // ±0 compare equal through f32
+        assert_eq!(F16_ZERO.to_f32(), F16_NEG_ZERO.to_f32());
+    }
+
+    #[test]
+    fn exactness_of_f32_intermediate() {
+        // Every f16×f16 product is exact in f32: 11-bit × 11-bit
+        // significands → ≤22 bits, f32 has 24. Spot-check the extremes.
+        let max = F16_MAX;
+        let prod = max * max; // overflows to inf — correct
+        assert!(prod.is_infinite());
+        let tiny = F16_MIN_SUBNORMAL;
+        let p2 = tiny * tiny; // underflows to 0
+        assert!(p2.is_zero());
+        let m = F16::from_f32(0.000123);
+        let n = F16::from_f32(987.0);
+        let r = m * n;
+        let exact = m.to_f32() * n.to_f32();
+        assert_eq!(r.to_bits(), F16::from_f32(exact).to_bits());
+    }
+}

@@ -1,0 +1,14 @@
+//! Foundation utilities built from scratch (the offline crate registry
+//! vendors only the `xla` crate's dependency closure, so there is no
+//! clap/serde/rand/half/criterion/proptest — each is replaced by a small
+//! purpose-built module here).
+
+pub mod argparse;
+pub mod config;
+pub mod csvio;
+pub mod fp16;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,216 @@
+//! Fixed-size thread pool over std channels (the offline registry has no
+//! tokio/rayon). Used by the ES leader to fan population rollouts out to
+//! worker threads and by the Fig-3 benchmark to run seeds in parallel.
+//!
+//! Design: a scoped map — `map_indexed` takes a slice of inputs and a
+//! worker function and returns outputs in input order. Workers pull
+//! indices from a shared atomic counter (work stealing by chunk of 1),
+//! which balances heterogeneous rollout lengths well.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of worker threads to use by default: physical parallelism,
+/// capped to leave a core for the coordinator.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+/// Apply `f` to every element of `inputs` using `workers` threads,
+/// returning results in input order. `f` must be `Sync` (it is shared by
+/// reference); per-call mutable state should live inside `f`'s locals.
+pub fn map_indexed<I, O, F>(inputs: &[I], workers: usize, f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &I) -> O + Sync,
+{
+    let n = inputs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return inputs.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<O>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let f = &f;
+    let next = &next;
+    let results = &results;
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i, &inputs[i]);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    results
+        .iter()
+        .map(|m| m.lock().unwrap().take().expect("worker missed a slot"))
+        .collect()
+}
+
+/// Persistent pool for repeated dispatch without re-spawning threads each
+/// generation. Jobs are boxed closures; results are retrieved via
+/// [`PoolHandle::join`].
+pub struct ThreadPool {
+    senders: Vec<std::sync::mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    rr: AtomicUsize,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = std::sync::mpsc::channel::<Job>();
+            senders.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("fireflyp-worker-{w}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            senders,
+            handles,
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Round-robin dispatch of a fire-and-forget job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        self.senders[i].send(Box::new(job)).expect("worker hung up");
+    }
+
+    /// Dispatch a batch of jobs and wait for all to complete, collecting
+    /// results in submission order.
+    pub fn map<O: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> O + Send + 'static>>,
+    ) -> Vec<O> {
+        let n = jobs.len();
+        let results: Arc<Vec<Mutex<Option<O>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        let done = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        for (i, job) in jobs.into_iter().enumerate() {
+            let results = Arc::clone(&results);
+            let done = Arc::clone(&done);
+            self.execute(move || {
+                let out = job();
+                *results[i].lock().unwrap() = Some(out);
+                let (lock, cv) = &*done;
+                let mut count = lock.lock().unwrap();
+                *count += 1;
+                cv.notify_one();
+            });
+        }
+        let (lock, cv) = &*done;
+        let mut count = lock.lock().unwrap();
+        while *count < n {
+            count = cv.wait(count).unwrap();
+        }
+        drop(count);
+        // Workers may still hold their Arc clone for an instant after
+        // signalling completion, so take results through the mutexes
+        // instead of unwrapping the Arc.
+        results
+            .iter()
+            .map(|m| m.lock().unwrap().take().expect("missing result"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // close channels → workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        let inputs: Vec<u64> = (0..257).collect();
+        let out = map_indexed(&inputs, 8, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * 2
+        });
+        assert_eq!(out, inputs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_indexed_single_worker() {
+        let inputs = vec![1, 2, 3];
+        let out = map_indexed(&inputs, 1, |_, &x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn map_indexed_empty() {
+        let inputs: Vec<u32> = vec![];
+        let out: Vec<u32> = map_indexed(&inputs, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_map_returns_in_order() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..64usize)
+            .map(|i| {
+                Box::new(move || {
+                    // stagger to exercise out-of-order completion
+                    std::thread::sleep(std::time::Duration::from_micros((64 - i) as u64));
+                    i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let out = pool.map(jobs);
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn heavy_parallel_sum() {
+        let inputs: Vec<u64> = (0..10_000).collect();
+        let out = map_indexed(&inputs, default_workers(), |_, &x| x * x);
+        let expect: u64 = inputs.iter().map(|x| x * x).sum();
+        assert_eq!(out.iter().sum::<u64>(), expect);
+    }
+}

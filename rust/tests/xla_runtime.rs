@@ -1,0 +1,145 @@
+//! Integration: the AOT artifact → PJRT runtime path. Loads the HLO
+//! text emitted by `make artifacts`, compiles it through the xla crate,
+//! and checks numerics against the pure-Rust golden model — the proof
+//! that the Python-authored kernels and the Rust serve path compute the
+//! same function.
+//!
+//! Skips (with a note) when artifacts/ hasn't been built.
+
+use firefly_p::runtime::{Registry, Variant, XlaClient};
+use firefly_p::snn::{Mode, NetworkRule, SnnConfig, SnnNetwork};
+use firefly_p::util::rng::Pcg64;
+
+fn registry_or_skip() -> Option<Registry> {
+    match Registry::open_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP xla_runtime tests: {e}");
+            None
+        }
+    }
+}
+
+fn tiny_cfg(meta: &firefly_p::runtime::ArtifactMeta) -> SnnConfig {
+    let mut cfg = SnnConfig::control(meta.n_in, meta.n_out);
+    cfg.n_hidden = meta.n_hidden;
+    cfg
+}
+
+#[test]
+fn artifact_compiles_and_runs() {
+    let Some(reg) = registry_or_skip() else { return };
+    let meta = reg.find("tiny", Variant::Step).expect("tiny_step artifact");
+    let client = XlaClient::global().expect("pjrt client");
+    let mut exe = client.load(meta).expect("compile");
+    let spikes = vec![true; meta.n_in];
+    let out = exe.step(&spikes).expect("execute");
+    assert_eq!(out.len(), meta.n_out);
+    assert_eq!(exe.steps_executed, 1);
+}
+
+#[test]
+fn xla_matches_native_golden_model_over_episode() {
+    let Some(reg) = registry_or_skip() else { return };
+    let meta = reg.find("tiny", Variant::Step).unwrap();
+    let client = XlaClient::global().unwrap();
+    let mut exe = client.load(meta).unwrap();
+
+    let cfg = tiny_cfg(meta);
+    let mut rng = Pcg64::new(0xA0, 0);
+    let mut genome = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut genome, 0.25);
+    let rule = NetworkRule::from_flat(&cfg, &genome);
+
+    // install θ planes into the artifact
+    let p1 = rule.l1.unpack_planes();
+    let p2 = rule.l2.unpack_planes();
+    let flat1: Vec<f32> = p1.iter().flat_map(|p| p.iter().copied()).collect();
+    let flat2: Vec<f32> = p2.iter().flat_map(|p| p.iter().copied()).collect();
+    exe.set_rule(&flat1, &flat2).unwrap();
+
+    let mut gold = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule));
+
+    let mut spike_rng = Pcg64::new(0xB1, 0);
+    for t in 0..50 {
+        let spikes: Vec<bool> = (0..cfg.n_in).map(|_| spike_rng.bernoulli(0.5)).collect();
+        let out_xla = exe.step(&spikes).unwrap();
+        let out_gold: Vec<bool> = gold.step_spikes(&spikes).to_vec();
+        assert_eq!(out_xla, out_gold, "output spikes diverged at t={t}");
+    }
+
+    // full state agreement at the end (f32 vs f32; the artifact's matmul
+    // may reassociate sums, so allow float-level tolerance)
+    let w1_xla = exe.state_f32(0).unwrap();
+    for (a, b) in w1_xla.iter().zip(gold.w1.iter()) {
+        assert!((a - b).abs() < 1e-4, "w1 drift: {a} vs {b}");
+    }
+    let t_out_xla = exe.state_f32(6).unwrap();
+    let t_out_gold: Vec<f32> = gold.trace_out.values.clone();
+    for (a, b) in t_out_xla.iter().zip(t_out_gold.iter()) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn fwd_variant_keeps_weights_frozen() {
+    let Some(reg) = registry_or_skip() else { return };
+    let meta = reg.find("tiny", Variant::Fwd).unwrap();
+    let client = XlaClient::global().unwrap();
+    let mut exe = client.load(meta).unwrap();
+    let n_w1 = meta.n_in * meta.n_hidden;
+    let n_w2 = meta.n_hidden * meta.n_out;
+    let w1: Vec<f32> = (0..n_w1).map(|i| (i % 7) as f32 * 0.3).collect();
+    let w2: Vec<f32> = (0..n_w2).map(|i| (i % 5) as f32 * 0.3).collect();
+    exe.set_weights(&w1, &w2).unwrap();
+    let spikes = vec![true; meta.n_in];
+    for _ in 0..10 {
+        exe.step(&spikes).unwrap();
+    }
+    assert_eq!(exe.state_f32(0).unwrap(), w1, "fwd artifact must not change weights");
+    assert_eq!(exe.state_f32(1).unwrap(), w2);
+}
+
+#[test]
+fn reset_restores_zero_state() {
+    let Some(reg) = registry_or_skip() else { return };
+    let meta = reg.find("tiny", Variant::Step).unwrap();
+    let client = XlaClient::global().unwrap();
+    let mut exe = client.load(meta).unwrap();
+    let theta1 = vec![0.1f32; 4 * meta.n_in * meta.n_hidden];
+    let theta2 = vec![0.1f32; 4 * meta.n_hidden * meta.n_out];
+    exe.set_rule(&theta1, &theta2).unwrap();
+    let spikes = vec![true; meta.n_in];
+    for _ in 0..5 {
+        exe.step(&spikes).unwrap();
+    }
+    assert!(exe.state_f32(0).unwrap().iter().any(|&w| w != 0.0));
+    exe.reset(true);
+    assert!(exe.state_f32(0).unwrap().iter().all(|&w| w == 0.0));
+    assert!(exe.state_f32(4).unwrap().iter().all(|&t| t == 0.0));
+    // θ survives reset (it is the frozen rule, not dynamic state)
+    assert!(exe.state_f32(7).unwrap().iter().all(|&t| t == 0.1));
+}
+
+#[test]
+fn rule_size_validation() {
+    let Some(reg) = registry_or_skip() else { return };
+    let meta = reg.find("tiny", Variant::Step).unwrap();
+    let client = XlaClient::global().unwrap();
+    let mut exe = client.load(meta).unwrap();
+    assert!(exe.set_rule(&[0.0; 3], &[0.0; 3]).is_err());
+    assert!(exe.set_weights(&[0.0; 3], &[0.0; 3]).is_err());
+}
+
+#[test]
+fn all_geometries_compile() {
+    let Some(reg) = registry_or_skip() else { return };
+    let client = XlaClient::global().unwrap();
+    for geom in ["tiny", "ant", "cheetah", "reacher"] {
+        let meta = reg.find(geom, Variant::Step).unwrap();
+        let mut exe = client.load(meta).unwrap();
+        let spikes = vec![false; meta.n_in];
+        let out = exe.step(&spikes).unwrap();
+        assert_eq!(out.len(), meta.n_out, "{geom}");
+    }
+}
