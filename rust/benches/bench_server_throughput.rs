@@ -1,0 +1,198 @@
+//! EXP-SERVE — multi-session serving throughput (our system metric, not
+//! a paper table): how much faster B concurrent controller sessions run
+//! through one batched SoA step than through B sequential single-session
+//! steps, plus end-to-end TCP latency through the session-managed
+//! control server. Feeds the §Perf serving rows of EXPERIMENTS.md.
+//!
+//! Acceptance target (ISSUE 1): batched serving at B=64 sessions
+//! achieves ≥4× the steps/sec of 64 sequential single-session steps.
+//!
+//! Run: `cargo bench --bench bench_server_throughput`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use firefly_p::backend::{NativeBackend, SnnBackend};
+use firefly_p::coordinator::server::{ControlServer, ServerConfig};
+use firefly_p::snn::{NetworkRule, SnnConfig};
+use firefly_p::util::csvio::CsvWriter;
+use firefly_p::util::rng::Pcg64;
+use firefly_p::util::stats;
+
+/// Ant-like control geometry (the paper's serving instance): 64-128-8.
+fn geometry() -> SnnConfig {
+    let mut cfg = SnnConfig::control(64, 8);
+    cfg.n_hidden = 128;
+    cfg
+}
+
+fn make_rule(cfg: &SnnConfig, seed: u64) -> NetworkRule {
+    let mut rng = Pcg64::new(seed, 0);
+    let mut genome = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut genome, 0.1);
+    NetworkRule::from_flat(cfg, &genome)
+}
+
+fn random_inputs(cfg: &SnnConfig, batch: usize, seed: u64) -> Vec<bool> {
+    let mut rng = Pcg64::new(seed, 1);
+    (0..batch * cfg.n_in).map(|_| rng.bernoulli(0.5)).collect()
+}
+
+/// Engine-level comparison: one batched SoA network vs B independent
+/// single-session networks, identical rule, identical inputs. Returns
+/// (batched steps/s, sequential steps/s) in session-steps per second.
+fn bench_engine(batch: usize, ticks: usize) -> (f64, f64) {
+    let cfg = geometry();
+    let rule = make_rule(&cfg, 3);
+    let inputs = random_inputs(&cfg, batch, 7);
+
+    // --- batched: one backend, B sessions, one step_batch per tick ----
+    let mut batched = NativeBackend::plastic(cfg.clone(), rule.clone());
+    assert_eq!(batched.ensure_sessions(batch), batch);
+    let mut out = Vec::new();
+    // warmup
+    for _ in 0..5 {
+        batched.step_batch(batch, &inputs, &mut out);
+    }
+    let t0 = Instant::now();
+    for _ in 0..ticks {
+        batched.step_batch(batch, &inputs, &mut out);
+    }
+    let batched_sps = (batch * ticks) as f64 / t0.elapsed().as_secs_f64();
+
+    // --- sequential: B independent engines stepped one after another --
+    let mut singles: Vec<NativeBackend> = (0..batch)
+        .map(|_| NativeBackend::plastic(cfg.clone(), rule.clone()))
+        .collect();
+    // identical warmup to the batched arm: 5 ticks, each session fed its
+    // own input chunk, so both timed loops start from the same weight
+    // state and spike activity
+    for _ in 0..5 {
+        for (b, s) in singles.iter_mut().enumerate() {
+            s.step(&inputs[b * cfg.n_in..(b + 1) * cfg.n_in]);
+        }
+    }
+    let t0 = Instant::now();
+    for _ in 0..ticks {
+        for (b, s) in singles.iter_mut().enumerate() {
+            let chunk = &inputs[b * cfg.n_in..(b + 1) * cfg.n_in];
+            s.step(chunk);
+        }
+    }
+    let seq_sps = (batch * ticks) as f64 / t0.elapsed().as_secs_f64();
+
+    (batched_sps, seq_sps)
+}
+
+/// TCP-level: B concurrent clients hammering OBS round-trips through the
+/// session-managed server. Returns (aggregate requests/s, latencies µs).
+fn bench_tcp(batch: usize, requests_per_client: usize) -> (f64, Vec<f64>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+
+    let server = std::thread::spawn(move || {
+        // backend is !Send: construct it on the serving thread
+        let cfg = geometry();
+        let rule = make_rule(&cfg, 3);
+        let backend = Box::new(NativeBackend::plastic(cfg, rule));
+        let mut server = ControlServer::with_config(
+            backend,
+            8, // 8 obs dims × 8 neurons = 64 inputs
+            4, // 4 action dims × 2 neurons = 8 outputs
+            ServerConfig {
+                max_sessions: batch,
+                seed: 5,
+            },
+        );
+        server.serve(&addr.to_string(), Some(batch)).unwrap();
+    });
+    std::thread::sleep(Duration::from_millis(150));
+
+    let barrier = Arc::new(Barrier::new(batch));
+    let t_all = Instant::now();
+    let clients: Vec<_> = (0..batch)
+        .map(|c| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut line = String::new();
+                let obs = format!(
+                    "OBS 0.1,0.2,-0.3,{:.2},0.5,-0.6,0.7,1.0\n",
+                    (c as f32 / 17.0) % 1.0
+                );
+                barrier.wait();
+                let mut lat = Vec::with_capacity(requests_per_client);
+                for _ in 0..requests_per_client {
+                    let t0 = Instant::now();
+                    writer.write_all(obs.as_bytes()).unwrap();
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                    assert!(line.starts_with("ACT "), "{line}");
+                }
+                lat
+            })
+        })
+        .collect();
+
+    let mut latencies = Vec::new();
+    for c in clients {
+        latencies.extend(c.join().unwrap());
+    }
+    let wall = t_all.elapsed().as_secs_f64();
+    server.join().unwrap();
+    ((batch * requests_per_client) as f64 / wall, latencies)
+}
+
+fn main() {
+    println!("=== EXP-SERVE: multi-session serving throughput (64-128-8 plastic) ===\n");
+    let mut csv = CsvWriter::create(
+        "results/server_throughput.csv",
+        &["layer", "batch", "steps_per_s", "speedup_vs_sequential", "p50_us", "p99_us"],
+    )
+    .unwrap();
+
+    println!("--- engine: batched SoA step vs sequential single-session steps ---");
+    let mut speedup_at_64 = 0.0;
+    for &batch in &[1usize, 8, 64] {
+        // fixed wall-clock budget per config: more ticks at small B
+        let ticks = (12_800 / batch).max(50);
+        let (batched_sps, seq_sps) = bench_engine(batch, ticks);
+        let speedup = batched_sps / seq_sps;
+        if batch == 64 {
+            speedup_at_64 = speedup;
+        }
+        println!(
+            "B={batch:<3} batched {batched_sps:>12.0} steps/s   sequential \
+             {seq_sps:>12.0} steps/s   speedup {speedup:>5.2}×"
+        );
+        csv.row(&[&"engine-batched", &batch, &batched_sps, &speedup, &0.0, &0.0])
+            .unwrap();
+        csv.row(&[&"engine-sequential", &batch, &seq_sps, &1.0, &0.0, &0.0])
+            .unwrap();
+    }
+
+    println!("\n--- tcp: concurrent clients through the session-managed server ---");
+    for &batch in &[1usize, 8, 64] {
+        let requests = (3_200 / batch).max(40);
+        let (rps, lat) = bench_tcp(batch, requests);
+        let p50 = stats::percentile(&lat, 50.0);
+        let p99 = stats::percentile(&lat, 99.0);
+        println!(
+            "B={batch:<3} {rps:>10.0} req/s   p50 {p50:>8.1} µs   p99 {p99:>8.1} µs"
+        );
+        csv.row(&[&"tcp", &batch, &rps, &0.0, &p50, &p99]).unwrap();
+    }
+
+    let path = csv.finish().unwrap();
+    println!("\ncsv: {}", path.display());
+    println!(
+        "acceptance: engine speedup at B=64 is {speedup_at_64:.2}× (target ≥ 4×) — {}",
+        if speedup_at_64 >= 4.0 { "PASS" } else { "MISS" }
+    );
+}

@@ -1,9 +1,14 @@
 //! FPGA backend: the cycle-accurate simulator behind the common trait.
+//!
+//! Single-session by construction (it models the one-pipeline
+//! accelerator); multi-session serving wraps it in
+//! [`crate::backend::ReplicatedBackend`] — the loop fallback.
 
 use super::SnnBackend;
 use crate::fpga::{FpgaSim, HwConfig};
 use crate::snn::{NetworkRule, SnnConfig};
 
+/// Cycle-accurate FP16 FPGA simulator behind the backend trait.
 pub struct FpgaBackend {
     sim: FpgaSim,
     cfg: SnnConfig,
@@ -16,6 +21,7 @@ pub struct FpgaBackend {
 }
 
 impl FpgaBackend {
+    /// Plastic (FireFly-P) deployment: zero weights + online rule updates.
     pub fn plastic(cfg: SnnConfig, rule: NetworkRule, hw: HwConfig) -> Self {
         let sim = FpgaSim::new_plastic(cfg.clone(), rule.l1.clone(), rule.l2.clone(), hw.clone());
         FpgaBackend {
@@ -28,6 +34,7 @@ impl FpgaBackend {
         }
     }
 
+    /// Fixed-weight baseline deployment (no online updates).
     pub fn fixed(cfg: SnnConfig, weights: &[f32], hw: HwConfig) -> Self {
         let sim = FpgaSim::new_fixed(cfg.clone(), weights, hw.clone());
         FpgaBackend {
@@ -40,10 +47,12 @@ impl FpgaBackend {
         }
     }
 
+    /// Borrow the underlying simulator (cycle/latency reports).
     pub fn sim(&self) -> &FpgaSim {
         &self.sim
     }
 
+    /// Mutably borrow the underlying simulator.
     pub fn sim_mut(&mut self) -> &mut FpgaSim {
         &mut self.sim
     }

@@ -10,6 +10,17 @@
 //! same rule + same spike streams must produce closely matching
 //! behaviour everywhere (bit-exact between native-FP16 and fpga;
 //! float-level between native-f32 and xla).
+//!
+//! # Multi-session batching
+//!
+//! The trait additionally exposes a **batch entry point**
+//! ([`SnnBackend::step_sessions`] / [`SnnBackend::step_batch`]) so the
+//! control server can multiplex many independent client sessions onto
+//! one engine (DESIGN.md §Batched-Serving). [`NativeBackend`] implements
+//! it natively over the structure-of-arrays [`crate::snn::SnnNetwork`];
+//! single-session backends (XLA, FPGA) inherit the correct batch-of-one
+//! defaults, and [`ReplicatedBackend`] lifts any of them to B sessions
+//! by looping over B independent instances — correct, just not batched.
 
 pub mod fpga;
 pub mod native;
@@ -21,34 +32,100 @@ pub use xla::XlaBackend;
 
 use crate::snn::SnnConfig;
 
-/// One SNN controller instance stepping one timestep at a time.
+/// One SNN controller engine stepping one timestep at a time, hosting
+/// one or more independent controller sessions.
 ///
-/// Not `Send`: the XLA backend wraps `!Send` PJRT handles. The request
-/// path is single-threaded (one accelerator pipeline); parallel ES
-/// rollouts construct native backends per worker thread instead of
-/// sharing one.
+/// Not `Send`: the XLA backend wraps `!Send` PJRT handles. The serving
+/// request path is single-threaded over the engine (one accelerator
+/// pipeline); parallel ES rollouts construct native backends per worker
+/// thread instead of sharing one.
 pub trait SnnBackend {
     /// Network geometry.
     fn config(&self) -> &SnnConfig;
-    /// Advance one timestep; returns output spikes.
+    /// Advance session 0 one timestep; returns output spikes.
     fn step(&mut self, input_spikes: &[bool]) -> Vec<bool>;
-    /// Output-population traces (action decoding).
+    /// Session 0's output-population traces (action decoding).
     fn output_traces(&self) -> Vec<f32>;
-    /// Reset dynamic state (zero weights again in plastic mode).
+    /// Reset all dynamic state of every session (zero weights again in
+    /// plastic mode).
     fn reset(&mut self);
     /// Identifier for logs/CSV.
     fn name(&self) -> &'static str;
+
+    // --- multi-session batch API --------------------------------------
+
+    /// Provision per-session state for up to `n` independent sessions,
+    /// returning how many sessions are actually available afterwards.
+    /// Single-session backends return 1. Growing may reset existing
+    /// session state, so servers call this once before serving traffic.
+    fn ensure_sessions(&mut self, _n: usize) -> usize {
+        1
+    }
+
+    /// Number of sessions currently provisioned (1 unless
+    /// [`SnnBackend::ensure_sessions`] grew it).
+    fn sessions(&self) -> usize {
+        1
+    }
+
+    /// Step an arbitrary subset of sessions one timestep each.
+    ///
+    /// `sessions` lists the session indices to advance; `inputs` holds
+    /// their input spikes concatenated session-major
+    /// (`sessions.len() × n_in`). `outputs` is cleared and filled with
+    /// the matching session-major output spikes
+    /// (`sessions.len() × n_out`). Sessions not listed do not advance.
+    ///
+    /// The default implementation serves single-session backends: it
+    /// accepts only `sessions == [0]` and delegates to
+    /// [`SnnBackend::step`].
+    fn step_sessions(&mut self, sessions: &[usize], inputs: &[bool], outputs: &mut Vec<bool>) {
+        assert_eq!(
+            sessions,
+            [0],
+            "backend {:?} is single-session; wrap it in ReplicatedBackend \
+             for multi-session serving",
+            self.name()
+        );
+        let out = self.step(inputs);
+        outputs.clear();
+        outputs.extend_from_slice(&out);
+    }
+
+    /// Convenience wrapper: step sessions `0..batch` with contiguous
+    /// session-major `inputs` (`batch × n_in`), filling `outputs`
+    /// (`batch × n_out`).
+    fn step_batch(&mut self, batch: usize, inputs: &[bool], outputs: &mut Vec<bool>) {
+        let sessions: Vec<usize> = (0..batch).collect();
+        self.step_sessions(&sessions, inputs, outputs);
+    }
+
+    /// Reset one session's dynamic state, leaving the others untouched.
+    fn reset_session(&mut self, session: usize) {
+        assert_eq!(session, 0, "single-session backend");
+        self.reset();
+    }
+
+    /// One session's output-population traces (action decoding).
+    fn output_traces_session(&self, session: usize) -> Vec<f32> {
+        assert_eq!(session, 0, "single-session backend");
+        self.output_traces()
+    }
 }
 
 /// Which backend to instantiate (CLI-facing).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
+    /// Pure-Rust f32 golden model (natively batched).
     Native,
+    /// AOT artifact executed through the PJRT runtime.
     Xla,
+    /// Cycle-accurate FP16 FPGA simulator.
     Fpga,
 }
 
 impl BackendKind {
+    /// Parse a CLI backend name (`native` | `xla` | `fpga`).
     pub fn parse(s: &str) -> Option<BackendKind> {
         match s {
             "native" => Some(BackendKind::Native),
@@ -59,9 +136,105 @@ impl BackendKind {
     }
 }
 
+/// Correct-but-sequential multi-session fallback: B independent backend
+/// instances behind the batch API.
+///
+/// This is how single-session engines (XLA, FPGA) serve many sessions:
+/// each session owns a full backend instance and a batched step simply
+/// loops over them. No θ sharing, no SIMD across sessions — but the
+/// semantics match [`NativeBackend`]'s native batching exactly, which is
+/// what the server and the throughput bench compare against.
+pub struct ReplicatedBackend {
+    instances: Vec<Box<dyn SnnBackend>>,
+}
+
+impl ReplicatedBackend {
+    /// Wrap pre-built instances (one per session). All instances must
+    /// share the same geometry; panics on empty input.
+    pub fn from_instances(instances: Vec<Box<dyn SnnBackend>>) -> Self {
+        assert!(!instances.is_empty(), "need at least one backend instance");
+        let cfg = instances[0].config();
+        let (n_in, n_out) = (cfg.n_in, cfg.n_out);
+        for inst in &instances {
+            assert_eq!(inst.config().n_in, n_in, "geometry mismatch across instances");
+            assert_eq!(inst.config().n_out, n_out, "geometry mismatch across instances");
+        }
+        ReplicatedBackend { instances }
+    }
+}
+
+impl SnnBackend for ReplicatedBackend {
+    fn config(&self) -> &SnnConfig {
+        self.instances[0].config()
+    }
+
+    fn step(&mut self, input_spikes: &[bool]) -> Vec<bool> {
+        self.instances[0].step(input_spikes)
+    }
+
+    fn output_traces(&self) -> Vec<f32> {
+        self.instances[0].output_traces()
+    }
+
+    fn reset(&mut self) {
+        for inst in self.instances.iter_mut() {
+            inst.reset();
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "replicated"
+    }
+
+    fn ensure_sessions(&mut self, n: usize) -> usize {
+        // Cannot conjure new instances without a factory; report what we
+        // have (capped at the request so servers size their slot tables).
+        self.instances.len().min(n.max(1))
+    }
+
+    fn sessions(&self) -> usize {
+        self.instances.len()
+    }
+
+    fn step_sessions(&mut self, sessions: &[usize], inputs: &[bool], outputs: &mut Vec<bool>) {
+        let n_in = self.config().n_in;
+        let n_out = self.config().n_out;
+        assert_eq!(inputs.len(), sessions.len() * n_in, "input arity mismatch");
+        // Same validation as the natively batched backend: a malformed
+        // batch must fail loudly, not silently double-step a session.
+        let mut seen = vec![false; self.instances.len()];
+        for &s in sessions {
+            assert!(
+                s < self.instances.len(),
+                "session {s} out of range (batch {})",
+                self.instances.len()
+            );
+            assert!(!seen[s], "duplicate session {s} in one batch step");
+            seen[s] = true;
+        }
+        outputs.clear();
+        outputs.reserve(sessions.len() * n_out);
+        for (k, &s) in sessions.iter().enumerate() {
+            let chunk = &inputs[k * n_in..(k + 1) * n_in];
+            let out = self.instances[s].step(chunk);
+            outputs.extend_from_slice(&out);
+        }
+    }
+
+    fn reset_session(&mut self, session: usize) {
+        self.instances[session].reset();
+    }
+
+    fn output_traces_session(&self, session: usize) -> Vec<f32> {
+        self.instances[session].output_traces()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::snn::{NetworkRule, SnnConfig};
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn backend_kind_parses() {
@@ -69,5 +242,69 @@ mod tests {
         assert_eq!(BackendKind::parse("fpga"), Some(BackendKind::Fpga));
         assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
         assert_eq!(BackendKind::parse("gpu"), None);
+    }
+
+    fn tiny_rule(cfg: &SnnConfig, seed: u64) -> NetworkRule {
+        let mut rng = Pcg64::new(seed, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.2);
+        NetworkRule::from_flat(cfg, &flat)
+    }
+
+    #[test]
+    fn replicated_matches_native_batched() {
+        // The loop fallback and the native SoA batch must agree exactly.
+        let cfg = SnnConfig::tiny();
+        let rule = tiny_rule(&cfg, 31);
+        let batch = 3;
+
+        let mut native = NativeBackend::plastic(cfg.clone(), rule.clone());
+        assert_eq!(native.ensure_sessions(batch), batch);
+
+        let instances: Vec<Box<dyn SnnBackend>> = (0..batch)
+            .map(|_| {
+                Box::new(NativeBackend::plastic(cfg.clone(), rule.clone())) as Box<dyn SnnBackend>
+            })
+            .collect();
+        let mut repl = ReplicatedBackend::from_instances(instances);
+        assert_eq!(repl.sessions(), batch);
+
+        let mut rng = Pcg64::new(32, 0);
+        let mut out_a = Vec::new();
+        let mut out_b = Vec::new();
+        for _ in 0..25 {
+            let inputs: Vec<bool> = (0..batch * cfg.n_in).map(|_| rng.bernoulli(0.5)).collect();
+            native.step_batch(batch, &inputs, &mut out_a);
+            repl.step_batch(batch, &inputs, &mut out_b);
+            assert_eq!(out_a, out_b);
+        }
+        for s in 0..batch {
+            assert_eq!(
+                native.output_traces_session(s),
+                repl.output_traces_session(s),
+                "trace mismatch session {s}"
+            );
+        }
+
+        // per-session reset keeps the others aligned
+        native.reset_session(1);
+        repl.reset_session(1);
+        let inputs: Vec<bool> = (0..batch * cfg.n_in).map(|_| rng.bernoulli(0.5)).collect();
+        native.step_batch(batch, &inputs, &mut out_a);
+        repl.step_batch(batch, &inputs, &mut out_b);
+        assert_eq!(out_a, out_b);
+    }
+
+    #[test]
+    fn default_trait_is_single_session() {
+        let cfg = SnnConfig::tiny();
+        let rule = tiny_rule(&cfg, 33);
+        let mut b = FpgaBackend::plastic(cfg.clone(), rule, crate::fpga::HwConfig::default());
+        assert_eq!(b.ensure_sessions(8), 1);
+        assert_eq!(b.sessions(), 1);
+        let inputs = vec![true; cfg.n_in];
+        let mut out = Vec::new();
+        b.step_sessions(&[0], &inputs, &mut out);
+        assert_eq!(out.len(), cfg.n_out);
     }
 }

@@ -1,27 +1,71 @@
-//! Native backend: the pure-Rust golden model (`SnnNetwork<f32>`).
+//! Native backend: the pure-Rust golden model (`SnnNetwork<f32>`), and
+//! the only backend with **native multi-session batching** — it steps
+//! all of its sessions through one structure-of-arrays network so the
+//! frozen rule θ is streamed once per tick instead of once per session
+//! (DESIGN.md §Batched-Serving).
 
 use super::SnnBackend;
 use crate::snn::{Mode, NetworkRule, SnnConfig, SnnNetwork};
 
+/// Pure-Rust f32 engine hosting one or more controller sessions.
 pub struct NativeBackend {
     net: SnnNetwork<f32>,
+    /// Construction spec kept so `ensure_sessions` can rebuild the
+    /// network at a larger batch (growing resets all session state).
+    rule: Option<NetworkRule>,
+    fixed_flat: Vec<f32>,
+    /// Scratch: `[neuron][session]` input matrix for masked stepping.
+    inmat: Vec<bool>,
+    /// Scratch: per-session active mask.
+    active: Vec<bool>,
 }
 
 impl NativeBackend {
+    /// Plastic (FireFly-P) deployment: zero-initialized weights, online
+    /// four-term updates under the frozen `rule`.
     pub fn plastic(cfg: SnnConfig, rule: NetworkRule) -> Self {
+        let net = SnnNetwork::new(cfg, Mode::Plastic(rule.clone()));
         NativeBackend {
-            net: SnnNetwork::new(cfg, Mode::Plastic(rule)),
+            inmat: vec![false; net.cfg.n_in],
+            active: vec![true; 1],
+            rule: Some(rule),
+            fixed_flat: Vec::new(),
+            net,
         }
     }
 
+    /// Fixed-weight baseline deployment: `weights` installed once, no
+    /// online updates.
     pub fn fixed(cfg: SnnConfig, weights: &[f32]) -> Self {
         let mut net = SnnNetwork::new(cfg, Mode::Fixed);
         net.load_weights(weights);
-        NativeBackend { net }
+        NativeBackend {
+            inmat: vec![false; net.cfg.n_in],
+            active: vec![true; 1],
+            rule: None,
+            fixed_flat: weights.to_vec(),
+            net,
+        }
     }
 
+    /// Borrow the underlying golden-model network (diagnostics).
     pub fn network(&self) -> &SnnNetwork<f32> {
         &self.net
+    }
+
+    fn rebuild(&mut self, batch: usize) {
+        let cfg = self.net.cfg.clone();
+        let mode = match &self.rule {
+            Some(rule) => Mode::Plastic(rule.clone()),
+            None => Mode::Fixed,
+        };
+        let mut net = SnnNetwork::new_batched(cfg, mode, batch);
+        if self.rule.is_none() {
+            net.load_weights(&self.fixed_flat);
+        }
+        self.inmat = vec![false; net.cfg.n_in * batch];
+        self.active = vec![false; batch];
+        self.net = net;
     }
 }
 
@@ -31,11 +75,16 @@ impl SnnBackend for NativeBackend {
     }
 
     fn step(&mut self, input_spikes: &[bool]) -> Vec<bool> {
-        self.net.step_spikes(input_spikes).to_vec()
+        if self.net.batch == 1 {
+            return self.net.step_spikes(input_spikes).to_vec();
+        }
+        let mut out = Vec::new();
+        self.step_sessions(&[0], input_spikes, &mut out);
+        out
     }
 
     fn output_traces(&self) -> Vec<f32> {
-        self.net.output_traces_f32()
+        self.output_traces_session(0)
     }
 
     fn reset(&mut self) {
@@ -44,6 +93,58 @@ impl SnnBackend for NativeBackend {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn ensure_sessions(&mut self, n: usize) -> usize {
+        let n = n.max(1);
+        if n > self.net.batch {
+            self.rebuild(n);
+        }
+        self.net.batch
+    }
+
+    fn sessions(&self) -> usize {
+        self.net.batch
+    }
+
+    fn step_sessions(&mut self, sessions: &[usize], inputs: &[bool], outputs: &mut Vec<bool>) {
+        let n_in = self.net.cfg.n_in;
+        let n_out = self.net.cfg.n_out;
+        let b = self.net.batch;
+        assert_eq!(inputs.len(), sessions.len() * n_in, "input arity mismatch");
+
+        // Build the [neuron][session] input matrix + active mask from the
+        // session-major request list.
+        for a in self.active.iter_mut() {
+            *a = false;
+        }
+        for (k, &s) in sessions.iter().enumerate() {
+            assert!(s < b, "session {s} out of range (batch {b})");
+            assert!(!self.active[s], "duplicate session {s} in one batch step");
+            self.active[s] = true;
+            for j in 0..n_in {
+                self.inmat[j * b + s] = inputs[k * n_in + j];
+            }
+        }
+
+        self.net.step_spikes_masked(&self.inmat, &self.active);
+
+        // Scatter the output columns back to session-major order.
+        outputs.clear();
+        outputs.reserve(sessions.len() * n_out);
+        for &s in sessions {
+            for o in 0..n_out {
+                outputs.push(self.net.output.spikes[o * b + s]);
+            }
+        }
+    }
+
+    fn reset_session(&mut self, session: usize) {
+        self.net.reset_session(session);
+    }
+
+    fn output_traces_session(&self, session: usize) -> Vec<f32> {
+        self.net.output_traces_f32_session(session)
     }
 }
 
@@ -66,5 +167,61 @@ mod tests {
         assert_eq!(b.output_traces().len(), cfg.n_out);
         b.reset();
         assert_eq!(b.network().weight_mean_abs(), 0.0);
+    }
+
+    #[test]
+    fn batched_native_matches_single_instances() {
+        let cfg = SnnConfig::tiny();
+        let mut rng = Pcg64::new(40, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.2);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+
+        let batch = 5;
+        let mut batched = NativeBackend::plastic(cfg.clone(), rule.clone());
+        assert_eq!(batched.ensure_sessions(batch), batch);
+        // idempotent: asking for fewer sessions keeps the provisioned batch
+        assert_eq!(batched.ensure_sessions(2), batch);
+
+        let mut singles: Vec<NativeBackend> = (0..batch)
+            .map(|_| NativeBackend::plastic(cfg.clone(), rule.clone()))
+            .collect();
+
+        let mut input_rng = Pcg64::new(41, 0);
+        let mut out = Vec::new();
+        for _ in 0..30 {
+            let inputs: Vec<bool> = (0..batch * cfg.n_in)
+                .map(|_| input_rng.bernoulli(0.45))
+                .collect();
+            batched.step_batch(batch, &inputs, &mut out);
+            for (s, single) in singles.iter_mut().enumerate() {
+                let chunk = &inputs[s * cfg.n_in..(s + 1) * cfg.n_in];
+                let expect = single.step(chunk);
+                assert_eq!(&out[s * cfg.n_out..(s + 1) * cfg.n_out], &expect[..]);
+            }
+        }
+        for (s, single) in singles.iter().enumerate() {
+            assert_eq!(batched.output_traces_session(s), single.output_traces());
+        }
+    }
+
+    #[test]
+    fn subset_stepping_leaves_idle_sessions_alone() {
+        let cfg = SnnConfig::tiny();
+        let mut rng = Pcg64::new(42, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.3);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+        let mut b = NativeBackend::plastic(cfg.clone(), rule);
+        b.ensure_sessions(3);
+
+        let inputs = vec![true; 2 * cfg.n_in];
+        let mut out = Vec::new();
+        for _ in 0..10 {
+            b.step_sessions(&[0, 2], &inputs, &mut out);
+            assert_eq!(out.len(), 2 * cfg.n_out);
+        }
+        // session 1 never stepped: traces still zero
+        assert!(b.output_traces_session(1).iter().all(|&t| t == 0.0));
     }
 }

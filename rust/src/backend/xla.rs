@@ -1,10 +1,15 @@
 //! XLA backend: the AOT artifact executed through PJRT — the production
 //! request path (Python never runs here).
+//!
+//! Single-session (the executable holds one controller's device state);
+//! multi-session serving wraps it in
+//! [`crate::backend::ReplicatedBackend`] — the loop fallback.
 
 use super::SnnBackend;
 use crate::runtime::{Registry, SnnStepExecutable, Variant, XlaClient};
 use crate::snn::{NetworkRule, SnnConfig};
 
+/// AOT-compiled artifact executed through the PJRT runtime.
 pub struct XlaBackend {
     exe: SnnStepExecutable,
     cfg: SnnConfig,
@@ -55,6 +60,7 @@ impl XlaBackend {
         })
     }
 
+    /// Borrow the loaded executable (runtime diagnostics).
     pub fn executable(&self) -> &SnnStepExecutable {
         &self.exe
     }

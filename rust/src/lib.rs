@@ -16,15 +16,31 @@
 //! See `DESIGN.md` for the architecture inventory and `EXPERIMENTS.md`
 //! for the paper-vs-measured record.
 
+// Public API documentation is enforced crate-wide. Modules that still
+// carry documentation debt opt out locally with an explicit
+// `#![allow(missing_docs)]` + debt note; `snn/` and `backend/` (the
+// serving surface) are fully documented.
+#![warn(missing_docs)]
+
+// Documentation debt: the serving surface (snn, backend, coordinator) is
+// fully documented; the modules below still opt out item-by-item and are
+// tracked as an open item in ROADMAP.md.
+#[allow(missing_docs)]
 pub mod util;
 
 pub mod snn;
+#[allow(missing_docs)]
 pub mod env;
+#[allow(missing_docs)]
 pub mod es;
+#[allow(missing_docs)]
 pub mod fpga;
+#[allow(missing_docs)]
 pub mod runtime;
 pub mod backend;
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod mnist;
+#[allow(missing_docs)]
 pub mod baselines;
 

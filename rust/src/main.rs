@@ -8,10 +8,12 @@
 //!   fpga-report   Table I resources + power + Fig. 4 floorplan
 //!   artifacts     list AOT artifacts the runtime can load
 
-use firefly_p::backend::{BackendKind, FpgaBackend, NativeBackend, SnnBackend, XlaBackend};
+use firefly_p::backend::{
+    BackendKind, FpgaBackend, NativeBackend, ReplicatedBackend, SnnBackend, XlaBackend,
+};
 use firefly_p::coordinator::adapt_loop::{run_adaptation, AdaptConfig};
 use firefly_p::coordinator::offline::{genome_io, train_rule, TrainConfig};
-use firefly_p::coordinator::server::ControlServer;
+use firefly_p::coordinator::server::{ControlServer, ServerConfig};
 use firefly_p::env::{family_of, make_env, train_grid, Perturbation};
 use firefly_p::es::eval::GenomeKind;
 use firefly_p::fpga::power::{Activity, PowerModel};
@@ -55,12 +57,17 @@ fn parser() -> Parser {
     )
     .command(
         "serve",
-        "serve a deployed controller over TCP",
+        "serve deployed controllers over TCP (multi-session, batched)",
         vec![
             opt("env", "environment (sets I/O geometry)", "cheetah-vel"),
             opt("genome", "genome file", "results/rule.bin"),
             opt("backend", "native | xla | fpga", "xla"),
             opt("addr", "bind address", "127.0.0.1:7690"),
+            opt(
+                "sessions",
+                "max concurrent client sessions (native batches them; xla/fpga replicate)",
+                "16",
+            ),
         ],
     )
     .command(
@@ -250,14 +257,41 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
         }
     };
     let (obs_dim, act_dim) = (e.obs_dim(), e.act_dim());
-    let backend = match load_backend(args, &env) {
-        Ok(b) => b,
-        Err(err) => {
-            eprintln!("{err}");
-            return 1;
+    let sessions = args.get_usize("sessions", 16).max(1);
+    let kind = BackendKind::parse(&args.get_or("backend", "xla"));
+    // The native backend batches sessions in one SoA network; the
+    // single-session backends (xla, fpga) are replicated — one instance
+    // per session, stepped in a loop (correct fallback, no batching).
+    let backend: Box<dyn SnnBackend> = if kind == Some(BackendKind::Native) || sessions == 1 {
+        match load_backend(args, &env) {
+            Ok(b) => b,
+            Err(err) => {
+                eprintln!("{err}");
+                return 1;
+            }
         }
+    } else {
+        let mut instances = Vec::with_capacity(sessions);
+        for _ in 0..sessions {
+            match load_backend(args, &env) {
+                Ok(b) => instances.push(b),
+                Err(err) => {
+                    eprintln!("{err}");
+                    return 1;
+                }
+            }
+        }
+        Box::new(ReplicatedBackend::from_instances(instances))
     };
-    let mut server = ControlServer::new(backend, obs_dim, act_dim, seed);
+    let mut server = ControlServer::with_config(
+        backend,
+        obs_dim,
+        act_dim,
+        ServerConfig {
+            max_sessions: sessions,
+            seed,
+        },
+    );
     let addr = args.get_or("addr", "127.0.0.1:7690");
     if let Err(err) = server.serve(&addr, None) {
         eprintln!("server: {err}");

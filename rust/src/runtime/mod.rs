@@ -1,11 +1,31 @@
 //! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
 //! them on the request path. This is the **only** place the system
 //! touches XLA at runtime — Python is build-time-only (`make artifacts`).
+//!
+//! The execution layer is feature-gated: with `--features xla-runtime`
+//! the real PJRT client ([`client`]/[`executor`]) is compiled in; the
+//! default build substitutes [`stub`], which presents the identical API
+//! but reports "not compiled in" at client construction, so every
+//! XLA-path caller (benches, tests, quickstart) degrades to a skip
+//! instead of a build break. The artifact [`Registry`] is always
+//! available — it only parses `.meta` sidecars.
 
 pub mod artifact;
+
+#[cfg(feature = "xla-runtime")]
 pub mod client;
+#[cfg(feature = "xla-runtime")]
 pub mod executor;
 
+#[cfg(not(feature = "xla-runtime"))]
+pub mod stub;
+
 pub use artifact::{ArtifactMeta, Registry, Variant};
+
+#[cfg(feature = "xla-runtime")]
 pub use client::XlaClient;
+#[cfg(feature = "xla-runtime")]
 pub use executor::SnnStepExecutable;
+
+#[cfg(not(feature = "xla-runtime"))]
+pub use stub::{SnnStepExecutable, XlaClient};

@@ -1,0 +1,97 @@
+//! API-compatible stand-in for the PJRT execution layer, compiled when
+//! the `xla-runtime` feature is off (the zero-dependency default build).
+//!
+//! [`XlaClient::global`] always errors, so [`SnnStepExecutable`] can
+//! never be constructed — its methods are statically unreachable (the
+//! `Unconstructible` field is an empty enum) and exist only so the
+//! callers in `backend/xla.rs`, the benches and the integration tests
+//! typecheck identically in both builds.
+
+use std::rc::Rc;
+
+use super::artifact::ArtifactMeta;
+
+const UNAVAILABLE: &str = "xla runtime not compiled in — rebuild with `--features xla-runtime` \
+(needs the vendored `xla` crate); the native backend is the fallback serve path";
+
+/// Empty type: proof that a stub executable can never exist.
+enum Unconstructible {}
+
+/// Stub PJRT client; construction always fails.
+pub struct XlaClient {
+    _private: (),
+}
+
+impl XlaClient {
+    /// Always `Err` in the stub build.
+    pub fn new() -> Result<XlaClient, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    /// Always `Err` in the stub build.
+    pub fn global() -> Result<Rc<XlaClient>, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    /// Platform tag for logs.
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Always `Err` in the stub build.
+    pub fn load(self: &Rc<Self>, _meta: &ArtifactMeta) -> Result<SnnStepExecutable, String> {
+        Err(UNAVAILABLE.to_string())
+    }
+}
+
+/// Stub executable: same surface as the real one, never instantiable.
+pub struct SnnStepExecutable {
+    /// Artifact geometry (mirrors the real executor's field).
+    pub meta: ArtifactMeta,
+    /// Steps executed (mirrors the real executor's field).
+    pub steps_executed: u64,
+    _unconstructible: Unconstructible,
+}
+
+impl SnnStepExecutable {
+    /// Statically unreachable (the stub executable cannot exist).
+    pub fn set_rule(&mut self, _theta1: &[f32], _theta2: &[f32]) -> Result<(), String> {
+        match self._unconstructible {}
+    }
+
+    /// Statically unreachable (the stub executable cannot exist).
+    pub fn set_weights(&mut self, _w1: &[f32], _w2: &[f32]) -> Result<(), String> {
+        match self._unconstructible {}
+    }
+
+    /// Statically unreachable (the stub executable cannot exist).
+    pub fn reset(&mut self, _reset_weights: bool) {
+        match self._unconstructible {}
+    }
+
+    /// Statically unreachable (the stub executable cannot exist).
+    pub fn step(&mut self, _input_spikes: &[bool]) -> Result<Vec<bool>, String> {
+        match self._unconstructible {}
+    }
+
+    /// Statically unreachable (the stub executable cannot exist).
+    pub fn state_f32(&self, _idx: usize) -> Result<Vec<f32>, String> {
+        match self._unconstructible {}
+    }
+
+    /// Statically unreachable (the stub executable cannot exist).
+    pub fn output_traces(&self) -> Result<Vec<f32>, String> {
+        match self._unconstructible {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_client_reports_unavailable() {
+        let err = XlaClient::global().unwrap_err();
+        assert!(err.contains("xla-runtime"), "{err}");
+    }
+}

@@ -18,7 +18,9 @@ use crate::util::rng::Pcg64;
 /// Population encoder: `dims × neurons_per_dim` Gaussian tuning curves.
 #[derive(Clone, Debug)]
 pub struct PopulationEncoder {
+    /// Number of observation dimensions encoded.
     pub dims: usize,
+    /// Tuning-curve neurons per observation dimension.
     pub neurons_per_dim: usize,
     /// Per-dimension (lo, hi) observation ranges.
     pub ranges: Vec<(f32, f32)>,
@@ -29,6 +31,7 @@ pub struct PopulationEncoder {
 }
 
 impl PopulationEncoder {
+    /// Encoder with explicit per-dimension observation ranges.
     pub fn new(dims: usize, neurons_per_dim: usize, ranges: Vec<(f32, f32)>) -> Self {
         assert_eq!(ranges.len(), dims);
         assert!(neurons_per_dim >= 2);
@@ -50,6 +53,7 @@ impl PopulationEncoder {
         )
     }
 
+    /// Total encoder population size (`dims × neurons_per_dim`).
     pub fn n_neurons(&self) -> usize {
         self.dims * self.neurons_per_dim
     }
@@ -94,11 +98,13 @@ pub struct RateEncoder {
 }
 
 impl RateEncoder {
+    /// Encoder with the given saturated-pixel firing probability.
     pub fn new(max_rate: f64) -> Self {
         assert!((0.0..=1.0).contains(&max_rate));
         RateEncoder { max_rate }
     }
 
+    /// Sample one spike frame from pixel intensities in [0, 1].
     pub fn encode(&self, intensities: &[f32], rng: &mut Pcg64, spikes: &mut [bool]) {
         assert_eq!(intensities.len(), spikes.len());
         for (s, &x) in spikes.iter_mut().zip(intensities) {
@@ -113,7 +119,9 @@ impl RateEncoder {
 /// signed actions.
 #[derive(Clone, Debug)]
 pub struct TraceDecoder {
+    /// Number of continuous action dimensions produced.
     pub action_dims: usize,
+    /// Two output neurons (positive/negative) per action dimension.
     pub pairs: bool,
     /// Gain before tanh.
     pub gain: f32,
@@ -122,6 +130,7 @@ pub struct TraceDecoder {
 }
 
 impl TraceDecoder {
+    /// Paired decoder for `action_dims` dimensions at trace decay λ.
     pub fn new(action_dims: usize, lambda: f32) -> Self {
         TraceDecoder {
             action_dims,
@@ -140,6 +149,7 @@ impl TraceDecoder {
         }
     }
 
+    /// Map output-population traces to actions in [−1, 1] per dimension.
     pub fn decode(&self, traces: &[f32], actions: &mut [f32]) {
         assert_eq!(traces.len(), self.n_neurons());
         assert_eq!(actions.len(), self.action_dims);

@@ -16,40 +16,78 @@
 use super::numeric::Scalar;
 
 /// LIF population state: membrane potentials plus spike outputs.
+///
+/// Supports a structure-of-arrays **batch dimension** for multi-session
+/// serving (see DESIGN.md §Batched-Serving): state is laid out
+/// `[neuron][session]` so the per-neuron inner loop runs contiguously
+/// over sessions. `batch == 1` (the [`LifLayer::new`] default) is
+/// byte-identical to the historical single-session layout, so all
+/// existing consumers (ES rollouts, the FPGA golden twin, MNIST) are
+/// unaffected.
 #[derive(Clone, Debug)]
 pub struct LifLayer<S: Scalar> {
+    /// Membrane potentials, `neurons × batch`, laid out `[neuron][session]`.
     pub v: Vec<S>,
+    /// Spike outputs of the most recent step, same layout as `v`.
     pub spikes: Vec<bool>,
+    /// Firing threshold shared by every neuron in the population.
     pub v_th: S,
     /// Soft reset: subtract V_th on spike (true, default) vs hard reset
     /// to zero (false). The FPGA design uses subtraction.
     pub soft_reset: bool,
+    /// Number of independent sessions interleaved in `v`/`spikes`.
+    pub batch: usize,
+    /// Number of neurons in the population (`v.len() == neurons * batch`).
+    pub neurons: usize,
 }
 
 impl<S: Scalar> LifLayer<S> {
+    /// Single-session population of `n` neurons with threshold `v_th`.
     pub fn new(n: usize, v_th: f32) -> Self {
+        Self::batched(n, 1, v_th)
+    }
+
+    /// Population of `n` neurons replicated across `batch` independent
+    /// sessions (structure-of-arrays, `[neuron][session]`).
+    pub fn batched(n: usize, batch: usize, v_th: f32) -> Self {
+        assert!(batch >= 1, "batch must be >= 1");
         LifLayer {
-            v: vec![S::ZERO; n],
-            spikes: vec![false; n],
+            v: vec![S::ZERO; n * batch],
+            spikes: vec![false; n * batch],
             v_th: S::from_f32(v_th),
             soft_reset: true,
+            batch,
+            neurons: n,
         }
     }
 
+    /// Total state size (`neurons × batch`).
     pub fn len(&self) -> usize {
         self.v.len()
     }
 
+    /// True when the population holds no neurons.
     pub fn is_empty(&self) -> bool {
         self.v.is_empty()
     }
 
+    /// Zero every membrane potential and clear all spikes (all sessions).
     pub fn reset(&mut self) {
         for v in self.v.iter_mut() {
             *v = S::ZERO;
         }
         for s in self.spikes.iter_mut() {
             *s = false;
+        }
+    }
+
+    /// Zero one session's column of membrane/spike state, leaving the
+    /// other sessions untouched.
+    pub fn reset_session(&mut self, session: usize) {
+        assert!(session < self.batch, "session out of range");
+        for i in 0..self.neurons {
+            self.v[i * self.batch + session] = S::ZERO;
+            self.spikes[i * self.batch + session] = false;
         }
     }
 
@@ -69,6 +107,44 @@ impl<S: Scalar> LifLayer<S> {
             } else {
                 *s = false;
                 *v = nv;
+            }
+        }
+        fired
+    }
+
+    /// Batched step over the sessions selected by `active` (`active.len()
+    /// == batch`). Inactive sessions' membrane and spike state are left
+    /// exactly as they were — a session only advances when its client
+    /// submitted an observation this tick. Per-session arithmetic and
+    /// operation order are identical to [`LifLayer::step`], so a batched
+    /// session is bit-equivalent to a single-session layer fed the same
+    /// spike history. Returns the number of spikes emitted by active
+    /// sessions.
+    pub fn step_masked(&mut self, currents: &[S], active: &[bool]) -> usize {
+        assert_eq!(currents.len(), self.v.len(), "current/neuron mismatch");
+        assert_eq!(active.len(), self.batch, "mask/batch mismatch");
+        let b = self.batch;
+        let mut fired = 0;
+        for i in 0..self.neurons {
+            let row = i * b;
+            for (k, &on) in active.iter().enumerate() {
+                if !on {
+                    continue;
+                }
+                let idx = row + k;
+                let nv = self.v[idx].half().add(currents[idx].half());
+                if nv > self.v_th {
+                    self.spikes[idx] = true;
+                    fired += 1;
+                    self.v[idx] = if self.soft_reset {
+                        nv.sub(self.v_th)
+                    } else {
+                        S::ZERO
+                    };
+                } else {
+                    self.spikes[idx] = false;
+                    self.v[idx] = nv;
+                }
             }
         }
         fired
@@ -182,5 +258,55 @@ mod tests {
     fn wrong_current_len_panics() {
         let mut l = LifLayer::<f32>::new(2, 1.0);
         l.step(&[1.0]);
+    }
+
+    #[test]
+    fn batched_sessions_match_independent_layers() {
+        // Three sessions with different drive levels, stepped batched,
+        // must match three independent single-session layers bit-for-bit.
+        let n = 4;
+        let batch = 3;
+        let drives = [0.7f32, 1.6, 3.2];
+        let mut batched = LifLayer::<f32>::batched(n, batch, 1.0);
+        let mut singles: Vec<LifLayer<f32>> = (0..batch).map(|_| LifLayer::new(n, 1.0)).collect();
+        let active = vec![true; batch];
+        for _ in 0..25 {
+            let mut currents = vec![0.0f32; n * batch];
+            for i in 0..n {
+                for b in 0..batch {
+                    currents[i * batch + b] = drives[b] + i as f32 * 0.1;
+                }
+            }
+            batched.step_masked(&currents, &active);
+            for (b, single) in singles.iter_mut().enumerate() {
+                let cur: Vec<f32> = (0..n).map(|i| currents[i * batch + b]).collect();
+                single.step(&cur);
+                for i in 0..n {
+                    assert_eq!(batched.v[i * batch + b], single.v[i], "v mismatch s{b} n{i}");
+                    assert_eq!(batched.spikes[i * batch + b], single.spikes[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_sessions_are_frozen() {
+        let n = 2;
+        let mut l = LifLayer::<f32>::batched(n, 2, 1.0);
+        let currents = vec![4.0f32; n * 2];
+        // advance only session 0; session 1 must stay at zero state
+        l.step_masked(&currents, &[true, false]);
+        l.step_masked(&currents, &[true, false]);
+        for i in 0..n {
+            assert!(l.v[i * 2] != 0.0 || l.spikes[i * 2]);
+            assert_eq!(l.v[i * 2 + 1], 0.0);
+            assert!(!l.spikes[i * 2 + 1]);
+        }
+        // reset_session clears only the requested column
+        l.reset_session(0);
+        for i in 0..n {
+            assert_eq!(l.v[i * 2], 0.0);
+            assert!(!l.spikes[i * 2]);
+        }
     }
 }

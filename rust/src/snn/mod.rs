@@ -3,6 +3,13 @@
 //! the computation FireFly-P performs (generic over f32 / bit-accurate
 //! FP16, so the same code validates both the XLA artifact and the FPGA
 //! simulator).
+//!
+//! Every stateful type carries a structure-of-arrays **batch dimension**
+//! (`[element][session]` layout, batch = 1 by default) so one network
+//! instance can step many independent controller sessions per tick —
+//! the engine under the multi-session control server (DESIGN.md
+//! §Batched-Serving). Sessions share the config and the frozen rule θ;
+//! membranes, traces, and plastic weights are per-session.
 
 pub mod encoding;
 pub mod lif;

@@ -16,14 +16,17 @@
 
 use super::lif::LifLayer;
 use super::numeric::Scalar;
-use super::plasticity::{apply_update, PlasticityConfig, RuleParams};
+use super::plasticity::{apply_update, apply_update_batch, PlasticityConfig, RuleParams};
 use super::trace::TraceVector;
 
 /// Static architecture + dynamics constants.
 #[derive(Clone, Debug)]
 pub struct SnnConfig {
+    /// Input population size (encoder neurons).
     pub n_in: usize,
+    /// Hidden population size (paper: 128 for control, 1024 for MNIST).
     pub n_hidden: usize,
+    /// Output population size (decoder neurons).
     pub n_out: usize,
     /// Trace decay λ (default 0.5 — a shift in hardware).
     pub lambda: f32,
@@ -31,10 +34,12 @@ pub struct SnnConfig {
     pub v_th: f32,
     /// Input current gain applied to encoded observations.
     pub input_gain: f32,
+    /// Online-update hyper-parameters (η scale and weight clip).
     pub plasticity: PlasticityConfig,
 }
 
 impl SnnConfig {
+    /// Control-geometry config: `n_in → 128 → n_out` with paper defaults.
     pub fn control(n_in: usize, n_out: usize) -> Self {
         SnnConfig {
             n_in,
@@ -47,6 +52,7 @@ impl SnnConfig {
         }
     }
 
+    /// Table-II MNIST geometry: 784 → 1024 → 10.
     pub fn mnist() -> Self {
         SnnConfig {
             n_in: 784,
@@ -72,10 +78,12 @@ impl SnnConfig {
         }
     }
 
+    /// Synapse count of the input → hidden layer.
     pub fn l1_synapses(&self) -> usize {
         self.n_in * self.n_hidden
     }
 
+    /// Synapse count of the hidden → output layer.
     pub fn l2_synapses(&self) -> usize {
         self.n_hidden * self.n_out
     }
@@ -94,11 +102,14 @@ impl SnnConfig {
 /// The frozen learning rule for both synaptic layers (Phase-1 output).
 #[derive(Clone, Debug)]
 pub struct NetworkRule {
+    /// Rule coefficients for the input → hidden synapses.
     pub l1: RuleParams,
+    /// Rule coefficients for the hidden → output synapses.
     pub l2: RuleParams,
 }
 
 impl NetworkRule {
+    /// All-zero rule (no plasticity) sized for `cfg`.
     pub fn zeros(cfg: &SnnConfig) -> Self {
         NetworkRule {
             l1: RuleParams::zeros(cfg.n_in, cfg.n_hidden),
@@ -116,6 +127,7 @@ impl NetworkRule {
         rule
     }
 
+    /// Serialize back to the flat ES genome layout `[θ_L1 ‖ θ_L2]`.
     pub fn to_flat(&self) -> Vec<f32> {
         let mut v = Vec::with_capacity(self.l1.theta.len() + self.l2.theta.len());
         v.extend_from_slice(&self.l1.theta);
@@ -134,47 +146,91 @@ pub enum Mode {
 }
 
 /// Full mutable network state, generic over the arithmetic domain.
+///
+/// Carries a structure-of-arrays **batch dimension** for multi-session
+/// serving (DESIGN.md §Batched-Serving). One network instance holds
+/// `batch` independent controller sessions that share the static parts —
+/// the config, and in plastic mode the frozen rule θ (by far the largest
+/// array: 4 f32 per synapse) — while membranes, traces, and (in plastic
+/// mode) the evolving weights are per-session, interleaved
+/// `[element][session]`. `batch == 1` (the [`SnnNetwork::new`] default)
+/// is byte-identical to the historical single-session layout.
+///
+/// In [`Mode::Fixed`] the weights never change, so they are stored once
+/// (`n_in × n_hidden`, no batch dimension) and shared by every session.
 #[derive(Clone, Debug)]
 pub struct SnnNetwork<S: Scalar> {
+    /// Static architecture and dynamics constants.
     pub cfg: SnnConfig,
+    /// Plastic (shared rule θ, per-session weights) or fixed weights.
     pub mode: Mode,
-    /// L1 weights, `n_in × n_hidden` row-major.
+    /// L1 weights. Plastic: `n_in × n_hidden × batch`, laid out
+    /// `[synapse][session]`. Fixed: `n_in × n_hidden` row-major, shared
+    /// across sessions.
     pub w1: Vec<S>,
-    /// L2 weights, `n_hidden × n_out` row-major.
+    /// L2 weights; same layout rules as `w1` with `n_hidden × n_out`.
     pub w2: Vec<S>,
+    /// Hidden LIF population (batched).
     pub hidden: LifLayer<S>,
+    /// Output LIF population (batched).
     pub output: LifLayer<S>,
+    /// Input-population spike traces (batched).
     pub trace_in: TraceVector<S>,
+    /// Hidden-population spike traces (batched).
     pub trace_hidden: TraceVector<S>,
+    /// Output-population spike traces (batched).
     pub trace_out: TraceVector<S>,
+    /// Number of independent sessions this instance multiplexes.
+    pub batch: usize,
     /// Input spike staging (set by `step`).
     in_spikes: Vec<bool>,
     /// Scratch current buffers (allocation-free steady state).
     cur_hidden: Vec<S>,
     cur_out: Vec<S>,
+    /// Timesteps executed (batched steps count once).
     pub steps: u64,
 }
 
 impl<S: Scalar> SnnNetwork<S> {
+    /// Single-session network (the historical constructor).
     pub fn new(cfg: SnnConfig, mode: Mode) -> Self {
+        Self::new_batched(cfg, mode, 1)
+    }
+
+    /// Network multiplexing `batch` independent sessions in
+    /// structure-of-arrays layout. All sessions share `cfg` and the rule
+    /// θ; each has its own membrane/trace (and, in plastic mode, weight)
+    /// state.
+    pub fn new_batched(cfg: SnnConfig, mode: Mode, batch: usize) -> Self {
+        assert!(batch >= 1, "batch must be >= 1");
         let (n_in, n_h, n_o) = (cfg.n_in, cfg.n_hidden, cfg.n_out);
         let lambda = cfg.lambda;
         let v_th = cfg.v_th;
+        // Fixed weights are session-invariant: store one copy.
+        let wb = if matches!(mode, Mode::Plastic(_)) { batch } else { 1 };
         SnnNetwork {
-            w1: vec![S::ZERO; n_in * n_h],
-            w2: vec![S::ZERO; n_h * n_o],
-            hidden: LifLayer::new(n_h, v_th),
-            output: LifLayer::new(n_o, v_th),
-            trace_in: TraceVector::new(n_in, lambda),
-            trace_hidden: TraceVector::new(n_h, lambda),
-            trace_out: TraceVector::new(n_o, lambda),
-            in_spikes: vec![false; n_in],
-            cur_hidden: vec![S::ZERO; n_h],
-            cur_out: vec![S::ZERO; n_o],
+            w1: vec![S::ZERO; n_in * n_h * wb],
+            w2: vec![S::ZERO; n_h * n_o * wb],
+            hidden: LifLayer::batched(n_h, batch, v_th),
+            output: LifLayer::batched(n_o, batch, v_th),
+            trace_in: TraceVector::batched(n_in, batch, lambda),
+            trace_hidden: TraceVector::batched(n_h, batch, lambda),
+            trace_out: TraceVector::batched(n_o, batch, lambda),
+            in_spikes: vec![false; n_in * batch],
+            cur_hidden: vec![S::ZERO; n_h * batch],
+            cur_out: vec![S::ZERO; n_o * batch],
             steps: 0,
+            batch,
             cfg,
             mode,
         }
+    }
+
+    /// Whether `w1`/`w2` are stored once and shared by every session
+    /// (fixed mode) rather than per-session (plastic mode).
+    #[inline]
+    pub fn weights_shared(&self) -> bool {
+        matches!(self.mode, Mode::Fixed)
     }
 
     /// Install fixed weights (baseline mode) from flat `[W1 ‖ W2]`.
@@ -189,8 +245,8 @@ impl<S: Scalar> SnnNetwork<S> {
         }
     }
 
-    /// Reset all dynamic state (weights too, in plastic mode — Phase 2
-    /// starts every deployment from w = 0).
+    /// Reset all dynamic state of **every** session (weights too, in
+    /// plastic mode — Phase 2 starts every deployment from w = 0).
     pub fn reset(&mut self) {
         if matches!(self.mode, Mode::Plastic(_)) {
             for w in self.w1.iter_mut() {
@@ -208,9 +264,32 @@ impl<S: Scalar> SnnNetwork<S> {
         self.steps = 0;
     }
 
+    /// Reset one session's dynamic state (its weight column too, in
+    /// plastic mode), leaving every other session untouched.
+    pub fn reset_session(&mut self, session: usize) {
+        assert!(session < self.batch, "session out of range");
+        if matches!(self.mode, Mode::Plastic(_)) {
+            let b = self.batch;
+            for s in 0..self.cfg.l1_synapses() {
+                self.w1[s * b + session] = S::ZERO;
+            }
+            for s in 0..self.cfg.l2_synapses() {
+                self.w2[s * b + session] = S::ZERO;
+            }
+        }
+        self.hidden.reset_session(session);
+        self.output.reset_session(session);
+        self.trace_in.reset_session(session);
+        self.trace_hidden.reset_session(session);
+        self.trace_out.reset_session(session);
+    }
+
     /// One network timestep driven by already-binary input spikes.
-    /// Returns a reference to the output spike vector.
+    /// Returns a reference to the output spike vector. Single-session
+    /// instances only; batched instances use
+    /// [`SnnNetwork::step_spikes_masked`].
     pub fn step_spikes(&mut self, input_spikes: &[bool]) -> &[bool] {
+        assert_eq!(self.batch, 1, "batched networks step via step_spikes_masked");
         assert_eq!(input_spikes.len(), self.cfg.n_in);
         self.in_spikes.copy_from_slice(input_spikes);
 
@@ -271,9 +350,97 @@ impl<S: Scalar> SnnNetwork<S> {
         self.step_spikes(&spikes)
     }
 
-    /// Output trace snapshot as f32 (decoder input).
+    /// One batched timestep over the sessions selected by `active`
+    /// (`active.len() == batch`). `input_spikes` is `n_in × batch`, laid
+    /// out `[neuron][session]` like all batched state; entries of
+    /// inactive sessions are ignored. Inactive sessions' membranes,
+    /// traces and weights do not advance — a controller session only
+    /// moves when its client submitted an observation this tick.
+    ///
+    /// Per-session arithmetic and operation order are identical to
+    /// [`SnnNetwork::step_spikes`], so a batched session is bit-equivalent
+    /// to a lone single-session network fed the same spike history (this
+    /// is pinned by the `batched_matches_sequential_singles` test).
+    ///
+    /// Returns the full `n_out × batch` output spike buffer; inactive
+    /// sessions' entries hold their previous values.
+    pub fn step_spikes_masked(&mut self, input_spikes: &[bool], active: &[bool]) -> &[bool] {
+        let b = self.batch;
+        assert_eq!(input_spikes.len(), self.cfg.n_in * b);
+        assert_eq!(active.len(), b);
+        self.in_spikes.copy_from_slice(input_spikes);
+        let shared = self.weights_shared();
+
+        // --- L1 forward ---------------------------------------------------
+        matvec_spikes_batch(
+            &self.w1,
+            shared,
+            &self.in_spikes,
+            self.cfg.n_in,
+            self.cfg.n_hidden,
+            b,
+            active,
+            &mut self.cur_hidden,
+        );
+        self.hidden.step_masked(&self.cur_hidden, active);
+
+        // --- L2 forward ---------------------------------------------------
+        matvec_spikes_batch(
+            &self.w2,
+            shared,
+            &self.hidden.spikes,
+            self.cfg.n_hidden,
+            self.cfg.n_out,
+            b,
+            active,
+            &mut self.cur_out,
+        );
+        self.output.step_masked(&self.cur_out, active);
+
+        // --- Trace updates ------------------------------------------------
+        self.trace_in.update_masked(&self.in_spikes, active);
+        self.trace_hidden.update_masked(&self.hidden.spikes, active);
+        self.trace_out.update_masked(&self.output.spikes, active);
+
+        // --- Plasticity (per-session weights, shared θ) -------------------
+        if let Mode::Plastic(rule) = &self.mode {
+            apply_update_batch(
+                &rule.l1,
+                &self.cfg.plasticity,
+                b,
+                active,
+                &mut self.w1,
+                &self.trace_in.values,
+                &self.trace_hidden.values,
+            );
+            apply_update_batch(
+                &rule.l2,
+                &self.cfg.plasticity,
+                b,
+                active,
+                &mut self.w2,
+                &self.trace_hidden.values,
+                &self.trace_out.values,
+            );
+        }
+
+        self.steps += 1;
+        &self.output.spikes
+    }
+
+    /// Output trace snapshot as f32 (decoder input). For batched
+    /// instances this is the full `[neuron][session]` buffer; use
+    /// [`SnnNetwork::output_traces_f32_session`] for one session.
     pub fn output_traces_f32(&self) -> Vec<f32> {
         self.trace_out.values.iter().map(|v| v.to_f32()).collect()
+    }
+
+    /// One session's output-trace snapshot as f32 (decoder input).
+    pub fn output_traces_f32_session(&self, session: usize) -> Vec<f32> {
+        assert!(session < self.batch, "session out of range");
+        (0..self.cfg.n_out)
+            .map(|o| self.trace_out.values[o * self.batch + session].to_f32())
+            .collect()
     }
 
     /// L∞ norm of the weight matrices (stability diagnostics).
@@ -314,6 +481,66 @@ pub fn matvec_spikes<S: Scalar>(w: &[S], spikes: &[bool], n_post: usize, out: &m
         let row = &w[j * n_post..(j + 1) * n_post];
         for (o, &wv) in out.iter_mut().zip(row) {
             *o = o.add(wv);
+        }
+    }
+}
+
+/// Batched spike-driven matvec over `batch` independent sessions.
+///
+/// `spikes` is `n_pre × batch` (`[neuron][session]`), `out` is
+/// `n_post × batch`. With `shared_w` the weight matrix is the plain
+/// `n_pre × n_post` row-major layout used by fixed-weight deployments;
+/// otherwise it is `n_pre × n_post × batch` (`[synapse][session]`).
+/// Inactive sessions' outputs are zeroed but receive no accumulation.
+/// The event-driven skip operates per (presynaptic neuron, session):
+/// silent sessions of a row cost nothing, mirroring the spike gating of
+/// the hardware dataflow.
+#[allow(clippy::too_many_arguments)]
+pub fn matvec_spikes_batch<S: Scalar>(
+    w: &[S],
+    shared_w: bool,
+    spikes: &[bool],
+    n_pre: usize,
+    n_post: usize,
+    batch: usize,
+    active: &[bool],
+    out: &mut [S],
+) {
+    assert_eq!(out.len(), n_post * batch);
+    assert_eq!(spikes.len(), n_pre * batch);
+    assert_eq!(active.len(), batch);
+    let expect_w = if shared_w {
+        n_pre * n_post
+    } else {
+        n_pre * n_post * batch
+    };
+    assert_eq!(w.len(), expect_w);
+    for o in out.iter_mut() {
+        *o = S::ZERO;
+    }
+    for j in 0..n_pre {
+        let srow = &spikes[j * batch..(j + 1) * batch];
+        // Event-driven skip: rows silent in every active session are free.
+        if !srow.iter().zip(active).any(|(&s, &a)| s && a) {
+            continue;
+        }
+        for i in 0..n_post {
+            let orow = &mut out[i * batch..(i + 1) * batch];
+            if shared_w {
+                let wv = w[j * n_post + i];
+                for b in 0..batch {
+                    if active[b] && srow[b] {
+                        orow[b] = orow[b].add(wv);
+                    }
+                }
+            } else {
+                let wrow = &w[(j * n_post + i) * batch..(j * n_post + i + 1) * batch];
+                for b in 0..batch {
+                    if active[b] && srow[b] {
+                        orow[b] = orow[b].add(wrow[b]);
+                    }
+                }
+            }
         }
     }
 }
@@ -451,6 +678,124 @@ mod tests {
         // must stay closely aligned (paper argues FP16 suffices).
         let agreement = spike_agreement as f64 / total as f64;
         assert!(agreement > 0.9, "spike agreement only {agreement}");
+    }
+
+    #[test]
+    fn batched_matches_sequential_singles() {
+        // B sessions stepped through one batched plastic network must be
+        // bit-identical to B independent single-session networks fed the
+        // same per-session spike streams — the correctness contract the
+        // batching server relies on.
+        let cfg = SnnConfig::tiny();
+        let batch = 4;
+        let mut rng = Pcg64::new(21, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.25);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+
+        let mut batched =
+            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone()), batch);
+        let mut singles: Vec<SnnNetwork<f32>> = (0..batch)
+            .map(|_| SnnNetwork::new(cfg.clone(), Mode::Plastic(rule.clone())))
+            .collect();
+
+        let active = vec![true; batch];
+        let mut input_rng = Pcg64::new(22, 0);
+        for _ in 0..40 {
+            // independent spike stream per session, [neuron][session]
+            let mut inmat = vec![false; cfg.n_in * batch];
+            for b in 0..batch {
+                for j in 0..cfg.n_in {
+                    inmat[j * batch + b] = input_rng.bernoulli(0.4 + 0.1 * b as f64);
+                }
+            }
+            batched.step_spikes_masked(&inmat, &active);
+            for (b, single) in singles.iter_mut().enumerate() {
+                let spikes: Vec<bool> = (0..cfg.n_in).map(|j| inmat[j * batch + b]).collect();
+                single.step_spikes(&spikes);
+                for o in 0..cfg.n_out {
+                    assert_eq!(
+                        batched.output.spikes[o * batch + b],
+                        single.output.spikes[o],
+                        "output spike mismatch session {b} neuron {o}"
+                    );
+                }
+            }
+        }
+        // weights bit-exact per session after 40 plastic steps
+        for (b, single) in singles.iter().enumerate() {
+            for s in 0..cfg.l1_synapses() {
+                assert_eq!(batched.w1[s * batch + b], single.w1[s], "w1 s{b} syn{s}");
+            }
+            for s in 0..cfg.l2_synapses() {
+                assert_eq!(batched.w2[s * batch + b], single.w2[s], "w2 s{b} syn{s}");
+            }
+            assert_eq!(
+                batched.output_traces_f32_session(b),
+                single.output_traces_f32()
+            );
+        }
+    }
+
+    #[test]
+    fn masked_sessions_do_not_advance() {
+        let cfg = SnnConfig::tiny();
+        let batch = 3;
+        let mut rng = Pcg64::new(23, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.3);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+        let mut net = SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule), batch);
+
+        let mut inmat = vec![true; cfg.n_in * batch];
+        // session 1 inactive: even with garbage input bits set, its state
+        // must stay exactly zero
+        for j in 0..cfg.n_in {
+            inmat[j * batch + 1] = true;
+        }
+        let active = [true, false, true];
+        for _ in 0..30 {
+            net.step_spikes_masked(&inmat, &active);
+        }
+        for s in 0..cfg.l1_synapses() {
+            assert_eq!(net.w1[s * batch + 1], 0.0, "masked session weight moved");
+        }
+        for o in 0..cfg.n_out {
+            assert_eq!(net.trace_out.values[o * batch + 1], 0.0);
+        }
+        // active sessions did move
+        assert!(net.w1.iter().any(|&w| w != 0.0));
+
+        // per-session reset clears only that column
+        net.reset_session(0);
+        for s in 0..cfg.l1_synapses().min(64) {
+            assert_eq!(net.w1[s * batch], 0.0);
+        }
+        assert!(
+            (0..cfg.l1_synapses()).any(|s| net.w1[s * batch + 2] != 0.0),
+            "session 2 must survive session 0's reset"
+        );
+    }
+
+    #[test]
+    fn batched_fixed_mode_shares_one_weight_copy() {
+        let cfg = SnnConfig::tiny();
+        let mut net = SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Fixed, 8);
+        assert_eq!(net.w1.len(), cfg.l1_synapses(), "fixed weights must not replicate");
+        let mut rng = Pcg64::new(24, 0);
+        let mut flat = vec![0.0f32; cfg.n_weights()];
+        rng.fill_normal_f32(&mut flat, 1.0);
+        net.load_weights(&flat);
+        let active = vec![true; 8];
+        let inmat = vec![true; cfg.n_in * 8];
+        net.step_spikes_masked(&inmat, &active);
+        // identical inputs + shared weights → identical outputs per session
+        for o in 0..cfg.n_out {
+            let first = net.output.spikes[o * 8];
+            for b in 1..8 {
+                assert_eq!(net.output.spikes[o * 8 + b], first);
+            }
+        }
     }
 
     #[test]

@@ -10,14 +10,21 @@ use crate::util::fp16::F16;
 
 /// A scalar the SNN core can compute in.
 pub trait Scalar: Copy + Clone + PartialOrd + std::fmt::Debug + Send + Sync + 'static {
+    /// Additive identity.
     const ZERO: Self;
+    /// Multiplicative identity.
     const ONE: Self;
 
+    /// Quantize from host f32 (one rounding for `F16`).
     fn from_f32(x: f32) -> Self;
+    /// Widen back to host f32 (exact for both domains).
     fn to_f32(self) -> f32;
 
+    /// Addition with the domain's rounding.
     fn add(self, rhs: Self) -> Self;
+    /// Subtraction with the domain's rounding.
     fn sub(self, rhs: Self) -> Self;
+    /// Multiplication with the domain's rounding.
     fn mul(self, rhs: Self) -> Self;
 
     /// `self * a + b` with the rounding profile of the target hardware:
@@ -33,8 +40,10 @@ pub trait Scalar: Copy + Clone + PartialOrd + std::fmt::Debug + Send + Sync + 's
     /// rather than overflowing to ±inf).
     fn saturating_add(self, rhs: Self) -> Self;
 
+    /// Clamp into `[lo, hi]` (the weight-clip backstop).
     fn clamp(self, lo: Self, hi: Self) -> Self;
 
+    /// False for NaN/±inf (stability diagnostics).
     fn is_finite(self) -> bool;
 }
 

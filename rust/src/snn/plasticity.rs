@@ -23,15 +23,19 @@ use crate::util::rng::Pcg64;
 /// synapses, 4 coefficients each, row-major `[pre][post][4]`.
 #[derive(Clone, Debug)]
 pub struct RuleParams {
+    /// Presynaptic population size.
     pub pre: usize,
+    /// Postsynaptic population size.
     pub post: usize,
     /// Packed [α, β, γ, δ] × (pre·post), f32 master copy (ES space).
     pub theta: Vec<f32>,
 }
 
+/// Coefficients stored per synapse (α, β, γ, δ).
 pub const COEFFS_PER_SYNAPSE: usize = 4;
 
 impl RuleParams {
+    /// All-zero rule for a `pre × post` synaptic layer.
     pub fn zeros(pre: usize, post: usize) -> Self {
         RuleParams {
             pre,
@@ -47,10 +51,12 @@ impl RuleParams {
         p
     }
 
+    /// Number of f32 parameters in this layer's rule (4 per synapse).
     pub fn n_params(&self) -> usize {
         self.theta.len()
     }
 
+    /// Offset of synapse (j → i)'s packed quadruple inside `theta`.
     #[inline]
     pub fn idx(&self, j_pre: usize, i_post: usize) -> usize {
         (j_pre * self.post + i_post) * COEFFS_PER_SYNAPSE
@@ -159,6 +165,72 @@ pub fn apply_update<S: Scalar>(
             ];
             let w = &mut weights[row + i];
             *w = update_synapse(coeffs, eta, lo, hi, *w, sj, si);
+        }
+    }
+}
+
+/// Batched plasticity step over `batch` independent sessions sharing one
+/// frozen rule θ (the memory-layout point of DESIGN.md §Batched-Serving:
+/// θ is 4× the size of a weight matrix, and batching turns its per-step
+/// streaming cost from `O(batch)` into `O(1)`).
+///
+/// Layouts are structure-of-arrays: `weights` is
+/// `pre × post × batch` (`[synapse][session]`), traces are
+/// `neurons × batch` (`[neuron][session]`). Sessions where
+/// `active[b] == false` keep their weights untouched. The per-synapse
+/// datapath is [`update_synapse`] — the same function the single-session
+/// [`apply_update`] uses — with identical operation order, so a batched
+/// session is bit-equivalent to a lone network fed the same history.
+pub fn apply_update_batch<S: Scalar>(
+    params: &RuleParams,
+    cfg: &PlasticityConfig,
+    batch: usize,
+    active: &[bool],
+    weights: &mut [S],
+    pre_trace: &[S],
+    post_trace: &[S],
+) {
+    assert_eq!(weights.len(), params.pre * params.post * batch);
+    assert_eq!(pre_trace.len(), params.pre * batch);
+    assert_eq!(post_trace.len(), params.post * batch);
+    assert_eq!(active.len(), batch);
+    let eta = S::from_f32(cfg.eta);
+    let lo = S::from_f32(-cfg.w_clip);
+    let hi = S::from_f32(cfg.w_clip);
+    // Full-batch ticks (the serving steady state) take a mask-free inner
+    // loop: a branchless contiguous sweep over the session lanes that
+    // the compiler can keep in SIMD registers.
+    let all_active = active.iter().all(|&a| a);
+
+    for j in 0..params.pre {
+        let pre_row = &pre_trace[j * batch..(j + 1) * batch];
+        let row = j * params.post;
+        for i in 0..params.post {
+            // One θ fetch serves every session of this synapse.
+            let k = (row + i) * COEFFS_PER_SYNAPSE;
+            let coeffs = [
+                S::from_f32(params.theta[k]),
+                S::from_f32(params.theta[k + 1]),
+                S::from_f32(params.theta[k + 2]),
+                S::from_f32(params.theta[k + 3]),
+            ];
+            let post_row = &post_trace[i * batch..(i + 1) * batch];
+            let wbase = (row + i) * batch;
+            let wrow = &mut weights[wbase..wbase + batch];
+            if all_active {
+                for b in 0..batch {
+                    wrow[b] =
+                        update_synapse(coeffs, eta, lo, hi, wrow[b], pre_row[b], post_row[b]);
+                }
+            } else {
+                for b in 0..batch {
+                    if !active[b] {
+                        continue;
+                    }
+                    wrow[b] =
+                        update_synapse(coeffs, eta, lo, hi, wrow[b], pre_row[b], post_row[b]);
+                }
+            }
         }
     }
 }
@@ -302,6 +374,38 @@ mod tests {
         let planes = p.unpack_planes();
         let q = RuleParams::from_planes(3, 7, &planes);
         assert_eq!(p.theta, q.theta);
+    }
+
+    #[test]
+    fn batched_update_matches_sequential_singles() {
+        let mut rng = Pcg64::new(11, 0);
+        let p = RuleParams::random(5, 4, 0.4, &mut rng);
+        let cfg = PlasticityConfig::default();
+        let batch = 3;
+
+        // independent per-session traces
+        let mut pre_b = vec![0.0f32; 5 * batch];
+        let mut post_b = vec![0.0f32; 4 * batch];
+        rng.fill_normal_f32(&mut pre_b, 0.8);
+        rng.fill_normal_f32(&mut post_b, 0.8);
+
+        let mut w_b = vec![0.0f32; 5 * 4 * batch];
+        for _ in 0..20 {
+            apply_update_batch(&p, &cfg, batch, &[true, true, false], &mut w_b, &pre_b, &post_b);
+        }
+
+        for b in 0..batch {
+            let pre: Vec<f32> = (0..5).map(|j| pre_b[j * batch + b]).collect();
+            let post: Vec<f32> = (0..4).map(|i| post_b[i * batch + b]).collect();
+            let mut w = vec![0.0f32; 20];
+            let steps = if b == 2 { 0 } else { 20 }; // session 2 was masked off
+            for _ in 0..steps {
+                apply_update(&p, &cfg, &mut w, &pre, &post);
+            }
+            for s in 0..20 {
+                assert_eq!(w_b[s * batch + b], w[s], "session {b} synapse {s}");
+            }
+        }
     }
 
     #[test]

@@ -13,32 +13,64 @@
 
 use super::numeric::Scalar;
 
+/// Per-neuron exponentially decaying spike traces.
+///
+/// Like [`crate::snn::LifLayer`], the vector carries a
+/// structure-of-arrays **batch dimension** (`[neuron][session]` layout)
+/// so one trace update can serve many independent controller sessions;
+/// `batch == 1` reproduces the historical single-session layout exactly.
 #[derive(Clone, Debug)]
 pub struct TraceVector<S: Scalar> {
+    /// Trace values, `neurons × batch`, laid out `[neuron][session]`.
     pub values: Vec<S>,
+    /// Decay factor λ applied every step before spike accumulation.
     pub lambda: S,
+    /// Number of independent sessions interleaved in `values`.
+    pub batch: usize,
+    /// Number of neurons traced (`values.len() == neurons * batch`).
+    pub neurons: usize,
 }
 
 impl<S: Scalar> TraceVector<S> {
+    /// Single-session trace vector over `n` neurons.
     pub fn new(n: usize, lambda: f32) -> Self {
+        Self::batched(n, 1, lambda)
+    }
+
+    /// Trace vector over `n` neurons × `batch` independent sessions.
+    pub fn batched(n: usize, batch: usize, lambda: f32) -> Self {
         assert!((0.0..=1.0).contains(&lambda), "λ must be in [0,1]");
+        assert!(batch >= 1, "batch must be >= 1");
         TraceVector {
-            values: vec![S::ZERO; n],
+            values: vec![S::ZERO; n * batch],
             lambda: S::from_f32(lambda),
+            batch,
+            neurons: n,
         }
     }
 
+    /// Total state size (`neurons × batch`).
     pub fn len(&self) -> usize {
         self.values.len()
     }
 
+    /// True when the vector traces no neurons.
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }
 
+    /// Zero all traces (every session).
     pub fn reset(&mut self) {
         for v in self.values.iter_mut() {
             *v = S::ZERO;
+        }
+    }
+
+    /// Zero one session's trace column, leaving other sessions untouched.
+    pub fn reset_session(&mut self, session: usize) {
+        assert!(session < self.batch, "session out of range");
+        for i in 0..self.neurons {
+            self.values[i * self.batch + session] = S::ZERO;
         }
     }
 
@@ -48,6 +80,32 @@ impl<S: Scalar> TraceVector<S> {
         for (v, &s) in self.values.iter_mut().zip(spikes) {
             let decayed = v.mul(self.lambda);
             *v = if s { decayed.add(S::ONE) } else { decayed };
+        }
+    }
+
+    /// Batched update over the sessions selected by `active`
+    /// (`active.len() == batch`); inactive sessions' traces are left
+    /// untouched. Per-session arithmetic matches [`TraceVector::update`]
+    /// exactly, so batched and single-session trace histories are
+    /// bit-identical.
+    pub fn update_masked(&mut self, spikes: &[bool], active: &[bool]) {
+        assert_eq!(spikes.len(), self.values.len(), "spike/trace mismatch");
+        assert_eq!(active.len(), self.batch, "mask/batch mismatch");
+        let b = self.batch;
+        for i in 0..self.neurons {
+            let row = i * b;
+            for (k, &on) in active.iter().enumerate() {
+                if !on {
+                    continue;
+                }
+                let idx = row + k;
+                let decayed = self.values[idx].mul(self.lambda);
+                self.values[idx] = if spikes[idx] {
+                    decayed.add(S::ONE)
+                } else {
+                    decayed
+                };
+            }
         }
     }
 
@@ -143,5 +201,31 @@ mod tests {
     #[should_panic(expected = "λ")]
     fn invalid_lambda_panics() {
         TraceVector::<f32>::new(1, 1.5);
+    }
+
+    #[test]
+    fn batched_update_matches_singles_and_respects_mask() {
+        let n = 3;
+        let batch = 2;
+        let mut t = TraceVector::<f32>::batched(n, batch, 0.5);
+        let mut s0 = TraceVector::<f32>::new(n, 0.5);
+        let patterns = [
+            [true, false, true, true, false, false],
+            [false, true, true, false, true, false],
+        ];
+        for row in &patterns {
+            // spikes laid out [neuron][session]; session 1 masked off
+            t.update_masked(row, &[true, false]);
+            let single: Vec<bool> = (0..n).map(|i| row[i * batch]).collect();
+            s0.update(&single);
+        }
+        for i in 0..n {
+            assert_eq!(t.values[i * batch], s0.values[i]);
+            assert_eq!(t.values[i * batch + 1], 0.0, "masked session must stay zero");
+        }
+        t.reset_session(0);
+        for i in 0..n {
+            assert_eq!(t.values[i * batch], 0.0);
+        }
     }
 }

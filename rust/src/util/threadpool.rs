@@ -105,6 +105,18 @@ impl ThreadPool {
     /// Round-robin dispatch of a fire-and-forget job.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        self.execute_on(i, job);
+    }
+
+    /// Dispatch a job to a specific worker (`worker % workers()`).
+    ///
+    /// Jobs on one worker run sequentially, so pinning gives callers an
+    /// exclusivity guarantee: the control server pins each connection
+    /// handler to the worker matching its session slot — live slots are
+    /// unique, so a long-blocking handler can never queue behind another
+    /// live connection.
+    pub fn execute_on(&self, worker: usize, job: impl FnOnce() + Send + 'static) {
+        let i = worker % self.senders.len();
         self.senders[i].send(Box::new(job)).expect("worker hung up");
     }
 
@@ -197,6 +209,23 @@ mod tests {
             .collect();
         let out = pool.map(jobs);
         assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn execute_on_pins_to_one_worker() {
+        let pool = ThreadPool::new(3);
+        let (tx, rx) = std::sync::mpsc::channel::<String>();
+        for _ in 0..8 {
+            let tx = tx.clone();
+            pool.execute_on(1, move || {
+                tx.send(std::thread::current().name().unwrap_or("?").to_string())
+                    .unwrap();
+            });
+        }
+        drop(tx);
+        let names: Vec<String> = rx.iter().collect();
+        assert_eq!(names.len(), 8);
+        assert!(names.iter().all(|n| n == &names[0]), "jobs spread across workers: {names:?}");
     }
 
     #[test]

@@ -1,0 +1,177 @@
+//! Integration: the session-managed control server under concurrent
+//! load — ≥8 clients speaking the line protocol at once, multiplexed
+//! onto batched SNN steps by one serve() thread (ISSUE 1 tentpole).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use firefly_p::backend::NativeBackend;
+use firefly_p::coordinator::server::{ControlServer, ServerConfig};
+use firefly_p::snn::{NetworkRule, SnnConfig};
+use firefly_p::util::rng::Pcg64;
+
+const CLIENTS: usize = 12;
+const OBS_PER_CLIENT: usize = 25;
+
+/// cheetah-vel geometry: 6 obs dims × 8 = 48 in, 2·6 = 12 out.
+fn server_thread(
+    addr: std::net::SocketAddr,
+    max_connections: usize,
+) -> std::thread::JoinHandle<(u64, u64, f64)> {
+    std::thread::spawn(move || {
+        let mut cfg = SnnConfig::control(48, 12);
+        cfg.n_hidden = 32;
+        let mut rng = Pcg64::new(0, 0);
+        let mut genome = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut genome, 0.05);
+        let rule = NetworkRule::from_flat(&cfg, &genome);
+        let backend = Box::new(NativeBackend::plastic(cfg, rule));
+        let mut server = ControlServer::with_config(
+            backend,
+            6,
+            6,
+            ServerConfig {
+                max_sessions: CLIENTS,
+                seed: 9,
+            },
+        );
+        server
+            .serve(&addr.to_string(), Some(max_connections))
+            .unwrap();
+        let metrics = server.metrics();
+        let m = metrics.lock().unwrap();
+        (m.count("requests"), m.count("bad_requests"), m.mean("batch_size"))
+    })
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    line: String,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+            line: String::new(),
+        }
+    }
+
+    fn round_trip(&mut self, req: &str) -> String {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.line.clear();
+        self.reader.read_line(&mut self.line).unwrap();
+        self.line.trim().to_string()
+    }
+}
+
+#[test]
+fn concurrent_clients_through_batched_steps() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+    let server = server_thread(addr, CLIENTS);
+    std::thread::sleep(Duration::from_millis(150));
+
+    // All clients connect and then start hammering OBS simultaneously so
+    // the stepper actually sees multi-session batches.
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr);
+                assert_eq!(client.round_trip("PING"), "PONG");
+                assert_eq!(client.round_trip("RESET"), "OK");
+
+                // client 0 also exercises the error paths mid-stream
+                if c == 0 {
+                    assert!(client.round_trip("OBS 1,2").starts_with("ERR expected 6"));
+                    assert!(client.round_trip("GARBAGE").starts_with("ERR unknown"));
+                }
+
+                barrier.wait();
+                let mut actions = Vec::new();
+                for t in 0..OBS_PER_CLIENT {
+                    let x = (c as f32 * 0.2 - 1.0).clamp(-2.5, 2.5);
+                    let resp = client.round_trip(&format!(
+                        "OBS {x:.3},{:.3},0.0,-0.4,0.8,1.0",
+                        t as f32 * 0.05
+                    ));
+                    assert!(resp.starts_with("ACT "), "client {c} got {resp}");
+                    let acts: Vec<f32> = resp[4..]
+                        .split(',')
+                        .map(|a| a.parse::<f32>().unwrap())
+                        .collect();
+                    assert_eq!(acts.len(), 6, "client {c} wrong action arity");
+                    for a in &acts {
+                        assert!(a.is_finite() && (-1.0..=1.0).contains(a));
+                    }
+                    actions.push(acts);
+                }
+                actions
+            })
+        })
+        .collect();
+
+    let per_client: Vec<Vec<Vec<f32>>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // Sessions are independent: clients fed different observations must
+    // not all produce identical trajectories.
+    assert!(
+        per_client.iter().any(|a| a != &per_client[0]),
+        "all sessions produced identical actions — state is being shared"
+    );
+
+    let (requests, bad_requests, batch_mean) = server.join().unwrap();
+    assert_eq!(
+        requests,
+        (CLIENTS * OBS_PER_CLIENT) as u64,
+        "every OBS round-trip must be counted"
+    );
+    assert_eq!(bad_requests, 1, "exactly one GARBAGE line was sent");
+    // With 12 clients hammering concurrently, requests must coalesce:
+    // mean batch size 1.0 would mean every step served a single session
+    // — i.e. batching silently broke.
+    assert!(
+        batch_mean > 1.0,
+        "stepper never coalesced concurrent requests into a batch (mean {batch_mean})"
+    );
+}
+
+#[test]
+fn second_wave_of_clients_reuses_slots() {
+    // Connection churn: 2 waves of clients over the same slot table.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+    let server = server_thread(addr, 2 * CLIENTS);
+    std::thread::sleep(Duration::from_millis(150));
+
+    for _wave in 0..2 {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(addr);
+                    for _ in 0..5 {
+                        let obs = format!("OBS 0.1,{:.2},0.3,0.4,0.5,1.0", c as f32 * 0.1);
+                        let resp = client.round_trip(&obs);
+                        assert!(resp.starts_with("ACT "), "{resp}");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    let (requests, _, _) = server.join().unwrap();
+    assert_eq!(requests, (2 * CLIENTS * 5) as u64);
+}
