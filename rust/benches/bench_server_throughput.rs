@@ -1,11 +1,17 @@
 //! EXP-SERVE — multi-session serving throughput (our system metric, not
 //! a paper table): how much faster B concurrent controller sessions run
 //! through one batched SoA step than through B sequential single-session
-//! steps, plus end-to-end TCP latency through the session-managed
-//! control server. Feeds the §Perf serving rows of EXPERIMENTS.md.
+//! steps, how much the bit-packed event-driven kernels gain over the
+//! dense boolean formulation across spike-sparsity levels, plus
+//! end-to-end TCP latency through the session-managed control server.
+//! Feeds the §Perf serving rows of EXPERIMENTS.md.
 //!
-//! Acceptance target (ISSUE 1): batched serving at B=64 sessions
-//! achieves ≥4× the steps/sec of 64 sequential single-session steps.
+//! Acceptance targets:
+//! - ISSUE 1: batched serving at B=64 sessions achieves ≥4× the steps/s
+//!   of 64 sequential single-session steps (`engine-*` rows).
+//! - ISSUE 2: packed event-driven stepping achieves ≥3× dense steps/s at
+//!   5 % input firing rate, B=64 (`packed`/`dense` rows, sweep over
+//!   5 %/20 %/50 % firing).
 //!
 //! Run: `cargo bench --bench bench_server_throughput`
 
@@ -16,7 +22,8 @@ use std::time::{Duration, Instant};
 
 use firefly_p::backend::{NativeBackend, SnnBackend};
 use firefly_p::coordinator::server::{ControlServer, ServerConfig};
-use firefly_p::snn::{NetworkRule, SnnConfig};
+use firefly_p::snn::reference::DenseBatchedNetwork;
+use firefly_p::snn::{Mode, NetworkRule, SnnConfig, SnnNetwork};
 use firefly_p::util::csvio::CsvWriter;
 use firefly_p::util::rng::Pcg64;
 use firefly_p::util::stats;
@@ -35,9 +42,9 @@ fn make_rule(cfg: &SnnConfig, seed: u64) -> NetworkRule {
     NetworkRule::from_flat(cfg, &genome)
 }
 
-fn random_inputs(cfg: &SnnConfig, batch: usize, seed: u64) -> Vec<bool> {
+fn random_inputs(cfg: &SnnConfig, batch: usize, rate: f64, seed: u64) -> Vec<bool> {
     let mut rng = Pcg64::new(seed, 1);
-    (0..batch * cfg.n_in).map(|_| rng.bernoulli(0.5)).collect()
+    (0..batch * cfg.n_in).map(|_| rng.bernoulli(rate)).collect()
 }
 
 /// Engine-level comparison: one batched SoA network vs B independent
@@ -46,7 +53,7 @@ fn random_inputs(cfg: &SnnConfig, batch: usize, seed: u64) -> Vec<bool> {
 fn bench_engine(batch: usize, ticks: usize) -> (f64, f64) {
     let cfg = geometry();
     let rule = make_rule(&cfg, 3);
-    let inputs = random_inputs(&cfg, batch, 7);
+    let inputs = random_inputs(&cfg, batch, 0.5, 7);
 
     // --- batched: one backend, B sessions, one step_batch per tick ----
     let mut batched = NativeBackend::plastic(cfg.clone(), rule.clone());
@@ -84,6 +91,45 @@ fn bench_engine(batch: usize, ticks: usize) -> (f64, f64) {
     let seq_sps = (batch * ticks) as f64 / t0.elapsed().as_secs_f64();
 
     (batched_sps, seq_sps)
+}
+
+/// Packed-vs-dense comparison at a given input firing rate: the packed
+/// event-driven `SnnNetwork` against the dense boolean
+/// `DenseBatchedNetwork` oracle, identical rule and identical input
+/// spike streams (a rotating set of pre-drawn frames so plastic weights
+/// evolve identically in both arms — they are bit-equivalent by the
+/// equivalence suite). Returns (packed steps/s, dense steps/s).
+fn bench_packed_vs_dense(batch: usize, rate: f64, ticks: usize) -> (f64, f64) {
+    let cfg = geometry();
+    let rule = make_rule(&cfg, 3);
+    let active = vec![true; batch];
+    // 16 pre-drawn input frames cycled through both arms
+    let frames: Vec<Vec<bool>> = (0..16)
+        .map(|k| random_inputs(&cfg, batch, rate, 100 + k as u64))
+        .collect();
+
+    let mut packed =
+        SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone()), batch);
+    for f in frames.iter().take(5) {
+        packed.step_spikes_masked(f, &active);
+    }
+    let t0 = Instant::now();
+    for t in 0..ticks {
+        packed.step_spikes_masked(&frames[t % frames.len()], &active);
+    }
+    let packed_sps = (batch * ticks) as f64 / t0.elapsed().as_secs_f64();
+
+    let mut dense = DenseBatchedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule), batch);
+    for f in frames.iter().take(5) {
+        dense.step_spikes_masked(f, &active);
+    }
+    let t0 = Instant::now();
+    for t in 0..ticks {
+        dense.step_spikes_masked(&frames[t % frames.len()], &active);
+    }
+    let dense_sps = (batch * ticks) as f64 / t0.elapsed().as_secs_f64();
+
+    (packed_sps, dense_sps)
 }
 
 /// TCP-level: B concurrent clients hammering OBS round-trips through the
@@ -153,7 +199,15 @@ fn main() {
     println!("=== EXP-SERVE: multi-session serving throughput (64-128-8 plastic) ===\n");
     let mut csv = CsvWriter::create(
         "results/server_throughput.csv",
-        &["layer", "batch", "steps_per_s", "speedup_vs_sequential", "p50_us", "p99_us"],
+        &[
+            "layer",
+            "batch",
+            "firing_rate",
+            "steps_per_s",
+            "speedup",
+            "p50_us",
+            "p99_us",
+        ],
     )
     .unwrap();
 
@@ -171,9 +225,30 @@ fn main() {
             "B={batch:<3} batched {batched_sps:>12.0} steps/s   sequential \
              {seq_sps:>12.0} steps/s   speedup {speedup:>5.2}×"
         );
-        csv.row(&[&"engine-batched", &batch, &batched_sps, &speedup, &0.0, &0.0])
+        csv.row(&[&"engine-batched", &batch, &0.5, &batched_sps, &speedup, &0.0, &0.0])
             .unwrap();
-        csv.row(&[&"engine-sequential", &batch, &seq_sps, &1.0, &0.0, &0.0])
+        csv.row(&[&"engine-sequential", &batch, &0.5, &seq_sps, &1.0, &0.0, &0.0])
+            .unwrap();
+    }
+
+    println!("\n--- engine: packed event-driven vs dense boolean, sparsity sweep ---");
+    let mut packed_speedup_5pct = 0.0;
+    for &rate in &[0.05f64, 0.20, 0.50] {
+        let batch = 64;
+        let ticks = 200;
+        let (packed_sps, dense_sps) = bench_packed_vs_dense(batch, rate, ticks);
+        let speedup = packed_sps / dense_sps;
+        if rate == 0.05 {
+            packed_speedup_5pct = speedup;
+        }
+        println!(
+            "B={batch:<3} fire={:>4.0}%  packed {packed_sps:>12.0} steps/s   dense \
+             {dense_sps:>12.0} steps/s   speedup {speedup:>5.2}×",
+            rate * 100.0
+        );
+        csv.row(&[&"packed", &batch, &rate, &packed_sps, &speedup, &0.0, &0.0])
+            .unwrap();
+        csv.row(&[&"dense", &batch, &rate, &dense_sps, &1.0, &0.0, &0.0])
             .unwrap();
     }
 
@@ -186,13 +261,19 @@ fn main() {
         println!(
             "B={batch:<3} {rps:>10.0} req/s   p50 {p50:>8.1} µs   p99 {p99:>8.1} µs"
         );
-        csv.row(&[&"tcp", &batch, &rps, &0.0, &p50, &p99]).unwrap();
+        csv.row(&[&"tcp", &batch, &0.0, &rps, &0.0, &p50, &p99]).unwrap();
     }
 
     let path = csv.finish().unwrap();
     println!("\ncsv: {}", path.display());
     println!(
-        "acceptance: engine speedup at B=64 is {speedup_at_64:.2}× (target ≥ 4×) — {}",
+        "acceptance (ISSUE 1): engine speedup at B=64 is {speedup_at_64:.2}× \
+         (target ≥ 4×) — {}",
         if speedup_at_64 >= 4.0 { "PASS" } else { "MISS" }
+    );
+    println!(
+        "acceptance (ISSUE 2): packed vs dense at B=64, 5% firing is \
+         {packed_speedup_5pct:.2}× (target ≥ 3×) — {}",
+        if packed_speedup_5pct >= 3.0 { "PASS" } else { "MISS" }
     );
 }

@@ -56,8 +56,11 @@ pub trait SnnBackend {
 
     /// Provision per-session state for up to `n` independent sessions,
     /// returning how many sessions are actually available afterwards.
-    /// Single-session backends return 1. Growing may reset existing
-    /// session state, so servers call this once before serving traffic.
+    /// Single-session backends return 1. Implementations that can grow
+    /// must preserve the state of already-provisioned sessions
+    /// (membranes, traces, plastic weights) — live sessions survive a
+    /// capacity increase; only the newly added slots start from the zero
+    /// state.
     fn ensure_sessions(&mut self, _n: usize) -> usize {
         1
     }
@@ -110,6 +113,16 @@ pub trait SnnBackend {
     fn output_traces_session(&self, session: usize) -> Vec<f32> {
         assert_eq!(session, 0, "single-session backend");
         self.output_traces()
+    }
+
+    /// Allocation-free variant of [`SnnBackend::output_traces_session`]:
+    /// clear `out` and fill it with the session's output traces. The
+    /// serving stepper calls this once per request with a pooled buffer,
+    /// so backends should override the default (which round-trips
+    /// through a fresh `Vec`) when they can fill in place.
+    fn output_traces_session_into(&self, session: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.output_traces_session(session));
     }
 }
 

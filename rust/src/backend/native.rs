@@ -2,7 +2,10 @@
 //! the only backend with **native multi-session batching** — it steps
 //! all of its sessions through one structure-of-arrays network so the
 //! frozen rule θ is streamed once per tick instead of once per session
-//! (DESIGN.md §Batched-Serving).
+//! (DESIGN.md §Batched-Serving). Request spikes are scattered straight
+//! into the network's bit-packed staging words (DESIGN.md §Hot-Path):
+//! no dense boolean input matrix is materialized on the serving path,
+//! and the steady-state step performs zero heap allocations.
 
 use super::SnnBackend;
 use crate::snn::{Mode, NetworkRule, SnnConfig, SnnNetwork};
@@ -10,13 +13,7 @@ use crate::snn::{Mode, NetworkRule, SnnConfig, SnnNetwork};
 /// Pure-Rust f32 engine hosting one or more controller sessions.
 pub struct NativeBackend {
     net: SnnNetwork<f32>,
-    /// Construction spec kept so `ensure_sessions` can rebuild the
-    /// network at a larger batch (growing resets all session state).
-    rule: Option<NetworkRule>,
-    fixed_flat: Vec<f32>,
-    /// Scratch: `[neuron][session]` input matrix for masked stepping.
-    inmat: Vec<bool>,
-    /// Scratch: per-session active mask.
+    /// Scratch: per-session active mask for staged stepping.
     active: Vec<bool>,
 }
 
@@ -24,12 +21,9 @@ impl NativeBackend {
     /// Plastic (FireFly-P) deployment: zero-initialized weights, online
     /// four-term updates under the frozen `rule`.
     pub fn plastic(cfg: SnnConfig, rule: NetworkRule) -> Self {
-        let net = SnnNetwork::new(cfg, Mode::Plastic(rule.clone()));
+        let net = SnnNetwork::new(cfg, Mode::Plastic(rule));
         NativeBackend {
-            inmat: vec![false; net.cfg.n_in],
-            active: vec![true; 1],
-            rule: Some(rule),
-            fixed_flat: Vec::new(),
+            active: vec![false; 1],
             net,
         }
     }
@@ -40,10 +34,7 @@ impl NativeBackend {
         let mut net = SnnNetwork::new(cfg, Mode::Fixed);
         net.load_weights(weights);
         NativeBackend {
-            inmat: vec![false; net.cfg.n_in],
-            active: vec![true; 1],
-            rule: None,
-            fixed_flat: weights.to_vec(),
+            active: vec![false; 1],
             net,
         }
     }
@@ -51,21 +42,6 @@ impl NativeBackend {
     /// Borrow the underlying golden-model network (diagnostics).
     pub fn network(&self) -> &SnnNetwork<f32> {
         &self.net
-    }
-
-    fn rebuild(&mut self, batch: usize) {
-        let cfg = self.net.cfg.clone();
-        let mode = match &self.rule {
-            Some(rule) => Mode::Plastic(rule.clone()),
-            None => Mode::Fixed,
-        };
-        let mut net = SnnNetwork::new_batched(cfg, mode, batch);
-        if self.rule.is_none() {
-            net.load_weights(&self.fixed_flat);
-        }
-        self.inmat = vec![false; net.cfg.n_in * batch];
-        self.active = vec![false; batch];
-        self.net = net;
     }
 }
 
@@ -98,7 +74,10 @@ impl SnnBackend for NativeBackend {
     fn ensure_sessions(&mut self, n: usize) -> usize {
         let n = n.max(1);
         if n > self.net.batch {
-            self.rebuild(n);
+            // State-preserving growth: live sessions keep their
+            // membranes/traces/weights, new slots start zeroed.
+            self.net.grow_batch(n);
+            self.active = vec![false; n];
         }
         self.net.batch
     }
@@ -113,28 +92,32 @@ impl SnnBackend for NativeBackend {
         let b = self.net.batch;
         assert_eq!(inputs.len(), sessions.len() * n_in, "input arity mismatch");
 
-        // Build the [neuron][session] input matrix + active mask from the
-        // session-major request list.
+        // Build the packed [neuron][session-word] input staging + active
+        // mask from the session-major request list.
         for a in self.active.iter_mut() {
             *a = false;
         }
+        let staging = self.net.input_mut();
+        staging.clear();
         for (k, &s) in sessions.iter().enumerate() {
             assert!(s < b, "session {s} out of range (batch {b})");
             assert!(!self.active[s], "duplicate session {s} in one batch step");
             self.active[s] = true;
             for j in 0..n_in {
-                self.inmat[j * b + s] = inputs[k * n_in + j];
+                if inputs[k * n_in + j] {
+                    staging.set(j, s, true);
+                }
             }
         }
 
-        self.net.step_spikes_masked(&self.inmat, &self.active);
+        self.net.step_staged(&self.active);
 
         // Scatter the output columns back to session-major order.
         outputs.clear();
         outputs.reserve(sessions.len() * n_out);
         for &s in sessions {
             for o in 0..n_out {
-                outputs.push(self.net.output.spikes[o * b + s]);
+                outputs.push(self.net.output.spikes.get(o, s));
             }
         }
     }
@@ -145,6 +128,15 @@ impl SnnBackend for NativeBackend {
 
     fn output_traces_session(&self, session: usize) -> Vec<f32> {
         self.net.output_traces_f32_session(session)
+    }
+
+    fn output_traces_session_into(&self, session: usize, out: &mut Vec<f32>) {
+        assert!(session < self.net.batch, "session out of range");
+        out.clear();
+        let b = self.net.batch;
+        for o in 0..self.net.cfg.n_out {
+            out.push(self.net.trace_out.values[o * b + session]);
+        }
     }
 }
 
@@ -202,6 +194,9 @@ mod tests {
         }
         for (s, single) in singles.iter().enumerate() {
             assert_eq!(batched.output_traces_session(s), single.output_traces());
+            let mut pooled = Vec::new();
+            batched.output_traces_session_into(s, &mut pooled);
+            assert_eq!(pooled, single.output_traces());
         }
     }
 
@@ -223,5 +218,55 @@ mod tests {
         }
         // session 1 never stepped: traces still zero
         assert!(b.output_traces_session(1).iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn ensure_sessions_grows_without_resetting_live_state() {
+        // The regression the rebuild-based implementation had: growing
+        // the slot table must not wipe live sessions (ROADMAP item).
+        let cfg = SnnConfig::tiny();
+        let mut rng = Pcg64::new(43, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.3);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+
+        let mut grown = NativeBackend::plastic(cfg.clone(), rule.clone());
+        grown.ensure_sessions(2);
+        let mut witness = NativeBackend::plastic(cfg.clone(), rule);
+        witness.ensure_sessions(2);
+
+        let mut input_rng = Pcg64::new(44, 0);
+        let mut out = Vec::new();
+        for _ in 0..12 {
+            let inputs: Vec<bool> = (0..2 * cfg.n_in)
+                .map(|_| input_rng.bernoulli(0.5))
+                .collect();
+            grown.step_batch(2, &inputs, &mut out);
+            witness.step_batch(2, &inputs, &mut out);
+        }
+
+        // grow one backend past a word boundary mid-episode
+        assert_eq!(grown.ensure_sessions(70), 70);
+        assert_eq!(grown.sessions(), 70);
+        for s in 0..2 {
+            assert_eq!(
+                grown.output_traces_session(s),
+                witness.output_traces_session(s),
+                "session {s} state lost in growth"
+            );
+        }
+
+        // both continue in lockstep on the original two sessions
+        for _ in 0..8 {
+            let inputs: Vec<bool> = (0..2 * cfg.n_in)
+                .map(|_| input_rng.bernoulli(0.5))
+                .collect();
+            grown.step_sessions(&[0, 1], &inputs, &mut out);
+            let grown_out = out.clone();
+            witness.step_sessions(&[0, 1], &inputs, &mut out);
+            assert_eq!(grown_out, out, "post-growth step diverged");
+        }
+        // new sessions start from the zero state
+        assert!(grown.output_traces_session(69).iter().all(|&t| t == 0.0));
     }
 }

@@ -21,14 +21,16 @@
 //! ```text
 //!  clients ──► accept thread ──► per-connection handlers (ThreadPool,
 //!                 │                pinned to worker == session slot)
-//!                 │                    │  encode OBS → enqueue request
+//!                 │                    │  encode OBS into the slot's
+//!                 │                    │  pooled buffer → enqueue marker
 //!                 ▼                    ▼
 //!            slot registry        shared request queue ── condvar ──►
 //!                                 stepper (the serve() thread, sole
 //!                                 owner of the backend): drains the
 //!                                 queue, steps all pending sessions in
 //!                                 ONE batched `step_sessions` call,
-//!                                 decodes traces, wakes the handlers
+//!                                 decodes traces into the slots' pooled
+//!                                 action buffers, wakes the handlers
 //! ```
 //!
 //! Batching is *natural*: while the stepper executes batch *k*, newly
@@ -38,6 +40,17 @@
 //! instead of 64 scalar steps (the ≥4× headline measured by
 //! `bench_server_throughput`).
 //!
+//! # Pooled request path (DESIGN.md §Hot-Path)
+//!
+//! Request and response payloads live in **per-slot pooled buffers**
+//! ([`SlotCell`]): the handler encodes observation spikes into its
+//! slot's `inbuf` and parses floats into a per-connection scratch; the
+//! stepper decodes actions into the slot's `actbuf`; the queue itself is
+//! double-buffered (swap, not take). After the first request warms the
+//! capacities, a steady-state OBS round-trip performs **zero heap
+//! allocations** end to end — asserted by `tests/alloc_free_serving.rs`
+//! with a counting allocator.
+//!
 //! The backend stays on the serve() thread (it is deliberately not
 //! `Send` — see [`crate::backend::SnnBackend`]); handlers only touch the
 //! queue, so no synchronization ever wraps the hot step itself. The
@@ -45,6 +58,7 @@
 //! observations/actions; spike coding stays an implementation detail of
 //! the accelerator — as it would on the real robot bus.
 
+use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -78,32 +92,42 @@ impl Default for ServerConfig {
     }
 }
 
-/// A request one connection handler parks on the shared queue.
+/// A request marker one connection handler parks on the shared queue.
+/// Payloads travel through the slot's pooled buffers, not the queue.
+#[derive(Clone, Copy)]
 enum SlotRequest {
-    /// Encoded observation spikes for one network step.
-    Step(Vec<bool>),
+    /// Step this session with the spikes staged in the slot's `inbuf`.
+    Step,
     /// Zero this session's state (Phase-2 w := 0).
     Reset,
 }
 
 /// The stepper's answer, delivered through the slot's rendezvous cell.
 enum SlotResponse {
-    /// Decoded action vector for a `Step`.
-    Action(Vec<f32>),
+    /// A decoded action vector awaits in the slot's `actbuf`.
+    Action,
     /// Acknowledgement of a `Reset`.
     ResetDone,
 }
 
-/// Per-slot rendezvous: the handler waits here for the stepper.
+/// Per-slot rendezvous + pooled payload buffers. The submit/deliver
+/// rendezvous serializes access: the handler writes `inbuf` strictly
+/// before enqueueing and reads `actbuf` strictly after being woken, so
+/// the buffers are never contended in steady state.
 struct SlotCell {
     ready: Mutex<Option<SlotResponse>>,
     cv: Condvar,
+    /// Pooled encoded-observation spikes (handler → stepper).
+    inbuf: Mutex<Vec<bool>>,
+    /// Pooled decoded action vector (stepper → handler).
+    actbuf: Mutex<Vec<f32>>,
 }
 
 /// State shared between the accept thread, the connection handlers and
 /// the stepper.
 struct Shared {
-    /// Pending requests, drained wholesale by the stepper each tick.
+    /// Pending request markers, swapped wholesale by the stepper each
+    /// tick (double-buffered so neither side re-allocates).
     state: Mutex<QueueState>,
     work_cv: Condvar,
     cells: Vec<SlotCell>,
@@ -131,6 +155,8 @@ impl Shared {
                 .map(|_| SlotCell {
                     ready: Mutex::new(None),
                     cv: Condvar::new(),
+                    inbuf: Mutex::new(Vec::new()),
+                    actbuf: Mutex::new(Vec::new()),
                 })
                 .collect(),
             free_slots: Mutex::new((0..slots).rev().collect()),
@@ -331,6 +357,8 @@ fn accept_loop(
 }
 
 /// Per-connection request loop (runs on a pool worker pinned to `slot`).
+/// All per-request scratch (parsed observation, response line) is pooled
+/// per connection; the spike/action payloads live in the slot cell.
 fn handle_connection(
     stream: TcpStream,
     slot: usize,
@@ -346,7 +374,8 @@ fn handle_connection(
     shared.submit_and_wait(slot, SlotRequest::Reset);
 
     let mut rng = Pcg64::new(seed, 0x5E ^ slot as u64);
-    let mut spikes = vec![false; encoder.n_neurons()];
+    let mut obs = Vec::with_capacity(encoder.dims);
+    let mut resp = String::new();
 
     let run = (|| -> std::io::Result<()> {
         let mut reader = BufReader::new(stream.try_clone()?);
@@ -359,49 +388,61 @@ fn handle_connection(
             }
             let line = line.trim();
             let started = Instant::now();
-            let resp = if line == "PING" {
-                "PONG".to_string()
+            resp.clear();
+            if line == "PING" {
+                resp.push_str("PONG");
             } else if line == "RESET" {
                 shared.submit_and_wait(slot, SlotRequest::Reset);
                 shared.metrics.lock().unwrap().incr("resets");
-                "OK".to_string()
+                resp.push_str("OK");
             } else if line == "STATS" {
                 let m = shared.metrics.lock().unwrap();
-                format!(
+                let _ = write!(
+                    resp,
                     "STATS requests={} sessions={} batch_mean={:.2} mean_latency_us={:.2}",
                     m.count("requests"),
                     shared.live.load(Ordering::SeqCst),
                     m.mean("batch_size"),
                     m.mean("latency_us")
-                )
+                );
             } else if let Some(rest) = line.strip_prefix("OBS ") {
-                match parse_floats(rest, encoder.dims) {
-                    Ok(obs) => {
-                        encoder.encode(&obs, &mut rng, &mut spikes);
-                        match shared.submit_and_wait(slot, SlotRequest::Step(spikes.clone())) {
-                            SlotResponse::Action(action) => {
+                match parse_floats_into(rest, encoder.dims, &mut obs) {
+                    Ok(()) => {
+                        {
+                            // Encode straight into the slot's pooled
+                            // buffer — no per-request spike clone.
+                            let mut ib = shared.cells[slot].inbuf.lock().unwrap();
+                            ib.resize(encoder.n_neurons(), false);
+                            encoder.encode(&obs, &mut rng, ib.as_mut_slice());
+                        }
+                        match shared.submit_and_wait(slot, SlotRequest::Step) {
+                            SlotResponse::Action => {
                                 let mut m = shared.metrics.lock().unwrap();
                                 m.incr("requests");
                                 m.observe("latency_us", started.elapsed().as_secs_f64() * 1e6);
                                 drop(m);
-                                let mut s = String::from("ACT ");
-                                for (i, a) in action.iter().enumerate() {
+                                resp.push_str("ACT ");
+                                let ab = shared.cells[slot].actbuf.lock().unwrap();
+                                for (i, a) in ab.iter().enumerate() {
                                     if i > 0 {
-                                        s.push(',');
+                                        resp.push(',');
                                     }
-                                    s.push_str(&format!("{a:.6}"));
+                                    let _ = write!(resp, "{a:.6}");
                                 }
-                                s
                             }
-                            SlotResponse::ResetDone => "ERR internal response mix-up".to_string(),
+                            SlotResponse::ResetDone => {
+                                resp.push_str("ERR internal response mix-up");
+                            }
                         }
                     }
-                    Err(e) => format!("ERR {e}"),
+                    Err(e) => {
+                        let _ = write!(resp, "ERR {e}");
+                    }
                 }
             } else {
                 shared.metrics.lock().unwrap().incr("bad_requests");
-                format!("ERR unknown command {line:?}")
-            };
+                let _ = write!(resp, "ERR unknown command {line:?}");
+            }
             writer.write_all(resp.as_bytes())?;
             writer.write_all(b"\n")?;
         }
@@ -416,14 +457,19 @@ fn handle_connection(
 }
 
 /// Drain the request queue forever (until shutdown), stepping every
-/// pending session in one batched call per tick.
+/// pending session in one batched call per tick. Every buffer the loop
+/// touches — the drained queue, the session/input staging, the trace
+/// and action scratch — is pooled, so the steady state allocates
+/// nothing.
 fn stepper_loop(backend: &mut dyn SnnBackend, decoder: &TraceDecoder, shared: &Shared) {
     let n_out = backend.config().n_out;
     let mut slots: Vec<usize> = Vec::new();
     let mut inputs: Vec<bool> = Vec::new();
     let mut out_spikes: Vec<bool> = Vec::new();
+    let mut traces: Vec<f32> = Vec::new();
+    let mut drained: Vec<(usize, SlotRequest)> = Vec::new();
     loop {
-        let batch = {
+        {
             let mut st = shared.state.lock().unwrap();
             while st.requests.is_empty() && !st.shutdown {
                 st = shared.work_cv.wait(st).unwrap();
@@ -431,37 +477,45 @@ fn stepper_loop(backend: &mut dyn SnnBackend, decoder: &TraceDecoder, shared: &S
             if st.requests.is_empty() && st.shutdown {
                 break;
             }
-            std::mem::take(&mut st.requests)
-        };
+            // Double-buffer swap: handlers get back a warm Vec, the
+            // stepper drains without holding the lock.
+            std::mem::swap(&mut st.requests, &mut drained);
+        }
 
         slots.clear();
         inputs.clear();
-        for (slot, req) in batch {
+        for &(slot, req) in &drained {
             match req {
                 SlotRequest::Reset => {
                     backend.reset_session(slot);
                     shared.deliver(slot, SlotResponse::ResetDone);
                 }
-                SlotRequest::Step(spikes) => {
+                SlotRequest::Step => {
                     slots.push(slot);
-                    inputs.extend_from_slice(&spikes);
+                    let ib = shared.cells[slot].inbuf.lock().unwrap();
+                    inputs.extend_from_slice(&ib);
                 }
             }
         }
+        drained.clear();
         if slots.is_empty() {
             continue;
         }
 
         // The batched hot path: one SoA step for every pending session.
         backend.step_sessions(&slots, &inputs, &mut out_spikes);
+        debug_assert_eq!(out_spikes.len(), slots.len() * n_out);
 
         for &slot in &slots {
-            let traces = backend.output_traces_session(slot);
-            let mut action = vec![0.0f32; decoder.action_dims];
-            decoder.decode(&traces, &mut action);
-            shared.deliver(slot, SlotResponse::Action(action));
+            backend.output_traces_session_into(slot, &mut traces);
+            {
+                let mut ab = shared.cells[slot].actbuf.lock().unwrap();
+                ab.clear();
+                ab.resize(decoder.action_dims, 0.0);
+                decoder.decode(&traces, ab.as_mut_slice());
+            }
+            shared.deliver(slot, SlotResponse::Action);
         }
-        debug_assert_eq!(out_spikes.len(), slots.len() * n_out);
 
         let mut m = shared.metrics.lock().unwrap();
         m.incr("batch_steps");
@@ -469,13 +523,28 @@ fn stepper_loop(backend: &mut dyn SnnBackend, decoder: &TraceDecoder, shared: &S
     }
 }
 
-fn parse_floats(s: &str, expect: usize) -> Result<Vec<f32>, String> {
-    let vals: Result<Vec<f32>, _> = s.split(',').map(|t| t.trim().parse::<f32>()).collect();
-    let vals = vals.map_err(|e| format!("bad float: {e}"))?;
-    if vals.len() != expect {
-        return Err(format!("expected {expect} obs dims, got {}", vals.len()));
+/// Parse a comma-separated float list into a pooled buffer (cleared
+/// first). Exactly `expect` values are required. Public so the
+/// allocation-free serving test can drive the same parse the handlers
+/// use.
+pub fn parse_floats_into(s: &str, expect: usize, out: &mut Vec<f32>) -> Result<(), String> {
+    out.clear();
+    for tok in s.split(',') {
+        // Bail before exceeding the expected arity: the buffer is
+        // pooled for the connection's lifetime, so a hostile
+        // million-token line must not ratchet its capacity.
+        if out.len() == expect {
+            return Err(format!("expected {expect} obs dims, got more"));
+        }
+        match tok.trim().parse::<f32>() {
+            Ok(v) => out.push(v),
+            Err(e) => return Err(format!("bad float: {e}")),
+        }
     }
-    Ok(vals)
+    if out.len() != expect {
+        return Err(format!("expected {expect} obs dims, got {}", out.len()));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -609,5 +678,19 @@ mod tests {
         drop(refused);
         drop(keeper);
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn parse_floats_into_reuses_buffer() {
+        let mut buf = Vec::new();
+        assert!(parse_floats_into("1.0, 2.5 ,3", 3, &mut buf).is_ok());
+        assert_eq!(buf, vec![1.0, 2.5, 3.0]);
+        assert!(parse_floats_into("1,2", 3, &mut buf).is_err());
+        assert!(parse_floats_into("a,b,c", 3, &mut buf).is_err());
+        // over-arity bails before growing the pooled buffer
+        assert!(parse_floats_into("1,2,3,4,5", 3, &mut buf).is_err());
+        assert!(buf.capacity() <= 8, "pooled buffer must not ratchet");
+        assert!(parse_floats_into("4,5,6", 3, &mut buf).is_ok());
+        assert_eq!(buf, vec![4.0, 5.0, 6.0]);
     }
 }

@@ -58,34 +58,56 @@ impl PopulationEncoder {
         self.dims * self.neurons_per_dim
     }
 
+    /// Tuning geometry of one observation dimension: (lo, hi, spacing, σ).
+    #[inline]
+    fn dim_tuning(&self, d: usize) -> (f32, f32, f32, f32) {
+        let (lo, hi) = self.ranges[d];
+        let span = hi - lo;
+        let spacing = span / (self.neurons_per_dim - 1) as f32;
+        (lo, hi, spacing, self.width_factor * spacing)
+    }
+
+    /// Gaussian tuning activation of neuron `k` for clamped input `x` —
+    /// the single definition both [`PopulationEncoder::activations`] and
+    /// [`PopulationEncoder::encode`] evaluate.
+    #[inline]
+    fn activation(x: f32, lo: f32, spacing: f32, sigma: f32, k: usize) -> f32 {
+        let center = lo + spacing * k as f32;
+        let z = (x - center) / sigma;
+        (-0.5 * z * z).exp()
+    }
+
     /// Tuning activation in [0, 1] for every encoder neuron.
     pub fn activations(&self, obs: &[f32], out: &mut [f32]) {
         assert_eq!(obs.len(), self.dims);
         assert_eq!(out.len(), self.n_neurons());
         for d in 0..self.dims {
-            let (lo, hi) = self.ranges[d];
-            let span = hi - lo;
-            let spacing = span / (self.neurons_per_dim - 1) as f32;
-            let sigma = self.width_factor * spacing;
+            let (lo, hi, spacing, sigma) = self.dim_tuning(d);
             let x = obs[d].clamp(lo, hi);
             for k in 0..self.neurons_per_dim {
-                let center = lo + spacing * k as f32;
-                let z = (x - center) / sigma;
-                out[d * self.neurons_per_dim + k] = (-0.5 * z * z).exp();
+                out[d * self.neurons_per_dim + k] = Self::activation(x, lo, spacing, sigma, k);
             }
         }
     }
 
-    /// Encode one observation into spikes.
+    /// Encode one observation into spikes. Activations are computed and
+    /// thresholded in-flight through the same [`Self::activation`]
+    /// helper as [`PopulationEncoder::activations`] — no scratch
+    /// buffer, so the per-request serving path stays allocation-free.
     pub fn encode(&self, obs: &[f32], rng: &mut Pcg64, spikes: &mut [bool]) {
-        let mut act = vec![0.0f32; self.n_neurons()];
-        self.activations(obs, &mut act);
-        for (s, &a) in spikes.iter_mut().zip(&act) {
-            *s = if self.stochastic {
-                rng.bernoulli(a as f64)
-            } else {
-                a > 0.5
-            };
+        assert_eq!(obs.len(), self.dims);
+        assert_eq!(spikes.len(), self.n_neurons());
+        for d in 0..self.dims {
+            let (lo, hi, spacing, sigma) = self.dim_tuning(d);
+            let x = obs[d].clamp(lo, hi);
+            for k in 0..self.neurons_per_dim {
+                let a = Self::activation(x, lo, spacing, sigma, k);
+                spikes[d * self.neurons_per_dim + k] = if self.stochastic {
+                    rng.bernoulli(a as f64)
+                } else {
+                    a > 0.5
+                };
+            }
         }
     }
 }

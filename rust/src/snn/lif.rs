@@ -14,22 +14,25 @@
 //! (soft reset), preserving super-threshold drive.
 
 use super::numeric::Scalar;
+use super::spike::{grow_lanes, SpikeWords, LANES};
+use super::trace::TraceVector;
 
-/// LIF population state: membrane potentials plus spike outputs.
+/// LIF population state: membrane potentials plus bit-packed spike words.
 ///
 /// Supports a structure-of-arrays **batch dimension** for multi-session
-/// serving (see DESIGN.md §Batched-Serving): state is laid out
+/// serving (see DESIGN.md §Batched-Serving): membranes are laid out
 /// `[neuron][session]` so the per-neuron inner loop runs contiguously
-/// over sessions. `batch == 1` (the [`LifLayer::new`] default) is
-/// byte-identical to the historical single-session layout, so all
-/// existing consumers (ES rollouts, the FPGA golden twin, MNIST) are
-/// unaffected.
+/// over sessions, and the binary spike outputs are packed into `u64`
+/// session words ([`SpikeWords`], DESIGN.md §Hot-Path) so downstream
+/// synaptic accumulation can walk only the set bits. `batch == 1` (the
+/// [`LifLayer::new`] default) keeps the historical single-session
+/// membrane layout; spikes are read through [`SpikeWords::get`].
 #[derive(Clone, Debug)]
 pub struct LifLayer<S: Scalar> {
     /// Membrane potentials, `neurons × batch`, laid out `[neuron][session]`.
     pub v: Vec<S>,
-    /// Spike outputs of the most recent step, same layout as `v`.
-    pub spikes: Vec<bool>,
+    /// Bit-packed spike outputs of the most recent step.
+    pub spikes: SpikeWords,
     /// Firing threshold shared by every neuron in the population.
     pub v_th: S,
     /// Soft reset: subtract V_th on spike (true, default) vs hard reset
@@ -53,7 +56,7 @@ impl<S: Scalar> LifLayer<S> {
         assert!(batch >= 1, "batch must be >= 1");
         LifLayer {
             v: vec![S::ZERO; n * batch],
-            spikes: vec![false; n * batch],
+            spikes: SpikeWords::new(n, batch),
             v_th: S::from_f32(v_th),
             soft_reset: true,
             batch,
@@ -76,9 +79,7 @@ impl<S: Scalar> LifLayer<S> {
         for v in self.v.iter_mut() {
             *v = S::ZERO;
         }
-        for s in self.spikes.iter_mut() {
-            *s = false;
-        }
+        self.spikes.clear();
     }
 
     /// Zero one session's column of membrane/spike state, leaving the
@@ -87,64 +88,143 @@ impl<S: Scalar> LifLayer<S> {
         assert!(session < self.batch, "session out of range");
         for i in 0..self.neurons {
             self.v[i * self.batch + session] = S::ZERO;
-            self.spikes[i * self.batch + session] = false;
         }
+        self.spikes.clear_session(session);
     }
 
-    /// Advance one timestep with input currents `i` (length must match).
-    /// Returns the number of spikes emitted.
+    /// Grow the session dimension to `new_batch`, preserving every
+    /// existing session's membrane/spike state; new sessions start at
+    /// rest.
+    pub fn grow_batch(&mut self, new_batch: usize) {
+        assert!(new_batch >= self.batch, "batch can only grow");
+        if new_batch == self.batch {
+            return;
+        }
+        self.v = grow_lanes(&self.v, self.batch, new_batch, S::ZERO);
+        self.spikes.grow_batch(new_batch);
+        self.batch = new_batch;
+    }
+
+    /// Advance one timestep with input currents `i` for **every** session
+    /// (`currents.len() == neurons × batch`). Returns the number of
+    /// spikes emitted.
     pub fn step(&mut self, currents: &[S]) -> usize {
         assert_eq!(currents.len(), self.v.len(), "current/neuron mismatch");
-        let mut fired = 0;
-        for ((v, s), &i) in self.v.iter_mut().zip(self.spikes.iter_mut()).zip(currents) {
-            // V ← V + (I − V)/2 computed as V/2 + I/2: two halvings and
-            // one add, the exact dataflow of the multiplier-free unit.
-            let nv = v.half().add(i.half());
-            if nv > self.v_th {
-                *s = true;
-                fired += 1;
-                *v = if self.soft_reset { nv.sub(self.v_th) } else { S::ZERO };
-            } else {
-                *s = false;
-                *v = nv;
+        let b = self.batch;
+        let wpr = self.spikes.words_per_row();
+        let mut fired = 0usize;
+        for i in 0..self.neurons {
+            for wi in 0..wpr {
+                let lanes = (b - wi * LANES).min(LANES);
+                let base = i * b + wi * LANES;
+                let mut bits = 0u64;
+                for l in 0..lanes {
+                    let idx = base + l;
+                    // Single-sourced datapath: V ← V/2 + I/2, compare,
+                    // soft/hard reset — see `lif_step_scalar`.
+                    let (nv, fire) =
+                        lif_step_scalar(self.v[idx], currents[idx], self.v_th, self.soft_reset);
+                    self.v[idx] = nv;
+                    bits |= (fire as u64) << l;
+                    fired += fire as usize;
+                }
+                self.spikes.row_mut(i)[wi] = bits;
             }
         }
         fired
     }
 
-    /// Batched step over the sessions selected by `active` (`active.len()
-    /// == batch`). Inactive sessions' membrane and spike state are left
-    /// exactly as they were — a session only advances when its client
-    /// submitted an observation this tick. Per-session arithmetic and
-    /// operation order are identical to [`LifLayer::step`], so a batched
-    /// session is bit-equivalent to a single-session layer fed the same
-    /// spike history. Returns the number of spikes emitted by active
-    /// sessions.
-    pub fn step_masked(&mut self, currents: &[S], active: &[bool]) -> usize {
+    /// Batched step over the sessions selected by the packed
+    /// `active_words` mask (`active_words.len()` must equal
+    /// `spikes.words_per_row()`; see [`crate::snn::spike::pack_mask_into`]).
+    /// Inactive sessions' membrane and spike state are left exactly as
+    /// they were — a session only advances when its client submitted an
+    /// observation this tick. Per-session arithmetic and operation order
+    /// are identical to [`LifLayer::step`], so a batched session is
+    /// bit-equivalent to a single-session layer fed the same spike
+    /// history. The lane loop is branch-free: inactive lanes compute and
+    /// discard via select rather than branching. Returns the number of
+    /// spikes emitted by active sessions.
+    pub fn step_masked(&mut self, currents: &[S], active_words: &[u64]) -> usize {
         assert_eq!(currents.len(), self.v.len(), "current/neuron mismatch");
-        assert_eq!(active.len(), self.batch, "mask/batch mismatch");
+        assert_eq!(
+            active_words.len(),
+            self.spikes.words_per_row(),
+            "mask/batch mismatch"
+        );
         let b = self.batch;
-        let mut fired = 0;
+        let mut fired = 0usize;
         for i in 0..self.neurons {
-            let row = i * b;
-            for (k, &on) in active.iter().enumerate() {
-                if !on {
+            for (wi, &aw) in active_words.iter().enumerate() {
+                if aw == 0 {
+                    continue; // whole word inactive: state frozen
+                }
+                let lanes = (b - wi * LANES).min(LANES);
+                let base = i * b + wi * LANES;
+                let mut bits = self.spikes.row(i)[wi] & !aw;
+                for l in 0..lanes {
+                    let on = (aw >> l) & 1 == 1;
+                    let idx = base + l;
+                    let old = self.v[idx];
+                    let (stepped, fire) =
+                        lif_step_scalar(old, currents[idx], self.v_th, self.soft_reset);
+                    self.v[idx] = if on { stepped } else { old };
+                    bits |= ((on && fire) as u64) << l;
+                    fired += (on && fire) as usize;
+                }
+                self.spikes.row_mut(i)[wi] = bits;
+            }
+        }
+        fired
+    }
+
+    /// Fused LIF step **plus** trace update over the masked sessions —
+    /// one pass touches a neuron's membrane, spike word, and trace
+    /// together instead of two separate sweeps (DESIGN.md §Hot-Path).
+    /// `trace` must have the same `neurons × batch` geometry. Values are
+    /// bit-identical to [`LifLayer::step_masked`] followed by a masked
+    /// trace update with this step's spikes. Returns the number of
+    /// spikes emitted by active sessions.
+    pub fn step_trace_masked(
+        &mut self,
+        currents: &[S],
+        trace: &mut TraceVector<S>,
+        active_words: &[u64],
+    ) -> usize {
+        assert_eq!(currents.len(), self.v.len(), "current/neuron mismatch");
+        assert_eq!(trace.values.len(), self.v.len(), "trace/neuron mismatch");
+        assert_eq!(
+            active_words.len(),
+            self.spikes.words_per_row(),
+            "mask/batch mismatch"
+        );
+        let b = self.batch;
+        let lambda = trace.lambda;
+        let mut fired = 0usize;
+        for i in 0..self.neurons {
+            for (wi, &aw) in active_words.iter().enumerate() {
+                if aw == 0 {
                     continue;
                 }
-                let idx = row + k;
-                let nv = self.v[idx].half().add(currents[idx].half());
-                if nv > self.v_th {
-                    self.spikes[idx] = true;
-                    fired += 1;
-                    self.v[idx] = if self.soft_reset {
-                        nv.sub(self.v_th)
-                    } else {
-                        S::ZERO
-                    };
-                } else {
-                    self.spikes[idx] = false;
-                    self.v[idx] = nv;
+                let lanes = (b - wi * LANES).min(LANES);
+                let base = i * b + wi * LANES;
+                let mut bits = self.spikes.row(i)[wi] & !aw;
+                for l in 0..lanes {
+                    let on = (aw >> l) & 1 == 1;
+                    let idx = base + l;
+                    let old = self.v[idx];
+                    let (stepped, fire) =
+                        lif_step_scalar(old, currents[idx], self.v_th, self.soft_reset);
+                    self.v[idx] = if on { stepped } else { old };
+                    bits |= ((on && fire) as u64) << l;
+                    fired += (on && fire) as usize;
+                    // Trace: S ← λ·S + s(t), the `trace_step_scalar`
+                    // datapath with a masked select.
+                    let t_old = trace.values[idx];
+                    let t_new = crate::snn::trace::trace_step_scalar(t_old, fire, lambda);
+                    trace.values[idx] = if on { t_new } else { t_old };
                 }
+                self.spikes.row_mut(i)[wi] = bits;
             }
         }
         fired
@@ -152,7 +232,8 @@ impl<S: Scalar> LifLayer<S> {
 }
 
 /// Scalar single-neuron step (used by the FPGA simulator's Neuron Dynamic
-/// Unit, which processes one neuron per PE per cycle).
+/// Unit, which processes one neuron per PE per cycle, and by the dense
+/// scalar reference model in [`crate::snn::reference`]).
 #[inline]
 pub fn lif_step_scalar<S: Scalar>(v: S, i: S, v_th: S, soft_reset: bool) -> (S, bool) {
     let nv = v.half().add(i.half());
@@ -167,6 +248,7 @@ pub fn lif_step_scalar<S: Scalar>(v: S, i: S, v_th: S, soft_reset: bool) -> (S, 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::snn::spike::{full_mask, mask_words};
     use crate::util::fp16::F16;
 
     #[test]
@@ -233,7 +315,7 @@ mod tests {
             a.step(&[0.5]);
             b.step(&[F16::from_f32(0.5)]);
             assert!((a.v[0] - b.v[0].to_f32()).abs() < 1e-3, "{} vs {}", a.v[0], b.v[0]);
-            assert_eq!(a.spikes[0], b.spikes[0]);
+            assert_eq!(a.spikes.get(0, 0), b.spikes.get(0, 0));
         }
     }
 
@@ -247,7 +329,7 @@ mod tests {
             for k in 0..3 {
                 let (nv, sp) = lif_step_scalar(v[k], currents[k], 1.0, true);
                 v[k] = nv;
-                assert_eq!(sp, l.spikes[k]);
+                assert_eq!(sp, l.spikes.get(k, 0));
                 assert!((v[k] - l.v[k]).abs() < 1e-6);
             }
         }
@@ -269,7 +351,7 @@ mod tests {
         let drives = [0.7f32, 1.6, 3.2];
         let mut batched = LifLayer::<f32>::batched(n, batch, 1.0);
         let mut singles: Vec<LifLayer<f32>> = (0..batch).map(|_| LifLayer::new(n, 1.0)).collect();
-        let active = vec![true; batch];
+        let active = full_mask(batch);
         for _ in 0..25 {
             let mut currents = vec![0.0f32; n * batch];
             for i in 0..n {
@@ -283,9 +365,31 @@ mod tests {
                 single.step(&cur);
                 for i in 0..n {
                     assert_eq!(batched.v[i * batch + b], single.v[i], "v mismatch s{b} n{i}");
-                    assert_eq!(batched.spikes[i * batch + b], single.spikes[i]);
+                    assert_eq!(batched.spikes.get(i, b), single.spikes.get(i, 0));
                 }
             }
+        }
+    }
+
+    #[test]
+    fn fused_step_trace_matches_separate_passes() {
+        let n = 5;
+        let batch = 2;
+        let active = mask_words(&[true, true]);
+        let mut fused = LifLayer::<f32>::batched(n, batch, 1.0);
+        let mut fused_tr = TraceVector::<f32>::batched(n, batch, 0.5);
+        let mut sep = LifLayer::<f32>::batched(n, batch, 1.0);
+        let mut sep_tr = TraceVector::<f32>::batched(n, batch, 0.5);
+        for t in 0..30 {
+            let currents: Vec<f32> = (0..n * batch)
+                .map(|k| ((k + t) % 5) as f32 * 0.8)
+                .collect();
+            fused.step_trace_masked(&currents, &mut fused_tr, &active);
+            sep.step_masked(&currents, &active);
+            sep_tr.update_packed(&sep.spikes, &active);
+            assert_eq!(fused.v, sep.v);
+            assert_eq!(fused.spikes, sep.spikes);
+            assert_eq!(fused_tr.values, sep_tr.values);
         }
     }
 
@@ -294,19 +398,39 @@ mod tests {
         let n = 2;
         let mut l = LifLayer::<f32>::batched(n, 2, 1.0);
         let currents = vec![4.0f32; n * 2];
+        let only0 = mask_words(&[true, false]);
         // advance only session 0; session 1 must stay at zero state
-        l.step_masked(&currents, &[true, false]);
-        l.step_masked(&currents, &[true, false]);
+        l.step_masked(&currents, &only0);
+        l.step_masked(&currents, &only0);
         for i in 0..n {
-            assert!(l.v[i * 2] != 0.0 || l.spikes[i * 2]);
+            assert!(l.v[i * 2] != 0.0 || l.spikes.get(i, 0));
             assert_eq!(l.v[i * 2 + 1], 0.0);
-            assert!(!l.spikes[i * 2 + 1]);
+            assert!(!l.spikes.get(i, 1));
         }
         // reset_session clears only the requested column
         l.reset_session(0);
         for i in 0..n {
             assert_eq!(l.v[i * 2], 0.0);
-            assert!(!l.spikes[i * 2]);
+            assert!(!l.spikes.get(i, 0));
+        }
+    }
+
+    #[test]
+    fn grow_batch_preserves_sessions() {
+        let n = 3;
+        let mut l = LifLayer::<f32>::batched(n, 2, 1.0);
+        let active = full_mask(2);
+        let currents = vec![0.9f32; n * 2];
+        l.step_masked(&currents, &active);
+        let v_before: Vec<f32> = (0..n).map(|i| l.v[i * 2]).collect();
+        let s_before: Vec<bool> = (0..n).map(|i| l.spikes.get(i, 0)).collect();
+        l.grow_batch(70);
+        assert_eq!(l.batch, 70);
+        for i in 0..n {
+            assert_eq!(l.v[i * 70], v_before[i]);
+            assert_eq!(l.spikes.get(i, 0), s_before[i]);
+            assert_eq!(l.v[i * 70 + 69], 0.0, "new session must start at rest");
+            assert!(!l.spikes.get(i, 69));
         }
     }
 }

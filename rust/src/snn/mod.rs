@@ -10,16 +10,26 @@
 //! the engine under the multi-session control server (DESIGN.md
 //! §Batched-Serving). Sessions share the config and the frozen rule θ;
 //! membranes, traces, and plastic weights are per-session.
+//!
+//! Binary spikes are carried as bit-packed `u64` session words
+//! ([`spike::SpikeWords`]) so synaptic accumulation is event-driven —
+//! work scales with the firing rate, not the synapse count — and masked
+//! batched stepping is branch-free (DESIGN.md §Hot-Path). The dense
+//! boolean formulation survives in [`reference`] as the equivalence
+//! oracle.
 
 pub mod encoding;
 pub mod lif;
 pub mod network;
 pub mod numeric;
 pub mod plasticity;
+pub mod reference;
+pub mod spike;
 pub mod trace;
 
 pub use lif::LifLayer;
 pub use network::{Mode, NetworkRule, SnnConfig, SnnNetwork};
 pub use numeric::Scalar;
 pub use plasticity::{PlasticityConfig, RuleParams};
+pub use spike::SpikeWords;
 pub use trace::TraceVector;

@@ -17,6 +17,7 @@
 //! DESIGN.md §Hardware-Adaptation).
 
 use super::numeric::Scalar;
+use super::spike::{words_for, LANES};
 use crate::util::rng::Pcg64;
 
 /// Per-synapse packed rule coefficients for one layer: `pre × post`
@@ -176,16 +177,21 @@ pub fn apply_update<S: Scalar>(
 ///
 /// Layouts are structure-of-arrays: `weights` is
 /// `pre × post × batch` (`[synapse][session]`), traces are
-/// `neurons × batch` (`[neuron][session]`). Sessions where
-/// `active[b] == false` keep their weights untouched. The per-synapse
-/// datapath is [`update_synapse`] — the same function the single-session
-/// [`apply_update`] uses — with identical operation order, so a batched
-/// session is bit-equivalent to a lone network fed the same history.
+/// `neurons × batch` (`[neuron][session]`). The session mask arrives
+/// bit-packed (`active_words`, one bit per session lane — see
+/// [`crate::snn::spike::pack_mask_into`]). Full-batch ticks take a
+/// mask-free contiguous sweep; partially-active ticks walk only the set
+/// mask bits, so masked-off sessions cost nothing and keep their
+/// weights untouched. The
+/// per-synapse datapath is [`update_synapse`] — the same function the
+/// single-session [`apply_update`] uses — with identical operation
+/// order, so a batched session is bit-equivalent to a lone network fed
+/// the same history.
 pub fn apply_update_batch<S: Scalar>(
     params: &RuleParams,
     cfg: &PlasticityConfig,
     batch: usize,
-    active: &[bool],
+    active_words: &[u64],
     weights: &mut [S],
     pre_trace: &[S],
     post_trace: &[S],
@@ -193,14 +199,18 @@ pub fn apply_update_batch<S: Scalar>(
     assert_eq!(weights.len(), params.pre * params.post * batch);
     assert_eq!(pre_trace.len(), params.pre * batch);
     assert_eq!(post_trace.len(), params.post * batch);
-    assert_eq!(active.len(), batch);
+    assert_eq!(active_words.len(), words_for(batch), "mask/batch mismatch");
     let eta = S::from_f32(cfg.eta);
     let lo = S::from_f32(-cfg.w_clip);
     let hi = S::from_f32(cfg.w_clip);
     // Full-batch ticks (the serving steady state) take a mask-free inner
     // loop: a branchless contiguous sweep over the session lanes that
     // the compiler can keep in SIMD registers.
-    let all_active = active.iter().all(|&a| a);
+    let all_active = active_words.iter().enumerate().all(|(wi, &aw)| {
+        let lanes = (batch - wi * LANES).min(LANES);
+        let full = if lanes == LANES { u64::MAX } else { (1u64 << lanes) - 1 };
+        aw == full
+    });
 
     for j in 0..params.pre {
         let pre_row = &pre_trace[j * batch..(j + 1) * batch];
@@ -223,12 +233,17 @@ pub fn apply_update_batch<S: Scalar>(
                         update_synapse(coeffs, eta, lo, hi, wrow[b], pre_row[b], post_row[b]);
                 }
             } else {
-                for b in 0..batch {
-                    if !active[b] {
-                        continue;
+                // Partially-active tick: walk only the set mask bits, so
+                // the per-synapse cost scales with the number of active
+                // sessions, not the provisioned batch.
+                for (wi, &aw) in active_words.iter().enumerate() {
+                    let mut m = aw;
+                    while m != 0 {
+                        let b = wi * LANES + m.trailing_zeros() as usize;
+                        m &= m - 1;
+                        wrow[b] =
+                            update_synapse(coeffs, eta, lo, hi, wrow[b], pre_row[b], post_row[b]);
                     }
-                    wrow[b] =
-                        update_synapse(coeffs, eta, lo, hi, wrow[b], pre_row[b], post_row[b]);
                 }
             }
         }
@@ -390,8 +405,9 @@ mod tests {
         rng.fill_normal_f32(&mut post_b, 0.8);
 
         let mut w_b = vec![0.0f32; 5 * 4 * batch];
+        let mask = crate::snn::spike::mask_words(&[true, true, false]);
         for _ in 0..20 {
-            apply_update_batch(&p, &cfg, batch, &[true, true, false], &mut w_b, &pre_b, &post_b);
+            apply_update_batch(&p, &cfg, batch, &mask, &mut w_b, &pre_b, &post_b);
         }
 
         for b in 0..batch {

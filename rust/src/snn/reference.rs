@@ -1,0 +1,541 @@
+//! Dense scalar reference implementations — the pre-packing golden path.
+//!
+//! The serving hot path steps through bit-packed spike words
+//! (`spike.rs`, DESIGN.md §Hot-Path). This module keeps the **dense
+//! boolean** formulation alive as an independent oracle:
+//!
+//! - [`ReferenceNetwork`] is a deliberately plain single-session stepper
+//!   built from the scalar primitives ([`lif_step_scalar`],
+//!   [`trace_step_scalar`], [`apply_update`]) in the canonical order —
+//!   the ground truth the packed path must match **bit-for-bit** (pinned
+//!   by `tests/packed_equivalence.rs`).
+//! - [`DenseBatchedNetwork`] is the dense structure-of-arrays batched
+//!   stepper the packed kernels replaced — kept both as a second oracle
+//!   and as the "dense" arm of `bench_server_throughput`'s
+//!   packed-vs-dense comparison.
+//!
+//! Nothing here runs on the serving path; clarity beats speed.
+
+use super::lif::lif_step_scalar;
+use super::network::{Mode, SnnConfig};
+use super::numeric::Scalar;
+use super::plasticity::{
+    apply_update, update_synapse, PlasticityConfig, RuleParams, COEFFS_PER_SYNAPSE,
+};
+use super::trace::trace_step_scalar;
+
+/// Dense spike-driven matvec: `out[i] = Σ_j w[j][i] · s_j`. Because
+/// spikes are binary this is a gather-accumulate over active rows only —
+/// the same event-driven skip the FPGA's psum-stationary dataflow
+/// exploits (§III-B: spikes "gate downstream logic"), expressed over a
+/// boolean slice.
+pub fn matvec_spikes<S: Scalar>(w: &[S], spikes: &[bool], n_post: usize, out: &mut [S]) {
+    assert_eq!(out.len(), n_post);
+    assert_eq!(w.len(), spikes.len() * n_post);
+    for o in out.iter_mut() {
+        *o = S::ZERO;
+    }
+    for (j, &s) in spikes.iter().enumerate() {
+        if !s {
+            continue;
+        }
+        let row = &w[j * n_post..(j + 1) * n_post];
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o = o.add(wv);
+        }
+    }
+}
+
+/// Dense batched spike-driven matvec over `batch` independent sessions.
+///
+/// `spikes` is `n_pre × batch` (`[neuron][session]`), `out` is
+/// `n_post × batch`. With `shared_w` the weight matrix is the plain
+/// `n_pre × n_post` row-major layout used by fixed-weight deployments;
+/// otherwise it is `n_pre × n_post × batch` (`[synapse][session]`).
+/// Inactive sessions' outputs are zeroed but receive no accumulation.
+#[allow(clippy::too_many_arguments)]
+pub fn matvec_spikes_batch<S: Scalar>(
+    w: &[S],
+    shared_w: bool,
+    spikes: &[bool],
+    n_pre: usize,
+    n_post: usize,
+    batch: usize,
+    active: &[bool],
+    out: &mut [S],
+) {
+    assert_eq!(out.len(), n_post * batch);
+    assert_eq!(spikes.len(), n_pre * batch);
+    assert_eq!(active.len(), batch);
+    let expect_w = if shared_w {
+        n_pre * n_post
+    } else {
+        n_pre * n_post * batch
+    };
+    assert_eq!(w.len(), expect_w);
+    for o in out.iter_mut() {
+        *o = S::ZERO;
+    }
+    for j in 0..n_pre {
+        let srow = &spikes[j * batch..(j + 1) * batch];
+        // Event-driven skip: rows silent in every active session are free.
+        if !srow.iter().zip(active).any(|(&s, &a)| s && a) {
+            continue;
+        }
+        for i in 0..n_post {
+            let orow = &mut out[i * batch..(i + 1) * batch];
+            if shared_w {
+                let wv = w[j * n_post + i];
+                for b in 0..batch {
+                    if active[b] && srow[b] {
+                        orow[b] = orow[b].add(wv);
+                    }
+                }
+            } else {
+                let wrow = &w[(j * n_post + i) * batch..(j * n_post + i + 1) * batch];
+                for b in 0..batch {
+                    if active[b] && srow[b] {
+                        orow[b] = orow[b].add(wrow[b]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dense boolean-masked batched plasticity step — the pre-packing
+/// formulation of `apply_update_batch`, kept as the reference oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_update_batch_dense<S: Scalar>(
+    params: &RuleParams,
+    cfg: &PlasticityConfig,
+    batch: usize,
+    active: &[bool],
+    weights: &mut [S],
+    pre_trace: &[S],
+    post_trace: &[S],
+) {
+    assert_eq!(weights.len(), params.pre * params.post * batch);
+    assert_eq!(pre_trace.len(), params.pre * batch);
+    assert_eq!(post_trace.len(), params.post * batch);
+    assert_eq!(active.len(), batch);
+    let eta = S::from_f32(cfg.eta);
+    let lo = S::from_f32(-cfg.w_clip);
+    let hi = S::from_f32(cfg.w_clip);
+    for j in 0..params.pre {
+        let pre_row = &pre_trace[j * batch..(j + 1) * batch];
+        let row = j * params.post;
+        for i in 0..params.post {
+            let k = (row + i) * COEFFS_PER_SYNAPSE;
+            let coeffs = [
+                S::from_f32(params.theta[k]),
+                S::from_f32(params.theta[k + 1]),
+                S::from_f32(params.theta[k + 2]),
+                S::from_f32(params.theta[k + 3]),
+            ];
+            let post_row = &post_trace[i * batch..(i + 1) * batch];
+            let wbase = (row + i) * batch;
+            let wrow = &mut weights[wbase..wbase + batch];
+            for b in 0..batch {
+                if !active[b] {
+                    continue;
+                }
+                wrow[b] = update_synapse(coeffs, eta, lo, hi, wrow[b], pre_row[b], post_row[b]);
+            }
+        }
+    }
+}
+
+/// Plain single-session reference stepper: dense matvecs + the scalar
+/// LIF/trace primitives + [`apply_update`], executed in the canonical
+/// order (L1 forward, hidden LIF, L2 forward, output LIF, traces,
+/// plasticity). The packed batched path must match this bit-for-bit for
+/// every session.
+#[derive(Clone, Debug)]
+pub struct ReferenceNetwork<S: Scalar> {
+    /// Architecture and dynamics constants.
+    pub cfg: SnnConfig,
+    /// Plastic (rule θ) or fixed weights.
+    pub mode: Mode,
+    /// L1 weights, `n_in × n_hidden` row-major.
+    pub w1: Vec<S>,
+    /// L2 weights, `n_hidden × n_out` row-major.
+    pub w2: Vec<S>,
+    /// Hidden membrane potentials.
+    pub v_hidden: Vec<S>,
+    /// Output membrane potentials.
+    pub v_out: Vec<S>,
+    /// Hidden spikes of the most recent step.
+    pub spikes_hidden: Vec<bool>,
+    /// Output spikes of the most recent step.
+    pub spikes_out: Vec<bool>,
+    /// Input-population traces.
+    pub trace_in: Vec<S>,
+    /// Hidden-population traces.
+    pub trace_hidden: Vec<S>,
+    /// Output-population traces.
+    pub trace_out: Vec<S>,
+    /// Soft (subtract V_th) vs hard (zero) reset — mirror of
+    /// [`crate::snn::LifLayer::soft_reset`]; set it identically on both
+    /// sides when comparing against a packed network.
+    pub soft_reset: bool,
+    cur_hidden: Vec<S>,
+    cur_out: Vec<S>,
+}
+
+impl<S: Scalar> ReferenceNetwork<S> {
+    /// Fresh reference network (zero weights/state).
+    pub fn new(cfg: SnnConfig, mode: Mode) -> Self {
+        let (n_in, n_h, n_o) = (cfg.n_in, cfg.n_hidden, cfg.n_out);
+        ReferenceNetwork {
+            w1: vec![S::ZERO; n_in * n_h],
+            w2: vec![S::ZERO; n_h * n_o],
+            v_hidden: vec![S::ZERO; n_h],
+            v_out: vec![S::ZERO; n_o],
+            spikes_hidden: vec![false; n_h],
+            spikes_out: vec![false; n_o],
+            trace_in: vec![S::ZERO; n_in],
+            trace_hidden: vec![S::ZERO; n_h],
+            trace_out: vec![S::ZERO; n_o],
+            soft_reset: true,
+            cur_hidden: vec![S::ZERO; n_h],
+            cur_out: vec![S::ZERO; n_o],
+            cfg,
+            mode,
+        }
+    }
+
+    /// Install fixed weights from flat `[W1 ‖ W2]` (baseline mode).
+    pub fn load_weights(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.cfg.n_weights(), "weight vector mismatch");
+        let split = self.cfg.l1_synapses();
+        for (w, &x) in self.w1.iter_mut().zip(&flat[..split]) {
+            *w = S::from_f32(x);
+        }
+        for (w, &x) in self.w2.iter_mut().zip(&flat[split..]) {
+            *w = S::from_f32(x);
+        }
+    }
+
+    /// One timestep driven by binary input spikes; returns output spikes.
+    pub fn step_spikes(&mut self, input: &[bool]) -> &[bool] {
+        assert_eq!(input.len(), self.cfg.n_in);
+        let v_th = S::from_f32(self.cfg.v_th);
+        let lambda = S::from_f32(self.cfg.lambda);
+
+        // L1 forward + hidden LIF.
+        matvec_spikes(&self.w1, input, self.cfg.n_hidden, &mut self.cur_hidden);
+        for i in 0..self.cfg.n_hidden {
+            let (nv, sp) =
+                lif_step_scalar(self.v_hidden[i], self.cur_hidden[i], v_th, self.soft_reset);
+            self.v_hidden[i] = nv;
+            self.spikes_hidden[i] = sp;
+        }
+
+        // L2 forward + output LIF.
+        matvec_spikes(&self.w2, &self.spikes_hidden, self.cfg.n_out, &mut self.cur_out);
+        for i in 0..self.cfg.n_out {
+            let (nv, sp) = lif_step_scalar(self.v_out[i], self.cur_out[i], v_th, self.soft_reset);
+            self.v_out[i] = nv;
+            self.spikes_out[i] = sp;
+        }
+
+        // Traces from the current timestep (§III-C).
+        for (t, &s) in self.trace_in.iter_mut().zip(input) {
+            *t = trace_step_scalar(*t, s, lambda);
+        }
+        for (t, &s) in self.trace_hidden.iter_mut().zip(&self.spikes_hidden) {
+            *t = trace_step_scalar(*t, s, lambda);
+        }
+        for (t, &s) in self.trace_out.iter_mut().zip(&self.spikes_out) {
+            *t = trace_step_scalar(*t, s, lambda);
+        }
+
+        // Plasticity.
+        if let Mode::Plastic(rule) = &self.mode {
+            apply_update(
+                &rule.l1,
+                &self.cfg.plasticity,
+                &mut self.w1,
+                &self.trace_in,
+                &self.trace_hidden,
+            );
+            apply_update(
+                &rule.l2,
+                &self.cfg.plasticity,
+                &mut self.w2,
+                &self.trace_hidden,
+                &self.trace_out,
+            );
+        }
+        &self.spikes_out
+    }
+}
+
+/// The dense structure-of-arrays batched stepper the packed kernels
+/// replaced: boolean spike matrices, boolean session masks, dense
+/// per-lane branches. Semantics are identical to the packed
+/// `SnnNetwork::step_spikes_masked`; kept as an oracle and as the dense
+/// arm of the packed-vs-dense benchmark.
+#[derive(Clone, Debug)]
+pub struct DenseBatchedNetwork<S: Scalar> {
+    /// Architecture and dynamics constants.
+    pub cfg: SnnConfig,
+    /// Plastic (shared rule θ, per-session weights) or fixed weights.
+    pub mode: Mode,
+    /// Number of sessions multiplexed.
+    pub batch: usize,
+    /// L1 weights (plastic: `[synapse][session]`; fixed: shared row-major).
+    pub w1: Vec<S>,
+    /// L2 weights, same layout rules as `w1`.
+    pub w2: Vec<S>,
+    /// Hidden membranes, `[neuron][session]`.
+    pub v_hidden: Vec<S>,
+    /// Output membranes, `[neuron][session]`.
+    pub v_out: Vec<S>,
+    /// Hidden spikes, dense `[neuron][session]` booleans.
+    pub spikes_hidden: Vec<bool>,
+    /// Output spikes, dense `[neuron][session]` booleans.
+    pub spikes_out: Vec<bool>,
+    /// Input traces, `[neuron][session]`.
+    pub trace_in: Vec<S>,
+    /// Hidden traces, `[neuron][session]`.
+    pub trace_hidden: Vec<S>,
+    /// Output traces, `[neuron][session]`.
+    pub trace_out: Vec<S>,
+    /// Soft vs hard membrane reset (mirror of `LifLayer::soft_reset`).
+    pub soft_reset: bool,
+    cur_hidden: Vec<S>,
+    cur_out: Vec<S>,
+}
+
+impl<S: Scalar> DenseBatchedNetwork<S> {
+    /// Fresh dense batched network (zero weights/state).
+    pub fn new(cfg: SnnConfig, mode: Mode, batch: usize) -> Self {
+        assert!(batch >= 1, "batch must be >= 1");
+        let (n_in, n_h, n_o) = (cfg.n_in, cfg.n_hidden, cfg.n_out);
+        let wb = if matches!(mode, Mode::Plastic(_)) { batch } else { 1 };
+        DenseBatchedNetwork {
+            w1: vec![S::ZERO; n_in * n_h * wb],
+            w2: vec![S::ZERO; n_h * n_o * wb],
+            v_hidden: vec![S::ZERO; n_h * batch],
+            v_out: vec![S::ZERO; n_o * batch],
+            spikes_hidden: vec![false; n_h * batch],
+            spikes_out: vec![false; n_o * batch],
+            trace_in: vec![S::ZERO; n_in * batch],
+            trace_hidden: vec![S::ZERO; n_h * batch],
+            trace_out: vec![S::ZERO; n_o * batch],
+            soft_reset: true,
+            cur_hidden: vec![S::ZERO; n_h * batch],
+            cur_out: vec![S::ZERO; n_o * batch],
+            cfg,
+            mode,
+            batch,
+        }
+    }
+
+    /// Install fixed weights from flat `[W1 ‖ W2]` (baseline mode; the
+    /// single shared copy).
+    pub fn load_weights(&mut self, flat: &[f32]) {
+        assert!(matches!(self.mode, Mode::Fixed), "fixed mode only");
+        assert_eq!(flat.len(), self.cfg.n_weights(), "weight vector mismatch");
+        let split = self.cfg.l1_synapses();
+        for (w, &x) in self.w1.iter_mut().zip(&flat[..split]) {
+            *w = S::from_f32(x);
+        }
+        for (w, &x) in self.w2.iter_mut().zip(&flat[split..]) {
+            *w = S::from_f32(x);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dense_lif_masked(
+        v: &mut [S],
+        spikes: &mut [bool],
+        currents: &[S],
+        v_th: S,
+        soft_reset: bool,
+        batch: usize,
+        active: &[bool],
+    ) {
+        let neurons = v.len() / batch;
+        for i in 0..neurons {
+            let row = i * batch;
+            for (k, &on) in active.iter().enumerate() {
+                if !on {
+                    continue;
+                }
+                let idx = row + k;
+                let (nv, sp) = lif_step_scalar(v[idx], currents[idx], v_th, soft_reset);
+                v[idx] = nv;
+                spikes[idx] = sp;
+            }
+        }
+    }
+
+    fn dense_trace_masked(
+        values: &mut [S],
+        spikes: &[bool],
+        lambda: S,
+        batch: usize,
+        active: &[bool],
+    ) {
+        let neurons = values.len() / batch;
+        for i in 0..neurons {
+            let row = i * batch;
+            for (k, &on) in active.iter().enumerate() {
+                if !on {
+                    continue;
+                }
+                let idx = row + k;
+                let decayed = values[idx].mul(lambda);
+                values[idx] = if spikes[idx] { decayed.add(S::ONE) } else { decayed };
+            }
+        }
+    }
+
+    /// One dense batched timestep over the sessions selected by `active`.
+    /// `input` is `n_in × batch`, `[neuron][session]`.
+    pub fn step_spikes_masked(&mut self, input: &[bool], active: &[bool]) {
+        let b = self.batch;
+        assert_eq!(input.len(), self.cfg.n_in * b);
+        assert_eq!(active.len(), b);
+        let shared = matches!(self.mode, Mode::Fixed);
+        let v_th = S::from_f32(self.cfg.v_th);
+        let lambda = S::from_f32(self.cfg.lambda);
+
+        matvec_spikes_batch(
+            &self.w1,
+            shared,
+            input,
+            self.cfg.n_in,
+            self.cfg.n_hidden,
+            b,
+            active,
+            &mut self.cur_hidden,
+        );
+        Self::dense_lif_masked(
+            &mut self.v_hidden,
+            &mut self.spikes_hidden,
+            &self.cur_hidden,
+            v_th,
+            self.soft_reset,
+            b,
+            active,
+        );
+
+        matvec_spikes_batch(
+            &self.w2,
+            shared,
+            &self.spikes_hidden,
+            self.cfg.n_hidden,
+            self.cfg.n_out,
+            b,
+            active,
+            &mut self.cur_out,
+        );
+        Self::dense_lif_masked(
+            &mut self.v_out,
+            &mut self.spikes_out,
+            &self.cur_out,
+            v_th,
+            self.soft_reset,
+            b,
+            active,
+        );
+
+        Self::dense_trace_masked(&mut self.trace_in, input, lambda, b, active);
+        Self::dense_trace_masked(&mut self.trace_hidden, &self.spikes_hidden, lambda, b, active);
+        Self::dense_trace_masked(&mut self.trace_out, &self.spikes_out, lambda, b, active);
+
+        if let Mode::Plastic(rule) = &self.mode {
+            apply_update_batch_dense(
+                &rule.l1,
+                &self.cfg.plasticity,
+                b,
+                active,
+                &mut self.w1,
+                &self.trace_in,
+                &self.trace_hidden,
+            );
+            apply_update_batch_dense(
+                &rule.l2,
+                &self.cfg.plasticity,
+                b,
+                active,
+                &mut self.w2,
+                &self.trace_hidden,
+                &self.trace_out,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::NetworkRule;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg64::new(7, 0);
+        let (n_pre, n_post) = (13, 9);
+        let mut w = vec![0.0f32; n_pre * n_post];
+        rng.fill_normal_f32(&mut w, 1.0);
+        let spikes: Vec<bool> = (0..n_pre).map(|_| rng.bernoulli(0.4)).collect();
+        let mut out = vec![0.0f32; n_post];
+        matvec_spikes(&w, &spikes, n_post, &mut out);
+        for i in 0..n_post {
+            let mut expect = 0.0;
+            for j in 0..n_pre {
+                if spikes[j] {
+                    expect += w[j * n_post + i];
+                }
+            }
+            assert!((out[i] - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dense_batched_matches_scalar_reference() {
+        // The two oracles must agree with each other bit-for-bit.
+        let cfg = SnnConfig::tiny();
+        let batch = 3;
+        let mut rng = Pcg64::new(77, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.25);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+
+        let mut dense =
+            DenseBatchedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone()), batch);
+        let mut refs: Vec<ReferenceNetwork<f32>> = (0..batch)
+            .map(|_| ReferenceNetwork::new(cfg.clone(), Mode::Plastic(rule.clone())))
+            .collect();
+
+        let active = vec![true; batch];
+        let mut input_rng = Pcg64::new(78, 0);
+        for _ in 0..30 {
+            let mut inmat = vec![false; cfg.n_in * batch];
+            for v in inmat.iter_mut() {
+                *v = input_rng.bernoulli(0.4);
+            }
+            dense.step_spikes_masked(&inmat, &active);
+            for (b, r) in refs.iter_mut().enumerate() {
+                let single: Vec<bool> = (0..cfg.n_in).map(|j| inmat[j * batch + b]).collect();
+                r.step_spikes(&single);
+                for o in 0..cfg.n_out {
+                    assert_eq!(dense.spikes_out[o * batch + b], r.spikes_out[o]);
+                }
+            }
+        }
+        for (b, r) in refs.iter().enumerate() {
+            for s in 0..cfg.l1_synapses() {
+                assert_eq!(dense.w1[s * batch + b], r.w1[s], "w1 s{b} syn{s}");
+            }
+            for o in 0..cfg.n_out {
+                assert_eq!(dense.trace_out[o * batch + b], r.trace_out[o]);
+            }
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Bit-packed spike words — the binary-activation representation of the
+//! serving hot path (DESIGN.md §Hot-Path).
+//!
+//! Spikes are binary, so a population's activity across the batched
+//! session lanes packs into `u64` words: session `b` of neuron `n` is
+//! bit `b % 64` of word `n·wpr + b/64` (`wpr` = words per row, the batch
+//! dimension rounded up to the 64-lane word width). This buys the two
+//! tricks the FireFly line exploits in hardware (arXiv 2301.01905,
+//! 2309.16158):
+//!
+//! - **event-driven skip**: a whole 64-session word compares against
+//!   zero in one instruction, and a `trailing_zeros` walk visits only
+//!   the set bits — synaptic accumulation cost scales with the firing
+//!   rate, not with `n_pre × n_post × batch`;
+//! - **branch-free masking**: the active-session mask is a word too, so
+//!   masked batched stepping is bitwise AND + lane selects instead of a
+//!   data-dependent branch per `(neuron, session)`.
+//!
+//! Lanes at or beyond the logical batch are **always zero** — every
+//! writer below maintains that invariant, so kernels may walk whole
+//! words without range checks.
+
+/// Session lanes per packed spike word.
+pub const LANES: usize = 64;
+
+/// Number of `u64` words needed to hold `batch` session lanes.
+#[inline]
+pub const fn words_for(batch: usize) -> usize {
+    batch.div_ceil(LANES)
+}
+
+/// Pack a boolean active-session mask into words (`words.len()` must be
+/// `words_for(active.len())`). Padding lanes are left zero.
+pub fn pack_mask_into(active: &[bool], words: &mut [u64]) {
+    assert_eq!(words.len(), words_for(active.len()), "mask word count mismatch");
+    for (wi, word) in words.iter_mut().enumerate() {
+        let lanes = (active.len() - wi * LANES).min(LANES);
+        let mut bits = 0u64;
+        for (l, &on) in active[wi * LANES..wi * LANES + lanes].iter().enumerate() {
+            bits |= (on as u64) << l;
+        }
+        *word = bits;
+    }
+}
+
+/// Allocating convenience wrapper around [`pack_mask_into`] (tests and
+/// cold paths; the hot path keeps a scratch mask and packs in place).
+pub fn mask_words(active: &[bool]) -> Vec<u64> {
+    let mut words = vec![0u64; words_for(active.len())];
+    pack_mask_into(active, &mut words);
+    words
+}
+
+/// All-active mask over `batch` lanes (padding lanes zero).
+pub fn full_mask(batch: usize) -> Vec<u64> {
+    let mut words = vec![0u64; words_for(batch)];
+    for (wi, w) in words.iter_mut().enumerate() {
+        let lanes = (batch - wi * LANES).min(LANES);
+        *w = if lanes == LANES { u64::MAX } else { (1u64 << lanes) - 1 };
+    }
+    words
+}
+
+/// Re-lay a `[element][session]` scalar buffer from `old_batch` lanes to
+/// `new_batch` lanes, preserving existing sessions and filling the new
+/// lanes with `fill`. Shared by the batched state carriers' `grow_batch`
+/// (sessions must survive capacity growth — see
+/// `SnnBackend::ensure_sessions`).
+pub fn grow_lanes<T: Copy>(old: &[T], old_batch: usize, new_batch: usize, fill: T) -> Vec<T> {
+    assert!(old_batch >= 1 && new_batch >= old_batch, "lanes can only grow");
+    assert_eq!(old.len() % old_batch, 0, "buffer not a multiple of batch");
+    let elems = old.len() / old_batch;
+    let mut out = vec![fill; elems * new_batch];
+    for e in 0..elems {
+        out[e * new_batch..e * new_batch + old_batch]
+            .copy_from_slice(&old[e * old_batch..(e + 1) * old_batch]);
+    }
+    out
+}
+
+/// Bit-packed binary spike matrix over `neurons × batch` session lanes.
+///
+/// Layout: `neurons` rows of `words_per_row` contiguous `u64` words;
+/// session `b` of neuron `n` is bit `b % 64` of word
+/// `n · words_per_row + b / 64`. Bits at lanes `>= batch` are always
+/// zero (maintained by every mutator).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpikeWords {
+    words: Vec<u64>,
+    neurons: usize,
+    batch: usize,
+    words_per_row: usize,
+}
+
+impl SpikeWords {
+    /// All-silent spike matrix for `neurons × batch`.
+    pub fn new(neurons: usize, batch: usize) -> Self {
+        assert!(batch >= 1, "batch must be >= 1");
+        let words_per_row = words_for(batch);
+        SpikeWords {
+            words: vec![0; neurons * words_per_row],
+            neurons,
+            batch,
+            words_per_row,
+        }
+    }
+
+    /// Number of neurons (rows).
+    #[inline]
+    pub fn neurons(&self) -> usize {
+        self.neurons
+    }
+
+    /// Number of session lanes carried per neuron.
+    #[inline]
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Words per neuron row (`batch` rounded up to the 64-lane width).
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// One neuron's packed session lanes.
+    #[inline]
+    pub fn row(&self, neuron: usize) -> &[u64] {
+        &self.words[neuron * self.words_per_row..(neuron + 1) * self.words_per_row]
+    }
+
+    /// Mutable access to one neuron's packed session lanes. Callers must
+    /// keep lanes `>= batch` zero.
+    #[inline]
+    pub fn row_mut(&mut self, neuron: usize) -> &mut [u64] {
+        &mut self.words[neuron * self.words_per_row..(neuron + 1) * self.words_per_row]
+    }
+
+    /// Spike bit of (`neuron`, `session`).
+    #[inline]
+    pub fn get(&self, neuron: usize, session: usize) -> bool {
+        assert!(neuron < self.neurons && session < self.batch, "spike index out of range");
+        let w = neuron * self.words_per_row + session / LANES;
+        (self.words[w] >> (session % LANES)) & 1 == 1
+    }
+
+    /// Set or clear the spike bit of (`neuron`, `session`).
+    #[inline]
+    pub fn set(&mut self, neuron: usize, session: usize, value: bool) {
+        assert!(neuron < self.neurons && session < self.batch, "spike index out of range");
+        let w = neuron * self.words_per_row + session / LANES;
+        let bit = 1u64 << (session % LANES);
+        if value {
+            self.words[w] |= bit;
+        } else {
+            self.words[w] &= !bit;
+        }
+    }
+
+    /// Clear every spike bit.
+    pub fn clear(&mut self) {
+        for w in self.words.iter_mut() {
+            *w = 0;
+        }
+    }
+
+    /// Clear one session's lane across all neurons, leaving other
+    /// sessions untouched.
+    pub fn clear_session(&mut self, session: usize) {
+        assert!(session < self.batch, "session out of range");
+        let w = session / LANES;
+        let mask = !(1u64 << (session % LANES));
+        for n in 0..self.neurons {
+            self.words[n * self.words_per_row + w] &= mask;
+        }
+    }
+
+    /// Repack from a dense `[neuron][session]` boolean matrix
+    /// (`bools.len() == neurons × batch`).
+    pub fn fill_from_bools(&mut self, bools: &[bool]) {
+        assert_eq!(bools.len(), self.neurons * self.batch, "spike matrix size mismatch");
+        let (wpr, batch) = (self.words_per_row, self.batch);
+        for n in 0..self.neurons {
+            let base = n * batch;
+            for wi in 0..wpr {
+                let lanes = (batch - wi * LANES).min(LANES);
+                let mut bits = 0u64;
+                for (l, &s) in bools[base + wi * LANES..base + wi * LANES + lanes]
+                    .iter()
+                    .enumerate()
+                {
+                    bits |= (s as u64) << l;
+                }
+                self.words[n * wpr + wi] = bits;
+            }
+        }
+    }
+
+    /// Unpack into a dense `[neuron][session]` boolean matrix
+    /// (`out.len() == neurons × batch`).
+    pub fn write_bools(&self, out: &mut [bool]) {
+        assert_eq!(out.len(), self.neurons * self.batch, "spike matrix size mismatch");
+        for n in 0..self.neurons {
+            let row = self.row(n);
+            for b in 0..self.batch {
+                out[n * self.batch + b] = (row[b / LANES] >> (b % LANES)) & 1 == 1;
+            }
+        }
+    }
+
+    /// Total number of set spike bits (diagnostics).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True if any spike bit is set.
+    pub fn any(&self) -> bool {
+        self.words.iter().any(|&w| w != 0)
+    }
+
+    /// Grow the session dimension to `new_batch`, preserving every
+    /// existing session's bits (lane positions are stable under growth)
+    /// and leaving the new lanes silent.
+    pub fn grow_batch(&mut self, new_batch: usize) {
+        assert!(new_batch >= self.batch, "batch can only grow");
+        if new_batch == self.batch {
+            return;
+        }
+        let new_wpr = words_for(new_batch);
+        let mut new_words = vec![0u64; self.neurons * new_wpr];
+        for n in 0..self.neurons {
+            let src = &self.words[n * self.words_per_row..(n + 1) * self.words_per_row];
+            new_words[n * new_wpr..n * new_wpr + self.words_per_row].copy_from_slice(src);
+        }
+        self.words = new_words;
+        self.batch = new_batch;
+        self.words_per_row = new_wpr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_round_trip_across_word_boundary() {
+        let mut s = SpikeWords::new(3, 70); // 2 words per row
+        assert_eq!(s.words_per_row(), 2);
+        s.set(1, 0, true);
+        s.set(1, 63, true);
+        s.set(1, 64, true);
+        s.set(2, 69, true);
+        assert!(s.get(1, 0) && s.get(1, 63) && s.get(1, 64) && s.get(2, 69));
+        assert!(!s.get(0, 0) && !s.get(1, 1) && !s.get(2, 68));
+        assert_eq!(s.count_ones(), 4);
+        s.set(1, 63, false);
+        assert!(!s.get(1, 63));
+        assert_eq!(s.count_ones(), 3);
+    }
+
+    #[test]
+    fn bools_round_trip() {
+        let (n, b) = (5, 67);
+        let mut dense = vec![false; n * b];
+        let mut x = 0x1234_5678u64;
+        for v in dense.iter_mut() {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            *v = x >> 60 > 7;
+        }
+        let mut s = SpikeWords::new(n, b);
+        s.fill_from_bools(&dense);
+        let mut back = vec![false; n * b];
+        s.write_bools(&mut back);
+        assert_eq!(dense, back);
+        // padding lanes stay zero
+        for row in 0..n {
+            assert_eq!(s.row(row)[1] >> (b - LANES), 0, "padding lanes must be zero");
+        }
+    }
+
+    #[test]
+    fn mask_packing_and_full_mask() {
+        let active = [true, false, true, true];
+        let m = mask_words(&active);
+        assert_eq!(m, vec![0b1101]);
+        assert_eq!(full_mask(64), vec![u64::MAX]);
+        assert_eq!(full_mask(65), vec![u64::MAX, 1]);
+        assert_eq!(words_for(1), 1);
+        assert_eq!(words_for(64), 1);
+        assert_eq!(words_for(65), 2);
+    }
+
+    #[test]
+    fn clear_session_only_touches_one_lane() {
+        let mut s = SpikeWords::new(2, 3);
+        s.set(0, 0, true);
+        s.set(0, 1, true);
+        s.set(1, 1, true);
+        s.clear_session(1);
+        assert!(s.get(0, 0));
+        assert!(!s.get(0, 1) && !s.get(1, 1));
+    }
+
+    #[test]
+    fn grow_preserves_lane_positions() {
+        let mut s = SpikeWords::new(2, 3);
+        s.set(0, 2, true);
+        s.set(1, 0, true);
+        s.grow_batch(130);
+        assert_eq!(s.batch(), 130);
+        assert_eq!(s.words_per_row(), 3);
+        assert!(s.get(0, 2) && s.get(1, 0));
+        assert_eq!(s.count_ones(), 2);
+    }
+
+    #[test]
+    fn grow_lanes_preserves_sessions() {
+        let old = vec![1.0f32, 2.0, 3.0, 4.0]; // 2 elements × 2 lanes
+        let new = grow_lanes(&old, 2, 5, 0.0f32);
+        assert_eq!(new, vec![1.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0]);
+    }
+}

@@ -12,6 +12,7 @@
 //! bit-for-bit on trace values for any spike history.
 
 use super::numeric::Scalar;
+use super::spike::{grow_lanes, SpikeWords, LANES};
 
 /// Per-neuron exponentially decaying spike traces.
 ///
@@ -19,6 +20,9 @@ use super::numeric::Scalar;
 /// structure-of-arrays **batch dimension** (`[neuron][session]` layout)
 /// so one trace update can serve many independent controller sessions;
 /// `batch == 1` reproduces the historical single-session layout exactly.
+/// Batched updates consume bit-packed [`SpikeWords`] (DESIGN.md
+/// §Hot-Path), and on the serving path the update is fused into the LIF
+/// sweep via [`crate::snn::LifLayer::step_trace_masked`].
 #[derive(Clone, Debug)]
 pub struct TraceVector<S: Scalar> {
     /// Trace values, `neurons × batch`, laid out `[neuron][session]`.
@@ -74,7 +78,19 @@ impl<S: Scalar> TraceVector<S> {
         }
     }
 
-    /// Decay all traces and add the new spike indicators.
+    /// Grow the session dimension to `new_batch`, preserving every
+    /// existing session's trace values; new sessions start at zero.
+    pub fn grow_batch(&mut self, new_batch: usize) {
+        assert!(new_batch >= self.batch, "batch can only grow");
+        if new_batch == self.batch {
+            return;
+        }
+        self.values = grow_lanes(&self.values, self.batch, new_batch, S::ZERO);
+        self.batch = new_batch;
+    }
+
+    /// Decay all traces and add the new spike indicators (dense boolean
+    /// form, every session; the reference/compat path).
     pub fn update(&mut self, spikes: &[bool]) {
         assert_eq!(spikes.len(), self.values.len(), "spike/trace mismatch");
         for (v, &s) in self.values.iter_mut().zip(spikes) {
@@ -83,28 +99,36 @@ impl<S: Scalar> TraceVector<S> {
         }
     }
 
-    /// Batched update over the sessions selected by `active`
-    /// (`active.len() == batch`); inactive sessions' traces are left
-    /// untouched. Per-session arithmetic matches [`TraceVector::update`]
-    /// exactly, so batched and single-session trace histories are
-    /// bit-identical.
-    pub fn update_masked(&mut self, spikes: &[bool], active: &[bool]) {
-        assert_eq!(spikes.len(), self.values.len(), "spike/trace mismatch");
-        assert_eq!(active.len(), self.batch, "mask/batch mismatch");
+    /// Batched update from bit-packed spike words over the sessions
+    /// selected by the packed `active_words` mask; inactive sessions'
+    /// traces are left untouched (branch-free lane selects). Per-session
+    /// arithmetic matches [`TraceVector::update`] exactly, so batched and
+    /// single-session trace histories are bit-identical.
+    pub fn update_packed(&mut self, spikes: &SpikeWords, active_words: &[u64]) {
+        assert_eq!(spikes.neurons(), self.neurons, "spike/trace mismatch");
+        assert_eq!(spikes.batch(), self.batch, "spike/trace batch mismatch");
+        assert_eq!(
+            active_words.len(),
+            spikes.words_per_row(),
+            "mask/batch mismatch"
+        );
         let b = self.batch;
         for i in 0..self.neurons {
-            let row = i * b;
-            for (k, &on) in active.iter().enumerate() {
-                if !on {
+            let row = spikes.row(i);
+            for (wi, &aw) in active_words.iter().enumerate() {
+                if aw == 0 {
                     continue;
                 }
-                let idx = row + k;
-                let decayed = self.values[idx].mul(self.lambda);
-                self.values[idx] = if spikes[idx] {
-                    decayed.add(S::ONE)
-                } else {
-                    decayed
-                };
+                let bits = row[wi];
+                let lanes = (b - wi * LANES).min(LANES);
+                let base = i * b + wi * LANES;
+                for l in 0..lanes {
+                    let on = (aw >> l) & 1 == 1;
+                    let idx = base + l;
+                    let old = self.values[idx];
+                    let new = trace_step_scalar(old, (bits >> l) & 1 == 1, self.lambda);
+                    self.values[idx] = if on { new } else { old };
+                }
             }
         }
     }
@@ -115,7 +139,8 @@ impl<S: Scalar> TraceVector<S> {
     }
 }
 
-/// Scalar trace update used by the FPGA simulator's Trace Update Unit.
+/// Scalar trace update used by the FPGA simulator's Trace Update Unit
+/// and the dense scalar reference model.
 #[inline]
 pub fn trace_step_scalar<S: Scalar>(trace: S, spike: bool, lambda: S) -> S {
     let d = trace.mul(lambda);
@@ -129,6 +154,7 @@ pub fn trace_step_scalar<S: Scalar>(trace: S, spike: bool, lambda: S) -> S {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::snn::spike::mask_words;
     use crate::util::fp16::F16;
 
     #[test]
@@ -204,18 +230,21 @@ mod tests {
     }
 
     #[test]
-    fn batched_update_matches_singles_and_respects_mask() {
+    fn packed_update_matches_singles_and_respects_mask() {
         let n = 3;
         let batch = 2;
         let mut t = TraceVector::<f32>::batched(n, batch, 0.5);
         let mut s0 = TraceVector::<f32>::new(n, 0.5);
+        let active = mask_words(&[true, false]);
         let patterns = [
             [true, false, true, true, false, false],
             [false, true, true, false, true, false],
         ];
+        let mut packed = SpikeWords::new(n, batch);
         for row in &patterns {
             // spikes laid out [neuron][session]; session 1 masked off
-            t.update_masked(row, &[true, false]);
+            packed.fill_from_bools(row);
+            t.update_packed(&packed, &active);
             let single: Vec<bool> = (0..n).map(|i| row[i * batch]).collect();
             s0.update(&single);
         }
@@ -227,5 +256,18 @@ mod tests {
         for i in 0..n {
             assert_eq!(t.values[i * batch], 0.0);
         }
+    }
+
+    #[test]
+    fn grow_batch_preserves_traces() {
+        let mut t = TraceVector::<f32>::batched(2, 2, 0.5);
+        t.values = vec![1.0, 2.0, 3.0, 4.0];
+        t.grow_batch(65);
+        assert_eq!(t.batch, 65);
+        assert_eq!(t.values[0], 1.0);
+        assert_eq!(t.values[1], 2.0);
+        assert_eq!(t.values[65], 3.0);
+        assert_eq!(t.values[66], 4.0);
+        assert_eq!(t.values[64], 0.0);
     }
 }

@@ -3,6 +3,10 @@
 //! positional arguments, typed accessors with defaults, and auto-generated
 //! `--help` text.
 
+// Documentation debt (ROADMAP.md): item-level rustdoc pending for this
+// module; remove this allow when it is burned down.
+#![allow(missing_docs)]
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 

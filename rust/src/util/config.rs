@@ -4,6 +4,10 @@
 //! accessors. Every experiment binary can take `--config path.toml`;
 //! CLI options override file values.
 
+// Documentation debt (ROADMAP.md): item-level rustdoc pending for this
+// module; remove this allow when it is burned down.
+#![allow(missing_docs)]
+
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;

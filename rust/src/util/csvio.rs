@@ -2,6 +2,10 @@
 //! tables/series through this module so EXPERIMENTS.md can point at stable
 //! file formats under `results/`.
 
+// Documentation debt (ROADMAP.md): item-level rustdoc pending for this
+// module; remove this allow when it is burned down.
+#![allow(missing_docs)]
+
 use std::fmt::Display;
 use std::fs::{self, File};
 use std::io::{BufWriter, Write};

@@ -25,14 +25,24 @@ use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
 
 /// IEEE 754 binary16 value, stored as its raw bit pattern.
 #[derive(Clone, Copy, Default, PartialEq, Eq)]
-pub struct F16(pub u16);
+pub struct F16(
+    /// Raw IEEE 754 binary16 bit pattern (sign·5-bit exp·10-bit frac).
+    pub u16,
+);
 
+/// Positive zero.
 pub const F16_ZERO: F16 = F16(0x0000);
+/// Negative zero (compares equal to +0.0 through f32).
 pub const F16_NEG_ZERO: F16 = F16(0x8000);
+/// 1.0
 pub const F16_ONE: F16 = F16(0x3C00);
+/// 0.5
 pub const F16_HALF: F16 = F16(0x3800);
+/// Positive infinity.
 pub const F16_INFINITY: F16 = F16(0x7C00);
+/// Negative infinity.
 pub const F16_NEG_INFINITY: F16 = F16(0xFC00);
+/// Canonical quiet NaN.
 pub const F16_NAN: F16 = F16(0x7E00);
 /// Largest finite f16: 65504.0
 pub const F16_MAX: F16 = F16(0x7BFF);
@@ -156,36 +166,43 @@ impl F16 {
         f32::from_bits(bits)
     }
 
+    /// True for any NaN bit pattern.
     #[inline]
     pub fn is_nan(self) -> bool {
         (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
     }
 
+    /// True for ±infinity.
     #[inline]
     pub fn is_infinite(self) -> bool {
         (self.0 & 0x7FFF) == 0x7C00
     }
 
+    /// True for every value except ±infinity and NaN.
     #[inline]
     pub fn is_finite(self) -> bool {
         (self.0 & 0x7C00) != 0x7C00
     }
 
+    /// True when the sign bit is set (including −0.0 and negative NaN).
     #[inline]
     pub fn is_sign_negative(self) -> bool {
         self.0 & 0x8000 != 0
     }
 
+    /// True for subnormal values (zero exponent, nonzero fraction).
     #[inline]
     pub fn is_subnormal(self) -> bool {
         (self.0 & 0x7C00) == 0 && (self.0 & 0x3FF) != 0
     }
 
+    /// True for ±0.0.
     #[inline]
     pub fn is_zero(self) -> bool {
         self.0 & 0x7FFF == 0
     }
 
+    /// Absolute value (clears the sign bit; NaN payload preserved).
     #[inline]
     pub fn abs(self) -> Self {
         F16(self.0 & 0x7FFF)
@@ -213,6 +230,7 @@ impl F16 {
         F16::from_f32(x.clamp(-MAX, MAX))
     }
 
+    /// IEEE-style maximum: NaN operands lose to the non-NaN side.
     pub fn max(self, other: F16) -> F16 {
         if self.is_nan() {
             return other;
@@ -227,6 +245,7 @@ impl F16 {
         }
     }
 
+    /// IEEE-style minimum: NaN operands lose to the non-NaN side.
     pub fn min(self, other: F16) -> F16 {
         if self.is_nan() {
             return other;

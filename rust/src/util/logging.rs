@@ -2,6 +2,10 @@
 //! Level is controlled by `FIREFLY_LOG` (error|warn|info|debug|trace) or
 //! programmatically via [`set_level`]; default is `info`.
 
+// Documentation debt (ROADMAP.md): item-level rustdoc pending for this
+// module; remove this allow when it is burned down.
+#![allow(missing_docs)]
+
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;

@@ -11,6 +11,10 @@
 //! });
 //! ```
 
+// Documentation debt (ROADMAP.md): item-level rustdoc pending for this
+// module; remove this allow when it is burned down.
+#![allow(missing_docs)]
+
 use crate::util::rng::Pcg64;
 
 /// Per-case generator handed to properties.

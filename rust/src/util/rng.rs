@@ -46,6 +46,7 @@ impl Pcg64 {
         Pcg64::new(seed, stream)
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -54,6 +55,7 @@ impl Pcg64 {
         xored.rotate_right(rot)
     }
 
+    /// Next 32 bits (upper half of a 64-bit draw).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32

@@ -45,14 +45,17 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Median (50th percentile, linear interpolation).
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// Minimum (+inf for empty input).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum (−inf for empty input).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
 }
@@ -76,14 +79,18 @@ pub fn centered_ranks(fitness: &[f64]) -> Vec<f64> {
 /// Exponential moving average accumulator.
 #[derive(Clone, Debug)]
 pub struct Ema {
+    /// Smoothing factor in (0, 1]; higher tracks faster.
     pub alpha: f64,
+    /// Current estimate (None until the first update).
     pub value: Option<f64>,
 }
 
 impl Ema {
+    /// Accumulator with smoothing factor `alpha`, initially empty.
     pub fn new(alpha: f64) -> Self {
         Ema { alpha, value: None }
     }
+    /// Fold in one sample and return the updated estimate.
     pub fn update(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -92,6 +99,7 @@ impl Ema {
         self.value = Some(v);
         v
     }
+    /// Current estimate (0.0 before any update).
     pub fn get(&self) -> f64 {
         self.value.unwrap_or(0.0)
     }
@@ -101,14 +109,18 @@ impl Ema {
 /// steady-state loop doesn't buffer samples.
 #[derive(Clone, Debug, Default)]
 pub struct Welford {
+    /// Number of samples folded in.
     pub n: u64,
     mean: f64,
     m2: f64,
+    /// Smallest sample seen (+inf before any sample).
     pub min: f64,
+    /// Largest sample seen (−inf before any sample).
     pub max: f64,
 }
 
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Welford {
             n: 0,
@@ -119,6 +131,7 @@ impl Welford {
         }
     }
 
+    /// Fold in one sample.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -128,6 +141,7 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Running mean (0.0 before any sample).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -136,6 +150,7 @@ impl Welford {
         }
     }
 
+    /// Sample variance (n−1 denominator; 0.0 for n < 2).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -144,6 +159,7 @@ impl Welford {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }

@@ -73,6 +73,7 @@ pub struct ThreadPool {
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 impl ThreadPool {
+    /// Spawn a pool of `workers` named threads (at least one).
     pub fn new(workers: usize) -> Self {
         let workers = workers.max(1);
         let mut senders = Vec::with_capacity(workers);
@@ -98,6 +99,7 @@ impl ThreadPool {
         }
     }
 
+    /// Number of worker threads in the pool.
     pub fn workers(&self) -> usize {
         self.senders.len()
     }

@@ -1,0 +1,187 @@
+//! Counting-allocator proof that the steady-state serving loop performs
+//! **zero heap allocations per OBS request** (ISSUE 2 acceptance).
+//!
+//! The test drives the exact per-request pipeline the server runs —
+//! `parse_floats_into` → pooled `PopulationEncoder::encode` → input
+//! gather → one batched `step_sessions` → `output_traces_session_into`
+//! → `TraceDecoder::decode` → `ACT` response formatting into a reused
+//! `String` — through a `#[global_allocator]` that counts allocations
+//! while armed. After a warmup pass sizes every pooled buffer, hundreds
+//! of further request ticks must allocate nothing.
+//!
+//! (The TCP layer adds only socket syscalls and a pre-sized
+//! `BufReader`/line `String` on top of this pipeline; payload buffers
+//! are the pooled slot cells exercised here.)
+//!
+//! This file holds exactly one test: the allocator counts process-wide,
+//! so no other test may run concurrently in this binary.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use firefly_p::backend::{NativeBackend, SnnBackend};
+use firefly_p::coordinator::server::parse_floats_into;
+use firefly_p::snn::encoding::{PopulationEncoder, TraceDecoder};
+use firefly_p::snn::{NetworkRule, SnnConfig};
+use firefly_p::util::rng::Pcg64;
+
+struct CountingAlloc;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// One simulated serving tick over `slots`: per-slot OBS parse + encode,
+/// gather, batched step, per-slot trace fetch + decode + ACT format.
+#[allow(clippy::too_many_arguments)]
+fn serve_tick(
+    backend: &mut NativeBackend,
+    encoder: &PopulationEncoder,
+    decoder: &TraceDecoder,
+    slots: &[usize],
+    obs_lines: &[String],
+    rngs: &mut [Pcg64],
+    obs: &mut Vec<f32>,
+    inbufs: &mut [Vec<bool>],
+    inputs: &mut Vec<bool>,
+    out_spikes: &mut Vec<bool>,
+    traces: &mut Vec<f32>,
+    action: &mut Vec<f32>,
+    resp: &mut String,
+) {
+    // handler side: parse + encode into the pooled slot buffers
+    for (k, &slot) in slots.iter().enumerate() {
+        parse_floats_into(&obs_lines[k], encoder.dims, obs).expect("valid obs line");
+        inbufs[slot].resize(encoder.n_neurons(), false);
+        encoder.encode(obs, &mut rngs[slot], inbufs[slot].as_mut_slice());
+    }
+    // stepper side: gather, one batched step, decode + format per slot
+    inputs.clear();
+    for &slot in slots {
+        inputs.extend_from_slice(&inbufs[slot]);
+    }
+    backend.step_sessions(slots, inputs, out_spikes);
+    for &slot in slots {
+        backend.output_traces_session_into(slot, traces);
+        action.clear();
+        action.resize(decoder.action_dims, 0.0);
+        decoder.decode(traces, action.as_mut_slice());
+        resp.clear();
+        resp.push_str("ACT ");
+        for (i, a) in action.iter().enumerate() {
+            if i > 0 {
+                resp.push(',');
+            }
+            let _ = write!(resp, "{a:.6}");
+        }
+        assert!(resp.len() > 4, "response must carry actions");
+    }
+}
+
+#[test]
+fn steady_state_obs_requests_allocate_nothing() {
+    // cheetah-vel-like serving geometry: 6 obs dims × 8 = 48 in, 12 out.
+    let mut cfg = SnnConfig::control(48, 12);
+    cfg.n_hidden = 32;
+    let mut rng = Pcg64::new(11, 0);
+    let mut genome = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut genome, 0.1);
+    let rule = NetworkRule::from_flat(&cfg, &genome);
+
+    let mut backend = NativeBackend::plastic(cfg, rule);
+    let sessions = 8usize;
+    assert_eq!(backend.ensure_sessions(sessions), sessions);
+    let encoder = PopulationEncoder::symmetric(6, 8, 3.0);
+    let decoder = TraceDecoder::new(6, 0.5);
+
+    let slots: Vec<usize> = (0..sessions).collect();
+    let obs_lines: Vec<String> = (0..sessions)
+        .map(|s| format!("0.1,-0.2,0.3,{:.2},0.5,-0.6", (s as f32) / 9.0))
+        .collect();
+    let mut rngs: Vec<Pcg64> = (0..sessions).map(|s| Pcg64::new(5, s as u64)).collect();
+
+    let mut obs: Vec<f32> = Vec::new();
+    let mut inbufs: Vec<Vec<bool>> = (0..sessions).map(|_| Vec::new()).collect();
+    let mut inputs: Vec<bool> = Vec::new();
+    let mut out_spikes: Vec<bool> = Vec::new();
+    let mut traces: Vec<f32> = Vec::new();
+    let mut action: Vec<f32> = Vec::new();
+    let mut resp = String::new();
+
+    // Warmup: size every pooled buffer and let the backend settle.
+    for _ in 0..50 {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+    }
+
+    // Armed window: hundreds of request ticks, zero allocations allowed.
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for _ in 0..300 {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        allocs, 0,
+        "steady-state serving loop allocated {allocs} times over 300 ticks × {sessions} sessions"
+    );
+}

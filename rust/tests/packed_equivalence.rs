@@ -1,0 +1,190 @@
+//! Property test: the packed event-driven step pipeline is **bit-exact**
+//! against the dense scalar reference path.
+//!
+//! For random geometries, batch sizes (including non-multiples of the
+//! 64-lane word width), spike histories, per-tick active masks, and both
+//! arithmetic domains (f32 and bit-accurate FP16), a batched
+//! `SnnNetwork` stepping through packed spike words must agree
+//! bit-for-bit with
+//!
+//! 1. `ReferenceNetwork` — one plain dense scalar stepper per session,
+//!    advanced only on that session's active ticks, and
+//! 2. `DenseBatchedNetwork` — the dense SoA batched formulation the
+//!    packed kernels replaced,
+//!
+//! on every output spike of every tick, and on the full final state
+//! (weights, membranes, traces). This is the correctness contract of
+//! ISSUE 2's perf work: packing changes the schedule, never the values.
+
+use firefly_p::snn::reference::{DenseBatchedNetwork, ReferenceNetwork};
+use firefly_p::snn::{Mode, NetworkRule, PlasticityConfig, Scalar, SnnConfig, SnnNetwork};
+use firefly_p::util::fp16::F16;
+use firefly_p::util::proptest::{check, Gen};
+use firefly_p::util::rng::Pcg64;
+
+/// Batch sizes to probe: word-aligned, sub-word, and straddling sizes.
+const BATCHES: [usize; 12] = [1, 2, 3, 5, 8, 31, 32, 63, 64, 65, 67, 128];
+
+fn random_cfg(g: &mut Gen) -> SnnConfig {
+    SnnConfig {
+        n_in: g.usize_range(2, 10),
+        n_hidden: g.usize_range(2, 12),
+        n_out: g.usize_range(1, 6),
+        lambda: 0.5,
+        v_th: 1.0,
+        input_gain: 2.0,
+        plasticity: PlasticityConfig::default(),
+    }
+}
+
+fn run_case<S: Scalar>(g: &mut Gen) {
+    let cfg = random_cfg(g);
+    let batch = BATCHES[g.usize_range(0, BATCHES.len())];
+    let plastic = g.rng.bernoulli(0.8);
+
+    let mut theta_rng = Pcg64::new(g.u64(), 0);
+    let mode = if plastic {
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        theta_rng.fill_normal_f32(&mut flat, 0.3);
+        Mode::Plastic(NetworkRule::from_flat(&cfg, &flat))
+    } else {
+        Mode::Fixed
+    };
+
+    let mut packed = SnnNetwork::<S>::new_batched(cfg.clone(), mode.clone(), batch);
+    let mut dense = DenseBatchedNetwork::<S>::new(cfg.clone(), mode.clone(), batch);
+    let mut refs: Vec<ReferenceNetwork<S>> = (0..batch)
+        .map(|_| ReferenceNetwork::new(cfg.clone(), mode.clone()))
+        .collect();
+
+    if !plastic {
+        let mut flat = vec![0.0f32; cfg.n_weights()];
+        theta_rng.fill_normal_f32(&mut flat, 0.7);
+        packed.load_weights(&flat);
+        dense.load_weights(&flat);
+        for r in refs.iter_mut() {
+            r.load_weights(&flat);
+        }
+    }
+
+    // Occasionally run the hard-reset (zero-on-spike) LIF variant.
+    if g.rng.bernoulli(0.15) {
+        packed.hidden.soft_reset = false;
+        packed.output.soft_reset = false;
+        dense.soft_reset = false;
+        for r in refs.iter_mut() {
+            r.soft_reset = false;
+        }
+    }
+
+    // per-session firing rates, so lanes desynchronize
+    let rates: Vec<f64> = (0..batch).map(|_| g.f64_range(0.05, 0.9)).collect();
+    let ticks = g.usize_range(4, 10);
+    for _ in 0..ticks {
+        let active: Vec<bool> = (0..batch).map(|_| g.rng.bernoulli(0.75)).collect();
+        let mut inmat = vec![false; cfg.n_in * batch];
+        for j in 0..cfg.n_in {
+            for (b, &rate) in rates.iter().enumerate() {
+                inmat[j * batch + b] = g.rng.bernoulli(rate);
+            }
+        }
+
+        packed.step_spikes_masked(&inmat, &active);
+        dense.step_spikes_masked(&inmat, &active);
+        for (b, r) in refs.iter_mut().enumerate() {
+            if active[b] {
+                let single: Vec<bool> = (0..cfg.n_in).map(|j| inmat[j * batch + b]).collect();
+                r.step_spikes(&single);
+            }
+        }
+
+        for b in 0..batch {
+            for o in 0..cfg.n_out {
+                let p = packed.output.spikes.get(o, b);
+                assert_eq!(
+                    p,
+                    dense.spikes_out[o * batch + b],
+                    "seed {:#x}: packed vs dense spike, session {b} neuron {o}",
+                    g.seed
+                );
+                assert_eq!(
+                    p, refs[b].spikes_out[o],
+                    "seed {:#x}: packed vs reference spike, session {b} neuron {o}",
+                    g.seed
+                );
+            }
+        }
+    }
+
+    // Full final-state bit-equivalence, session by session.
+    for (b, r) in refs.iter().enumerate() {
+        if plastic {
+            for s in 0..cfg.l1_synapses() {
+                assert_eq!(packed.w1[s * batch + b], r.w1[s], "seed {:#x}: w1 s{b}", g.seed);
+                assert_eq!(packed.w1[s * batch + b], dense.w1[s * batch + b]);
+            }
+            for s in 0..cfg.l2_synapses() {
+                assert_eq!(packed.w2[s * batch + b], r.w2[s], "seed {:#x}: w2 s{b}", g.seed);
+            }
+        }
+        for i in 0..cfg.n_hidden {
+            assert_eq!(
+                packed.hidden.v[i * batch + b],
+                r.v_hidden[i],
+                "seed {:#x}: hidden V s{b}",
+                g.seed
+            );
+            assert_eq!(packed.trace_hidden.values[i * batch + b], r.trace_hidden[i]);
+        }
+        for o in 0..cfg.n_out {
+            assert_eq!(packed.output.v[o * batch + b], r.v_out[o]);
+            assert_eq!(packed.trace_out.values[o * batch + b], r.trace_out[o]);
+            assert_eq!(dense.trace_out[o * batch + b], r.trace_out[o]);
+        }
+        for j in 0..cfg.n_in {
+            assert_eq!(packed.trace_in.values[j * batch + b], r.trace_in[j]);
+        }
+    }
+}
+
+#[test]
+fn packed_path_is_bit_exact_f32() {
+    check(32, run_case::<f32>);
+}
+
+#[test]
+fn packed_path_is_bit_exact_f16() {
+    check(16, run_case::<F16>);
+}
+
+#[test]
+fn packed_path_bit_exact_at_exact_word_boundaries() {
+    // Deterministic sweep over the boundary batches with full activity —
+    // the configuration the serving steady state runs in.
+    for &batch in &[63usize, 64, 65] {
+        let cfg = SnnConfig::tiny();
+        let mut rng = Pcg64::new(0xB0B0 + batch as u64, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.25);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+        let mut packed =
+            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone()), batch);
+        let mut refs: Vec<ReferenceNetwork<f32>> = (0..batch)
+            .map(|_| ReferenceNetwork::new(cfg.clone(), Mode::Plastic(rule.clone())))
+            .collect();
+        let active = vec![true; batch];
+        for _ in 0..25 {
+            let inmat: Vec<bool> = (0..cfg.n_in * batch).map(|_| rng.bernoulli(0.3)).collect();
+            packed.step_spikes_masked(&inmat, &active);
+            for (b, r) in refs.iter_mut().enumerate() {
+                let single: Vec<bool> = (0..cfg.n_in).map(|j| inmat[j * batch + b]).collect();
+                r.step_spikes(&single);
+            }
+        }
+        for (b, r) in refs.iter().enumerate() {
+            for s in 0..cfg.l1_synapses() {
+                assert_eq!(packed.w1[s * batch + b], r.w1[s], "B={batch} s{b} syn{s}");
+            }
+        }
+    }
+}
