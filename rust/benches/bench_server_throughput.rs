@@ -2,9 +2,12 @@
 //! a paper table): how much faster B concurrent controller sessions run
 //! through one batched SoA step than through B sequential single-session
 //! steps, how much the bit-packed event-driven kernels gain over the
-//! dense boolean formulation across spike-sparsity levels, plus
-//! end-to-end TCP latency through the session-managed control server.
-//! Feeds the §Perf serving rows of EXPERIMENTS.md.
+//! dense boolean formulation across spike-sparsity levels, how batched
+//! stepping scales across cores with 64-lane word shards
+//! (`--step-threads`), what event-driven (presyn-gated) plasticity buys
+//! across firing rates, plus end-to-end TCP latency through the
+//! session-managed control server. Feeds the §Perf serving rows of
+//! EXPERIMENTS.md.
 //!
 //! Acceptance targets:
 //! - ISSUE 1: batched serving at B=64 sessions achieves ≥4× the steps/s
@@ -12,6 +15,16 @@
 //! - ISSUE 2: packed event-driven stepping achieves ≥3× dense steps/s at
 //!   5 % input firing rate, B=64 (`packed`/`dense` rows, sweep over
 //!   5 %/20 %/50 % firing).
+//! - ISSUE 3: `sharded` rows sweep 1/2/4/8 step threads × 5/20/50 %
+//!   firing at B=512 — 8 packed words, one full 64-lane shard per
+//!   worker even at 8 threads (speedup vs the 1-thread arm at the
+//!   same rate);
+//!   `gated`/`ungated` rows measure event-driven plasticity, with
+//!   `trace_sparsity` reporting the measured fraction of presynaptic
+//!   rows the gate skipped.
+//!
+//! CSV schema (since ISSUE 3):
+//! `layer,batch,threads,firing_rate,trace_sparsity,steps_per_s,speedup,p50_us,p99_us`
 //!
 //! Run: `cargo bench --bench bench_server_throughput`
 
@@ -132,6 +145,60 @@ fn bench_packed_vs_dense(batch: usize, rate: f64, ticks: usize) -> (f64, f64) {
     (packed_sps, dense_sps)
 }
 
+/// Core-count scaling: the sharded batched stepper at `threads` 64-lane
+/// word shards, B sessions, the given input firing rate. Returns
+/// session-steps/s.
+fn bench_sharded(threads: usize, batch: usize, rate: f64, ticks: usize) -> f64 {
+    let cfg = geometry();
+    let rule = make_rule(&cfg, 3);
+    let inputs = random_inputs(&cfg, batch, rate, 11);
+    let mut backend = NativeBackend::plastic_with_threads(cfg, rule, threads);
+    assert_eq!(backend.ensure_sessions(batch), batch);
+    let mut out = Vec::new();
+    for _ in 0..5 {
+        backend.step_batch(batch, &inputs, &mut out);
+    }
+    let t0 = Instant::now();
+    for _ in 0..ticks {
+        backend.step_batch(batch, &inputs, &mut out);
+    }
+    (batch * ticks) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Event-driven (presyn-gated) vs dense plasticity at a given firing
+/// rate, B=64. Returns (steps/s, measured trace sparsity = fraction of
+/// presynaptic rows the gate skipped on the final tick).
+fn bench_gated_plasticity(gated: bool, batch: usize, rate: f64, ticks: usize) -> (f64, f64) {
+    let mut cfg = geometry();
+    cfg.plasticity.presyn_gate = gated;
+    let rule = make_rule(&cfg, 3);
+    let active = vec![true; batch];
+    // Spatial sparsity (the serving-relevant regime): a fixed `rate`
+    // subset of input neurons carries activity, the rest are silent —
+    // their traces drain below ε and the gate retires their rows.
+    let mut rng = Pcg64::new(13, 2);
+    let live: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(rate)).collect();
+    let frames: Vec<Vec<bool>> = (0..16)
+        .map(|_| {
+            (0..cfg.n_in * batch)
+                .map(|k| live[k / batch] && rng.bernoulli(0.7))
+                .collect()
+        })
+        .collect();
+    let mut net = SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule), batch);
+    for f in frames.iter().take(5) {
+        net.step_spikes_masked(f, &active);
+    }
+    let t0 = Instant::now();
+    for t in 0..ticks {
+        net.step_spikes_masked(&frames[t % frames.len()], &active);
+    }
+    let sps = (batch * ticks) as f64 / t0.elapsed().as_secs_f64();
+    let visited = net.plasticity_rows_visited[0] + net.plasticity_rows_visited[1];
+    let total = cfg.n_in + cfg.n_hidden;
+    (sps, 1.0 - visited as f64 / total as f64)
+}
+
 /// TCP-level: B concurrent clients hammering OBS round-trips through the
 /// session-managed server. Returns (aggregate requests/s, latencies µs).
 fn bench_tcp(batch: usize, requests_per_client: usize) -> (f64, Vec<f64>) {
@@ -202,7 +269,9 @@ fn main() {
         &[
             "layer",
             "batch",
+            "threads",
             "firing_rate",
+            "trace_sparsity",
             "steps_per_s",
             "speedup",
             "p50_us",
@@ -225,9 +294,9 @@ fn main() {
             "B={batch:<3} batched {batched_sps:>12.0} steps/s   sequential \
              {seq_sps:>12.0} steps/s   speedup {speedup:>5.2}×"
         );
-        csv.row(&[&"engine-batched", &batch, &0.5, &batched_sps, &speedup, &0.0, &0.0])
+        csv.row(&[&"engine-batched", &batch, &1, &0.5, &0.0, &batched_sps, &speedup, &0.0, &0.0])
             .unwrap();
-        csv.row(&[&"engine-sequential", &batch, &0.5, &seq_sps, &1.0, &0.0, &0.0])
+        csv.row(&[&"engine-sequential", &batch, &1, &0.5, &0.0, &seq_sps, &1.0, &0.0, &0.0])
             .unwrap();
     }
 
@@ -246,9 +315,53 @@ fn main() {
              {dense_sps:>12.0} steps/s   speedup {speedup:>5.2}×",
             rate * 100.0
         );
-        csv.row(&[&"packed", &batch, &rate, &packed_sps, &speedup, &0.0, &0.0])
+        csv.row(&[&"packed", &batch, &1, &rate, &0.0, &packed_sps, &speedup, &0.0, &0.0])
             .unwrap();
-        csv.row(&[&"dense", &batch, &rate, &dense_sps, &1.0, &0.0, &0.0])
+        csv.row(&[&"dense", &batch, &1, &rate, &0.0, &dense_sps, &1.0, &0.0, &0.0])
+            .unwrap();
+    }
+
+    println!("\n--- engine: sharded stepping, core-count × sparsity sweep (B=512) ---");
+    for &rate in &[0.05f64, 0.20, 0.50] {
+        // 512 sessions = 8 packed words, so even the 8-thread arm gets
+        // one full 64-lane word shard per worker (at B=256 the 8-thread
+        // configuration would silently degenerate to 4 shards).
+        let batch = 512;
+        let ticks = 60;
+        let base_sps = bench_sharded(1, batch, rate, ticks);
+        for &threads in &[1usize, 2, 4, 8] {
+            let sps = if threads == 1 {
+                base_sps
+            } else {
+                bench_sharded(threads, batch, rate, ticks)
+            };
+            let speedup = sps / base_sps;
+            println!(
+                "B={batch:<3} fire={:>4.0}%  threads={threads}  {sps:>12.0} steps/s   \
+                 scaling {speedup:>5.2}×",
+                rate * 100.0
+            );
+            csv.row(&[&"sharded", &batch, &threads, &rate, &0.0, &sps, &speedup, &0.0, &0.0])
+                .unwrap();
+        }
+    }
+
+    println!("\n--- engine: event-driven (presyn-gated) plasticity, sparsity sweep ---");
+    for &rate in &[0.05f64, 0.20, 0.50] {
+        let batch = 64;
+        let ticks = 200;
+        let (dense_sps, _) = bench_gated_plasticity(false, batch, rate, ticks);
+        let (gated_sps, sparsity) = bench_gated_plasticity(true, batch, rate, ticks);
+        let speedup = gated_sps / dense_sps;
+        println!(
+            "B={batch:<3} live={:>4.0}%  gated {gated_sps:>12.0} steps/s   ungated \
+             {dense_sps:>12.0} steps/s   speedup {speedup:>5.2}×   rows skipped {:>5.1}%",
+            rate * 100.0,
+            sparsity * 100.0
+        );
+        csv.row(&[&"gated", &batch, &1, &rate, &sparsity, &gated_sps, &speedup, &0.0, &0.0])
+            .unwrap();
+        csv.row(&[&"ungated", &batch, &1, &rate, &0.0, &dense_sps, &1.0, &0.0, &0.0])
             .unwrap();
     }
 
@@ -261,7 +374,7 @@ fn main() {
         println!(
             "B={batch:<3} {rps:>10.0} req/s   p50 {p50:>8.1} µs   p99 {p99:>8.1} µs"
         );
-        csv.row(&[&"tcp", &batch, &0.0, &rps, &0.0, &p50, &p99]).unwrap();
+        csv.row(&[&"tcp", &batch, &1, &0.0, &0.0, &rps, &0.0, &p50, &p99]).unwrap();
     }
 
     let path = csv.finish().unwrap();

@@ -1,59 +1,88 @@
 //! Native backend: the pure-Rust golden model (`SnnNetwork<f32>`), and
 //! the only backend with **native multi-session batching** — it steps
-//! all of its sessions through one structure-of-arrays network so the
-//! frozen rule θ is streamed once per tick instead of once per session
-//! (DESIGN.md §Batched-Serving). Request spikes are scattered straight
-//! into the network's bit-packed staging words (DESIGN.md §Hot-Path):
-//! no dense boolean input matrix is materialized on the serving path,
-//! and the steady-state step performs zero heap allocations.
+//! all of its sessions through structure-of-arrays networks so the
+//! frozen rule θ is streamed once per tick per shard instead of once per
+//! session (DESIGN.md §Batched-Serving). Request spikes are scattered
+//! straight into the networks' bit-packed staging words (DESIGN.md
+//! §Hot-Path): no dense boolean input matrix is materialized on the
+//! serving path, and the single-shard steady-state step performs zero
+//! heap allocations.
+//!
+//! Since PR 3 the sessions live in a [`ShardedNetwork`]: the batch is
+//! partitioned into 64-lane word shards stepped in parallel across
+//! `step_threads` pool workers (`--step-threads` on the serving CLI).
+//! `step_threads == 1` (the [`NativeBackend::plastic`] /
+//! [`NativeBackend::fixed`] default) is exactly the pre-sharding
+//! single-thread path.
 
 use super::SnnBackend;
-use crate::snn::{Mode, NetworkRule, SnnConfig, SnnNetwork};
+use crate::snn::{Mode, NetworkRule, ShardedNetwork, SnnConfig, SnnNetwork};
 
 /// Pure-Rust f32 engine hosting one or more controller sessions.
 pub struct NativeBackend {
-    net: SnnNetwork<f32>,
-    /// Scratch: per-session active mask for staged stepping.
-    active: Vec<bool>,
+    net: ShardedNetwork<f32>,
 }
 
 impl NativeBackend {
     /// Plastic (FireFly-P) deployment: zero-initialized weights, online
-    /// four-term updates under the frozen `rule`.
+    /// four-term updates under the frozen `rule`. Single-threaded
+    /// stepping; see [`NativeBackend::plastic_with_threads`].
     pub fn plastic(cfg: SnnConfig, rule: NetworkRule) -> Self {
-        let net = SnnNetwork::new(cfg, Mode::Plastic(rule));
+        Self::plastic_with_threads(cfg, rule, 1)
+    }
+
+    /// Plastic deployment whose batched steps are sharded across
+    /// `step_threads` pool workers (64-lane word shards; DESIGN.md
+    /// §Hot-Path). `step_threads` fixes the shard mapping for the
+    /// backend's lifetime.
+    pub fn plastic_with_threads(cfg: SnnConfig, rule: NetworkRule, step_threads: usize) -> Self {
         NativeBackend {
-            active: vec![false; 1],
-            net,
+            net: ShardedNetwork::new(cfg, Mode::Plastic(rule), step_threads),
         }
     }
 
     /// Fixed-weight baseline deployment: `weights` installed once, no
-    /// online updates.
+    /// online updates. Single-threaded stepping; see
+    /// [`NativeBackend::fixed_with_threads`].
     pub fn fixed(cfg: SnnConfig, weights: &[f32]) -> Self {
-        let mut net = SnnNetwork::new(cfg, Mode::Fixed);
-        net.load_weights(weights);
-        NativeBackend {
-            active: vec![false; 1],
-            net,
-        }
+        Self::fixed_with_threads(cfg, weights, 1)
     }
 
-    /// Borrow the underlying golden-model network (diagnostics).
+    /// Fixed-weight deployment with sharded multi-threaded stepping.
+    pub fn fixed_with_threads(cfg: SnnConfig, weights: &[f32], step_threads: usize) -> Self {
+        let mut backend = NativeBackend {
+            net: ShardedNetwork::new(cfg, Mode::Fixed, step_threads),
+        };
+        backend.net.load_weights(weights);
+        backend
+    }
+
+    /// Borrow the underlying golden-model network of the first shard
+    /// (diagnostics; with one step thread this is the whole batch).
     pub fn network(&self) -> &SnnNetwork<f32> {
-        &self.net
+        self.net.shard(0)
+    }
+
+    /// Number of worker threads the batched step is sharded across.
+    pub fn step_threads(&self) -> usize {
+        self.net.stripes()
+    }
+
+    /// Presynaptic rows visited by the most recent plastic step, per
+    /// synaptic layer `[L1, L2]`, summed over stepped shards
+    /// (event-driven plasticity diagnostics; see
+    /// `PlasticityConfig::presyn_gate`).
+    pub fn plasticity_rows_visited(&self) -> [usize; 2] {
+        self.net.plasticity_rows_visited()
     }
 }
 
 impl SnnBackend for NativeBackend {
     fn config(&self) -> &SnnConfig {
-        &self.net.cfg
+        self.net.cfg()
     }
 
     fn step(&mut self, input_spikes: &[bool]) -> Vec<bool> {
-        if self.net.batch == 1 {
-            return self.net.step_spikes(input_spikes).to_vec();
-        }
         let mut out = Vec::new();
         self.step_sessions(&[0], input_spikes, &mut out);
         out
@@ -73,51 +102,40 @@ impl SnnBackend for NativeBackend {
 
     fn ensure_sessions(&mut self, n: usize) -> usize {
         let n = n.max(1);
-        if n > self.net.batch {
+        if n > self.net.batch() {
             // State-preserving growth: live sessions keep their
-            // membranes/traces/weights, new slots start zeroed.
+            // membranes/traces/weights, new slots start zeroed; the
+            // migration-free shard mapping means no session changes
+            // shard (tests/sharded_equivalence.rs).
             self.net.grow_batch(n);
-            self.active = vec![false; n];
         }
-        self.net.batch
+        self.net.batch()
     }
 
     fn sessions(&self) -> usize {
-        self.net.batch
+        self.net.batch()
     }
 
     fn step_sessions(&mut self, sessions: &[usize], inputs: &[bool], outputs: &mut Vec<bool>) {
-        let n_in = self.net.cfg.n_in;
-        let n_out = self.net.cfg.n_out;
-        let b = self.net.batch;
+        let n_in = self.net.cfg().n_in;
+        let n_out = self.net.cfg().n_out;
         assert_eq!(inputs.len(), sessions.len() * n_in, "input arity mismatch");
 
-        // Build the packed [neuron][session-word] input staging + active
-        // mask from the session-major request list.
-        for a in self.active.iter_mut() {
-            *a = false;
-        }
-        let staging = self.net.input_mut();
-        staging.clear();
+        // Scatter the session-major request list straight into each
+        // shard's packed staging words + active mask.
+        self.net.begin_tick();
         for (k, &s) in sessions.iter().enumerate() {
-            assert!(s < b, "session {s} out of range (batch {b})");
-            assert!(!self.active[s], "duplicate session {s} in one batch step");
-            self.active[s] = true;
-            for j in 0..n_in {
-                if inputs[k * n_in + j] {
-                    staging.set(j, s, true);
-                }
-            }
+            self.net.stage_session(s, &inputs[k * n_in..(k + 1) * n_in]);
         }
 
-        self.net.step_staged(&self.active);
+        self.net.step_staged();
 
         // Scatter the output columns back to session-major order.
         outputs.clear();
         outputs.reserve(sessions.len() * n_out);
         for &s in sessions {
             for o in 0..n_out {
-                outputs.push(self.net.output.spikes.get(o, s));
+                outputs.push(self.net.output_spike(o, s));
             }
         }
     }
@@ -127,16 +145,11 @@ impl SnnBackend for NativeBackend {
     }
 
     fn output_traces_session(&self, session: usize) -> Vec<f32> {
-        self.net.output_traces_f32_session(session)
+        self.net.output_traces_session(session)
     }
 
     fn output_traces_session_into(&self, session: usize, out: &mut Vec<f32>) {
-        assert!(session < self.net.batch, "session out of range");
-        out.clear();
-        let b = self.net.batch;
-        for o in 0..self.net.cfg.n_out {
-            out.push(self.net.trace_out.values[o * b + session]);
-        }
+        self.net.output_traces_session_into(session, out);
     }
 }
 
@@ -268,5 +281,43 @@ mod tests {
         }
         // new sessions start from the zero state
         assert!(grown.output_traces_session(69).iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn threaded_backend_matches_single_threaded() {
+        // Quick smoke pin (the full sweep lives in
+        // tests/sharded_equivalence.rs): 4 step threads, 3 words of
+        // sessions, bit-identical outputs and traces.
+        let cfg = SnnConfig::tiny();
+        let mut rng = Pcg64::new(45, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.25);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+
+        let batch = 130;
+        let mut threaded = NativeBackend::plastic_with_threads(cfg.clone(), rule.clone(), 4);
+        let mut serial = NativeBackend::plastic(cfg.clone(), rule);
+        assert_eq!(threaded.ensure_sessions(batch), batch);
+        assert_eq!(serial.ensure_sessions(batch), batch);
+        assert_eq!(threaded.step_threads(), 4);
+
+        let mut input_rng = Pcg64::new(46, 0);
+        let mut out_a = Vec::new();
+        let mut out_b = Vec::new();
+        for _ in 0..10 {
+            let inputs: Vec<bool> = (0..batch * cfg.n_in)
+                .map(|_| input_rng.bernoulli(0.4))
+                .collect();
+            threaded.step_batch(batch, &inputs, &mut out_a);
+            serial.step_batch(batch, &inputs, &mut out_b);
+            assert_eq!(out_a, out_b);
+        }
+        for s in [0usize, 63, 64, 65, 128, 129] {
+            assert_eq!(
+                threaded.output_traces_session(s),
+                serial.output_traces_session(s),
+                "session {s}"
+            );
+        }
     }
 }

@@ -40,6 +40,13 @@
 //! instead of 64 scalar steps (the ≥4× headline measured by
 //! `bench_server_throughput`).
 //!
+//! The stepper itself scales across cores: with `serve --step-threads N`
+//! (default: all cores) the native backend partitions its session batch
+//! into 64-lane word shards and fans each `step_sessions` call out over
+//! N pool workers (`snn/shard.rs`, DESIGN.md §Hot-Path) — the serve()
+//! thread stays the sole owner of the backend; the parallelism lives
+//! behind the `SnnBackend` trait.
+//!
 //! # Pooled request path (DESIGN.md §Hot-Path)
 //!
 //! Request and response payloads live in **per-slot pooled buffers**

@@ -23,10 +23,8 @@
 #![warn(missing_docs)]
 
 // Documentation debt: the serving surface (snn, backend, coordinator)
-// and the util foundation are fully documented; the modules below still
-// opt out and are tracked as an open item in ROADMAP.md. (Inside util/,
-// the not-yet-documented submodules carry their own module-level
-// `#![allow(missing_docs)]` debt markers.)
+// and the whole util foundation are fully documented; the modules below
+// still opt out and are tracked as an open item in ROADMAP.md.
 pub mod util;
 
 pub mod snn;

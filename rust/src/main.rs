@@ -68,6 +68,12 @@ fn parser() -> Parser {
                 "max concurrent client sessions (native batches them; xla/fpga replicate)",
                 "16",
             ),
+            opt(
+                "step-threads",
+                "worker threads the native backend shards batched steps across \
+                 (64-lane word shards; 0 = all CPU cores)",
+                "0",
+            ),
         ],
     )
     .command(
@@ -160,7 +166,11 @@ fn geometry_of(env: &str) -> &'static str {
     }
 }
 
-fn load_backend(args: &Args, env: &str) -> Result<Box<dyn SnnBackend>, String> {
+fn load_backend(
+    args: &Args,
+    env: &str,
+    step_threads: usize,
+) -> Result<Box<dyn SnnBackend>, String> {
     let kind = BackendKind::parse(&args.get_or("backend", "native"))
         .ok_or("backend must be native | xla | fpga")?;
     let genome_path = std::path::PathBuf::from(args.get_or("genome", "results/rule.bin"));
@@ -193,8 +203,12 @@ fn load_backend(args: &Args, env: &str) -> Result<Box<dyn SnnBackend>, String> {
         NetworkRule::zeros(&cfg)
     };
     let backend: Box<dyn SnnBackend> = match (kind, plastic) {
-        (BackendKind::Native, true) => Box::new(NativeBackend::plastic(cfg, rule)),
-        (BackendKind::Native, false) => Box::new(NativeBackend::fixed(cfg, &genome)),
+        (BackendKind::Native, true) => {
+            Box::new(NativeBackend::plastic_with_threads(cfg, rule, step_threads))
+        }
+        (BackendKind::Native, false) => {
+            Box::new(NativeBackend::fixed_with_threads(cfg, &genome, step_threads))
+        }
         (BackendKind::Fpga, true) => Box::new(FpgaBackend::plastic(cfg, rule, HwConfig::default())),
         (BackendKind::Fpga, false) => {
             Box::new(FpgaBackend::fixed(cfg, &genome, HwConfig::default()))
@@ -207,7 +221,8 @@ fn load_backend(args: &Args, env: &str) -> Result<Box<dyn SnnBackend>, String> {
 
 fn cmd_adapt(args: &Args, seed: u64) -> i32 {
     let env = args.get_or("env", "ant-dir");
-    let mut backend = match load_backend(args, &env) {
+    // Adaptation episodes are single-session: no step sharding.
+    let mut backend = match load_backend(args, &env, 1) {
         Ok(b) => b,
         Err(e) => {
             eprintln!("{e}");
@@ -258,12 +273,18 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
     };
     let (obs_dim, act_dim) = (e.obs_dim(), e.act_dim());
     let sessions = args.get_usize("sessions", 16).max(1);
+    // Shard count of the native batched stepper: one 64-lane word shard
+    // per worker thread, default = all CPU cores (DESIGN.md §Hot-Path).
+    let step_threads = match args.get_usize("step-threads", 0) {
+        0 => firefly_p::util::threadpool::available_cores(),
+        n => n,
+    };
     let kind = BackendKind::parse(&args.get_or("backend", "xla"));
-    // The native backend batches sessions in one SoA network; the
+    // The native backend batches sessions in sharded SoA networks; the
     // single-session backends (xla, fpga) are replicated — one instance
     // per session, stepped in a loop (correct fallback, no batching).
     let backend: Box<dyn SnnBackend> = if kind == Some(BackendKind::Native) || sessions == 1 {
-        match load_backend(args, &env) {
+        match load_backend(args, &env, step_threads) {
             Ok(b) => b,
             Err(err) => {
                 eprintln!("{err}");
@@ -273,7 +294,7 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
     } else {
         let mut instances = Vec::with_capacity(sessions);
         for _ in 0..sessions {
-            match load_backend(args, &env) {
+            match load_backend(args, &env, 1) {
                 Ok(b) => instances.push(b),
                 Err(err) => {
                     eprintln!("{err}");

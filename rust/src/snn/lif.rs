@@ -185,6 +185,12 @@ impl<S: Scalar> LifLayer<S> {
     /// bit-identical to [`LifLayer::step_masked`] followed by a masked
     /// trace update with this step's spikes. Returns the number of
     /// spikes emitted by active sessions.
+    ///
+    /// The lane loop is shaped for auto-vectorization (DESIGN.md
+    /// §Hot-Path): bounds-check-free sub-slice zips over the ≤64
+    /// contiguous session lanes of one word, with per-lane selects
+    /// instead of branches.
+    #[inline]
     pub fn step_trace_masked(
         &mut self,
         currents: &[S],
@@ -200,6 +206,8 @@ impl<S: Scalar> LifLayer<S> {
         );
         let b = self.batch;
         let lambda = trace.lambda;
+        let v_th = self.v_th;
+        let soft = self.soft_reset;
         let mut fired = 0usize;
         for i in 0..self.neurons {
             for (wi, &aw) in active_words.iter().enumerate() {
@@ -209,20 +217,21 @@ impl<S: Scalar> LifLayer<S> {
                 let lanes = (b - wi * LANES).min(LANES);
                 let base = i * b + wi * LANES;
                 let mut bits = self.spikes.row(i)[wi] & !aw;
-                for l in 0..lanes {
+                let vs = &mut self.v[base..base + lanes];
+                let ts = &mut trace.values[base..base + lanes];
+                let cs = &currents[base..base + lanes];
+                for (l, ((v, t), &c)) in vs.iter_mut().zip(ts.iter_mut()).zip(cs).enumerate() {
                     let on = (aw >> l) & 1 == 1;
-                    let idx = base + l;
-                    let old = self.v[idx];
-                    let (stepped, fire) =
-                        lif_step_scalar(old, currents[idx], self.v_th, self.soft_reset);
-                    self.v[idx] = if on { stepped } else { old };
+                    let old = *v;
+                    let (stepped, fire) = lif_step_scalar(old, c, v_th, soft);
+                    *v = if on { stepped } else { old };
                     bits |= ((on && fire) as u64) << l;
                     fired += (on && fire) as usize;
                     // Trace: S ← λ·S + s(t), the `trace_step_scalar`
                     // datapath with a masked select.
-                    let t_old = trace.values[idx];
+                    let t_old = *t;
                     let t_new = crate::snn::trace::trace_step_scalar(t_old, fire, lambda);
-                    trace.values[idx] = if on { t_new } else { t_old };
+                    *t = if on { t_new } else { t_old };
                 }
                 self.spikes.row_mut(i)[wi] = bits;
             }

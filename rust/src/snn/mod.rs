@@ -14,9 +14,13 @@
 //! Binary spikes are carried as bit-packed `u64` session words
 //! ([`spike::SpikeWords`]) so synaptic accumulation is event-driven —
 //! work scales with the firing rate, not the synapse count — and masked
-//! batched stepping is branch-free (DESIGN.md §Hot-Path). The dense
-//! boolean formulation survives in [`reference`] as the equivalence
-//! oracle.
+//! batched stepping is branch-free (DESIGN.md §Hot-Path). At serving
+//! scale, [`shard::ShardedNetwork`] partitions the batch into 64-lane
+//! word shards stepped in parallel across threadpool workers, and
+//! event-driven plasticity ([`plasticity::PlasticityConfig::presyn_gate`]
+//! + lazy traces in [`trace`]) makes the rule sweep scale with trace
+//! sparsity too. The dense boolean formulation survives in [`reference`]
+//! as the equivalence oracle.
 
 pub mod encoding;
 pub mod lif;
@@ -24,6 +28,7 @@ pub mod network;
 pub mod numeric;
 pub mod plasticity;
 pub mod reference;
+pub mod shard;
 pub mod spike;
 pub mod trace;
 
@@ -31,5 +36,6 @@ pub use lif::LifLayer;
 pub use network::{Mode, NetworkRule, SnnConfig, SnnNetwork};
 pub use numeric::Scalar;
 pub use plasticity::{PlasticityConfig, RuleParams};
+pub use shard::ShardedNetwork;
 pub use spike::SpikeWords;
 pub use trace::TraceVector;

@@ -205,6 +205,11 @@ pub struct SnnNetwork<S: Scalar> {
     out_bools: Vec<bool>,
     /// Timesteps executed (batched steps count once).
     pub steps: u64,
+    /// Presynaptic rows visited by the most recent plastic step's rule
+    /// sweep, per synaptic layer `[L1, L2]`. Equal to `[n_in, n_hidden]`
+    /// unless event-driven gating
+    /// ([`PlasticityConfig::presyn_gate`]) skipped silent rows.
+    pub plasticity_rows_visited: [usize; 2],
 }
 
 impl<S: Scalar> SnnNetwork<S> {
@@ -224,12 +229,23 @@ impl<S: Scalar> SnnNetwork<S> {
         let v_th = cfg.v_th;
         // Fixed weights are session-invariant: store one copy.
         let wb = if matches!(mode, Mode::Plastic(_)) { batch } else { 1 };
+        // Event-driven plasticity keys the input traces lazy: decay is
+        // deferred per lane and silent (all-zero) presynaptic rows cost
+        // nothing per tick (DESIGN.md §Hot-Path). Hidden/output traces
+        // stay eager — their update is fused into the LIF sweep that
+        // must touch every membrane anyway, and they double as post
+        // traces, which every visited row's update reads.
+        let trace_in = if cfg.plasticity.presyn_gate {
+            TraceVector::batched_lazy(n_in, batch, lambda)
+        } else {
+            TraceVector::batched(n_in, batch, lambda)
+        };
         SnnNetwork {
             w1: vec![S::ZERO; n_in * n_h * wb],
             w2: vec![S::ZERO; n_h * n_o * wb],
             hidden: LifLayer::batched(n_h, batch, v_th),
             output: LifLayer::batched(n_o, batch, v_th),
-            trace_in: TraceVector::batched(n_in, batch, lambda),
+            trace_in,
             trace_hidden: TraceVector::batched(n_h, batch, lambda),
             trace_out: TraceVector::batched(n_o, batch, lambda),
             in_spikes: SpikeWords::new(n_in, batch),
@@ -238,6 +254,7 @@ impl<S: Scalar> SnnNetwork<S> {
             cur_out: vec![S::ZERO; n_o * batch],
             out_bools: vec![false; n_o * batch],
             steps: 0,
+            plasticity_rows_visited: [0, 0],
             batch,
             cfg,
             mode,
@@ -420,7 +437,19 @@ impl<S: Scalar> SnnNetwork<S> {
 
         // Input traces first — independent of the forwards, and the
         // staging pass that produced `in_spikes` is still cache-hot.
-        self.trace_in.update_packed(&self.in_spikes, &self.active_words);
+        // Lazy mode (event-driven plasticity): advance the per-session
+        // clocks, fold in this tick's spikes event-wise, then bring the
+        // hot lanes current so the plasticity sweep below reads fully
+        // materialized pre-traces (cold rows are exactly zero by
+        // invariant). Bit-identical to the eager update.
+        if self.trace_in.is_lazy() {
+            self.trace_in.tick(&self.active_words);
+            self.trace_in
+                .record_spikes_packed(&self.in_spikes, &self.active_words);
+            self.trace_in.materialize_hot();
+        } else {
+            self.trace_in.update_packed(&self.in_spikes, &self.active_words);
+        }
 
         // --- L1: event-driven accumulate + fused hidden LIF/trace -----
         matvec_spikes_packed(
@@ -450,7 +479,7 @@ impl<S: Scalar> SnnNetwork<S> {
 
         // --- Plasticity (per-session weights, shared θ, word mask) ----
         if let Mode::Plastic(rule) = &self.mode {
-            apply_update_batch(
+            let v1 = apply_update_batch(
                 &rule.l1,
                 &self.cfg.plasticity,
                 b,
@@ -459,7 +488,7 @@ impl<S: Scalar> SnnNetwork<S> {
                 &self.trace_in.values,
                 &self.trace_hidden.values,
             );
-            apply_update_batch(
+            let v2 = apply_update_batch(
                 &rule.l2,
                 &self.cfg.plasticity,
                 b,
@@ -468,6 +497,7 @@ impl<S: Scalar> SnnNetwork<S> {
                 &self.trace_hidden.values,
                 &self.trace_out.values,
             );
+            self.plasticity_rows_visited = [v1, v2];
         }
 
         self.steps += 1;
@@ -536,6 +566,16 @@ impl<S: Scalar> SnnNetwork<S> {
 ///
 /// All `out` entries are zeroed first; inactive sessions' outputs are
 /// therefore zero but receive no accumulation.
+///
+/// This kernel is the *sparse gather* of the pipeline: its per-event
+/// inner walk is strided by design (it scatters one session lane across
+/// the postsynaptic rows), so the auto-vectorization contract
+/// (DESIGN.md §Hot-Path) applies to the dense lane kernels
+/// ([`crate::snn::LifLayer::step_trace_masked`],
+/// [`crate::snn::plasticity::apply_update_batch`]) rather than here;
+/// this function is `#[inline]` so the event loop fuses into the caller
+/// and the `shared_w` flag constant-folds.
+#[inline]
 pub fn matvec_spikes_packed<S: Scalar>(
     w: &[S],
     shared_w: bool,
@@ -560,6 +600,13 @@ pub fn matvec_spikes_packed<S: Scalar>(
     }
     for j in 0..n_pre {
         let row = spikes.row(j);
+        // One weight-row slice per presynaptic neuron (hoisted out of
+        // the per-event walk).
+        let wrow = if shared_w {
+            &w[j * n_post..(j + 1) * n_post]
+        } else {
+            &w[j * n_post * batch..(j + 1) * n_post * batch]
+        };
         for (wi, &aw) in active_words.iter().enumerate() {
             let mut m = row[wi] & aw;
             // trailing_zeros walk: cost ∝ set bits, not lanes.
@@ -567,15 +614,13 @@ pub fn matvec_spikes_packed<S: Scalar>(
                 let lane = wi * LANES + m.trailing_zeros() as usize;
                 m &= m - 1;
                 if shared_w {
-                    let wrow = &w[j * n_post..(j + 1) * n_post];
                     for (i, &wv) in wrow.iter().enumerate() {
                         out[i * batch + lane] = out[i * batch + lane].add(wv);
                     }
                 } else {
-                    let base = j * n_post * batch + lane;
                     for i in 0..n_post {
                         let idx = i * batch + lane;
-                        out[idx] = out[idx].add(w[base + i * batch]);
+                        out[idx] = out[idx].add(wrow[i * batch + lane]);
                     }
                 }
             }
@@ -944,6 +989,51 @@ mod tests {
         assert_eq!(packed.w2, oracle.w2);
         assert_eq!(packed.trace_out.values, oracle.trace_out);
         assert_eq!(packed.hidden.v, oracle.v_hidden);
+    }
+
+    #[test]
+    fn gated_network_matches_gated_dense_oracle() {
+        // Event-driven plasticity (lazy input traces + presyn gate) must
+        // be bit-exact against the identically gated dense oracle — the
+        // ε-contract lives between gated and ungated runs, never between
+        // implementations. (The full sweep is in tests/lazy_traces.rs.)
+        let mut cfg = SnnConfig::tiny();
+        cfg.plasticity.presyn_gate = true;
+        let batch = 5;
+        let mut rng = Pcg64::new(90, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.3);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+        let mut packed =
+            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone()), batch);
+        assert!(packed.trace_in.is_lazy(), "gated network must use lazy input traces");
+        let mut dense = crate::snn::reference::DenseBatchedNetwork::<f32>::new(
+            cfg.clone(),
+            Mode::Plastic(rule),
+            batch,
+        );
+        let mut input_rng = Pcg64::new(91, 0);
+        for step in 0..60 {
+            let active: Vec<bool> = (0..batch).map(|b| (step + b) % 3 != 0).collect();
+            // half the input rows permanently silent → the gate engages
+            let inmat: Vec<bool> = (0..cfg.n_in * batch)
+                .map(|k| (k / batch) % 2 == 0 && input_rng.bernoulli(0.4))
+                .collect();
+            packed.step_spikes_masked(&inmat, &active);
+            dense.step_spikes_masked(&inmat, &active);
+            assert_eq!(
+                packed.plasticity_rows_visited, dense.plasticity_rows_visited,
+                "gate decisions diverged at step {step}"
+            );
+            assert!(
+                packed.plasticity_rows_visited[0] < cfg.n_in,
+                "gate never engaged on L1"
+            );
+        }
+        assert_eq!(packed.w1, dense.w1);
+        assert_eq!(packed.w2, dense.w2);
+        assert_eq!(packed.trace_in.values, dense.trace_in);
+        assert_eq!(packed.trace_out.values, dense.trace_out);
     }
 
     #[test]

@@ -118,6 +118,33 @@ pub struct PlasticityConfig {
     /// what δ's "synaptic regularization" stabilizes; the clip is the
     /// hardware's saturation backstop.
     pub w_clip: f32,
+    /// Event-driven presynaptic gating (DESIGN.md §Hot-Path): when set,
+    /// [`apply_update_batch`] skips every presynaptic row whose trace is
+    /// below [`PlasticityConfig::trace_eps`] in all active sessions, so
+    /// plasticity cost tracks trace sparsity the way the packed matvec
+    /// already tracks firing rate — the software rendition of the
+    /// Plasticity Engine's spike-event gating.
+    ///
+    /// **Tolerance contract** (the reason this is opt-in, default
+    /// `false`): a skipped row omits its synapses' presyn-independent
+    /// terms `γ·Sᵢ + δ` for that tick. With the FP16-aware default
+    /// `trace_eps = 2⁻²⁴` (the smallest positive FP16 subnormal) a
+    /// sub-ε pre-trace is *exactly zero* in the FP16 domain — there the
+    /// gate drops only terms a rule with `γ = δ = 0` never produces, and
+    /// gated FP16 runs with such rules are bit-identical to ungated
+    /// ones. For general rules the per-tick weight deviation of a
+    /// skipped synapse is bounded by `η·(|γ|·Sᵢ + |δ| + ε·(|α|·Sᵢ + |β|))`.
+    /// Gated runs are compared bit-exactly against the **identically
+    /// gated** dense oracle
+    /// ([`crate::snn::reference::apply_update_batch_dense`]); the
+    /// gated-vs-ungated deviation is the documented ε-tolerance.
+    pub presyn_gate: bool,
+    /// Zero threshold of the presynaptic gate. Default `2⁻²⁴` — the
+    /// smallest positive FP16 subnormal, so f32 and FP16 deployments
+    /// gate consistently ("FP16-aware"). Traces are non-negative; a row
+    /// is skipped iff every active lane's pre-trace is `< trace_eps`.
+    /// Setting `0.0` makes the gate a no-op (nothing is below zero).
+    pub trace_eps: f32,
 }
 
 impl Default for PlasticityConfig {
@@ -125,6 +152,8 @@ impl Default for PlasticityConfig {
         PlasticityConfig {
             eta: 0.05,
             w_clip: 4.0,
+            presyn_gate: false,
+            trace_eps: 1.0 / 16_777_216.0, // 2^-24, FP16 min subnormal
         }
     }
 }
@@ -155,17 +184,24 @@ pub fn apply_update<S: Scalar>(
     for j in 0..params.pre {
         let sj = pre_trace[j];
         let row = j * params.post;
-        for i in 0..params.post {
-            let si = post_trace[i];
-            let k = (row + i) * COEFFS_PER_SYNAPSE;
+        // chunks_exact keeps the four-coefficient fetch a single
+        // bounds-checked slice per synapse (SIMD-readiness contract,
+        // DESIGN.md §Hot-Path).
+        let t_lo = row * COEFFS_PER_SYNAPSE;
+        let t_hi = (row + params.post) * COEFFS_PER_SYNAPSE;
+        let theta_row = params.theta[t_lo..t_hi].chunks_exact(COEFFS_PER_SYNAPSE);
+        for ((w, si), q) in weights[row..row + params.post]
+            .iter_mut()
+            .zip(post_trace)
+            .zip(theta_row)
+        {
             let coeffs = [
-                S::from_f32(params.theta[k]),
-                S::from_f32(params.theta[k + 1]),
-                S::from_f32(params.theta[k + 2]),
-                S::from_f32(params.theta[k + 3]),
+                S::from_f32(q[0]),
+                S::from_f32(q[1]),
+                S::from_f32(q[2]),
+                S::from_f32(q[3]),
             ];
-            let w = &mut weights[row + i];
-            *w = update_synapse(coeffs, eta, lo, hi, *w, sj, si);
+            *w = update_synapse(coeffs, eta, lo, hi, *w, sj, *si);
         }
     }
 }
@@ -187,6 +223,15 @@ pub fn apply_update<S: Scalar>(
 /// single-session [`apply_update`] uses — with identical operation
 /// order, so a batched session is bit-equivalent to a lone network fed
 /// the same history.
+///
+/// With [`PlasticityConfig::presyn_gate`] set, presynaptic rows whose
+/// trace is below [`PlasticityConfig::trace_eps`] in every active lane
+/// are **skipped entirely** (the event-driven path; see the field docs
+/// for the tolerance contract), so the sweep cost scales with the
+/// active-presynaptic set instead of `pre × post × batch`.
+///
+/// Returns the number of presynaptic rows visited (== `params.pre`
+/// when the gate is off).
 pub fn apply_update_batch<S: Scalar>(
     params: &RuleParams,
     cfg: &PlasticityConfig,
@@ -195,7 +240,7 @@ pub fn apply_update_batch<S: Scalar>(
     weights: &mut [S],
     pre_trace: &[S],
     post_trace: &[S],
-) {
+) -> usize {
     assert_eq!(weights.len(), params.pre * params.post * batch);
     assert_eq!(pre_trace.len(), params.pre * batch);
     assert_eq!(post_trace.len(), params.post * batch);
@@ -203,6 +248,7 @@ pub fn apply_update_batch<S: Scalar>(
     let eta = S::from_f32(cfg.eta);
     let lo = S::from_f32(-cfg.w_clip);
     let hi = S::from_f32(cfg.w_clip);
+    let eps = S::from_f32(cfg.trace_eps);
     // Full-batch ticks (the serving steady state) take a mask-free inner
     // loop: a branchless contiguous sweep over the session lanes that
     // the compiler can keep in SIMD registers.
@@ -212,25 +258,37 @@ pub fn apply_update_batch<S: Scalar>(
         aw == full
     });
 
+    let mut visited = 0usize;
     for j in 0..params.pre {
         let pre_row = &pre_trace[j * batch..(j + 1) * batch];
+        // Event-driven skip: a row whose pre-trace is sub-ε in every
+        // active lane contributes no representable presynaptic drive —
+        // one O(batch) scan replaces an O(post × batch) update sweep.
+        if cfg.presyn_gate && row_below_eps(pre_row, active_words, eps) {
+            continue;
+        }
+        visited += 1;
         let row = j * params.post;
-        for i in 0..params.post {
-            // One θ fetch serves every session of this synapse.
-            let k = (row + i) * COEFFS_PER_SYNAPSE;
+        // One θ fetch serves every session of a synapse; chunks_exact
+        // keeps it a single bounds-checked slice per synapse.
+        let t_lo = row * COEFFS_PER_SYNAPSE;
+        let t_hi = (row + params.post) * COEFFS_PER_SYNAPSE;
+        let theta_row = params.theta[t_lo..t_hi].chunks_exact(COEFFS_PER_SYNAPSE);
+        for (i, q) in theta_row.enumerate() {
             let coeffs = [
-                S::from_f32(params.theta[k]),
-                S::from_f32(params.theta[k + 1]),
-                S::from_f32(params.theta[k + 2]),
-                S::from_f32(params.theta[k + 3]),
+                S::from_f32(q[0]),
+                S::from_f32(q[1]),
+                S::from_f32(q[2]),
+                S::from_f32(q[3]),
             ];
             let post_row = &post_trace[i * batch..(i + 1) * batch];
             let wbase = (row + i) * batch;
             let wrow = &mut weights[wbase..wbase + batch];
             if all_active {
-                for b in 0..batch {
-                    wrow[b] =
-                        update_synapse(coeffs, eta, lo, hi, wrow[b], pre_row[b], post_row[b]);
+                // Contiguous lane zip: the auto-vectorization shape
+                // (slice iterators, no indexing) — DESIGN.md §Hot-Path.
+                for ((w, &pj), &pi) in wrow.iter_mut().zip(pre_row).zip(post_row) {
+                    *w = update_synapse(coeffs, eta, lo, hi, *w, pj, pi);
                 }
             } else {
                 // Partially-active tick: walk only the set mask bits, so
@@ -248,6 +306,27 @@ pub fn apply_update_batch<S: Scalar>(
             }
         }
     }
+    visited
+}
+
+/// Gate predicate of the event-driven plasticity sweep: true iff every
+/// active lane's pre-trace is below `eps`. Traces are non-negative, so
+/// "below ε" and "no representable drive at ε-granularity" coincide;
+/// with the FP16-aware default ε = 2⁻²⁴ an FP16 sub-ε trace is exactly
+/// zero. Shared (by construction, not by call) with the dense oracle's
+/// gate in [`crate::snn::reference::apply_update_batch_dense`], which
+/// must make identical decisions for the equivalence suite to pin gated
+/// runs bit-exactly.
+#[inline]
+pub fn row_below_eps<S: Scalar>(pre_row: &[S], active_words: &[u64], eps: S) -> bool {
+    for (wi, &aw) in active_words.iter().enumerate() {
+        for l in crate::snn::spike::set_bits(aw) {
+            if pre_row[wi * LANES + l] >= eps {
+                return false;
+            }
+        }
+    }
+    true
 }
 
 /// One synapse's update — the exact datapath of the Plasticity Engine
@@ -303,6 +382,7 @@ mod tests {
         let cfg = PlasticityConfig {
             eta: 1.0,
             w_clip: 10.0,
+            ..PlasticityConfig::default()
         };
         let mut w = vec![0.0f32; 6];
         let pre = vec![1.0f32, 0.0];
@@ -318,6 +398,7 @@ mod tests {
         let cfg = PlasticityConfig {
             eta: 0.5,
             w_clip: 10.0,
+            ..PlasticityConfig::default()
         };
         let mut w = vec![0.0f32; 6];
         let pre = vec![0.0f32; 2];
@@ -334,6 +415,7 @@ mod tests {
         let cfg = PlasticityConfig {
             eta: 1.0,
             w_clip: 2.0,
+            ..PlasticityConfig::default()
         };
         let mut w = vec![0.0f32];
         apply_update(&p, &cfg, &mut w, &[1.0], &[0.0]);
@@ -347,6 +429,7 @@ mod tests {
         let cfg = PlasticityConfig {
             eta: 1.0,
             w_clip: 1e9,
+            ..PlasticityConfig::default()
         };
         let mut w = vec![0.0f32; 20];
         let pre: Vec<f32> = (0..4).map(|j| 0.25 * j as f32).collect();
@@ -425,12 +508,106 @@ mod tests {
     }
 
     #[test]
+    fn gate_skips_silent_presynaptic_rows() {
+        // ISSUE 3 acceptance: at 5 % (spatial) presynaptic activity the
+        // gated sweep must touch < 20 % of the pre rows, and visited
+        // rows must be updated identically to the ungated sweep.
+        let pre = 100;
+        let post = 16;
+        let batch = 3;
+        let mut rng = Pcg64::new(70, 0);
+        let p = RuleParams::random(pre, post, 0.3, &mut rng);
+        let cfg_gated = PlasticityConfig {
+            presyn_gate: true,
+            ..PlasticityConfig::default()
+        };
+        let cfg_plain = PlasticityConfig::default();
+
+        // 5 % of rows carry trace mass; the rest are exactly silent.
+        let mut pre_trace = vec![0.0f32; pre * batch];
+        let live: Vec<usize> = (0..pre).filter(|j| j % 20 == 0).collect();
+        for &j in &live {
+            for b in 0..batch {
+                pre_trace[j * batch + b] = 0.5 + 0.1 * b as f32;
+            }
+        }
+        let mut post_trace = vec![0.0f32; post * batch];
+        rng.fill_normal_f32(&mut post_trace, 0.5);
+        for t in post_trace.iter_mut() {
+            *t = t.abs();
+        }
+
+        let mask = crate::snn::spike::full_mask(batch);
+        let mut w_gated = vec![0.0f32; pre * post * batch];
+        let visited = apply_update_batch(
+            &p, &cfg_gated, batch, &mask, &mut w_gated, &pre_trace, &post_trace,
+        );
+        assert_eq!(visited, live.len(), "gate must visit exactly the live rows");
+        assert!(
+            (visited as f64) < 0.2 * pre as f64,
+            "visited {visited} of {pre} rows at 5 % activity"
+        );
+
+        let mut w_plain = vec![0.0f32; pre * post * batch];
+        let visited_plain = apply_update_batch(
+            &p, &cfg_plain, batch, &mask, &mut w_plain, &pre_trace, &post_trace,
+        );
+        assert_eq!(visited_plain, pre, "ungated sweep visits every row");
+        // visited rows: bit-identical to the ungated path
+        for &j in &live {
+            for i in 0..post {
+                for b in 0..batch {
+                    let k = (j * post + i) * batch + b;
+                    assert_eq!(w_gated[k], w_plain[k], "live row {j} diverged");
+                }
+            }
+        }
+        // skipped rows: untouched (the documented ε-contract)
+        for j in 0..pre {
+            if live.contains(&j) {
+                continue;
+            }
+            for i in 0..post {
+                for b in 0..batch {
+                    assert_eq!(w_gated[(j * post + i) * batch + b], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gate_respects_active_mask_and_eps() {
+        let p = RuleParams::random(2, 2, 0.4, &mut Pcg64::new(71, 0));
+        let cfg = PlasticityConfig {
+            presyn_gate: true,
+            ..PlasticityConfig::default()
+        };
+        let batch = 2;
+        // row 0 hot only in session 1; row 1 sub-ε everywhere
+        let pre_trace = vec![0.0f32, 1.0, 1e-9, 1e-9];
+        let post_trace = vec![0.3f32, 0.3, 0.3, 0.3];
+        let mut w = vec![0.0f32; 2 * 2 * batch];
+
+        // session 1 masked off → row 0's only hot lane is inactive
+        let only0 = crate::snn::spike::mask_words(&[true, false]);
+        let visited = apply_update_batch(&p, &cfg, batch, &only0, &mut w, &pre_trace, &post_trace);
+        assert_eq!(visited, 0, "no row has a hot active lane");
+        assert!(w.iter().all(|&x| x == 0.0));
+
+        // both sessions active → row 0 hot (via session 1), row 1 still sub-ε
+        let both = crate::snn::spike::full_mask(batch);
+        let visited = apply_update_batch(&p, &cfg, batch, &both, &mut w, &pre_trace, &post_trace);
+        assert_eq!(visited, 1);
+    }
+
+    #[test]
     fn zero_traces_only_delta_acts() {
         let mut rng = Pcg64::new(4, 0);
         let p = RuleParams::random(2, 2, 0.5, &mut rng);
         let cfg = PlasticityConfig {
             eta: 1.0,
             w_clip: 100.0,
+            ..PlasticityConfig::default()
         };
         let mut w = vec![0.0f32; 4];
         apply_update(&p, &cfg, &mut w, &[0.0, 0.0], &[0.0, 0.0]);

@@ -105,6 +105,13 @@ pub fn matvec_spikes_batch<S: Scalar>(
 
 /// Dense boolean-masked batched plasticity step — the pre-packing
 /// formulation of `apply_update_batch`, kept as the reference oracle.
+///
+/// Implements the **same presynaptic gate** as the packed path when
+/// [`PlasticityConfig::presyn_gate`] is set (skip a row iff every active
+/// lane's pre-trace is below `trace_eps`), so gated packed runs are
+/// pinned bit-exactly against a gated oracle — the ε-tolerance contract
+/// lives between gated and *un*gated runs, never between the two
+/// implementations. Returns the number of presynaptic rows visited.
 #[allow(clippy::too_many_arguments)]
 pub fn apply_update_batch_dense<S: Scalar>(
     params: &RuleParams,
@@ -114,7 +121,7 @@ pub fn apply_update_batch_dense<S: Scalar>(
     weights: &mut [S],
     pre_trace: &[S],
     post_trace: &[S],
-) {
+) -> usize {
     assert_eq!(weights.len(), params.pre * params.post * batch);
     assert_eq!(pre_trace.len(), params.pre * batch);
     assert_eq!(post_trace.len(), params.post * batch);
@@ -122,8 +129,19 @@ pub fn apply_update_batch_dense<S: Scalar>(
     let eta = S::from_f32(cfg.eta);
     let lo = S::from_f32(-cfg.w_clip);
     let hi = S::from_f32(cfg.w_clip);
+    let eps = S::from_f32(cfg.trace_eps);
+    let mut visited = 0usize;
     for j in 0..params.pre {
         let pre_row = &pre_trace[j * batch..(j + 1) * batch];
+        if cfg.presyn_gate
+            && pre_row
+                .iter()
+                .zip(active)
+                .all(|(&t, &a)| !a || t < eps)
+        {
+            continue;
+        }
+        visited += 1;
         let row = j * params.post;
         for i in 0..params.post {
             let k = (row + i) * COEFFS_PER_SYNAPSE;
@@ -144,6 +162,7 @@ pub fn apply_update_batch_dense<S: Scalar>(
             }
         }
     }
+    visited
 }
 
 /// Plain single-session reference stepper: dense matvecs + the scalar
@@ -305,6 +324,10 @@ pub struct DenseBatchedNetwork<S: Scalar> {
     pub trace_out: Vec<S>,
     /// Soft vs hard membrane reset (mirror of `LifLayer::soft_reset`).
     pub soft_reset: bool,
+    /// Presynaptic rows visited by the most recent step's plasticity
+    /// sweep, per synaptic layer `[L1, L2]` (mirror of
+    /// `SnnNetwork::plasticity_rows_visited`).
+    pub plasticity_rows_visited: [usize; 2],
     cur_hidden: Vec<S>,
     cur_out: Vec<S>,
 }
@@ -326,6 +349,7 @@ impl<S: Scalar> DenseBatchedNetwork<S> {
             trace_hidden: vec![S::ZERO; n_h * batch],
             trace_out: vec![S::ZERO; n_o * batch],
             soft_reset: true,
+            plasticity_rows_visited: [0, 0],
             cur_hidden: vec![S::ZERO; n_h * batch],
             cur_out: vec![S::ZERO; n_o * batch],
             cfg,
@@ -449,7 +473,7 @@ impl<S: Scalar> DenseBatchedNetwork<S> {
         Self::dense_trace_masked(&mut self.trace_out, &self.spikes_out, lambda, b, active);
 
         if let Mode::Plastic(rule) = &self.mode {
-            apply_update_batch_dense(
+            let v1 = apply_update_batch_dense(
                 &rule.l1,
                 &self.cfg.plasticity,
                 b,
@@ -458,7 +482,7 @@ impl<S: Scalar> DenseBatchedNetwork<S> {
                 &self.trace_in,
                 &self.trace_hidden,
             );
-            apply_update_batch_dense(
+            let v2 = apply_update_batch_dense(
                 &rule.l2,
                 &self.cfg.plasticity,
                 b,
@@ -467,6 +491,7 @@ impl<S: Scalar> DenseBatchedNetwork<S> {
                 &self.trace_hidden,
                 &self.trace_out,
             );
+            self.plasticity_rows_visited = [v1, v2];
         }
     }
 }

@@ -1,0 +1,490 @@
+//! Multi-core sharded batched stepping (DESIGN.md §Hot-Path).
+//!
+//! One [`SnnNetwork`] steps its whole session batch on one thread. At
+//! serving scale (hundreds of sessions) that single thread is the
+//! throughput ceiling, so this module partitions the structure-of-arrays
+//! batch into **64-lane word shards** — groups of whole packed spike
+//! words — and drives each shard's step (forward, LIF/trace, plasticity)
+//! on its own [`crate::util::threadpool::ThreadPool`] worker via the
+//! pool's `scope`/`spawn_on` primitive. FireFly v2 calls the hardware
+//! analogue *spatial parallelism*: independent lanes replicated across
+//! compute cores.
+//!
+//! # Shard mapping
+//!
+//! A sharded network is built with a fixed **stripe count** `T`
+//! (`--step-threads` on the serving CLI; default = CPU cores). Packed
+//! word `w` (sessions `64w .. 64w+63`) belongs to shard `w % T`, and is
+//! that shard's local word `w / T`. Session `s` therefore lives at
+//!
+//! ```text
+//! shard  k = (s / 64) % T
+//! lane   l = (s / 64) / T * 64 + s % 64
+//! ```
+//!
+//! The modular assignment makes growth **migration-free**: growing the
+//! batch only appends lanes to the globally-last word and appends new
+//! words, and both only ever extend a shard's *own* lane tail
+//! ([`SnnNetwork::grow_batch`] zero-fills it) — no session ever moves
+//! between shards, so `ensure_sessions` can grow mid-serve without
+//! copying live state across shard boundaries or leaving stale lane
+//! data in remapped tails (regression-tested in
+//! `tests/sharded_equivalence.rs`, 63 → 65 → 128 under load).
+//!
+//! # Equivalence
+//!
+//! Each shard is an ordinary [`SnnNetwork`] over its own sessions, and
+//! sessions are mutually independent, so a sharded step is bit-identical
+//! to the unsharded SoA step for every session — `T = 1` *is* the
+//! unsharded path (same single `SnnNetwork`, stepped inline, no pool
+//! dispatch, no allocation). Pinned by `tests/sharded_equivalence.rs`
+//! at B ∈ {1, 64, 65, 256}.
+//!
+//! # Cost note
+//!
+//! Shards share nothing mutable; the frozen rule θ is **replicated per
+//! shard** (each shard's `Mode::Plastic` carries its own copy) — the
+//! same weights-per-core replication the FPGA line uses, trading memory
+//! for zero cross-core traffic. Each shard still amortizes its θ stream
+//! over up to 64 sessions per word. Sharing θ behind an `Arc` is a
+//! ROADMAP follow-up.
+
+use super::network::{Mode, SnnConfig, SnnNetwork};
+use super::numeric::Scalar;
+use super::spike::{words_for, LANES};
+use crate::util::threadpool::ThreadPool;
+
+/// Where a session lives in the shard grid: `(shard index, local lane)`.
+#[inline]
+pub fn locate(session: usize, stripes: usize) -> (usize, usize) {
+    let word = session / LANES;
+    (word % stripes, word / stripes * LANES + session % LANES)
+}
+
+/// Number of session lanes shard `k` holds when `total` sessions are
+/// provisioned across `stripes` shards: all of its words are full except
+/// the globally-last word, which carries the batch remainder.
+pub fn local_batch(k: usize, stripes: usize, total: usize) -> usize {
+    let words = words_for(total);
+    if k >= words.min(stripes) {
+        return 0;
+    }
+    let n_words = (words - 1 - k) / stripes + 1;
+    let last_lanes = total - (words - 1) * LANES;
+    let has_last = (words - 1) % stripes == k;
+    (n_words - 1) * LANES + if has_last { last_lanes } else { LANES }
+}
+
+/// A batch of controller sessions partitioned into 64-lane word shards,
+/// each shard an independent [`SnnNetwork`] stepped on its own pool
+/// worker. See the module docs for the mapping and equivalence story.
+pub struct ShardedNetwork<S: Scalar> {
+    /// Fixed stripe count `T` (worker threads / maximum shard count).
+    stripes: usize,
+    /// Total provisioned sessions across all shards.
+    batch: usize,
+    /// Live shards, index `k` holding the words `≡ k (mod stripes)`.
+    shards: Vec<SnnNetwork<S>>,
+    /// Step workers; `None` until a second shard materializes (so
+    /// single-shard deployments never spawn threads) and always `None`
+    /// when `stripes == 1` (inline stepping).
+    pool: Option<ThreadPool>,
+    /// Per-shard staged active mask (local lane indexing).
+    shard_active: Vec<Vec<bool>>,
+    /// Per-shard "any session staged this tick" summary.
+    shard_any: Vec<bool>,
+}
+
+impl<S: Scalar> ShardedNetwork<S> {
+    /// One-session sharded network. `stripes` fixes the shard mapping
+    /// for the lifetime of the instance (it determines where every
+    /// future session lives); shards — and the worker pool — materialize
+    /// as the batch grows (a ≤64-session deployment never spawns a
+    /// thread, whatever `stripes` says).
+    pub fn new(cfg: SnnConfig, mode: Mode, stripes: usize) -> Self {
+        let stripes = stripes.max(1);
+        let first = SnnNetwork::new_batched(cfg, mode, 1);
+        ShardedNetwork {
+            stripes,
+            batch: 1,
+            shards: vec![first],
+            pool: None,
+            shard_active: vec![vec![false; 1]],
+            shard_any: vec![false],
+        }
+    }
+
+    /// Network geometry (shared by every shard).
+    pub fn cfg(&self) -> &SnnConfig {
+        &self.shards[0].cfg
+    }
+
+    /// Total provisioned sessions.
+    #[inline]
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The fixed stripe count the shard mapping was built with.
+    #[inline]
+    pub fn stripes(&self) -> usize {
+        self.stripes
+    }
+
+    /// Number of shards currently materialized
+    /// (`min(stripes, ceil(batch/64))`).
+    #[inline]
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Borrow one shard's network (diagnostics / tests).
+    pub fn shard(&self, k: usize) -> &SnnNetwork<S> {
+        &self.shards[k]
+    }
+
+    /// Grow the provisioned session count to `new_batch` **without
+    /// resetting live sessions** — each shard's lanes are extended in
+    /// place ([`SnnNetwork::grow_batch`] preserves state and zero-fills
+    /// the new tail), and newly needed shards start from the zero state.
+    pub fn grow_batch(&mut self, new_batch: usize) {
+        assert!(new_batch >= self.batch, "batch can only grow");
+        if new_batch == self.batch {
+            return;
+        }
+        let n_shards = words_for(new_batch).min(self.stripes);
+        for k in 0..n_shards {
+            let lb = local_batch(k, self.stripes, new_batch);
+            if k < self.shards.len() {
+                self.shards[k].grow_batch(lb);
+            } else {
+                let cfg = self.shards[0].cfg.clone();
+                let mode = self.shards[0].mode.clone();
+                let mut fresh = SnnNetwork::new_batched(cfg, mode, lb);
+                if fresh.weights_shared() {
+                    // Fixed mode stores one session-invariant weight
+                    // copy per shard: a newly materialized shard
+                    // inherits it from shard 0.
+                    fresh.w1.copy_from_slice(&self.shards[0].w1);
+                    fresh.w2.copy_from_slice(&self.shards[0].w2);
+                }
+                self.shards.push(fresh);
+            }
+            if k < self.shard_active.len() {
+                self.shard_active[k].resize(lb, false);
+            } else {
+                self.shard_active.push(vec![false; lb]);
+                self.shard_any.push(false);
+            }
+        }
+        // The worker pool exists only once there is parallel work to
+        // give it (a second shard) — default 16-session servers stay
+        // thread-free regardless of `--step-threads`.
+        if self.stripes > 1 && self.shards.len() > 1 && self.pool.is_none() {
+            self.pool = Some(ThreadPool::new(self.stripes));
+        }
+        self.batch = new_batch;
+    }
+
+    /// Install fixed weights (baseline mode) from flat `[W1 ‖ W2]` into
+    /// every shard (each shard keeps its own session-invariant copy —
+    /// the per-core replication noted in the module docs).
+    pub fn load_weights(&mut self, flat: &[f32]) {
+        for shard in self.shards.iter_mut() {
+            shard.load_weights(flat);
+        }
+    }
+
+    /// Reset every session of every shard (weights too, in plastic
+    /// mode).
+    pub fn reset(&mut self) {
+        for shard in self.shards.iter_mut() {
+            shard.reset();
+        }
+    }
+
+    /// Reset one session, leaving all others untouched.
+    pub fn reset_session(&mut self, session: usize) {
+        assert!(session < self.batch, "session out of range");
+        let (k, l) = locate(session, self.stripes);
+        self.shards[k].reset_session(l);
+    }
+
+    /// Start staging a new tick: clear every shard's packed input words
+    /// and active flags. Call before [`ShardedNetwork::stage_session`].
+    pub fn begin_tick(&mut self) {
+        for shard in self.shards.iter_mut() {
+            shard.input_mut().clear();
+        }
+        for act in self.shard_active.iter_mut() {
+            for a in act.iter_mut() {
+                *a = false;
+            }
+        }
+        for any in self.shard_any.iter_mut() {
+            *any = false;
+        }
+    }
+
+    /// Stage one session's input spikes for the pending tick, scattering
+    /// the set bits straight into its shard's packed staging words.
+    /// Panics on a duplicate session within one tick (a malformed batch
+    /// must fail loudly, not silently double-step).
+    pub fn stage_session(&mut self, session: usize, spikes: &[bool]) {
+        assert!(
+            session < self.batch,
+            "session {session} out of range (batch {})",
+            self.batch
+        );
+        assert_eq!(spikes.len(), self.cfg().n_in, "input arity mismatch");
+        let (k, l) = locate(session, self.stripes);
+        assert!(
+            !self.shard_active[k][l],
+            "duplicate session {session} in one batch step"
+        );
+        self.shard_active[k][l] = true;
+        self.shard_any[k] = true;
+        let staging = self.shards[k].input_mut();
+        for (j, &sp) in spikes.iter().enumerate() {
+            if sp {
+                staging.set(j, l, true);
+            }
+        }
+    }
+
+    /// Advance every staged session one timestep: each shard with any
+    /// active session runs its full fused step (event-driven forward,
+    /// LIF + trace, plasticity) on its pinned pool worker; idle shards
+    /// cost nothing. With one active shard (or `stripes == 1`) the step
+    /// runs inline on the caller — no dispatch, no allocation — which
+    /// keeps the single-shard path exactly the pre-sharding hot path.
+    pub fn step_staged(&mut self) {
+        let active_shards = self.shard_any.iter().filter(|&&a| a).count();
+        let shards = &mut self.shards;
+        let shard_any = &self.shard_any;
+        let shard_active = &self.shard_active;
+        match &self.pool {
+            Some(pool) if active_shards > 1 => {
+                pool.scope(|sc| {
+                    for (k, shard) in shards.iter_mut().enumerate() {
+                        if !shard_any[k] {
+                            continue;
+                        }
+                        let act: &[bool] = &shard_active[k];
+                        // Pin shard k to worker k: consecutive ticks of a
+                        // shard land on the same core's warm cache, and
+                        // the per-shard &mut borrows are disjoint.
+                        sc.spawn_on(k, move || {
+                            shard.step_staged(act);
+                        });
+                    }
+                });
+            }
+            _ => {
+                for (k, shard) in shards.iter_mut().enumerate() {
+                    if shard_any[k] {
+                        shard.step_staged(&shard_active[k]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Output spike bit of `(neuron, session)` from the most recent step.
+    #[inline]
+    pub fn output_spike(&self, neuron: usize, session: usize) -> bool {
+        let (k, l) = locate(session, self.stripes);
+        self.shards[k].output.spikes.get(neuron, l)
+    }
+
+    /// Fill `out` with one session's output-population traces as f32
+    /// (cleared first; allocation-free once warm).
+    pub fn output_traces_session_into(&self, session: usize, out: &mut Vec<f32>) {
+        assert!(session < self.batch, "session out of range");
+        let (k, l) = locate(session, self.stripes);
+        let shard = &self.shards[k];
+        let b = shard.batch;
+        out.clear();
+        for o in 0..shard.cfg.n_out {
+            out.push(shard.trace_out.values[o * b + l].to_f32());
+        }
+    }
+
+    /// One session's output traces as a fresh `Vec` (cold path).
+    pub fn output_traces_session(&self, session: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.output_traces_session_into(session, &mut out);
+        out
+    }
+
+    /// Presynaptic rows visited by the most recent plastic step, summed
+    /// over shards that stepped, per synaptic layer `[L1, L2]`
+    /// (event-driven plasticity diagnostics).
+    pub fn plasticity_rows_visited(&self) -> [usize; 2] {
+        let mut total = [0usize; 2];
+        for (k, shard) in self.shards.iter().enumerate() {
+            if self.shard_any[k] {
+                total[0] += shard.plasticity_rows_visited[0];
+                total[1] += shard.plasticity_rows_visited[1];
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::NetworkRule;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn locate_and_local_batch_tile_the_session_space() {
+        for &stripes in &[1usize, 2, 3, 4, 8] {
+            for &total in &[1usize, 63, 64, 65, 128, 200, 256, 300] {
+                // every session maps into a shard's local range…
+                let mut seen = vec![0usize; stripes];
+                for s in 0..total {
+                    let (k, l) = locate(s, stripes);
+                    assert!(k < stripes);
+                    assert!(
+                        l < local_batch(k, stripes, total),
+                        "T={stripes} B={total} s={s} → ({k},{l}) ≥ {}",
+                        local_batch(k, stripes, total)
+                    );
+                    seen[k] += 1;
+                }
+                // …exactly filling the local batches (a bijection)
+                for (k, &count) in seen.iter().enumerate() {
+                    let lb = local_batch(k, stripes, total);
+                    assert_eq!(count, lb, "T={stripes} B={total} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn locate_is_stable_under_growth() {
+        // The shard/lane of a live session must never change as the
+        // batch grows — the migration-free property growth relies on.
+        for &stripes in &[2usize, 4] {
+            for s in 0..130 {
+                let fixed = locate(s, stripes);
+                for _total in [s + 1, s + 2, 200, 500] {
+                    assert_eq!(locate(s, stripes), fixed);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_batch_is_monotone_under_growth() {
+        for &stripes in &[1usize, 2, 3, 8] {
+            for k in 0..stripes {
+                let mut prev = 0usize;
+                for total in 1..400 {
+                    let lb = local_batch(k, stripes, total);
+                    assert!(lb >= prev, "shard {k} shrank at B={total} (T={stripes})");
+                    prev = lb;
+                }
+            }
+        }
+    }
+
+    fn tiny_rule(cfg: &SnnConfig, seed: u64) -> NetworkRule {
+        let mut rng = Pcg64::new(seed, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.25);
+        NetworkRule::from_flat(cfg, &flat)
+    }
+
+    #[test]
+    fn single_stripe_matches_plain_network() {
+        let cfg = SnnConfig::tiny();
+        let rule = tiny_rule(&cfg, 50);
+        let batch = 5;
+        let mut sharded = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone()), 1);
+        sharded.grow_batch(batch);
+        let mut plain = SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule), batch);
+
+        let mut rng = Pcg64::new(51, 0);
+        let active = vec![true; batch];
+        for _ in 0..20 {
+            let inmat: Vec<bool> = (0..cfg.n_in * batch).map(|_| rng.bernoulli(0.4)).collect();
+            sharded.begin_tick();
+            for s in 0..batch {
+                let spikes: Vec<bool> = (0..cfg.n_in).map(|j| inmat[j * batch + s]).collect();
+                sharded.stage_session(s, &spikes);
+            }
+            sharded.step_staged();
+            plain.step_spikes_masked(&inmat, &active);
+            for s in 0..batch {
+                for o in 0..cfg.n_out {
+                    assert_eq!(sharded.output_spike(o, s), plain.output.spikes.get(o, s));
+                }
+            }
+        }
+        for s in 0..batch {
+            assert_eq!(
+                sharded.output_traces_session(s),
+                plain.output_traces_f32_session(s)
+            );
+        }
+    }
+
+    #[test]
+    fn multi_stripe_sessions_match_single_sessions() {
+        let cfg = SnnConfig::tiny();
+        let rule = tiny_rule(&cfg, 52);
+        let batch = 67; // two words → two shards at T=4
+        let mut sharded = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone()), 4);
+        sharded.grow_batch(batch);
+        assert_eq!(sharded.shard_count(), 2);
+        // probe sessions in both shards
+        let probes = [0usize, 63, 64, 66];
+        let mut singles: Vec<SnnNetwork<f32>> = probes
+            .iter()
+            .map(|_| SnnNetwork::new(cfg.clone(), Mode::Plastic(rule.clone())))
+            .collect();
+
+        let mut rng = Pcg64::new(53, 0);
+        for _ in 0..15 {
+            let inmat: Vec<Vec<bool>> = (0..batch)
+                .map(|s| (0..cfg.n_in).map(|_| rng.bernoulli(0.3 + 0.005 * s as f64)).collect())
+                .collect();
+            sharded.begin_tick();
+            for (s, row) in inmat.iter().enumerate() {
+                sharded.stage_session(s, row);
+            }
+            sharded.step_staged();
+            for (p, &s) in probes.iter().enumerate() {
+                singles[p].step_spikes(&inmat[s]);
+                for o in 0..cfg.n_out {
+                    assert_eq!(
+                        sharded.output_spike(o, s),
+                        singles[p].output.spikes.get(o, 0),
+                        "probe session {s} neuron {o}"
+                    );
+                }
+            }
+        }
+        for (p, &s) in probes.iter().enumerate() {
+            assert_eq!(
+                sharded.output_traces_session(s),
+                singles[p].output_traces_f32(),
+                "probe session {s} traces"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate session")]
+    fn duplicate_stage_panics() {
+        let cfg = SnnConfig::tiny();
+        let mut net = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Fixed, 2);
+        let spikes = vec![true; cfg.n_in];
+        net.begin_tick();
+        net.stage_session(0, &spikes);
+        net.stage_session(0, &spikes);
+    }
+}

@@ -29,6 +29,24 @@ pub const fn words_for(batch: usize) -> usize {
     batch.div_ceil(LANES)
 }
 
+/// Iterator over the set-bit positions of one packed word, ascending —
+/// the `trailing_zeros` lane walk shared by the event-driven kernels
+/// (cost ∝ set bits, not lanes). The two hottest kernels
+/// (`matvec_spikes_packed`, the partial-mask arm of
+/// `apply_update_batch`) keep the walk hand-inlined; every other
+/// consumer goes through this single copy of the idiom.
+#[inline]
+pub fn set_bits(mut word: u64) -> impl Iterator<Item = usize> {
+    std::iter::from_fn(move || {
+        if word == 0 {
+            return None;
+        }
+        let bit = word.trailing_zeros() as usize;
+        word &= word - 1;
+        Some(bit)
+    })
+}
+
 /// Pack a boolean active-session mask into words (`words.len()` must be
 /// `words_for(active.len())`). Padding lanes are left zero.
 pub fn pack_mask_into(active: &[bool], words: &mut [u64]) {
@@ -276,6 +294,15 @@ mod tests {
         for row in 0..n {
             assert_eq!(s.row(row)[1] >> (b - LANES), 0, "padding lanes must be zero");
         }
+    }
+
+    #[test]
+    fn set_bits_walks_ascending() {
+        assert_eq!(set_bits(0).count(), 0);
+        assert_eq!(set_bits(0b1011).collect::<Vec<_>>(), vec![0, 1, 3]);
+        assert_eq!(set_bits(1u64 << 63).collect::<Vec<_>>(), vec![63]);
+        assert_eq!(set_bits(u64::MAX).count(), 64);
+        assert_eq!(set_bits(u64::MAX).last(), Some(63));
     }
 
     #[test]

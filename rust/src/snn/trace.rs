@@ -10,9 +10,30 @@
 //! shift-and-add style) and exactly representable in FP16, so the
 //! software golden model, the XLA artifact and the FPGA simulator agree
 //! bit-for-bit on trace values for any spike history.
+//!
+//! # Lazy decay (DESIGN.md §Hot-Path)
+//!
+//! Eager trace maintenance multiplies **every** `(neuron, session)` lane
+//! by λ **every** active tick, even when the population is almost
+//! silent. A [`TraceVector`] constructed with [`TraceVector::batched_lazy`]
+//! instead stores, per lane, the value at its last materialization plus
+//! the per-session active-tick clock at that moment; decay is applied
+//! **on read** as the pending `λ^Δ` product. Because each materialization
+//! replays exactly the `Δ` per-step `mul(λ)` roundings the eager path
+//! would have performed (see [`decay_steps`]), lazy and eager histories
+//! are **bit-identical** in both f32 and FP16 — pinned by the property
+//! suite in `tests/lazy_traces.rs`. A per-`(neuron, word)` **hot mask**
+//! tracks which lanes hold a nonzero stored value: it is the lazy
+//! machinery's own bookkeeping — [`TraceVector::materialize_hot`] walks
+//! only hot lanes and retires drained ones, so fully silent rows cost
+//! nothing per tick. (The plasticity gate itself re-scans the
+//! materialized *values* rather than consuming this mask, so its
+//! skip decisions stay trivially identical to the eager dense oracle's;
+//! using `hot & active == 0` as a row prefilter for the gate is a
+//! ROADMAP follow-up.)
 
 use super::numeric::Scalar;
-use super::spike::{grow_lanes, SpikeWords, LANES};
+use super::spike::{self, grow_lanes, SpikeWords, LANES};
 
 /// Per-neuron exponentially decaying spike traces.
 ///
@@ -26,6 +47,9 @@ use super::spike::{grow_lanes, SpikeWords, LANES};
 #[derive(Clone, Debug)]
 pub struct TraceVector<S: Scalar> {
     /// Trace values, `neurons × batch`, laid out `[neuron][session]`.
+    /// In lazy mode a lane's stored value is *stale*: it reflects the
+    /// lane's last materialization, with `clock − last` decay steps
+    /// still pending.
     pub values: Vec<S>,
     /// Decay factor λ applied every step before spike accumulation.
     pub lambda: S,
@@ -33,6 +57,18 @@ pub struct TraceVector<S: Scalar> {
     pub batch: usize,
     /// Number of neurons traced (`values.len() == neurons * batch`).
     pub neurons: usize,
+    /// Lazy-decay mode flag (set by [`TraceVector::batched_lazy`]).
+    lazy: bool,
+    /// Lazy only: per-session count of active ticks elapsed
+    /// ([`TraceVector::tick`]). Length `batch`.
+    clock: Vec<u64>,
+    /// Lazy only: per-lane clock value at the lane's last
+    /// materialization. Same `[neuron][session]` indexing as `values`.
+    last: Vec<u64>,
+    /// Lazy only: per-`(neuron, word)` bitmask of lanes whose stored
+    /// value is nonzero — the active-presynaptic set. Layout mirrors
+    /// [`SpikeWords`]: `neurons × words_for(batch)`.
+    hot: Vec<u64>,
 }
 
 impl<S: Scalar> TraceVector<S> {
@@ -50,7 +86,35 @@ impl<S: Scalar> TraceVector<S> {
             lambda: S::from_f32(lambda),
             batch,
             neurons: n,
+            lazy: false,
+            clock: Vec::new(),
+            last: Vec::new(),
+            hot: Vec::new(),
         }
+    }
+
+    /// Lazy-decay trace vector (see the module docs): decay is deferred
+    /// per lane and applied on spike arrival or on explicit
+    /// materialization, bit-identically to the eager path. The eager
+    /// update entry points ([`TraceVector::update`] /
+    /// [`TraceVector::update_packed`]) must not be called on a lazy
+    /// vector; drive it with [`TraceVector::tick`] +
+    /// [`TraceVector::record_spikes_packed`] +
+    /// [`TraceVector::materialize_hot`] instead.
+    pub fn batched_lazy(n: usize, batch: usize, lambda: f32) -> Self {
+        let mut t = Self::batched(n, batch, lambda);
+        t.lazy = true;
+        t.clock = vec![0; batch];
+        t.last = vec![0; n * batch];
+        t.hot = vec![0; n * spike::words_for(batch)];
+        t
+    }
+
+    /// Whether this vector defers decay (constructed via
+    /// [`TraceVector::batched_lazy`]).
+    #[inline]
+    pub fn is_lazy(&self) -> bool {
+        self.lazy
     }
 
     /// Total state size (`neurons × batch`).
@@ -68,6 +132,11 @@ impl<S: Scalar> TraceVector<S> {
         for v in self.values.iter_mut() {
             *v = S::ZERO;
         }
+        if self.lazy {
+            self.clock.iter_mut().for_each(|c| *c = 0);
+            self.last.iter_mut().for_each(|l| *l = 0);
+            self.hot.iter_mut().for_each(|h| *h = 0);
+        }
     }
 
     /// Zero one session's trace column, leaving other sessions untouched.
@@ -75,6 +144,15 @@ impl<S: Scalar> TraceVector<S> {
         assert!(session < self.batch, "session out of range");
         for i in 0..self.neurons {
             self.values[i * self.batch + session] = S::ZERO;
+        }
+        if self.lazy {
+            let now = self.clock[session];
+            let wpr = spike::words_for(self.batch);
+            let bit = !(1u64 << (session % LANES));
+            for i in 0..self.neurons {
+                self.last[i * self.batch + session] = now;
+                self.hot[i * wpr + session / LANES] &= bit;
+            }
         }
     }
 
@@ -86,12 +164,27 @@ impl<S: Scalar> TraceVector<S> {
             return;
         }
         self.values = grow_lanes(&self.values, self.batch, new_batch, S::ZERO);
+        if self.lazy {
+            self.last = grow_lanes(&self.last, self.batch, new_batch, 0u64);
+            self.clock.resize(new_batch, 0);
+            // Re-lay the hot masks to the wider word rows (lane bit
+            // positions are stable under growth, like SpikeWords).
+            let old_wpr = spike::words_for(self.batch);
+            let new_wpr = spike::words_for(new_batch);
+            let mut hot = vec![0u64; self.neurons * new_wpr];
+            for n in 0..self.neurons {
+                hot[n * new_wpr..n * new_wpr + old_wpr]
+                    .copy_from_slice(&self.hot[n * old_wpr..(n + 1) * old_wpr]);
+            }
+            self.hot = hot;
+        }
         self.batch = new_batch;
     }
 
     /// Decay all traces and add the new spike indicators (dense boolean
     /// form, every session; the reference/compat path).
     pub fn update(&mut self, spikes: &[bool]) {
+        assert!(!self.lazy, "eager update on a lazy TraceVector");
         assert_eq!(spikes.len(), self.values.len(), "spike/trace mismatch");
         for (v, &s) in self.values.iter_mut().zip(spikes) {
             let decayed = v.mul(self.lambda);
@@ -105,6 +198,7 @@ impl<S: Scalar> TraceVector<S> {
     /// arithmetic matches [`TraceVector::update`] exactly, so batched and
     /// single-session trace histories are bit-identical.
     pub fn update_packed(&mut self, spikes: &SpikeWords, active_words: &[u64]) {
+        assert!(!self.lazy, "eager update on a lazy TraceVector");
         assert_eq!(spikes.neurons(), self.neurons, "spike/trace mismatch");
         assert_eq!(spikes.batch(), self.batch, "spike/trace batch mismatch");
         assert_eq!(
@@ -137,6 +231,141 @@ impl<S: Scalar> TraceVector<S> {
     pub fn saturation(&self) -> f32 {
         1.0 / (1.0 - self.lambda.to_f32())
     }
+
+    // --- lazy-decay entry points (DESIGN.md §Hot-Path) ---------------
+
+    /// Lazy mode: advance the active-tick clock of every session whose
+    /// bit is set in `active_words`. One call per network step, **before**
+    /// [`TraceVector::record_spikes_packed`]; cost is O(active sessions),
+    /// no trace lane is touched.
+    pub fn tick(&mut self, active_words: &[u64]) {
+        assert!(self.lazy, "tick on an eager TraceVector");
+        assert_eq!(active_words.len(), spike::words_for(self.batch), "mask/batch mismatch");
+        for (wi, &aw) in active_words.iter().enumerate() {
+            for l in spike::set_bits(aw) {
+                self.clock[wi * LANES + l] += 1;
+            }
+        }
+    }
+
+    /// Lazy mode: fold this tick's spikes into the traces. For every set
+    /// bit of `spikes & active_words` the lane is materialized (pending
+    /// `λ^Δ` decay applied with per-step rounding) and incremented by
+    /// one — exactly the `trace_step_scalar` history the eager path
+    /// would have produced. Silent lanes are left stale. Cost is
+    /// O(spikes), not O(neurons × batch). Call after
+    /// [`TraceVector::tick`].
+    pub fn record_spikes_packed(&mut self, spikes: &SpikeWords, active_words: &[u64]) {
+        assert!(self.lazy, "record_spikes_packed on an eager TraceVector");
+        assert_eq!(spikes.neurons(), self.neurons, "spike/trace mismatch");
+        assert_eq!(spikes.batch(), self.batch, "spike/trace batch mismatch");
+        assert_eq!(active_words.len(), spikes.words_per_row(), "mask/batch mismatch");
+        let b = self.batch;
+        let wpr = spikes.words_per_row();
+        for i in 0..self.neurons {
+            let row = spikes.row(i);
+            for (wi, &aw) in active_words.iter().enumerate() {
+                let m = row[wi] & aw;
+                if m == 0 {
+                    continue;
+                }
+                for l in spike::set_bits(m) {
+                    let lane = wi * LANES + l;
+                    let idx = i * b + lane;
+                    let pending = self.clock[lane] - self.last[idx];
+                    let decayed = decay_steps(self.values[idx], self.lambda, pending);
+                    self.values[idx] = decayed.add(S::ONE);
+                    self.last[idx] = self.clock[lane];
+                }
+                self.hot[i * wpr + wi] |= m;
+            }
+        }
+    }
+
+    /// Lazy mode: bring every hot lane up to date (apply its pending
+    /// decay), clearing the hot bit of lanes that drained to exactly
+    /// zero. After this call, `values` of hot rows equal the eager
+    /// path's bit-for-bit; cold rows are all-zero by invariant. Cost is
+    /// O(hot lanes). Returns the number of rows with at least one hot
+    /// lane remaining.
+    pub fn materialize_hot(&mut self) -> usize {
+        assert!(self.lazy, "materialize_hot on an eager TraceVector");
+        let b = self.batch;
+        let wpr = spike::words_for(b);
+        let mut hot_rows = 0usize;
+        for i in 0..self.neurons {
+            let mut row_hot = 0u64;
+            for wi in 0..wpr {
+                let hw = self.hot[i * wpr + wi];
+                if hw == 0 {
+                    continue;
+                }
+                let mut keep = hw;
+                for l in spike::set_bits(hw) {
+                    let lane = wi * LANES + l;
+                    let idx = i * b + lane;
+                    let pending = self.clock[lane] - self.last[idx];
+                    if pending > 0 {
+                        self.values[idx] = decay_steps(self.values[idx], self.lambda, pending);
+                        self.last[idx] = self.clock[lane];
+                    }
+                    if self.values[idx] == S::ZERO {
+                        keep &= !(1u64 << l);
+                    }
+                }
+                self.hot[i * wpr + wi] = keep;
+                row_hot |= keep;
+            }
+            hot_rows += (row_hot != 0) as usize;
+        }
+        hot_rows
+    }
+
+    /// Lazy mode: current (fully decayed) value of one lane, without
+    /// mutating stored state — the "on-read `decay^Δ` materialization"
+    /// view.
+    pub fn value(&self, neuron: usize, session: usize) -> S {
+        assert!(neuron < self.neurons && session < self.batch, "trace index out of range");
+        let idx = neuron * self.batch + session;
+        if !self.lazy {
+            return self.values[idx];
+        }
+        let pending = self.clock[session] - self.last[idx];
+        decay_steps(self.values[idx], self.lambda, pending)
+    }
+
+    /// Lazy mode: hot-lane mask of one `(neuron, word)` cell — the
+    /// active-presynaptic set the lazy machinery maintains (which lanes
+    /// [`TraceVector::materialize_hot`] must visit). Bits may be
+    /// conservatively stale-hot until the next materialization clears
+    /// drained lanes. Exposed for diagnostics and the invariant tests;
+    /// the plasticity gate scans materialized values instead (see the
+    /// module docs).
+    #[inline]
+    pub fn hot_word(&self, neuron: usize, word: usize) -> u64 {
+        debug_assert!(self.lazy, "hot_word on an eager TraceVector");
+        self.hot[neuron * spike::words_for(self.batch) + word]
+    }
+}
+
+/// Apply `steps` sequential λ-multiplies with the scalar domain's
+/// per-step rounding — the exact operation sequence the eager path
+/// performs, so lazy materialization is bit-identical to eager decay in
+/// both f32 and FP16. Exits early at the decay fixed point (zero, or a
+/// value λ can no longer shrink under rounding — e.g. λ = 1, or sticky
+/// subnormals under RNE), which bounds the loop at the format's decay
+/// horizon (≈ 26 steps for FP16 at λ = 0.5, ≈ 151 for f32) regardless
+/// of how long a lane sat silent.
+#[inline]
+pub fn decay_steps<S: Scalar>(mut v: S, lambda: S, steps: u64) -> S {
+    for _ in 0..steps {
+        let nv = v.mul(lambda);
+        if nv == v {
+            return nv; // fixed point: every further step is identity
+        }
+        v = nv;
+    }
+    v
 }
 
 /// Scalar trace update used by the FPGA simulator's Trace Update Unit
@@ -256,6 +485,143 @@ mod tests {
         for i in 0..n {
             assert_eq!(t.values[i * batch], 0.0);
         }
+    }
+
+    #[test]
+    fn lazy_matches_eager_bit_for_bit() {
+        // Deterministic pin (the full property sweep over random
+        // schedules, masks and FP16 lives in tests/lazy_traces.rs).
+        let n = 4;
+        let batch = 3;
+        let mut eager = TraceVector::<f32>::batched(n, batch, 0.5);
+        let mut lazy = TraceVector::<f32>::batched_lazy(n, batch, 0.5);
+        assert!(lazy.is_lazy() && !eager.is_lazy());
+        let mut packed = SpikeWords::new(n, batch);
+        let mut x = 0x9E3779B9u64;
+        for step in 0..200 {
+            let active: Vec<bool> = (0..batch).map(|b| (step + b) % 4 != 0).collect();
+            let mask = mask_words(&active);
+            let mut dense = vec![false; n * batch];
+            for d in dense.iter_mut() {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                *d = x >> 61 == 0; // ~12.5 % firing with long silent runs
+            }
+            packed.fill_from_bools(&dense);
+            eager.update_packed(&packed, &mask);
+            lazy.tick(&mask);
+            lazy.record_spikes_packed(&packed, &mask);
+            // on-read view agrees without materializing stored state
+            for i in 0..n {
+                for b in 0..batch {
+                    assert_eq!(
+                        lazy.value(i, b).to_bits(),
+                        eager.values[i * batch + b].to_bits(),
+                        "step {step} lane ({i},{b})"
+                    );
+                }
+            }
+        }
+        // materialization writes the same bits into storage
+        lazy.materialize_hot();
+        for (l, e) in lazy.values.iter().zip(&eager.values) {
+            assert_eq!(l.to_bits(), e.to_bits());
+        }
+    }
+
+    #[test]
+    fn lazy_long_silent_gap_underflows_to_zero_and_goes_cold() {
+        let mut lazy = TraceVector::<F16>::batched_lazy(1, 1, 0.5);
+        let mask = mask_words(&[true]);
+        let mut packed = SpikeWords::new(1, 1);
+        packed.fill_from_bools(&[true]);
+        lazy.tick(&mask);
+        lazy.record_spikes_packed(&packed, &mask);
+        assert_eq!(lazy.materialize_hot(), 1, "spiked lane is hot");
+        assert_eq!(lazy.value(0, 0).to_f32(), 1.0);
+        // a long silent run: FP16 at λ=0.5 underflows to exactly zero
+        // within ~26 steps; the hot bit must retire with it
+        packed.clear();
+        for _ in 0..100 {
+            lazy.tick(&mask);
+            lazy.record_spikes_packed(&packed, &mask);
+        }
+        assert_eq!(lazy.value(0, 0).to_f32(), 0.0);
+        assert_eq!(lazy.materialize_hot(), 0, "drained lane must go cold");
+        assert_eq!(lazy.hot_word(0, 0), 0);
+        // and an eager twin agrees it is exactly zero
+        let mut eager = TraceVector::<F16>::batched(1, 1, 0.5);
+        eager.update(&[true]);
+        for _ in 0..100 {
+            eager.update(&[false]);
+        }
+        assert_eq!(eager.values[0].to_f32(), 0.0);
+    }
+
+    #[test]
+    fn decay_steps_fixed_point_terminates() {
+        // λ = 1 is an immediate fixed point: a huge pending gap must not
+        // loop for its full length.
+        let v = decay_steps(1.5f32, 1.0, u64::MAX);
+        assert_eq!(v, 1.5);
+        // λ = 0 collapses in one step
+        assert_eq!(decay_steps(1.5f32, 0.0, u64::MAX), 0.0);
+        // zero stays zero instantly
+        assert_eq!(decay_steps(0.0f32, 0.5, u64::MAX), 0.0);
+        // a normal value at λ=0.5 reaches exactly zero (f32 horizon)
+        assert_eq!(decay_steps(2.0f32, 0.5, 200), 0.0);
+    }
+
+    #[test]
+    fn lazy_inactive_sessions_do_not_decay() {
+        let mut lazy = TraceVector::<f32>::batched_lazy(1, 2, 0.5);
+        let mut packed = SpikeWords::new(1, 2);
+        packed.fill_from_bools(&[true, true]);
+        let both = mask_words(&[true, true]);
+        lazy.tick(&both);
+        lazy.record_spikes_packed(&packed, &both);
+        // session 1 inactive for 3 ticks: its trace must stay at 1.0
+        let only0 = mask_words(&[true, false]);
+        packed.clear();
+        for _ in 0..3 {
+            lazy.tick(&only0);
+            lazy.record_spikes_packed(&packed, &only0);
+        }
+        assert_eq!(lazy.value(0, 0), 0.125);
+        assert_eq!(lazy.value(0, 1), 1.0, "inactive lane decayed");
+    }
+
+    #[test]
+    fn lazy_reset_session_and_grow_batch() {
+        let mut lazy = TraceVector::<f32>::batched_lazy(2, 2, 0.5);
+        let mut packed = SpikeWords::new(2, 2);
+        packed.fill_from_bools(&[true, true, false, true]);
+        let both = mask_words(&[true, true]);
+        lazy.tick(&both);
+        lazy.record_spikes_packed(&packed, &both);
+        lazy.reset_session(0);
+        assert_eq!(lazy.value(0, 0), 0.0);
+        assert_eq!(lazy.value(1, 0), 0.0);
+        assert_eq!(lazy.value(0, 1), 1.0, "other session survives reset");
+        lazy.grow_batch(70);
+        assert_eq!(lazy.batch, 70);
+        assert_eq!(lazy.value(0, 1), 1.0, "grow must preserve lanes");
+        assert_eq!(lazy.value(0, 69), 0.0);
+        // lane keeps decaying correctly after growth
+        let mut active = vec![false; 70];
+        active[1] = true;
+        let mask = mask_words(&active);
+        let mut grown = SpikeWords::new(2, 70);
+        grown.clear();
+        lazy.tick(&mask);
+        lazy.record_spikes_packed(&grown, &mask);
+        assert_eq!(lazy.value(0, 1), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "eager update on a lazy TraceVector")]
+    fn eager_update_on_lazy_panics() {
+        let mut lazy = TraceVector::<f32>::batched_lazy(1, 1, 0.5);
+        lazy.update(&[true]);
     }
 
     #[test]

@@ -3,44 +3,53 @@
 //! positional arguments, typed accessors with defaults, and auto-generated
 //! `--help` text.
 
-// Documentation debt (ROADMAP.md): item-level rustdoc pending for this
-// module; remove this allow when it is burned down.
-#![allow(missing_docs)]
-
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// Declarative specification of one option.
 #[derive(Clone)]
 pub struct OptSpec {
+    /// Option name as it appears on the command line (without `--`).
     pub name: &'static str,
+    /// One-line help text shown by `--help`.
     pub help: &'static str,
+    /// Default value seeded before parsing; `None` means absent unless
+    /// the user passes the option.
     pub default: Option<&'static str>,
+    /// True for presence-only flags (`--quiet`), false for
+    /// value-taking options (`--env ant-dir`).
     pub is_flag: bool,
 }
 
 /// Parsed arguments for one (sub)command.
 #[derive(Default, Debug, Clone)]
 pub struct Args {
+    /// The subcommand that was invoked, if any.
     pub command: Option<String>,
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Non-option arguments in the order they appeared.
     pub positional: Vec<String>,
 }
 
 impl Args {
+    /// Raw value of `--key`, if present (or seeded by a default).
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key`, falling back to `default`.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Whether the presence-only flag `--key` was passed.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// `--key` parsed as `usize`; panics with a usage message on a
+    /// malformed value, `default` when absent.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key)
             .map(|v| {
@@ -50,6 +59,8 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `--key` parsed as `u64`; panics on a malformed value, `default`
+    /// when absent.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key)
             .map(|v| {
@@ -59,6 +70,8 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `--key` parsed as `f64`; panics on a malformed value, `default`
+    /// when absent.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key)
             .map(|v| {
@@ -68,6 +81,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `--key` parsed as `f32` (through the f64 path).
     pub fn get_f32(&self, key: &str, default: f32) -> f32 {
         self.get_f64(key, default as f64) as f32
     }
@@ -75,13 +89,17 @@ impl Args {
 
 /// Parser with subcommand registry.
 pub struct Parser {
+    /// Program name used in usage/help output.
     pub program: &'static str,
+    /// One-line program description for the help header.
     pub about: &'static str,
     commands: Vec<(&'static str, &'static str, Vec<OptSpec>)>,
     global_opts: Vec<OptSpec>,
 }
 
 impl Parser {
+    /// Empty parser for `program` (add commands/options via the
+    /// builder methods).
     pub fn new(program: &'static str, about: &'static str) -> Self {
         Parser {
             program,
@@ -91,6 +109,7 @@ impl Parser {
         }
     }
 
+    /// Register a value-taking option available to every subcommand.
     pub fn global_opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
         self.global_opts.push(OptSpec {
             name,
@@ -101,11 +120,13 @@ impl Parser {
         self
     }
 
+    /// Register a subcommand with its option specs.
     pub fn command(mut self, name: &'static str, help: &'static str, opts: Vec<OptSpec>) -> Self {
         self.commands.push((name, help, opts));
         self
     }
 
+    /// Top-level `--help` text: usage, command list, global options.
     pub fn help_text(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "{} — {}\n", self.program, self.about);
@@ -123,6 +144,7 @@ impl Parser {
         s
     }
 
+    /// Per-command `--help` text (command options + global options).
     pub fn command_help(&self, cmd: &str) -> String {
         let mut s = String::new();
         if let Some((name, help, opts)) = self.commands.iter().find(|(n, _, _)| *n == cmd) {
@@ -220,6 +242,7 @@ pub fn opt(name: &'static str, help: &'static str, default: &'static str) -> Opt
     }
 }
 
+/// A required (no-default) value-taking option spec.
 pub fn opt_req(name: &'static str, help: &'static str) -> OptSpec {
     OptSpec {
         name,
@@ -229,6 +252,7 @@ pub fn opt_req(name: &'static str, help: &'static str) -> OptSpec {
     }
 }
 
+/// A presence-only flag spec (no value, absent by default).
 pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
     OptSpec {
         name,

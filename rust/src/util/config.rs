@@ -4,44 +4,50 @@
 //! accessors. Every experiment binary can take `--config path.toml`;
 //! CLI options override file values.
 
-// Documentation debt (ROADMAP.md): item-level rustdoc pending for this
-// module; remove this allow when it is burned down.
-#![allow(missing_docs)]
-
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
 
+/// One parsed configuration value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Quoted string value.
     Str(String),
+    /// Numeric value (all numbers parse as `f64`).
     Num(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Flat `[a, b, c]` array of values.
     List(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The numeric payload, if this is a [`Value::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// Numeric payload truncated to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The boolean payload, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The element slice, if this is a [`Value::List`].
     pub fn as_list(&self) -> Option<&[Value]> {
         match self {
             Value::List(v) => Some(v),
@@ -77,9 +83,12 @@ pub struct Config {
     entries: BTreeMap<String, Value>,
 }
 
+/// Parse failure with source location.
 #[derive(Debug)]
 pub struct ConfigError {
+    /// 1-based line number of the offending input line.
     pub line: usize,
+    /// Human-readable description of what failed to parse.
     pub message: String,
 }
 
@@ -92,6 +101,7 @@ impl fmt::Display for ConfigError {
 impl std::error::Error for ConfigError {}
 
 impl Config {
+    /// Parse config text (TOML subset; see the module docs).
     pub fn parse(text: &str) -> Result<Config, ConfigError> {
         let mut cfg = Config::default();
         let mut section = String::new();
@@ -126,15 +136,18 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Read and parse a config file from disk.
     pub fn load(path: &Path) -> Result<Config, Box<dyn std::error::Error>> {
         let text = std::fs::read_to_string(path)?;
         Ok(Config::parse(&text)?)
     }
 
+    /// Raw value at `section.key` (or bare `key` outside sections).
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.entries.get(key)
     }
 
+    /// String at `key`, falling back to `default`.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key)
             .and_then(|v| v.as_str())
@@ -142,18 +155,22 @@ impl Config {
             .to_string()
     }
 
+    /// Number at `key`, falling back to `default`.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
     }
 
+    /// Number at `key` truncated to `usize`, falling back to `default`.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
     }
 
+    /// Boolean at `key`, falling back to `default`.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
     }
 
+    /// List at `key` with every numeric element extracted.
     pub fn f64_list(&self, key: &str) -> Option<Vec<f64>> {
         self.get(key)
             .and_then(|v| v.as_list())
@@ -167,10 +184,12 @@ impl Config {
         }
     }
 
+    /// Insert or overwrite one entry programmatically.
     pub fn set(&mut self, key: &str, value: Value) {
         self.entries.insert(key.to_string(), value);
     }
 
+    /// All `section.key` entry names in sorted order.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(|s| s.as_str())
     }

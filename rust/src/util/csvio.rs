@@ -2,10 +2,6 @@
 //! tables/series through this module so EXPERIMENTS.md can point at stable
 //! file formats under `results/`.
 
-// Documentation debt (ROADMAP.md): item-level rustdoc pending for this
-// module; remove this allow when it is burned down.
-#![allow(missing_docs)]
-
 use std::fmt::Display;
 use std::fs::{self, File};
 use std::io::{BufWriter, Write};
@@ -14,6 +10,7 @@ use std::path::{Path, PathBuf};
 /// A CSV writer with a fixed header checked against every row.
 pub struct CsvWriter {
     out: BufWriter<File>,
+    /// Destination path the writer was created with.
     pub path: PathBuf,
     columns: usize,
     rows: usize,
@@ -64,10 +61,12 @@ impl CsvWriter {
         self.row(&refs)
     }
 
+    /// Number of data rows written so far (header excluded).
     pub fn rows_written(&self) -> usize {
         self.rows
     }
 
+    /// Flush buffered output and return the file path.
     pub fn finish(mut self) -> std::io::Result<PathBuf> {
         self.out.flush()?;
         Ok(self.path)

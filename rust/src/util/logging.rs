@@ -2,21 +2,23 @@
 //! Level is controlled by `FIREFLY_LOG` (error|warn|info|debug|trace) or
 //! programmatically via [`set_level`]; default is `info`.
 
-// Documentation debt (ROADMAP.md): item-level rustdoc pending for this
-// module; remove this allow when it is burned down.
-#![allow(missing_docs)]
-
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
+/// Log severity, ordered from most to least severe.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable failures.
     Error = 0,
+    /// Suspicious-but-survivable conditions.
     Warn = 1,
+    /// Operational progress (the default level).
     Info = 2,
+    /// Diagnostic detail for debugging sessions.
     Debug = 3,
+    /// Very chatty per-step tracing.
     Trace = 4,
 }
 
@@ -59,14 +61,18 @@ fn current_level() -> u8 {
     from_env
 }
 
+/// Override the log level programmatically (wins over `FIREFLY_LOG`).
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Whether a message at `level` would currently be emitted.
 pub fn enabled(level: Level) -> bool {
     (level as u8) <= current_level()
 }
 
+/// Emit one log line (used through the `log_*!` macros, which supply
+/// the module path).
 pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
@@ -76,22 +82,27 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     eprintln!("[{t:10.4}s {} {module}] {msg}", level.tag());
 }
 
+/// Log at [`Level::Error`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_error {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*)) };
 }
+/// Log at [`Level::Warn`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*)) };
 }
+/// Log at [`Level::Info`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*)) };
 }
+/// Log at [`Level::Debug`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*)) };
 }
+/// Log at [`Level::Trace`] with `format!` syntax.
 #[macro_export]
 macro_rules! log_trace {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*)) };

@@ -11,40 +11,46 @@
 //! });
 //! ```
 
-// Documentation debt (ROADMAP.md): item-level rustdoc pending for this
-// module; remove this allow when it is burned down.
-#![allow(missing_docs)]
-
 use crate::util::rng::Pcg64;
 
 /// Per-case generator handed to properties.
 pub struct Gen {
+    /// The case's deterministic random stream (usable directly for
+    /// draws the helpers below don't cover).
     pub rng: Pcg64,
+    /// The case's seed — embed it in assertion messages so failures
+    /// replay via [`check_seeded`].
     pub seed: u64,
 }
 
 impl Gen {
+    /// A uniform random `u64`.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
 
+    /// A uniform `usize` in `[lo, hi)`.
     pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
         assert!(lo < hi);
         lo + self.rng.below((hi - lo) as u64) as usize
     }
 
+    /// A uniform `f64` in `[lo, hi)`.
     pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.uniform_range(lo, hi)
     }
 
+    /// A uniform `f32` in `[lo, hi)`.
     pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
         self.rng.uniform_range(lo as f64, hi as f64) as f32
     }
 
+    /// A fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.bernoulli(0.5)
     }
 
+    /// A centered Gaussian draw with standard deviation `sigma`.
     pub fn normal_f32(&mut self, sigma: f32) -> f32 {
         (self.rng.normal() as f32) * sigma
     }

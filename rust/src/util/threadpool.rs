@@ -1,14 +1,26 @@
 //! Fixed-size thread pool over std channels (the offline registry has no
 //! tokio/rayon). Used by the ES leader to fan population rollouts out to
-//! worker threads and by the Fig-3 benchmark to run seeds in parallel.
+//! worker threads, by the Fig-3 benchmark to run seeds in parallel, and
+//! by the sharded batched stepper ([`crate::snn::ShardedNetwork`]) to
+//! drive per-shard network steps across cores.
 //!
 //! Design: a scoped map — `map_indexed` takes a slice of inputs and a
 //! worker function and returns outputs in input order. Workers pull
 //! indices from a shared atomic counter (work stealing by chunk of 1),
 //! which balances heterogeneous rollout lengths well.
+//!
+//! For repeated dispatch the persistent [`ThreadPool`] additionally
+//! offers [`ThreadPool::scope`]: spawn **borrowing** jobs (non-`'static`
+//! closures over caller state, e.g. per-shard disjoint `&mut` slices)
+//! onto the pool's workers and join them all before the scope returns —
+//! the pool-backed analogue of `std::thread::scope`, without re-spawning
+//! OS threads every tick.
 
+use std::any::Any;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of worker threads to use by default: physical parallelism,
 /// capped to leave a core for the coordinator.
@@ -16,6 +28,15 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get().saturating_sub(1).max(1))
         .unwrap_or(4)
+}
+
+/// Number of hardware threads available (no coordinator-core reserve) —
+/// the default shard count of the batched serving stepper
+/// (`--step-threads`).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
 }
 
 /// Apply `f` to every element of `inputs` using `workers` threads,
@@ -122,6 +143,45 @@ impl ThreadPool {
         self.senders[i].send(Box::new(job)).expect("worker hung up");
     }
 
+    /// Run borrowing jobs on the pool and **join them all before
+    /// returning** — the pool-backed analogue of `std::thread::scope`.
+    ///
+    /// `f` receives a [`Scope`] handle; jobs spawned through it may
+    /// capture non-`'static` references (the caller's locals, disjoint
+    /// `&mut` sub-slices, …) because the scope guarantees every job has
+    /// finished before `scope` returns — on the normal path *and* when
+    /// `f` unwinds. A job that panics is caught on the worker (the
+    /// worker thread survives for future dispatch) and its original
+    /// panic payload is re-raised from `scope` after all jobs have
+    /// drained (first panic wins, like `std::thread::scope`).
+    ///
+    /// The sharded batched stepper uses this with [`Scope::spawn_on`] to
+    /// pin each 64-lane session shard to its own worker
+    /// (`join_on`-style: dispatch pinned, then join the whole wave).
+    pub fn scope<'pool, 'env, R>(&'pool self, f: impl FnOnce(&Scope<'pool, 'env>) -> R) -> R {
+        let scope = Scope {
+            pool: self,
+            state: Arc::new(ScopeState::default()),
+            _env: PhantomData,
+        };
+        // Join even if `f` unwinds: jobs borrow caller state, so they
+        // must complete before the caller's frame is torn down.
+        struct JoinOnDrop<'a>(&'a ScopeState);
+        impl Drop for JoinOnDrop<'_> {
+            fn drop(&mut self) {
+                self.0.join();
+            }
+        }
+        let guard = JoinOnDrop(&scope.state);
+        let result = f(&scope);
+        drop(guard); // blocks until every spawned job finished
+        let payload = scope.state.panic_payload.lock().unwrap().take();
+        if let Some(payload) = payload {
+            resume_unwind(payload);
+        }
+        result
+    }
+
     /// Dispatch a batch of jobs and wait for all to complete, collecting
     /// results in submission order.
     pub fn map<O: Send + 'static>(
@@ -165,6 +225,78 @@ impl Drop for ThreadPool {
         self.senders.clear(); // close channels → workers exit
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+    }
+}
+
+/// Completion tracking shared between a [`Scope`] and its in-flight jobs.
+#[derive(Default)]
+struct ScopeState {
+    pending: Mutex<usize>,
+    done: Condvar,
+    /// First panicking job's payload, re-raised by the scope owner.
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl ScopeState {
+    fn join(&self) {
+        let mut pending = self.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.done.wait(pending).unwrap();
+        }
+    }
+}
+
+/// Spawn handle passed to the closure of [`ThreadPool::scope`]. Jobs
+/// spawned here may borrow from the enclosing frame (`'env`); the scope
+/// joins them all before returning.
+pub struct Scope<'pool, 'env> {
+    pool: &'pool ThreadPool,
+    state: Arc<ScopeState>,
+    /// Invariant over `'env`, like `std::thread::Scope`.
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'pool, 'env> Scope<'pool, 'env> {
+    /// Spawn a borrowing job on the pool (round-robin worker choice).
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'env) {
+        self.dispatch(None, Box::new(job));
+    }
+
+    /// Spawn a borrowing job pinned to a specific worker
+    /// (`worker % workers()`), preserving [`ThreadPool::execute_on`]'s
+    /// exclusivity guarantee: jobs on one worker run sequentially. The
+    /// sharded stepper pins shard *k* to worker *k* so consecutive ticks
+    /// of a shard reuse the same core's warm cache.
+    pub fn spawn_on(&self, worker: usize, job: impl FnOnce() + Send + 'env) {
+        self.dispatch(Some(worker), Box::new(job));
+    }
+
+    fn dispatch(&self, worker: Option<usize>, job: Box<dyn FnOnce() + Send + 'env>) {
+        *self.state.pending.lock().unwrap() += 1;
+        let state = Arc::clone(&self.state);
+        // SAFETY: the scope joins (blocks on `pending == 0`) before it
+        // returns — on the success path and, via `JoinOnDrop`, when the
+        // scope closure unwinds — so every borrow captured by `job`
+        // outlives the job's execution. Erasing the lifetime is the same
+        // trick `std::thread::scope` / crossbeam use underneath.
+        let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+        let run = move || {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+                let mut slot = state.panic_payload.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            let mut pending = state.pending.lock().unwrap();
+            *pending -= 1;
+            if *pending == 0 {
+                state.done.notify_all();
+            }
+        };
+        match worker {
+            Some(w) => self.pool.execute_on(w, run),
+            None => self.pool.execute(run),
         }
     }
 }
@@ -235,6 +367,97 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn scope_runs_borrowing_jobs_to_completion() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 256];
+        let (left, right) = data.split_at_mut(128);
+        pool.scope(|sc| {
+            // disjoint &mut borrows of a caller-owned buffer — the shape
+            // the sharded stepper uses
+            sc.spawn(|| {
+                for (i, v) in left.iter_mut().enumerate() {
+                    *v = i as u64;
+                }
+            });
+            sc.spawn(|| {
+                for (i, v) in right.iter_mut().enumerate() {
+                    *v = 1000 + i as u64;
+                }
+            });
+        });
+        // join happened before scope returned: all writes visible
+        assert_eq!(data[0], 0);
+        assert_eq!(data[127], 127);
+        assert_eq!(data[128], 1000);
+        assert_eq!(data[255], 1127);
+    }
+
+    #[test]
+    fn scope_spawn_on_pins_like_execute_on() {
+        let pool = ThreadPool::new(3);
+        let names = Mutex::new(Vec::new());
+        pool.scope(|sc| {
+            for _ in 0..6 {
+                let names = &names;
+                sc.spawn_on(2, move || {
+                    names
+                        .lock()
+                        .unwrap()
+                        .push(std::thread::current().name().unwrap_or("?").to_string());
+                });
+            }
+        });
+        let names = names.into_inner().unwrap();
+        assert_eq!(names.len(), 6);
+        assert!(names.iter().all(|n| n == &names[0]), "pinned jobs moved: {names:?}");
+    }
+
+    #[test]
+    fn scope_is_reusable_and_returns_value() {
+        let pool = ThreadPool::new(2);
+        for round in 0..5u64 {
+            let total = std::sync::atomic::AtomicU64::new(0);
+            let got = pool.scope(|sc| {
+                for k in 0..8u64 {
+                    let total = &total;
+                    sc.spawn(move || {
+                        total.fetch_add(round * 100 + k, Ordering::SeqCst);
+                    });
+                }
+                "done"
+            });
+            assert_eq!(got, "done");
+            assert_eq!(total.load(Ordering::SeqCst), round * 800 + 28);
+        }
+    }
+
+    #[test]
+    fn scope_propagates_job_panic_but_keeps_workers_alive() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|sc| {
+                sc.spawn(|| panic!("job boom"));
+            });
+        }));
+        let payload = caught.expect_err("scope must surface the job panic");
+        // the original payload is resumed, not a generic wrapper
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+            .unwrap_or("<non-string>");
+        assert!(msg.contains("job boom"), "lost panic payload: {msg}");
+        // the worker that caught the panic still serves jobs
+        let out = pool.map(vec![
+            Box::new(|| 1usize) as Box<dyn FnOnce() -> usize + Send>,
+            Box::new(|| 2usize),
+            Box::new(|| 3usize),
+            Box::new(|| 4usize),
+        ]);
+        assert_eq!(out, vec![1, 2, 3, 4]);
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Property suite for event-driven plasticity (ISSUE 3):
+//!
+//! 1. **Lazy decay is bit-exact.** A lazily decayed [`TraceVector`]
+//!    (per-lane last-touched clock + on-read `λ^Δ` materialization) must
+//!    reproduce the eager per-step decay **bit-for-bit** over random
+//!    spike schedules and active masks, in f32 and FP16 — including
+//!    long silent gaps that underflow the trace to exactly zero and
+//!    retire the lane from the hot set.
+//! 2. **The presynaptic gate is oracle-exact.** A gated packed network
+//!    must match the identically gated dense oracle bit-for-bit; the
+//!    ε-tolerance contract lives between gated and *un*gated runs. With
+//!    γ = δ = 0 rules in FP16 (where sub-ε means exactly zero) the gate
+//!    is lossless: gated ≡ ungated bit-for-bit.
+//! 3. **The gate actually skips.** At 5 % spatial input activity a
+//!    gated network touches < 20 % of presynaptic rows (ISSUE 3
+//!    acceptance).
+
+use firefly_p::snn::reference::DenseBatchedNetwork;
+use firefly_p::snn::spike::mask_words;
+use firefly_p::snn::{
+    Mode, NetworkRule, Scalar, SnnConfig, SnnNetwork, SpikeWords, TraceVector,
+};
+use firefly_p::util::fp16::F16;
+use firefly_p::util::proptest::{check, Gen};
+use firefly_p::util::rng::Pcg64;
+
+fn lazy_vs_eager_case<S: Scalar>(g: &mut Gen) {
+    let n = g.usize_range(1, 8);
+    let batch = [1usize, 2, 3, 63, 64, 65, 67][g.usize_range(0, 7)];
+    // λ = 0.5 (the hardware shift) most of the time; occasionally other
+    // decays to exercise the generic materialization loop.
+    let lambda = [0.5f32, 0.5, 0.5, 0.25, 0.75, 0.0, 1.0][g.usize_range(0, 7)];
+    let mut eager = TraceVector::<S>::batched(n, batch, lambda);
+    let mut lazy = TraceVector::<S>::batched_lazy(n, batch, lambda);
+    let mut packed = SpikeWords::new(n, batch);
+    let mut dense = vec![false; n * batch];
+
+    let ticks = g.usize_range(3, 8);
+    for _ in 0..ticks {
+        // occasionally a long silent stretch — deep enough to underflow
+        // FP16 (λ=0.5 horizon ≈ 26) and often f32 (≈ 151)
+        let silent = if g.rng.bernoulli(0.3) {
+            g.usize_range(20, 200)
+        } else {
+            0
+        };
+        for _ in 0..silent {
+            let active: Vec<bool> = (0..batch).map(|_| g.rng.bernoulli(0.9)).collect();
+            let mask = mask_words(&active);
+            for d in dense.iter_mut() {
+                *d = false;
+            }
+            packed.fill_from_bools(&dense);
+            eager.update_packed(&packed, &mask);
+            lazy.tick(&mask);
+            lazy.record_spikes_packed(&packed, &mask);
+        }
+        // an active burst
+        let rate = g.f64_range(0.05, 0.8);
+        let active: Vec<bool> = (0..batch).map(|_| g.rng.bernoulli(0.8)).collect();
+        let mask = mask_words(&active);
+        for d in dense.iter_mut() {
+            *d = g.rng.bernoulli(rate);
+        }
+        packed.fill_from_bools(&dense);
+        eager.update_packed(&packed, &mask);
+        lazy.tick(&mask);
+        lazy.record_spikes_packed(&packed, &mask);
+
+        // on-read view must agree bitwise on every lane
+        for i in 0..n {
+            for b in 0..batch {
+                let l = lazy.value(i, b).to_f32();
+                let e = eager.values[i * batch + b].to_f32();
+                assert_eq!(
+                    l.to_bits(),
+                    e.to_bits(),
+                    "seed {:#x}: lane ({i},{b}) lazy {l} vs eager {e}",
+                    g.seed
+                );
+            }
+        }
+    }
+
+    // materialization writes the same bits into storage, and drained
+    // lanes leave the hot set
+    lazy.materialize_hot();
+    for (l, e) in lazy.values.iter().zip(&eager.values) {
+        assert_eq!(l.to_f32().to_bits(), e.to_f32().to_bits(), "seed {:#x}", g.seed);
+    }
+    for i in 0..n {
+        for wi in 0..firefly_p::snn::spike::words_for(batch) {
+            let mut m = lazy.hot_word(i, wi);
+            while m != 0 {
+                let b = wi * 64 + m.trailing_zeros() as usize;
+                m &= m - 1;
+                assert!(
+                    lazy.values[i * batch + b].to_f32() != 0.0,
+                    "seed {:#x}: hot bit on a zero lane ({i},{b})",
+                    g.seed
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lazy_decay_is_bit_exact_f32() {
+    check(24, lazy_vs_eager_case::<f32>);
+}
+
+#[test]
+fn lazy_decay_is_bit_exact_f16() {
+    check(16, lazy_vs_eager_case::<F16>);
+}
+
+fn gated_cfg(g: &mut Gen) -> SnnConfig {
+    let mut cfg = SnnConfig {
+        n_in: g.usize_range(2, 10),
+        n_hidden: g.usize_range(2, 10),
+        n_out: g.usize_range(1, 5),
+        lambda: 0.5,
+        v_th: 1.0,
+        input_gain: 2.0,
+        plasticity: Default::default(),
+    };
+    cfg.plasticity.presyn_gate = true;
+    cfg
+}
+
+fn gated_vs_oracle_case<S: Scalar>(g: &mut Gen) {
+    let cfg = gated_cfg(g);
+    let batch = [1usize, 2, 5, 63, 64, 65][g.usize_range(0, 6)];
+    let mut theta_rng = Pcg64::new(g.u64(), 0);
+    let mut flat = vec![0.0f32; cfg.n_rule_params()];
+    theta_rng.fill_normal_f32(&mut flat, 0.3);
+    let rule = NetworkRule::from_flat(&cfg, &flat);
+
+    let mut packed = SnnNetwork::<S>::new_batched(cfg.clone(), Mode::Plastic(rule.clone()), batch);
+    let mut dense = DenseBatchedNetwork::<S>::new(cfg.clone(), Mode::Plastic(rule), batch);
+
+    // spatially sparse drive: a random subset of input rows is live
+    let live: Vec<bool> = (0..cfg.n_in).map(|_| g.rng.bernoulli(0.4)).collect();
+    let ticks = g.usize_range(5, 12);
+    for _ in 0..ticks {
+        let active: Vec<bool> = (0..batch).map(|_| g.rng.bernoulli(0.75)).collect();
+        let mut inmat = vec![false; cfg.n_in * batch];
+        for (k, v) in inmat.iter_mut().enumerate() {
+            *v = live[k / batch] && g.rng.bernoulli(0.5);
+        }
+        packed.step_spikes_masked(&inmat, &active);
+        dense.step_spikes_masked(&inmat, &active);
+        assert_eq!(
+            packed.plasticity_rows_visited, dense.plasticity_rows_visited,
+            "seed {:#x}: gate decisions diverged",
+            g.seed
+        );
+        for b in 0..batch {
+            for o in 0..cfg.n_out {
+                assert_eq!(
+                    packed.output.spikes.get(o, b),
+                    dense.spikes_out[o * batch + b],
+                    "seed {:#x}: spike mismatch session {b}",
+                    g.seed
+                );
+            }
+        }
+    }
+    // full-state bit equivalence: weights, traces (incl. the lazy input
+    // traces, which step_spikes_masked leaves fully materialized)
+    for (a, b) in packed.w1.iter().zip(&dense.w1) {
+        assert_eq!(a.to_f32().to_bits(), b.to_f32().to_bits(), "seed {:#x}: w1", g.seed);
+    }
+    for (a, b) in packed.w2.iter().zip(&dense.w2) {
+        assert_eq!(a.to_f32().to_bits(), b.to_f32().to_bits(), "seed {:#x}: w2", g.seed);
+    }
+    for (a, b) in packed.trace_in.values.iter().zip(&dense.trace_in) {
+        assert_eq!(a.to_f32().to_bits(), b.to_f32().to_bits(), "seed {:#x}: trace_in", g.seed);
+    }
+}
+
+#[test]
+fn gated_plasticity_matches_gated_oracle_f32() {
+    check(24, gated_vs_oracle_case::<f32>);
+}
+
+#[test]
+fn gated_plasticity_matches_gated_oracle_f16() {
+    check(12, gated_vs_oracle_case::<F16>);
+}
+
+#[test]
+fn gated_f16_with_zero_gamma_delta_is_lossless() {
+    // The documented ε-contract edge where the gate is exact: in FP16 a
+    // sub-ε trace is exactly zero, and with γ = δ = 0 a zero pre-trace
+    // contributes no update at all — gated ≡ ungated bit-for-bit.
+    let mut cfg = SnnConfig::tiny();
+    let mut rng = Pcg64::new(0xE0, 0);
+    let mut flat = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut flat, 0.3);
+    // zero out γ and δ in every synapse's quadruple
+    for q in flat.chunks_exact_mut(4) {
+        q[2] = 0.0;
+        q[3] = 0.0;
+    }
+    let rule = NetworkRule::from_flat(&cfg, &flat);
+
+    let mut ungated = SnnNetwork::<F16>::new(cfg.clone(), Mode::Plastic(rule.clone()));
+    cfg.plasticity.presyn_gate = true;
+    let mut gated = SnnNetwork::<F16>::new(cfg.clone(), Mode::Plastic(rule));
+
+    let mut input_rng = Pcg64::new(0xE1, 0);
+    for _ in 0..150 {
+        // bursts with silent stretches so rows drain to exact FP16 zero
+        let burst = input_rng.bernoulli(0.3);
+        let spikes: Vec<bool> = (0..cfg.n_in)
+            .map(|j| burst && j % 3 == 0 && input_rng.bernoulli(0.7))
+            .collect();
+        let og: Vec<bool> = gated.step_spikes(&spikes).to_vec();
+        let ou: Vec<bool> = ungated.step_spikes(&spikes).to_vec();
+        assert_eq!(og, ou);
+    }
+    for (a, b) in gated.w1.iter().zip(&ungated.w1) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    for (a, b) in gated.w2.iter().zip(&ungated.w2) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // and the gate did engage (rows j % 3 != 0 are permanently silent)
+    assert!(gated.plasticity_rows_visited[0] < cfg.n_in);
+}
+
+#[test]
+fn gate_skips_most_rows_at_5pct_spatial_activity() {
+    // ISSUE 3 acceptance at network level: 5 % of input neurons carry
+    // all activity; after the silent rows drain, a plastic step visits
+    // < 20 % of L1's presynaptic rows.
+    let mut cfg = SnnConfig::control(100, 4);
+    cfg.n_hidden = 16;
+    cfg.plasticity.presyn_gate = true;
+    let mut rng = Pcg64::new(0xF0, 0);
+    let mut flat = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut flat, 0.2);
+    let rule = NetworkRule::from_flat(&cfg, &flat);
+    let mut net = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule));
+
+    let live: Vec<bool> = (0..cfg.n_in).map(|j| j % 20 == 0).collect(); // 5 %
+    let mut input_rng = Pcg64::new(0xF1, 0);
+    // warm long enough for silent f32 traces to underflow below ε
+    // (λ = 0.5: anything reaches 2⁻²⁴-scale within ~30 halvings)
+    for _ in 0..200 {
+        let spikes: Vec<bool> = live
+            .iter()
+            .map(|&l| l && input_rng.bernoulli(0.8))
+            .collect();
+        net.step_spikes(&spikes);
+    }
+    let visited = net.plasticity_rows_visited[0];
+    assert!(
+        visited >= 1,
+        "live rows must be visited (got {visited})"
+    );
+    assert!(
+        (visited as f64) < 0.2 * cfg.n_in as f64,
+        "gated sweep visited {visited} of {} pre rows at 5 % activity",
+        cfg.n_in
+    );
+}

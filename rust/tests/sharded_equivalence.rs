@@ -1,0 +1,166 @@
+//! Sharded batched stepping is **bit-exact** against the single-shard
+//! path (ISSUE 3 acceptance).
+//!
+//! The sharded stepper partitions the SoA batch into 64-lane word
+//! shards driven across threadpool workers (`snn/shard.rs`). Sessions
+//! are mutually independent, so sharding must change the schedule,
+//! never the values: a multi-threaded backend and a single-threaded one
+//! fed the same per-session histories must agree bit-for-bit on every
+//! output spike and every trace — including at batch sizes that are not
+//! multiples of 64, under partial (subset) stepping, and across
+//! mid-serve `ensure_sessions` growth (the 63 → 65 → 128 shard-tail
+//! regression).
+
+use firefly_p::backend::{NativeBackend, SnnBackend};
+use firefly_p::snn::{NetworkRule, SnnConfig};
+use firefly_p::util::rng::Pcg64;
+
+fn rule_for(cfg: &SnnConfig, seed: u64) -> NetworkRule {
+    let mut rng = Pcg64::new(seed, 0);
+    let mut flat = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut flat, 0.25);
+    NetworkRule::from_flat(cfg, &flat)
+}
+
+/// Step both backends with identical random subsets + inputs for
+/// `ticks`, asserting bit-identical outputs every tick.
+fn drive_lockstep(
+    a: &mut NativeBackend,
+    b: &mut NativeBackend,
+    batch: usize,
+    ticks: usize,
+    rng: &mut Pcg64,
+) {
+    let n_in = a.config().n_in;
+    let mut out_a = Vec::new();
+    let mut out_b = Vec::new();
+    for tick in 0..ticks {
+        // random subset of sessions submits this tick (serving shape)
+        let sessions: Vec<usize> = (0..batch).filter(|_| rng.bernoulli(0.8)).collect();
+        if sessions.is_empty() {
+            continue;
+        }
+        let inputs: Vec<bool> = (0..sessions.len() * n_in)
+            .map(|_| rng.bernoulli(0.35))
+            .collect();
+        a.step_sessions(&sessions, &inputs, &mut out_a);
+        b.step_sessions(&sessions, &inputs, &mut out_b);
+        assert_eq!(out_a, out_b, "outputs diverged at tick {tick} (B={batch})");
+    }
+}
+
+#[test]
+fn threaded_vs_single_shard_bit_equivalence() {
+    // ISSUE 3 acceptance batch sizes: word-aligned, sub-word, straddling.
+    for &batch in &[1usize, 64, 65, 256] {
+        let mut cfg = SnnConfig::tiny();
+        cfg.n_hidden = 12;
+        let rule = rule_for(&cfg, 0xA0 + batch as u64);
+
+        let mut threaded = NativeBackend::plastic_with_threads(cfg.clone(), rule.clone(), 4);
+        let mut single = NativeBackend::plastic(cfg.clone(), rule);
+        assert_eq!(threaded.ensure_sessions(batch), batch);
+        assert_eq!(single.ensure_sessions(batch), batch);
+
+        let mut rng = Pcg64::new(0xB0 + batch as u64, 1);
+        drive_lockstep(&mut threaded, &mut single, batch, 25, &mut rng);
+
+        for s in 0..batch {
+            assert_eq!(
+                threaded.output_traces_session(s),
+                single.output_traces_session(s),
+                "trace mismatch, B={batch} session {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fixed_mode_threaded_matches_single_shard() {
+    // Fixed-weight deployments replicate the shared weight copy per
+    // shard; newly materialized shards must inherit it.
+    let mut cfg = SnnConfig::tiny();
+    cfg.n_hidden = 10;
+    let mut rng = Pcg64::new(0xC0, 0);
+    let mut weights = vec![0.0f32; cfg.n_weights()];
+    rng.fill_normal_f32(&mut weights, 1.0);
+
+    let mut threaded = NativeBackend::fixed_with_threads(cfg.clone(), &weights, 3);
+    let mut single = NativeBackend::fixed(cfg.clone(), &weights);
+    // grow *after* construction: lanes 64.. land in a shard that did not
+    // exist when the weights were loaded
+    assert_eq!(threaded.ensure_sessions(130), 130);
+    assert_eq!(single.ensure_sessions(130), 130);
+
+    let mut drive_rng = Pcg64::new(0xC1, 0);
+    drive_lockstep(&mut threaded, &mut single, 130, 15, &mut drive_rng);
+}
+
+#[test]
+fn ensure_sessions_growth_63_65_128_under_load() {
+    // ISSUE 3 satellite regression: growing the batch mid-serve must not
+    // leave stale lane data in newly mapped shard tails. Grow a
+    // 4-thread backend 63 → 65 → 128 while sessions are live, against
+    // two witnesses: a single-thread backend grown identically, and a
+    // 4-thread backend provisioned at 128 from the start.
+    let mut cfg = SnnConfig::tiny();
+    cfg.n_hidden = 12;
+    let rule = rule_for(&cfg, 0xD0);
+
+    let mut grown = NativeBackend::plastic_with_threads(cfg.clone(), rule.clone(), 4);
+    let mut grown_serial = NativeBackend::plastic(cfg.clone(), rule.clone());
+    let mut provisioned = NativeBackend::plastic_with_threads(cfg.clone(), rule, 4);
+    assert_eq!(grown.ensure_sessions(63), 63);
+    assert_eq!(grown_serial.ensure_sessions(63), 63);
+    assert_eq!(provisioned.ensure_sessions(128), 128);
+
+    let n_in = cfg.n_in;
+    let mut rng = Pcg64::new(0xD1, 0);
+    let mut out_a = Vec::new();
+    let mut out_b = Vec::new();
+    let mut out_c = Vec::new();
+
+    let mut live = 63usize;
+    for (phase, &next) in [65usize, 128, 128].iter().enumerate() {
+        // load phase: step all live sessions a few ticks
+        for tick in 0..8 {
+            let sessions: Vec<usize> = (0..live).filter(|_| rng.bernoulli(0.85)).collect();
+            if sessions.is_empty() {
+                continue;
+            }
+            let inputs: Vec<bool> = (0..sessions.len() * n_in)
+                .map(|_| rng.bernoulli(0.4))
+                .collect();
+            grown.step_sessions(&sessions, &inputs, &mut out_a);
+            grown_serial.step_sessions(&sessions, &inputs, &mut out_b);
+            provisioned.step_sessions(&sessions, &inputs, &mut out_c);
+            assert_eq!(out_a, out_b, "phase {phase} tick {tick}: threaded vs serial");
+            assert_eq!(out_a, out_c, "phase {phase} tick {tick}: grown vs provisioned");
+        }
+        // grow mid-serve
+        assert_eq!(grown.ensure_sessions(next), next);
+        assert_eq!(grown_serial.ensure_sessions(next), next);
+        // sessions added by growth must start from the exact zero state
+        for s in live..next {
+            assert!(
+                grown.output_traces_session(s).iter().all(|&t| t == 0.0),
+                "stale lane data in grown session {s} (phase {phase})"
+            );
+        }
+        live = next;
+    }
+
+    // every session — original, added at 65, added at 128 — bit-agrees
+    for s in 0..128 {
+        assert_eq!(
+            grown.output_traces_session(s),
+            grown_serial.output_traces_session(s),
+            "session {s}: grown-threaded vs grown-serial"
+        );
+        assert_eq!(
+            grown.output_traces_session(s),
+            provisioned.output_traces_session(s),
+            "session {s}: grown vs pre-provisioned"
+        );
+    }
+}
