@@ -5,6 +5,18 @@
 //! per-generation population-mean fitness (the paper's learning curves)
 //! plus the final generalization score on the 72 novel tasks.
 //!
+//! EXP-BA — batched closed-loop adaptation over the scenario grid
+//! (ISSUE 4): the trained FireFly-P rule is deployed into the batched
+//! adaptation engine and swept over B ∈ {1, 8, 64} concurrent
+//! eval-grid scenarios with a mixed perturbation schedule, measuring
+//! engine throughput (session-steps/s) and the median time-to-recover.
+//! Emits `results/fig3_batch_adapt.csv` with schema
+//! `family,batch,threads,steps_per_s,time_to_recover_p50`
+//! (`time_to_recover_p50` is NaN when no session recovered at this
+//! budget). A 64-session batch is exactly one packed 64-lane word — one
+//! shard — so the extra `threads = 2` row at B = 64 documents that step
+//! sharding only engages past the word boundary.
+//!
 //! Full-fidelity settings take hours; the default budget (tunable via
 //! env vars FIG3_GENS / FIG3_PAIRS / FIG3_HIDDEN) reproduces the
 //! *shape*: plasticity adapts faster, reaches higher fitness, and
@@ -12,10 +24,15 @@
 //!
 //! Run: `cargo bench --bench bench_fig3_adaptation`
 
+use firefly_p::backend::NativeBackend;
+use firefly_p::coordinator::batch_adapt::{
+    run_batch_adaptation, scenarios_for_grid, BatchAdaptConfig, GridSummary,
+};
 use firefly_p::coordinator::offline::{train_rule, TrainConfig};
 use firefly_p::env::protocol::eval_grid;
-use firefly_p::env::family_of;
+use firefly_p::env::{family_of, Perturbation, TaskParam};
 use firefly_p::es::eval::{rollout_fitness, EvalSpec, GenomeKind};
+use firefly_p::snn::NetworkRule;
 use firefly_p::util::csvio::CsvWriter;
 
 fn envvar(name: &str, default: usize) -> usize {
@@ -41,6 +58,11 @@ fn main() {
         &["env", "method", "final_train_fitness", "novel_task_fitness"],
     )
     .unwrap();
+    let mut batch_csv = CsvWriter::create(
+        "results/fig3_batch_adapt.csv",
+        &["family", "batch", "threads", "steps_per_s", "time_to_recover_p50"],
+    )
+    .unwrap();
 
     for env in ["ant-dir", "cheetah-vel", "reacher"] {
         let env: &'static str = Box::leak(env.to_string().into_boxed_str());
@@ -50,6 +72,7 @@ fn main() {
             _ => "C: position generalization",
         });
         let mut final_scores = Vec::new();
+        let mut ff_genome: Vec<f32> = Vec::new();
         for (method, kind) in [
             ("fireflyp", GenomeKind::PlasticityRule),
             ("weight-trained", GenomeKind::Weights),
@@ -87,17 +110,71 @@ fn main() {
             );
             summary.row(&[&env, &method, &train_fit, &novel_fit]).unwrap();
             final_scores.push((method, train_fit, novel_fit));
+            if method == "fireflyp" {
+                ff_genome = result.genome.clone();
+            }
         }
         // The paper's qualitative claim per panel: FireFly-P ≥ baseline.
         let ff = final_scores[0];
         let wt = final_scores[1];
         if ff.2 >= wt.2 {
-            println!("  ✓ plasticity generalizes better on novel tasks ({:.2} vs {:.2})\n", ff.2, wt.2);
+            println!("  ✓ plasticity generalizes better on novel tasks ({:.2} vs {:.2})", ff.2, wt.2);
         } else {
-            println!("  ✗ NOTE: baseline won at this reduced budget ({:.2} vs {:.2}) — increase FIG3_GENS\n", ff.2, wt.2);
+            println!("  ✗ NOTE: baseline won at this reduced budget ({:.2} vs {:.2}) — increase FIG3_GENS", ff.2, wt.2);
         }
+
+        // --- EXP-BA: batched adaptation over the scenario grid --------
+        // Deploy the evolved rule into the batched engine: B concurrent
+        // eval-grid scenarios, mixed perturbation schedule (leg failure,
+        // weak motors, clean — round-robin), one batched step per tick.
+        // Geometry comes from the same TrainConfig::spec() the genome
+        // was trained under, so θ and network can never drift apart.
+        let mut deploy_cfg = TrainConfig::quick(env, GenomeKind::PlasticityRule);
+        deploy_cfg.hidden = hidden;
+        let net_cfg = deploy_cfg.spec().snn_config();
+        let rule = NetworkRule::from_flat(&net_cfg, &ff_genome);
+        let schedule = vec![
+            (Some(Perturbation::leg_failure(vec![0])), 80),
+            (Some(Perturbation::weak_motors(0.5)), 80),
+            (None, 0),
+        ];
+        let novel = eval_grid(family_of(env).unwrap());
+        for (batch, threads) in [(1usize, 1usize), (8, 1), (64, 1), (64, 2)] {
+            let tasks: Vec<TaskParam> =
+                (0..batch).map(|s| novel[s % novel.len()].clone()).collect();
+            let scenarios = scenarios_for_grid(&tasks, &schedule, 42);
+            let mut backend =
+                NativeBackend::plastic_with_threads(net_cfg.clone(), rule.clone(), threads);
+            let bcfg = BatchAdaptConfig {
+                env_name: env.to_string(),
+                window: 20,
+                max_steps: None,
+            };
+            let t0 = std::time::Instant::now();
+            let logs = run_batch_adaptation(&mut backend, &bcfg, &scenarios);
+            let dt = t0.elapsed().as_secs_f64();
+            let total_steps: usize = logs.iter().map(|l| l.rewards.len()).sum();
+            let grid = GridSummary::from_logs(&logs);
+            let sps = total_steps as f64 / dt.max(1e-9);
+            println!(
+                "  batch-adapt B={batch:<3} T={threads}: {sps:>9.0} session-steps/s  \
+                 recovered {}/{}  ttr_p50 {:.1}",
+                grid.recovered, grid.perturbed, grid.time_to_recover_p50
+            );
+            batch_csv
+                .row(&[
+                    &env,
+                    &batch,
+                    &threads,
+                    &format!("{sps:.1}"),
+                    &format!("{:.1}", grid.time_to_recover_p50),
+                ])
+                .unwrap();
+        }
+        println!();
     }
     let p1 = curves.finish().unwrap();
     let p2 = summary.finish().unwrap();
-    println!("csv: {} and {}", p1.display(), p2.display());
+    let p3 = batch_csv.finish().unwrap();
+    println!("csv: {}, {} and {}", p1.display(), p2.display(), p3.display());
 }

@@ -122,7 +122,7 @@ fn bench_packed_vs_dense(batch: usize, rate: f64, ticks: usize) -> (f64, f64) {
         .collect();
 
     let mut packed =
-        SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone()), batch);
+        SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone().into()), batch);
     for f in frames.iter().take(5) {
         packed.step_spikes_masked(f, &active);
     }
@@ -132,7 +132,7 @@ fn bench_packed_vs_dense(batch: usize, rate: f64, ticks: usize) -> (f64, f64) {
     }
     let packed_sps = (batch * ticks) as f64 / t0.elapsed().as_secs_f64();
 
-    let mut dense = DenseBatchedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule), batch);
+    let mut dense = DenseBatchedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.into()), batch);
     for f in frames.iter().take(5) {
         dense.step_spikes_masked(f, &active);
     }
@@ -185,7 +185,7 @@ fn bench_gated_plasticity(gated: bool, batch: usize, rate: f64, ticks: usize) ->
                 .collect()
         })
         .collect();
-    let mut net = SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule), batch);
+    let mut net = SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.into()), batch);
     for f in frames.iter().take(5) {
         net.step_spikes_masked(f, &active);
     }

@@ -27,7 +27,7 @@ pub mod native;
 pub mod xla;
 
 pub use fpga::FpgaBackend;
-pub use native::NativeBackend;
+pub use native::{NativeBackend, TypedNativeBackend};
 pub use xla::XlaBackend;
 
 use crate::snn::SnnConfig;

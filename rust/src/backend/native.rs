@@ -1,32 +1,44 @@
-//! Native backend: the pure-Rust golden model (`SnnNetwork<f32>`), and
-//! the only backend with **native multi-session batching** — it steps
-//! all of its sessions through structure-of-arrays networks so the
-//! frozen rule θ is streamed once per tick per shard instead of once per
-//! session (DESIGN.md §Batched-Serving). Request spikes are scattered
-//! straight into the networks' bit-packed staging words (DESIGN.md
-//! §Hot-Path): no dense boolean input matrix is materialized on the
-//! serving path, and the single-shard steady-state step performs zero
-//! heap allocations.
+//! Native backend: the pure-Rust golden model (`SnnNetwork`), and the
+//! only backend with **native multi-session batching** — it steps all of
+//! its sessions through structure-of-arrays networks so the frozen rule
+//! θ is streamed once per tick per shard instead of once per session
+//! (DESIGN.md §Batched-Serving). Request spikes are scattered straight
+//! into the networks' bit-packed staging words (DESIGN.md §Hot-Path): no
+//! dense boolean input matrix is materialized on the serving path, and
+//! the single-shard steady-state step performs zero heap allocations.
 //!
 //! Since PR 3 the sessions live in a [`ShardedNetwork`]: the batch is
 //! partitioned into 64-lane word shards stepped in parallel across
 //! `step_threads` pool workers (`--step-threads` on the serving CLI).
-//! `step_threads == 1` (the [`NativeBackend::plastic`] /
-//! [`NativeBackend::fixed`] default) is exactly the pre-sharding
+//! `step_threads == 1` (the [`TypedNativeBackend::plastic`] /
+//! [`TypedNativeBackend::fixed`] default) is exactly the pre-sharding
 //! single-thread path.
+//!
+//! The backend is generic over the arithmetic domain
+//! ([`TypedNativeBackend<S>`]): [`NativeBackend`] is the f32 golden
+//! model the serving stack deploys, while `TypedNativeBackend<F16>`
+//! steps the identical batched pipeline in bit-accurate binary16 — the
+//! FPGA datapath's arithmetic — so the batched-adaptation conformance
+//! suite (`tests/batch_adapt_equivalence.rs`) can pin batched-vs-single
+//! bit-equivalence in both precisions.
 
 use super::SnnBackend;
-use crate::snn::{Mode, NetworkRule, ShardedNetwork, SnnConfig, SnnNetwork};
+use crate::snn::{Mode, NetworkRule, Scalar, ShardedNetwork, SnnConfig, SnnNetwork};
 
-/// Pure-Rust f32 engine hosting one or more controller sessions.
-pub struct NativeBackend {
-    net: ShardedNetwork<f32>,
+/// Pure-Rust engine hosting one or more controller sessions, computing
+/// in the scalar domain `S` (f32 golden model or bit-accurate FP16).
+pub struct TypedNativeBackend<S: Scalar> {
+    net: ShardedNetwork<S>,
 }
 
-impl NativeBackend {
+/// The f32 golden-model deployment of [`TypedNativeBackend`] — the
+/// backend the serving stack and the ES rollouts use.
+pub type NativeBackend = TypedNativeBackend<f32>;
+
+impl<S: Scalar> TypedNativeBackend<S> {
     /// Plastic (FireFly-P) deployment: zero-initialized weights, online
     /// four-term updates under the frozen `rule`. Single-threaded
-    /// stepping; see [`NativeBackend::plastic_with_threads`].
+    /// stepping; see [`TypedNativeBackend::plastic_with_threads`].
     pub fn plastic(cfg: SnnConfig, rule: NetworkRule) -> Self {
         Self::plastic_with_threads(cfg, rule, 1)
     }
@@ -36,21 +48,21 @@ impl NativeBackend {
     /// §Hot-Path). `step_threads` fixes the shard mapping for the
     /// backend's lifetime.
     pub fn plastic_with_threads(cfg: SnnConfig, rule: NetworkRule, step_threads: usize) -> Self {
-        NativeBackend {
-            net: ShardedNetwork::new(cfg, Mode::Plastic(rule), step_threads),
+        TypedNativeBackend {
+            net: ShardedNetwork::new(cfg, Mode::Plastic(rule.into()), step_threads),
         }
     }
 
     /// Fixed-weight baseline deployment: `weights` installed once, no
     /// online updates. Single-threaded stepping; see
-    /// [`NativeBackend::fixed_with_threads`].
+    /// [`TypedNativeBackend::fixed_with_threads`].
     pub fn fixed(cfg: SnnConfig, weights: &[f32]) -> Self {
         Self::fixed_with_threads(cfg, weights, 1)
     }
 
     /// Fixed-weight deployment with sharded multi-threaded stepping.
     pub fn fixed_with_threads(cfg: SnnConfig, weights: &[f32], step_threads: usize) -> Self {
-        let mut backend = NativeBackend {
+        let mut backend = TypedNativeBackend {
             net: ShardedNetwork::new(cfg, Mode::Fixed, step_threads),
         };
         backend.net.load_weights(weights);
@@ -59,8 +71,18 @@ impl NativeBackend {
 
     /// Borrow the underlying golden-model network of the first shard
     /// (diagnostics; with one step thread this is the whole batch).
-    pub fn network(&self) -> &SnnNetwork<f32> {
+    pub fn network(&self) -> &SnnNetwork<S> {
         self.net.shard(0)
+    }
+
+    /// Number of 64-lane word shards currently materialized.
+    pub fn shard_count(&self) -> usize {
+        self.net.shard_count()
+    }
+
+    /// Borrow shard `k`'s network (diagnostics and the θ-sharing tests).
+    pub fn shard(&self, k: usize) -> &SnnNetwork<S> {
+        self.net.shard(k)
     }
 
     /// Number of worker threads the batched step is sharded across.
@@ -77,7 +99,7 @@ impl NativeBackend {
     }
 }
 
-impl SnnBackend for NativeBackend {
+impl<S: Scalar> SnnBackend for TypedNativeBackend<S> {
     fn config(&self) -> &SnnConfig {
         self.net.cfg()
     }
@@ -156,6 +178,7 @@ impl SnnBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::fp16::F16;
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -210,6 +233,47 @@ mod tests {
             let mut pooled = Vec::new();
             batched.output_traces_session_into(s, &mut pooled);
             assert_eq!(pooled, single.output_traces());
+        }
+    }
+
+    #[test]
+    fn f16_backend_matches_f16_single_instances() {
+        // The FP16 instantiation must be the same batched pipeline in a
+        // narrower domain: pin it against B independent single-session
+        // FP16 backends (the full closed-loop version of this lives in
+        // tests/batch_adapt_equivalence.rs).
+        let cfg = SnnConfig::tiny();
+        let mut rng = Pcg64::new(47, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.25);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+
+        let batch = 3;
+        let mut batched = TypedNativeBackend::<F16>::plastic(cfg.clone(), rule.clone());
+        assert_eq!(batched.ensure_sessions(batch), batch);
+        let mut singles: Vec<TypedNativeBackend<F16>> = (0..batch)
+            .map(|_| TypedNativeBackend::<F16>::plastic(cfg.clone(), rule.clone()))
+            .collect();
+
+        let mut input_rng = Pcg64::new(48, 0);
+        let mut out = Vec::new();
+        for _ in 0..25 {
+            let inputs: Vec<bool> = (0..batch * cfg.n_in)
+                .map(|_| input_rng.bernoulli(0.5))
+                .collect();
+            batched.step_batch(batch, &inputs, &mut out);
+            for (s, single) in singles.iter_mut().enumerate() {
+                let chunk = &inputs[s * cfg.n_in..(s + 1) * cfg.n_in];
+                let expect = single.step(chunk);
+                assert_eq!(&out[s * cfg.n_out..(s + 1) * cfg.n_out], &expect[..]);
+            }
+        }
+        for (s, single) in singles.iter().enumerate() {
+            assert_eq!(
+                batched.output_traces_session(s),
+                single.output_traces(),
+                "F16 trace mismatch session {s}"
+            );
         }
     }
 

@@ -5,19 +5,29 @@
 //!
 //! The loop is backend-agnostic: the same driver runs the native golden
 //! model, the XLA artifact (production path) and the FPGA simulator.
+//!
+//! Since the batched engine landed
+//! ([`crate::coordinator::batch_adapt`]), this module is the **thin
+//! B = 1 wrapper**: [`run_adaptation`] builds a one-scenario batch and
+//! drives it through the engine, so the single-session and batched
+//! paths are the same code by construction (the conformance suite in
+//! `tests/batch_adapt_equivalence.rs` additionally pins B-session
+//! batches bit-identical to B sequential runs of this wrapper).
 
 use crate::backend::SnnBackend;
-use crate::env::{make_env, Perturbation, TaskParam};
-use crate::es::eval::NEURONS_PER_DIM;
-use crate::snn::encoding::{PopulationEncoder, TraceDecoder};
-use crate::util::rng::Pcg64;
+use crate::coordinator::batch_adapt::{run_batch_adaptation, BatchAdaptConfig, Scenario};
+use crate::env::{Perturbation, TaskParam};
 
+/// Configuration of one online-adaptation episode.
 #[derive(Clone, Debug)]
 pub struct AdaptConfig {
+    /// Environment name (`ant-dir` | `cheetah-vel` | `reacher` aliases).
     pub env_name: String,
     /// Inject this perturbation at `perturb_at` (None = clean episode).
     pub perturbation: Option<Perturbation>,
+    /// Injection timestep (clamped to half the env horizon).
     pub perturb_at: usize,
+    /// RNG seed for env reset and (stochastic) encoding.
     pub seed: u64,
     /// Reward smoothing window for the recovery metrics.
     pub window: usize,
@@ -38,8 +48,11 @@ impl Default for AdaptConfig {
 /// Per-step record of one adaptation episode.
 #[derive(Clone, Debug)]
 pub struct AdaptLog {
+    /// Per-step rewards, in order.
     pub rewards: Vec<f64>,
+    /// The step the perturbation was injected at (`None` = clean).
     pub perturb_at: Option<usize>,
+    /// Episode return (sum of `rewards`).
     pub total_reward: f64,
     /// Mean reward over the `window` steps before the perturbation.
     pub pre_perturb_rate: f64,
@@ -47,9 +60,57 @@ pub struct AdaptLog {
     pub shock_rate: f64,
     /// Mean reward over the last `window` steps of the episode.
     pub final_rate: f64,
+    /// Steps from the perturbation until the trailing `window`-mean
+    /// reward first regains 90 % of the perturbation-induced drop
+    /// (`Some(0)` when there was no measurable drop; `None` when the
+    /// episode never recovered, or was clean). The first window
+    /// considered is the first one lying fully after the perturbation.
+    pub time_to_recover: Option<usize>,
 }
 
 impl AdaptLog {
+    /// Compute the windowed recovery metrics from a reward history —
+    /// the single definition both the single-session wrapper and the
+    /// batched engine finalize through.
+    pub fn from_rewards(rewards: Vec<f64>, perturb_at: Option<usize>, window: usize) -> AdaptLog {
+        let w = window.max(1);
+        let rate = |range: std::ops::Range<usize>| -> f64 {
+            let lo = range.start.min(rewards.len());
+            let hi = range.end.min(rewards.len());
+            crate::util::stats::mean(&rewards[lo..hi])
+        };
+        let (pre, shock) = match perturb_at {
+            Some(p) => (rate(p.saturating_sub(w)..p), rate(p..p + w)),
+            None => (0.0, 0.0),
+        };
+        let final_rate = rate(rewards.len().saturating_sub(w)..rewards.len());
+        let time_to_recover = perturb_at.and_then(|p| {
+            let drop = pre - shock;
+            if drop <= 1e-9 {
+                // The perturbation did not measurably hurt: recovered
+                // immediately by definition.
+                return Some(0);
+            }
+            let threshold = shock + 0.9 * drop;
+            // Scan trailing windows that lie fully after the injection.
+            for t in (p + w - 1)..rewards.len() {
+                if rate(t + 1 - w..t + 1) >= threshold {
+                    return Some(t + 1 - p);
+                }
+            }
+            None
+        });
+        AdaptLog {
+            total_reward: rewards.iter().sum(),
+            pre_perturb_rate: pre,
+            shock_rate: shock,
+            final_rate,
+            time_to_recover,
+            perturb_at,
+            rewards,
+        }
+    }
+
     /// Recovery ratio ∈ [0, ~1+]: how much of the pre-perturbation
     /// reward rate the controller regains by episode end.
     pub fn recovery_ratio(&self) -> f64 {
@@ -66,67 +127,27 @@ impl AdaptLog {
     }
 }
 
-/// Run one online-adaptation episode of `backend` on `task`.
+/// Run one online-adaptation episode of `backend` on `task` — a
+/// one-scenario batch through the batched engine (see the module docs).
 pub fn run_adaptation(
     backend: &mut dyn SnnBackend,
     cfg: &AdaptConfig,
     task: &TaskParam,
 ) -> AdaptLog {
-    let mut env = make_env(&cfg.env_name).expect("unknown env");
-    let net_cfg = backend.config().clone();
-    assert_eq!(
-        net_cfg.n_in,
-        env.obs_dim() * NEURONS_PER_DIM,
-        "backend geometry does not match {}",
-        cfg.env_name
-    );
-    let encoder = PopulationEncoder::symmetric(env.obs_dim(), NEURONS_PER_DIM, 3.0);
-    let decoder = TraceDecoder::new(env.act_dim(), net_cfg.lambda);
-
-    let mut rng = Pcg64::new(cfg.seed, task.id as u64);
-    let mut obs = env.reset(task, &mut rng);
-    backend.reset();
-
-    let mut spikes = vec![false; net_cfg.n_in];
-    let mut action = vec![0.0f32; env.act_dim()];
-    let mut rewards = Vec::with_capacity(env.horizon());
-    let horizon = env.horizon();
-    let perturb_at = cfg.perturbation.as_ref().map(|_| cfg.perturb_at.min(horizon / 2));
-
-    for t in 0..horizon {
-        if Some(t) == perturb_at {
-            env.set_perturbation(cfg.perturbation.clone());
-        }
-        encoder.encode(&obs, &mut rng, &mut spikes);
-        backend.step(&spikes);
-        decoder.decode(&backend.output_traces(), &mut action);
-        let (o, r, done) = env.step(&action);
-        obs = o;
-        rewards.push(r as f64);
-        if done {
-            break;
-        }
-    }
-
-    let w = cfg.window.max(1);
-    let rate = |range: std::ops::Range<usize>| -> f64 {
-        let slice: Vec<f64> = rewards[range.start.min(rewards.len())..range.end.min(rewards.len())]
-            .to_vec();
-        crate::util::stats::mean(&slice)
+    let scenario = Scenario {
+        task: task.clone(),
+        perturbation: cfg.perturbation.clone(),
+        perturb_at: cfg.perturb_at,
+        seed: cfg.seed,
     };
-    let (pre, shock) = match perturb_at {
-        Some(p) => (rate(p.saturating_sub(w)..p), rate(p..p + w)),
-        None => (0.0, 0.0),
+    let bcfg = BatchAdaptConfig {
+        env_name: cfg.env_name.clone(),
+        window: cfg.window,
+        max_steps: None,
     };
-    let final_rate = rate(rewards.len().saturating_sub(w)..rewards.len());
-    AdaptLog {
-        total_reward: rewards.iter().sum(),
-        pre_perturb_rate: pre,
-        shock_rate: shock,
-        final_rate,
-        perturb_at,
-        rewards,
-    }
+    run_batch_adaptation(backend, &bcfg, std::slice::from_ref(&scenario))
+        .pop()
+        .expect("one scenario yields one log")
 }
 
 #[cfg(test)]
@@ -136,6 +157,7 @@ mod tests {
     use crate::env::protocol::{train_grid, TaskFamily};
     use crate::es::eval::{EvalSpec, GenomeKind};
     use crate::snn::NetworkRule;
+    use crate::util::rng::Pcg64;
 
     fn native_for(env: &'static str, hidden: usize, seed: u64) -> NativeBackend {
         let spec = EvalSpec {
@@ -164,6 +186,7 @@ mod tests {
         let log = run_adaptation(&mut b, &cfg, &task);
         assert_eq!(log.rewards.len(), 200);
         assert!(log.perturb_at.is_none());
+        assert!(log.time_to_recover.is_none());
         assert_eq!(log.recovery_ratio(), 1.0);
         assert!(log.total_reward.is_finite());
     }
@@ -208,8 +231,30 @@ mod tests {
             pre_perturb_rate: 1.0,
             shock_rate: 0.2,
             final_rate: 0.9,
+            time_to_recover: None,
         };
         let r = log.recovery_ratio();
         assert!((r - 0.875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_to_recover_finds_first_recovered_window() {
+        // Perturbation at t=4 (w=2): pre rate 1.0, shock (steps 4,5)
+        // 0.0. Threshold = 0 + 0.9·1.0 = 0.9. Windows fully after the
+        // perturbation: [4,5]=0, [5,6]=0.25, [6,7]=0.75, [7,8]=1.0 → the
+        // first clearing window ends at t=8 ⇒ 5 steps after injection.
+        let rewards = vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.5, 1.0, 1.0, 1.0];
+        let log = AdaptLog::from_rewards(rewards, Some(4), 2);
+        assert_eq!(log.time_to_recover, Some(5));
+
+        // A run that never recovers.
+        let flat = vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let log = AdaptLog::from_rewards(flat, Some(4), 2);
+        assert_eq!(log.time_to_recover, None);
+
+        // No measurable drop ⇒ recovered immediately.
+        let level = vec![1.0; 10];
+        let log = AdaptLog::from_rewards(level, Some(4), 2);
+        assert_eq!(log.time_to_recover, Some(0));
     }
 }

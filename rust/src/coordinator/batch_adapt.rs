@@ -1,0 +1,534 @@
+//! Batched multi-scenario adaptation engine: B concurrent closed-loop
+//! adaptation episodes driven through one batched backend step per tick.
+//!
+//! The paper's headline claim is robust *adaptive control* across a
+//! parametric task family — 72 unseen directions/velocities/goals, with
+//! mid-episode perturbations like simulated leg failure (§II-B, §IV).
+//! PR 1–3 built a batched, sharded, bit-packed serving core; this module
+//! points that core at the **plant side**: instead of one environment
+//! per process, the engine multiplexes B independent `(Env, encoder
+//! state, decoder state, RNG)` tuples over
+//! [`SnnBackend::step_sessions`], so the whole eval-grid sweep becomes
+//! one batched run. This mirrors how FireFly v2's spatiotemporal
+//! dataflow scales closed-loop SNN control: parallelize the plant, not
+//! just the network.
+//!
+//! # Conformance contract (DESIGN.md §Closed-Loop-Batching)
+//!
+//! A B-scenario batched run is **bit-identical** — rewards, spikes,
+//! traces, and online weight (θ-driven) updates — to B independent
+//! single-session [`crate::coordinator::adapt_loop::run_adaptation`]
+//! runs of the same scenarios. Sessions share nothing mutable: each has
+//! its own environment, RNG stream (`Pcg64::new(seed, task.id)`), and
+//! SoA state column in the backend, and the batched step itself is
+//! bit-exact per session (the PR 1–3 equivalence suites). Pinned across
+//! env families, batch sizes, precisions (f32/FP16) and perturbation
+//! schedules by `tests/batch_adapt_equivalence.rs`.
+//!
+//! # Hot path
+//!
+//! After the first tick sizes the pooled buffers, a steady-state
+//! [`BatchAdaptEngine::tick`] performs **zero heap allocations** (the
+//! per-session [`crate::env::Env::step_into`] path writes observations
+//! into pooled buffers; pinned by `tests/alloc_free_serving.rs`). The
+//! perturbation-injection tick and episode finalization are the cold
+//! exceptions.
+
+use crate::backend::SnnBackend;
+use crate::coordinator::adapt_loop::AdaptLog;
+use crate::coordinator::metrics::Metrics;
+use crate::env::{make_env, Env, Perturbation, TaskParam};
+use crate::es::eval::NEURONS_PER_DIM;
+use crate::snn::encoding::{PopulationEncoder, TraceDecoder};
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+
+/// One session's closed-loop scenario: which task, which perturbation
+/// schedule, which seed.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Task parameter the environment is reset to.
+    pub task: TaskParam,
+    /// Perturbation to inject mid-episode (`None` = clean episode).
+    pub perturbation: Option<Perturbation>,
+    /// Injection timestep (clamped to half the env horizon, exactly like
+    /// the single-session driver).
+    pub perturb_at: usize,
+    /// RNG seed; the per-session stream is `Pcg64::new(seed, task.id)`,
+    /// identical to the single-session driver.
+    pub seed: u64,
+}
+
+/// Engine-level configuration shared by every scenario of a run.
+#[derive(Clone, Debug)]
+pub struct BatchAdaptConfig {
+    /// Environment name (one family per engine run — the backend
+    /// geometry is family-specific).
+    pub env_name: String,
+    /// Reward smoothing window for the recovery metrics.
+    pub window: usize,
+    /// Optional step cap below the env horizon (tests and benches).
+    pub max_steps: Option<usize>,
+}
+
+impl Default for BatchAdaptConfig {
+    fn default() -> Self {
+        BatchAdaptConfig {
+            env_name: "ant-dir".into(),
+            window: 20,
+            max_steps: None,
+        }
+    }
+}
+
+/// B concurrent adaptation episodes sharing one batched backend.
+///
+/// Construction provisions and resets one backend session per scenario
+/// and resets each environment; [`BatchAdaptEngine::tick`] advances
+/// every live session one control step through a single
+/// [`SnnBackend::step_sessions`] call; [`BatchAdaptEngine::finish`]
+/// yields one [`AdaptLog`] per scenario, in scenario order.
+pub struct BatchAdaptEngine {
+    cfg: BatchAdaptConfig,
+    scenarios: Vec<Scenario>,
+    envs: Vec<Box<dyn Env>>,
+    rngs: Vec<Pcg64>,
+    encoder: PopulationEncoder,
+    decoder: TraceDecoder,
+    /// Per-session observation buffers (pooled; `step_into` refills).
+    obs: Vec<Vec<f32>>,
+    /// Per-session reward histories (capacity = episode length).
+    rewards: Vec<Vec<f64>>,
+    done: Vec<bool>,
+    /// Effective injection step per session (clamped like the
+    /// single-session driver; `None` = clean episode).
+    perturb_at: Vec<Option<usize>>,
+    t: usize,
+    max_steps: usize,
+    // --- pooled tick buffers (allocation-free once warm) -------------
+    live: Vec<usize>,
+    inputs: Vec<bool>,
+    out_spikes: Vec<bool>,
+    traces: Vec<f32>,
+    action: Vec<f32>,
+}
+
+impl BatchAdaptEngine {
+    /// Provision `backend` for the scenario batch and reset every
+    /// session + environment to its episode-start state.
+    ///
+    /// Panics when the backend geometry does not match the environment
+    /// (same contract as the single-session driver) or when the backend
+    /// cannot provision one session per scenario — single-session
+    /// backends (XLA, FPGA) therefore only accept B = 1; wrap them in
+    /// [`crate::backend::ReplicatedBackend`] for wider batches.
+    pub fn new(
+        backend: &mut dyn SnnBackend,
+        cfg: BatchAdaptConfig,
+        scenarios: &[Scenario],
+    ) -> BatchAdaptEngine {
+        assert!(!scenarios.is_empty(), "need at least one scenario");
+        let n = scenarios.len();
+        let net_cfg = backend.config().clone();
+
+        let mut envs: Vec<Box<dyn Env>> = (0..n)
+            .map(|_| make_env(&cfg.env_name).expect("unknown env"))
+            .collect();
+        assert_eq!(
+            net_cfg.n_in,
+            envs[0].obs_dim() * NEURONS_PER_DIM,
+            "backend geometry does not match {}",
+            cfg.env_name
+        );
+        let encoder = PopulationEncoder::symmetric(envs[0].obs_dim(), NEURONS_PER_DIM, 3.0);
+        let decoder = TraceDecoder::new(envs[0].act_dim(), net_cfg.lambda);
+        assert_eq!(
+            decoder.n_neurons(),
+            net_cfg.n_out,
+            "backend output geometry does not match {}",
+            cfg.env_name
+        );
+
+        let provisioned = backend.ensure_sessions(n);
+        assert!(
+            provisioned >= n,
+            "backend {:?} provides {provisioned} sessions for a {n}-scenario batch \
+             (wrap single-session backends in ReplicatedBackend)",
+            backend.name()
+        );
+
+        let horizon = envs[0].horizon();
+        let max_steps = cfg.max_steps.unwrap_or(horizon).min(horizon);
+        let mut rngs = Vec::with_capacity(n);
+        let mut obs = Vec::with_capacity(n);
+        let mut perturb_at = Vec::with_capacity(n);
+        for (s, spec) in scenarios.iter().enumerate() {
+            // Identical per-session setup to the single-session driver:
+            // seeded RNG, env reset, fresh controller state.
+            let mut rng = Pcg64::new(spec.seed, spec.task.id as u64);
+            obs.push(envs[s].reset(&spec.task, &mut rng));
+            rngs.push(rng);
+            backend.reset_session(s);
+            perturb_at.push(spec.perturbation.as_ref().and_then(|_| {
+                let at = spec.perturb_at.min(horizon / 2);
+                // A perturbation that cannot fire within the step cap
+                // makes the episode effectively clean: record it as
+                // such so the recovery metrics (perturbed/recovered
+                // counts, time-to-recover) stay truthful.
+                (at < max_steps).then_some(at)
+            }));
+        }
+
+        let act_dim = envs[0].act_dim();
+        BatchAdaptEngine {
+            rewards: (0..n).map(|_| Vec::with_capacity(max_steps)).collect(),
+            done: vec![false; n],
+            t: 0,
+            max_steps,
+            live: Vec::with_capacity(n),
+            inputs: Vec::with_capacity(n * net_cfg.n_in),
+            out_spikes: Vec::with_capacity(n * net_cfg.n_out),
+            traces: Vec::with_capacity(net_cfg.n_out),
+            action: vec![0.0; act_dim],
+            scenarios: scenarios.to_vec(),
+            cfg,
+            envs,
+            rngs,
+            encoder,
+            decoder,
+            obs,
+            perturb_at,
+        }
+    }
+
+    /// Timesteps executed so far.
+    pub fn steps(&self) -> usize {
+        self.t
+    }
+
+    /// Number of sessions still running their episode.
+    pub fn live_sessions(&self) -> usize {
+        self.done.iter().filter(|&&d| !d).count()
+    }
+
+    /// Advance every live session one control step: perturbation
+    /// injection, per-session encode into the pooled input staging, one
+    /// batched backend step, then per-session decode + plant step.
+    /// Returns `false` once every episode has finished (or the step cap
+    /// was reached) without advancing anything.
+    ///
+    /// Per-session operation order is identical to the single-session
+    /// driver's loop body, which is what makes the batched run
+    /// bit-identical to B sequential runs.
+    pub fn tick(&mut self, backend: &mut dyn SnnBackend) -> bool {
+        if self.t >= self.max_steps {
+            return false;
+        }
+        self.live.clear();
+        for (s, &d) in self.done.iter().enumerate() {
+            if !d {
+                self.live.push(s);
+            }
+        }
+        if self.live.is_empty() {
+            return false;
+        }
+
+        let t = self.t;
+        let n_in = self.encoder.n_neurons();
+        self.inputs.resize(self.live.len() * n_in, false);
+        for (k, &s) in self.live.iter().enumerate() {
+            if Some(t) == self.perturb_at[s] {
+                // Cold path: the one allocating tick of a perturbed
+                // episode (the Perturbation clone).
+                self.envs[s].set_perturbation(self.scenarios[s].perturbation.clone());
+            }
+            self.encoder.encode(
+                &self.obs[s],
+                &mut self.rngs[s],
+                &mut self.inputs[k * n_in..(k + 1) * n_in],
+            );
+        }
+
+        backend.step_sessions(&self.live, &self.inputs, &mut self.out_spikes);
+
+        for &s in &self.live {
+            backend.output_traces_session_into(s, &mut self.traces);
+            self.decoder.decode(&self.traces, &mut self.action);
+            let (r, d) = self.envs[s].step_into(&self.action, &mut self.obs[s]);
+            self.rewards[s].push(r as f64);
+            if d {
+                self.done[s] = true;
+            }
+        }
+        self.t += 1;
+        true
+    }
+
+    /// Finalize: one [`AdaptLog`] per scenario, in scenario order.
+    pub fn finish(self) -> Vec<AdaptLog> {
+        let w = self.cfg.window;
+        self.rewards
+            .into_iter()
+            .zip(self.perturb_at)
+            .map(|(rewards, p)| AdaptLog::from_rewards(rewards, p, w))
+            .collect()
+    }
+}
+
+/// Run a whole scenario batch to completion (the convenience driver the
+/// CLI, benches and `run_adaptation` use).
+pub fn run_batch_adaptation(
+    backend: &mut dyn SnnBackend,
+    cfg: &BatchAdaptConfig,
+    scenarios: &[Scenario],
+) -> Vec<AdaptLog> {
+    let mut engine = BatchAdaptEngine::new(backend, cfg.clone(), scenarios);
+    while engine.tick(backend) {}
+    engine.finish()
+}
+
+/// One scenario per task of a grid, assigning perturbation schedule
+/// entries round-robin (`schedule` empty = all clean episodes). Every
+/// task appears **exactly once**, in grid order — the coverage contract
+/// the eval-grid fan-out relies on
+/// (`tests/batch_adapt_equivalence.rs::grid_fanout_covers_every_task_once`).
+pub fn scenarios_for_grid(
+    tasks: &[TaskParam],
+    schedule: &[(Option<Perturbation>, usize)],
+    seed: u64,
+) -> Vec<Scenario> {
+    tasks
+        .iter()
+        .enumerate()
+        .map(|(i, task)| {
+            let (perturbation, perturb_at) = if schedule.is_empty() {
+                (None, 0)
+            } else {
+                schedule[i % schedule.len()].clone()
+            };
+            Scenario {
+                task: task.clone(),
+                perturbation,
+                perturb_at,
+                seed,
+            }
+        })
+        .collect()
+}
+
+/// Parse a `;`-separated per-session perturbation schedule, e.g.
+/// `"leg:0@80;gain:0.5@100;none"`: each entry is `<perturb-spec>@<t>`
+/// (the spec grammar of [`Perturbation::parse`]) or `none` for a clean
+/// episode. Entries are assigned round-robin across sessions by
+/// [`scenarios_for_grid`]. An empty string parses to an empty schedule.
+pub fn parse_schedule(spec: &str) -> Result<Vec<(Option<Perturbation>, usize)>, String> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return Ok(Vec::new());
+    }
+    spec.split(';')
+        .map(|entry| {
+            let entry = entry.trim();
+            if entry.is_empty() || entry == "none" {
+                return Ok((None, 0));
+            }
+            let (pspec, at) = entry
+                .rsplit_once('@')
+                .ok_or_else(|| format!("schedule entry {entry:?} needs '@<timestep>'"))?;
+            let p = Perturbation::parse(pspec)?;
+            let t: usize = at
+                .trim()
+                .parse()
+                .map_err(|e| format!("bad timestep in {entry:?}: {e}"))?;
+            Ok((Some(p), t))
+        })
+        .collect()
+}
+
+/// Grid-level aggregate over a batch of adaptation logs.
+#[derive(Clone, Debug)]
+pub struct GridSummary {
+    /// Number of episodes aggregated.
+    pub sessions: usize,
+    /// Episodes that had a perturbation injected.
+    pub perturbed: usize,
+    /// Perturbed episodes that recovered (see
+    /// [`AdaptLog::time_to_recover`]).
+    pub recovered: usize,
+    /// Mean episodic reward across the batch.
+    pub mean_total_reward: f64,
+    /// Mean recovery ratio across the batch.
+    pub mean_recovery_ratio: f64,
+    /// Median steps-to-recovery over the episodes that recovered (NaN
+    /// when none did).
+    pub time_to_recover_p50: f64,
+}
+
+impl GridSummary {
+    /// Aggregate a batch of logs (typically one eval-grid fan-out).
+    pub fn from_logs(logs: &[AdaptLog]) -> GridSummary {
+        let totals: Vec<f64> = logs.iter().map(|l| l.total_reward).collect();
+        let ratios: Vec<f64> = logs.iter().map(|l| l.recovery_ratio()).collect();
+        let ttr: Vec<f64> = logs
+            .iter()
+            .filter_map(|l| l.time_to_recover.map(|t| t as f64))
+            .collect();
+        GridSummary {
+            sessions: logs.len(),
+            perturbed: logs.iter().filter(|l| l.perturb_at.is_some()).count(),
+            recovered: ttr.len(),
+            mean_total_reward: stats::mean(&totals),
+            mean_recovery_ratio: stats::mean(&ratios),
+            time_to_recover_p50: if ttr.is_empty() {
+                f64::NAN
+            } else {
+                stats::percentile(&ttr, 50.0)
+            },
+        }
+    }
+
+    /// Feed the per-episode series into a [`Metrics`] registry
+    /// (`adapt_*` names), so grid runs report through the same registry
+    /// as the server and the benches.
+    pub fn observe_logs(metrics: &mut Metrics, logs: &[AdaptLog]) {
+        for log in logs {
+            metrics.observe("adapt_total_reward", log.total_reward);
+            metrics.observe("adapt_recovery_ratio", log.recovery_ratio());
+            metrics.incr("adapt_sessions");
+            if log.perturb_at.is_some() {
+                metrics.incr("adapt_perturbed");
+            }
+            if let Some(t) = log.time_to_recover {
+                metrics.sample("adapt_time_to_recover", t as f64);
+                metrics.incr("adapt_recovered");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::coordinator::adapt_loop::{run_adaptation, AdaptConfig};
+    use crate::env::protocol::{train_grid, TaskFamily};
+    use crate::snn::{NetworkRule, SnnConfig};
+
+    fn backend_for(env: &str, hidden: usize, seed: u64) -> NativeBackend {
+        let e = make_env(env).unwrap();
+        let mut cfg = SnnConfig::control(e.obs_dim() * NEURONS_PER_DIM, 2 * e.act_dim());
+        cfg.n_hidden = hidden;
+        let mut rng = Pcg64::new(seed, 9);
+        let mut genome = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut genome, 0.05);
+        NativeBackend::plastic(cfg.clone(), NetworkRule::from_flat(&cfg, &genome))
+    }
+
+    #[test]
+    fn single_scenario_engine_matches_run_adaptation() {
+        // The thin-wrapper contract: B = 1 through the engine IS the
+        // single-session driver.
+        let task = train_grid(TaskFamily::Velocity)[2].clone();
+        let scenario = Scenario {
+            task: task.clone(),
+            perturbation: Some(Perturbation::weak_motors(0.4)),
+            perturb_at: 30,
+            seed: 11,
+        };
+        let cfg = BatchAdaptConfig {
+            env_name: "cheetah-vel".into(),
+            window: 20,
+            max_steps: None,
+        };
+        let mut b1 = backend_for("cheetah-vel", 16, 5);
+        let logs = run_batch_adaptation(&mut b1, &cfg, std::slice::from_ref(&scenario));
+
+        let mut b2 = backend_for("cheetah-vel", 16, 5);
+        let acfg = AdaptConfig {
+            env_name: "cheetah-vel".into(),
+            perturbation: scenario.perturbation.clone(),
+            perturb_at: scenario.perturb_at,
+            seed: scenario.seed,
+            window: 20,
+        };
+        let single = run_adaptation(&mut b2, &acfg, &task);
+        assert_eq!(logs.len(), 1);
+        assert_eq!(logs[0].rewards, single.rewards);
+        assert_eq!(logs[0].perturb_at, single.perturb_at);
+        assert_eq!(logs[0].time_to_recover, single.time_to_recover);
+    }
+
+    #[test]
+    fn engine_runs_mixed_scenarios_to_horizon() {
+        let tasks = train_grid(TaskFamily::Direction);
+        let schedule = parse_schedule("leg:0@40;none;gain:0.5@60").unwrap();
+        let scenarios = scenarios_for_grid(&tasks[..5], &schedule, 7);
+        let cfg = BatchAdaptConfig {
+            env_name: "ant-dir".into(),
+            window: 10,
+            max_steps: Some(80),
+        };
+        let mut backend = backend_for("ant-dir", 16, 3);
+        let logs = run_batch_adaptation(&mut backend, &cfg, &scenarios);
+        assert_eq!(logs.len(), 5);
+        for (s, log) in logs.iter().enumerate() {
+            assert_eq!(log.rewards.len(), 80, "session {s}");
+            assert!(log.total_reward.is_finite());
+        }
+        // schedule applied round-robin: sessions 1 and 4 are clean
+        assert!(logs[0].perturb_at.is_some());
+        assert!(logs[1].perturb_at.is_none());
+        assert!(logs[3].perturb_at.is_some());
+        assert!(logs[4].perturb_at.is_none());
+
+        let summary = GridSummary::from_logs(&logs);
+        assert_eq!(summary.sessions, 5);
+        assert_eq!(summary.perturbed, 3);
+        let mut m = Metrics::new();
+        GridSummary::observe_logs(&mut m, &logs);
+        assert_eq!(m.count("adapt_sessions"), 5);
+        assert_eq!(m.count("adapt_perturbed"), 3);
+    }
+
+    #[test]
+    fn schedule_parser_round_trips() {
+        assert_eq!(parse_schedule("").unwrap(), Vec::new());
+        let s = parse_schedule("leg:0,2@80; none ;gain:0.25@100").unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], (Some(Perturbation::leg_failure(vec![0, 2])), 80));
+        assert_eq!(s[1], (None, 0));
+        assert_eq!(s[2], (Some(Perturbation::weak_motors(0.25)), 100));
+        assert!(parse_schedule("leg:0").is_err(), "missing @t must fail");
+        assert!(parse_schedule("bogus:1@5").is_err());
+    }
+
+    #[test]
+    fn grid_scenarios_cover_every_task_once() {
+        let tasks = train_grid(TaskFamily::Position);
+        let scenarios = scenarios_for_grid(&tasks, &[], 42);
+        assert_eq!(scenarios.len(), tasks.len());
+        for (sc, task) in scenarios.iter().zip(&tasks) {
+            assert_eq!(sc.task, *task);
+            assert!(sc.perturbation.is_none());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sessions for a")]
+    fn oversized_batch_on_single_session_backend_panics() {
+        let e = make_env("cheetah-vel").unwrap();
+        let mut cfg = SnnConfig::control(e.obs_dim() * NEURONS_PER_DIM, 2 * e.act_dim());
+        cfg.n_hidden = 8;
+        let rule = NetworkRule::zeros(&cfg);
+        let mut b =
+            crate::backend::FpgaBackend::plastic(cfg, rule, crate::fpga::HwConfig::default());
+        let tasks = train_grid(TaskFamily::Velocity);
+        let scenarios = scenarios_for_grid(&tasks[..2], &[], 1);
+        let bcfg = BatchAdaptConfig {
+            env_name: "cheetah-vel".into(),
+            ..Default::default()
+        };
+        BatchAdaptEngine::new(&mut b, bcfg, &scenarios);
+    }
+}

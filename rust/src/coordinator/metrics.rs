@@ -1,47 +1,82 @@
-//! Named metrics registry: online Welford accumulators + counters with
-//! a stable text report. Used by the adaptation loop, the server and
-//! the benches; designed for zero allocation on the hot path after the
-//! first `observe` of each name.
+//! Named metrics registry: online Welford accumulators, counters, and
+//! buffered sample distributions with a stable text report. Used by the
+//! adaptation engines, the server and the benches; designed for zero
+//! allocation on the hot path after the first `observe`/`sample` of
+//! each name (the sample buffers grow amortized like any `Vec` — grid
+//! aggregation happens between episodes, not inside the serving tick).
 
 use std::collections::BTreeMap;
 
-use crate::util::stats::Welford;
+use crate::util::stats::{self, Welford};
 
+/// Registry of named series (online mean/std/min/max), counters, and
+/// sample distributions (percentile queries).
 #[derive(Default)]
 pub struct Metrics {
     series: BTreeMap<&'static str, Welford>,
     counters: BTreeMap<&'static str, u64>,
+    dists: BTreeMap<&'static str, Vec<f64>>,
 }
 
 impl Metrics {
+    /// Empty registry.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Fold one value into the named online series (constant memory).
     pub fn observe(&mut self, name: &'static str, value: f64) {
         self.series.entry(name).or_insert_with(Welford::new).add(value);
     }
 
+    /// Increment the named counter by one.
     pub fn incr(&mut self, name: &'static str) {
         self.add(name, 1);
     }
 
+    /// Add `n` to the named counter.
     pub fn add(&mut self, name: &'static str, n: u64) {
         *self.counters.entry(name).or_insert(0) += n;
     }
 
+    /// Buffer one value into the named sample distribution so
+    /// percentiles can be queried later (the grid-level aggregation the
+    /// batched adaptation engine reports through; unlike
+    /// [`Metrics::observe`] this keeps every sample).
+    pub fn sample(&mut self, name: &'static str, value: f64) {
+        self.dists.entry(name).or_default().push(value);
+    }
+
+    /// Current value of a counter (0 when never touched).
     pub fn count(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Mean of an online series (0.0 when never observed).
     pub fn mean(&self, name: &str) -> f64 {
         self.series.get(name).map(|w| w.mean()).unwrap_or(0.0)
     }
 
+    /// Borrow an online series' accumulator, if it exists.
     pub fn get(&self, name: &str) -> Option<&Welford> {
         self.series.get(name)
     }
 
+    /// Number of buffered samples in a distribution.
+    pub fn samples(&self, name: &str) -> usize {
+        self.dists.get(name).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Percentile (linear interpolation, `p` ∈ [0, 100]) of a sample
+    /// distribution; NaN when no samples were recorded under `name`.
+    pub fn percentile(&self, name: &str, p: f64) -> f64 {
+        match self.dists.get(name) {
+            Some(v) if !v.is_empty() => stats::percentile(v, p),
+            _ => f64::NAN,
+        }
+    }
+
+    /// Stable text report of every series, distribution and counter.
     pub fn report(&self) -> String {
         use std::fmt::Write;
         let mut s = String::new();
@@ -54,6 +89,16 @@ impl Metrics {
                 w.std_dev(),
                 w.min,
                 w.max
+            );
+        }
+        for (name, v) in &self.dists {
+            let _ = writeln!(
+                s,
+                "{name:<28} n={:<8} p50={:<12.4} p90={:<12.4} max={:.4}",
+                v.len(),
+                stats::percentile(v, 50.0),
+                stats::percentile(v, 90.0),
+                stats::max(v)
             );
         }
         for (name, c) in &self.counters {
@@ -83,10 +128,24 @@ mod tests {
     }
 
     #[test]
+    fn sample_distributions_expose_percentiles() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.sample("time_to_recover", i as f64);
+        }
+        assert_eq!(m.samples("time_to_recover"), 100);
+        assert!((m.percentile("time_to_recover", 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(m.percentile("time_to_recover", 100.0), 100.0);
+        assert!(m.percentile("nope", 50.0).is_nan());
+        assert!(m.report().contains("time_to_recover"));
+    }
+
+    #[test]
     fn missing_names_are_zero() {
         let m = Metrics::new();
         assert_eq!(m.count("nope"), 0);
         assert_eq!(m.mean("nope"), 0.0);
         assert!(m.get("nope").is_none());
+        assert_eq!(m.samples("nope"), 0);
     }
 }

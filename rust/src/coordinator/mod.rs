@@ -2,25 +2,30 @@
 //!
 //! - [`offline`]: Phase-1 leader — PEPG over rule coefficients, fanned
 //!   out to worker threads (the computationally heavy, off-robot part).
-//! - [`adapt_loop`]: Phase-2 driver — online adaptation episodes with
-//!   mid-episode perturbation injection and recovery metrics.
+//! - [`adapt_loop`]: Phase-2 driver — one online adaptation episode
+//!   with mid-episode perturbation injection and recovery metrics (the
+//!   thin B = 1 wrapper over the batched engine).
+//! - [`batch_adapt`]: the batched multi-scenario adaptation engine — B
+//!   concurrent environments driven through one batched backend step
+//!   per tick, with a bit-exactness conformance contract against B
+//!   sequential single-session runs (DESIGN.md §Closed-Loop-Batching).
 //! - [`server`]: a session-managed TCP control server multiplexing many
 //!   concurrent client connections onto batched SNN steps (observation
 //!   in → action out) — the robot-side request loop at fleet scale.
 //! - [`metrics`]: lightweight named metrics registry for all of the
 //!   above.
 
-// Documentation debt (tracked in ROADMAP.md): the serving path (server)
-// is fully documented; the offline/episode drivers opt out for now.
-#[allow(missing_docs)]
 pub mod adapt_loop;
-#[allow(missing_docs)]
+pub mod batch_adapt;
 pub mod metrics;
-#[allow(missing_docs)]
 pub mod offline;
 pub mod server;
 
-pub use adapt_loop::{AdaptConfig, AdaptLog, run_adaptation};
+pub use adapt_loop::{run_adaptation, AdaptConfig, AdaptLog};
+pub use batch_adapt::{
+    parse_schedule, run_batch_adaptation, scenarios_for_grid, BatchAdaptConfig, BatchAdaptEngine,
+    GridSummary, Scenario,
+};
 pub use metrics::Metrics;
 pub use offline::{train_rule, TrainConfig, TrainResult};
 pub use server::{ControlServer, ServerConfig};

@@ -16,25 +16,36 @@ use crate::es::Optimizer;
 use crate::util::stats;
 use crate::util::threadpool::default_workers;
 
+/// Phase-1 training budget and topology.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Environment name (selects the task family and I/O geometry).
     pub env_name: &'static str,
+    /// What the genome encodes (plasticity rule θ or direct weights).
     pub kind: GenomeKind,
+    /// PEPG generations.
     pub generations: usize,
+    /// Symmetric sample pairs per generation (population = 2 × pairs).
     pub pairs: usize,
+    /// Hidden layer width (paper: 128).
     pub hidden: usize,
+    /// Episode seeds per task (>1 averages encoder stochasticity).
     pub episodes_per_task: usize,
+    /// Master seed for the optimizer and the common random numbers.
     pub seed: u64,
+    /// Rollout worker threads.
     pub workers: usize,
     /// Use only the first `n_tasks` of the 8-task training grid (speeds
     /// up tests; full runs use 8).
     pub n_tasks: usize,
+    /// Initial PEPG exploration σ.
     pub sigma_init: f32,
     /// Print a progress line every generation.
     pub verbose: bool,
 }
 
 impl TrainConfig {
+    /// Reduced test/bench budget (10 gens × 8 pairs, 2 tasks, 32 hidden).
     pub fn quick(env_name: &'static str, kind: GenomeKind) -> TrainConfig {
         TrainConfig {
             env_name,
@@ -51,6 +62,7 @@ impl TrainConfig {
         }
     }
 
+    /// The paper's full Phase-1 budget (150 gens × 32 pairs, 8 tasks).
     pub fn paper(env_name: &'static str, kind: GenomeKind) -> TrainConfig {
         TrainConfig {
             env_name,
@@ -67,6 +79,7 @@ impl TrainConfig {
         }
     }
 
+    /// The population-evaluation spec this budget implies.
     pub fn spec(&self) -> EvalSpec {
         let family = family_of(self.env_name).expect("unknown env");
         EvalSpec {
@@ -83,17 +96,27 @@ impl TrainConfig {
 /// One generation's record (drives the Fig. 3 learning curves).
 #[derive(Clone, Copy, Debug)]
 pub struct GenRecord {
+    /// Generation index (0-based).
     pub generation: usize,
+    /// Population-mean fitness this generation.
     pub mean_fitness: f64,
+    /// Best sampled fitness this generation.
     pub best_fitness: f64,
+    /// Fitness of the distribution mean (NaN on generations where it
+    /// was not evaluated — it is rolled out every 5th generation).
     pub mean_genome_fitness: f64,
+    /// Mean exploration σ of the optimizer.
     pub sigma_mean: f64,
 }
 
+/// Output of a Phase-1 run: the optimized genome plus its history.
 #[derive(Clone, Debug)]
 pub struct TrainResult {
+    /// The optimizer's final distribution mean (θ* or W*).
     pub genome: Vec<f32>,
+    /// Per-generation learning-curve records.
     pub history: Vec<GenRecord>,
+    /// Hidden width the genome was trained for (deployment geometry).
     pub spec_hidden: usize,
 }
 
@@ -153,6 +176,7 @@ pub mod genome_io {
     use std::io::{Read, Write};
     use std::path::Path;
 
+    /// Write a genome blob with its deployment metadata header.
     pub fn save(path: &Path, env: &str, kind: &str, hidden: usize, genome: &[f32]) -> std::io::Result<()> {
         if let Some(p) = path.parent() {
             std::fs::create_dir_all(p)?;
@@ -165,6 +189,7 @@ pub mod genome_io {
         Ok(())
     }
 
+    /// Read a genome blob back: `(env, kind, hidden, genome)`.
     pub fn load(path: &Path) -> std::io::Result<(String, String, usize, Vec<f32>)> {
         let mut f = std::fs::File::open(path)?;
         let mut all = Vec::new();

@@ -30,6 +30,8 @@ const TORQUE_GAIN: f32 = 0.6;
 const CTRL_COST: f32 = 0.05;
 const HORIZON: usize = 200;
 
+/// Planar quadruped locomotion toward a commanded direction (see the
+/// module docs for the dynamics model).
 pub struct AntDir {
     // body state (world frame)
     x: f32,
@@ -46,6 +48,7 @@ pub struct AntDir {
 }
 
 impl AntDir {
+    /// Environment at the origin, at rest, heading +x, target direction 0.
     pub fn new() -> Self {
         AntDir {
             x: 0.0,
@@ -66,7 +69,10 @@ impl AntDir {
         }
     }
 
-    fn observation(&self) -> Vec<f32> {
+    /// Write the current observation into `out` (cleared first) — the
+    /// allocation-free primitive both [`Env::step_into`] and the
+    /// allocating wrappers share, so their values are identical.
+    fn observation_into(&self, out: &mut Vec<f32>) {
         // Direction error expressed in the body frame so the policy can
         // be rotation-equivariant; plus egocentric velocities.
         let err = angle_wrap(self.target_dir - self.heading);
@@ -75,7 +81,8 @@ impl AntDir {
         let vbx = ch * self.vx + sh * self.vy;
         let vby = -sh * self.vx + ch * self.vy;
         let speed = (self.vx * self.vx + self.vy * self.vy).sqrt();
-        let mut obs = vec![
+        out.clear();
+        out.extend_from_slice(&[
             err.cos(),
             err.sin(),
             vbx,
@@ -85,10 +92,15 @@ impl AntDir {
             // progress rate along the target direction
             self.vx * self.target_dir.cos() + self.vy * self.target_dir.sin(),
             1.0, // bias input
-        ];
+        ]);
         if let Some(p) = &self.perturbation {
-            p.filter_obs(&mut obs);
+            p.filter_obs(out);
         }
+    }
+
+    fn observation(&self) -> Vec<f32> {
+        let mut obs = Vec::with_capacity(8);
+        self.observation_into(&mut obs);
         obs
     }
 }
@@ -123,9 +135,13 @@ impl Env for AntDir {
         self.observation()
     }
 
-    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool) {
+    fn step_into(&mut self, action: &[f32], obs_out: &mut Vec<f32>) -> (f32, bool) {
         assert_eq!(action.len(), N_LEGS);
-        let mut a: Vec<f32> = action.iter().map(|x| x.clamp(-1.0, 1.0)).collect();
+        // Fixed-size clamp buffer: no per-step heap allocation.
+        let mut a = [0.0f32; N_LEGS];
+        for (dst, &x) in a.iter_mut().zip(action) {
+            *dst = x.clamp(-1.0, 1.0);
+        }
         if let Some(p) = &self.perturbation {
             p.filter_action(&mut a);
         }
@@ -168,7 +184,8 @@ impl Env for AntDir {
         let reward = progress - ctrl;
 
         self.t += 1;
-        (self.observation(), reward, self.t >= HORIZON)
+        self.observation_into(obs_out);
+        (reward, self.t >= HORIZON)
     }
 
     fn set_perturbation(&mut self, p: Option<Perturbation>) {

@@ -29,6 +29,8 @@ const HORIZON: usize = 200;
 /// Gait oscillator frequency (rad per step).
 const PHASE_RATE: f32 = 0.45;
 
+/// Planar runner tracking a commanded forward velocity (see the module
+/// docs for the tripod-gait dynamics model).
 pub struct CheetahVel {
     x: f32,
     v: f32,
@@ -39,6 +41,7 @@ pub struct CheetahVel {
 }
 
 impl CheetahVel {
+    /// Environment at rest with a 1 m/s default target velocity.
     pub fn new() -> Self {
         CheetahVel {
             x: 0.0,
@@ -62,18 +65,27 @@ impl CheetahVel {
         }
     }
 
-    fn observation(&self) -> Vec<f32> {
-        let mut obs = vec![
+    /// Write the current observation into `out` (cleared first) — the
+    /// allocation-free primitive both [`Env::step_into`] and the
+    /// allocating wrappers share, so their values are identical.
+    fn observation_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&[
             self.v,
             self.v_target,
             self.v_target - self.v,
             self.phase.sin(),
             self.phase.cos(),
             1.0, // bias
-        ];
+        ]);
         if let Some(p) = &self.perturbation {
-            p.filter_obs(&mut obs);
+            p.filter_obs(out);
         }
+    }
+
+    fn observation(&self) -> Vec<f32> {
+        let mut obs = Vec::with_capacity(6);
+        self.observation_into(&mut obs);
         obs
     }
 }
@@ -104,9 +116,13 @@ impl Env for CheetahVel {
         self.observation()
     }
 
-    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool) {
+    fn step_into(&mut self, action: &[f32], obs_out: &mut Vec<f32>) -> (f32, bool) {
         assert_eq!(action.len(), N_JOINTS);
-        let mut a: Vec<f32> = action.iter().map(|x| x.clamp(-1.0, 1.0)).collect();
+        // Fixed-size clamp buffer: no per-step heap allocation.
+        let mut a = [0.0f32; N_JOINTS];
+        for (dst, &x) in a.iter_mut().zip(action) {
+            *dst = x.clamp(-1.0, 1.0);
+        }
         if let Some(p) = &self.perturbation {
             p.filter_action(&mut a);
         }
@@ -135,7 +151,8 @@ impl Env for CheetahVel {
         let reward = -track_err - ctrl;
 
         self.t += 1;
-        (self.observation(), reward, self.t >= HORIZON)
+        self.observation_into(obs_out);
+        (reward, self.t >= HORIZON)
     }
 
     fn set_perturbation(&mut self, p: Option<Perturbation>) {

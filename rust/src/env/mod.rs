@@ -35,8 +35,24 @@ pub trait Env: Send {
     /// Reset to the start state for task parameter `task`, seeded
     /// deterministically. Returns the initial observation.
     fn reset(&mut self, task: &TaskParam, rng: &mut Pcg64) -> Vec<f32>;
+    /// Advance one control tick, writing the next observation into the
+    /// caller's pooled buffer (cleared first). Returns (reward, done).
+    ///
+    /// This is the batched adaptation engine's hot path
+    /// (`coordinator/batch_adapt.rs`): once the buffer is warm the
+    /// built-in environments perform **zero heap allocations** per step
+    /// (pinned by `tests/alloc_free_serving.rs`) — except under an
+    /// `ActionRemap` perturbation, whose permutation scratch still
+    /// allocates.
+    fn step_into(&mut self, action: &[f32], obs_out: &mut Vec<f32>) -> (f32, bool);
     /// Advance one control tick. Returns (observation, reward, done).
-    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool);
+    /// Convenience wrapper over [`Env::step_into`] that allocates a
+    /// fresh observation vector (the cold path; values are identical).
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool) {
+        let mut obs = Vec::with_capacity(self.obs_dim());
+        let (reward, done) = self.step_into(action, &mut obs);
+        (obs, reward, done)
+    }
     /// Apply/clear a perturbation mid-episode (leg failure etc.).
     fn set_perturbation(&mut self, p: Option<Perturbation>);
     /// Episode length used by the paper-style evaluation.
@@ -92,6 +108,35 @@ mod tests {
             assert!(r.is_finite(), "{name} reward finite");
             assert!(!done, "{name} done on first step");
             assert!(env.horizon() > 10);
+        }
+    }
+
+    #[test]
+    fn step_into_matches_step_bitwise() {
+        // The pooled-buffer step is the batched engine's hot path; it
+        // must be value-identical to the allocating wrapper, with and
+        // without a perturbation installed.
+        for name in ["ant-dir", "cheetah-vel", "reacher"] {
+            let mut a = make_env(name).unwrap();
+            let mut b = make_env(name).unwrap();
+            let task = train_grid(family_of(name).unwrap())[0].clone();
+            let mut r1 = Pcg64::new(9, 0);
+            let mut r2 = Pcg64::new(9, 0);
+            a.reset(&task, &mut r1);
+            b.reset(&task, &mut r2);
+            a.set_perturbation(Some(Perturbation::leg_failure(vec![0])));
+            b.set_perturbation(Some(Perturbation::leg_failure(vec![0])));
+            let mut obs = Vec::new();
+            for t in 0..25 {
+                let action: Vec<f32> = (0..a.act_dim())
+                    .map(|k| (((t + k) % 5) as f32) * 0.3 - 0.6)
+                    .collect();
+                let (o, r, d) = a.step(&action);
+                let (r_into, d_into) = b.step_into(&action, &mut obs);
+                assert_eq!(o, obs, "{name} obs diverged at t={t}");
+                assert_eq!(r, r_into, "{name} reward diverged at t={t}");
+                assert_eq!(d, d_into);
+            }
         }
     }
 

@@ -7,6 +7,7 @@
 //! until cleared. This is the stressor the online plasticity rule must
 //! compensate for in EXP-E2E.
 
+/// What a perturbation does to the plant (the failure taxonomy of §II-B).
 #[derive(Clone, Debug, PartialEq)]
 pub enum PerturbationKind {
     /// Actuator(s) produce zero torque — "leg failure".
@@ -21,13 +22,20 @@ pub enum PerturbationKind {
     SensorBias { bias: f32 },
 }
 
+/// A labelled mid-episode stressor, applied by the coordinator at a
+/// chosen timestep and filtered through by the environment until
+/// cleared.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Perturbation {
+    /// The concrete failure mode.
     pub kind: PerturbationKind,
+    /// Short stable label for CSV output and logs.
     pub label: &'static str,
 }
 
 impl Perturbation {
+    /// Zero the torque of the listed actuators ("simulated leg failure",
+    /// the paper's canonical recovery scenario).
     pub fn leg_failure(indices: Vec<usize>) -> Self {
         Perturbation {
             kind: PerturbationKind::ActuatorFailure { indices },
@@ -35,6 +43,7 @@ impl Perturbation {
         }
     }
 
+    /// Scale every actuator output by `factor` (weakness / gain error).
     pub fn weak_motors(factor: f32) -> Self {
         Perturbation {
             kind: PerturbationKind::ActuatorGain { factor },
@@ -42,6 +51,7 @@ impl Perturbation {
         }
     }
 
+    /// Constant world-frame external force (wind / payload shift).
     pub fn wind(fx: f32, fy: f32) -> Self {
         Perturbation {
             kind: PerturbationKind::ExternalForce { fx, fy },
@@ -49,6 +59,8 @@ impl Perturbation {
         }
     }
 
+    /// Permute the action channels (cable swap / morphology change):
+    /// output `i` is driven by commanded channel `map[i]`.
     pub fn remap(map: Vec<usize>) -> Self {
         Perturbation {
             kind: PerturbationKind::ActionRemap { map },
@@ -56,6 +68,7 @@ impl Perturbation {
         }
     }
 
+    /// Add a constant bias to every observation component.
     pub fn sensor_bias(bias: f32) -> Self {
         Perturbation {
             kind: PerturbationKind::SensorBias { bias },
@@ -63,7 +76,9 @@ impl Perturbation {
         }
     }
 
-    /// Transform a raw action vector in place.
+    /// Transform a raw action vector in place. Allocation-free except
+    /// for [`PerturbationKind::ActionRemap`], whose permutation scratch
+    /// copies the input (noted in [`crate::env::Env::step_into`]).
     pub fn filter_action(&self, action: &mut [f32]) {
         match &self.kind {
             PerturbationKind::ActuatorFailure { indices } => {

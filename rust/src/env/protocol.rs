@@ -10,10 +10,14 @@
 
 use crate::util::rng::Pcg64;
 
+/// The parametric task family an environment generalizes over (§IV-A).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TaskFamily {
+    /// Ant: commanded locomotion direction (angle in radians).
     Direction,
+    /// Halfcheetah: commanded forward velocity (m/s).
     Velocity,
+    /// Reacher: goal position in the reachable disc.
     Position,
 }
 

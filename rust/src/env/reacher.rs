@@ -27,6 +27,8 @@ const CTRL_COST: f32 = 0.02;
 const BONUS_RADIUS: f32 = 0.05;
 const HORIZON: usize = 150;
 
+/// 2-link planar arm reaching to random goal positions (see the module
+/// docs for the dynamics model).
 pub struct Reacher {
     q: [f32; 2],
     dq: [f32; 2],
@@ -36,6 +38,7 @@ pub struct Reacher {
 }
 
 impl Reacher {
+    /// Arm at the straight home pose with a default goal on the +x axis.
     pub fn new() -> Self {
         Reacher {
             q: [0.0; 2],
@@ -46,20 +49,26 @@ impl Reacher {
         }
     }
 
+    /// World-frame position of the arm's tip (forward kinematics).
     pub fn tip(&self) -> (f32, f32) {
         let x = L1 * self.q[0].cos() + L2 * (self.q[0] + self.q[1]).cos();
         let y = L1 * self.q[0].sin() + L2 * (self.q[0] + self.q[1]).sin();
         (x, y)
     }
 
+    /// Euclidean distance from the tip to the commanded goal.
     pub fn distance_to_goal(&self) -> f32 {
         let (tx, ty) = self.tip();
         ((tx - self.goal.0).powi(2) + (ty - self.goal.1).powi(2)).sqrt()
     }
 
-    fn observation(&self) -> Vec<f32> {
+    /// Write the current observation into `out` (cleared first) — the
+    /// allocation-free primitive both [`Env::step_into`] and the
+    /// allocating wrappers share, so their values are identical.
+    fn observation_into(&self, out: &mut Vec<f32>) {
         let (tx, ty) = self.tip();
-        let mut obs = vec![
+        out.clear();
+        out.extend_from_slice(&[
             self.q[0].cos(),
             self.q[0].sin(),
             self.q[1].cos(),
@@ -70,10 +79,15 @@ impl Reacher {
             self.goal.1,
             self.goal.0 - tx,
             self.goal.1 - ty,
-        ];
+        ]);
         if let Some(p) = &self.perturbation {
-            p.filter_obs(&mut obs);
+            p.filter_obs(out);
         }
+    }
+
+    fn observation(&self) -> Vec<f32> {
+        let mut obs = Vec::with_capacity(10);
+        self.observation_into(&mut obs);
         obs
     }
 }
@@ -113,13 +127,13 @@ impl Env for Reacher {
         self.observation()
     }
 
-    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32, bool) {
+    fn step_into(&mut self, action: &[f32], obs_out: &mut Vec<f32>) -> (f32, bool) {
         assert_eq!(action.len(), 2);
         let mut a = [action[0].clamp(-1.0, 1.0), action[1].clamp(-1.0, 1.0)];
         if let Some(p) = &self.perturbation {
-            let mut v = a.to_vec();
-            p.filter_action(&mut v);
-            a = [v[0], v[1]];
+            // Filter the stack buffer in place — no per-step heap
+            // allocation (the old path round-tripped through a Vec).
+            p.filter_action(&mut a);
         }
 
         // Coupled double-integrator joint dynamics with damping.
@@ -153,7 +167,8 @@ impl Env for Reacher {
         let reward = -dist - ctrl + bonus;
 
         self.t += 1;
-        (self.observation(), reward, self.t >= HORIZON)
+        self.observation_into(obs_out);
+        (reward, self.t >= HORIZON)
     }
 
     fn set_perturbation(&mut self, p: Option<Perturbation>) {

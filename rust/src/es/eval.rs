@@ -76,7 +76,7 @@ impl Harness {
         let net = match spec.kind {
             GenomeKind::PlasticityRule => {
                 let rule = NetworkRule::from_flat(&cfg, genome);
-                SnnNetwork::new(cfg, Mode::Plastic(rule))
+                SnnNetwork::new(cfg, Mode::Plastic(rule.into()))
             }
             GenomeKind::Weights => {
                 let mut n = SnnNetwork::new(cfg, Mode::Fixed);

@@ -417,7 +417,7 @@ pub fn golden_twin(cfg: &SnnConfig, l1: &RuleParams, l2: &RuleParams) -> SnnNetw
         l1: l1.clone(),
         l2: l2.clone(),
     };
-    SnnNetwork::new(cfg.clone(), Mode::Plastic(rule))
+    SnnNetwork::new(cfg.clone(), Mode::Plastic(rule.into()))
 }
 
 #[cfg(test)]

@@ -22,13 +22,13 @@
 // serving surface) are fully documented.
 #![warn(missing_docs)]
 
-// Documentation debt: the serving surface (snn, backend, coordinator)
-// and the whole util foundation are fully documented; the modules below
-// still opt out and are tracked as an open item in ROADMAP.md.
+// Documentation debt: the serving surface (snn, backend, coordinator),
+// the environments (env) and the whole util foundation are fully
+// documented; the modules below still opt out and are tracked as an
+// open item in ROADMAP.md.
 pub mod util;
 
 pub mod snn;
-#[allow(missing_docs)]
 pub mod env;
 #[allow(missing_docs)]
 pub mod es;

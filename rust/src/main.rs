@@ -12,9 +12,13 @@ use firefly_p::backend::{
     BackendKind, FpgaBackend, NativeBackend, ReplicatedBackend, SnnBackend, XlaBackend,
 };
 use firefly_p::coordinator::adapt_loop::{run_adaptation, AdaptConfig};
+use firefly_p::coordinator::batch_adapt::{
+    parse_schedule, run_batch_adaptation, scenarios_for_grid, BatchAdaptConfig, GridSummary,
+};
 use firefly_p::coordinator::offline::{genome_io, train_rule, TrainConfig};
 use firefly_p::coordinator::server::{ControlServer, ServerConfig};
-use firefly_p::env::{family_of, make_env, train_grid, Perturbation};
+use firefly_p::coordinator::Metrics;
+use firefly_p::env::{eval_grid, family_of, make_env, train_grid, Perturbation};
 use firefly_p::es::eval::GenomeKind;
 use firefly_p::fpga::power::{Activity, PowerModel};
 use firefly_p::fpga::resources::{NetGeometry, ResourceReport};
@@ -45,7 +49,7 @@ fn parser() -> Parser {
     )
     .command(
         "adapt",
-        "Phase 2: online adaptation episode with optional perturbation",
+        "Phase 2: online adaptation over the scenario grid (batched engine)",
         vec![
             opt("env", "environment", "ant-dir"),
             opt("genome", "genome file from train-rule", "results/rule.bin"),
@@ -53,6 +57,22 @@ fn parser() -> Parser {
             opt("perturb", "e.g. leg:0,1 | gain:0.3 | wind:1,-0.5", ""),
             opt("perturb-at", "timestep to inject the perturbation", "100"),
             opt("task", "task index in the training grid", "0"),
+            opt(
+                "batch",
+                "concurrent sessions per engine run (native backend batches them)",
+                "1",
+            ),
+            opt(
+                "grid",
+                "scenario fan-out: task (one --task) | train (8 tasks) | eval (72 novel tasks)",
+                "task",
+            ),
+            opt(
+                "perturb-schedule",
+                "per-session ';'-separated spec@t entries assigned round-robin, \
+                 e.g. leg:0@80;none;gain:0.5@100 (overrides --perturb)",
+                "",
+            ),
         ],
     )
     .command(
@@ -221,13 +241,33 @@ fn load_backend(
 
 fn cmd_adapt(args: &Args, seed: u64) -> i32 {
     let env = args.get_or("env", "ant-dir");
-    // Adaptation episodes are single-session: no step sharding.
-    let mut backend = match load_backend(args, &env, 1) {
-        Ok(b) => b,
-        Err(e) => {
-            eprintln!("{e}");
-            return 1;
+    let batch = args.get_usize("batch", 1).max(1);
+    let grid = args.get_or("grid", "task");
+    // Adaptation episodes shard by scenario, not by step: one thread.
+    // The native backend hosts the whole scenario batch in one SoA
+    // engine; single-session backends (xla, fpga) are replicated — one
+    // instance per concurrent scenario (correct fallback, no batching).
+    let kind = BackendKind::parse(&args.get_or("backend", "native"));
+    let mut backend: Box<dyn SnnBackend> = if kind == Some(BackendKind::Native) || batch == 1 {
+        match load_backend(args, &env, 1) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
         }
+    } else {
+        let mut instances = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            match load_backend(args, &env, 1) {
+                Ok(b) => instances.push(b),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            }
+        }
+        Box::new(ReplicatedBackend::from_instances(instances))
     };
     let perturb_spec = args.get_or("perturb", "");
     let perturbation = if perturb_spec.is_empty() {
@@ -242,23 +282,101 @@ fn cmd_adapt(args: &Args, seed: u64) -> i32 {
         }
     };
     let family = family_of(&env).unwrap();
-    let tasks = train_grid(family);
-    let task = tasks[args.get_usize("task", 0).min(tasks.len() - 1)].clone();
-    let cfg = AdaptConfig {
-        env_name: env.clone(),
-        perturbation,
-        perturb_at: args.get_usize("perturb-at", 100),
-        seed,
-        window: 20,
+    let perturb_at = args.get_usize("perturb-at", 100);
+    let schedule_spec = args.get_or("perturb-schedule", "");
+
+    // Single-episode path (the historical CLI shape). A non-empty
+    // --perturb-schedule always routes through the batched engine so
+    // the schedule is honored even at B = 1.
+    if batch == 1 && grid == "task" && schedule_spec.is_empty() {
+        let tasks = train_grid(family);
+        let task = tasks[args.get_usize("task", 0).min(tasks.len() - 1)].clone();
+        let cfg = AdaptConfig {
+            env_name: env.clone(),
+            perturbation,
+            perturb_at,
+            seed,
+            window: 20,
+        };
+        let log = run_adaptation(backend.as_mut(), &cfg, &task);
+        println!(
+            "env={env} backend={} task={} total_reward={:.2} recovery_ratio={:.3}{}",
+            backend.name(),
+            task.id,
+            log.total_reward,
+            log.recovery_ratio(),
+            match log.time_to_recover {
+                Some(t) => format!(" time_to_recover={t}"),
+                None => String::new(),
+            }
+        );
+        return 0;
+    }
+
+    // Batched scenario-grid path: fan the task grid out over engine
+    // runs of up to `batch` concurrent sessions each.
+    let tasks = match grid.as_str() {
+        "train" => train_grid(family),
+        "eval" => eval_grid(family),
+        "task" => {
+            let all = train_grid(family);
+            let t = all[args.get_usize("task", 0).min(all.len() - 1)].clone();
+            vec![t; batch]
+        }
+        other => {
+            eprintln!("--grid must be task | train | eval (got {other:?})");
+            return 2;
+        }
     };
-    let log = run_adaptation(backend.as_mut(), &cfg, &task);
+    let schedule = match parse_schedule(&schedule_spec) {
+        Ok(s) if s.is_empty() => match perturbation {
+            Some(p) => vec![(Some(p), perturb_at)],
+            None => Vec::new(),
+        },
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bad --perturb-schedule: {e}");
+            return 2;
+        }
+    };
+    let mut scenarios = scenarios_for_grid(&tasks, &schedule, seed);
+    if grid == "task" {
+        // Replicated single task: decorrelate the sessions by seed so
+        // the batch explores B independent episodes.
+        for (s, sc) in scenarios.iter_mut().enumerate() {
+            sc.seed = seed.wrapping_add(s as u64);
+        }
+    }
+    let cfg = BatchAdaptConfig {
+        env_name: env.clone(),
+        window: 20,
+        max_steps: None,
+    };
+    let mut logs = Vec::with_capacity(scenarios.len());
+    let t0 = std::time::Instant::now();
+    for chunk in scenarios.chunks(batch) {
+        logs.extend(run_batch_adaptation(backend.as_mut(), &cfg, chunk));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let total_steps: usize = logs.iter().map(|l| l.rewards.len()).sum();
+
+    let mut metrics = Metrics::new();
+    GridSummary::observe_logs(&mut metrics, &logs);
+    let summary = GridSummary::from_logs(&logs);
     println!(
-        "env={env} backend={} task={} total_reward={:.2} recovery_ratio={:.3}",
+        "env={env} backend={} grid={grid} sessions={} batch={batch} \
+         steps_per_s={:.0} mean_reward={:.2} mean_recovery={:.3} \
+         recovered={}/{} time_to_recover_p50={:.1}",
         backend.name(),
-        task.id,
-        log.total_reward,
-        log.recovery_ratio()
+        summary.sessions,
+        total_steps as f64 / elapsed.max(1e-9),
+        summary.mean_total_reward,
+        summary.mean_recovery_ratio,
+        summary.recovered,
+        summary.perturbed,
+        summary.time_to_recover_p50,
     );
+    print!("{}", metrics.report());
     0
 }
 

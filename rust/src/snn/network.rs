@@ -21,6 +21,8 @@
 //! Weights start at **zero** in plastic mode (§II-B Phase 2): all task
 //! competence emerges online from the learned rule.
 
+use std::sync::Arc;
+
 use super::lif::LifLayer;
 use super::numeric::Scalar;
 use super::plasticity::{apply_update_batch, PlasticityConfig, RuleParams};
@@ -145,12 +147,33 @@ impl NetworkRule {
 }
 
 /// How synaptic weights evolve during an episode.
+///
+/// The plastic payload is an [`Arc`] so the frozen rule θ — by far the
+/// largest parameter array (4 f32 per synapse) — is stored **once per
+/// process** and shared by every clone: the sharded stepper's per-core
+/// networks ([`crate::snn::ShardedNetwork`]) all point at the same
+/// allocation instead of carrying per-shard copies (`Mode::clone` is an
+/// Arc refcount bump, ~free). `NetworkRule: From` into
+/// `Arc<NetworkRule>` is provided by std, so construction sites write
+/// `Mode::Plastic(rule.into())`.
 #[derive(Clone, Debug)]
 pub enum Mode {
-    /// Phase-2 FireFly-P: zero-initialized weights + online rule updates.
-    Plastic(NetworkRule),
+    /// Phase-2 FireFly-P: zero-initialized weights + online rule updates
+    /// under a process-wide shared frozen rule θ.
+    Plastic(Arc<NetworkRule>),
     /// Baseline: fixed, directly trained weights; no online updates.
     Fixed,
+}
+
+impl Mode {
+    /// The shared frozen rule, if this mode is plastic (diagnostics and
+    /// the shard θ-sharing tests).
+    pub fn rule(&self) -> Option<&Arc<NetworkRule>> {
+        match self {
+            Mode::Plastic(rule) => Some(rule),
+            Mode::Fixed => None,
+        }
+    }
 }
 
 /// Full mutable network state, generic over the arithmetic domain.
@@ -479,11 +502,21 @@ impl<S: Scalar> SnnNetwork<S> {
 
         // --- Plasticity (per-session weights, shared θ, word mask) ----
         if let Mode::Plastic(rule) = &self.mode {
+            // L1's pre-traces are the lazy input traces: their hot masks
+            // (exact after the materialize_hot above) prefilter the gate
+            // so fully-cold rows skip in one AND per word. L2's
+            // pre-traces (hidden) are eager — no mask, value scan only.
+            let hot1 = if self.trace_in.is_lazy() {
+                Some(self.trace_in.hot_rows())
+            } else {
+                None
+            };
             let v1 = apply_update_batch(
                 &rule.l1,
                 &self.cfg.plasticity,
                 b,
                 &self.active_words,
+                hot1,
                 &mut self.w1,
                 &self.trace_in.values,
                 &self.trace_hidden.values,
@@ -493,6 +526,7 @@ impl<S: Scalar> SnnNetwork<S> {
                 &self.cfg.plasticity,
                 b,
                 &self.active_words,
+                None,
                 &mut self.w2,
                 &self.trace_hidden.values,
                 &self.trace_out.values,
@@ -659,7 +693,7 @@ mod tests {
         for s in 0..cfg.l2_synapses() {
             rule.l2.theta[s * 4 + 1] = 0.5;
         }
-        let mut net = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule));
+        let mut net = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.into()));
         let spikes = vec![true; cfg.n_in];
         let mut hidden_fired = false;
         let mut out_fired = false;
@@ -681,7 +715,7 @@ mod tests {
             rule.l1.theta[s * 4 + 1] = 1.0; // strong growth
             rule.l1.theta[s * 4 + 3] = -0.2; // regularization
         }
-        let mut net = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule));
+        let mut net = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.into()));
         let spikes = vec![true; cfg.n_in];
         for _ in 0..500 {
             net.step_spikes(&spikes);
@@ -703,7 +737,7 @@ mod tests {
         assert!(fixed.weight_mean_abs() > 0.0, "fixed weights must survive reset");
 
         let rule = NetworkRule::zeros(&cfg);
-        let mut plastic = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule));
+        let mut plastic = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.into()));
         plastic.w1[0] = 1.0;
         plastic.reset();
         assert_eq!(plastic.w1[0], 0.0);
@@ -760,8 +794,8 @@ mod tests {
         rng.fill_normal_f32(&mut flat, 0.2);
         let rule = NetworkRule::from_flat(&cfg, &flat);
 
-        let mut a = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone()));
-        let mut b = SnnNetwork::<F16>::new(cfg.clone(), Mode::Plastic(rule));
+        let mut a = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()));
+        let mut b = SnnNetwork::<F16>::new(cfg.clone(), Mode::Plastic(rule.into()));
         let mut input_rng = Pcg64::new(9, 0);
         let mut spike_agreement = 0usize;
         let mut total = 0usize;
@@ -792,9 +826,9 @@ mod tests {
         let rule = NetworkRule::from_flat(&cfg, &flat);
 
         let mut batched =
-            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone()), batch);
+            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone().into()), batch);
         let mut singles: Vec<SnnNetwork<f32>> = (0..batch)
-            .map(|_| SnnNetwork::new(cfg.clone(), Mode::Plastic(rule.clone())))
+            .map(|_| SnnNetwork::new(cfg.clone(), Mode::Plastic(rule.clone().into())))
             .collect();
 
         let active = vec![true; batch];
@@ -843,7 +877,8 @@ mod tests {
         let mut flat = vec![0.0f32; cfg.n_rule_params()];
         rng.fill_normal_f32(&mut flat, 0.3);
         let rule = NetworkRule::from_flat(&cfg, &flat);
-        let mut net = SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule), batch);
+        let mut net =
+            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.into()), batch);
 
         let mut inmat = vec![true; cfg.n_in * batch];
         // session 1 inactive: even with garbage input bits set, its state
@@ -903,8 +938,8 @@ mod tests {
         let mut flat = vec![0.0f32; cfg.n_rule_params()];
         rng.fill_normal_f32(&mut flat, 0.3);
         let rule = NetworkRule::from_flat(&cfg, &flat);
-        let mut a = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone()));
-        let mut b = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule));
+        let mut a = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()));
+        let mut b = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.into()));
         for t in 0..20 {
             let currents: Vec<f32> = (0..cfg.n_in)
                 .map(|j| ((j + t) % 4) as f32 * 0.3)
@@ -927,8 +962,8 @@ mod tests {
 
         let batch = 2;
         let mut net =
-            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone()), batch);
-        let mut single = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule));
+            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone().into()), batch);
+        let mut single = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.into()));
         let active = vec![true; batch];
         let mut input_rng = Pcg64::new(27, 0);
         for _ in 0..15 {
@@ -976,8 +1011,8 @@ mod tests {
         let mut flat = vec![0.0f32; cfg.n_rule_params()];
         rng.fill_normal_f32(&mut flat, 0.25);
         let rule = NetworkRule::from_flat(&cfg, &flat);
-        let mut packed = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone()));
-        let mut oracle = ReferenceNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule));
+        let mut packed = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()));
+        let mut oracle = ReferenceNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.into()));
         let mut input_rng = Pcg64::new(30, 0);
         for _ in 0..50 {
             let spikes: Vec<bool> = (0..cfg.n_in).map(|_| input_rng.bernoulli(0.4)).collect();
@@ -1005,11 +1040,11 @@ mod tests {
         rng.fill_normal_f32(&mut flat, 0.3);
         let rule = NetworkRule::from_flat(&cfg, &flat);
         let mut packed =
-            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone()), batch);
+            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone().into()), batch);
         assert!(packed.trace_in.is_lazy(), "gated network must use lazy input traces");
         let mut dense = crate::snn::reference::DenseBatchedNetwork::<f32>::new(
             cfg.clone(),
-            Mode::Plastic(rule),
+            Mode::Plastic(rule.into()),
             batch,
         );
         let mut input_rng = Pcg64::new(91, 0);
@@ -1044,7 +1079,7 @@ mod tests {
         // hot loop touches).
         let cfg = SnnConfig::tiny();
         let rule = NetworkRule::zeros(&cfg);
-        let mut net = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule));
+        let mut net = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.into()));
         let spikes = vec![true; cfg.n_in];
         let w1_cap = net.w1.capacity();
         for _ in 0..100 {

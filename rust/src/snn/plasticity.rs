@@ -230,13 +230,27 @@ pub fn apply_update<S: Scalar>(
 /// for the tolerance contract), so the sweep cost scales with the
 /// active-presynaptic set instead of `pre × post × batch`.
 ///
+/// `hot` is an optional **row prefilter**: the lazy input traces'
+/// per-`(neuron, word)` hot-lane masks
+/// ([`crate::snn::TraceVector::hot_rows`], `pre × words_for(batch)`
+/// words). A row whose masks satisfy `hot & active == 0` in every word
+/// has *exactly zero* trace in every active lane (the lazy-trace cold
+/// invariant), so with `trace_eps > 0` the gate skips it in **one AND
+/// per word** instead of an O(batch) value scan. Rows that fail the
+/// prefilter still take the value scan, so the gate's skip decisions —
+/// and the returned visited count — are bit-identical to a value-scan-
+/// only sweep (and to the dense oracle's). Pass `None` when no hot
+/// bookkeeping exists (eager traces, or the gate is off).
+///
 /// Returns the number of presynaptic rows visited (== `params.pre`
 /// when the gate is off).
+#[allow(clippy::too_many_arguments)]
 pub fn apply_update_batch<S: Scalar>(
     params: &RuleParams,
     cfg: &PlasticityConfig,
     batch: usize,
     active_words: &[u64],
+    hot: Option<&[u64]>,
     weights: &mut [S],
     pre_trace: &[S],
     post_trace: &[S],
@@ -245,6 +259,14 @@ pub fn apply_update_batch<S: Scalar>(
     assert_eq!(pre_trace.len(), params.pre * batch);
     assert_eq!(post_trace.len(), params.post * batch);
     assert_eq!(active_words.len(), words_for(batch), "mask/batch mismatch");
+    let wpr = active_words.len();
+    if let Some(h) = hot {
+        assert_eq!(h.len(), params.pre * wpr, "hot/rows mismatch");
+    }
+    // The prefilter's soundness needs ε > 0: a cold lane is exactly zero,
+    // and only then is "zero" guaranteed below the gate threshold. At
+    // ε = 0 the gate is a documented no-op, so the prefilter must be too.
+    let prefilter = cfg.presyn_gate && cfg.trace_eps > 0.0;
     let eta = S::from_f32(cfg.eta);
     let lo = S::from_f32(-cfg.w_clip);
     let hi = S::from_f32(cfg.w_clip);
@@ -261,6 +283,17 @@ pub fn apply_update_batch<S: Scalar>(
     let mut visited = 0usize;
     for j in 0..params.pre {
         let pre_row = &pre_trace[j * batch..(j + 1) * batch];
+        // Hot-mask prefilter (ROADMAP follow-up, landed): every active
+        // lane cold ⇒ exactly zero ⇒ sub-ε — skip without touching the
+        // trace values at all.
+        if prefilter {
+            if let Some(h) = hot {
+                let hrow = &h[j * wpr..(j + 1) * wpr];
+                if hrow.iter().zip(active_words).all(|(&hw, &aw)| hw & aw == 0) {
+                    continue;
+                }
+            }
+        }
         // Event-driven skip: a row whose pre-trace is sub-ε in every
         // active lane contributes no representable presynaptic drive —
         // one O(batch) scan replaces an O(post × batch) update sweep.
@@ -490,7 +523,7 @@ mod tests {
         let mut w_b = vec![0.0f32; 5 * 4 * batch];
         let mask = crate::snn::spike::mask_words(&[true, true, false]);
         for _ in 0..20 {
-            apply_update_batch(&p, &cfg, batch, &mask, &mut w_b, &pre_b, &post_b);
+            apply_update_batch(&p, &cfg, batch, &mask, None, &mut w_b, &pre_b, &post_b);
         }
 
         for b in 0..batch {
@@ -540,7 +573,7 @@ mod tests {
         let mask = crate::snn::spike::full_mask(batch);
         let mut w_gated = vec![0.0f32; pre * post * batch];
         let visited = apply_update_batch(
-            &p, &cfg_gated, batch, &mask, &mut w_gated, &pre_trace, &post_trace,
+            &p, &cfg_gated, batch, &mask, None, &mut w_gated, &pre_trace, &post_trace,
         );
         assert_eq!(visited, live.len(), "gate must visit exactly the live rows");
         assert!(
@@ -550,7 +583,7 @@ mod tests {
 
         let mut w_plain = vec![0.0f32; pre * post * batch];
         let visited_plain = apply_update_batch(
-            &p, &cfg_plain, batch, &mask, &mut w_plain, &pre_trace, &post_trace,
+            &p, &cfg_plain, batch, &mask, None, &mut w_plain, &pre_trace, &post_trace,
         );
         assert_eq!(visited_plain, pre, "ungated sweep visits every row");
         // visited rows: bit-identical to the ungated path
@@ -590,14 +623,73 @@ mod tests {
 
         // session 1 masked off → row 0's only hot lane is inactive
         let only0 = crate::snn::spike::mask_words(&[true, false]);
-        let visited = apply_update_batch(&p, &cfg, batch, &only0, &mut w, &pre_trace, &post_trace);
+        let visited =
+            apply_update_batch(&p, &cfg, batch, &only0, None, &mut w, &pre_trace, &post_trace);
         assert_eq!(visited, 0, "no row has a hot active lane");
         assert!(w.iter().all(|&x| x == 0.0));
 
         // both sessions active → row 0 hot (via session 1), row 1 still sub-ε
         let both = crate::snn::spike::full_mask(batch);
-        let visited = apply_update_batch(&p, &cfg, batch, &both, &mut w, &pre_trace, &post_trace);
+        let visited =
+            apply_update_batch(&p, &cfg, batch, &both, None, &mut w, &pre_trace, &post_trace);
         assert_eq!(visited, 1);
+    }
+
+    #[test]
+    fn hot_prefilter_short_circuits_without_scanning() {
+        // Feed a *deliberately wrong* hot mask (all-cold) against traces
+        // that are well above ε: the prefilter must skip every row
+        // without ever reaching the value scan — proof that the
+        // fast path short-circuits rather than re-deriving the decision
+        // from the values. (In the real pipeline the lazy-trace cold
+        // invariant makes the mask truthful, so decisions never differ;
+        // pinned by tests/lazy_traces.rs against the dense oracle.)
+        let pre = 3;
+        let post = 2;
+        let batch = 2;
+        let p = RuleParams::random(pre, post, 0.4, &mut Pcg64::new(72, 0));
+        let cfg = PlasticityConfig {
+            presyn_gate: true,
+            ..PlasticityConfig::default()
+        };
+        let pre_trace = vec![1.0f32; pre * batch]; // every lane hot by value
+        let post_trace = vec![0.5f32; post * batch];
+        let mask = crate::snn::spike::full_mask(batch);
+        let wpr = mask.len();
+
+        let mut w = vec![0.0f32; pre * post * batch];
+        let cold = vec![0u64; pre * wpr];
+        let visited =
+            apply_update_batch(
+                &p, &cfg, batch, &mask, Some(&cold), &mut w, &pre_trace, &post_trace,
+            );
+        assert_eq!(visited, 0, "all-cold prefilter must skip every row");
+        assert!(w.iter().all(|&x| x == 0.0));
+
+        // rows flagged hot fall through to the value scan and update
+        let mut hot = vec![0u64; pre * wpr];
+        hot[wpr] = 0b11; // row 1 hot in both lanes
+        let visited =
+            apply_update_batch(&p, &cfg, batch, &mask, Some(&hot), &mut w, &pre_trace, &post_trace);
+        assert_eq!(visited, 1);
+        for i in 0..post {
+            for b in 0..batch {
+                assert_ne!(w[(post + i) * batch + b], 0.0, "hot row 1 must update");
+            }
+        }
+
+        // ε = 0 disables the gate entirely — the prefilter must not skip
+        // (the gate is a documented no-op at ε = 0).
+        let cfg0 = PlasticityConfig {
+            presyn_gate: true,
+            trace_eps: 0.0,
+            ..PlasticityConfig::default()
+        };
+        let mut w0 = vec![0.0f32; pre * post * batch];
+        let visited = apply_update_batch(
+            &p, &cfg0, batch, &mask, Some(&cold), &mut w0, &pre_trace, &post_trace,
+        );
+        assert_eq!(visited, pre, "ε = 0 must visit every row despite a cold mask");
     }
 
     #[test]

@@ -533,9 +533,9 @@ mod tests {
         let rule = NetworkRule::from_flat(&cfg, &flat);
 
         let mut dense =
-            DenseBatchedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone()), batch);
+            DenseBatchedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), batch);
         let mut refs: Vec<ReferenceNetwork<f32>> = (0..batch)
-            .map(|_| ReferenceNetwork::new(cfg.clone(), Mode::Plastic(rule.clone())))
+            .map(|_| ReferenceNetwork::new(cfg.clone(), Mode::Plastic(rule.clone().into())))
             .collect();
 
         let active = vec![true; batch];

@@ -42,12 +42,15 @@
 //!
 //! # Cost note
 //!
-//! Shards share nothing mutable; the frozen rule θ is **replicated per
-//! shard** (each shard's `Mode::Plastic` carries its own copy) — the
-//! same weights-per-core replication the FPGA line uses, trading memory
-//! for zero cross-core traffic. Each shard still amortizes its θ stream
-//! over up to 64 sessions per word. Sharing θ behind an `Arc` is a
-//! ROADMAP follow-up.
+//! Shards share nothing **mutable**; the frozen rule θ is shared
+//! read-only behind `Arc<NetworkRule>` in [`Mode::Plastic`] — growing a
+//! new shard clones the mode, which is an Arc refcount bump, so every
+//! shard's plasticity sweep streams the *same* θ allocation (one copy
+//! per process, reclaiming ~4 f32/synapse per extra shard versus the
+//! pre-Arc per-shard replication; pinned by
+//! `tests/sharded_equivalence.rs::shards_share_one_rule_theta`). Each
+//! shard still amortizes that stream over up to 64 sessions per word,
+//! and cross-core traffic stays read-only.
 
 use super::network::{Mode, SnnConfig, SnnNetwork};
 use super::numeric::Scalar;
@@ -403,9 +406,11 @@ mod tests {
         let cfg = SnnConfig::tiny();
         let rule = tiny_rule(&cfg, 50);
         let batch = 5;
-        let mut sharded = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone()), 1);
+        let mut sharded =
+            ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), 1);
         sharded.grow_batch(batch);
-        let mut plain = SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule), batch);
+        let mut plain =
+            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.into()), batch);
 
         let mut rng = Pcg64::new(51, 0);
         let active = vec![true; batch];
@@ -437,14 +442,15 @@ mod tests {
         let cfg = SnnConfig::tiny();
         let rule = tiny_rule(&cfg, 52);
         let batch = 67; // two words → two shards at T=4
-        let mut sharded = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone()), 4);
+        let mut sharded =
+            ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), 4);
         sharded.grow_batch(batch);
         assert_eq!(sharded.shard_count(), 2);
         // probe sessions in both shards
         let probes = [0usize, 63, 64, 66];
         let mut singles: Vec<SnnNetwork<f32>> = probes
             .iter()
-            .map(|_| SnnNetwork::new(cfg.clone(), Mode::Plastic(rule.clone())))
+            .map(|_| SnnNetwork::new(cfg.clone(), Mode::Plastic(rule.clone().into())))
             .collect();
 
         let mut rng = Pcg64::new(53, 0);

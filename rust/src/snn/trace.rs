@@ -26,11 +26,13 @@
 //! tracks which lanes hold a nonzero stored value: it is the lazy
 //! machinery's own bookkeeping — [`TraceVector::materialize_hot`] walks
 //! only hot lanes and retires drained ones, so fully silent rows cost
-//! nothing per tick. (The plasticity gate itself re-scans the
-//! materialized *values* rather than consuming this mask, so its
-//! skip decisions stay trivially identical to the eager dense oracle's;
-//! using `hot & active == 0` as a row prefilter for the gate is a
-//! ROADMAP follow-up.)
+//! nothing per tick. The same mask doubles as the plasticity gate's
+//! **row prefilter** ([`TraceVector::hot_rows`], consumed by
+//! [`crate::snn::plasticity::apply_update_batch`]): after
+//! materialization a cold lane is *exactly zero*, so `hot & active == 0`
+//! proves a row sub-ε in one AND per word — the value scan only runs on
+//! rows the prefilter could not dismiss, keeping the gate's skip
+//! decisions bit-identical to the eager dense oracle's.
 
 use super::numeric::Scalar;
 use super::spike::{self, grow_lanes, SpikeWords, LANES};
@@ -339,12 +341,25 @@ impl<S: Scalar> TraceVector<S> {
     /// [`TraceVector::materialize_hot`] must visit). Bits may be
     /// conservatively stale-hot until the next materialization clears
     /// drained lanes. Exposed for diagnostics and the invariant tests;
-    /// the plasticity gate scans materialized values instead (see the
-    /// module docs).
+    /// the plasticity gate consumes the whole-row view
+    /// ([`TraceVector::hot_rows`]) instead.
     #[inline]
     pub fn hot_word(&self, neuron: usize, word: usize) -> u64 {
         debug_assert!(self.lazy, "hot_word on an eager TraceVector");
         self.hot[neuron * spike::words_for(self.batch) + word]
+    }
+
+    /// Lazy mode: the full per-`(neuron, word)` hot-lane mask table
+    /// (`neurons × words_for(batch)`, row-major) — the plasticity gate's
+    /// row prefilter (see the module docs). Immediately after
+    /// [`TraceVector::materialize_hot`] the masks are exact: a clear bit
+    /// means that lane's stored value is exactly zero, so
+    /// `hot_row & active == 0` proves every active lane of the row sub-ε
+    /// without reading a single trace value.
+    #[inline]
+    pub fn hot_rows(&self) -> &[u64] {
+        debug_assert!(self.lazy, "hot_rows on an eager TraceVector");
+        &self.hot
     }
 }
 

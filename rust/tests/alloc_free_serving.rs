@@ -13,18 +13,30 @@
 //! `BufReader`/line `String` on top of this pipeline; payload buffers
 //! are the pooled slot cells exercised here.)
 //!
-//! This file holds exactly one test: the allocator counts process-wide,
-//! so no other test may run concurrently in this binary.
+//! A second test pins the same contract for the **batched adaptation
+//! engine** (ISSUE 4): a steady-state `BatchAdaptEngine::tick` —
+//! per-session encode, one batched step, decode, pooled
+//! `Env::step_into` — allocates nothing once warm.
+//!
+//! The allocator counts process-wide, so the tests serialize their
+//! armed windows through a mutex; no allocation from the other test can
+//! land inside an armed window.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use firefly_p::backend::{NativeBackend, SnnBackend};
+use firefly_p::coordinator::batch_adapt::{BatchAdaptConfig, BatchAdaptEngine, Scenario};
 use firefly_p::coordinator::server::parse_floats_into;
+use firefly_p::env::{train_grid, Perturbation, TaskFamily};
 use firefly_p::snn::encoding::{PopulationEncoder, TraceDecoder};
 use firefly_p::snn::{NetworkRule, SnnConfig};
 use firefly_p::util::rng::Pcg64;
+
+/// Serializes the armed windows of the two tests in this binary.
+static GATE: Mutex<()> = Mutex::new(());
 
 struct CountingAlloc;
 
@@ -110,6 +122,7 @@ fn serve_tick(
 
 #[test]
 fn steady_state_obs_requests_allocate_nothing() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
     // cheetah-vel-like serving geometry: 6 obs dims × 8 = 48 in, 12 out.
     let mut cfg = SnnConfig::control(48, 12);
     cfg.n_hidden = 32;
@@ -184,4 +197,71 @@ fn steady_state_obs_requests_allocate_nothing() {
         allocs, 0,
         "steady-state serving loop allocated {allocs} times over 300 ticks × {sessions} sessions"
     );
+}
+
+#[test]
+fn steady_state_batch_adapt_ticks_allocate_nothing() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // 8 concurrent cheetah-vel adaptation episodes, mixed tasks, with a
+    // perturbation injected during warmup (the injection tick clones the
+    // Perturbation — the engine's one documented cold allocation).
+    let tasks = train_grid(TaskFamily::Velocity);
+    let scenarios: Vec<Scenario> = (0..8)
+        .map(|s| Scenario {
+            task: tasks[s % tasks.len()].clone(),
+            perturbation: if s % 2 == 0 {
+                Some(Perturbation::leg_failure(vec![0]))
+            } else {
+                Some(Perturbation::weak_motors(0.5))
+            },
+            perturb_at: 10, // fires inside the warmup window
+            seed: 21 + s as u64,
+        })
+        .collect();
+
+    let mut cfg = SnnConfig::control(48, 12);
+    cfg.n_hidden = 32;
+    let mut rng = Pcg64::new(12, 0);
+    let mut genome = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut genome, 0.1);
+    let rule = NetworkRule::from_flat(&cfg, &genome);
+    let mut backend = NativeBackend::plastic(cfg, rule);
+
+    let bcfg = BatchAdaptConfig {
+        env_name: "cheetah-vel".into(),
+        window: 20,
+        max_steps: None, // env horizon (200) bounds the episode
+    };
+    let mut engine = BatchAdaptEngine::new(&mut backend, bcfg, &scenarios);
+
+    // Warmup: size the pooled buffers, inject the perturbations, settle.
+    for _ in 0..50 {
+        assert!(engine.tick(&mut backend), "episode ended during warmup");
+    }
+
+    // Armed window: steady-state adaptation ticks, zero allocations.
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for _ in 0..140 {
+        assert!(engine.tick(&mut backend), "episode ended during armed window");
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        allocs, 0,
+        "steady-state batched adaptation tick allocated {allocs} times over \
+         140 ticks × 8 sessions"
+    );
+
+    // The run is still a real closed-loop episode: finish it and check
+    // the logs are sane.
+    while engine.tick(&mut backend) {}
+    let logs = engine.finish();
+    assert_eq!(logs.len(), 8);
+    for log in &logs {
+        assert_eq!(log.rewards.len(), 200);
+        assert_eq!(log.perturb_at, Some(10));
+        assert!(log.total_reward.is_finite());
+    }
 }

@@ -1,0 +1,267 @@
+//! Conformance suite for the batched closed-loop adaptation engine
+//! (ISSUE 4 headline tests).
+//!
+//! **Contract:** a B-session batched adaptation run is *bit-identical*
+//! — per-step rewards, output traces, and the online θ-driven weight
+//! updates (and therefore every spike in between) — to B independent
+//! single-session runs of the same scenarios, across all three env
+//! families, batch sizes straddling the 64-lane word boundary, f32 and
+//! FP16 arithmetic, with and without mid-episode perturbations.
+//!
+//! Also pinned here: determinism (same seed ⇒ the same golden trace
+//! twice) and grid coverage (the eval-grid fan-out visits every
+//! `TaskParam` exactly once, at every chunking batch size).
+
+use firefly_p::backend::{SnnBackend, TypedNativeBackend};
+use firefly_p::coordinator::adapt_loop::{run_adaptation, AdaptConfig};
+use firefly_p::coordinator::batch_adapt::{
+    run_batch_adaptation, scenarios_for_grid, BatchAdaptConfig, Scenario,
+};
+use firefly_p::env::{eval_grid, family_of, make_env, train_grid, Perturbation, TaskFamily};
+use firefly_p::es::eval::NEURONS_PER_DIM;
+use firefly_p::snn::{NetworkRule, Scalar, SnnConfig};
+use firefly_p::util::fp16::F16;
+use firefly_p::util::rng::Pcg64;
+
+const ENVS: [&str; 3] = ["ant-dir", "cheetah-vel", "reacher"];
+
+fn control_cfg(env: &str, hidden: usize) -> SnnConfig {
+    let e = make_env(env).unwrap();
+    let mut cfg = SnnConfig::control(e.obs_dim() * NEURONS_PER_DIM, 2 * e.act_dim());
+    cfg.n_hidden = hidden;
+    cfg
+}
+
+fn rule_for(cfg: &SnnConfig, seed: u64) -> NetworkRule {
+    let mut rng = Pcg64::new(seed, 0);
+    let mut flat = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut flat, 0.05);
+    NetworkRule::from_flat(cfg, &flat)
+}
+
+/// Cycle the failure taxonomy (leg failure, weak motors, wind, clean)
+/// with varying injection times, so one batch mixes perturbation kinds
+/// and schedules.
+fn perturbation_menu(k: usize) -> Option<(Perturbation, usize)> {
+    match k % 4 {
+        0 => Some((Perturbation::leg_failure(vec![0]), 10 + 5 * (k % 3))),
+        1 => Some((Perturbation::weak_motors(0.4), 15)),
+        2 => Some((Perturbation::wind(0.8, -0.3), 20)),
+        _ => None,
+    }
+}
+
+/// B mixed scenarios: tasks alternate between the training grid and the
+/// novel eval grid, perturbations cycle the taxonomy (when enabled),
+/// seeds differ per session.
+fn scenarios(env: &str, b: usize, perturbed: bool, seed: u64) -> Vec<Scenario> {
+    let family = family_of(env).unwrap();
+    let train = train_grid(family);
+    let eval = eval_grid(family);
+    (0..b)
+        .map(|s| {
+            let task = if s % 2 == 0 {
+                train[s % train.len()].clone()
+            } else {
+                eval[s % eval.len()].clone()
+            };
+            let (perturbation, perturb_at) = match perturbation_menu(s) {
+                Some((p, at)) if perturbed => (Some(p), at),
+                _ => (None, 0),
+            };
+            Scenario {
+                task,
+                perturbation,
+                perturb_at,
+                seed: seed ^ ((s as u64) << 8),
+            }
+        })
+        .collect()
+}
+
+/// The core conformance check: one batched engine run vs B sequential
+/// one-scenario engine runs, bit-compared on rewards, recovery metrics,
+/// output traces and the per-session plastic weight lanes.
+fn assert_batched_matches_singles<S: Scalar>(
+    env: &str,
+    b: usize,
+    perturbed: bool,
+    max_steps: usize,
+    seed: u64,
+) {
+    let cfg = control_cfg(env, 8);
+    let rule = rule_for(&cfg, seed);
+    let scen = scenarios(env, b, perturbed, seed);
+    let bcfg = BatchAdaptConfig {
+        env_name: env.into(),
+        window: 10,
+        max_steps: Some(max_steps),
+    };
+
+    let mut batched = TypedNativeBackend::<S>::plastic(cfg.clone(), rule.clone());
+    let logs = run_batch_adaptation(&mut batched, &bcfg, &scen);
+    assert_eq!(logs.len(), b);
+
+    for (s, spec) in scen.iter().enumerate() {
+        let mut single = TypedNativeBackend::<S>::plastic(cfg.clone(), rule.clone());
+        let sl = run_batch_adaptation(&mut single, &bcfg, std::slice::from_ref(spec))
+            .pop()
+            .unwrap();
+        assert_eq!(
+            logs[s].rewards, sl.rewards,
+            "{env} B={b} perturbed={perturbed} session {s}: rewards diverged"
+        );
+        assert_eq!(logs[s].perturb_at, sl.perturb_at);
+        assert_eq!(logs[s].time_to_recover, sl.time_to_recover);
+        assert_eq!(
+            batched.output_traces_session(s),
+            single.output_traces_session(0),
+            "{env} B={b} session {s}: output traces diverged"
+        );
+        // θ-driven online weight updates, bit-for-bit per session lane
+        // (stripes = 1 ⇒ shard 0 holds the whole batch SoA).
+        let bn = batched.network();
+        let sn = single.network();
+        let bb = bn.batch;
+        for syn in 0..cfg.l1_synapses() {
+            assert_eq!(
+                bn.w1[syn * bb + s].to_f32().to_bits(),
+                sn.w1[syn].to_f32().to_bits(),
+                "{env} B={b} session {s}: w1 synapse {syn} diverged"
+            );
+        }
+        for syn in 0..cfg.l2_synapses() {
+            assert_eq!(
+                bn.w2[syn * bb + s].to_f32().to_bits(),
+                sn.w2[syn].to_f32().to_bits(),
+                "{env} B={b} session {s}: w2 synapse {syn} diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_matches_singles_f32_small_batches() {
+    for env in ENVS {
+        for b in [1usize, 7] {
+            assert_batched_matches_singles::<f32>(env, b, true, 40, 0xA1);
+            assert_batched_matches_singles::<f32>(env, b, false, 40, 0xA2);
+        }
+    }
+}
+
+#[test]
+fn batched_matches_singles_f32_word_boundary() {
+    // B = 64 (exactly one packed word) and B = 65 (straddles into a
+    // second word) — the acceptance batch sizes, one env family each
+    // plus a clean-run variant.
+    assert_batched_matches_singles::<f32>("cheetah-vel", 64, true, 25, 0xB1);
+    assert_batched_matches_singles::<f32>("ant-dir", 65, true, 20, 0xB2);
+    assert_batched_matches_singles::<f32>("reacher", 64, false, 20, 0xB3);
+}
+
+#[test]
+fn batched_matches_singles_f16_small_batches() {
+    for env in ENVS {
+        assert_batched_matches_singles::<F16>(env, 7, true, 30, 0xC1);
+    }
+    assert_batched_matches_singles::<F16>("cheetah-vel", 7, false, 30, 0xC2);
+}
+
+#[test]
+fn batched_matches_singles_f16_word_boundary() {
+    assert_batched_matches_singles::<F16>("cheetah-vel", 64, true, 20, 0xD1);
+    assert_batched_matches_singles::<F16>("reacher", 65, false, 15, 0xD2);
+}
+
+#[test]
+fn batched_matches_literal_adapt_loop_full_horizon() {
+    // The ISSUE-stated form of the contract: batched vs B independent
+    // `run_adaptation` (adapt_loop) runs, over the full env horizon.
+    let env = "cheetah-vel";
+    let b = 7;
+    let cfg = control_cfg(env, 8);
+    let rule = rule_for(&cfg, 0xE1);
+    let scen = scenarios(env, b, true, 0xE1);
+    let bcfg = BatchAdaptConfig {
+        env_name: env.into(),
+        window: 20,
+        max_steps: None,
+    };
+    let mut batched = TypedNativeBackend::<f32>::plastic(cfg.clone(), rule.clone());
+    let logs = run_batch_adaptation(&mut batched, &bcfg, &scen);
+
+    for (s, spec) in scen.iter().enumerate() {
+        let mut single = TypedNativeBackend::<f32>::plastic(cfg.clone(), rule.clone());
+        let acfg = AdaptConfig {
+            env_name: env.into(),
+            perturbation: spec.perturbation.clone(),
+            perturb_at: spec.perturb_at,
+            seed: spec.seed,
+            window: 20,
+        };
+        let sl = run_adaptation(&mut single, &acfg, &spec.task);
+        assert_eq!(logs[s].rewards.len(), 200, "full horizon expected");
+        assert_eq!(logs[s].rewards, sl.rewards, "session {s}: rewards diverged");
+        assert_eq!(logs[s].time_to_recover, sl.time_to_recover);
+        assert_eq!(
+            batched.output_traces_session(s),
+            single.output_traces_session(0)
+        );
+    }
+}
+
+#[test]
+fn same_seed_same_golden_trace_twice() {
+    // Determinism: two fresh engines over the same scenario batch must
+    // produce byte-identical reward histories, traces and weights.
+    let env = "ant-dir";
+    let cfg = control_cfg(env, 8);
+    let rule = rule_for(&cfg, 0xF1);
+    let scen = scenarios(env, 7, true, 0xF1);
+    let bcfg = BatchAdaptConfig {
+        env_name: env.into(),
+        window: 10,
+        max_steps: Some(60),
+    };
+    let mut b1 = TypedNativeBackend::<f32>::plastic(cfg.clone(), rule.clone());
+    let mut b2 = TypedNativeBackend::<f32>::plastic(cfg.clone(), rule);
+    let l1 = run_batch_adaptation(&mut b1, &bcfg, &scen);
+    let l2 = run_batch_adaptation(&mut b2, &bcfg, &scen);
+    for s in 0..scen.len() {
+        assert_eq!(l1[s].rewards, l2[s].rewards, "session {s} not deterministic");
+        assert_eq!(b1.output_traces_session(s), b2.output_traces_session(s));
+    }
+    assert_eq!(b1.network().w1, b2.network().w1);
+    assert_eq!(b1.network().w2, b2.network().w2);
+}
+
+#[test]
+fn grid_fanout_covers_every_task_once() {
+    // The eval-grid fan-out: 72 novel tasks, each visited exactly once,
+    // whatever engine batch size the run is chunked into.
+    for family in [TaskFamily::Direction, TaskFamily::Velocity, TaskFamily::Position] {
+        let eval = eval_grid(family);
+        let scen = scenarios_for_grid(&eval, &[], 3);
+        assert_eq!(scen.len(), 72, "{family:?}");
+        for (sc, task) in scen.iter().zip(&eval) {
+            assert_eq!(sc.task, *task, "{family:?}: fan-out must preserve grid order");
+        }
+        for b in [1usize, 7, 64, 65] {
+            let mut seen = std::collections::BTreeSet::new();
+            let mut chunks = 0usize;
+            for chunk in scen.chunks(b) {
+                chunks += 1;
+                for sc in chunk {
+                    assert!(
+                        seen.insert(sc.task.id),
+                        "{family:?} B={b}: task {} visited twice",
+                        sc.task.id
+                    );
+                }
+            }
+            assert_eq!(seen.len(), 72, "{family:?} B={b}: tasks missed");
+            assert_eq!(chunks, 72usize.div_ceil(b), "{family:?} B={b}");
+        }
+    }
+}

@@ -46,7 +46,7 @@ fn run_case<S: Scalar>(g: &mut Gen) {
     let mode = if plastic {
         let mut flat = vec![0.0f32; cfg.n_rule_params()];
         theta_rng.fill_normal_f32(&mut flat, 0.3);
-        Mode::Plastic(NetworkRule::from_flat(&cfg, &flat))
+        Mode::Plastic(NetworkRule::from_flat(&cfg, &flat).into())
     } else {
         Mode::Fixed
     };
@@ -168,9 +168,9 @@ fn packed_path_bit_exact_at_exact_word_boundaries() {
         rng.fill_normal_f32(&mut flat, 0.25);
         let rule = NetworkRule::from_flat(&cfg, &flat);
         let mut packed =
-            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone()), batch);
+            SnnNetwork::<f32>::new_batched(cfg.clone(), Mode::Plastic(rule.clone().into()), batch);
         let mut refs: Vec<ReferenceNetwork<f32>> = (0..batch)
-            .map(|_| ReferenceNetwork::new(cfg.clone(), Mode::Plastic(rule.clone())))
+            .map(|_| ReferenceNetwork::new(cfg.clone(), Mode::Plastic(rule.clone().into())))
             .collect();
         let active = vec![true; batch];
         for _ in 0..25 {

@@ -11,6 +11,8 @@
 //! mid-serve `ensure_sessions` growth (the 63 → 65 → 128 shard-tail
 //! regression).
 
+use std::sync::Arc;
+
 use firefly_p::backend::{NativeBackend, SnnBackend};
 use firefly_p::snn::{NetworkRule, SnnConfig};
 use firefly_p::util::rng::Pcg64;
@@ -72,6 +74,53 @@ fn threaded_vs_single_shard_bit_equivalence() {
                 "trace mismatch, B={batch} session {s}"
             );
         }
+    }
+}
+
+#[test]
+fn shards_share_one_rule_theta() {
+    // ROADMAP follow-up (landed): the frozen rule θ lives behind one
+    // `Arc<NetworkRule>` shared by every shard — growing shards adds
+    // refcounts, not per-shard θ copies — and sharing must not change a
+    // single output bit.
+    let mut cfg = SnnConfig::tiny();
+    cfg.n_hidden = 12;
+    let rule = rule_for(&cfg, 0xE0);
+
+    let mut threaded = NativeBackend::plastic_with_threads(cfg.clone(), rule.clone(), 4);
+    let mut single = NativeBackend::plastic(cfg.clone(), rule);
+    let batch = 256; // 4 packed words → all 4 shards materialize
+    assert_eq!(threaded.ensure_sessions(batch), batch);
+    assert_eq!(single.ensure_sessions(batch), batch);
+    assert_eq!(threaded.shard_count(), 4);
+
+    // Memory assertion: every shard's Mode::Plastic points at the SAME
+    // θ allocation (per-copy θ would fail ptr_eq), and the allocation's
+    // refcount accounts for the shards sharing it.
+    let theta0 = threaded.shard(0).mode.rule().expect("plastic mode");
+    for k in 1..threaded.shard_count() {
+        let tk = threaded.shard(k).mode.rule().expect("plastic mode");
+        assert!(
+            Arc::ptr_eq(theta0, tk),
+            "shard {k} carries its own θ copy instead of sharing the Arc"
+        );
+    }
+    assert!(
+        Arc::strong_count(theta0) >= threaded.shard_count(),
+        "θ refcount {} does not cover the {} shards",
+        Arc::strong_count(theta0),
+        threaded.shard_count()
+    );
+
+    // Shard-equivalence: identical outputs with shared θ.
+    let mut rng = Pcg64::new(0xE1, 0);
+    drive_lockstep(&mut threaded, &mut single, batch, 12, &mut rng);
+    for s in [0usize, 63, 64, 129, 255] {
+        assert_eq!(
+            threaded.output_traces_session(s),
+            single.output_traces_session(s),
+            "session {s}: shared-θ trace mismatch"
+        );
     }
 }
 

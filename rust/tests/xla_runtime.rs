@@ -64,7 +64,7 @@ fn xla_matches_native_golden_model_over_episode() {
     let flat2: Vec<f32> = p2.iter().flat_map(|p| p.iter().copied()).collect();
     exe.set_rule(&flat1, &flat2).unwrap();
 
-    let mut gold = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule));
+    let mut gold = SnnNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.into()));
 
     let mut spike_rng = Pcg64::new(0xB1, 0);
     for t in 0..50 {
