@@ -11,11 +11,20 @@
 //! eval-grid scenarios with a mixed perturbation schedule, measuring
 //! engine throughput (session-steps/s) and the median time-to-recover.
 //! Emits `results/fig3_batch_adapt.csv` with schema
-//! `family,batch,threads,steps_per_s,time_to_recover_p50`
+//! `family,batch,step_threads,engine_threads,steps_per_s,time_to_recover_p50`
 //! (`time_to_recover_p50` is NaN when no session recovered at this
 //! budget). A 64-session batch is exactly one packed 64-lane word — one
-//! shard — so the extra `threads = 2` row at B = 64 documents that step
-//! sharding only engages past the word boundary.
+//! shard — so the extra `step_threads = 2` row at B = 64 documents that
+//! step sharding only engages past the word boundary.
+//!
+//! The `engine_threads` dimension (ISSUE 5) sweeps the
+//! scenario-sharded chunked engine at B = 256 × T ∈ {1, 2, 4, 8} per
+//! env family: T per-core chunks, each owning its own backend + envs
+//! (plant *and* network parallel, all plastic chunks sharing one
+//! `Arc<NetworkRule>` θ), versus `step_threads`, which only shards the
+//! network half of one backend's step. Expect whole-pipeline scaling
+//! with `engine_threads` where `step_threads` saturates on the
+//! single-threaded plant.
 //!
 //! Full-fidelity settings take hours; the default budget (tunable via
 //! env vars FIG3_GENS / FIG3_PAIRS / FIG3_HIDDEN) reproduces the
@@ -24,9 +33,12 @@
 //!
 //! Run: `cargo bench --bench bench_fig3_adaptation`
 
+use std::sync::Arc;
+
 use firefly_p::backend::NativeBackend;
 use firefly_p::coordinator::batch_adapt::{
-    run_batch_adaptation, scenarios_for_grid, BatchAdaptConfig, GridSummary,
+    run_batch_adaptation, run_chunked_adaptation, scenarios_for_grid, BatchAdaptConfig,
+    ChunkBackendSpec, GridSummary,
 };
 use firefly_p::coordinator::offline::{train_rule, TrainConfig};
 use firefly_p::env::protocol::eval_grid;
@@ -60,7 +72,14 @@ fn main() {
     .unwrap();
     let mut batch_csv = CsvWriter::create(
         "results/fig3_batch_adapt.csv",
-        &["family", "batch", "threads", "steps_per_s", "time_to_recover_p50"],
+        &[
+            "family",
+            "batch",
+            "step_threads",
+            "engine_threads",
+            "steps_per_s",
+            "time_to_recover_p50",
+        ],
     )
     .unwrap();
 
@@ -132,24 +151,26 @@ fn main() {
         let mut deploy_cfg = TrainConfig::quick(env, GenomeKind::PlasticityRule);
         deploy_cfg.hidden = hidden;
         let net_cfg = deploy_cfg.spec().snn_config();
-        let rule = NetworkRule::from_flat(&net_cfg, &ff_genome);
+        // One θ allocation for the whole sweep: every backend — and
+        // every chunk of the engine-threads sweep below — joins it.
+        let rule = Arc::new(NetworkRule::from_flat(&net_cfg, &ff_genome));
         let schedule = vec![
             (Some(Perturbation::leg_failure(vec![0])), 80),
             (Some(Perturbation::weak_motors(0.5)), 80),
             (None, 0),
         ];
         let novel = eval_grid(family_of(env).unwrap());
-        for (batch, threads) in [(1usize, 1usize), (8, 1), (64, 1), (64, 2)] {
+        let bcfg = BatchAdaptConfig {
+            env_name: env.to_string(),
+            window: 20,
+            max_steps: None,
+        };
+        for (batch, step_threads) in [(1usize, 1usize), (8, 1), (64, 1), (64, 2)] {
             let tasks: Vec<TaskParam> =
                 (0..batch).map(|s| novel[s % novel.len()].clone()).collect();
             let scenarios = scenarios_for_grid(&tasks, &schedule, 42);
             let mut backend =
-                NativeBackend::plastic_with_threads(net_cfg.clone(), rule.clone(), threads);
-            let bcfg = BatchAdaptConfig {
-                env_name: env.to_string(),
-                window: 20,
-                max_steps: None,
-            };
+                NativeBackend::plastic_shared(net_cfg.clone(), Arc::clone(&rule), step_threads);
             let t0 = std::time::Instant::now();
             let logs = run_batch_adaptation(&mut backend, &bcfg, &scenarios);
             let dt = t0.elapsed().as_secs_f64();
@@ -157,7 +178,7 @@ fn main() {
             let grid = GridSummary::from_logs(&logs);
             let sps = total_steps as f64 / dt.max(1e-9);
             println!(
-                "  batch-adapt B={batch:<3} T={threads}: {sps:>9.0} session-steps/s  \
+                "  batch-adapt B={batch:<3} sT={step_threads}: {sps:>9.0} session-steps/s  \
                  recovered {}/{}  ttr_p50 {:.1}",
                 grid.recovered, grid.perturbed, grid.time_to_recover_p50
             );
@@ -165,7 +186,45 @@ fn main() {
                 .row(&[
                     &env,
                     &batch,
-                    &threads,
+                    &step_threads,
+                    &1usize,
+                    &format!("{sps:.1}"),
+                    &format!("{:.1}", grid.time_to_recover_p50),
+                ])
+                .unwrap();
+        }
+
+        // Engine-threads dimension (ISSUE 5): the scenario-sharded
+        // chunked engine at B = 256 — whole-pipeline parallelism across
+        // T per-core chunks, plant included, vs step_threads above
+        // which only shards the network half of the tick.
+        let batch = 256usize;
+        let tasks: Vec<TaskParam> = (0..batch).map(|s| novel[s % novel.len()].clone()).collect();
+        let scenarios = scenarios_for_grid(&tasks, &schedule, 42);
+        for engine_threads in [1usize, 2, 4, 8] {
+            let t0 = std::time::Instant::now();
+            let logs = run_chunked_adaptation::<f32>(
+                &net_cfg,
+                ChunkBackendSpec::Plastic(Arc::clone(&rule)),
+                &bcfg,
+                &scenarios,
+                engine_threads,
+            );
+            let dt = t0.elapsed().as_secs_f64();
+            let total_steps: usize = logs.iter().map(|l| l.rewards.len()).sum();
+            let grid = GridSummary::from_logs(&logs);
+            let sps = total_steps as f64 / dt.max(1e-9);
+            println!(
+                "  batch-adapt B={batch:<3} eT={engine_threads}: {sps:>9.0} session-steps/s  \
+                 recovered {}/{}  ttr_p50 {:.1}",
+                grid.recovered, grid.perturbed, grid.time_to_recover_p50
+            );
+            batch_csv
+                .row(&[
+                    &env,
+                    &batch,
+                    &1usize,
+                    &engine_threads,
                     &format!("{sps:.1}"),
                     &format!("{:.1}", grid.time_to_recover_p50),
                 ])

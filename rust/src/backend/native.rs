@@ -22,6 +22,8 @@
 //! suite (`tests/batch_adapt_equivalence.rs`) can pin batched-vs-single
 //! bit-equivalence in both precisions.
 
+use std::sync::Arc;
+
 use super::SnnBackend;
 use crate::snn::{Mode, NetworkRule, Scalar, ShardedNetwork, SnnConfig, SnnNetwork};
 
@@ -48,9 +50,28 @@ impl<S: Scalar> TypedNativeBackend<S> {
     /// §Hot-Path). `step_threads` fixes the shard mapping for the
     /// backend's lifetime.
     pub fn plastic_with_threads(cfg: SnnConfig, rule: NetworkRule, step_threads: usize) -> Self {
+        Self::plastic_shared(cfg, rule.into(), step_threads)
+    }
+
+    /// Plastic deployment over an **already-shared** frozen rule θ: the
+    /// backend joins an existing `Arc<NetworkRule>` instead of minting
+    /// its own. The chunked adaptation engine
+    /// ([`crate::coordinator::batch_adapt::ChunkedAdaptEngine`])
+    /// constructs one backend per scenario chunk through this, so every
+    /// chunk — and every 64-lane shard within each chunk — streams the
+    /// same θ allocation (one copy per process, whatever the chunk
+    /// count).
+    pub fn plastic_shared(cfg: SnnConfig, rule: Arc<NetworkRule>, step_threads: usize) -> Self {
         TypedNativeBackend {
-            net: ShardedNetwork::new(cfg, Mode::Plastic(rule.into()), step_threads),
+            net: ShardedNetwork::new(cfg, Mode::Plastic(rule), step_threads),
         }
+    }
+
+    /// The shared frozen rule θ, when deployed plastic (`None` for
+    /// fixed-weight deployments) — the handle the chunk/shard θ-sharing
+    /// tests `Arc::ptr_eq` against.
+    pub fn rule(&self) -> Option<&Arc<NetworkRule>> {
+        self.net.rule()
     }
 
     /// Fixed-weight baseline deployment: `weights` installed once, no

@@ -12,7 +12,16 @@
 //! drives it through the engine, so the single-session and batched
 //! paths are the same code by construction (the conformance suite in
 //! `tests/batch_adapt_equivalence.rs` additionally pins B-session
-//! batches bit-identical to B sequential runs of this wrapper).
+//! batches bit-identical to B sequential runs of this wrapper). The
+//! scenario-sharded multi-core layer
+//! ([`crate::coordinator::batch_adapt::ChunkedAdaptEngine`]) sits one
+//! level further out: it partitions a batch into per-core chunks of
+//! this same engine and merges the per-chunk [`AdaptLog`] reward
+//! histories back **in chunk order** — chunks are contiguous scenario
+//! slices, so the merged result is in scenario order and every
+//! downstream aggregate ([`AdaptLog::from_rewards`] metrics,
+//! `GridSummary`, `Metrics::absorb`) is independent of the thread
+//! count.
 
 use crate::backend::SnnBackend;
 use crate::coordinator::batch_adapt::{run_batch_adaptation, BatchAdaptConfig, Scenario};

@@ -33,15 +33,38 @@
 //! into pooled buffers; pinned by `tests/alloc_free_serving.rs`). The
 //! perturbation-injection tick and episode finalization are the cold
 //! exceptions.
+//!
+//! # Scenario sharding (multi-core plant)
+//!
+//! One `BatchAdaptEngine` steps its whole plant — env physics,
+//! encoding, perturbation schedules — on the caller thread, so past the
+//! 64-session word boundary `--step-threads` only parallelizes the
+//! network half of the tick. [`ChunkedAdaptEngine`] removes that
+//! ceiling: it partitions the scenario batch into contiguous per-core
+//! **chunks**, each owning its own [`TypedNativeBackend`], env
+//! instances, RNG streams and pooled tick buffers, and steps whole
+//! chunks (plant *and* network) in parallel on pinned
+//! [`ThreadPool::scope`] workers — ES-style `map_indexed` over chunks,
+//! but persistent across ticks so the steady state stays alloc-free.
+//! Sessions are mutually independent, so a chunked run is
+//! **bit-identical** to the single-engine run at any `threads`
+//! (`tests/batch_adapt_equivalence.rs`), and all plastic chunks share
+//! one `Arc<NetworkRule>` θ allocation
+//! ([`TypedNativeBackend::plastic_shared`]). `threads == 1` *is* the
+//! inline engine above — one chunk, no pool, no scope entry.
 
-use crate::backend::SnnBackend;
+use std::sync::Arc;
+
+use crate::backend::{SnnBackend, TypedNativeBackend};
 use crate::coordinator::adapt_loop::AdaptLog;
 use crate::coordinator::metrics::Metrics;
 use crate::env::{make_env, Env, Perturbation, TaskParam};
 use crate::es::eval::NEURONS_PER_DIM;
 use crate::snn::encoding::{PopulationEncoder, TraceDecoder};
+use crate::snn::{NetworkRule, Scalar, SnnConfig};
 use crate::util::rng::Pcg64;
 use crate::util::stats;
+use crate::util::threadpool::ThreadPool;
 
 /// One session's closed-loop scenario: which task, which perturbation
 /// schedule, which seed.
@@ -288,6 +311,224 @@ pub fn run_batch_adaptation(
     engine.finish()
 }
 
+/// Backend recipe [`ChunkedAdaptEngine`] constructs per-chunk backends
+/// from. The engine owns its backends (one per chunk, stepped on the
+/// chunk's pinned worker), so callers hand it a recipe instead of an
+/// instance.
+#[derive(Clone)]
+pub enum ChunkBackendSpec<'a> {
+    /// Plastic (FireFly-P) chunks: every chunk backend joins the same
+    /// `Arc<NetworkRule>` θ allocation
+    /// ([`TypedNativeBackend::plastic_shared`]) — cloning the spec
+    /// clones the `Arc`, never the rule.
+    Plastic(Arc<NetworkRule>),
+    /// Fixed-weight baseline chunks loaded from flat `[W1 ‖ W2]` (each
+    /// chunk keeps its own session-invariant copy, like the shards of
+    /// one backend).
+    Fixed(&'a [f32]),
+}
+
+/// Contiguous balanced partition of `n` sessions into
+/// `min(threads, n)` chunks: entry `k` is chunk `k`'s first session,
+/// with a final entry of `n`. Chunk sizes differ by at most one (the
+/// first `n % T` chunks carry the remainder), and chunk order is
+/// scenario order — the chunked merge is deterministic by construction,
+/// whatever the thread count.
+pub fn chunk_bounds(n: usize, threads: usize) -> Vec<usize> {
+    assert!(n > 0, "need at least one session");
+    let t = threads.clamp(1, n);
+    let base = n / t;
+    let rem = n % t;
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0usize);
+    for k in 0..t {
+        bounds.push(bounds[k] + base + usize::from(k < rem));
+    }
+    bounds
+}
+
+/// One scenario chunk: a contiguous scenario slice driven by its own
+/// engine through its own backend (plant + network both live on the
+/// chunk's worker).
+struct AdaptChunk<S: Scalar> {
+    backend: TypedNativeBackend<S>,
+    engine: BatchAdaptEngine,
+    /// `false` once this chunk's `tick` stopped advancing (all of its
+    /// episodes done or at the step cap) — finished chunks are never
+    /// dispatched again.
+    running: bool,
+}
+
+/// Scenario-sharded multi-core adaptation: B scenarios partitioned into
+/// per-core chunks, each chunk a [`BatchAdaptEngine`] over its own
+/// [`TypedNativeBackend`], stepped in parallel on pinned
+/// [`ThreadPool::scope`] workers.
+///
+/// Bit-identical to the single-engine [`run_batch_adaptation`] run of
+/// the same scenarios at any `threads` (sessions share nothing mutable;
+/// pinned by `tests/batch_adapt_equivalence.rs`), and alloc-free in
+/// steady state including the scope dispatch itself (pooled job boxes;
+/// pinned by `tests/alloc_free_serving.rs`). With one chunk
+/// (`threads == 1`, or a single-scenario batch) ticks run inline on the
+/// caller — no pool, no scope entry, no worker wakeups: exactly the
+/// pre-chunking engine path.
+pub struct ChunkedAdaptEngine<S: Scalar> {
+    chunks: Vec<AdaptChunk<S>>,
+    /// Chunk partition ([`chunk_bounds`]): `bounds[k]..bounds[k+1]` are
+    /// chunk `k`'s global session indices.
+    bounds: Vec<usize>,
+    /// Step workers, one per chunk; `None` with a single chunk (inline
+    /// stepping).
+    pool: Option<ThreadPool>,
+}
+
+impl<S: Scalar> ChunkedAdaptEngine<S> {
+    /// Partition `scenarios` into `min(threads, B)` contiguous chunks
+    /// and provision one backend + engine per chunk (plastic chunks all
+    /// share `spec`'s θ allocation). Each chunk's per-session setup is
+    /// identical to the single-engine path, which is what makes the
+    /// chunked run bit-identical to it.
+    pub fn new(
+        net_cfg: &SnnConfig,
+        spec: ChunkBackendSpec,
+        cfg: &BatchAdaptConfig,
+        scenarios: &[Scenario],
+        threads: usize,
+    ) -> ChunkedAdaptEngine<S> {
+        assert!(!scenarios.is_empty(), "need at least one scenario");
+        let bounds = chunk_bounds(scenarios.len(), threads);
+        let t = bounds.len() - 1;
+        let mut chunks = Vec::with_capacity(t);
+        for w in bounds.windows(2) {
+            let slice = &scenarios[w[0]..w[1]];
+            // Per-chunk network step stays single-threaded: the chunk
+            // itself is the unit of parallelism here (one core steps
+            // one chunk's plant *and* network end to end).
+            let mut backend = match &spec {
+                ChunkBackendSpec::Plastic(rule) => {
+                    TypedNativeBackend::<S>::plastic_shared(net_cfg.clone(), Arc::clone(rule), 1)
+                }
+                ChunkBackendSpec::Fixed(weights) => {
+                    TypedNativeBackend::<S>::fixed(net_cfg.clone(), weights)
+                }
+            };
+            let engine = BatchAdaptEngine::new(&mut backend, cfg.clone(), slice);
+            chunks.push(AdaptChunk {
+                backend,
+                engine,
+                running: true,
+            });
+        }
+        // One worker per chunk; a single-chunk engine never spawns a
+        // thread (the T = 1 path is the inline engine).
+        let pool = (t > 1).then(|| ThreadPool::new(t));
+        ChunkedAdaptEngine {
+            chunks,
+            bounds,
+            pool,
+        }
+    }
+
+    /// Number of chunks the scenario batch was partitioned into.
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Total scenarios across all chunks.
+    pub fn sessions(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Sessions still running their episode, across all chunks.
+    pub fn live_sessions(&self) -> usize {
+        self.chunks.iter().map(|c| c.engine.live_sessions()).sum()
+    }
+
+    /// Where a global session index lives: `(chunk, local index)`.
+    pub fn locate(&self, session: usize) -> (usize, usize) {
+        assert!(session < self.sessions(), "session out of range");
+        let k = match self.bounds.binary_search(&session) {
+            Ok(k) => k,
+            Err(k) => k - 1,
+        };
+        (k, session - self.bounds[k])
+    }
+
+    /// Borrow chunk `k`'s backend (diagnostics and the θ-sharing /
+    /// weight-lane conformance tests).
+    pub fn chunk_backend(&self, k: usize) -> &TypedNativeBackend<S> {
+        &self.chunks[k].backend
+    }
+
+    /// One global session's output-population traces (routes through
+    /// the owning chunk's backend).
+    pub fn output_traces_session(&self, session: usize) -> Vec<f32> {
+        let (k, l) = self.locate(session);
+        self.chunks[k].backend.output_traces_session(l)
+    }
+
+    /// Advance every live chunk one control tick — in parallel on the
+    /// pinned pool workers when more than one chunk is still running,
+    /// inline otherwise. Returns `false` once every chunk has finished
+    /// (the final call advances nothing, mirroring
+    /// [`BatchAdaptEngine::tick`]).
+    pub fn tick(&mut self) -> bool {
+        let chunks = &mut self.chunks;
+        let running = chunks.iter().filter(|c| c.running).count();
+        match &self.pool {
+            Some(pool) if running > 1 => {
+                pool.scope(|sc| {
+                    for (k, chunk) in chunks.iter_mut().enumerate() {
+                        if !chunk.running {
+                            continue;
+                        }
+                        // Pin chunk k to worker k: consecutive ticks of
+                        // a chunk land on the same core's warm cache,
+                        // and the per-chunk &mut borrows are disjoint.
+                        sc.spawn_on(k, move || {
+                            chunk.running = chunk.engine.tick(&mut chunk.backend);
+                        });
+                    }
+                });
+            }
+            _ => {
+                for chunk in chunks.iter_mut() {
+                    if chunk.running {
+                        chunk.running = chunk.engine.tick(&mut chunk.backend);
+                    }
+                }
+            }
+        }
+        self.chunks.iter().any(|c| c.running)
+    }
+
+    /// Finalize: one [`AdaptLog`] per scenario. Chunks are contiguous
+    /// and merged in chunk order, so the result is in scenario order —
+    /// deterministically, whatever the thread count.
+    pub fn finish(self) -> Vec<AdaptLog> {
+        let mut logs = Vec::with_capacity(self.sessions());
+        for chunk in self.chunks {
+            logs.extend(chunk.engine.finish());
+        }
+        logs
+    }
+}
+
+/// Run a scenario batch to completion through the chunked multi-core
+/// engine (the `--adapt-threads` CLI path). `threads == 1` is exactly
+/// [`run_batch_adaptation`] over one freshly provisioned backend.
+pub fn run_chunked_adaptation<S: Scalar>(
+    net_cfg: &SnnConfig,
+    spec: ChunkBackendSpec,
+    cfg: &BatchAdaptConfig,
+    scenarios: &[Scenario],
+    threads: usize,
+) -> Vec<AdaptLog> {
+    let mut engine = ChunkedAdaptEngine::<S>::new(net_cfg, spec, cfg, scenarios, threads);
+    while engine.tick() {}
+    engine.finish()
+}
+
 /// One scenario per task of a grid, assigning perturbation schedule
 /// entries round-robin (`schedule` empty = all clean episodes). Every
 /// task appears **exactly once**, in grid order — the coverage contract
@@ -512,6 +753,101 @@ mod tests {
             assert_eq!(sc.task, *task);
             assert!(sc.perturbation.is_none());
         }
+    }
+
+    #[test]
+    fn chunk_bounds_partition_properties() {
+        for &n in &[1usize, 2, 7, 64, 65, 72, 256] {
+            for &t in &[1usize, 2, 3, 4, 5, 8, 300] {
+                let b = chunk_bounds(n, t);
+                assert_eq!(b[0], 0, "n={n} t={t}");
+                assert_eq!(*b.last().unwrap(), n, "n={n} t={t}");
+                assert_eq!(b.len() - 1, t.clamp(1, n), "n={n} t={t}");
+                let sizes: Vec<usize> = b.windows(2).map(|w| w[1] - w[0]).collect();
+                assert!(sizes.iter().all(|&s| s > 0), "empty chunk: n={n} t={t}");
+                let max = *sizes.iter().max().unwrap();
+                let min = *sizes.iter().min().unwrap();
+                assert!(max - min <= 1, "unbalanced n={n} t={t}: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_engine_matches_single_engine() {
+        // Quick smoke pin — the full B × T × scalar sweep lives in
+        // tests/batch_adapt_equivalence.rs.
+        let e = make_env("cheetah-vel").unwrap();
+        let mut net_cfg = SnnConfig::control(e.obs_dim() * NEURONS_PER_DIM, 2 * e.act_dim());
+        net_cfg.n_hidden = 16;
+        let mut rng = Pcg64::new(5, 9);
+        let mut genome = vec![0.0f32; net_cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut genome, 0.05);
+        let rule = Arc::new(NetworkRule::from_flat(&net_cfg, &genome));
+
+        let tasks = train_grid(TaskFamily::Velocity);
+        let schedule = parse_schedule("gain:0.5@20;none").unwrap();
+        let scenarios = scenarios_for_grid(&tasks[..5], &schedule, 11);
+        let cfg = BatchAdaptConfig {
+            env_name: "cheetah-vel".into(),
+            window: 10,
+            max_steps: Some(50),
+        };
+
+        let mut serial_backend =
+            NativeBackend::plastic_shared(net_cfg.clone(), Arc::clone(&rule), 1);
+        let serial = run_batch_adaptation(&mut serial_backend, &cfg, &scenarios);
+
+        for threads in [1usize, 2, 3] {
+            let logs = run_chunked_adaptation::<f32>(
+                &net_cfg,
+                ChunkBackendSpec::Plastic(Arc::clone(&rule)),
+                &cfg,
+                &scenarios,
+                threads,
+            );
+            assert_eq!(logs.len(), serial.len());
+            for (s, (a, b)) in logs.iter().zip(&serial).enumerate() {
+                assert_eq!(a.rewards, b.rewards, "T={threads} session {s}: rewards diverged");
+                assert_eq!(a.time_to_recover, b.time_to_recover, "T={threads} session {s}");
+                assert_eq!(a.perturb_at, b.perturb_at, "T={threads} session {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn locate_routes_sessions_to_chunks() {
+        let e = make_env("ant-dir").unwrap();
+        let mut net_cfg = SnnConfig::control(e.obs_dim() * NEURONS_PER_DIM, 2 * e.act_dim());
+        net_cfg.n_hidden = 8;
+        let rule = Arc::new(NetworkRule::zeros(&net_cfg));
+        let tasks = train_grid(TaskFamily::Direction);
+        let scenarios = scenarios_for_grid(&tasks[..7], &[], 3);
+        let cfg = BatchAdaptConfig {
+            env_name: "ant-dir".into(),
+            window: 5,
+            max_steps: Some(4),
+        };
+        let engine = ChunkedAdaptEngine::<f32>::new(
+            &net_cfg,
+            ChunkBackendSpec::Plastic(rule),
+            &cfg,
+            &scenarios,
+            3,
+        );
+        // 7 sessions over 3 chunks → bounds [0, 3, 5, 7]
+        assert_eq!(engine.chunk_count(), 3);
+        assert_eq!(engine.sessions(), 7);
+        assert_eq!(engine.live_sessions(), 7);
+        assert_eq!(engine.locate(0), (0, 0));
+        assert_eq!(engine.locate(2), (0, 2));
+        assert_eq!(engine.locate(3), (1, 0));
+        assert_eq!(engine.locate(4), (1, 1));
+        assert_eq!(engine.locate(5), (2, 0));
+        assert_eq!(engine.locate(6), (2, 1));
+        assert_eq!(engine.chunk_backend(0).sessions(), 3);
+        assert_eq!(engine.chunk_backend(2).sessions(), 2);
+        // traces route through the owning chunk (all zero pre-tick)
+        assert!(engine.output_traces_session(6).iter().all(|&t| t == 0.0));
     }
 
     #[test]

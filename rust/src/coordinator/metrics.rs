@@ -39,6 +39,28 @@ impl Metrics {
         *self.counters.entry(name).or_insert(0) += n;
     }
 
+    /// Fold another registry into this one: online series merge their
+    /// accumulators ([`Welford::merge`]), counters add, and sample
+    /// distributions concatenate in `other`'s insertion order.
+    ///
+    /// This is how per-chunk (or per-engine-run) registries of a
+    /// scenario-sharded adaptation sweep aggregate: callers absorb the
+    /// chunk registries **in chunk order**, which — chunks being
+    /// contiguous scenario slices — makes the merged distributions (and
+    /// therefore every percentile report) independent of how many
+    /// threads the run was sharded across.
+    pub fn absorb(&mut self, other: Metrics) {
+        for (name, w) in other.series {
+            self.series.entry(name).or_insert_with(Welford::new).merge(&w);
+        }
+        for (name, c) in other.counters {
+            *self.counters.entry(name).or_insert(0) += c;
+        }
+        for (name, v) in other.dists {
+            self.dists.entry(name).or_default().extend(v);
+        }
+    }
+
     /// Buffer one value into the named sample distribution so
     /// percentiles can be queried later (the grid-level aggregation the
     /// batched adaptation engine reports through; unlike
@@ -138,6 +160,44 @@ mod tests {
         assert_eq!(m.percentile("time_to_recover", 100.0), 100.0);
         assert!(m.percentile("nope", 50.0).is_nan());
         assert!(m.report().contains("time_to_recover"));
+    }
+
+    #[test]
+    fn absorb_merges_chunk_registries_order_independently_of_count() {
+        // Two chunkings of the same per-session series must aggregate
+        // to the same report when absorbed in chunk order.
+        let values: Vec<f64> = (0..12).map(|i| (i as f64) * 1.5 - 4.0).collect();
+        let fold = |splits: &[usize]| -> Metrics {
+            let mut total = Metrics::new();
+            let mut start = 0usize;
+            for &end in splits {
+                let mut chunk = Metrics::new();
+                for &v in &values[start..end] {
+                    chunk.observe("reward", v);
+                    chunk.sample("ttr", v);
+                    chunk.incr("sessions");
+                }
+                total.absorb(chunk);
+                start = end;
+            }
+            total
+        };
+        let a = fold(&[12]);
+        let b = fold(&[3, 7, 12]);
+        assert_eq!(a.count("sessions"), 12);
+        assert_eq!(b.count("sessions"), 12);
+        assert!((a.mean("reward") - b.mean("reward")).abs() < 1e-12);
+        let wa = a.get("reward").unwrap();
+        let wb = b.get("reward").unwrap();
+        assert_eq!(wa.n, wb.n);
+        assert!((wa.std_dev() - wb.std_dev()).abs() < 1e-9);
+        assert_eq!(wa.min, wb.min);
+        assert_eq!(wa.max, wb.max);
+        // chunk-order concatenation ⇒ identical sample distributions
+        assert_eq!(a.samples("ttr"), 12);
+        for p in [0.0, 25.0, 50.0, 90.0, 100.0] {
+            assert_eq!(a.percentile("ttr", p), b.percentile("ttr", p));
+        }
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //! - [`batch_adapt`]: the batched multi-scenario adaptation engine — B
 //!   concurrent environments driven through one batched backend step
 //!   per tick, with a bit-exactness conformance contract against B
-//!   sequential single-session runs (DESIGN.md §Closed-Loop-Batching).
+//!   sequential single-session runs (DESIGN.md §Closed-Loop-Batching) —
+//!   plus its scenario-sharded multi-core form
+//!   ([`batch_adapt::ChunkedAdaptEngine`]): per-core chunks, each with
+//!   its own backend and envs, stepped in parallel on pinned pool
+//!   workers, bit-identical to the inline engine at any thread count.
 //! - [`server`]: a session-managed TCP control server multiplexing many
 //!   concurrent client connections onto batched SNN steps (observation
 //!   in → action out) — the robot-side request loop at fleet scale.
@@ -23,8 +27,9 @@ pub mod server;
 
 pub use adapt_loop::{run_adaptation, AdaptConfig, AdaptLog};
 pub use batch_adapt::{
-    parse_schedule, run_batch_adaptation, scenarios_for_grid, BatchAdaptConfig, BatchAdaptEngine,
-    GridSummary, Scenario,
+    parse_schedule, run_batch_adaptation, run_chunked_adaptation, scenarios_for_grid,
+    BatchAdaptConfig, BatchAdaptEngine, ChunkBackendSpec, ChunkedAdaptEngine, GridSummary,
+    Scenario,
 };
 pub use metrics::Metrics;
 pub use offline::{train_rule, TrainConfig, TrainResult};

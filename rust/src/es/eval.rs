@@ -5,6 +5,17 @@
 //! A genome is either a plasticity rule θ (FireFly-P, Phase 1) or a flat
 //! weight vector (the weight-trained baseline of Fig. 3); both use the
 //! identical controller harness so the comparison is apples-to-apples.
+//!
+//! Each [`evaluate_population`] worker owns a complete
+//! `(env, encoder, decoder, network)` tuple and runs its rollouts end
+//! to end — plant *and* network on one core, nothing shared but the
+//! read-only spec. This is the parallelism shape the serving side's
+//! chunked adaptation engine
+//! ([`crate::coordinator::batch_adapt::ChunkedAdaptEngine`]) mirrors:
+//! where ES maps genome indices over transient per-worker harnesses
+//! ([`crate::util::threadpool::map_indexed`]), the engine maps scenario
+//! chunks over *persistent* per-core engines so steady-state ticks stay
+//! allocation-free.
 
 use crate::env::{make_env, Env, TaskParam};
 use crate::snn::encoding::{PopulationEncoder, TraceDecoder};
@@ -27,12 +38,16 @@ pub enum GenomeKind {
 /// Evaluation specification shared by the whole population.
 #[derive(Clone, Debug)]
 pub struct EvalSpec {
+    /// Environment name (`ant-dir` | `cheetah-vel` | `reacher`).
     pub env_name: &'static str,
+    /// What the genomes under evaluation encode (rule θ or weights).
     pub kind: GenomeKind,
     /// Tasks to average fitness over (the paper's 8 training tasks).
     pub tasks: Vec<TaskParam>,
     /// Episode seeds per task (>1 averages out encoder stochasticity).
     pub episodes_per_task: usize,
+    /// Base RNG seed; replayed identically for every genome (common
+    /// random numbers — see [`rollout_fitness`]).
     pub seed: u64,
     /// Hidden layer width (128 in the paper's control experiments).
     pub hidden: usize,
@@ -61,13 +76,20 @@ impl EvalSpec {
 
 /// Controller harness: encoder → SNN → decoder around one environment.
 pub struct Harness {
+    /// The plant (one task-parameterized control environment).
     pub env: Box<dyn Env>,
+    /// Observation → spike population encoder.
     pub encoder: PopulationEncoder,
+    /// Output-trace → action decoder.
     pub decoder: TraceDecoder,
+    /// The controller network (plastic or fixed, per the spec's kind).
     pub net: SnnNetwork<f32>,
 }
 
 impl Harness {
+    /// Build the spec's controller around `genome` (a rule θ deploys a
+    /// plastic network from zero weights; a weight genome deploys a
+    /// fixed network).
     pub fn new(spec: &EvalSpec, genome: &[f32]) -> Harness {
         let cfg = spec.snn_config();
         let env = make_env(spec.env_name).expect("unknown env");

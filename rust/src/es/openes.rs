@@ -7,6 +7,9 @@ use super::Optimizer;
 use crate::util::rng::Pcg64;
 use crate::util::stats::centered_ranks;
 
+/// Vanilla OpenAI-ES state: isotropic N(μ, σ²I) search with antithetic
+/// sampling and centered-rank fitness shaping (σ never adapts — that is
+/// the ablation against PEPG).
 pub struct OpenEs {
     mu: Vec<f32>,
     sigma: f32,
@@ -15,6 +18,7 @@ pub struct OpenEs {
     eps: Vec<Vec<f32>>,
     rng: Pcg64,
     generation: usize,
+    /// Best raw fitness ever told (bookkeeping for the coordinator).
     pub best_fitness: f64,
 }
 
@@ -34,6 +38,7 @@ impl OpenEs {
         }
     }
 
+    /// Start the search from `mean` instead of the zero genome.
     pub fn with_mean(mut self, mean: &[f32]) -> Self {
         assert_eq!(mean.len(), self.mu.len());
         self.mu.copy_from_slice(mean);

@@ -21,6 +21,8 @@ use super::Optimizer;
 use crate::util::rng::Pcg64;
 use crate::util::stats::centered_ranks;
 
+/// PEPG hyperparameters (defaults match the reference implementation
+/// at this problem scale).
 #[derive(Clone, Debug)]
 pub struct PepgConfig {
     /// Number of symmetric *pairs* per generation (population = 2·pairs).
@@ -31,8 +33,9 @@ pub struct PepgConfig {
     pub lr_mu: f32,
     /// Learning rate on σ (0 disables σ adaptation).
     pub lr_sigma: f32,
-    /// σ floor/ceiling to keep the search well-conditioned.
+    /// σ floor to keep the search well-conditioned.
     pub sigma_min: f32,
+    /// σ ceiling to keep the search well-conditioned.
     pub sigma_max: f32,
     /// Optional L2 decay on μ (keeps rule coefficients small — the
     /// hardware stores them in FP16).
@@ -56,6 +59,9 @@ impl Default for PepgConfig {
     }
 }
 
+/// PEPG optimizer state: per-parameter Gaussian search distribution
+/// N(μ, diag(σ²)) updated from symmetric-pair fitness differences (see
+/// the module docs for the gradient estimators).
 pub struct Pepg {
     cfg: PepgConfig,
     mu: Vec<f32>,
@@ -72,6 +78,8 @@ pub struct Pepg {
 }
 
 impl Pepg {
+    /// Fresh optimizer over `dim`-dimensional genomes: μ = 0,
+    /// σ = `cfg.sigma_init` everywhere.
     pub fn new(dim: usize, cfg: PepgConfig, seed: u64) -> Self {
         let sigma = vec![cfg.sigma_init; dim];
         Pepg {
@@ -87,16 +95,20 @@ impl Pepg {
         }
     }
 
+    /// Start the search from `mean` instead of the zero genome (used to
+    /// resume training from a saved rule).
     pub fn with_mean(mut self, mean: &[f32]) -> Self {
         assert_eq!(mean.len(), self.mu.len());
         self.mu.copy_from_slice(mean);
         self
     }
 
+    /// Genome dimensionality the optimizer searches over.
     pub fn dim(&self) -> usize {
         self.mu.len()
     }
 
+    /// Rollouts per generation (2·pairs — each pair is a ± sample).
     pub fn population_size(&self) -> usize {
         2 * self.cfg.pairs
     }

@@ -23,14 +23,13 @@
 #![warn(missing_docs)]
 
 // Documentation debt: the serving surface (snn, backend, coordinator),
-// the environments (env) and the whole util foundation are fully
-// documented; the modules below still opt out and are tracked as an
-// open item in ROADMAP.md.
+// the environments (env), the ES optimizers (es) and the whole util
+// foundation are fully documented; the modules below still opt out and
+// are tracked as an open item in ROADMAP.md.
 pub mod util;
 
 pub mod snn;
 pub mod env;
-#[allow(missing_docs)]
 pub mod es;
 #[allow(missing_docs)]
 pub mod fpga;

@@ -11,9 +11,12 @@
 use firefly_p::backend::{
     BackendKind, FpgaBackend, NativeBackend, ReplicatedBackend, SnnBackend, XlaBackend,
 };
+use std::sync::Arc;
+
 use firefly_p::coordinator::adapt_loop::{run_adaptation, AdaptConfig};
 use firefly_p::coordinator::batch_adapt::{
-    parse_schedule, run_batch_adaptation, scenarios_for_grid, BatchAdaptConfig, GridSummary,
+    parse_schedule, run_batch_adaptation, run_chunked_adaptation, scenarios_for_grid,
+    BatchAdaptConfig, ChunkBackendSpec, GridSummary,
 };
 use firefly_p::coordinator::offline::{genome_io, train_rule, TrainConfig};
 use firefly_p::coordinator::server::{ControlServer, ServerConfig};
@@ -72,6 +75,17 @@ fn parser() -> Parser {
                 "per-session ';'-separated spec@t entries assigned round-robin, \
                  e.g. leg:0@80;none;gain:0.5@100 (overrides --perturb)",
                 "",
+            ),
+            opt(
+                "adapt-threads",
+                "scenario chunks stepped in parallel on pinned workers, each chunk \
+                 owning its own backend + envs (plant AND network; 0 = all CPU \
+                 cores; capped at --batch, the sessions per engine run). Native \
+                 backend only — xla/fpga batches fall back to the single-threaded \
+                 ReplicatedBackend engine. Orthogonal to serve's --step-threads, \
+                 which shards the network half of one backend's step; chunk \
+                 backends here step their networks inline",
+                "1",
             ),
         ],
     )
@@ -186,13 +200,15 @@ fn geometry_of(env: &str) -> &'static str {
     }
 }
 
-fn load_backend(
+/// Resolve the deployed model from `--genome`/`--env`: the SNN
+/// geometry, whether it deploys plastic (a rule genome) or fixed (a
+/// weight genome), and the flat genome itself (empty = untrained zero
+/// rule). Shared by [`load_backend`] and the chunked adaptation path,
+/// which constructs its own per-chunk backends.
+fn load_model(
     args: &Args,
     env: &str,
-    step_threads: usize,
-) -> Result<Box<dyn SnnBackend>, String> {
-    let kind = BackendKind::parse(&args.get_or("backend", "native"))
-        .ok_or("backend must be native | xla | fpga")?;
+) -> Result<(firefly_p::snn::SnnConfig, bool, Vec<f32>), String> {
     let genome_path = std::path::PathBuf::from(args.get_or("genome", "results/rule.bin"));
     let (genome_env, kind_str, hidden, genome) = if genome_path.exists() {
         genome_io::load(&genome_path).map_err(|e| e.to_string())?
@@ -212,16 +228,31 @@ fn load_backend(
         2 * e.act_dim(),
     );
     cfg.n_hidden = hidden;
-    let plastic = kind_str == "rule";
-    let rule = if plastic {
-        if genome.is_empty() {
-            NetworkRule::zeros(&cfg)
-        } else {
-            NetworkRule::from_flat(&cfg, &genome)
-        }
+    Ok((cfg, kind_str == "rule", genome))
+}
+
+/// The plasticity rule a [`load_model`] result deploys: the genome when
+/// it is a non-empty rule genome, the zero rule otherwise (untrained,
+/// or a fixed-weight deployment that never consults θ). The single
+/// definition both the backend loader and the chunked adaptation path
+/// construct from.
+fn deployed_rule(cfg: &firefly_p::snn::SnnConfig, plastic: bool, genome: &[f32]) -> NetworkRule {
+    if plastic && !genome.is_empty() {
+        NetworkRule::from_flat(cfg, genome)
     } else {
-        NetworkRule::zeros(&cfg)
-    };
+        NetworkRule::zeros(cfg)
+    }
+}
+
+fn load_backend(
+    args: &Args,
+    env: &str,
+    step_threads: usize,
+) -> Result<Box<dyn SnnBackend>, String> {
+    let kind = BackendKind::parse(&args.get_or("backend", "native"))
+        .ok_or("backend must be native | xla | fpga")?;
+    let (cfg, plastic, genome) = load_model(args, env)?;
+    let rule = deployed_rule(&cfg, plastic, &genome);
     let backend: Box<dyn SnnBackend> = match (kind, plastic) {
         (BackendKind::Native, true) => {
             Box::new(NativeBackend::plastic_with_threads(cfg, rule, step_threads))
@@ -243,31 +274,13 @@ fn cmd_adapt(args: &Args, seed: u64) -> i32 {
     let env = args.get_or("env", "ant-dir");
     let batch = args.get_usize("batch", 1).max(1);
     let grid = args.get_or("grid", "task");
-    // Adaptation episodes shard by scenario, not by step: one thread.
-    // The native backend hosts the whole scenario batch in one SoA
-    // engine; single-session backends (xla, fpga) are replicated — one
-    // instance per concurrent scenario (correct fallback, no batching).
     let kind = BackendKind::parse(&args.get_or("backend", "native"));
-    let mut backend: Box<dyn SnnBackend> = if kind == Some(BackendKind::Native) || batch == 1 {
-        match load_backend(args, &env, 1) {
-            Ok(b) => b,
-            Err(e) => {
-                eprintln!("{e}");
-                return 1;
-            }
-        }
-    } else {
-        let mut instances = Vec::with_capacity(batch);
-        for _ in 0..batch {
-            match load_backend(args, &env, 1) {
-                Ok(b) => instances.push(b),
-                Err(e) => {
-                    eprintln!("{e}");
-                    return 1;
-                }
-            }
-        }
-        Box::new(ReplicatedBackend::from_instances(instances))
+    // Adaptation parallelizes by *scenario chunk* (plant + network per
+    // chunk), not by step: --adapt-threads picks the chunk count for
+    // the native backend's chunked engine (0 = all CPU cores).
+    let adapt_threads = match args.get_usize("adapt-threads", 1) {
+        0 => firefly_p::util::threadpool::available_cores(),
+        n => n,
     };
     let perturb_spec = args.get_or("perturb", "");
     let perturbation = if perturb_spec.is_empty() {
@@ -281,7 +294,13 @@ fn cmd_adapt(args: &Args, seed: u64) -> i32 {
             }
         }
     };
-    let family = family_of(&env).unwrap();
+    let family = match family_of(&env) {
+        Some(f) => f,
+        None => {
+            eprintln!("unknown env {env:?}");
+            return 2;
+        }
+    };
     let perturb_at = args.get_usize("perturb-at", 100);
     let schedule_spec = args.get_or("perturb-schedule", "");
 
@@ -289,6 +308,13 @@ fn cmd_adapt(args: &Args, seed: u64) -> i32 {
     // --perturb-schedule always routes through the batched engine so
     // the schedule is honored even at B = 1.
     if batch == 1 && grid == "task" && schedule_spec.is_empty() {
+        let mut backend: Box<dyn SnnBackend> = match load_backend(args, &env, 1) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
         let tasks = train_grid(family);
         let task = tasks[args.get_usize("task", 0).min(tasks.len() - 1)].clone();
         let cfg = AdaptConfig {
@@ -353,21 +379,115 @@ fn cmd_adapt(args: &Args, seed: u64) -> i32 {
         max_steps: None,
     };
     let mut logs = Vec::with_capacity(scenarios.len());
+    let mut metrics = Metrics::new();
+    let backend_name;
+    // What actually ran, for the report line: the replicated fallback
+    // ignores --adapt-threads and steps on one thread.
+    let mut effective_threads = adapt_threads;
     let t0 = std::time::Instant::now();
-    for chunk in scenarios.chunks(batch) {
-        logs.extend(run_batch_adaptation(backend.as_mut(), &cfg, chunk));
+    if kind == Some(BackendKind::Native) {
+        // Scenario-sharded chunked engine: the grid fans out over
+        // engine runs of up to `batch` sessions, each run partitioned
+        // into `adapt_threads` per-core chunks (plant + network both
+        // parallel) whose plastic backends all share one
+        // Arc<NetworkRule> θ allocation. Bit-identical to the inline
+        // engine at any thread count (tests/batch_adapt_equivalence.rs).
+        backend_name = "native";
+        // Each engine run hosts at most `batch` concurrent sessions, so
+        // a run can never spread across more than `batch` chunks —
+        // surface the cap instead of silently reporting the requested
+        // thread count against serial throughput.
+        effective_threads = adapt_threads.clamp(1, batch);
+        if effective_threads < adapt_threads {
+            eprintln!(
+                "note: --adapt-threads {adapt_threads} capped to --batch {batch} \
+                 (each engine run hosts at most --batch concurrent sessions; \
+                 raise --batch to use more cores)"
+            );
+        }
+        let (net_cfg, plastic, genome) = match load_model(args, &env) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        };
+        let rule = Arc::new(deployed_rule(&net_cfg, plastic, &genome));
+        let spec = if plastic {
+            ChunkBackendSpec::Plastic(rule)
+        } else {
+            ChunkBackendSpec::Fixed(&genome)
+        };
+        // One fresh engine (pool + per-chunk backends) per slice: the
+        // setup is cold-path — amortized over a full episode horizon of
+        // ticks per run — and fresh per-chunk backends start episodes
+        // from exactly the state the old reused-backend loop produced
+        // via per-session resets.
+        for chunk in scenarios.chunks(batch) {
+            let run = run_chunked_adaptation::<f32>(
+                &net_cfg,
+                spec.clone(),
+                &cfg,
+                chunk,
+                effective_threads,
+            );
+            // Per-run registries merge in chunk order: the aggregate
+            // report is independent of batch size and thread count.
+            let mut m = Metrics::new();
+            GridSummary::observe_logs(&mut m, &run);
+            metrics.absorb(m);
+            logs.extend(run);
+        }
+    } else {
+        // xla/fpga: single-session backends serve wider batches through
+        // the ReplicatedBackend fallback (one instance per session —
+        // correct, not batched), stepped by the inline engine on the
+        // caller thread. The chunked engine cannot construct per-chunk
+        // replicas of these backends, so --adapt-threads is native-only.
+        if adapt_threads > 1 {
+            eprintln!(
+                "note: --adapt-threads applies to --backend native only; \
+                 running the replicated engine single-threaded"
+            );
+        }
+        effective_threads = 1;
+        let mut backend: Box<dyn SnnBackend> = if batch == 1 {
+            match load_backend(args, &env, 1) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            }
+        } else {
+            let mut instances = Vec::with_capacity(batch);
+            for _ in 0..batch {
+                match load_backend(args, &env, 1) {
+                    Ok(b) => instances.push(b),
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 1;
+                    }
+                }
+            }
+            Box::new(ReplicatedBackend::from_instances(instances))
+        };
+        backend_name = backend.name();
+        for chunk in scenarios.chunks(batch) {
+            let run = run_batch_adaptation(backend.as_mut(), &cfg, chunk);
+            let mut m = Metrics::new();
+            GridSummary::observe_logs(&mut m, &run);
+            metrics.absorb(m);
+            logs.extend(run);
+        }
     }
     let elapsed = t0.elapsed().as_secs_f64();
     let total_steps: usize = logs.iter().map(|l| l.rewards.len()).sum();
-
-    let mut metrics = Metrics::new();
-    GridSummary::observe_logs(&mut metrics, &logs);
     let summary = GridSummary::from_logs(&logs);
     println!(
-        "env={env} backend={} grid={grid} sessions={} batch={batch} \
-         steps_per_s={:.0} mean_reward={:.2} mean_recovery={:.3} \
-         recovered={}/{} time_to_recover_p50={:.1}",
-        backend.name(),
+        "env={env} backend={backend_name} grid={grid} sessions={} batch={batch} \
+         adapt_threads={effective_threads} steps_per_s={:.0} mean_reward={:.2} \
+         mean_recovery={:.3} recovered={}/{} time_to_recover_p50={:.1}",
         summary.sessions,
         total_steps as f64 / elapsed.max(1e-9),
         summary.mean_total_reward,

@@ -52,7 +52,9 @@
 //! shard still amortizes that stream over up to 64 sessions per word,
 //! and cross-core traffic stays read-only.
 
-use super::network::{Mode, SnnConfig, SnnNetwork};
+use std::sync::Arc;
+
+use super::network::{Mode, NetworkRule, SnnConfig, SnnNetwork};
 use super::numeric::Scalar;
 use super::spike::{words_for, LANES};
 use crate::util::threadpool::ThreadPool;
@@ -144,6 +146,15 @@ impl<S: Scalar> ShardedNetwork<S> {
     /// Borrow one shard's network (diagnostics / tests).
     pub fn shard(&self, k: usize) -> &SnnNetwork<S> {
         &self.shards[k]
+    }
+
+    /// The shared frozen rule θ behind every shard's [`Mode::Plastic`]
+    /// (`None` in fixed mode). Chunked multi-engine deployments pass
+    /// clones of one `Arc` into every chunk's backend, so *all* shards
+    /// of *all* chunks stream the same θ allocation — this accessor is
+    /// what the θ-sharing conformance tests `Arc::ptr_eq` against.
+    pub fn rule(&self) -> Option<&Arc<NetworkRule>> {
+        self.shards[0].mode.rule()
     }
 
     /// Grow the provisioned session count to `new_batch` **without

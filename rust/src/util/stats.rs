@@ -141,6 +141,29 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Fold another accumulator into this one (Chan et al.'s parallel
+    /// combine): the result summarizes the union of both sample sets.
+    /// Used by [`crate::coordinator::Metrics::absorb`] to merge
+    /// per-chunk registries of a scenario-sharded run in chunk order.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let na = self.n as f64;
+        let nb = other.n as f64;
+        let n = na + nb;
+        let delta = other.mean - self.mean;
+        self.mean += delta * nb / n;
+        self.m2 += other.m2 + delta * delta * na * nb / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// Running mean (0.0 before any sample).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
@@ -174,6 +197,32 @@ mod tests {
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((mean(&xs) - 5.0).abs() < 1e-12);
         assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn welford_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..50).map(|i| (i as f64) * 0.37 - 3.0).collect();
+        for split in [0usize, 1, 25, 49, 50] {
+            let mut whole = Welford::new();
+            for &x in &xs {
+                whole.add(x);
+            }
+            let (a, b) = xs.split_at(split);
+            let mut wa = Welford::new();
+            for &x in a {
+                wa.add(x);
+            }
+            let mut wb = Welford::new();
+            for &x in b {
+                wb.add(x);
+            }
+            wa.merge(&wb);
+            assert_eq!(wa.n, whole.n, "split {split}");
+            assert!((wa.mean() - whole.mean()).abs() < 1e-9, "split {split}");
+            assert!((wa.variance() - whole.variance()).abs() < 1e-9, "split {split}");
+            assert_eq!(wa.min, whole.min, "split {split}");
+            assert_eq!(wa.max, whole.max, "split {split}");
+        }
     }
 
     #[test]

@@ -1,8 +1,11 @@
-//! Fixed-size thread pool over std channels (the offline registry has no
-//! tokio/rayon). Used by the ES leader to fan population rollouts out to
-//! worker threads, by the Fig-3 benchmark to run seeds in parallel, and
-//! by the sharded batched stepper ([`crate::snn::ShardedNetwork`]) to
-//! drive per-shard network steps across cores.
+//! Fixed-size thread pool over per-worker mailboxes (the offline
+//! registry has no tokio/rayon). Used by the ES leader to fan population
+//! rollouts out to worker threads, by the Fig-3 benchmark to run seeds
+//! in parallel, by the sharded batched stepper
+//! ([`crate::snn::ShardedNetwork`]) to drive per-shard network steps
+//! across cores, and by the chunked adaptation engine
+//! ([`crate::coordinator::batch_adapt::ChunkedAdaptEngine`]) to step
+//! whole scenario chunks (plant + network) in parallel.
 //!
 //! Design: a scoped map — `map_indexed` takes a slice of inputs and a
 //! worker function and returns outputs in input order. Workers pull
@@ -15,11 +18,26 @@
 //! onto the pool's workers and join them all before the scope returns —
 //! the pool-backed analogue of `std::thread::scope`, without re-spawning
 //! OS threads every tick.
+//!
+//! # Pooled job boxes (alloc-free scope dispatch)
+//!
+//! Scope jobs are not boxed per dispatch. Each worker owns a one-deep
+//! **mailbox slot** backed by a reusable raw capture buffer: `spawn_on`
+//! writes the closure's capture in place (the buffer's capacity and the
+//! scratch the worker moves it into persist across calls), so a
+//! steady-state multi-shard / multi-chunk tick performs **zero heap
+//! allocations** for dispatch once the first tick has sized the buffers
+//! (pinned by `tests/alloc_free_serving.rs`). Fire-and-forget `'static`
+//! jobs ([`ThreadPool::execute`] / [`ThreadPool::execute_on`]) still box
+//! into a per-worker queue — that path serves connection handlers and ES
+//! generations, not per-tick dispatch.
 
+use std::alloc::Layout;
 use std::any::Any;
+use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of worker threads to use by default: physical parallelism,
@@ -32,7 +50,8 @@ pub fn default_workers() -> usize {
 
 /// Number of hardware threads available (no coordinator-core reserve) —
 /// the default shard count of the batched serving stepper
-/// (`--step-threads`).
+/// (`--step-threads`) and the default chunk count of the batched
+/// adaptation engine (`--adapt-threads 0`).
 pub fn available_cores() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -82,39 +101,173 @@ where
         .collect()
 }
 
-/// Persistent pool for repeated dispatch without re-spawning threads each
-/// generation. Jobs are boxed closures; results are retrieved via
-/// [`PoolHandle::join`].
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A type-erased borrowing scope job whose capture bytes sit in the
+/// worker mailbox's reusable store; `call` moves the capture out of the
+/// given pointer and invokes it.
+struct RawTask {
+    call: unsafe fn(*mut u8),
+    size: usize,
+    align: usize,
+}
+
+/// Reusable raw capture storage: an aligned heap block whose capacity
+/// (and alignment) only ever grow, so repeated same-shaped jobs reuse
+/// the first allocation — the "pooled job box".
+struct RawBuf {
+    ptr: *mut u8,
+    cap: usize,
+    align: usize,
+}
+
+// SAFETY: RawBuf is a plain owned allocation; the bytes it holds are
+// only ever produced/consumed under the mailbox protocol below.
+unsafe impl Send for RawBuf {}
+
+impl RawBuf {
+    const fn new() -> RawBuf {
+        RawBuf {
+            ptr: std::ptr::null_mut(),
+            cap: 0,
+            align: 1,
+        }
+    }
+
+    /// Pointer to at least `size` bytes at `align`, reusing the current
+    /// allocation when it suffices (the steady-state path allocates
+    /// nothing). Zero-sized captures get a well-aligned dangling
+    /// pointer.
+    fn ensure(&mut self, size: usize, align: usize) -> *mut u8 {
+        if size == 0 {
+            return align as *mut u8;
+        }
+        if size <= self.cap && align <= self.align {
+            return self.ptr;
+        }
+        let new_cap = size.max(self.cap);
+        let new_align = align.max(self.align);
+        self.release();
+        let layout = Layout::from_size_align(new_cap, new_align).expect("job capture layout");
+        // SAFETY: layout has non-zero size (size > 0 above).
+        let ptr = unsafe { std::alloc::alloc(layout) };
+        assert!(!ptr.is_null(), "job capture allocation failed");
+        self.ptr = ptr;
+        self.cap = new_cap;
+        self.align = new_align;
+        ptr
+    }
+
+    fn release(&mut self) {
+        if !self.ptr.is_null() {
+            let layout =
+                Layout::from_size_align(self.cap, self.align).expect("job capture layout");
+            // SAFETY: ptr was allocated with exactly this layout.
+            unsafe { std::alloc::dealloc(self.ptr, layout) };
+            self.ptr = std::ptr::null_mut();
+            self.cap = 0;
+            self.align = 1;
+        }
+    }
+}
+
+impl Drop for RawBuf {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+/// Per-worker mailbox state, guarded by the worker's mutex.
+struct WorkerState {
+    /// FIFO of fire-and-forget `'static` jobs (`execute`/`execute_on`).
+    queue: VecDeque<Job>,
+    /// One-deep slot for the pending borrowed scope job (its capture
+    /// lives in `store`). Dispatchers wait while it is occupied.
+    task: Option<RawTask>,
+    /// Pooled capture storage for `task` (capacity persists).
+    store: RawBuf,
+    /// Set when the worker thread died unwinding a queued job —
+    /// dispatch must fail loudly instead of queueing into the void.
+    dead: bool,
+    /// Set by `Drop`: exit once all queued work is drained.
+    shutdown: bool,
+}
+
+struct WorkerShared {
+    mx: Mutex<WorkerState>,
+    cv: Condvar,
+}
+
+/// Completion tracking for the (single) active scope.
+struct ScopeInner {
+    pending: usize,
+    /// First panicking job's payload, re-raised by the scope owner.
+    payload: Option<Box<dyn Any + Send>>,
+}
+
+struct ScopeSync {
+    mx: Mutex<ScopeInner>,
+    cv: Condvar,
+}
+
+struct PoolShared {
+    workers: Vec<WorkerShared>,
+    scope: ScopeSync,
+    /// Guards the one-scope-at-a-time contract (scope state is pooled,
+    /// not per-scope, so dispatch stays allocation-free).
+    scope_active: AtomicBool,
+}
+
+/// Persistent pool for repeated dispatch without re-spawning threads
+/// each generation (or each tick — see the module docs for the pooled
+/// scope-dispatch path).
 pub struct ThreadPool {
-    senders: Vec<std::sync::mpsc::Sender<Job>>,
+    shared: Arc<PoolShared>,
     handles: Vec<std::thread::JoinHandle<()>>,
     rr: AtomicUsize,
 }
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
 
 impl ThreadPool {
     /// Spawn a pool of `workers` named threads (at least one).
     pub fn new(workers: usize) -> Self {
         let workers = workers.max(1);
-        let mut senders = Vec::with_capacity(workers);
+        let shared = Arc::new(PoolShared {
+            workers: (0..workers)
+                .map(|_| WorkerShared {
+                    mx: Mutex::new(WorkerState {
+                        queue: VecDeque::new(),
+                        task: None,
+                        store: RawBuf::new(),
+                        dead: false,
+                        shutdown: false,
+                    }),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+            scope: ScopeSync {
+                mx: Mutex::new(ScopeInner {
+                    pending: 0,
+                    payload: None,
+                }),
+                cv: Condvar::new(),
+            },
+            scope_active: AtomicBool::new(false),
+        });
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
-            let (tx, rx) = std::sync::mpsc::channel::<Job>();
-            senders.push(tx);
+            let shared = Arc::clone(&shared);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("fireflyp-worker-{w}"))
                     .spawn(move || {
-                        while let Ok(job) = rx.recv() {
-                            job();
-                        }
+                        let guard = DeadFlag { shared, w };
+                        worker_loop(&guard.shared, w);
                     })
                     .expect("spawn worker"),
             );
         }
         ThreadPool {
-            senders,
+            shared,
             handles,
             rr: AtomicUsize::new(0),
         }
@@ -122,12 +275,12 @@ impl ThreadPool {
 
     /// Number of worker threads in the pool.
     pub fn workers(&self) -> usize {
-        self.senders.len()
+        self.shared.workers.len()
     }
 
     /// Round-robin dispatch of a fire-and-forget job.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.senders.len();
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.workers();
         self.execute_on(i, job);
     }
 
@@ -137,10 +290,15 @@ impl ThreadPool {
     /// exclusivity guarantee: the control server pins each connection
     /// handler to the worker matching its session slot — live slots are
     /// unique, so a long-blocking handler can never queue behind another
-    /// live connection.
+    /// live connection. (Pending scope jobs run before queued jobs: the
+    /// per-tick dispatch path has latency priority.)
     pub fn execute_on(&self, worker: usize, job: impl FnOnce() + Send + 'static) {
-        let i = worker % self.senders.len();
-        self.senders[i].send(Box::new(job)).expect("worker hung up");
+        let ws = &self.shared.workers[worker % self.workers()];
+        let mut st = ws.mx.lock().unwrap();
+        assert!(!st.dead, "worker hung up (a queued job panicked)");
+        st.queue.push_back(Box::new(job));
+        drop(st);
+        ws.cv.notify_all();
     }
 
     /// Run borrowing jobs on the pool and **join them all before
@@ -155,28 +313,63 @@ impl ThreadPool {
     /// panic payload is re-raised from `scope` after all jobs have
     /// drained (first panic wins, like `std::thread::scope`).
     ///
-    /// The sharded batched stepper uses this with [`Scope::spawn_on`] to
-    /// pin each 64-lane session shard to its own worker
-    /// (`join_on`-style: dispatch pinned, then join the whole wave).
+    /// Dispatch through the scope is **allocation-free once warm** (see
+    /// the module docs): captures are written into pooled per-worker
+    /// job boxes, and the scope's completion state is pool-owned. The
+    /// price of pooling that state is that scopes cannot nest or run
+    /// concurrently **on the same pool** — doing so panics. (Scopes on
+    /// different pools, e.g. a chunked engine whose chunk backends own
+    /// their own shard pools, compose freely.)
+    ///
+    /// The sharded batched stepper and the chunked adaptation engine
+    /// use this with [`Scope::spawn_on`] to pin shard/chunk *k* to
+    /// worker *k* (dispatch pinned, then join the whole wave).
     pub fn scope<'pool, 'env, R>(&'pool self, f: impl FnOnce(&Scope<'pool, 'env>) -> R) -> R {
+        assert!(
+            !self.shared.scope_active.swap(true, Ordering::Acquire),
+            "ThreadPool::scope does not nest on one pool (scope state is pooled)"
+        );
         let scope = Scope {
             pool: self,
-            state: Arc::new(ScopeState::default()),
             _env: PhantomData,
         };
         // Join even if `f` unwinds: jobs borrow caller state, so they
         // must complete before the caller's frame is torn down.
-        struct JoinOnDrop<'a>(&'a ScopeState);
-        impl Drop for JoinOnDrop<'_> {
-            fn drop(&mut self) {
-                self.0.join();
+        struct JoinOnDrop<'a> {
+            shared: &'a PoolShared,
+            payload: Option<Box<dyn Any + Send>>,
+            done: bool,
+        }
+        impl JoinOnDrop<'_> {
+            fn join(&mut self) {
+                let mut sc = self.shared.scope.mx.lock().unwrap();
+                while sc.pending > 0 {
+                    sc = self.shared.scope.cv.wait(sc).unwrap();
+                }
+                self.payload = sc.payload.take();
+                drop(sc);
+                self.done = true;
+                self.shared.scope_active.store(false, Ordering::Release);
             }
         }
-        let guard = JoinOnDrop(&scope.state);
+        impl Drop for JoinOnDrop<'_> {
+            fn drop(&mut self) {
+                if !self.done {
+                    // Unwind path: drain the jobs and discard their
+                    // panic payload — the caller's panic wins.
+                    self.join();
+                    self.payload = None;
+                }
+            }
+        }
+        let mut guard = JoinOnDrop {
+            shared: &self.shared,
+            payload: None,
+            done: false,
+        };
         let result = f(&scope);
-        drop(guard); // blocks until every spawned job finished
-        let payload = scope.state.panic_payload.lock().unwrap().take();
-        if let Some(payload) = payload {
+        guard.join(); // blocks until every spawned job finished
+        if let Some(payload) = guard.payload.take() {
             resume_unwind(payload);
         }
         result
@@ -191,7 +384,7 @@ impl ThreadPool {
         let n = jobs.len();
         let results: Arc<Vec<Mutex<Option<O>>>> =
             Arc::new((0..n).map(|_| Mutex::new(None)).collect());
-        let done = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
         for (i, job) in jobs.into_iter().enumerate() {
             let results = Arc::clone(&results);
             let done = Arc::clone(&done);
@@ -222,28 +415,103 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.senders.clear(); // close channels → workers exit
+        for ws in &self.shared.workers {
+            let mut st = ws.mx.lock().unwrap_or_else(|e| e.into_inner());
+            st.shutdown = true;
+            drop(st);
+            ws.cv.notify_all();
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-/// Completion tracking shared between a [`Scope`] and its in-flight jobs.
-#[derive(Default)]
-struct ScopeState {
-    pending: Mutex<usize>,
-    done: Condvar,
-    /// First panicking job's payload, re-raised by the scope owner.
-    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+/// Unwind guard installed on every worker thread: if a queued `'static`
+/// job panics (the only uncaught path — scope jobs are caught on the
+/// worker), mark the mailbox dead so later dispatch fails loudly
+/// instead of queueing into the void, and release any scope task that
+/// was deposited while the thread was already unwinding — it will never
+/// run, and leaving its completion slot reserved would hang the scope's
+/// join forever. (The orphaned capture's bytes are leaked, not dropped:
+/// the worker is already down from a bug, and `RawTask` carries no drop
+/// thunk.)
+struct DeadFlag {
+    shared: Arc<PoolShared>,
+    w: usize,
 }
 
-impl ScopeState {
-    fn join(&self) {
-        let mut pending = self.pending.lock().unwrap();
-        while *pending > 0 {
-            pending = self.done.wait(pending).unwrap();
+impl Drop for DeadFlag {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
         }
+        let ws = &self.shared.workers[self.w];
+        let orphan = match ws.mx.lock() {
+            Ok(mut st) => {
+                st.dead = true;
+                st.task.take()
+            }
+            Err(_) => None,
+        };
+        ws.cv.notify_all();
+        if orphan.is_some() {
+            let sync = &self.shared.scope;
+            let mut sc = sync.mx.lock().unwrap_or_else(|e| e.into_inner());
+            sc.pending -= 1;
+            if sc.pending == 0 {
+                sync.cv.notify_all();
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, w: usize) {
+    let ws = &shared.workers[w];
+    // Scratch the scope capture is moved into before invocation, so the
+    // mailbox store frees for the next dispatch immediately. Capacity
+    // persists — the worker-side half of the pooled job box.
+    let mut scratch = RawBuf::new();
+    loop {
+        let mut st = ws.mx.lock().unwrap();
+        loop {
+            if st.task.is_some() || !st.queue.is_empty() {
+                break;
+            }
+            if st.shutdown {
+                return;
+            }
+            st = ws.cv.wait(st).unwrap();
+        }
+        if let Some(task) = st.task.take() {
+            // Move the capture bytes out of the mailbox store (a Rust
+            // move is a memcpy; the source is dead afterwards), free the
+            // slot for the next dispatch, then invoke outside the lock.
+            let dst = scratch.ensure(task.size, task.align);
+            if task.size > 0 {
+                // SAFETY: the dispatcher wrote a live capture of
+                // task.size bytes into store; dst has that capacity.
+                unsafe { std::ptr::copy_nonoverlapping(st.store.ptr, dst, task.size) };
+            }
+            drop(st);
+            ws.cv.notify_all(); // slot free → a waiting dispatcher may refill
+            // SAFETY: dst holds the moved capture; call consumes it.
+            let result = catch_unwind(AssertUnwindSafe(|| unsafe { (task.call)(dst) }));
+            let mut sc = shared.scope.mx.lock().unwrap();
+            if let Err(payload) = result {
+                if sc.payload.is_none() {
+                    sc.payload = Some(payload);
+                }
+            }
+            sc.pending -= 1;
+            if sc.pending == 0 {
+                shared.scope.cv.notify_all();
+            }
+            continue;
+        }
+        let job = st.queue.pop_front().expect("non-empty queue");
+        drop(st);
+        job(); // a panic here unwinds the thread; the dead flag fires
     }
 }
 
@@ -252,7 +520,6 @@ impl ScopeState {
 /// joins them all before returning.
 pub struct Scope<'pool, 'env> {
     pool: &'pool ThreadPool,
-    state: Arc<ScopeState>,
     /// Invariant over `'env`, like `std::thread::Scope`.
     _env: PhantomData<&'env mut &'env ()>,
 }
@@ -260,44 +527,69 @@ pub struct Scope<'pool, 'env> {
 impl<'pool, 'env> Scope<'pool, 'env> {
     /// Spawn a borrowing job on the pool (round-robin worker choice).
     pub fn spawn(&self, job: impl FnOnce() + Send + 'env) {
-        self.dispatch(None, Box::new(job));
+        let w = self.pool.rr.fetch_add(1, Ordering::Relaxed) % self.pool.workers();
+        self.spawn_on(w, job);
     }
 
     /// Spawn a borrowing job pinned to a specific worker
     /// (`worker % workers()`), preserving [`ThreadPool::execute_on`]'s
     /// exclusivity guarantee: jobs on one worker run sequentially. The
     /// sharded stepper pins shard *k* to worker *k* so consecutive ticks
-    /// of a shard reuse the same core's warm cache.
-    pub fn spawn_on(&self, worker: usize, job: impl FnOnce() + Send + 'env) {
-        self.dispatch(Some(worker), Box::new(job));
-    }
+    /// of a shard reuse the same core's warm cache; the chunked
+    /// adaptation engine does the same per scenario chunk.
+    ///
+    /// The capture is written into the worker's pooled job box — no
+    /// per-dispatch boxing. Each worker's mailbox is one job deep: a
+    /// second job pinned to a busy worker makes the *dispatcher* wait
+    /// until the slot frees (it would have queued behind the first job
+    /// anyway). A job must therefore never `spawn_on` its own worker —
+    /// that is the same self-deadlock as joining yourself.
+    pub fn spawn_on<F: FnOnce() + Send + 'env>(&self, worker: usize, job: F) {
+        let shared = &self.pool.shared;
+        // Reserve the completion slot before the job can possibly run.
+        shared.scope.mx.lock().unwrap().pending += 1;
 
-    fn dispatch(&self, worker: Option<usize>, job: Box<dyn FnOnce() + Send + 'env>) {
-        *self.state.pending.lock().unwrap() += 1;
-        let state = Arc::clone(&self.state);
-        // SAFETY: the scope joins (blocks on `pending == 0`) before it
-        // returns — on the success path and, via `JoinOnDrop`, when the
-        // scope closure unwinds — so every borrow captured by `job`
-        // outlives the job's execution. Erasing the lifetime is the same
-        // trick `std::thread::scope` / crossbeam use underneath.
-        let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
-        let run = move || {
-            if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
-                let mut slot = state.panic_payload.lock().unwrap();
-                if slot.is_none() {
-                    *slot = Some(payload);
-                }
-            }
-            let mut pending = state.pending.lock().unwrap();
-            *pending -= 1;
-            if *pending == 0 {
-                state.done.notify_all();
-            }
-        };
-        match worker {
-            Some(w) => self.pool.execute_on(w, run),
-            None => self.pool.execute(run),
+        let ws = &shared.workers[worker % self.pool.workers()];
+        let mut st = ws.mx.lock().unwrap();
+        while st.task.is_some() && !st.dead {
+            st = ws.cv.wait(st).unwrap();
         }
+        if st.dead {
+            drop(st);
+            // Roll the reservation back so the scope join cannot hang
+            // on a job that will never run, then fail loudly.
+            let mut sc = shared.scope.mx.lock().unwrap();
+            sc.pending -= 1;
+            if sc.pending == 0 {
+                shared.scope.cv.notify_all();
+            }
+            drop(sc);
+            panic!("worker hung up (a queued job panicked)");
+        }
+
+        let size = std::mem::size_of::<F>();
+        let align = std::mem::align_of::<F>();
+        let ptr = st.store.ensure(size, align);
+        // SAFETY: ptr is valid for size bytes at F's alignment; the
+        // mailbox protocol guarantees exactly one reader moves the
+        // capture back out before the slot is reused. Erasing `F`'s
+        // `'env` borrows is sound because the scope joins (blocks until
+        // `pending == 0`) before returning — on the success path and,
+        // via `JoinOnDrop`, when the scope closure unwinds — the same
+        // trick `std::thread::scope`/crossbeam use underneath.
+        unsafe { std::ptr::write(ptr.cast::<F>(), job) };
+        // SAFETY (caller): p holds a live, moved-in `F`; read consumes
+        // it exactly once.
+        unsafe fn invoke_erased<F: FnOnce()>(p: *mut u8) {
+            (std::ptr::read(p.cast::<F>()))()
+        }
+        st.task = Some(RawTask {
+            call: invoke_erased::<F>,
+            size,
+            align,
+        });
+        drop(st);
+        ws.cv.notify_all();
     }
 }
 
@@ -458,6 +750,81 @@ mod tests {
             Box::new(|| 4usize),
         ]);
         assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scope_pools_job_boxes_across_capture_shapes() {
+        // The pooled mailbox must survive alternating capture sizes and
+        // alignments: zero-sized closures, pointer-sized captures, and
+        // bulky by-value arrays that force the store to grow.
+        static HITS: AtomicUsize = AtomicUsize::new(0);
+        let pool = ThreadPool::new(2);
+        let mut sum = 0u64;
+        let big: [u64; 64] = std::array::from_fn(|i| i as u64);
+        for round in 0..20u64 {
+            HITS.store(0, Ordering::SeqCst);
+            let total = std::sync::atomic::AtomicU64::new(0);
+            pool.scope(|sc| {
+                // ZST capture
+                sc.spawn_on(0, || {
+                    HITS.fetch_add(1, Ordering::SeqCst);
+                });
+                // reference capture (pointer-sized)
+                let total_ref = &total;
+                sc.spawn_on(1, move || {
+                    total_ref.fetch_add(round, Ordering::SeqCst);
+                });
+                // large by-value capture (moves 512 bytes through the box)
+                let arr = big;
+                let total_ref = &total;
+                sc.spawn_on(0, move || {
+                    let s: u64 = arr.iter().sum();
+                    total_ref.fetch_add(s, Ordering::SeqCst);
+                });
+            });
+            assert_eq!(HITS.load(Ordering::SeqCst), 1);
+            sum += total.load(Ordering::SeqCst);
+        }
+        // Σ rounds + 20 × Σ 0..64
+        assert_eq!(sum, (0..20).sum::<u64>() + 20 * (0..64).sum::<u64>());
+    }
+
+    #[test]
+    fn nested_scope_on_one_pool_panics() {
+        let pool = ThreadPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|_outer| {
+                pool.scope(|_inner| {});
+            });
+        }));
+        assert!(caught.is_err(), "nesting scopes on one pool must panic");
+        // the pool recovers: a fresh scope works
+        let flag = AtomicBool::new(false);
+        pool.scope(|sc| {
+            let flag = &flag;
+            sc.spawn(move || flag.store(true, Ordering::SeqCst));
+        });
+        assert!(flag.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn queued_job_panic_kills_worker_loudly() {
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        pool.execute_on(0, move || {
+            let _tx = tx; // dropped during unwind → rx disconnects
+            panic!("queue boom");
+        });
+        let _ = rx.recv(); // worker is at least mid-unwind now
+        let died = (0..400).any(|_| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            catch_unwind(AssertUnwindSafe(|| pool.execute_on(0, || {}))).is_err()
+        });
+        assert!(died, "dispatch to a dead worker must fail loudly");
+        // the sibling worker is untouched
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        pool.execute_on(1, move || tx.send(7).unwrap());
+        assert_eq!(rx.recv().unwrap(), 7);
     }
 
     #[test]

@@ -18,17 +18,27 @@
 //! per-session encode, one batched step, decode, pooled
 //! `Env::step_into` — allocates nothing once warm.
 //!
+//! Two more tests pin the **multi-threaded** steady states (ISSUE 5):
+//! a chunked adaptation engine (`ChunkedAdaptEngine`, T > 1) whose
+//! per-tick `ThreadPool::scope` dispatch goes through pooled per-worker
+//! job boxes, and a multi-shard serving backend (`--step-threads` > 1),
+//! both of which must allocate nothing once warm — *including* the
+//! scope dispatch itself (the worker threads run inside the armed
+//! window and are counted).
+//!
 //! The allocator counts process-wide, so the tests serialize their
-//! armed windows through a mutex; no allocation from the other test can
-//! land inside an armed window.
+//! armed windows through a mutex; no allocation from the other tests
+//! can land inside an armed window.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use firefly_p::backend::{NativeBackend, SnnBackend};
-use firefly_p::coordinator::batch_adapt::{BatchAdaptConfig, BatchAdaptEngine, Scenario};
+use firefly_p::coordinator::batch_adapt::{
+    BatchAdaptConfig, BatchAdaptEngine, ChunkBackendSpec, ChunkedAdaptEngine, Scenario,
+};
 use firefly_p::coordinator::server::parse_floats_into;
 use firefly_p::env::{train_grid, Perturbation, TaskFamily};
 use firefly_p::snn::encoding::{PopulationEncoder, TraceDecoder};
@@ -264,4 +274,162 @@ fn steady_state_batch_adapt_ticks_allocate_nothing() {
         assert_eq!(log.perturb_at, Some(10));
         assert!(log.total_reward.is_finite());
     }
+}
+
+#[test]
+fn steady_state_chunked_adapt_ticks_allocate_nothing() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // The ISSUE 5 acceptance: a T = 2 chunked engine — two per-core
+    // chunks, each with its own backend/envs/RNGs, ticked through
+    // ThreadPool::scope — performs zero heap allocations in steady
+    // state, *including* the scope dispatch (pooled job boxes). The
+    // worker threads run inside the armed window, so any per-dispatch
+    // boxing or per-scope state allocation would trip the counter.
+    let tasks = train_grid(TaskFamily::Velocity);
+    let scenarios: Vec<Scenario> = (0..8)
+        .map(|s| Scenario {
+            task: tasks[s % tasks.len()].clone(),
+            perturbation: if s % 2 == 0 {
+                Some(Perturbation::leg_failure(vec![0]))
+            } else {
+                Some(Perturbation::weak_motors(0.5))
+            },
+            perturb_at: 10, // fires inside the warmup window
+            seed: 31 + s as u64,
+        })
+        .collect();
+
+    let mut cfg = SnnConfig::control(48, 12);
+    cfg.n_hidden = 32;
+    let mut rng = Pcg64::new(13, 0);
+    let mut genome = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut genome, 0.1);
+    let rule = Arc::new(NetworkRule::from_flat(&cfg, &genome));
+
+    let bcfg = BatchAdaptConfig {
+        env_name: "cheetah-vel".into(),
+        window: 20,
+        max_steps: None, // env horizon (200) bounds the episode
+    };
+    let mut engine =
+        ChunkedAdaptEngine::<f32>::new(&cfg, ChunkBackendSpec::Plastic(rule), &bcfg, &scenarios, 2);
+    assert_eq!(engine.chunk_count(), 2);
+
+    // Warmup: size the pooled engine buffers AND the pooled per-worker
+    // job boxes (first dispatch per worker allocates its capture store
+    // and scratch), inject the perturbations, settle.
+    for _ in 0..50 {
+        assert!(engine.tick(), "episode ended during warmup");
+    }
+
+    // Armed window: steady-state chunked ticks, zero allocations.
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for _ in 0..140 {
+        assert!(engine.tick(), "episode ended during armed window");
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        allocs, 0,
+        "steady-state chunked adaptation tick allocated {allocs} times over \
+         140 ticks × 8 sessions × 2 chunks"
+    );
+
+    // Still a real closed-loop run: drive to the horizon and sanity
+    // check the merged logs (chunk order = scenario order).
+    while engine.tick() {}
+    let logs = engine.finish();
+    assert_eq!(logs.len(), 8);
+    for log in &logs {
+        assert_eq!(log.rewards.len(), 200);
+        assert_eq!(log.perturb_at, Some(10));
+        assert!(log.total_reward.is_finite());
+    }
+}
+
+#[test]
+fn steady_state_sharded_serving_allocates_nothing() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // The multi-shard serving path (--step-threads > 1): 130 sessions
+    // over 3 packed words → 2 shards at T = 2, each shard stepped on a
+    // pinned pool worker via scope dispatch. The ROADMAP follow-up this
+    // pins: multi-shard dispatch used to box one closure per active
+    // shard per tick; the pooled job boxes make it allocation-free.
+    let mut cfg = SnnConfig::control(48, 12);
+    cfg.n_hidden = 32;
+    let mut rng = Pcg64::new(14, 0);
+    let mut genome = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut genome, 0.1);
+    let rule = NetworkRule::from_flat(&cfg, &genome);
+
+    let mut backend = NativeBackend::plastic_with_threads(cfg, rule, 2);
+    let sessions = 130usize;
+    assert_eq!(backend.ensure_sessions(sessions), sessions);
+    assert_eq!(backend.shard_count(), 2);
+    assert_eq!(backend.step_threads(), 2);
+    let encoder = PopulationEncoder::symmetric(6, 8, 3.0);
+    let decoder = TraceDecoder::new(6, 0.5);
+
+    let slots: Vec<usize> = (0..sessions).collect();
+    let obs_lines: Vec<String> = (0..sessions)
+        .map(|s| format!("0.1,-0.2,0.3,{:.2},0.5,-0.6", (s as f32) / 131.0))
+        .collect();
+    let mut rngs: Vec<Pcg64> = (0..sessions).map(|s| Pcg64::new(6, s as u64)).collect();
+
+    let mut obs: Vec<f32> = Vec::new();
+    let mut inbufs: Vec<Vec<bool>> = (0..sessions).map(|_| Vec::new()).collect();
+    let mut inputs: Vec<bool> = Vec::new();
+    let mut out_spikes: Vec<bool> = Vec::new();
+    let mut traces: Vec<f32> = Vec::new();
+    let mut action: Vec<f32> = Vec::new();
+    let mut resp = String::new();
+
+    // Warmup: size the pooled buffers and the per-worker job boxes.
+    for _ in 0..30 {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+    }
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for _ in 0..100 {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        allocs, 0,
+        "steady-state sharded serving loop allocated {allocs} times over \
+         100 ticks × {sessions} sessions × 2 shards"
+    );
 }

@@ -11,11 +11,23 @@
 //! Also pinned here: determinism (same seed ⇒ the same golden trace
 //! twice) and grid coverage (the eval-grid fan-out visits every
 //! `TaskParam` exactly once, at every chunking batch size).
+//!
+//! **Scenario sharding (ISSUE 5):** the chunked multi-core engine
+//! (`ChunkedAdaptEngine` — per-core chunks, each with its own backend,
+//! envs, RNG streams, stepped on pinned pool workers) must be
+//! bit-identical to the single-threaded inline engine — rewards,
+//! traces, per-session weight lanes — across
+//! B ∈ {1, 7, 64, 65, 256} × T ∈ {1, 2, 4} × {f32, F16}, with every
+//! plastic chunk sharing one `Arc<NetworkRule>` θ allocation, and
+//! `GridSummary` aggregation independent of the thread count.
+
+use std::sync::Arc;
 
 use firefly_p::backend::{SnnBackend, TypedNativeBackend};
-use firefly_p::coordinator::adapt_loop::{run_adaptation, AdaptConfig};
+use firefly_p::coordinator::adapt_loop::{run_adaptation, AdaptConfig, AdaptLog};
 use firefly_p::coordinator::batch_adapt::{
-    run_batch_adaptation, scenarios_for_grid, BatchAdaptConfig, Scenario,
+    chunk_bounds, run_batch_adaptation, run_chunked_adaptation, scenarios_for_grid,
+    BatchAdaptConfig, ChunkBackendSpec, ChunkedAdaptEngine, GridSummary, Scenario,
 };
 use firefly_p::env::{eval_grid, family_of, make_env, train_grid, Perturbation, TaskFamily};
 use firefly_p::es::eval::NEURONS_PER_DIM;
@@ -234,6 +246,227 @@ fn same_seed_same_golden_trace_twice() {
     }
     assert_eq!(b1.network().w1, b2.network().w1);
     assert_eq!(b1.network().w2, b2.network().w2);
+}
+
+/// The scenario-sharding conformance check: one single-threaded inline
+/// engine run vs the chunked multi-core engine at T ∈ {1, 2, 4},
+/// bit-compared on rewards, recovery metrics, output traces and the
+/// per-session plastic weight lanes (routed through each session's
+/// owning chunk).
+fn assert_chunked_matches_serial<S: Scalar>(env: &str, b: usize, max_steps: usize, seed: u64) {
+    let cfg = control_cfg(env, 8);
+    let rule = Arc::new(rule_for(&cfg, seed));
+    let scen = scenarios(env, b, true, seed);
+    let bcfg = BatchAdaptConfig {
+        env_name: env.into(),
+        window: 10,
+        max_steps: Some(max_steps),
+    };
+
+    // Serial baseline: the inline single-engine path over one backend.
+    let mut serial = TypedNativeBackend::<S>::plastic_shared(cfg.clone(), Arc::clone(&rule), 1);
+    let serial_logs = run_batch_adaptation(&mut serial, &bcfg, &scen);
+    let sn = serial.network();
+    let sb = sn.batch;
+
+    for threads in [1usize, 2, 4] {
+        let mut engine = ChunkedAdaptEngine::<S>::new(
+            &cfg,
+            ChunkBackendSpec::Plastic(Arc::clone(&rule)),
+            &bcfg,
+            &scen,
+            threads,
+        );
+        assert_eq!(engine.chunk_count(), threads.clamp(1, b));
+        while engine.tick() {}
+
+        for s in 0..b {
+            assert_eq!(
+                engine.output_traces_session(s),
+                serial.output_traces_session(s),
+                "{env} B={b} T={threads} session {s}: output traces diverged"
+            );
+            // θ-driven online weight updates, bit-for-bit per session
+            // lane, across the chunk boundary mapping.
+            let (k, l) = engine.locate(s);
+            let cn = engine.chunk_backend(k).network();
+            let cb = cn.batch;
+            for syn in 0..cfg.l1_synapses() {
+                assert_eq!(
+                    cn.w1[syn * cb + l].to_f32().to_bits(),
+                    sn.w1[syn * sb + s].to_f32().to_bits(),
+                    "{env} B={b} T={threads} session {s}: w1 synapse {syn} diverged"
+                );
+            }
+            for syn in 0..cfg.l2_synapses() {
+                assert_eq!(
+                    cn.w2[syn * cb + l].to_f32().to_bits(),
+                    sn.w2[syn * sb + s].to_f32().to_bits(),
+                    "{env} B={b} T={threads} session {s}: w2 synapse {syn} diverged"
+                );
+            }
+        }
+
+        let logs = engine.finish();
+        assert_eq!(logs.len(), b);
+        for (s, (cl, sl)) in logs.iter().zip(&serial_logs).enumerate() {
+            assert_eq!(cl.rewards, sl.rewards, "{env} B={b} T={threads} session {s}: rewards");
+            assert_eq!(cl.perturb_at, sl.perturb_at);
+            assert_eq!(cl.time_to_recover, sl.time_to_recover);
+        }
+    }
+}
+
+#[test]
+fn chunked_matches_serial_f32_small_batches() {
+    assert_chunked_matches_serial::<f32>("ant-dir", 1, 30, 0x51);
+    assert_chunked_matches_serial::<f32>("cheetah-vel", 7, 30, 0x52);
+}
+
+#[test]
+fn chunked_matches_serial_f32_word_boundary() {
+    // B = 64 (one packed word) and B = 65 (straddling a second word) —
+    // chunk boundaries cut *within* words here, which the per-chunk
+    // backends must absorb (each chunk is its own SoA batch).
+    assert_chunked_matches_serial::<f32>("reacher", 64, 15, 0x53);
+    assert_chunked_matches_serial::<f32>("ant-dir", 65, 12, 0x54);
+}
+
+#[test]
+fn chunked_matches_serial_f32_many_words() {
+    assert_chunked_matches_serial::<f32>("cheetah-vel", 256, 8, 0x55);
+}
+
+#[test]
+fn chunked_matches_serial_f16_small_batches() {
+    assert_chunked_matches_serial::<F16>("cheetah-vel", 1, 25, 0x61);
+    assert_chunked_matches_serial::<F16>("reacher", 7, 25, 0x62);
+}
+
+#[test]
+fn chunked_matches_serial_f16_word_boundary() {
+    assert_chunked_matches_serial::<F16>("ant-dir", 64, 10, 0x63);
+    assert_chunked_matches_serial::<F16>("cheetah-vel", 65, 10, 0x64);
+}
+
+#[test]
+fn chunked_matches_serial_f16_many_words() {
+    assert_chunked_matches_serial::<F16>("reacher", 256, 6, 0x65);
+}
+
+#[test]
+fn chunks_share_one_rule_theta() {
+    // Every chunk backend's Mode::Plastic must point at the SAME θ
+    // allocation (per-chunk copies would fail ptr_eq), with the
+    // refcount accounting for all chunks.
+    let env = "cheetah-vel";
+    let cfg = control_cfg(env, 8);
+    let rule = Arc::new(rule_for(&cfg, 0x71));
+    let scen = scenarios(env, 16, false, 0x71);
+    let bcfg = BatchAdaptConfig {
+        env_name: env.into(),
+        window: 10,
+        max_steps: Some(6),
+    };
+    let mut engine = ChunkedAdaptEngine::<f32>::new(
+        &cfg,
+        ChunkBackendSpec::Plastic(Arc::clone(&rule)),
+        &bcfg,
+        &scen,
+        4,
+    );
+    assert_eq!(engine.chunk_count(), 4);
+    for k in 0..engine.chunk_count() {
+        let rk = engine.chunk_backend(k).rule().expect("plastic chunk backend");
+        assert!(
+            Arc::ptr_eq(rk, &rule),
+            "chunk {k} carries its own θ copy instead of sharing the Arc"
+        );
+    }
+    assert!(
+        Arc::strong_count(&rule) >= engine.chunk_count() + 1,
+        "θ refcount {} does not cover the {} chunks",
+        Arc::strong_count(&rule),
+        engine.chunk_count()
+    );
+    while engine.tick() {}
+    assert_eq!(engine.finish().len(), 16);
+}
+
+#[test]
+fn eval_grid_fanout_under_chunking_and_threading() {
+    // The 72-task eval-grid fan-out through the chunked engine: every
+    // task visited exactly once at any chunk partition, and the
+    // per-session results — and therefore the GridSummary aggregate —
+    // independent of the thread count, bit for bit.
+    let env = "reacher";
+    let family = family_of(env).unwrap();
+    let eval = eval_grid(family);
+    assert_eq!(eval.len(), 72);
+    let schedule = vec![
+        (Some(Perturbation::leg_failure(vec![0])), 8),
+        (None, 0),
+        (Some(Perturbation::weak_motors(0.5)), 10),
+    ];
+    let scen = scenarios_for_grid(&eval, &schedule, 0x99);
+    let cfg = control_cfg(env, 8);
+    let rule = Arc::new(rule_for(&cfg, 0x99));
+    let bcfg = BatchAdaptConfig {
+        env_name: env.into(),
+        window: 8,
+        max_steps: Some(20),
+    };
+
+    let mut baseline: Option<(Vec<AdaptLog>, GridSummary)> = None;
+    for threads in [1usize, 2, 4, 5] {
+        // The chunk partition tiles the scenario list: every task falls
+        // in exactly one chunk, in grid order.
+        let bounds = chunk_bounds(scen.len(), threads);
+        let mut seen = std::collections::BTreeSet::new();
+        for w in bounds.windows(2) {
+            for s in w[0]..w[1] {
+                assert!(seen.insert(scen[s].task.id), "T={threads}: task visited twice");
+            }
+        }
+        assert_eq!(seen.len(), 72, "T={threads}: tasks missed by the partition");
+
+        let logs = run_chunked_adaptation::<f32>(
+            &cfg,
+            ChunkBackendSpec::Plastic(Arc::clone(&rule)),
+            &bcfg,
+            &scen,
+            threads,
+        );
+        assert_eq!(logs.len(), 72, "T={threads}");
+        let summary = GridSummary::from_logs(&logs);
+        match &baseline {
+            None => baseline = Some((logs, summary)),
+            Some((base_logs, base)) => {
+                for (s, (cl, bl)) in logs.iter().zip(base_logs).enumerate() {
+                    assert_eq!(cl.rewards, bl.rewards, "T={threads} session {s}: rewards");
+                    assert_eq!(cl.time_to_recover, bl.time_to_recover, "T={threads} session {s}");
+                }
+                assert_eq!(summary.sessions, base.sessions);
+                assert_eq!(summary.perturbed, base.perturbed, "T={threads}");
+                assert_eq!(summary.recovered, base.recovered, "T={threads}");
+                assert_eq!(
+                    summary.mean_total_reward.to_bits(),
+                    base.mean_total_reward.to_bits(),
+                    "T={threads}: aggregate mean reward drifted"
+                );
+                assert_eq!(
+                    summary.mean_recovery_ratio.to_bits(),
+                    base.mean_recovery_ratio.to_bits(),
+                    "T={threads}: aggregate recovery ratio drifted"
+                );
+                assert_eq!(
+                    summary.time_to_recover_p50.to_bits(),
+                    base.time_to_recover_p50.to_bits(),
+                    "T={threads}: p50 time-to-recover drifted"
+                );
+            }
+        }
+    }
 }
 
 #[test]
