@@ -6,8 +6,10 @@
 //! stepping scales across cores with 64-lane word shards
 //! (`--step-threads`), what event-driven (presyn-gated) plasticity buys
 //! across firing rates, plus end-to-end TCP latency through the
-//! session-managed control server. Feeds the §Perf serving rows of
-//! EXPERIMENTS.md.
+//! session-managed control server — both idle and while 0/1/4 grid jobs
+//! grind on dedicated job-runner threads (`tcp-jobs` rows, ISSUE 6:
+//! the adaptation-as-a-service isolation claim, measured). Feeds the
+//! §Perf serving rows of EXPERIMENTS.md.
 //!
 //! Acceptance targets:
 //! - ISSUE 1: batched serving at B=64 sessions achieves ≥4× the steps/s
@@ -262,6 +264,104 @@ fn bench_tcp(batch: usize, requests_per_client: usize) -> (f64, Vec<f64>) {
     ((batch * requests_per_client) as f64 / wall, latencies)
 }
 
+/// TCP-level under job contention (ISSUE 6): B concurrent clients
+/// hammering OBS round-trips while `jobs` eval-grid sweeps grind on
+/// dedicated job-runner threads of the same server process. Jobs are
+/// submitted through a direct `Arc<JobManager>` handle (not the wire)
+/// so the measured connections carry only control ticks. Returns
+/// (aggregate requests/s, latencies µs).
+fn bench_tcp_under_jobs(jobs: usize, batch: usize, requests_per_client: usize) -> (f64, Vec<f64>) {
+    use firefly_p::coordinator::jobs::{GridKind, JobManager, JobManagerConfig, JobModel, JobSpec};
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+
+    // The manager lives on this thread so jobs can be submitted and
+    // cancelled around the measurement window; one runner per job so
+    // all sweeps are genuinely concurrent with the serving path.
+    let mgr = Arc::new(JobManager::new(JobManagerConfig {
+        queue_cap: jobs.max(1),
+        runners: jobs.max(1),
+    }));
+    let cfg = geometry();
+    let rule = make_rule(&cfg, 3);
+    // ant-dir geometry matches the bench instance (8 obs × 8 = 64 in,
+    // 2 × 4 act = 8 out).
+    mgr.install_model("ant-dir", JobModel::plastic(cfg, rule)).unwrap();
+
+    let mgr_srv = Arc::clone(&mgr);
+    let server = std::thread::spawn(move || {
+        let cfg = geometry();
+        let rule = make_rule(&cfg, 3);
+        let backend = Box::new(NativeBackend::plastic(cfg, rule));
+        let mut server = ControlServer::with_config(
+            backend,
+            8,
+            4,
+            ServerConfig {
+                max_sessions: batch,
+                seed: 5,
+            },
+        );
+        server.attach_jobs(mgr_srv);
+        server.serve(&addr.to_string(), Some(batch)).unwrap();
+    });
+    std::thread::sleep(Duration::from_millis(150));
+
+    let ids: Vec<u64> = (0..jobs)
+        .map(|j| {
+            let mut spec = JobSpec::new("ant-dir");
+            spec.grid = GridKind::Eval;
+            spec.budget = Some(200);
+            spec.seed = 0xBE + j as u64;
+            spec.batch = 8;
+            mgr.submit(spec).unwrap()
+        })
+        .collect();
+
+    let barrier = Arc::new(Barrier::new(batch));
+    let t_all = Instant::now();
+    let clients: Vec<_> = (0..batch)
+        .map(|c| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut line = String::new();
+                let obs = format!(
+                    "OBS 0.1,0.2,-0.3,{:.2},0.5,-0.6,0.7,1.0\n",
+                    (c as f32 / 17.0) % 1.0
+                );
+                barrier.wait();
+                let mut lat = Vec::with_capacity(requests_per_client);
+                for _ in 0..requests_per_client {
+                    let t0 = Instant::now();
+                    writer.write_all(obs.as_bytes()).unwrap();
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                    assert!(line.starts_with("ACT "), "{line}");
+                }
+                lat
+            })
+        })
+        .collect();
+
+    let mut latencies = Vec::new();
+    for c in clients {
+        latencies.extend(c.join().unwrap());
+    }
+    let wall = t_all.elapsed().as_secs_f64();
+    server.join().unwrap();
+    for id in ids {
+        let _ = mgr.cancel(id);
+    }
+    mgr.shutdown();
+    ((batch * requests_per_client) as f64 / wall, latencies)
+}
+
 fn main() {
     println!("=== EXP-SERVE: multi-session serving throughput (64-128-8 plastic) ===\n");
     let mut csv = CsvWriter::create(
@@ -375,6 +475,18 @@ fn main() {
             "B={batch:<3} {rps:>10.0} req/s   p50 {p50:>8.1} µs   p99 {p99:>8.1} µs"
         );
         csv.row(&[&"tcp", &batch, &1, &0.0, &0.0, &rps, &0.0, &p50, &p99]).unwrap();
+    }
+
+    println!("\n--- tcp: control ticks under concurrent grid jobs (B=8 clients) ---");
+    for &jobs in &[0usize, 1, 4] {
+        let (rps, lat) = bench_tcp_under_jobs(jobs, 8, 400);
+        let p50 = stats::percentile(&lat, 50.0);
+        let p99 = stats::percentile(&lat, 99.0);
+        println!(
+            "jobs={jobs}  {rps:>10.0} req/s   p50 {p50:>8.1} µs   p99 {p99:>8.1} µs"
+        );
+        // `threads` column carries the concurrent-job count for this layer
+        csv.row(&[&"tcp-jobs", &8, &jobs, &0.0, &0.0, &rps, &0.0, &p50, &p99]).unwrap();
     }
 
     let path = csv.finish().unwrap();

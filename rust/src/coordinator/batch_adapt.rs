@@ -587,6 +587,32 @@ pub fn parse_schedule(spec: &str) -> Result<Vec<(Option<Perturbation>, usize)>, 
         .collect()
 }
 
+/// Encode a schedule back into the [`parse_schedule`] grammar.
+///
+/// Inverse of [`parse_schedule`]: `parse_schedule(&encode_schedule(&s))`
+/// returns `s` bit-exactly (floats go through Rust's shortest
+/// round-trip `Display` via [`Perturbation::spec`], and clean entries
+/// encode as `none`). This is what lets `JOB SUBMIT` lines carry the
+/// same schedule the CLI `adapt --perturb-schedule` flag takes, pinned
+/// by the job-spec round-trip property test in `coordinator/jobs.rs`.
+pub fn encode_schedule(schedule: &[(Option<Perturbation>, usize)]) -> String {
+    let mut out = String::new();
+    for (i, (p, t)) in schedule.iter().enumerate() {
+        if i > 0 {
+            out.push(';');
+        }
+        match p {
+            Some(p) => {
+                out.push_str(&p.spec());
+                out.push('@');
+                out.push_str(&t.to_string());
+            }
+            None => out.push_str("none"),
+        }
+    }
+    out
+}
+
 /// Grid-level aggregate over a batch of adaptation logs.
 #[derive(Clone, Debug)]
 pub struct GridSummary {
@@ -742,6 +768,14 @@ mod tests {
         assert_eq!(s[2], (Some(Perturbation::weak_motors(0.25)), 100));
         assert!(parse_schedule("leg:0").is_err(), "missing @t must fail");
         assert!(parse_schedule("bogus:1@5").is_err());
+    }
+
+    #[test]
+    fn schedule_encode_is_parse_inverse() {
+        for spec in ["", "none", "leg:0,2@80;none;gain:0.25@100", "wind:1,-0.5@7;bias:0.2@3"] {
+            let s = parse_schedule(spec).unwrap();
+            assert_eq!(parse_schedule(&encode_schedule(&s)).unwrap(), s, "spec {spec:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,1307 @@
+//! Adaptation-as-a-service: grid sweeps as queued jobs behind the
+//! control server (ISSUE 6 tentpole; ROADMAP "Adaptation-as-a-service").
+//!
+//! The paper's datapath serves inference and plasticity in the same
+//! loop; this module gives the repo's serving layer the matching
+//! *batch* capability. A [`JobManager`] owns a bounded FIFO of grid
+//! jobs ([`JobSpec`]: family × grid × perturbation schedule × budget)
+//! and a pool of dedicated runner threads (`serve --job-threads`).
+//! Each runner executes jobs on a
+//! [`ChunkedAdaptEngine`](crate::coordinator::batch_adapt::ChunkedAdaptEngine)
+//! — never on the serving stepper thread — replicating the CLI
+//! `adapt --grid` fan-out exactly (`scenarios.chunks(batch)` with
+//! `threads` chunks per engine run), which is what makes job results
+//! **bit-identical** to the CLI path (`tests/grid_jobs_conformance.rs`).
+//!
+//! Contracts:
+//!
+//! - **Admission control**: [`JobManager::submit`] rejects with the
+//!   typed [`JobError::QueueFull`] once `queue_cap` jobs are waiting,
+//!   so a saturated job queue back-pressures submitters instead of
+//!   starving live control ticks (`tests/server_jobs_concurrent.rs`).
+//! - **θ snapshots**: a job pins the `Arc`s of the model installed for
+//!   its family at submit time. [`JobManager::install_model`] swaps
+//!   take effect for *later* submissions only — no cross-job bleed.
+//! - **Checkpoint/resume**: completed scenarios accumulate as a prefix
+//!   of the scenario list (sub-batches finish in order). Cancel and
+//!   shutdown keep that prefix; [`JobManager::resume`] (same manager)
+//!   or [`JobManager::resume_from`] (a [`JobCheckpoint`] carried to a
+//!   fresh manager) re-enqueue only the remainder, so every scenario
+//!   runs exactly once and the merged rows match an uninterrupted run.
+//! - **Streaming**: [`JobManager::wait_row`] blocks until row `i`
+//!   exists (or the job is terminal), which is how `JOB RESULTS`
+//!   streams per-scenario recovery rows as sub-batches finish.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use crate::coordinator::adapt_loop::AdaptLog;
+use crate::coordinator::batch_adapt::{
+    encode_schedule, parse_schedule, scenarios_for_grid, BatchAdaptConfig, ChunkBackendSpec,
+    ChunkedAdaptEngine, GridSummary, Scenario,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::env::{eval_grid, family_of, make_env, train_grid, Perturbation, TaskFamily};
+use crate::es::eval::NEURONS_PER_DIM;
+use crate::snn::{NetworkRule, Scalar, SnnConfig};
+use crate::util::fp16::F16;
+use crate::util::threadpool::available_cores;
+
+/// Reward smoothing window used by every job, matching the CLI `adapt`
+/// path's hard-coded `window: 20` — part of the bit-identity contract.
+pub const JOB_WINDOW: usize = 20;
+
+/// Which task grid a job sweeps (the CLI `--grid` vocabulary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GridKind {
+    /// One training task replicated `batch` times with decorrelated
+    /// seeds (the CLI `--grid task` shape).
+    Task,
+    /// The 8-task training grid.
+    Train,
+    /// The 72-task held-out evaluation grid.
+    Eval,
+}
+
+impl GridKind {
+    /// Parse the wire token (`task | train | eval`).
+    pub fn parse(s: &str) -> Result<GridKind, String> {
+        match s {
+            "task" => Ok(GridKind::Task),
+            "train" => Ok(GridKind::Train),
+            "eval" => Ok(GridKind::Eval),
+            other => Err(format!("grid must be task | train | eval (got {other:?})")),
+        }
+    }
+
+    /// The wire token this kind encodes as.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GridKind::Task => "task",
+            GridKind::Train => "train",
+            GridKind::Eval => "eval",
+        }
+    }
+}
+
+/// Arithmetic the job's backends run in (the serving layer itself is
+/// scalar-agnostic; jobs pick per submission).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Native f32 chunks.
+    F32,
+    /// FPGA-faithful fp16 chunks ([`crate::util::fp16::F16`]).
+    F16,
+}
+
+impl Precision {
+    /// Parse the wire token (`f32 | f16`).
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "f16" => Ok(Precision::F16),
+            other => Err(format!("prec must be f32 | f16 (got {other:?})")),
+        }
+    }
+
+    /// The wire token this precision encodes as.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+        }
+    }
+}
+
+/// A parsed `JOB SUBMIT` payload: everything needed to rebuild the
+/// exact scenario list of a CLI `adapt --grid` invocation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Environment name (any registry alias; the model store is keyed
+    /// by canonical family).
+    pub family: String,
+    /// Which task grid to sweep.
+    pub grid: GridKind,
+    /// Per-session perturbation schedule, assigned round-robin
+    /// (empty = all clean episodes).
+    pub schedule: Vec<(Option<Perturbation>, usize)>,
+    /// Per-episode step cap (`None` = full env horizon). Encodes as
+    /// `budget=<n>`; `budget=0` decodes to `None`.
+    pub budget: Option<usize>,
+    /// Base RNG seed (per-session streams derive exactly as the CLI).
+    pub seed: u64,
+    /// Sessions per engine run — the CLI `--batch` fan-out unit, and
+    /// the checkpoint granularity.
+    pub batch: usize,
+    /// Chunks per engine run — the CLI `--adapt-threads` semantics
+    /// (0 = all CPU cores, capped to `batch` at run time).
+    pub threads: usize,
+    /// Task index within the training grid (only used by
+    /// [`GridKind::Task`]).
+    pub task: usize,
+    /// Backend arithmetic.
+    pub prec: Precision,
+}
+
+impl JobSpec {
+    /// A spec for `family` with the wire-protocol defaults: full eval
+    /// grid, clean episodes, full horizon, seed 42, batch 8, one
+    /// chunk thread, f32.
+    pub fn new(family: &str) -> JobSpec {
+        JobSpec {
+            family: family.to_string(),
+            grid: GridKind::Eval,
+            schedule: Vec::new(),
+            budget: None,
+            seed: 42,
+            batch: 8,
+            threads: 1,
+            task: 0,
+            prec: Precision::F32,
+        }
+    }
+
+    /// Parse the space-separated `key=value` grammar of `JOB SUBMIT`:
+    ///
+    /// ```text
+    /// family=<env> [grid=task|train|eval] [schedule=<spec@t;...>]
+    ///              [budget=<n>] [seed=<n>] [batch=<n>] [threads=<n>]
+    ///              [task=<n>] [prec=f32|f16]
+    /// ```
+    ///
+    /// Rejects duplicate, unknown, and malformed fields without
+    /// panicking; inverse of [`JobSpec::encode`] (pinned by the
+    /// round-trip property tests below).
+    pub fn parse(s: &str) -> Result<JobSpec, String> {
+        let mut family: Option<String> = None;
+        let mut spec = JobSpec::new("");
+        let mut seen: Vec<&str> = Vec::new();
+        for tok in s.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("malformed token {tok:?} (want key=value)"))?;
+            if seen.contains(&k) {
+                return Err(format!("duplicate key {k:?}"));
+            }
+            seen.push(k);
+            match k {
+                "family" => family = Some(v.to_string()),
+                "grid" => spec.grid = GridKind::parse(v)?,
+                "schedule" => spec.schedule = parse_schedule(v)?,
+                "budget" => {
+                    let n: usize = v.parse().map_err(|e| format!("bad budget: {e}"))?;
+                    spec.budget = if n == 0 { None } else { Some(n) };
+                }
+                "seed" => spec.seed = v.parse().map_err(|e| format!("bad seed: {e}"))?,
+                "batch" => {
+                    spec.batch = v.parse().map_err(|e| format!("bad batch: {e}"))?;
+                    if spec.batch == 0 {
+                        return Err("batch must be >= 1".into());
+                    }
+                }
+                "threads" => spec.threads = v.parse().map_err(|e| format!("bad threads: {e}"))?,
+                "task" => spec.task = v.parse().map_err(|e| format!("bad task: {e}"))?,
+                "prec" => spec.prec = Precision::parse(v)?,
+                "resume" => {
+                    return Err("resume=<id> must be the only field of a resume submit".into())
+                }
+                other => return Err(format!("unknown job-spec key {other:?}")),
+            }
+        }
+        let family = family.ok_or("job spec needs family=<env>")?;
+        family_of(&family).ok_or_else(|| format!("unknown env family {family:?}"))?;
+        spec.family = family;
+        Ok(spec)
+    }
+
+    /// Encode into the [`JobSpec::parse`] grammar (canonical key
+    /// order; `parse(encode(s)) == s` bit-exactly).
+    pub fn encode(&self) -> String {
+        let mut s = format!("family={} grid={}", self.family, self.grid.as_str());
+        if !self.schedule.is_empty() {
+            s.push_str(" schedule=");
+            s.push_str(&encode_schedule(&self.schedule));
+        }
+        if let Some(b) = self.budget {
+            s.push_str(&format!(" budget={b}"));
+        }
+        s.push_str(&format!(
+            " seed={} batch={} threads={} task={} prec={}",
+            self.seed,
+            self.batch,
+            self.threads,
+            self.task,
+            self.prec.as_str()
+        ));
+        s
+    }
+
+    /// Materialize the scenario list, exactly as the CLI `adapt --grid`
+    /// path builds it (grid selection, round-robin schedule,
+    /// per-session seed decorrelation for replicated single tasks).
+    pub fn scenarios(&self) -> Result<Vec<Scenario>, String> {
+        let family = family_of(&self.family)
+            .ok_or_else(|| format!("unknown env family {:?}", self.family))?;
+        let tasks = match self.grid {
+            GridKind::Train => train_grid(family),
+            GridKind::Eval => eval_grid(family),
+            GridKind::Task => {
+                let all = train_grid(family);
+                let t = all[self.task.min(all.len() - 1)].clone();
+                vec![t; self.batch]
+            }
+        };
+        let mut scenarios = scenarios_for_grid(&tasks, &self.schedule, self.seed);
+        if self.grid == GridKind::Task {
+            // Replicated single task: decorrelate the sessions by seed,
+            // mirroring cmd_adapt.
+            for (s, sc) in scenarios.iter_mut().enumerate() {
+                sc.seed = self.seed.wrapping_add(s as u64);
+            }
+        }
+        Ok(scenarios)
+    }
+}
+
+/// A parsed `JOB SUBMIT` line: either a fresh spec or a resume of an
+/// interrupted job (which inherits the original's spec, θ snapshot and
+/// completed prefix — extra fields alongside `resume=` are rejected).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SubmitRequest {
+    /// Run a fresh job from `JobSpec`.
+    New(JobSpec),
+    /// Continue the cancelled/interrupted job with this id.
+    Resume(u64),
+}
+
+/// Parse the payload after `JOB SUBMIT `.
+pub fn parse_submit(s: &str) -> Result<SubmitRequest, String> {
+    let t = s.trim();
+    let mut toks = t.split_whitespace();
+    if let (Some(first), None) = (toks.next(), toks.next()) {
+        if let Some(v) = first.strip_prefix("resume=") {
+            let id = v.parse().map_err(|e| format!("bad resume id: {e}"))?;
+            return Ok(SubmitRequest::Resume(id));
+        }
+    }
+    JobSpec::parse(t).map(SubmitRequest::New)
+}
+
+/// Lifecycle of a job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobState {
+    /// Waiting in the bounded queue.
+    Queued,
+    /// A runner thread is executing it.
+    Running,
+    /// Every scenario completed; all rows available.
+    Done,
+    /// Cancelled by `JOB CANCEL`; completed prefix kept, resumable.
+    Cancelled,
+    /// Stopped by manager shutdown; completed prefix kept, resumable.
+    Interrupted,
+    /// The runner hit an error (message attached); not resumable.
+    Failed(String),
+}
+
+impl JobState {
+    /// Stable wire token (`JOB STATUS state=<this>`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Interrupted => "interrupted",
+            JobState::Failed(_) => "failed",
+        }
+    }
+
+    /// No further rows will be produced under this state.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
+    }
+
+    /// The job can be resubmitted to continue from its checkpoint.
+    pub fn is_resumable(&self) -> bool {
+        matches!(self, JobState::Cancelled | JobState::Interrupted)
+    }
+}
+
+/// Typed job-subsystem errors. [`JobError::code`] is the stable
+/// machine-readable token the server puts right after `ERR `, so
+/// clients (and the stress tests) can distinguish backpressure from
+/// misuse without parsing prose.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobError {
+    /// The bounded queue is at capacity — retry later (backpressure).
+    QueueFull {
+        /// Jobs currently waiting.
+        queued: usize,
+        /// Configured queue bound.
+        cap: usize,
+    },
+    /// The spec references no known environment family.
+    UnknownFamily(String),
+    /// No model installed for the family (see
+    /// [`JobManager::install_model`]).
+    NoModel(String),
+    /// No job with that id.
+    UnknownJob(u64),
+    /// The spec failed to parse or validate.
+    BadSpec(String),
+    /// Resume requested for a job that is not cancelled/interrupted.
+    NotResumable {
+        /// The job id.
+        id: u64,
+        /// Its current state token.
+        state: &'static str,
+    },
+    /// The installed model's geometry does not match the family.
+    GeometryMismatch(String),
+    /// The manager is shutting down; no new admissions.
+    ShuttingDown,
+}
+
+impl JobError {
+    /// Stable machine-readable error code (first `ERR` token).
+    pub fn code(&self) -> &'static str {
+        match self {
+            JobError::QueueFull { .. } => "job-queue-full",
+            JobError::UnknownFamily(_) => "job-unknown-family",
+            JobError::NoModel(_) => "job-no-model",
+            JobError::UnknownJob(_) => "job-unknown-id",
+            JobError::BadSpec(_) => "job-bad-spec",
+            JobError::NotResumable { .. } => "job-not-resumable",
+            JobError::GeometryMismatch(_) => "job-geometry-mismatch",
+            JobError::ShuttingDown => "job-shutting-down",
+        }
+    }
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::QueueFull { queued, cap } => {
+                write!(f, "{} queued={queued} cap={cap}", self.code())
+            }
+            JobError::UnknownFamily(name) | JobError::NoModel(name) => {
+                write!(f, "{} family={name}", self.code())
+            }
+            JobError::UnknownJob(id) => write!(f, "{} id={id}", self.code()),
+            JobError::BadSpec(msg) | JobError::GeometryMismatch(msg) => {
+                write!(f, "{} {msg}", self.code())
+            }
+            JobError::NotResumable { id, state } => {
+                write!(f, "{} id={id} state={state}", self.code())
+            }
+            JobError::ShuttingDown => write!(f, "{}", self.code()),
+        }
+    }
+}
+
+/// The network a family's jobs run: geometry plus either a plastic
+/// rule (θ shared across chunk backends via `Arc`) or a fixed-weight
+/// baseline.
+#[derive(Clone)]
+pub struct JobModel {
+    /// Network geometry (must match the family; checked at install).
+    pub cfg: SnnConfig,
+    /// Plastic rule or fixed weights.
+    pub spec: JobModelSpec,
+}
+
+/// Which backend a [`JobModel`] deploys.
+#[derive(Clone)]
+pub enum JobModelSpec {
+    /// FireFly-P plastic chunks sharing one θ allocation.
+    Plastic(Arc<NetworkRule>),
+    /// Fixed-weight baseline chunks from flat `[W1 ‖ W2]`.
+    Fixed(Arc<Vec<f32>>),
+}
+
+impl JobModel {
+    /// A plastic model (takes ownership of the rule).
+    pub fn plastic(cfg: SnnConfig, rule: NetworkRule) -> JobModel {
+        JobModel {
+            cfg,
+            spec: JobModelSpec::Plastic(Arc::new(rule)),
+        }
+    }
+
+    /// A plastic model sharing an existing θ allocation.
+    pub fn plastic_shared(cfg: SnnConfig, rule: Arc<NetworkRule>) -> JobModel {
+        JobModel {
+            cfg,
+            spec: JobModelSpec::Plastic(rule),
+        }
+    }
+
+    /// A fixed-weight baseline model.
+    pub fn fixed(cfg: SnnConfig, weights: Vec<f32>) -> JobModel {
+        JobModel {
+            cfg,
+            spec: JobModelSpec::Fixed(Arc::new(weights)),
+        }
+    }
+}
+
+/// A point-in-time view of a job (`JOB STATUS`).
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    /// Job id.
+    pub id: u64,
+    /// Lifecycle state.
+    pub state: JobState,
+    /// Completed scenarios (always a prefix of the scenario list).
+    pub done: usize,
+    /// Total scenarios in the sweep.
+    pub total: usize,
+}
+
+/// One streamed result row: the scenario's index, its task id, and its
+/// recovery log.
+#[derive(Clone, Debug)]
+pub struct JobRow {
+    /// Scenario index within the sweep (row order == scenario order).
+    pub index: usize,
+    /// The task's stable grid id.
+    pub task: usize,
+    /// Per-scenario recovery metrics.
+    pub log: AdaptLog,
+}
+
+/// Everything needed to continue an interrupted sweep on a fresh
+/// manager: the spec, the pinned θ snapshot, and the completed prefix.
+#[derive(Clone)]
+pub struct JobCheckpoint {
+    /// The interrupted job's spec (resumed verbatim).
+    pub spec: JobSpec,
+    /// The θ snapshot the job was pinned to (continuation stays
+    /// bit-identical to an uninterrupted run).
+    pub model: JobModel,
+    /// Completed-scenario logs, in scenario order.
+    pub results: Vec<AdaptLog>,
+    /// Total scenarios in the sweep.
+    pub total: usize,
+}
+
+/// Sizing of a [`JobManager`].
+#[derive(Clone, Copy, Debug)]
+pub struct JobManagerConfig {
+    /// Max jobs *waiting* in the queue (running jobs don't count);
+    /// admission beyond this returns [`JobError::QueueFull`].
+    pub queue_cap: usize,
+    /// Dedicated job-runner threads (`serve --job-threads`).
+    pub runners: usize,
+}
+
+impl Default for JobManagerConfig {
+    fn default() -> Self {
+        JobManagerConfig {
+            queue_cap: 8,
+            runners: 1,
+        }
+    }
+}
+
+struct JobRecord {
+    spec: JobSpec,
+    /// θ snapshot pinned at submit time (Arc clones of the installed
+    /// model; later `install_model` swaps don't touch this).
+    model: JobModel,
+    task_ids: Vec<usize>,
+    total: usize,
+    /// Completed-scenario logs — always a prefix of the scenario list.
+    results: Vec<AdaptLog>,
+    state: JobState,
+    /// Cooperative cancel flag, checked by the runner between ticks.
+    cancel: Arc<AtomicBool>,
+}
+
+fn status_of(id: u64, rec: &JobRecord) -> JobStatus {
+    JobStatus {
+        id,
+        state: rec.state.clone(),
+        done: rec.results.len(),
+        total: rec.total,
+    }
+}
+
+struct ManagerState {
+    /// Installed models, keyed by canonical family name.
+    models: BTreeMap<String, JobModel>,
+    jobs: BTreeMap<u64, JobRecord>,
+    queue: VecDeque<u64>,
+    next_id: u64,
+    shutting_down: bool,
+}
+
+struct JobShared {
+    state: Mutex<ManagerState>,
+    /// Wakes runner threads when work is queued.
+    work_cv: Condvar,
+    /// Wakes result streamers when rows land or states change.
+    progress_cv: Condvar,
+    /// Tick-granularity stop flag for shutdown.
+    stop: AtomicBool,
+    queue_cap: usize,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+/// The job subsystem: bounded queue + runner threads + job table.
+///
+/// Shared behind an `Arc` between the CLI, the [`ControlServer`]
+/// connection handlers, and its own runner threads. Dropping the last
+/// handle shuts the runners down, checkpointing in-flight jobs.
+///
+/// [`ControlServer`]: crate::coordinator::server::ControlServer
+pub struct JobManager {
+    shared: Arc<JobShared>,
+    runners: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl JobManager {
+    /// A manager with its own metrics registry.
+    pub fn new(cfg: JobManagerConfig) -> JobManager {
+        JobManager::with_metrics(cfg, Arc::new(Mutex::new(Metrics::new())))
+    }
+
+    /// A manager absorbing its counters and per-job grid summaries into
+    /// an existing registry (the server shares its own, so `STATS`
+    /// reports serving and job counters side by side).
+    pub fn with_metrics(cfg: JobManagerConfig, metrics: Arc<Mutex<Metrics>>) -> JobManager {
+        let shared = Arc::new(JobShared {
+            state: Mutex::new(ManagerState {
+                models: BTreeMap::new(),
+                jobs: BTreeMap::new(),
+                queue: VecDeque::new(),
+                next_id: 1,
+                shutting_down: false,
+            }),
+            work_cv: Condvar::new(),
+            progress_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            queue_cap: cfg.queue_cap.max(1),
+            metrics,
+        });
+        let runners = (0..cfg.runners.max(1))
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || runner_loop(&sh))
+            })
+            .collect();
+        JobManager {
+            shared,
+            runners: Mutex::new(runners),
+        }
+    }
+
+    /// The shared metrics registry.
+    pub fn metrics(&self) -> Arc<Mutex<Metrics>> {
+        Arc::clone(&self.shared.metrics)
+    }
+
+    /// Install (or swap) the model jobs of `family` run against.
+    /// In-flight and queued jobs keep the snapshot they pinned at
+    /// submit time; only later submissions see the new model.
+    pub fn install_model(&self, family: &str, model: JobModel) -> Result<(), JobError> {
+        let key = canonical_family(family)
+            .ok_or_else(|| JobError::UnknownFamily(family.to_string()))?;
+        let env = make_env(key).expect("canonical family resolves");
+        if model.cfg.n_in != env.obs_dim() * NEURONS_PER_DIM
+            || model.cfg.n_out != 2 * env.act_dim()
+        {
+            return Err(JobError::GeometryMismatch(format!(
+                "model {}x{} does not match {key} ({} obs dims, {} act dims)",
+                model.cfg.n_in,
+                model.cfg.n_out,
+                env.obs_dim(),
+                env.act_dim()
+            )));
+        }
+        self.shared
+            .state
+            .lock()
+            .unwrap()
+            .models
+            .insert(key.to_string(), model);
+        Ok(())
+    }
+
+    /// Submit a fresh job. Pins the family's installed model, validates
+    /// the spec, and enqueues; `Err(QueueFull)` is the backpressure
+    /// signal.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64, JobError> {
+        let scenarios = spec.scenarios().map_err(JobError::BadSpec)?;
+        let task_ids: Vec<usize> = scenarios.iter().map(|s| s.task.id).collect();
+        let st = self.shared.state.lock().unwrap();
+        let key = canonical_family(&spec.family)
+            .ok_or_else(|| JobError::UnknownFamily(spec.family.clone()))?;
+        let model = match st.models.get(key) {
+            Some(m) => m.clone(),
+            None => return Err(JobError::NoModel(spec.family.clone())),
+        };
+        let r = self.enqueue(st, spec, model, Vec::new(), task_ids);
+        self.track_admission(&r);
+        r
+    }
+
+    /// Resume a cancelled/interrupted job on this manager: a new job
+    /// inheriting the original's spec, θ snapshot, and completed
+    /// prefix. Subject to the same admission control as `submit`.
+    pub fn resume(&self, id: u64) -> Result<u64, JobError> {
+        let st = self.shared.state.lock().unwrap();
+        let old = st.jobs.get(&id).ok_or(JobError::UnknownJob(id))?;
+        if !old.state.is_resumable() {
+            return Err(JobError::NotResumable {
+                id,
+                state: old.state.as_str(),
+            });
+        }
+        let (spec, model, results, task_ids) = (
+            old.spec.clone(),
+            old.model.clone(),
+            old.results.clone(),
+            old.task_ids.clone(),
+        );
+        let r = self.enqueue(st, spec, model, results, task_ids);
+        self.track_admission(&r);
+        r
+    }
+
+    /// Export a cancelled/interrupted job's continuation state, e.g. to
+    /// carry a long sweep across a server restart via
+    /// [`JobManager::resume_from`].
+    pub fn checkpoint(&self, id: u64) -> Result<JobCheckpoint, JobError> {
+        let st = self.shared.state.lock().unwrap();
+        let rec = st.jobs.get(&id).ok_or(JobError::UnknownJob(id))?;
+        if !rec.state.is_resumable() {
+            return Err(JobError::NotResumable {
+                id,
+                state: rec.state.as_str(),
+            });
+        }
+        Ok(JobCheckpoint {
+            spec: rec.spec.clone(),
+            model: rec.model.clone(),
+            results: rec.results.clone(),
+            total: rec.total,
+        })
+    }
+
+    /// Enqueue a checkpoint exported from another manager. The
+    /// checkpoint carries its own θ snapshot, so no model needs to be
+    /// installed and the continuation stays bit-identical.
+    pub fn resume_from(&self, ckpt: JobCheckpoint) -> Result<u64, JobError> {
+        let task_ids: Vec<usize> = ckpt
+            .spec
+            .scenarios()
+            .map_err(JobError::BadSpec)?
+            .iter()
+            .map(|s| s.task.id)
+            .collect();
+        let st = self.shared.state.lock().unwrap();
+        let r = self.enqueue(st, ckpt.spec, ckpt.model, ckpt.results, task_ids);
+        self.track_admission(&r);
+        r
+    }
+
+    fn enqueue(
+        &self,
+        mut st: MutexGuard<'_, ManagerState>,
+        spec: JobSpec,
+        model: JobModel,
+        results: Vec<AdaptLog>,
+        task_ids: Vec<usize>,
+    ) -> Result<u64, JobError> {
+        if st.shutting_down {
+            return Err(JobError::ShuttingDown);
+        }
+        if st.queue.len() >= self.shared.queue_cap {
+            return Err(JobError::QueueFull {
+                queued: st.queue.len(),
+                cap: self.shared.queue_cap,
+            });
+        }
+        let total = task_ids.len();
+        let id = st.next_id;
+        st.next_id += 1;
+        st.jobs.insert(
+            id,
+            JobRecord {
+                spec,
+                model,
+                task_ids,
+                total,
+                results,
+                state: JobState::Queued,
+                cancel: Arc::new(AtomicBool::new(false)),
+            },
+        );
+        st.queue.push_back(id);
+        drop(st);
+        self.shared.work_cv.notify_one();
+        Ok(id)
+    }
+
+    fn track_admission(&self, r: &Result<u64, JobError>) {
+        let mut m = self.shared.metrics.lock().unwrap();
+        match r {
+            Ok(_) => m.incr("jobs_submitted"),
+            Err(JobError::QueueFull { .. }) => m.incr("jobs_rejected"),
+            Err(_) => {}
+        }
+    }
+
+    /// Current status of a job.
+    pub fn status(&self, id: u64) -> Result<JobStatus, JobError> {
+        let st = self.shared.state.lock().unwrap();
+        let rec = st.jobs.get(&id).ok_or(JobError::UnknownJob(id))?;
+        Ok(status_of(id, rec))
+    }
+
+    /// Request cancellation. Queued jobs cancel immediately; running
+    /// jobs checkpoint at the next engine tick (poll [`status`] for the
+    /// terminal state). Terminal jobs are left untouched. Completed
+    /// rows always survive for `JOB RESULTS` / resume.
+    ///
+    /// [`status`]: JobManager::status
+    pub fn cancel(&self, id: u64) -> Result<JobStatus, JobError> {
+        let mut cancelled_queued = false;
+        let status = {
+            let mut st = self.shared.state.lock().unwrap();
+            let rec = st.jobs.get_mut(&id).ok_or(JobError::UnknownJob(id))?;
+            match rec.state {
+                JobState::Queued => {
+                    rec.state = JobState::Cancelled;
+                    rec.cancel.store(true, Ordering::SeqCst);
+                    cancelled_queued = true;
+                }
+                JobState::Running => rec.cancel.store(true, Ordering::SeqCst),
+                _ => {}
+            }
+            status_of(id, rec)
+        };
+        if cancelled_queued {
+            self.shared.metrics.lock().unwrap().incr("jobs_cancelled");
+        }
+        self.shared.progress_cv.notify_all();
+        Ok(status)
+    }
+
+    /// Block until result row `index` exists (returning it) or the job
+    /// is terminal with fewer rows (returning `None`). Streaming
+    /// `JOB RESULTS` is a loop over `wait_row(id, 0..)`.
+    pub fn wait_row(&self, id: u64, index: usize) -> Result<Option<JobRow>, JobError> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            let rec = st.jobs.get(&id).ok_or(JobError::UnknownJob(id))?;
+            if index < rec.results.len() {
+                return Ok(Some(JobRow {
+                    index,
+                    task: rec.task_ids[index],
+                    log: rec.results[index].clone(),
+                }));
+            }
+            if rec.state.is_terminal() {
+                return Ok(None);
+            }
+            st = self.shared.progress_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Status plus the [`GridSummary`] over the rows completed so far
+    /// (the full sweep once `Done`).
+    pub fn summary(&self, id: u64) -> Result<(JobStatus, GridSummary), JobError> {
+        let st = self.shared.state.lock().unwrap();
+        let rec = st.jobs.get(&id).ok_or(JobError::UnknownJob(id))?;
+        Ok((status_of(id, rec), GridSummary::from_logs(&rec.results)))
+    }
+
+    /// Stop admissions, interrupt running jobs at their next engine
+    /// tick (checkpointing completed sub-batches), join the runners,
+    /// and mark every non-terminal job [`JobState::Interrupted`] so
+    /// its checkpoint can be exported. Idempotent; also run by `Drop`.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.state.lock().unwrap().shutting_down = true;
+        self.shared.work_cv.notify_all();
+        self.shared.progress_cv.notify_all();
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.runners.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        let mut interrupted = 0u64;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for rec in st.jobs.values_mut() {
+                if !rec.state.is_terminal() {
+                    rec.state = JobState::Interrupted;
+                    interrupted += 1;
+                }
+            }
+        }
+        if interrupted > 0 {
+            self.shared
+                .metrics
+                .lock()
+                .unwrap()
+                .add("jobs_interrupted", interrupted);
+        }
+        self.shared.progress_cv.notify_all();
+    }
+}
+
+impl Drop for JobManager {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Canonical registry name for any env alias of a family.
+fn canonical_family(name: &str) -> Option<&'static str> {
+    match family_of(name)? {
+        TaskFamily::Direction => Some("ant-dir"),
+        TaskFamily::Velocity => Some("cheetah-vel"),
+        TaskFamily::Position => Some("reacher"),
+    }
+}
+
+fn runner_loop(shared: &Arc<JobShared>) {
+    loop {
+        let (id, spec, model, cancel, start) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutting_down {
+                    return;
+                }
+                if let Some(id) = st.queue.pop_front() {
+                    let rec = st.jobs.get_mut(&id).expect("queued job has a record");
+                    if rec.state != JobState::Queued {
+                        // Cancelled while waiting: skip to the next job.
+                        continue;
+                    }
+                    rec.state = JobState::Running;
+                    break (
+                        id,
+                        rec.spec.clone(),
+                        rec.model.clone(),
+                        Arc::clone(&rec.cancel),
+                        rec.results.len(),
+                    );
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // A panicking job (e.g. a geometry assert deep in the engine)
+        // must not take the runner down with it.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(shared, id, &spec, &model, &cancel, start)
+        }));
+        if let Err(payload) = outcome {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "job panicked".to_string());
+            finish_job(shared, id, JobState::Failed(msg), "jobs_failed");
+        }
+    }
+}
+
+/// Execute one job, sub-batch by sub-batch, mirroring the CLI
+/// `adapt --grid` loop (`scenarios.chunks(batch)`, each run through a
+/// fresh [`ChunkedAdaptEngine`]) so rows are bit-identical to it.
+fn run_job(
+    shared: &Arc<JobShared>,
+    id: u64,
+    spec: &JobSpec,
+    model: &JobModel,
+    cancel: &AtomicBool,
+    start: usize,
+) {
+    let scenarios = match spec.scenarios() {
+        Ok(s) => s,
+        Err(e) => {
+            finish_job(shared, id, JobState::Failed(e), "jobs_failed");
+            return;
+        }
+    };
+    // Same thread-count semantics as cmd_adapt: 0 = all cores, capped
+    // to the sub-batch width (an engine run can't spread wider).
+    let threads = match spec.threads {
+        0 => available_cores(),
+        n => n,
+    }
+    .clamp(1, spec.batch);
+    let bcfg = BatchAdaptConfig {
+        env_name: spec.family.clone(),
+        window: JOB_WINDOW,
+        max_steps: spec.budget,
+    };
+    let mut done = start;
+    while done < scenarios.len() {
+        if cancel.load(Ordering::SeqCst) {
+            finish_job(shared, id, JobState::Cancelled, "jobs_cancelled");
+            return;
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            finish_job(shared, id, JobState::Interrupted, "jobs_interrupted");
+            return;
+        }
+        let hi = (done + spec.batch).min(scenarios.len());
+        let slice = &scenarios[done..hi];
+        let logs = match spec.prec {
+            Precision::F32 => run_slice::<f32>(model, &bcfg, slice, threads, cancel, &shared.stop),
+            Precision::F16 => run_slice::<F16>(model, &bcfg, slice, threads, cancel, &shared.stop),
+        };
+        let Some(logs) = logs else {
+            // Abandoned mid-sub-batch: the completed prefix is the
+            // checkpoint; the partial sub-batch reruns on resume.
+            let (state, counter) = if cancel.load(Ordering::SeqCst) {
+                (JobState::Cancelled, "jobs_cancelled")
+            } else {
+                (JobState::Interrupted, "jobs_interrupted")
+            };
+            finish_job(shared, id, state, counter);
+            return;
+        };
+        {
+            let mut st = shared.state.lock().unwrap();
+            let rec = st.jobs.get_mut(&id).expect("running job has a record");
+            rec.results.extend(logs);
+            done = rec.results.len();
+        }
+        shared.progress_cv.notify_all();
+    }
+    // Completed: absorb the per-job grid summary into the shared
+    // registry in one merge (chunk-order, like the CLI).
+    let mut m = Metrics::new();
+    {
+        let mut st = shared.state.lock().unwrap();
+        let rec = st.jobs.get_mut(&id).expect("running job has a record");
+        rec.state = JobState::Done;
+        GridSummary::observe_logs(&mut m, &rec.results);
+    }
+    m.incr("jobs_completed");
+    shared.metrics.lock().unwrap().absorb(m);
+    shared.progress_cv.notify_all();
+}
+
+/// Run one sub-batch to completion, polling the cancel/stop flags
+/// between engine ticks. `None` = abandoned (no rows recorded).
+fn run_slice<S: Scalar>(
+    model: &JobModel,
+    cfg: &BatchAdaptConfig,
+    slice: &[Scenario],
+    threads: usize,
+    cancel: &AtomicBool,
+    stop: &AtomicBool,
+) -> Option<Vec<AdaptLog>> {
+    let spec = match &model.spec {
+        JobModelSpec::Plastic(rule) => ChunkBackendSpec::Plastic(Arc::clone(rule)),
+        JobModelSpec::Fixed(w) => ChunkBackendSpec::Fixed(w.as_slice()),
+    };
+    let mut engine = ChunkedAdaptEngine::<S>::new(&model.cfg, spec, cfg, slice, threads);
+    while engine.tick() {
+        if cancel.load(Ordering::Relaxed) || stop.load(Ordering::Relaxed) {
+            return None;
+        }
+    }
+    Some(engine.finish())
+}
+
+fn finish_job(shared: &Arc<JobShared>, id: u64, state: JobState, counter: &'static str) {
+    {
+        let mut st = shared.state.lock().unwrap();
+        if let Some(rec) = st.jobs.get_mut(&id) {
+            rec.state = state;
+        }
+    }
+    shared.metrics.lock().unwrap().incr(counter);
+    shared.progress_cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Gen};
+    use crate::util::rng::Pcg64;
+    use std::time::{Duration, Instant};
+
+    fn small_model(env: &str, hidden: usize, seed: u64) -> JobModel {
+        let e = make_env(env).unwrap();
+        let mut cfg = SnnConfig::control(e.obs_dim() * NEURONS_PER_DIM, 2 * e.act_dim());
+        cfg.n_hidden = hidden;
+        let mut rng = Pcg64::new(seed, 1);
+        let mut genome = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut genome, 0.05);
+        let rule = NetworkRule::from_flat(&cfg, &genome);
+        JobModel::plastic(cfg, rule)
+    }
+
+    fn wait_terminal(mgr: &JobManager, id: u64) -> JobStatus {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            let st = mgr.status(id).unwrap();
+            if st.state.is_terminal() {
+                return st;
+            }
+            assert!(Instant::now() < deadline, "job {id} stuck in {:?}", st.state);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    fn gen_perturbation(g: &mut Gen) -> Perturbation {
+        match g.usize_range(0, 5) {
+            0 => {
+                let n = g.usize_range(1, 4);
+                Perturbation::leg_failure((0..n).map(|_| g.usize_range(0, 8)).collect())
+            }
+            1 => Perturbation::weak_motors(g.f32_range(0.0, 1.0)),
+            2 => Perturbation::wind(g.f32_range(-2.0, 2.0), g.f32_range(-2.0, 2.0)),
+            3 => {
+                let n = g.usize_range(1, 5);
+                Perturbation::remap((0..n).map(|_| g.usize_range(0, n)).collect())
+            }
+            _ => Perturbation::sensor_bias(g.f32_range(-0.5, 0.5)),
+        }
+    }
+
+    fn gen_spec(g: &mut Gen) -> JobSpec {
+        let family = ["ant-dir", "cheetah-vel", "reacher"][g.usize_range(0, 3)];
+        let mut spec = JobSpec::new(family);
+        spec.grid = [GridKind::Task, GridKind::Train, GridKind::Eval][g.usize_range(0, 3)];
+        spec.schedule = (0..g.usize_range(0, 4))
+            .map(|_| {
+                if g.bool() {
+                    (Some(gen_perturbation(g)), g.usize_range(0, 200))
+                } else {
+                    (None, 0)
+                }
+            })
+            .collect();
+        spec.budget = if g.bool() {
+            Some(g.usize_range(1, 500))
+        } else {
+            None
+        };
+        spec.seed = g.u64();
+        spec.batch = g.usize_range(1, 64);
+        spec.threads = g.usize_range(0, 8);
+        spec.task = g.usize_range(0, 8);
+        spec.prec = if g.bool() {
+            Precision::F32
+        } else {
+            Precision::F16
+        };
+        spec
+    }
+
+    #[test]
+    fn spec_encode_parse_round_trips() {
+        check(200, |g| {
+            let spec = gen_spec(g);
+            let enc = spec.encode();
+            let parsed = JobSpec::parse(&enc)
+                .unwrap_or_else(|e| panic!("seed {:#x}: {e} for {enc:?}", g.seed));
+            assert_eq!(parsed, spec, "seed {:#x}: {enc:?}", g.seed);
+        });
+    }
+
+    #[test]
+    fn schedule_encode_parse_round_trips() {
+        check(200, |g| {
+            let schedule: Vec<(Option<Perturbation>, usize)> = (0..g.usize_range(1, 6))
+                .map(|_| {
+                    if g.bool() {
+                        (Some(gen_perturbation(g)), g.usize_range(0, 500))
+                    } else {
+                        (None, 0)
+                    }
+                })
+                .collect();
+            let enc = encode_schedule(&schedule);
+            let parsed = parse_schedule(&enc)
+                .unwrap_or_else(|e| panic!("seed {:#x}: {e} for {enc:?}", g.seed));
+            assert_eq!(parsed, schedule, "seed {:#x}: {enc:?}", g.seed);
+        });
+    }
+
+    #[test]
+    fn malformed_specs_reject_without_panic() {
+        // Hand-picked malformations: every one must Err, never panic.
+        for bad in [
+            "",
+            "grid=eval",                          // missing family
+            "family=nope",                        // unknown family
+            "family=ant-dir family=ant-dir",      // duplicate key
+            "family=ant-dir grid=diag",           // bad enum
+            "family=ant-dir batch=0",             // zero batch
+            "family=ant-dir budget=x",            // bad number
+            "family=ant-dir bogus=1",             // unknown key
+            "family=ant-dir schedule=leg:0",      // schedule missing @t
+            "family=ant-dir schedule=leg@5",      // bad perturb spec
+            "family=ant-dir resume=3",            // resume mixed into spec
+            "family",                             // not key=value
+            "family=ant-dir prec=f64",            // bad precision
+        ] {
+            assert!(JobSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+        // Fuzzed mutations of a valid line: parse must return (Ok or
+        // Err) — the catch_unwind in the harness turns panics into
+        // failures.
+        check(300, |g| {
+            let mut line = gen_spec(g).encode();
+            let garbage = [" x", "=", " schedule=@@", " batch=-1", "\u{7f}", " a=b=c"];
+            for _ in 0..g.usize_range(1, 4) {
+                let pick = garbage[g.usize_range(0, garbage.len())];
+                let at = g.usize_range(0, line.len() + 1);
+                // Byte-safe splice: clamp to a char boundary.
+                let mut at = at.min(line.len());
+                while !line.is_char_boundary(at) {
+                    at -= 1;
+                }
+                line.insert_str(at, pick);
+            }
+            let _ = JobSpec::parse(&line);
+            let _ = parse_submit(&line);
+        });
+    }
+
+    #[test]
+    fn parse_submit_routes_resume() {
+        assert_eq!(parse_submit(" resume=7 ").unwrap(), SubmitRequest::Resume(7));
+        assert!(parse_submit("resume=x").is_err());
+        assert!(parse_submit("resume=7 family=ant-dir").is_err());
+        match parse_submit("family=ant-dir grid=train").unwrap() {
+            SubmitRequest::New(spec) => assert_eq!(spec.grid, GridKind::Train),
+            other => panic!("expected New, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn task_grid_scenarios_mirror_cli_decorrelation() {
+        let mut spec = JobSpec::new("ant-dir");
+        spec.grid = GridKind::Task;
+        spec.batch = 4;
+        spec.seed = 100;
+        let sc = spec.scenarios().unwrap();
+        assert_eq!(sc.len(), 4);
+        for (i, s) in sc.iter().enumerate() {
+            assert_eq!(s.seed, 100 + i as u64);
+            assert_eq!(s.task.id, sc[0].task.id);
+        }
+    }
+
+    #[test]
+    fn small_job_runs_to_done_and_streams_rows() {
+        let mgr = JobManager::new(JobManagerConfig {
+            queue_cap: 2,
+            runners: 1,
+        });
+        mgr.install_model("cheetah-vel", small_model("cheetah-vel", 8, 3))
+            .unwrap();
+        let mut spec = JobSpec::new("cheetah-vel");
+        spec.grid = GridKind::Train;
+        spec.budget = Some(6);
+        spec.batch = 4;
+        let id = mgr.submit(spec).unwrap();
+        let mut rows = Vec::new();
+        while let Some(row) = mgr.wait_row(id, rows.len()).unwrap() {
+            rows.push(row);
+        }
+        assert_eq!(rows.len(), 8, "train grid has 8 tasks");
+        let st = mgr.status(id).unwrap();
+        assert_eq!(st.state, JobState::Done);
+        assert_eq!((st.done, st.total), (8, 8));
+        let (_, summary) = mgr.summary(id).unwrap();
+        assert_eq!(summary.sessions, 8);
+        let m = mgr.metrics();
+        let m = m.lock().unwrap();
+        assert_eq!(m.count("jobs_submitted"), 1);
+        assert_eq!(m.count("jobs_completed"), 1);
+        assert_eq!(m.count("adapt_sessions"), 8);
+    }
+
+    #[test]
+    fn submit_without_model_is_typed_error() {
+        let mgr = JobManager::new(JobManagerConfig::default());
+        let err = mgr.submit(JobSpec::new("ant-dir")).unwrap_err();
+        assert_eq!(err.code(), "job-no-model");
+        assert_eq!(err, JobError::NoModel("ant-dir".into()));
+    }
+
+    #[test]
+    fn install_model_rejects_wrong_geometry() {
+        let mgr = JobManager::new(JobManagerConfig::default());
+        // A cheetah-shaped model cannot serve ant-dir jobs.
+        let err = mgr
+            .install_model("ant-dir", small_model("cheetah-vel", 8, 3))
+            .unwrap_err();
+        assert_eq!(err.code(), "job-geometry-mismatch");
+        assert!(mgr.install_model("nope", small_model("ant-dir", 8, 3)).is_err());
+    }
+
+    #[test]
+    fn queued_job_cancels_immediately_and_resumes_from_scratch() {
+        // Runner 1 is busy with a long job, so the second job sits in
+        // the queue where cancel takes effect synchronously.
+        let mgr = JobManager::new(JobManagerConfig {
+            queue_cap: 4,
+            runners: 1,
+        });
+        mgr.install_model("reacher", small_model("reacher", 8, 5))
+            .unwrap();
+        let mut long = JobSpec::new("reacher");
+        long.budget = Some(200);
+        long.batch = 4;
+        let long_id = mgr.submit(long).unwrap();
+        let mut short = JobSpec::new("reacher");
+        short.grid = GridKind::Train;
+        short.budget = Some(5);
+        let short_id = mgr.submit(short).unwrap();
+        let st = mgr.cancel(short_id).unwrap();
+        assert_eq!(st.state, JobState::Cancelled);
+        assert_eq!(st.done, 0);
+        // Unblock the runner before resuming: the long job checkpoints
+        // at its next engine tick.
+        mgr.cancel(long_id).unwrap();
+        wait_terminal(&mgr, long_id);
+        // A cancelled-before-start job resumes into a full run.
+        let resumed = mgr.resume(short_id).unwrap();
+        let st = wait_terminal(&mgr, resumed);
+        assert_eq!(st.state, JobState::Done);
+        assert_eq!(st.done, 8);
+        // Resume of a non-resumable (Done) job is a typed error.
+        let err = mgr.resume(resumed).unwrap_err();
+        assert_eq!(err.code(), "job-not-resumable");
+        assert_eq!(mgr.resume(999).unwrap_err().code(), "job-unknown-id");
+    }
+
+    #[test]
+    fn shutdown_interrupts_and_blocks_new_admissions() {
+        let mgr = JobManager::new(JobManagerConfig {
+            queue_cap: 4,
+            runners: 1,
+        });
+        mgr.install_model("ant-dir", small_model("ant-dir", 8, 7))
+            .unwrap();
+        let mut spec = JobSpec::new("ant-dir");
+        spec.budget = Some(400);
+        spec.batch = 4;
+        let id = mgr.submit(spec.clone()).unwrap();
+        mgr.shutdown();
+        let st = mgr.status(id).unwrap();
+        assert!(
+            st.state == JobState::Interrupted || st.state == JobState::Done,
+            "post-shutdown state {:?}",
+            st.state
+        );
+        assert_eq!(mgr.submit(spec).unwrap_err().code(), "job-shutting-down");
+    }
+}

@@ -16,20 +16,30 @@
 //! - [`server`]: a session-managed TCP control server multiplexing many
 //!   concurrent client connections onto batched SNN steps (observation
 //!   in → action out) — the robot-side request loop at fleet scale.
+//! - [`jobs`]: adaptation-as-a-service — grid sweeps as queued batch
+//!   jobs behind the server (`JOB SUBMIT/STATUS/CANCEL/RESULTS`), run
+//!   on dedicated job-runner threads with admission control, per-job θ
+//!   snapshots, and checkpoint/resume, bit-identical to the CLI
+//!   `adapt --grid` path.
 //! - [`metrics`]: lightweight named metrics registry for all of the
 //!   above.
 
 pub mod adapt_loop;
 pub mod batch_adapt;
+pub mod jobs;
 pub mod metrics;
 pub mod offline;
 pub mod server;
 
 pub use adapt_loop::{run_adaptation, AdaptConfig, AdaptLog};
 pub use batch_adapt::{
-    parse_schedule, run_batch_adaptation, run_chunked_adaptation, scenarios_for_grid,
-    BatchAdaptConfig, BatchAdaptEngine, ChunkBackendSpec, ChunkedAdaptEngine, GridSummary,
-    Scenario,
+    encode_schedule, parse_schedule, run_batch_adaptation, run_chunked_adaptation,
+    scenarios_for_grid, BatchAdaptConfig, BatchAdaptEngine, ChunkBackendSpec, ChunkedAdaptEngine,
+    GridSummary, Scenario,
+};
+pub use jobs::{
+    parse_submit, GridKind, JobCheckpoint, JobError, JobManager, JobManagerConfig, JobModel,
+    JobModelSpec, JobRow, JobSpec, JobState, JobStatus, Precision, SubmitRequest,
 };
 pub use metrics::Metrics;
 pub use offline::{train_rule, TrainConfig, TrainResult};

@@ -16,6 +16,36 @@
 //! ← ERR <reason>               malformed input / server full
 //! ```
 //!
+//! With a [`JobManager`] attached (`serve --job-threads ≥ 1`), four
+//! more verbs expose adaptation-as-a-service (DESIGN.md §Batched-
+//! Serving, "Grid jobs"); handlers run them inline on their own pool
+//! worker and job sweeps execute on the manager's dedicated runner
+//! threads, so live control ticks never queue behind a grid:
+//!
+//! ```text
+//! → JOB SUBMIT family=<f> [grid=task|train|eval] [schedule=<spec@t;...>]
+//!              [budget=<n>] [seed=<n>] [batch=<n>] [threads=<n>]
+//!              [task=<n>] [prec=f32|f16]     (or: JOB SUBMIT resume=<id>)
+//! ← JOB OK id=<id> total=<n> done=<k>
+//! → JOB STATUS <id>
+//! ← JOB STATUS id=<id> state=<s> done=<k> total=<n>
+//! → JOB CANCEL <id>
+//! ← JOB OK id=<id> state=<s> done=<k> total=<n>
+//! → JOB RESULTS <id>
+//! ← JOB RESULTS id=<id> total=<n>
+//! ← ROW <i> task=<t> perturb_at=<t|none> steps=<n> total_reward=<v>
+//!       pre=<v> shock=<v> final=<v> recovery=<v> ttr=<n|none>   (streamed)
+//! ← JOB END id=<id> state=<s> sessions=<n> perturbed=<n> recovered=<n>
+//!       mean_reward=<v> mean_recovery=<v> ttr_p50=<v>
+//! ← ERR <job-error-code> <detail>          typed rejection (e.g.
+//!                                          job-queue-full = backpressure)
+//! ```
+//!
+//! `ROW` floats use Rust's shortest round-trip `Display`, so parsing
+//! them back yields bit-identical `f64`s — the wire preserves the
+//! bit-exactness contract with the CLI `adapt --grid` path
+//! (`tests/grid_jobs_conformance.rs`).
+//!
 //! # Architecture
 //!
 //! ```text
@@ -73,6 +103,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::backend::SnnBackend;
+use crate::coordinator::jobs::{parse_submit, JobError, JobManager, JobRow, JobStatus, SubmitRequest};
 use crate::coordinator::metrics::Metrics;
 use crate::es::eval::NEURONS_PER_DIM;
 use crate::snn::encoding::{PopulationEncoder, TraceDecoder};
@@ -233,6 +264,7 @@ pub struct ControlServer {
     decoder: TraceDecoder,
     cfg: ServerConfig,
     metrics: Arc<Mutex<Metrics>>,
+    jobs: Option<Arc<JobManager>>,
 }
 
 impl ControlServer {
@@ -269,7 +301,23 @@ impl ControlServer {
             metrics: Arc::new(Mutex::new(Metrics::new())),
             cfg,
             backend,
+            jobs: None,
         }
+    }
+
+    /// Attach a job subsystem: connection handlers gain the `JOB` verbs
+    /// (submit/status/cancel/streamed results). The manager should
+    /// share this server's metrics registry
+    /// ([`JobManager::with_metrics`]) so `STATS` and the final report
+    /// cover both serving and jobs.
+    pub fn attach_jobs(&mut self, jobs: Arc<JobManager>) {
+        self.jobs = Some(jobs);
+    }
+
+    /// The attached job subsystem, if any (tests use this to drive
+    /// model swaps and checkpoints around a serving loop).
+    pub fn jobs(&self) -> Option<Arc<JobManager>> {
+        self.jobs.clone()
     }
 
     /// Shared metrics registry (counters: `requests`, `resets`,
@@ -303,10 +351,11 @@ impl ControlServer {
         let accept_shared = Arc::clone(&shared);
         let encoder = Arc::clone(&self.encoder);
         let seed = self.cfg.seed;
+        let jobs = self.jobs.clone();
 
         let accept = std::thread::Builder::new()
             .name("fireflyp-accept".into())
-            .spawn(move || accept_loop(listener, accept_shared, encoder, seed, max_connections))
+            .spawn(move || accept_loop(listener, accept_shared, encoder, seed, jobs, max_connections))
             .expect("spawn accept thread");
 
         stepper_loop(self.backend.as_mut(), &self.decoder, &shared);
@@ -322,6 +371,7 @@ fn accept_loop(
     shared: Arc<Shared>,
     encoder: Arc<PopulationEncoder>,
     seed: u64,
+    jobs: Option<Arc<JobManager>>,
     max_connections: Option<usize>,
 ) {
     // One pool worker per session slot; handlers are pinned so a live
@@ -339,7 +389,8 @@ fn accept_loop(
                 shared.live.fetch_add(1, Ordering::SeqCst);
                 let sh = Arc::clone(&shared);
                 let enc = Arc::clone(&encoder);
-                pool.execute_on(slot, move || handle_connection(stream, slot, sh, enc, seed));
+                let jb = jobs.clone();
+                pool.execute_on(slot, move || handle_connection(stream, slot, sh, enc, seed, jb));
             }
             None => {
                 shared.metrics.lock().unwrap().incr("rejected");
@@ -372,6 +423,7 @@ fn handle_connection(
     shared: Arc<Shared>,
     encoder: Arc<PopulationEncoder>,
     seed: u64,
+    jobs: Option<Arc<JobManager>>,
 ) {
     if let Ok(peer) = stream.peer_addr() {
         crate::log_info!("connection from {peer} → session slot {slot}");
@@ -446,6 +498,22 @@ fn handle_connection(
                         let _ = write!(resp, "ERR {e}");
                     }
                 }
+            } else if let Some(rest) = line.strip_prefix("JOB ") {
+                match &jobs {
+                    Some(mgr) => {
+                        // Job verbs run inline on this pinned worker
+                        // (never through the stepper queue); RESULTS
+                        // streams its own lines.
+                        handle_job_request(rest, mgr, &mut writer, &mut resp)?;
+                        continue;
+                    }
+                    None => {
+                        resp.push_str(
+                            "ERR job-disabled no job subsystem attached \
+                             (serve --job-threads >= 1)",
+                        );
+                    }
+                }
             } else {
                 shared.metrics.lock().unwrap().incr("bad_requests");
                 let _ = write!(resp, "ERR unknown command {line:?}");
@@ -461,6 +529,146 @@ fn handle_connection(
 
     shared.release_slot(slot);
     shared.live.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// Handle one `JOB <verb> ...` request (everything after `JOB `),
+/// writing every response line (the streamed `RESULTS` rows included)
+/// to `writer` directly. `resp` is the connection's pooled line
+/// buffer.
+fn handle_job_request(
+    rest: &str,
+    jobs: &Arc<JobManager>,
+    writer: &mut TcpStream,
+    resp: &mut String,
+) -> std::io::Result<()> {
+    resp.clear();
+    if let Some(payload) = rest.strip_prefix("SUBMIT ") {
+        let outcome = match parse_submit(payload) {
+            Ok(SubmitRequest::New(spec)) => jobs.submit(spec),
+            Ok(SubmitRequest::Resume(id)) => jobs.resume(id),
+            Err(e) => Err(JobError::BadSpec(e)),
+        };
+        match outcome {
+            Ok(id) => {
+                let st = jobs.status(id).expect("freshly admitted job");
+                // done > 0 on resume: the checkpointed prefix carries over.
+                let _ = write!(resp, "JOB OK id={id} total={} done={}", st.total, st.done);
+            }
+            Err(e) => {
+                let _ = write!(resp, "ERR {e}");
+            }
+        }
+    } else if let Some(arg) = rest.strip_prefix("STATUS ") {
+        match parse_job_id(arg).and_then(|id| jobs.status(id)) {
+            Ok(st) => write_job_status(resp, "JOB STATUS", &st),
+            Err(e) => {
+                let _ = write!(resp, "ERR {e}");
+            }
+        }
+    } else if let Some(arg) = rest.strip_prefix("CANCEL ") {
+        match parse_job_id(arg).and_then(|id| jobs.cancel(id)) {
+            Ok(st) => write_job_status(resp, "JOB OK", &st),
+            Err(e) => {
+                let _ = write!(resp, "ERR {e}");
+            }
+        }
+    } else if let Some(arg) = rest.strip_prefix("RESULTS ") {
+        match parse_job_id(arg).and_then(|id| jobs.status(id).map(|st| (id, st))) {
+            Ok((id, st)) => {
+                let _ = write!(resp, "JOB RESULTS id={id} total={}", st.total);
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n")?;
+                // Stream rows as sub-batches finish; wait_row blocks
+                // until row `index` exists or the job is terminal.
+                let mut index = 0usize;
+                while let Ok(Some(row)) = jobs.wait_row(id, index) {
+                    resp.clear();
+                    write_job_row(resp, &row);
+                    writer.write_all(resp.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    index += 1;
+                }
+                resp.clear();
+                match jobs.summary(id) {
+                    Ok((st, sum)) => {
+                        let _ = write!(
+                            resp,
+                            "JOB END id={id} state={} sessions={} perturbed={} recovered={} \
+                             mean_reward={} mean_recovery={} ttr_p50={}",
+                            st.state.as_str(),
+                            sum.sessions,
+                            sum.perturbed,
+                            sum.recovered,
+                            sum.mean_total_reward,
+                            sum.mean_recovery_ratio,
+                            sum.time_to_recover_p50
+                        );
+                    }
+                    Err(e) => {
+                        let _ = write!(resp, "ERR {e}");
+                    }
+                }
+            }
+            Err(e) => {
+                let _ = write!(resp, "ERR {e}");
+            }
+        }
+    } else {
+        let _ = write!(
+            resp,
+            "ERR job-bad-verb want SUBMIT | STATUS | CANCEL | RESULTS (got {rest:?})"
+        );
+    }
+    writer.write_all(resp.as_bytes())?;
+    writer.write_all(b"\n")?;
+    Ok(())
+}
+
+fn parse_job_id(s: &str) -> Result<u64, JobError> {
+    s.trim()
+        .parse()
+        .map_err(|e| JobError::BadSpec(format!("bad job id: {e}")))
+}
+
+fn write_job_status(resp: &mut String, prefix: &str, st: &JobStatus) {
+    let _ = write!(
+        resp,
+        "{prefix} id={} state={} done={} total={}",
+        st.id,
+        st.state.as_str(),
+        st.done,
+        st.total
+    );
+}
+
+/// One streamed result row. Floats use `{}` Display (shortest
+/// round-trip), so the parsed-back values are bit-identical — the
+/// conformance suite leans on this.
+fn write_job_row(resp: &mut String, row: &JobRow) {
+    let log = &row.log;
+    let _ = write!(resp, "ROW {} task={} perturb_at=", row.index, row.task);
+    match log.perturb_at {
+        Some(t) => {
+            let _ = write!(resp, "{t}");
+        }
+        None => resp.push_str("none"),
+    }
+    let _ = write!(
+        resp,
+        " steps={} total_reward={} pre={} shock={} final={} recovery={} ttr=",
+        log.rewards.len(),
+        log.total_reward,
+        log.pre_perturb_rate,
+        log.shock_rate,
+        log.final_rate,
+        log.recovery_ratio()
+    );
+    match log.time_to_recover {
+        Some(t) => {
+            let _ = write!(resp, "{t}");
+        }
+        None => resp.push_str("none"),
+    }
 }
 
 /// Drain the request queue forever (until shutdown), stepping every
@@ -684,6 +892,98 @@ mod tests {
         assert!(refused.line.starts_with("ERR server full"), "{}", refused.line);
         drop(refused);
         drop(keeper);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn job_verbs_round_trip_over_tcp() {
+        use crate::coordinator::jobs::{GridKind, JobManager, JobManagerConfig, JobModel, JobSpec};
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let handle = std::thread::spawn(move || {
+            let mut server = ControlServer::with_config(
+                test_backend(),
+                6,
+                6,
+                ServerConfig {
+                    max_sessions: 2,
+                    seed: 1,
+                },
+            );
+            let jobs = Arc::new(JobManager::with_metrics(
+                JobManagerConfig {
+                    queue_cap: 2,
+                    runners: 1,
+                },
+                server.metrics(),
+            ));
+            // cheetah-vel geometry matches the serving backend here, but
+            // job models are independent of the serving session table.
+            let cfg = {
+                let mut cfg = crate::snn::SnnConfig::control(48, 12);
+                cfg.n_hidden = 16;
+                cfg
+            };
+            let mut rng = Pcg64::new(0, 7);
+            let mut genome = vec![0.0f32; cfg.n_rule_params()];
+            rng.fill_normal_f32(&mut genome, 0.05);
+            let rule = NetworkRule::from_flat(&cfg, &genome);
+            jobs.install_model("cheetah-vel", JobModel::plastic(cfg, rule))
+                .unwrap();
+            server.attach_jobs(Arc::clone(&jobs));
+            server.serve(&addr.to_string(), Some(1)).unwrap();
+            let m = server.metrics();
+            let count = m.lock().unwrap().count("jobs_completed");
+            count
+        });
+        std::thread::sleep(Duration::from_millis(100));
+
+        let mut c = Client::connect(addr);
+        // Interleave a control tick with the job lifecycle.
+        assert!(c.round_trip("OBS 0.1,0.2,0.3,0.4,0.5,1.0").starts_with("ACT "));
+        let spec = {
+            let mut s = JobSpec::new("cheetah-vel");
+            s.grid = GridKind::Train;
+            s.budget = Some(5);
+            s.batch = 4;
+            s.encode()
+        };
+        let ok = c.round_trip(&format!("JOB SUBMIT {spec}"));
+        assert!(ok.starts_with("JOB OK id=1 total=8"), "{ok}");
+        let status = c.round_trip("JOB STATUS 1");
+        assert!(status.starts_with("JOB STATUS id=1 state="), "{status}");
+        // Streamed results: header, 8 rows, END summary.
+        c.writer.write_all(b"JOB RESULTS 1\n").unwrap();
+        c.line.clear();
+        c.reader.read_line(&mut c.line).unwrap();
+        assert!(c.line.starts_with("JOB RESULTS id=1 total=8"), "{}", c.line);
+        for i in 0..8 {
+            c.line.clear();
+            c.reader.read_line(&mut c.line).unwrap();
+            assert!(c.line.starts_with(&format!("ROW {i} ")), "{}", c.line);
+        }
+        c.line.clear();
+        c.reader.read_line(&mut c.line).unwrap();
+        assert!(c.line.starts_with("JOB END id=1 state=done sessions=8"), "{}", c.line);
+        // Typed errors stay single-line.
+        assert!(c.round_trip("JOB STATUS 99").starts_with("ERR job-unknown-id"));
+        assert!(c.round_trip("JOB SUBMIT family=nope").starts_with("ERR job-bad-spec"));
+        assert!(c.round_trip("JOB FROB 1").starts_with("ERR job-bad-verb"));
+        assert!(c
+            .round_trip("JOB SUBMIT family=ant-dir")
+            .starts_with("ERR job-no-model"));
+        drop(c);
+        assert_eq!(handle.join().unwrap(), 1, "one job must have completed");
+    }
+
+    #[test]
+    fn job_verbs_without_subsystem_are_refused() {
+        let (addr, handle) = spawn_server(1, 1);
+        let mut c = Client::connect(addr);
+        assert!(c.round_trip("JOB STATUS 1").starts_with("ERR job-disabled"));
+        drop(c);
         handle.join().unwrap();
     }
 

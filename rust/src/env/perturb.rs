@@ -122,6 +122,33 @@ impl Perturbation {
         }
     }
 
+    /// Encode back into the [`Perturbation::parse`] grammar, e.g.
+    /// `leg:0,2`, `gain:0.3`, `wind:1,-0.5`. Floats use Rust's shortest
+    /// round-trip `Display`, so `parse(p.spec()) == p` bit-exactly —
+    /// the encode half of the job-spec wire round-trip
+    /// (`coordinator/jobs.rs`).
+    pub fn spec(&self) -> String {
+        fn join_usize(v: &[usize]) -> String {
+            let mut s = String::new();
+            for (i, x) in v.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                s.push_str(&x.to_string());
+            }
+            s
+        }
+        match &self.kind {
+            PerturbationKind::ActuatorFailure { indices } => {
+                format!("leg:{}", join_usize(indices))
+            }
+            PerturbationKind::ActuatorGain { factor } => format!("gain:{factor}"),
+            PerturbationKind::ExternalForce { fx, fy } => format!("wind:{fx},{fy}"),
+            PerturbationKind::ActionRemap { map } => format!("remap:{}", join_usize(map)),
+            PerturbationKind::SensorBias { bias } => format!("bias:{bias}"),
+        }
+    }
+
     /// Parse from CLI syntax, e.g. `leg:0,2`, `gain:0.3`, `wind:1.0,-0.5`,
     /// `remap:1,0,3,2`, `bias:0.2`.
     pub fn parse(spec: &str) -> Result<Perturbation, String> {
@@ -223,5 +250,20 @@ mod tests {
         );
         assert!(Perturbation::parse("bogus:1").is_err());
         assert!(Perturbation::parse("leg:x").is_err());
+    }
+
+    #[test]
+    fn spec_encodes_back_into_parse_grammar() {
+        let menu = [
+            Perturbation::leg_failure(vec![0, 2]),
+            Perturbation::weak_motors(0.3),
+            Perturbation::wind(1.0, -0.5),
+            Perturbation::remap(vec![1, 0, 3, 2]),
+            Perturbation::sensor_bias(0.2),
+        ];
+        for p in menu {
+            let enc = p.spec();
+            assert_eq!(Perturbation::parse(&enc).unwrap(), p, "spec {enc}");
+        }
     }
 }

@@ -23,9 +23,9 @@
 #![warn(missing_docs)]
 
 // Documentation debt: the serving surface (snn, backend, coordinator),
-// the environments (env), the ES optimizers (es) and the whole util
-// foundation are fully documented; the modules below still opt out and
-// are tracked as an open item in ROADMAP.md.
+// the environments (env), the ES optimizers (es), the runtime and the
+// whole util foundation are fully documented; the modules below still
+// opt out and are tracked as an open item in ROADMAP.md.
 pub mod util;
 
 pub mod snn;
@@ -33,7 +33,6 @@ pub mod env;
 pub mod es;
 #[allow(missing_docs)]
 pub mod fpga;
-#[allow(missing_docs)]
 pub mod runtime;
 pub mod backend;
 pub mod coordinator;

@@ -20,7 +20,7 @@ use firefly_p::coordinator::batch_adapt::{
 };
 use firefly_p::coordinator::offline::{genome_io, train_rule, TrainConfig};
 use firefly_p::coordinator::server::{ControlServer, ServerConfig};
-use firefly_p::coordinator::Metrics;
+use firefly_p::coordinator::{JobManager, JobManagerConfig, JobModel, Metrics};
 use firefly_p::env::{eval_grid, family_of, make_env, train_grid, Perturbation};
 use firefly_p::es::eval::GenomeKind;
 use firefly_p::fpga::power::{Activity, PowerModel};
@@ -107,6 +107,21 @@ fn parser() -> Parser {
                 "worker threads the native backend shards batched steps across \
                  (64-lane word shards; 0 = all CPU cores)",
                 "0",
+            ),
+            opt(
+                "job-threads",
+                "dedicated job-runner threads executing JOB SUBMIT grid sweeps \
+                 (adaptation-as-a-service) off the serving path; 0 disables the \
+                 job subsystem. Composes with adapt's --adapt-threads: each \
+                 runner steps its job's scenario chunks via the chunked engine",
+                "1",
+            ),
+            opt(
+                "job-queue",
+                "bound on queued (not yet running) jobs; submits beyond it get \
+                 a typed `ERR job-queue-full` rejection instead of stalling \
+                 live control ticks",
+                "8",
             ),
         ],
     )
@@ -551,6 +566,39 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
             seed,
         },
     );
+    // Adaptation-as-a-service: JOB verbs run grid sweeps on dedicated
+    // runner threads (never the serving path). --job-threads 0 leaves
+    // the subsystem detached and the verbs answer `ERR job-disabled`.
+    let job_threads = args.get_usize("job-threads", 1);
+    if job_threads > 0 {
+        let jobs = Arc::new(JobManager::with_metrics(
+            JobManagerConfig {
+                queue_cap: args.get_usize("job-queue", 8).max(1),
+                runners: job_threads,
+            },
+            server.metrics(),
+        ));
+        // Pin the deployed model as the job-side θ snapshot source for
+        // the serve env's family.
+        match load_model(args, &env) {
+            Ok((cfg, plastic, genome)) => {
+                let model = if plastic {
+                    JobModel::plastic(cfg.clone(), deployed_rule(&cfg, plastic, &genome))
+                } else {
+                    JobModel::fixed(cfg, genome)
+                };
+                if let Err(e) = jobs.install_model(&env, model) {
+                    eprintln!("job model: {e}");
+                    return 1;
+                }
+            }
+            Err(err) => {
+                eprintln!("{err}");
+                return 1;
+            }
+        }
+        server.attach_jobs(jobs);
+    }
     let addr = args.get_or("addr", "127.0.0.1:7690");
     if let Err(err) = server.serve(&addr, None) {
         eprintln!("server: {err}");

@@ -26,6 +26,7 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// Artifact-name suffix (`<geom>_step` / `<geom>_fwd`).
     pub fn suffix(self) -> &'static str {
         match self {
             Variant::Step => "step",
@@ -37,15 +38,23 @@ impl Variant {
 /// Parsed `.meta` sidecar.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Geometry name (`ant`, `cheetah`, `reacher`, `mnist`, `tiny`).
     pub name: String,
+    /// Variant suffix as written by the compiler (`step` / `fwd`).
     pub variant: String,
+    /// Input-layer width the artifact was lowered for.
     pub n_in: usize,
+    /// Hidden-layer width.
     pub n_hidden: usize,
+    /// Output-layer width.
     pub n_out: usize,
+    /// The `.hlo.txt` module next to the sidecar.
     pub hlo_path: PathBuf,
 }
 
 impl ArtifactMeta {
+    /// Parse one `.meta` sidecar and validate the runtime contract:
+    /// required keys present, [`ARG_ORDER`] matched, HLO file on disk.
     pub fn parse(meta_path: &Path) -> Result<ArtifactMeta, String> {
         let text = std::fs::read_to_string(meta_path)
             .map_err(|e| format!("read {}: {e}", meta_path.display()))?;
@@ -89,6 +98,7 @@ impl ArtifactMeta {
 
 /// Registry over an artifacts directory.
 pub struct Registry {
+    /// The directory the registry was opened on.
     pub dir: PathBuf,
     entries: Vec<ArtifactMeta>,
 }
@@ -107,10 +117,14 @@ impl Registry {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// Open the registry at [`Registry::default_dir`].
     pub fn open_default() -> Result<Registry, String> {
         Self::open(&Self::default_dir())
     }
 
+    /// Open a registry over `dir`, parsing every `.meta` sidecar. Errs
+    /// when the directory is missing or holds no valid artifact (both
+    /// messages point at `make artifacts`).
     pub fn open(dir: &Path) -> Result<Registry, String> {
         if !dir.is_dir() {
             return Err(format!(
@@ -143,10 +157,12 @@ impl Registry {
         })
     }
 
+    /// Every parsed artifact, sorted by (name, variant).
     pub fn list(&self) -> &[ArtifactMeta] {
         &self.entries
     }
 
+    /// Look up the artifact for a geometry + variant, if built.
     pub fn find(&self, geometry: &str, variant: Variant) -> Option<&ArtifactMeta> {
         self.entries
             .iter()

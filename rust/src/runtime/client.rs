@@ -18,6 +18,8 @@ use std::rc::Rc;
 use super::artifact::ArtifactMeta;
 use super::executor::SnnStepExecutable;
 
+/// PJRT CPU client + per-path executable cache (one per thread — the
+/// underlying handles are `!Send`).
 pub struct XlaClient {
     client: xla::PjRtClient,
     cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
@@ -28,6 +30,7 @@ thread_local! {
 }
 
 impl XlaClient {
+    /// Construct a fresh CPU client (prefer [`XlaClient::global`]).
     pub fn new() -> Result<XlaClient, String> {
         let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e:?}"))?;
         Ok(XlaClient {
@@ -49,6 +52,7 @@ impl XlaClient {
         })
     }
 
+    /// PJRT platform tag for logs (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -14,6 +14,7 @@ use super::artifact::ArtifactMeta;
 
 /// A loaded SNN step executable + resident state.
 pub struct SnnStepExecutable {
+    /// Artifact geometry + variant this executable was loaded from.
     pub meta: ArtifactMeta,
     exe: Rc<xla::PjRtLoadedExecutable>,
     /// Resident state in ARG_ORDER[0..9]: w1 w2 v1 v2 t_in t_hid t_out
@@ -21,10 +22,12 @@ pub struct SnnStepExecutable {
     state: Vec<xla::Literal>,
     /// Reusable staging for the spike input.
     spike_host: Vec<f32>,
+    /// Timesteps executed since construction / last reset.
     pub steps_executed: u64,
 }
 
 impl SnnStepExecutable {
+    /// Wrap a compiled artifact with freshly-zeroed resident state.
     pub fn new(meta: ArtifactMeta, exe: Rc<xla::PjRtLoadedExecutable>) -> SnnStepExecutable {
         let (n_in, n_h, n_o) = (meta.n_in, meta.n_hidden, meta.n_out);
         let zeros = |dims: &[i64]| -> xla::Literal {

@@ -26,11 +26,20 @@
 //! scope dispatch itself (the worker threads run inside the armed
 //! window and are counted).
 //!
+//! A final test pins the ISSUE 6 contract: control-tick serving stays
+//! zero-alloc **while a grid job executes** on its dedicated job-runner
+//! thread. The allocator splits its accounting — the serving thread
+//! marks itself via a thread-local flag, so job-thread allocations
+//! (engine/env construction at sub-batch boundaries) are measured
+//! separately and never pollute the serving-path count.
+//!
 //! The allocator counts process-wide, so the tests serialize their
 //! armed windows through a mutex; no allocation from the other tests
-//! can land inside an armed window.
+//! can land inside an armed window (tests that spawn background
+//! threads shut them down before releasing the gate).
 
 use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -45,33 +54,49 @@ use firefly_p::snn::encoding::{PopulationEncoder, TraceDecoder};
 use firefly_p::snn::{NetworkRule, SnnConfig};
 use firefly_p::util::rng::Pcg64;
 
-/// Serializes the armed windows of the two tests in this binary.
+/// Serializes the armed windows of the tests in this binary.
 static GATE: Mutex<()> = Mutex::new(());
 
 struct CountingAlloc;
 
 static ARMED: AtomicBool = AtomicBool::new(false);
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
+/// Allocations made while armed *by the thread flagged as the serving
+/// thread* — the split that lets a job runner allocate freely in the
+/// background while the serving path is held to zero.
+static SERVING_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Set by the test driving the serving pipeline on its own thread.
+    /// Const-initialized so reading it inside the allocator never
+    /// allocates.
+    static IS_SERVING: Cell<bool> = const { Cell::new(false) };
+}
+
+fn record_alloc() {
+    if ARMED.load(Ordering::Relaxed) {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        // try_with: TLS may be torn down on exiting threads — count
+        // those as non-serving rather than panicking in the allocator.
+        if IS_SERVING.try_with(Cell::get).unwrap_or(false) {
+            SERVING_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        if ARMED.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
+        record_alloc();
         System.alloc(layout)
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        if ARMED.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
+        record_alloc();
         System.alloc_zeroed(layout)
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        if ARMED.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
+        record_alloc();
         System.realloc(ptr, layout, new_size)
     }
 
@@ -432,4 +457,139 @@ fn steady_state_sharded_serving_allocates_nothing() {
         "steady-state sharded serving loop allocated {allocs} times over \
          100 ticks × {sessions} sessions × 2 shards"
     );
+}
+
+#[test]
+fn serving_stays_alloc_free_while_grid_job_runs() {
+    use firefly_p::coordinator::jobs::{
+        GridKind, JobManager, JobManagerConfig, JobModel, JobSpec, Precision,
+    };
+    use firefly_p::es::eval::NEURONS_PER_DIM;
+
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // The ISSUE 6 acceptance: a grid job grinding through the 72-task
+    // eval sweep on its dedicated runner thread must not cost the
+    // serving path a single allocation. The runner allocates at will
+    // (per-sub-batch engine + env construction) — the thread-local
+    // split keeps those out of SERVING_ALLOCS.
+    let job_env = firefly_p::env::make_env("cheetah-vel").unwrap();
+    let mut job_cfg =
+        SnnConfig::control(job_env.obs_dim() * NEURONS_PER_DIM, 2 * job_env.act_dim());
+    job_cfg.n_hidden = 8;
+    let mut rng = Pcg64::new(15, 0);
+    let mut flat = vec![0.0f32; job_cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut flat, 0.05);
+    let job_rule = NetworkRule::from_flat(&job_cfg, &flat);
+    let mgr = JobManager::new(JobManagerConfig {
+        queue_cap: 2,
+        runners: 1,
+    });
+    mgr.install_model("cheetah-vel", JobModel::plastic(job_cfg, job_rule))
+        .unwrap();
+    let mut spec = JobSpec::new("cheetah-vel");
+    spec.grid = GridKind::Eval;
+    spec.budget = Some(400);
+    spec.seed = 0x5E;
+    spec.batch = 4;
+    spec.threads = 1;
+    spec.prec = Precision::F32;
+    let id = mgr.submit(spec).unwrap();
+
+    // The serving pipeline of the first test, on this thread.
+    let mut cfg = SnnConfig::control(48, 12);
+    cfg.n_hidden = 32;
+    let mut rng = Pcg64::new(16, 0);
+    let mut genome = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut genome, 0.1);
+    let rule = NetworkRule::from_flat(&cfg, &genome);
+    let mut backend = NativeBackend::plastic(cfg, rule);
+    let sessions = 8usize;
+    assert_eq!(backend.ensure_sessions(sessions), sessions);
+    let encoder = PopulationEncoder::symmetric(6, 8, 3.0);
+    let decoder = TraceDecoder::new(6, 0.5);
+
+    let slots: Vec<usize> = (0..sessions).collect();
+    let obs_lines: Vec<String> = (0..sessions)
+        .map(|s| format!("0.1,-0.2,0.3,{:.2},0.5,-0.6", (s as f32) / 9.0))
+        .collect();
+    let mut rngs: Vec<Pcg64> = (0..sessions).map(|s| Pcg64::new(7, s as u64)).collect();
+
+    let mut obs: Vec<f32> = Vec::new();
+    let mut inbufs: Vec<Vec<bool>> = (0..sessions).map(|_| Vec::new()).collect();
+    let mut inputs: Vec<bool> = Vec::new();
+    let mut out_spikes: Vec<bool> = Vec::new();
+    let mut traces: Vec<f32> = Vec::new();
+    let mut action: Vec<f32> = Vec::new();
+    let mut resp = String::new();
+
+    // Warmup, and make sure the job is actually executing before the
+    // armed window opens (overlap is the point of this test).
+    for _ in 0..50 {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+    }
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    while mgr.status(id).unwrap().state != firefly_p::coordinator::jobs::JobState::Running {
+        assert!(std::time::Instant::now() < deadline, "job never started");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+
+    IS_SERVING.with(|c| c.set(true));
+    ALLOCS.store(0, Ordering::SeqCst);
+    SERVING_ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for _ in 0..300 {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    IS_SERVING.with(|c| c.set(false));
+    let serving_allocs = SERVING_ALLOCS.load(Ordering::SeqCst);
+    let total_allocs = ALLOCS.load(Ordering::SeqCst);
+
+    // The 72 × 400-step sweep far outlasts 300 serving ticks: the job
+    // must still be in flight, or the window measured nothing.
+    let st = mgr.status(id).unwrap();
+    assert!(
+        !st.state.is_terminal(),
+        "grid job finished before the armed window closed (done={})",
+        st.done
+    );
+    assert_eq!(
+        serving_allocs, 0,
+        "serving path allocated {serving_allocs} times while a grid job ran \
+         (job thread accounted {} separately)",
+        total_allocs - serving_allocs
+    );
+
+    // Shut the runner down *inside* the gate so its allocations cannot
+    // land in another test's armed window.
+    mgr.cancel(id).unwrap();
+    mgr.shutdown();
 }

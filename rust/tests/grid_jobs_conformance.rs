@@ -1,0 +1,432 @@
+//! Conformance suite for adaptation-as-a-service (ISSUE 6 headline
+//! tests).
+//!
+//! **Contract:** a grid sweep submitted as a `JOB` over the TCP server
+//! — parsed from the wire, queued, executed on a dedicated job-runner
+//! thread, streamed back row by row — is *bit-identical* to the CLI
+//! `adapt --grid` path: the same `scenarios_for_grid` fan-out driven
+//! through `run_chunked_adaptation` in `--batch`-sized chunks. Pinned
+//! across ≥2 env families × {f32, F16} × job threads ∈ {1, 2}, on
+//! per-scenario recovery metrics AND the final `GridSummary`
+//! aggregate.
+//!
+//! Also pinned: checkpoint/resume — a job cancelled mid-sweep keeps a
+//! batch-aligned prefix of its results, and the resumed job covers all
+//! 72 eval tasks exactly once with results bit-identical to a run that
+//! was never interrupted.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use firefly_p::backend::NativeBackend;
+use firefly_p::coordinator::adapt_loop::AdaptLog;
+use firefly_p::coordinator::batch_adapt::{
+    run_chunked_adaptation, scenarios_for_grid, BatchAdaptConfig, ChunkBackendSpec, GridSummary,
+};
+use firefly_p::coordinator::jobs::{
+    GridKind, JobManager, JobManagerConfig, JobModel, JobSpec, JobState, Precision, JOB_WINDOW,
+};
+use firefly_p::coordinator::server::{ControlServer, ServerConfig};
+use firefly_p::env::{eval_grid, family_of, make_env, Perturbation};
+use firefly_p::es::eval::NEURONS_PER_DIM;
+use firefly_p::snn::{NetworkRule, Scalar, SnnConfig};
+use firefly_p::util::fp16::F16;
+use firefly_p::util::rng::Pcg64;
+
+fn control_cfg(env: &str, hidden: usize) -> SnnConfig {
+    let e = make_env(env).unwrap();
+    let mut cfg = SnnConfig::control(e.obs_dim() * NEURONS_PER_DIM, 2 * e.act_dim());
+    cfg.n_hidden = hidden;
+    cfg
+}
+
+fn rule_for(cfg: &SnnConfig, seed: u64) -> NetworkRule {
+    let mut rng = Pcg64::new(seed, 0);
+    let mut flat = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut flat, 0.05);
+    NetworkRule::from_flat(cfg, &flat)
+}
+
+/// The schedule every conformance job uses: perturbation kinds and
+/// injection times cycle round-robin across the 72 eval scenarios.
+fn schedule() -> Vec<(Option<Perturbation>, usize)> {
+    vec![
+        (Some(Perturbation::leg_failure(vec![0])), 8),
+        (None, 0),
+        (Some(Perturbation::weak_motors(0.5)), 12),
+    ]
+}
+
+const SEED: u64 = 0x6A;
+const BUDGET: usize = 24;
+const BATCH: usize = 8;
+
+/// The CLI `adapt --grid eval` reference path, invoked directly: the
+/// eval-grid fan-out chunked into `--batch`-sized engine runs, each
+/// stepped by `run_chunked_adaptation` at `--adapt-threads`.
+fn reference_logs<S: Scalar>(env: &str, threads: usize) -> Vec<AdaptLog> {
+    let family = family_of(env).unwrap();
+    let scen = scenarios_for_grid(&eval_grid(family), &schedule(), SEED);
+    assert_eq!(scen.len(), 72);
+    let cfg = control_cfg(env, 8);
+    let rule = Arc::new(rule_for(&cfg, SEED));
+    let bcfg = BatchAdaptConfig {
+        env_name: env.into(),
+        window: JOB_WINDOW,
+        max_steps: Some(BUDGET),
+    };
+    let mut logs = Vec::new();
+    for chunk in scen.chunks(BATCH) {
+        logs.extend(run_chunked_adaptation::<S>(
+            &cfg,
+            ChunkBackendSpec::Plastic(Arc::clone(&rule)),
+            &bcfg,
+            chunk,
+            threads.clamp(1, BATCH),
+        ));
+    }
+    logs
+}
+
+fn job_spec(env: &str, threads: usize, prec: Precision) -> JobSpec {
+    let mut spec = JobSpec::new(env);
+    spec.grid = GridKind::Eval;
+    spec.schedule = schedule();
+    spec.budget = Some(BUDGET);
+    spec.seed = SEED;
+    spec.batch = BATCH;
+    spec.threads = threads;
+    spec.prec = prec;
+    spec
+}
+
+/// One streamed `ROW` line, parsed back from the wire. Floats are
+/// emitted with `{}` Display (shortest round-trip), so `parse` here
+/// recovers the bit-exact f64s the job runner computed.
+#[derive(Debug)]
+struct WireRow {
+    index: usize,
+    task: usize,
+    perturb_at: Option<usize>,
+    steps: usize,
+    total_reward: f64,
+    pre: f64,
+    shock: f64,
+    final_rate: f64,
+    recovery: f64,
+    ttr: Option<usize>,
+}
+
+fn kv<'a>(line: &'a str, key: &str) -> &'a str {
+    for tok in line.split_whitespace() {
+        if let Some(v) = tok.strip_prefix(key) {
+            if let Some(v) = v.strip_prefix('=') {
+                return v;
+            }
+        }
+    }
+    panic!("no {key}= field in {line:?}");
+}
+
+fn opt_usize(v: &str) -> Option<usize> {
+    if v == "none" {
+        None
+    } else {
+        Some(v.parse().unwrap())
+    }
+}
+
+fn parse_row(line: &str) -> WireRow {
+    let mut toks = line.split_whitespace();
+    assert_eq!(toks.next(), Some("ROW"), "{line:?}");
+    let index = toks.next().unwrap().parse().unwrap();
+    WireRow {
+        index,
+        task: kv(line, "task").parse().unwrap(),
+        perturb_at: opt_usize(kv(line, "perturb_at")),
+        steps: kv(line, "steps").parse().unwrap(),
+        total_reward: kv(line, "total_reward").parse().unwrap(),
+        pre: kv(line, "pre").parse().unwrap(),
+        shock: kv(line, "shock").parse().unwrap(),
+        final_rate: kv(line, "final").parse().unwrap(),
+        recovery: kv(line, "recovery").parse().unwrap(),
+        ttr: opt_usize(kv(line, "ttr")),
+    }
+}
+
+/// Bit-exact f64 comparison, NaN-tolerant (`time_to_recover_p50` is
+/// NaN when no session recovered — any NaN Display round-trips as the
+/// canonical NaN).
+fn assert_f64_bits(a: f64, b: f64, what: &str) {
+    if a.is_nan() && b.is_nan() {
+        return;
+    }
+    assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} != {b}");
+}
+
+fn assert_row_matches_log(row: &WireRow, log: &AdaptLog, what: &str) {
+    assert_eq!(row.steps, log.rewards.len(), "{what}: steps");
+    assert_eq!(row.perturb_at, log.perturb_at, "{what}: perturb_at");
+    assert_eq!(row.ttr, log.time_to_recover, "{what}: time_to_recover");
+    assert_f64_bits(row.total_reward, log.total_reward, what);
+    assert_f64_bits(row.pre, log.pre_perturb_rate, what);
+    assert_f64_bits(row.shock, log.shock_rate, what);
+    assert_f64_bits(row.final_rate, log.final_rate, what);
+    assert_f64_bits(row.recovery, log.recovery_ratio(), what);
+}
+
+/// Spawn a serving stack for `env` with the job subsystem attached
+/// (`runners` job threads) and the deployed model installed, serving
+/// exactly one client connection.
+fn spawn_server_with_jobs(
+    env: &'static str,
+    runners: usize,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+    let handle = std::thread::spawn(move || {
+        let cfg = control_cfg(env, 8);
+        let rule = rule_for(&cfg, SEED);
+        let e = make_env(env).unwrap();
+        let backend = Box::new(NativeBackend::plastic(cfg.clone(), rule.clone()));
+        let mut server = ControlServer::with_config(
+            backend,
+            e.obs_dim(),
+            e.act_dim(),
+            ServerConfig {
+                max_sessions: 2,
+                seed: 1,
+            },
+        );
+        let jobs = Arc::new(JobManager::with_metrics(
+            JobManagerConfig {
+                queue_cap: 8,
+                runners,
+            },
+            server.metrics(),
+        ));
+        jobs.install_model(env, JobModel::plastic(cfg, rule)).unwrap();
+        server.attach_jobs(jobs);
+        server.serve(&addr.to_string(), Some(1)).unwrap();
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    (addr, handle)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    line: String,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+            line: String::new(),
+        }
+    }
+
+    fn send(&mut self, req: &str) {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        self.line.clear();
+        self.reader.read_line(&mut self.line).unwrap();
+        self.line.trim().to_string()
+    }
+
+    fn round_trip(&mut self, req: &str) -> String {
+        self.send(req);
+        self.recv()
+    }
+}
+
+/// Submit the spec over the wire, stream `JOB RESULTS`, and return the
+/// 72 parsed rows plus the `JOB END` summary line.
+fn run_job_over_tcp(c: &mut Client, spec: &JobSpec) -> (Vec<WireRow>, String) {
+    let ok = c.round_trip(&format!("JOB SUBMIT {}", spec.encode()));
+    assert!(ok.starts_with("JOB OK id="), "{ok}");
+    let id: u64 = kv(&ok, "id").parse().unwrap();
+    assert_eq!(kv(&ok, "total"), "72", "{ok}");
+    c.send(&format!("JOB RESULTS {id}"));
+    let header = c.recv();
+    assert!(header.starts_with(&format!("JOB RESULTS id={id} total=72")), "{header}");
+    let mut rows = Vec::new();
+    loop {
+        let line = c.recv();
+        if line.starts_with("JOB END ") {
+            assert_eq!(kv(&line, "state"), "done", "{line}");
+            return (rows, line);
+        }
+        rows.push(parse_row(&line));
+    }
+}
+
+/// The headline conformance matrix: {cheetah-vel, ant-dir} × {f32, F16}
+/// × job threads {1, 2}, wire rows and final summary bit-compared
+/// against the directly-invoked CLI grid path. The cheetah server runs
+/// one job-runner thread, the ant server two (jobs there also use
+/// 2-way engine chunking), so both manager shapes are covered.
+fn assert_job_matches_cli(env: &'static str, runners: usize) {
+    let (addr, handle) = spawn_server_with_jobs(env, runners);
+    let mut c = Client::connect(addr);
+    for threads in [1usize, 2] {
+        for prec in [Precision::F32, Precision::F16] {
+            let spec = job_spec(env, threads, prec);
+            let (rows, end) = run_job_over_tcp(&mut c, &spec);
+            let reference = match prec {
+                Precision::F32 => reference_logs::<f32>(env, threads),
+                Precision::F16 => reference_logs::<F16>(env, threads),
+            };
+            assert_eq!(rows.len(), reference.len(), "{env} T={threads} {prec:?}");
+            let family = family_of(env).unwrap();
+            let grid = eval_grid(family);
+            for (row, (log, task)) in rows.iter().zip(reference.iter().zip(&grid)) {
+                let what = format!("{env} T={threads} {prec:?} row {}", row.index);
+                assert_eq!(row.task, task.id, "{what}: task order");
+                assert_row_matches_log(row, log, &what);
+            }
+            let sum = GridSummary::from_logs(&reference);
+            assert_eq!(kv(&end, "sessions").parse::<usize>().unwrap(), sum.sessions);
+            assert_eq!(kv(&end, "perturbed").parse::<usize>().unwrap(), sum.perturbed);
+            assert_eq!(kv(&end, "recovered").parse::<usize>().unwrap(), sum.recovered);
+            let what = format!("{env} T={threads} {prec:?} summary");
+            assert_f64_bits(
+                kv(&end, "mean_reward").parse().unwrap(),
+                sum.mean_total_reward,
+                &what,
+            );
+            assert_f64_bits(
+                kv(&end, "mean_recovery").parse().unwrap(),
+                sum.mean_recovery_ratio,
+                &what,
+            );
+            assert_f64_bits(
+                kv(&end, "ttr_p50").parse().unwrap(),
+                sum.time_to_recover_p50,
+                &what,
+            );
+        }
+    }
+    drop(c);
+    handle.join().unwrap();
+}
+
+#[test]
+fn job_results_bit_identical_to_cli_grid_cheetah() {
+    assert_job_matches_cli("cheetah-vel", 1);
+}
+
+#[test]
+fn job_results_bit_identical_to_cli_grid_ant() {
+    assert_job_matches_cli("ant-dir", 2);
+}
+
+/// Cancel mid-sweep, then resume: the kept prefix is batch-aligned,
+/// the resumed job visits all 72 eval tasks exactly once, and the full
+/// result set is bit-identical to a run that was never interrupted.
+#[test]
+fn cancel_then_resume_covers_eval_grid_exactly_once() {
+    let env = "cheetah-vel";
+    let mgr = JobManager::new(JobManagerConfig {
+        queue_cap: 4,
+        runners: 1,
+    });
+    let cfg = control_cfg(env, 8);
+    let rule = rule_for(&cfg, SEED);
+    mgr.install_model(env, JobModel::plastic(cfg, rule)).unwrap();
+
+    let mut spec = job_spec(env, 1, Precision::F32);
+    spec.batch = 4;
+    spec.budget = Some(80);
+    let id = mgr.submit(spec.clone()).unwrap();
+
+    // Let at least one sub-batch land, then cancel mid-sweep.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = mgr.status(id).unwrap();
+        if st.done >= 4 || st.state.is_terminal() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no sub-batch completed in time");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    mgr.cancel(id).unwrap();
+    let st = loop {
+        let st = mgr.status(id).unwrap();
+        if st.state.is_terminal() {
+            break st;
+        }
+        assert!(Instant::now() < deadline, "cancel did not land in time");
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert_eq!(st.state, JobState::Cancelled);
+    assert!(st.done >= 4, "cancel must keep the completed prefix");
+    assert!(st.done < 72, "cancel landed only after the sweep finished");
+    assert_eq!(st.done % 4, 0, "kept prefix must be batch-aligned");
+
+    // Resume inherits spec, θ snapshot, and the completed prefix.
+    let id2 = mgr.resume(id).unwrap();
+    let mut rows = Vec::with_capacity(72);
+    for index in 0..72 {
+        let row = mgr
+            .wait_row(id2, index)
+            .unwrap()
+            .unwrap_or_else(|| panic!("row {index} missing after resume"));
+        assert_eq!(row.index, index);
+        rows.push(row);
+    }
+    let (st2, _) = mgr.summary(id2).unwrap();
+    assert_eq!(st2.state, JobState::Done);
+    assert_eq!(st2.done, 72);
+
+    // Exactly-once coverage of the 72 eval tasks, in grid order.
+    let grid = eval_grid(family_of(env).unwrap());
+    let mut seen = std::collections::BTreeSet::new();
+    for (row, task) in rows.iter().zip(&grid) {
+        assert_eq!(row.task, task.id, "row {}: grid order broken", row.index);
+        assert!(seen.insert(row.task), "task {} visited twice", row.task);
+    }
+    assert_eq!(seen.len(), 72);
+
+    // Bit-identity with an uninterrupted run of the same spec: the
+    // resumed tail starts from the batch-aligned cursor, so stitching
+    // prefix + tail reproduces the straight-through sweep exactly.
+    let family = family_of(env).unwrap();
+    let scen = scenarios_for_grid(&eval_grid(family), &schedule(), SEED);
+    let cfg = control_cfg(env, 8);
+    let arc_rule = Arc::new(rule_for(&cfg, SEED));
+    let bcfg = BatchAdaptConfig {
+        env_name: env.into(),
+        window: JOB_WINDOW,
+        max_steps: Some(80),
+    };
+    let mut reference = Vec::new();
+    for chunk in scen.chunks(4) {
+        reference.extend(run_chunked_adaptation::<f32>(
+            &cfg,
+            ChunkBackendSpec::Plastic(Arc::clone(&arc_rule)),
+            &bcfg,
+            chunk,
+            1,
+        ));
+    }
+    for (row, log) in rows.iter().zip(&reference) {
+        assert_eq!(row.log.rewards, log.rewards, "row {}: rewards diverged", row.index);
+        assert_eq!(row.log.perturb_at, log.perturb_at);
+        assert_eq!(row.log.time_to_recover, log.time_to_recover);
+        assert_f64_bits(
+            row.log.total_reward,
+            log.total_reward,
+            &format!("row {} total_reward", row.index),
+        );
+    }
+}

@@ -1,0 +1,407 @@
+//! Integration: the job subsystem under concurrent load (ISSUE 6
+//! stress tests).
+//!
+//! Pinned here:
+//! - **Backpressure**: submits beyond the configured queue bound get a
+//!   typed `ERR job-queue-full` rejection immediately — live control
+//!   ticks keep round-tripping while the queue is saturated, nothing
+//!   hangs.
+//! - **Grid clients × control-tick clients**: several simultaneous
+//!   `JOB` streams and `OBS` hammering clients share one server; every
+//!   job completes with a full row set, every tick gets an action.
+//! - **No cross-job θ bleed**: swapping the installed model mid-job
+//!   must not change the in-flight job's results — each job pins the
+//!   θ snapshot it was admitted with.
+//! - **Clean shutdown**: in-flight jobs are interrupted at a
+//!   batch-aligned cursor, their checkpoint resumes on a *fresh*
+//!   manager, and the stitched results are bit-identical to a run that
+//!   was never interrupted.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use firefly_p::backend::NativeBackend;
+use firefly_p::coordinator::adapt_loop::AdaptLog;
+use firefly_p::coordinator::batch_adapt::{
+    run_chunked_adaptation, scenarios_for_grid, BatchAdaptConfig, ChunkBackendSpec,
+};
+use firefly_p::coordinator::jobs::{
+    GridKind, JobManager, JobManagerConfig, JobModel, JobSpec, JobState, Precision, JOB_WINDOW,
+};
+use firefly_p::coordinator::server::{ControlServer, ServerConfig};
+use firefly_p::env::{eval_grid, family_of, make_env, train_grid, Perturbation};
+use firefly_p::es::eval::NEURONS_PER_DIM;
+use firefly_p::snn::{NetworkRule, SnnConfig};
+use firefly_p::util::rng::Pcg64;
+
+const ENV: &str = "cheetah-vel";
+const DEADLINE: Duration = Duration::from_secs(180);
+
+fn control_cfg(hidden: usize) -> SnnConfig {
+    let e = make_env(ENV).unwrap();
+    let mut cfg = SnnConfig::control(e.obs_dim() * NEURONS_PER_DIM, 2 * e.act_dim());
+    cfg.n_hidden = hidden;
+    cfg
+}
+
+fn rule_for(cfg: &SnnConfig, seed: u64) -> NetworkRule {
+    let mut rng = Pcg64::new(seed, 0);
+    let mut flat = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut flat, 0.05);
+    NetworkRule::from_flat(cfg, &flat)
+}
+
+fn manager(queue_cap: usize, runners: usize, rule_seed: u64) -> JobManager {
+    let mgr = JobManager::new(JobManagerConfig { queue_cap, runners });
+    let cfg = control_cfg(8);
+    let rule = rule_for(&cfg, rule_seed);
+    mgr.install_model(ENV, JobModel::plastic(cfg, rule)).unwrap();
+    mgr
+}
+
+/// A long eval sweep (72 sessions) that keeps a runner busy for a
+/// while, in small sub-batches so cancellation/shutdown cursors land
+/// mid-sweep.
+fn long_spec() -> JobSpec {
+    let mut spec = JobSpec::new(ENV);
+    spec.grid = GridKind::Eval;
+    spec.schedule = vec![(Some(Perturbation::leg_failure(vec![0])), 8), (None, 0)];
+    spec.budget = Some(60);
+    spec.seed = 0x7B;
+    spec.batch = 4;
+    spec.threads = 1;
+    spec.prec = Precision::F32;
+    spec
+}
+
+/// A quick train-grid job (8 sessions) for queue-filling and fan-in.
+fn short_spec(seed: u64) -> JobSpec {
+    let mut spec = JobSpec::new(ENV);
+    spec.grid = GridKind::Train;
+    spec.budget = Some(6);
+    spec.seed = seed;
+    spec.batch = 4;
+    spec.threads = 1;
+    spec.prec = Precision::F32;
+    spec
+}
+
+fn wait_state(mgr: &JobManager, id: u64, pred: impl Fn(&JobState, usize) -> bool) -> JobState {
+    let deadline = Instant::now() + DEADLINE;
+    loop {
+        let st = mgr.status(id).unwrap();
+        if pred(&st.state, st.done) {
+            return st.state;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "job {id} stuck in {:?} done={}",
+            st.state,
+            st.done
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// The directly-invoked reference sweep for a spec's scenarios under a
+/// given rule seed (the job runner's exact chunking).
+fn reference_logs(spec: &JobSpec, rule_seed: u64) -> Vec<AdaptLog> {
+    let family = family_of(ENV).unwrap();
+    let tasks = match spec.grid {
+        GridKind::Train => train_grid(family),
+        GridKind::Eval => eval_grid(family),
+        GridKind::Task => unreachable!("stress specs are grid sweeps"),
+    };
+    let scen = scenarios_for_grid(&tasks, &spec.schedule, spec.seed);
+    let cfg = control_cfg(8);
+    let rule = Arc::new(rule_for(&cfg, rule_seed));
+    let bcfg = BatchAdaptConfig {
+        env_name: ENV.into(),
+        window: JOB_WINDOW,
+        max_steps: spec.budget,
+    };
+    let mut logs = Vec::new();
+    for chunk in scen.chunks(spec.batch) {
+        logs.extend(run_chunked_adaptation::<f32>(
+            &cfg,
+            ChunkBackendSpec::Plastic(Arc::clone(&rule)),
+            &bcfg,
+            chunk,
+            spec.threads.clamp(1, spec.batch),
+        ));
+    }
+    logs
+}
+
+fn assert_logs_match(got: &[AdaptLog], want: &[AdaptLog], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: row count");
+    for (s, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.rewards, w.rewards, "{what} session {s}: rewards diverged");
+        assert_eq!(g.perturb_at, w.perturb_at, "{what} session {s}");
+        assert_eq!(g.time_to_recover, w.time_to_recover, "{what} session {s}");
+    }
+}
+
+fn collect_rows(mgr: &JobManager, id: u64, total: usize) -> Vec<AdaptLog> {
+    (0..total)
+        .map(|i| {
+            mgr.wait_row(id, i)
+                .unwrap()
+                .unwrap_or_else(|| panic!("job {id} row {i} missing"))
+                .log
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- TCP
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    line: String,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+            line: String::new(),
+        }
+    }
+
+    fn round_trip(&mut self, req: &str) -> String {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.line.clear();
+        self.reader.read_line(&mut self.line).unwrap();
+        self.line.trim().to_string()
+    }
+}
+
+/// Serve `max_connections` clients with the job subsystem attached;
+/// returns the bound address, a handle yielding job metrics counts,
+/// and nothing else shared.
+fn spawn_server(
+    queue_cap: usize,
+    runners: usize,
+    max_sessions: usize,
+    max_connections: usize,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<(u64, u64, u64)>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+    let handle = std::thread::spawn(move || {
+        let cfg = control_cfg(16);
+        let rule = rule_for(&cfg, 3);
+        let e = make_env(ENV).unwrap();
+        let backend = Box::new(NativeBackend::plastic(cfg.clone(), rule.clone()));
+        let mut server = ControlServer::with_config(
+            backend,
+            e.obs_dim(),
+            e.act_dim(),
+            ServerConfig {
+                max_sessions,
+                seed: 9,
+            },
+        );
+        let jobs = Arc::new(JobManager::with_metrics(
+            JobManagerConfig { queue_cap, runners },
+            server.metrics(),
+        ));
+        jobs.install_model(ENV, JobModel::plastic(cfg, rule)).unwrap();
+        server.attach_jobs(jobs);
+        server.serve(&addr.to_string(), Some(max_connections)).unwrap();
+        let metrics = server.metrics();
+        let m = metrics.lock().unwrap();
+        (m.count("jobs_submitted"), m.count("jobs_rejected"), m.count("jobs_completed"))
+    });
+    std::thread::sleep(Duration::from_millis(150));
+    (addr, handle)
+}
+
+#[test]
+fn queue_bound_rejects_typed_and_serving_stays_live() {
+    // One runner, queue bound 2: a long job occupies the runner, two
+    // short jobs fill the queue, and every submit past the bound must
+    // bounce with the typed backpressure error — while control ticks
+    // keep round-tripping on the same connection.
+    let (addr, server) = spawn_server(2, 1, 2, 1);
+    let mut c = Client::connect(addr);
+
+    let ok = c.round_trip(&format!("JOB SUBMIT {}", long_spec().encode()));
+    assert!(ok.starts_with("JOB OK id=1"), "{ok}");
+    // The queue bound counts *queued* jobs: wait for the runner to pull
+    // job 1 off the queue so admission capacity is deterministic.
+    let deadline = Instant::now() + DEADLINE;
+    loop {
+        let st = c.round_trip("JOB STATUS 1");
+        if st.contains("state=running") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job 1 never started: {st}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    for seed in [1u64, 2] {
+        let resp = c.round_trip(&format!("JOB SUBMIT {}", short_spec(seed).encode()));
+        assert!(resp.starts_with("JOB OK "), "{resp}");
+    }
+    let mut rejections = 0;
+    for seed in [3u64, 4, 5] {
+        let resp = c.round_trip(&format!("JOB SUBMIT {}", short_spec(seed).encode()));
+        assert!(
+            resp.starts_with("ERR job-queue-full"),
+            "expected typed backpressure, got {resp}"
+        );
+        assert!(resp.contains("queued=2 cap=2"), "{resp}");
+        rejections += 1;
+        // Serving never starves behind a saturated job queue.
+        let act = c.round_trip("OBS 0.1,0.2,0.3,0.4,0.5,1.0");
+        assert!(act.starts_with("ACT "), "{act}");
+    }
+    assert_eq!(rejections, 3);
+
+    // Drain: cancel everything so the server thread shuts down fast.
+    for id in 1..=3u64 {
+        let resp = c.round_trip(&format!("JOB CANCEL {id}"));
+        assert!(resp.starts_with("JOB OK id="), "{resp}");
+    }
+    drop(c);
+    let (submitted, rejected, _) = server.join().unwrap();
+    assert_eq!(submitted, 3, "three jobs were admitted");
+    assert_eq!(rejected, 3, "three submits bounced at the bound");
+}
+
+#[test]
+fn grid_clients_and_control_ticks_share_the_server() {
+    const JOB_CLIENTS: usize = 3;
+    const TICK_CLIENTS: usize = 4;
+    const TICKS: usize = 25;
+    let (addr, server) = spawn_server(8, 2, JOB_CLIENTS + TICK_CLIENTS, JOB_CLIENTS + TICK_CLIENTS);
+    let barrier = Arc::new(Barrier::new(JOB_CLIENTS + TICK_CLIENTS));
+
+    let mut handles = Vec::new();
+    for j in 0..JOB_CLIENTS {
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            barrier.wait();
+            let ok = c.round_trip(&format!("JOB SUBMIT {}", short_spec(10 + j as u64).encode()));
+            assert!(ok.starts_with("JOB OK id="), "{ok}");
+            let id: u64 = ok
+                .split_whitespace()
+                .find_map(|t| t.strip_prefix("id="))
+                .unwrap()
+                .parse()
+                .unwrap();
+            // Stream the full result set: header + 8 rows + END.
+            c.writer
+                .write_all(format!("JOB RESULTS {id}\n").as_bytes())
+                .unwrap();
+            let mut rows = 0usize;
+            loop {
+                c.line.clear();
+                c.reader.read_line(&mut c.line).unwrap();
+                let line = c.line.trim();
+                if line.starts_with("JOB END ") {
+                    assert!(line.contains("state=done"), "{line}");
+                    break;
+                }
+                if line.starts_with("ROW ") {
+                    rows += 1;
+                }
+            }
+            assert_eq!(rows, 8, "client {j}: train grid is 8 sessions");
+        }));
+    }
+    for t in 0..TICK_CLIENTS {
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            barrier.wait();
+            for k in 0..TICKS {
+                let resp = c.round_trip(&format!(
+                    "OBS {:.3},{:.3},0.0,-0.4,0.8,1.0",
+                    t as f32 * 0.2 - 0.5,
+                    k as f32 * 0.05
+                ));
+                assert!(resp.starts_with("ACT "), "tick client {t}: {resp}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let (submitted, rejected, completed) = server.join().unwrap();
+    assert_eq!(submitted, JOB_CLIENTS as u64);
+    assert_eq!(rejected, 0);
+    assert_eq!(completed, JOB_CLIENTS as u64);
+}
+
+#[test]
+fn model_swap_mid_job_does_not_bleed_into_in_flight_results() {
+    // Job 1 is admitted under rule A and keeps running while the
+    // installed model is swapped to rule B; job 2 is admitted under B.
+    // Each job's results must match the direct sweep under *its own*
+    // θ snapshot.
+    const RULE_A: u64 = 0xA11CE;
+    const RULE_B: u64 = 0xB0B;
+    let mgr = manager(8, 1, RULE_A);
+
+    let long = long_spec();
+    let id1 = mgr.submit(long.clone()).unwrap();
+    wait_state(&mgr, id1, |st, done| {
+        *st == JobState::Running && done >= 4
+    });
+
+    // Swap θ mid-flight, then queue job 2 under the new model.
+    let cfg = control_cfg(8);
+    mgr.install_model(ENV, JobModel::plastic(cfg, rule_for(&control_cfg(8), RULE_B)))
+        .unwrap();
+    let short = short_spec(0x51);
+    let id2 = mgr.submit(short.clone()).unwrap();
+
+    let logs1 = collect_rows(&mgr, id1, 72);
+    let logs2 = collect_rows(&mgr, id2, 8);
+    assert_eq!(mgr.status(id1).unwrap().state, JobState::Done);
+    assert_eq!(mgr.status(id2).unwrap().state, JobState::Done);
+
+    assert_logs_match(&logs1, &reference_logs(&long, RULE_A), "job 1 (rule A)");
+    assert_logs_match(&logs2, &reference_logs(&short, RULE_B), "job 2 (rule B)");
+}
+
+#[test]
+fn shutdown_checkpoints_in_flight_and_resumes_on_fresh_manager() {
+    const RULE: u64 = 0xD1;
+    let mgr = manager(8, 1, RULE);
+    let long = long_spec();
+    let id = mgr.submit(long.clone()).unwrap();
+    wait_state(&mgr, id, |st, done| {
+        *st == JobState::Running && done >= 4
+    });
+    mgr.shutdown();
+
+    let st = mgr.status(id).unwrap();
+    assert_eq!(st.state, JobState::Interrupted);
+    assert!(st.done >= 4 && st.done < 72, "cursor {}", st.done);
+    assert_eq!(st.done % long.batch, 0, "cursor must be batch-aligned");
+    let ckpt = mgr.checkpoint(id).unwrap();
+    assert_eq!(ckpt.results.len(), st.done);
+    assert_eq!(ckpt.total, 72);
+    drop(mgr);
+
+    // A fresh manager (no model installed — the checkpoint carries its
+    // pinned θ snapshot) finishes the sweep.
+    let mgr2 = JobManager::new(JobManagerConfig {
+        queue_cap: 2,
+        runners: 1,
+    });
+    let id2 = mgr2.resume_from(ckpt).unwrap();
+    let logs = collect_rows(&mgr2, id2, 72);
+    assert_eq!(mgr2.status(id2).unwrap().state, JobState::Done);
+    assert_logs_match(&logs, &reference_logs(&long, RULE), "resumed sweep");
+}
