@@ -220,6 +220,7 @@ fn bench_tcp(batch: usize, requests_per_client: usize) -> (f64, Vec<f64>) {
             ServerConfig {
                 max_sessions: batch,
                 seed: 5,
+                ..ServerConfig::default()
             },
         );
         server.serve(&addr.to_string(), Some(batch)).unwrap();
@@ -283,6 +284,7 @@ fn bench_tcp_under_jobs(jobs: usize, batch: usize, requests_per_client: usize) -
     let mgr = Arc::new(JobManager::new(JobManagerConfig {
         queue_cap: jobs.max(1),
         runners: jobs.max(1),
+        ..JobManagerConfig::default()
     }));
     let cfg = geometry();
     let rule = make_rule(&cfg, 3);
@@ -302,6 +304,7 @@ fn bench_tcp_under_jobs(jobs: usize, batch: usize, requests_per_client: usize) -
             ServerConfig {
                 max_sessions: batch,
                 seed: 5,
+                ..ServerConfig::default()
             },
         );
         server.attach_jobs(mgr_srv);

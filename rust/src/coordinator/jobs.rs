@@ -34,9 +34,13 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::adapt_loop::AdaptLog;
 use crate::coordinator::batch_adapt::{
@@ -46,7 +50,9 @@ use crate::coordinator::batch_adapt::{
 use crate::coordinator::metrics::Metrics;
 use crate::env::{eval_grid, family_of, make_env, train_grid, Perturbation, TaskFamily};
 use crate::es::eval::NEURONS_PER_DIM;
-use crate::snn::{NetworkRule, Scalar, SnnConfig};
+use crate::snn::{NetworkRule, PlasticityConfig, Scalar, SnnConfig};
+use crate::util::binio::{self, BinError, BinReader, BinWriter};
+use crate::util::faults::{FaultPlan, FaultSite};
 use crate::util::fp16::F16;
 use crate::util::threadpool::available_cores;
 
@@ -290,6 +296,11 @@ pub fn parse_submit(s: &str) -> Result<SubmitRequest, String> {
     JobSpec::parse(t).map(SubmitRequest::New)
 }
 
+/// Marker returned by [`JobManager::wait_row_for`] when the timeout
+/// elapses before row `index` exists (job still running — try again).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WouldBlock;
+
 /// Lifecycle of a job.
 #[derive(Clone, Debug, PartialEq)]
 pub enum JobState {
@@ -364,6 +375,15 @@ pub enum JobError {
     GeometryMismatch(String),
     /// The manager is shutting down; no new admissions.
     ShuttingDown,
+    /// A durable checkpoint file failed to decode (torn write, bit rot,
+    /// wrong kind/version). The file is quarantined, never trusted —
+    /// and decoding never panics.
+    CheckpointCorrupt {
+        /// The offending file.
+        file: String,
+        /// The typed decode failure, rendered.
+        detail: String,
+    },
 }
 
 impl JobError {
@@ -378,6 +398,7 @@ impl JobError {
             JobError::NotResumable { .. } => "job-not-resumable",
             JobError::GeometryMismatch(_) => "job-geometry-mismatch",
             JobError::ShuttingDown => "job-shutting-down",
+            JobError::CheckpointCorrupt { .. } => "job-checkpoint-corrupt",
         }
     }
 }
@@ -399,6 +420,9 @@ impl fmt::Display for JobError {
                 write!(f, "{} id={id} state={state}", self.code())
             }
             JobError::ShuttingDown => write!(f, "{}", self.code()),
+            JobError::CheckpointCorrupt { file, detail } => {
+                write!(f, "{} file={file} {detail}", self.code())
+            }
         }
     }
 }
@@ -449,6 +473,18 @@ impl JobModel {
     }
 }
 
+/// Outcome of a [`JobManager::recover`] scan over `--job-dir`.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// New job ids admitted from on-disk checkpoints (in file order;
+    /// the old files are removed once their jobs are re-admitted).
+    pub resumed: Vec<u64>,
+    /// Files quarantined as `.corrupt` (typed decode failures).
+    pub quarantined: usize,
+    /// Valid files that could not be re-admitted (left in place).
+    pub rejected: usize,
+}
+
 /// A point-in-time view of a job (`JOB STATUS`).
 #[derive(Clone, Debug)]
 pub struct JobStatus {
@@ -489,14 +525,197 @@ pub struct JobCheckpoint {
     pub total: usize,
 }
 
-/// Sizing of a [`JobManager`].
-#[derive(Clone, Copy, Debug)]
+/// [`binio`] frame kind of a durable [`JobCheckpoint`] file.
+pub const CHECKPOINT_FRAME_KIND: u16 = 0x4A43; // "JC"
+/// [`binio`] frame kind of a serialized [`JobRow`].
+pub const ROW_FRAME_KIND: u16 = 0x4A52; // "JR"
+
+/// Serialize an [`AdaptLog`] into `w`. Every `f64` travels as raw
+/// bits, so the decoded log is bit-identical — the recovery path's
+/// stitched rows depend on it.
+fn put_adapt_log(w: &mut BinWriter, log: &AdaptLog) {
+    w.put_f64s(&log.rewards);
+    w.put_opt_usize(log.perturb_at);
+    w.put_f64(log.total_reward);
+    w.put_f64(log.pre_perturb_rate);
+    w.put_f64(log.shock_rate);
+    w.put_f64(log.final_rate);
+    w.put_opt_usize(log.time_to_recover);
+}
+
+fn get_adapt_log(r: &mut BinReader<'_>) -> Result<AdaptLog, BinError> {
+    Ok(AdaptLog {
+        rewards: r.get_f64s()?,
+        perturb_at: r.get_opt_usize()?,
+        total_reward: r.get_f64()?,
+        pre_perturb_rate: r.get_f64()?,
+        shock_rate: r.get_f64()?,
+        final_rate: r.get_f64()?,
+        time_to_recover: r.get_opt_usize()?,
+    })
+}
+
+/// Serialize a [`JobModel`] (geometry + θ snapshot) into `w`. The rule
+/// is written as its flat f32 layout ([`NetworkRule::to_flat`]), bits
+/// preserved, so a recovered job continues bit-identically.
+fn put_job_model(w: &mut BinWriter, model: &JobModel) {
+    let cfg = &model.cfg;
+    w.put_usize(cfg.n_in);
+    w.put_usize(cfg.n_hidden);
+    w.put_usize(cfg.n_out);
+    w.put_f32(cfg.lambda);
+    w.put_f32(cfg.v_th);
+    w.put_f32(cfg.input_gain);
+    w.put_f32(cfg.plasticity.eta);
+    w.put_f32(cfg.plasticity.w_clip);
+    w.put_bool(cfg.plasticity.presyn_gate);
+    w.put_f32(cfg.plasticity.trace_eps);
+    match &model.spec {
+        JobModelSpec::Plastic(rule) => {
+            w.put_u8(0);
+            w.put_f32s(&rule.to_flat());
+        }
+        JobModelSpec::Fixed(weights) => {
+            w.put_u8(1);
+            w.put_f32s(weights);
+        }
+    }
+}
+
+fn get_job_model(r: &mut BinReader<'_>) -> Result<JobModel, BinError> {
+    let cfg = SnnConfig {
+        n_in: r.get_usize()?,
+        n_hidden: r.get_usize()?,
+        n_out: r.get_usize()?,
+        lambda: r.get_f32()?,
+        v_th: r.get_f32()?,
+        input_gain: r.get_f32()?,
+        plasticity: PlasticityConfig {
+            eta: r.get_f32()?,
+            w_clip: r.get_f32()?,
+            presyn_gate: r.get_bool()?,
+            trace_eps: r.get_f32()?,
+        },
+    };
+    let kind = r.get_u8()?;
+    let flat = r.get_f32s()?;
+    let spec = match kind {
+        0 => {
+            // from_flat asserts on length; pre-validate so a crafted
+            // payload is a typed error, never a panic.
+            if flat.len() != cfg.n_rule_params() {
+                return Err(BinError::Malformed(format!(
+                    "rule θ has {} params, geometry wants {}",
+                    flat.len(),
+                    cfg.n_rule_params()
+                )));
+            }
+            JobModelSpec::Plastic(Arc::new(NetworkRule::from_flat(&cfg, &flat)))
+        }
+        1 => JobModelSpec::Fixed(Arc::new(flat)),
+        other => {
+            return Err(BinError::Malformed(format!("bad model kind {other}")));
+        }
+    };
+    Ok(JobModel { cfg, spec })
+}
+
+impl JobCheckpoint {
+    /// Encode this checkpoint (tagged with the durable job's `id`) as a
+    /// checksummed [`binio`] frame — the exact bytes `--job-dir` files
+    /// hold.
+    pub fn encode_bin(&self, id: u64) -> Vec<u8> {
+        let mut w = BinWriter::new();
+        w.put_u64(id);
+        w.put_str(&self.spec.encode());
+        put_job_model(&mut w, &self.model);
+        w.put_usize(self.total);
+        w.put_usize(self.results.len());
+        for log in &self.results {
+            put_adapt_log(&mut w, log);
+        }
+        binio::encode_frame(CHECKPOINT_FRAME_KIND, &w.into_bytes())
+    }
+
+    /// Decode a checkpoint file, returning the original job id and the
+    /// checkpoint. Total over arbitrary input: torn, bit-flipped,
+    /// crafted, or wrong-kind frames are all typed [`BinError`]s —
+    /// never a panic (the recovery path leans on this to quarantine
+    /// instead of crash).
+    pub fn decode_bin(bytes: &[u8]) -> Result<(u64, JobCheckpoint), BinError> {
+        let payload = binio::decode_frame(bytes, CHECKPOINT_FRAME_KIND)?;
+        let mut r = BinReader::new(payload);
+        let id = r.get_u64()?;
+        let spec = JobSpec::parse(&r.get_str()?)
+            .map_err(|e| BinError::Malformed(format!("bad job spec: {e}")))?;
+        let model = get_job_model(&mut r)?;
+        let total = r.get_usize()?;
+        // Each log is ≥ 42 payload bytes; bounding the claimed count by
+        // the remaining bytes blocks allocation-bait length claims.
+        let n_results = r.get_len(42)?;
+        if n_results > total {
+            return Err(BinError::Malformed(format!(
+                "{n_results} result rows exceed the sweep total {total}"
+            )));
+        }
+        let mut results = Vec::with_capacity(n_results);
+        for _ in 0..n_results {
+            results.push(get_adapt_log(&mut r)?);
+        }
+        r.finish()?;
+        Ok((
+            id,
+            JobCheckpoint {
+                spec,
+                model,
+                results,
+                total,
+            },
+        ))
+    }
+}
+
+impl JobRow {
+    /// Encode this row as a checksummed [`binio`] frame (bit-exact
+    /// `f64` payload, like the checkpoint format).
+    pub fn encode_bin(&self) -> Vec<u8> {
+        let mut w = BinWriter::new();
+        w.put_usize(self.index);
+        w.put_usize(self.task);
+        put_adapt_log(&mut w, &self.log);
+        binio::encode_frame(ROW_FRAME_KIND, &w.into_bytes())
+    }
+
+    /// Decode a [`JobRow`] frame; total over arbitrary input.
+    pub fn decode_bin(bytes: &[u8]) -> Result<JobRow, BinError> {
+        let payload = binio::decode_frame(bytes, ROW_FRAME_KIND)?;
+        let mut r = BinReader::new(payload);
+        let row = JobRow {
+            index: r.get_usize()?,
+            task: r.get_usize()?,
+            log: get_adapt_log(&mut r)?,
+        };
+        r.finish()?;
+        Ok(row)
+    }
+}
+
+/// Sizing and durability of a [`JobManager`].
+#[derive(Clone, Debug)]
 pub struct JobManagerConfig {
     /// Max jobs *waiting* in the queue (running jobs don't count);
     /// admission beyond this returns [`JobError::QueueFull`].
     pub queue_cap: usize,
     /// Dedicated job-runner threads (`serve --job-threads`).
     pub runners: usize,
+    /// Durable checkpoint directory (`serve --job-dir`): every job
+    /// persists its batch-aligned checkpoint here via atomic writes on
+    /// its runner thread, and [`JobManager::recover`] re-admits
+    /// interrupted sweeps after a restart. `None` = in-memory only.
+    pub job_dir: Option<PathBuf>,
+    /// Deterministic fault plan (test/bench hooks; `None` in
+    /// production). See [`crate::util::faults`].
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for JobManagerConfig {
@@ -504,6 +723,8 @@ impl Default for JobManagerConfig {
         JobManagerConfig {
             queue_cap: 8,
             runners: 1,
+            job_dir: None,
+            faults: None,
         }
     }
 }
@@ -550,6 +771,32 @@ struct JobShared {
     stop: AtomicBool,
     queue_cap: usize,
     metrics: Arc<Mutex<Metrics>>,
+    /// Durable checkpoint directory (`None` = in-memory only).
+    job_dir: Option<PathBuf>,
+    /// Cleared on the first failed checkpoint write: the manager
+    /// degrades to in-memory checkpointing (logged warning, sweep
+    /// continues) instead of aborting jobs on a sick disk.
+    disk_ok: AtomicBool,
+    /// Injected-fault schedule (test/bench only).
+    faults: Option<Arc<FaultPlan>>,
+}
+
+/// `<dir>/job-<id>.ckpt` — the durable checkpoint of job `id`.
+fn checkpoint_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("job-{id}.ckpt"))
+}
+
+/// Where a corrupt checkpoint is quarantined (never rescanned).
+fn quarantine_path(dir: &Path, path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".corrupt");
+    dir.join(name)
+}
+
+/// Where a failed job's last checkpoint is parked (kept for post-mortem
+/// inspection, not auto-resumed).
+fn failed_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("job-{id}.ckpt.failed"))
 }
 
 /// The job subsystem: bounded queue + runner threads + job table.
@@ -574,6 +821,19 @@ impl JobManager {
     /// an existing registry (the server shares its own, so `STATS`
     /// reports serving and job counters side by side).
     pub fn with_metrics(cfg: JobManagerConfig, metrics: Arc<Mutex<Metrics>>) -> JobManager {
+        // A checkpoint directory that cannot be created degrades the
+        // manager to in-memory checkpointing up front — durability is
+        // best-effort by design, availability is not negotiable.
+        let mut disk_ok = true;
+        if let Some(dir) = &cfg.job_dir {
+            if let Err(e) = fs::create_dir_all(dir) {
+                crate::log_warn!(
+                    "job-dir {} unusable ({e}); checkpoints stay in-memory",
+                    dir.display()
+                );
+                disk_ok = false;
+            }
+        }
         let shared = Arc::new(JobShared {
             state: Mutex::new(ManagerState {
                 models: BTreeMap::new(),
@@ -587,6 +847,9 @@ impl JobManager {
             stop: AtomicBool::new(false),
             queue_cap: cfg.queue_cap.max(1),
             metrics,
+            job_dir: cfg.job_dir,
+            disk_ok: AtomicBool::new(disk_ok),
+            faults: cfg.faults,
         });
         let runners = (0..cfg.runners.max(1))
             .map(|_| {
@@ -645,7 +908,7 @@ impl JobManager {
             Some(m) => m.clone(),
             None => return Err(JobError::NoModel(spec.family.clone())),
         };
-        let r = self.enqueue(st, spec, model, Vec::new(), task_ids);
+        let r = self.enqueue(st, spec, model, Vec::new(), task_ids, true);
         self.track_admission(&r);
         r
     }
@@ -668,7 +931,7 @@ impl JobManager {
             old.results.clone(),
             old.task_ids.clone(),
         );
-        let r = self.enqueue(st, spec, model, results, task_ids);
+        let r = self.enqueue(st, spec, model, results, task_ids, true);
         self.track_admission(&r);
         r
     }
@@ -697,6 +960,17 @@ impl JobManager {
     /// checkpoint carries its own θ snapshot, so no model needs to be
     /// installed and the continuation stays bit-identical.
     pub fn resume_from(&self, ckpt: JobCheckpoint) -> Result<u64, JobError> {
+        self.admit_checkpoint(ckpt, true)
+    }
+
+    /// Shared admission path of [`resume_from`] and [`recover`]:
+    /// validates the checkpoint against its own spec, then enqueues.
+    /// Startup recovery bypasses the queue cap — restart must not drop
+    /// sweeps that were already admitted before the crash.
+    ///
+    /// [`resume_from`]: JobManager::resume_from
+    /// [`recover`]: JobManager::recover
+    fn admit_checkpoint(&self, ckpt: JobCheckpoint, enforce_cap: bool) -> Result<u64, JobError> {
         let task_ids: Vec<usize> = ckpt
             .spec
             .scenarios()
@@ -704,10 +978,103 @@ impl JobManager {
             .iter()
             .map(|s| s.task.id)
             .collect();
+        // A checksummed-but-inconsistent file (or a stale format whose
+        // grid definition moved) must not admit a job whose completed
+        // prefix overruns its own scenario list.
+        if ckpt.total != task_ids.len() || ckpt.results.len() > task_ids.len() {
+            return Err(JobError::BadSpec(format!(
+                "checkpoint shape mismatch: total={} done={} but the spec yields {} scenarios",
+                ckpt.total,
+                ckpt.results.len(),
+                task_ids.len()
+            )));
+        }
         let st = self.shared.state.lock().unwrap();
-        let r = self.enqueue(st, ckpt.spec, ckpt.model, ckpt.results, task_ids);
+        let r = self.enqueue(st, ckpt.spec, ckpt.model, ckpt.results, task_ids, enforce_cap);
         self.track_admission(&r);
         r
+    }
+
+    /// Scan the configured `--job-dir` for durable checkpoints: valid
+    /// files re-admit through the [`resume_from`] path (then the old
+    /// file is removed — the re-admitted job persists under its new
+    /// id); undecodable files are quarantined as `<file>.corrupt`
+    /// behind the typed [`JobError::CheckpointCorrupt`] — never a
+    /// panic, and never a blocked recovery for the remaining files.
+    ///
+    /// Call once at startup, before submitting new work. A manager
+    /// without a `job_dir` returns an empty report.
+    ///
+    /// [`resume_from`]: JobManager::resume_from
+    pub fn recover(&self) -> RecoveryReport {
+        let mut report = RecoveryReport::default();
+        let Some(dir) = self.shared.job_dir.clone() else {
+            return report;
+        };
+        let mut files: Vec<PathBuf> = match fs::read_dir(&dir) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| p.extension().is_some_and(|x| x == "ckpt"))
+                .collect(),
+            Err(e) => {
+                crate::log_warn!("job-dir {} scan failed: {e}", dir.display());
+                return report;
+            }
+        };
+        files.sort();
+        for path in files {
+            let decoded = fs::read(&path)
+                .map_err(|e| e.to_string())
+                .and_then(|bytes| {
+                    JobCheckpoint::decode_bin(&bytes).map_err(|e| e.to_string())
+                });
+            match decoded {
+                Ok((old_id, ckpt)) => match self.admit_checkpoint(ckpt, false) {
+                    Ok(id) => {
+                        let _ = fs::remove_file(&path);
+                        crate::log_info!(
+                            "recovered job {old_id} from {} as job {id}",
+                            path.display()
+                        );
+                        report.resumed.push(id);
+                    }
+                    Err(e) => {
+                        // Leave the file: a later recover (or manual
+                        // resume) can still pick it up.
+                        crate::log_warn!("could not re-admit {}: {e}", path.display());
+                        report.rejected += 1;
+                    }
+                },
+                Err(detail) => {
+                    let err = JobError::CheckpointCorrupt {
+                        file: path.display().to_string(),
+                        detail,
+                    };
+                    crate::log_warn!("quarantining checkpoint: {err}");
+                    let q = quarantine_path(&dir, &path);
+                    if fs::rename(&path, &q).is_err() {
+                        // Last resort: a file we can neither decode nor
+                        // move must not wedge every future recovery.
+                        let _ = fs::remove_file(&path);
+                    }
+                    self.shared.metrics.lock().unwrap().incr("jobs_quarantined");
+                    report.quarantined += 1;
+                }
+            }
+        }
+        report
+    }
+
+    /// The installed fault plan, if any (the server consults it for
+    /// stream-cut injection; tests assert on its counters).
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.shared.faults.clone()
+    }
+
+    /// The durable checkpoint directory, if configured.
+    pub fn job_dir(&self) -> Option<PathBuf> {
+        self.shared.job_dir.clone()
     }
 
     fn enqueue(
@@ -717,11 +1084,12 @@ impl JobManager {
         model: JobModel,
         results: Vec<AdaptLog>,
         task_ids: Vec<usize>,
+        enforce_cap: bool,
     ) -> Result<u64, JobError> {
         if st.shutting_down {
             return Err(JobError::ShuttingDown);
         }
-        if st.queue.len() >= self.shared.queue_cap {
+        if enforce_cap && st.queue.len() >= self.shared.queue_cap {
             return Err(JobError::QueueFull {
                 queued: st.queue.len(),
                 cap: self.shared.queue_cap,
@@ -788,6 +1156,9 @@ impl JobManager {
         };
         if cancelled_queued {
             self.shared.metrics.lock().unwrap().incr("jobs_cancelled");
+            // A cancelled-while-queued job is resumable; make the empty
+            // prefix durable so a restart still knows about it.
+            persist_checkpoint(&self.shared, id);
         }
         self.shared.progress_cv.notify_all();
         Ok(status)
@@ -814,6 +1185,46 @@ impl JobManager {
         }
     }
 
+    /// [`wait_row`] with a bounded wait: `Ok(Some)` / `Ok(None)` as
+    /// there, or `Err(WouldBlock)` once `timeout` elapses with the job
+    /// still running. Lets `JOB RESULTS` streamers wake periodically to
+    /// probe whether their client is still there instead of parking a
+    /// handler slot on the condvar for the life of a slow sweep.
+    ///
+    /// [`wait_row`]: JobManager::wait_row
+    pub fn wait_row_for(
+        &self,
+        id: u64,
+        index: usize,
+        timeout: Duration,
+    ) -> Result<Result<Option<JobRow>, WouldBlock>, JobError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            let rec = st.jobs.get(&id).ok_or(JobError::UnknownJob(id))?;
+            if index < rec.results.len() {
+                return Ok(Ok(Some(JobRow {
+                    index,
+                    task: rec.task_ids[index],
+                    log: rec.results[index].clone(),
+                })));
+            }
+            if rec.state.is_terminal() {
+                return Ok(Ok(None));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(Err(WouldBlock));
+            }
+            let (guard, _timed_out) = self
+                .shared
+                .progress_cv
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
     /// Status plus the [`GridSummary`] over the rows completed so far
     /// (the full sweep once `Done`).
     pub fn summary(&self, id: u64) -> Result<(JobStatus, GridSummary), JobError> {
@@ -835,22 +1246,28 @@ impl JobManager {
         for h in handles {
             let _ = h.join();
         }
-        let mut interrupted = 0u64;
+        let mut newly_interrupted: Vec<u64> = Vec::new();
         {
             let mut st = self.shared.state.lock().unwrap();
-            for rec in st.jobs.values_mut() {
+            for (&id, rec) in st.jobs.iter_mut() {
                 if !rec.state.is_terminal() {
                     rec.state = JobState::Interrupted;
-                    interrupted += 1;
+                    newly_interrupted.push(id);
                 }
             }
         }
-        if interrupted > 0 {
+        if !newly_interrupted.is_empty() {
             self.shared
                 .metrics
                 .lock()
                 .unwrap()
-                .add("jobs_interrupted", interrupted);
+                .add("jobs_interrupted", newly_interrupted.len() as u64);
+            // Graceful drain: every job interrupted here (still-queued
+            // ones — runners already checkpointed theirs on the way
+            // out) gets a durable checkpoint for the next process.
+            for id in newly_interrupted {
+                persist_checkpoint(&self.shared, id);
+            }
         }
         self.shared.progress_cv.notify_all();
     }
@@ -931,6 +1348,17 @@ fn run_job(
             return;
         }
     };
+    // Injected fault: a runner-job panic. Fired outside any lock so
+    // unwinding cannot poison manager state; runner_loop's catch turns
+    // it into a typed Failed with siblings untouched.
+    if let Some(f) = &shared.faults {
+        if f.fire(FaultSite::RunnerPanic) {
+            panic!("injected runner-job fault (FaultSite::RunnerPanic)");
+        }
+    }
+    // A picked-up job is durable from cursor 0: any Running job has a
+    // checkpoint file a restart can re-admit.
+    persist_checkpoint(shared, id);
     // Same thread-count semantics as cmd_adapt: 0 = all cores, capped
     // to the sub-batch width (an engine run can't spread wider).
     let threads = match spec.threads {
@@ -977,6 +1405,19 @@ fn run_job(
             done = rec.results.len();
         }
         shared.progress_cv.notify_all();
+        // Durable batch-aligned cursor: the checkpoint on disk always
+        // holds a whole number of sub-batches (still on this runner
+        // thread — the serving path never does disk IO).
+        persist_checkpoint(shared, id);
+        // Injected fault: halt right after the k-th persisted batch —
+        // the crash-recovery conformance tests' deterministic kill
+        // point.
+        if let Some(f) = &shared.faults {
+            if f.fire(FaultSite::InterruptAfterBatch) {
+                finish_job(shared, id, JobState::Interrupted, "jobs_interrupted");
+                return;
+            }
+        }
     }
     // Completed: absorb the per-job grid summary into the shared
     // registry in one merge (chunk-order, like the CLI).
@@ -990,6 +1431,11 @@ fn run_job(
     m.incr("jobs_completed");
     shared.metrics.lock().unwrap().absorb(m);
     shared.progress_cv.notify_all();
+    // A finished sweep needs no checkpoint; remove rather than let a
+    // stale file re-admit an already-complete job after a restart.
+    if let Some(dir) = &shared.job_dir {
+        let _ = fs::remove_file(checkpoint_path(dir, id));
+    }
 }
 
 /// Run one sub-batch to completion, polling the cancel/stop flags
@@ -1015,11 +1461,90 @@ fn run_slice<S: Scalar>(
     Some(engine.finish())
 }
 
+/// Snapshot a job's continuation state under the lock, then write it
+/// durably from this (runner) thread. A write failure degrades the
+/// whole manager to in-memory checkpointing with a logged warning —
+/// the sweep itself never aborts over a sick disk.
+fn persist_checkpoint(shared: &Arc<JobShared>, id: u64) {
+    if shared.job_dir.is_none() || !shared.disk_ok.load(Ordering::SeqCst) {
+        return;
+    }
+    let snapshot = {
+        let st = shared.state.lock().unwrap();
+        st.jobs.get(&id).map(|rec| JobCheckpoint {
+            spec: rec.spec.clone(),
+            model: rec.model.clone(),
+            results: rec.results.clone(),
+            total: rec.total,
+        })
+    };
+    if let Some(ckpt) = snapshot {
+        write_checkpoint(shared, id, &ckpt);
+    }
+}
+
+/// Encode + atomically write one checkpoint file (tmp + fsync +
+/// rename), honoring the injected-fault schedule.
+fn write_checkpoint(shared: &JobShared, id: u64, ckpt: &JobCheckpoint) {
+    let Some(dir) = &shared.job_dir else { return };
+    if !shared.disk_ok.load(Ordering::SeqCst) {
+        return;
+    }
+    let bytes = ckpt.encode_bin(id);
+    let injected = shared
+        .faults
+        .as_ref()
+        .is_some_and(|f| f.fire(FaultSite::CheckpointWrite));
+    let res = if injected {
+        Err(io::Error::other("injected checkpoint-write fault"))
+    } else {
+        binio::write_atomic(&checkpoint_path(dir, id), &bytes)
+    };
+    match res {
+        Ok(()) => shared.metrics.lock().unwrap().incr("jobs_ckpt_writes"),
+        Err(e) => {
+            shared.disk_ok.store(false, Ordering::SeqCst);
+            shared.metrics.lock().unwrap().incr("jobs_ckpt_write_errors");
+            crate::log_warn!(
+                "job {id}: checkpoint write failed ({e}); \
+                 degrading to in-memory checkpoints (sweeps continue)"
+            );
+        }
+    }
+}
+
 fn finish_job(shared: &Arc<JobShared>, id: u64, state: JobState, counter: &'static str) {
-    {
+    let snapshot = {
         let mut st = shared.state.lock().unwrap();
-        if let Some(rec) = st.jobs.get_mut(&id) {
-            rec.state = state;
+        match st.jobs.get_mut(&id) {
+            Some(rec) => {
+                rec.state = state.clone();
+                // Resumable terminals persist their final prefix so the
+                // continuation survives a restart too.
+                if shared.job_dir.is_some() && state.is_resumable() {
+                    Some(JobCheckpoint {
+                        spec: rec.spec.clone(),
+                        model: rec.model.clone(),
+                        results: rec.results.clone(),
+                        total: rec.total,
+                    })
+                } else {
+                    None
+                }
+            }
+            None => None,
+        }
+    };
+    if let Some(ckpt) = &snapshot {
+        write_checkpoint(shared, id, ckpt);
+    }
+    if let (Some(dir), JobState::Failed(_)) = (&shared.job_dir, &state) {
+        // Park (don't auto-resume) the last checkpoint of a failed job:
+        // blindly re-running a job that just panicked would crash-loop
+        // across restarts; the prefix stays on disk for inspection.
+        let p = checkpoint_path(dir, id);
+        if p.exists() && fs::rename(&p, failed_path(dir, id)).is_err() {
+            let _ = fs::remove_file(&p);
         }
     }
     shared.metrics.lock().unwrap().incr(counter);
@@ -1203,6 +1728,7 @@ mod tests {
         let mgr = JobManager::new(JobManagerConfig {
             queue_cap: 2,
             runners: 1,
+            ..JobManagerConfig::default()
         });
         mgr.install_model("cheetah-vel", small_model("cheetah-vel", 8, 3))
             .unwrap();
@@ -1254,6 +1780,7 @@ mod tests {
         let mgr = JobManager::new(JobManagerConfig {
             queue_cap: 4,
             runners: 1,
+            ..JobManagerConfig::default()
         });
         mgr.install_model("reacher", small_model("reacher", 8, 5))
             .unwrap();
@@ -1288,6 +1815,7 @@ mod tests {
         let mgr = JobManager::new(JobManagerConfig {
             queue_cap: 4,
             runners: 1,
+            ..JobManagerConfig::default()
         });
         mgr.install_model("ant-dir", small_model("ant-dir", 8, 7))
             .unwrap();
@@ -1303,5 +1831,364 @@ mod tests {
             st.state
         );
         assert_eq!(mgr.submit(spec).unwrap_err().code(), "job-shutting-down");
+    }
+
+    // ---- durability: codec, recovery, fault containment ----
+
+    /// Fresh scratch dir under the OS tmp root (removed up front so a
+    /// previous failed run can't leak state in).
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ffp-jobs-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn gen_log(g: &mut Gen) -> AdaptLog {
+        // Raw-bits f64s (including NaN payloads and infinities): the
+        // codec must carry every pattern unchanged.
+        let f = |g: &mut Gen| f64::from_bits(g.u64());
+        AdaptLog {
+            rewards: (0..g.usize_range(0, 24)).map(|_| f64::from_bits(g.u64())).collect(),
+            perturb_at: if g.bool() { Some(g.usize_range(0, 1000)) } else { None },
+            total_reward: f(g),
+            pre_perturb_rate: f(g),
+            shock_rate: f(g),
+            final_rate: f(g),
+            time_to_recover: if g.bool() { Some(g.usize_range(0, 1000)) } else { None },
+        }
+    }
+
+    fn gen_model(g: &mut Gen) -> JobModel {
+        let mut cfg = SnnConfig::control(g.usize_range(2, 10), g.usize_range(2, 6));
+        cfg.n_hidden = g.usize_range(1, 12);
+        if g.bool() {
+            let mut genome = vec![0.0f32; cfg.n_rule_params()];
+            for v in genome.iter_mut() {
+                *v = g.normal_f32(0.1);
+            }
+            let rule = NetworkRule::from_flat(&cfg, &genome);
+            JobModel::plastic(cfg, rule)
+        } else {
+            let n = g.usize_range(0, 40);
+            let w = g.vec_f32(n, -2.0, 2.0);
+            JobModel::fixed(cfg, w)
+        }
+    }
+
+    fn assert_logs_bit_eq(a: &[AdaptLog], b: &[AdaptLog], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: row count");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|f| f.to_bits()).collect() };
+            assert_eq!(bits(&x.rewards), bits(&y.rewards), "{ctx}: row {i} rewards");
+            assert_eq!(x.perturb_at, y.perturb_at, "{ctx}: row {i}");
+            assert_eq!(x.total_reward.to_bits(), y.total_reward.to_bits(), "{ctx}: row {i}");
+            assert_eq!(
+                x.pre_perturb_rate.to_bits(),
+                y.pre_perturb_rate.to_bits(),
+                "{ctx}: row {i}"
+            );
+            assert_eq!(x.shock_rate.to_bits(), y.shock_rate.to_bits(), "{ctx}: row {i}");
+            assert_eq!(x.final_rate.to_bits(), y.final_rate.to_bits(), "{ctx}: row {i}");
+            assert_eq!(x.time_to_recover, y.time_to_recover, "{ctx}: row {i}");
+        }
+    }
+
+    fn assert_model_bit_eq(a: &JobModel, b: &JobModel, ctx: &str) {
+        let (x, y) = (&a.cfg, &b.cfg);
+        assert_eq!((x.n_in, x.n_hidden, x.n_out), (y.n_in, y.n_hidden, y.n_out), "{ctx}");
+        assert_eq!(x.lambda.to_bits(), y.lambda.to_bits(), "{ctx}: lambda");
+        assert_eq!(x.v_th.to_bits(), y.v_th.to_bits(), "{ctx}: v_th");
+        assert_eq!(x.input_gain.to_bits(), y.input_gain.to_bits(), "{ctx}: input_gain");
+        assert_eq!(
+            x.plasticity.eta.to_bits(),
+            y.plasticity.eta.to_bits(),
+            "{ctx}: eta"
+        );
+        assert_eq!(
+            x.plasticity.w_clip.to_bits(),
+            y.plasticity.w_clip.to_bits(),
+            "{ctx}: w_clip"
+        );
+        assert_eq!(x.plasticity.presyn_gate, y.plasticity.presyn_gate, "{ctx}");
+        assert_eq!(
+            x.plasticity.trace_eps.to_bits(),
+            y.plasticity.trace_eps.to_bits(),
+            "{ctx}: trace_eps"
+        );
+        match (&a.spec, &b.spec) {
+            (JobModelSpec::Plastic(x), JobModelSpec::Plastic(y)) => {
+                let bits = |r: &NetworkRule| -> Vec<u32> {
+                    r.to_flat().iter().map(|f| f.to_bits()).collect()
+                };
+                assert_eq!(bits(x), bits(y), "{ctx}: θ");
+            }
+            (JobModelSpec::Fixed(x), JobModelSpec::Fixed(y)) => {
+                let bits = |w: &[f32]| -> Vec<u32> { w.iter().map(|f| f.to_bits()).collect() };
+                assert_eq!(bits(x), bits(y), "{ctx}: weights");
+            }
+            _ => panic!("{ctx}: model kind changed across the codec"),
+        }
+    }
+
+    #[test]
+    fn checkpoint_codec_round_trips_bit_exact() {
+        check(60, |g| {
+            let spec = gen_spec(g);
+            let total = spec.scenarios().map(|s| s.len()).unwrap_or(8).max(1);
+            let ckpt = JobCheckpoint {
+                spec,
+                model: gen_model(g),
+                results: (0..g.usize_range(0, total.min(12))).map(|_| gen_log(g)).collect(),
+                total,
+            };
+            let id = g.u64();
+            let bytes = ckpt.encode_bin(id);
+            let (rid, rt) = JobCheckpoint::decode_bin(&bytes)
+                .unwrap_or_else(|e| panic!("seed {:#x}: {e}", g.seed));
+            assert_eq!(rid, id, "seed {:#x}", g.seed);
+            assert_eq!(rt.spec, ckpt.spec, "seed {:#x}", g.seed);
+            assert_eq!(rt.total, ckpt.total, "seed {:#x}", g.seed);
+            assert_model_bit_eq(&rt.model, &ckpt.model, "checkpoint");
+            assert_logs_bit_eq(&rt.results, &ckpt.results, "checkpoint");
+        });
+    }
+
+    #[test]
+    fn row_codec_round_trips_bit_exact() {
+        check(120, |g| {
+            let row = JobRow {
+                index: g.usize_range(0, 10_000),
+                task: g.usize_range(0, 10_000),
+                log: gen_log(g),
+            };
+            let rt = JobRow::decode_bin(&row.encode_bin())
+                .unwrap_or_else(|e| panic!("seed {:#x}: {e}", g.seed));
+            assert_eq!((rt.index, rt.task), (row.index, row.task), "seed {:#x}", g.seed);
+            assert_logs_bit_eq(
+                std::slice::from_ref(&rt.log),
+                std::slice::from_ref(&row.log),
+                "row",
+            );
+        });
+    }
+
+    #[test]
+    fn checkpoint_decode_is_total_over_corruption() {
+        let mut spec = JobSpec::new("ant-dir");
+        spec.budget = Some(5);
+        let total = spec.scenarios().unwrap().len();
+        let ckpt = JobCheckpoint {
+            spec,
+            model: small_model("ant-dir", 8, 3),
+            results: Vec::new(),
+            total,
+        };
+        let good = ckpt.encode_bin(7);
+        assert!(JobCheckpoint::decode_bin(&good).is_ok());
+        // Every truncation is a typed error.
+        for cut in 0..good.len() {
+            assert!(JobCheckpoint::decode_bin(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // Every single-byte corruption is a typed error (the CRC sees
+        // payload flips; header flips die on magic/version/kind/length).
+        for i in 0..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x01;
+            assert!(JobCheckpoint::decode_bin(&bad).is_err(), "flip at byte {i}");
+        }
+        // A row frame is not a checkpoint frame.
+        let row = JobRow {
+            index: 0,
+            task: 0,
+            log: AdaptLog {
+                rewards: vec![1.0, -0.5],
+                perturb_at: None,
+                total_reward: 0.5,
+                pre_perturb_rate: 0.0,
+                shock_rate: 0.0,
+                final_rate: 0.25,
+                time_to_recover: None,
+            },
+        };
+        assert!(matches!(
+            JobCheckpoint::decode_bin(&row.encode_bin()),
+            Err(BinError::BadKind { .. })
+        ));
+        assert!(JobRow::decode_bin(&row.encode_bin()).is_ok());
+    }
+
+    #[test]
+    fn durable_job_recovers_bit_identical_on_fresh_manager() {
+        let dir = tmp_dir("recover");
+        // Reference: the same sweep uninterrupted, no durability.
+        let reference = {
+            let mgr = JobManager::new(JobManagerConfig::default());
+            mgr.install_model("cheetah-vel", small_model("cheetah-vel", 8, 3))
+                .unwrap();
+            let mut spec = JobSpec::new("cheetah-vel");
+            spec.grid = GridKind::Train;
+            spec.budget = Some(6);
+            spec.batch = 2;
+            let id = mgr.submit(spec).unwrap();
+            let mut rows = Vec::new();
+            while let Some(row) = mgr.wait_row(id, rows.len()).unwrap() {
+                rows.push(row.log);
+            }
+            rows
+        };
+        // Interrupted run: halt right after the second persisted batch.
+        {
+            let mgr = JobManager::new(JobManagerConfig {
+                job_dir: Some(dir.clone()),
+                faults: Some(Arc::new(
+                    FaultPlan::new().at(FaultSite::InterruptAfterBatch, &[1]),
+                )),
+                ..JobManagerConfig::default()
+            });
+            mgr.install_model("cheetah-vel", small_model("cheetah-vel", 8, 3))
+                .unwrap();
+            let mut spec = JobSpec::new("cheetah-vel");
+            spec.grid = GridKind::Train;
+            spec.budget = Some(6);
+            spec.batch = 2;
+            let id = mgr.submit(spec).unwrap();
+            let st = wait_terminal(&mgr, id);
+            assert_eq!(st.state, JobState::Interrupted);
+            assert_eq!(st.done, 4, "two batches of 2 persisted");
+            assert!(checkpoint_path(&dir, id).exists());
+        }
+        // Fresh manager, same dir: recover and run to completion.
+        let mgr = JobManager::new(JobManagerConfig {
+            job_dir: Some(dir.clone()),
+            ..JobManagerConfig::default()
+        });
+        let report = mgr.recover();
+        assert_eq!(report.resumed.len(), 1);
+        assert_eq!((report.quarantined, report.rejected), (0, 0));
+        let id = report.resumed[0];
+        let mut rows = Vec::new();
+        while let Some(row) = mgr.wait_row(id, rows.len()).unwrap() {
+            rows.push(row.log);
+        }
+        assert_eq!(wait_terminal(&mgr, id).state, JobState::Done);
+        assert_logs_bit_eq(&rows, &reference, "recovered sweep");
+        // Done removed the checkpoint: a second recover finds nothing.
+        drop(mgr);
+        let mgr2 = JobManager::new(JobManagerConfig {
+            job_dir: Some(dir.clone()),
+            ..JobManagerConfig::default()
+        });
+        assert!(mgr2.recover().resumed.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_checkpoint_quarantines_without_panic() {
+        let dir = tmp_dir("quarantine");
+        // One valid checkpoint...
+        {
+            let mgr = JobManager::new(JobManagerConfig {
+                job_dir: Some(dir.clone()),
+                faults: Some(Arc::new(
+                    FaultPlan::new().at(FaultSite::InterruptAfterBatch, &[0]),
+                )),
+                ..JobManagerConfig::default()
+            });
+            mgr.install_model("reacher", small_model("reacher", 8, 5)).unwrap();
+            let mut spec = JobSpec::new("reacher");
+            spec.grid = GridKind::Train;
+            spec.budget = Some(4);
+            spec.batch = 2;
+            let id = mgr.submit(spec).unwrap();
+            assert_eq!(wait_terminal(&mgr, id).state, JobState::Interrupted);
+        }
+        // ...one bit-flipped sibling and one torn write (ids start at
+        // 1, so the interrupted job's file is `job-1.ckpt`).
+        let victim = dir.join("job-0.ckpt");
+        let mut bytes = fs::read(checkpoint_path(&dir, 1)).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        fs::write(&victim, &bytes).unwrap();
+        fs::write(dir.join("job-9.ckpt"), &bytes[..mid]).unwrap();
+        let mgr = JobManager::new(JobManagerConfig {
+            job_dir: Some(dir.clone()),
+            ..JobManagerConfig::default()
+        });
+        let report = mgr.recover();
+        assert_eq!(report.resumed.len(), 1, "the valid sibling still resumes");
+        assert_eq!(report.quarantined, 2);
+        assert!(dir.join("job-0.ckpt.corrupt").exists());
+        assert!(dir.join("job-9.ckpt.corrupt").exists());
+        assert!(!victim.exists(), "quarantined files leave the scan set");
+        assert_eq!(
+            JobError::CheckpointCorrupt {
+                file: "x".into(),
+                detail: "y".into()
+            }
+            .code(),
+            "job-checkpoint-corrupt"
+        );
+        let id = report.resumed[0];
+        assert_eq!(wait_terminal(&mgr, id).state, JobState::Done);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_runner_panic_fails_only_its_own_job() {
+        let mgr = JobManager::new(JobManagerConfig {
+            queue_cap: 4,
+            runners: 1,
+            faults: Some(Arc::new(FaultPlan::new().at(FaultSite::RunnerPanic, &[0]))),
+            ..JobManagerConfig::default()
+        });
+        mgr.install_model("reacher", small_model("reacher", 8, 5)).unwrap();
+        let mut spec = JobSpec::new("reacher");
+        spec.grid = GridKind::Train;
+        spec.budget = Some(4);
+        let doomed = mgr.submit(spec.clone()).unwrap();
+        spec.seed = 1;
+        let sibling = mgr.submit(spec).unwrap();
+        let st = wait_terminal(&mgr, doomed);
+        match st.state {
+            JobState::Failed(msg) => assert!(msg.contains("injected"), "{msg}"),
+            other => panic!("doomed job ended {other:?}"),
+        }
+        // The same runner thread survives the panic and completes the
+        // sibling untouched.
+        assert_eq!(wait_terminal(&mgr, sibling).state, JobState::Done);
+        let m = mgr.metrics();
+        let m = m.lock().unwrap();
+        assert_eq!(m.count("jobs_failed"), 1);
+        assert_eq!(m.count("jobs_completed"), 1);
+    }
+
+    #[test]
+    fn checkpoint_write_fault_degrades_to_in_memory() {
+        let dir = tmp_dir("degrade");
+        let mgr = JobManager::new(JobManagerConfig {
+            job_dir: Some(dir.clone()),
+            faults: Some(Arc::new(FaultPlan::new().at(FaultSite::CheckpointWrite, &[0]))),
+            ..JobManagerConfig::default()
+        });
+        mgr.install_model("cheetah-vel", small_model("cheetah-vel", 8, 3))
+            .unwrap();
+        let mut spec = JobSpec::new("cheetah-vel");
+        spec.grid = GridKind::Train;
+        spec.budget = Some(4);
+        spec.batch = 4;
+        let id = mgr.submit(spec).unwrap();
+        // The first write fails; the sweep still runs to Done entirely
+        // in memory.
+        assert_eq!(wait_terminal(&mgr, id).state, JobState::Done);
+        let m = mgr.metrics();
+        let m = m.lock().unwrap();
+        assert_eq!(m.count("jobs_ckpt_write_errors"), 1);
+        assert_eq!(m.count("jobs_ckpt_writes"), 0, "degraded: no writes after the fault");
+        assert!(
+            !checkpoint_path(&dir, id).exists(),
+            "no checkpoint file in degraded mode"
+        );
+        let _ = fs::remove_dir_all(&dir);
     }
 }

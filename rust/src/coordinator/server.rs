@@ -46,6 +46,26 @@
 //! bit-exactness contract with the CLI `adapt --grid` path
 //! (`tests/grid_jobs_conformance.rs`).
 //!
+//! # Hardening (DESIGN.md §Durability-and-Faults)
+//!
+//! - Request lines are length-bounded (`--line-cap`, default 64 KiB):
+//!   an over-cap line is discarded through its newline and answered
+//!   with `ERR line-too-long` — the connection stays usable and the
+//!   pooled read buffer never grows past the cap.
+//! - Non-UTF-8 lines get `ERR bad-utf8` instead of killing the
+//!   connection.
+//! - `--read-timeout-ms` disconnects idle clients; their session slots
+//!   are reclaimed cleanly (a `SlotGuard` releases the slot even if a
+//!   handler panics).
+//! - A client that vanishes mid `JOB RESULTS` stream frees its handler
+//!   slot while the job keeps running (bounded row waits + a
+//!   nonblocking liveness probe).
+//! - `SHUTDOWN` (or [`ControlServer::drain_handle`]) drains gracefully:
+//!   `OK draining` to the caller, `ERR shutting-down` to every further
+//!   request, accept loop stops, and once handlers finish the attached
+//!   [`JobManager`] shuts down — interrupting in-flight sweeps and
+//!   persisting their checkpoints to `--job-dir`.
+//!
 //! # Architecture
 //!
 //! ```text
@@ -96,17 +116,20 @@
 //! the accelerator — as it would on the real robot bus.
 
 use std::fmt::Write as _;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::backend::SnnBackend;
-use crate::coordinator::jobs::{parse_submit, JobError, JobManager, JobRow, JobStatus, SubmitRequest};
+use crate::coordinator::jobs::{
+    parse_submit, JobError, JobManager, JobRow, JobStatus, SubmitRequest, WouldBlock,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::es::eval::NEURONS_PER_DIM;
 use crate::snn::encoding::{PopulationEncoder, TraceDecoder};
+use crate::util::faults::FaultSite;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::ThreadPool;
 
@@ -119,6 +142,15 @@ pub struct ServerConfig {
     pub max_sessions: usize,
     /// Seed for the per-session observation encoders.
     pub seed: u64,
+    /// Hard cap on one request line's byte length (`serve --line-cap`).
+    /// An over-cap line is discarded through its newline and answered
+    /// with `ERR line-too-long`; the pooled read buffer never grows
+    /// past the cap, so a hostile client cannot balloon server memory.
+    pub max_line: usize,
+    /// Disconnect a connection idle for this long (`serve
+    /// --read-timeout-ms`; `None` = never). The slot is reclaimed
+    /// cleanly either way.
+    pub read_timeout: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -126,7 +158,36 @@ impl Default for ServerConfig {
         ServerConfig {
             max_sessions: 16,
             seed: 42,
+            max_line: 64 * 1024,
+            read_timeout: None,
         }
+    }
+}
+
+/// How often a blocked connection read wakes to check the drain flag
+/// (and its own idle budget). Bounds drain latency per handler.
+const READ_POLL: Duration = Duration::from_millis(200);
+
+/// How long a `JOB RESULTS` streamer waits for the next row before
+/// probing whether its client is still connected.
+const ROW_POLL: Duration = Duration::from_millis(100);
+
+/// Cloneable signal that asks a running [`ControlServer::serve`] loop
+/// to drain: stop accepting, answer every subsequent request with
+/// `ERR shutting-down`, let in-flight work finish, and return. The
+/// `SHUTDOWN` wire verb pulls the same lever remotely.
+#[derive(Clone, Debug, Default)]
+pub struct DrainHandle(Arc<AtomicBool>);
+
+impl DrainHandle {
+    /// Begin draining (idempotent).
+    pub fn drain(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether a drain has been requested.
+    pub fn is_draining(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
     }
 }
 
@@ -174,6 +235,8 @@ struct Shared {
     slot_cv: Condvar,
     live: AtomicUsize,
     metrics: Arc<Mutex<Metrics>>,
+    /// Graceful-drain signal (see [`DrainHandle`]).
+    drain: DrainHandle,
 }
 
 struct QueueState {
@@ -182,7 +245,7 @@ struct QueueState {
 }
 
 impl Shared {
-    fn new(slots: usize, metrics: Arc<Mutex<Metrics>>) -> Shared {
+    fn new(slots: usize, metrics: Arc<Mutex<Metrics>>, drain: DrainHandle) -> Shared {
         Shared {
             state: Mutex::new(QueueState {
                 requests: Vec::new(),
@@ -201,6 +264,7 @@ impl Shared {
             slot_cv: Condvar::new(),
             live: AtomicUsize::new(0),
             metrics,
+            drain,
         }
     }
 
@@ -265,6 +329,7 @@ pub struct ControlServer {
     cfg: ServerConfig,
     metrics: Arc<Mutex<Metrics>>,
     jobs: Option<Arc<JobManager>>,
+    drain: DrainHandle,
 }
 
 impl ControlServer {
@@ -302,7 +367,16 @@ impl ControlServer {
             cfg,
             backend,
             jobs: None,
+            drain: DrainHandle::default(),
         }
+    }
+
+    /// Handle that asks a running [`serve`] loop to drain gracefully
+    /// (clone it out before `serve` takes the thread).
+    ///
+    /// [`serve`]: ControlServer::serve
+    pub fn drain_handle(&self) -> DrainHandle {
+        self.drain.clone()
     }
 
     /// Attach a job subsystem: connection handlers gain the `JOB` verbs
@@ -347,42 +421,85 @@ impl ControlServer {
             self.backend.name()
         );
 
-        let shared = Arc::new(Shared::new(provisioned, Arc::clone(&self.metrics)));
+        let shared = Arc::new(Shared::new(
+            provisioned,
+            Arc::clone(&self.metrics),
+            self.drain.clone(),
+        ));
         let accept_shared = Arc::clone(&shared);
         let encoder = Arc::clone(&self.encoder);
         let seed = self.cfg.seed;
         let jobs = self.jobs.clone();
+        let opts = ConnOptions {
+            max_line: self.cfg.max_line.max(16),
+            read_timeout: self.cfg.read_timeout,
+        };
 
         let accept = std::thread::Builder::new()
             .name("fireflyp-accept".into())
-            .spawn(move || accept_loop(listener, accept_shared, encoder, seed, jobs, max_connections))
+            .spawn(move || {
+                accept_loop(listener, accept_shared, encoder, seed, jobs, opts, max_connections)
+            })
             .expect("spawn accept thread");
 
         stepper_loop(self.backend.as_mut(), &self.decoder, &shared);
 
         accept.join().expect("accept thread panicked");
+        // Drained (or connection budget exhausted): stop the job
+        // subsystem too. Its shutdown interrupts in-flight sweeps at
+        // their next tick and persists every resumable checkpoint to
+        // `--job-dir` — the durable half of graceful drain.
+        if let Some(jobs) = &self.jobs {
+            jobs.shutdown();
+        }
         Ok(())
     }
 }
 
+/// Per-connection read policy, copied from [`ServerConfig`] into every
+/// handler.
+#[derive(Clone, Copy)]
+struct ConnOptions {
+    max_line: usize,
+    read_timeout: Option<Duration>,
+}
+
 /// Accept connections, allocate session slots, dispatch handlers.
+/// Polls a nonblocking listener so a [`DrainHandle`] can stop the
+/// accept side promptly even with no connection in flight.
 fn accept_loop(
     listener: TcpListener,
     shared: Arc<Shared>,
     encoder: Arc<PopulationEncoder>,
     seed: u64,
     jobs: Option<Arc<JobManager>>,
+    opts: ConnOptions,
     max_connections: Option<usize>,
 ) {
     // One pool worker per session slot; handlers are pinned so a live
-    // connection can never queue behind another live connection.
-    let pool = ThreadPool::new(shared.cells.len());
+    // connection can never queue behind another live connection. The
+    // pool respawns a worker whose job panicked, so one bad handler
+    // costs its own connection, not a session slot forever.
+    let pool = ThreadPool::respawning(shared.cells.len());
     let mut served = 0usize;
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(s) => s,
+    if listener.set_nonblocking(true).is_err() {
+        crate::log_warn!("listener refused nonblocking mode; drain may lag one accept");
+    }
+    loop {
+        if shared.drain.is_draining() {
+            break;
+        }
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
             Err(_) => continue,
         };
+        // The listener is nonblocking; the per-connection sockets must
+        // not be (handlers use timeout-bounded blocking reads).
+        let _ = stream.set_nonblocking(false);
         served += 1;
         match shared.try_alloc_slot() {
             Some(slot) => {
@@ -390,7 +507,9 @@ fn accept_loop(
                 let sh = Arc::clone(&shared);
                 let enc = Arc::clone(&encoder);
                 let jb = jobs.clone();
-                pool.execute_on(slot, move || handle_connection(stream, slot, sh, enc, seed, jb));
+                pool.execute_on(slot, move || {
+                    handle_connection(stream, slot, sh, enc, seed, jb, opts)
+                });
             }
             None => {
                 shared.metrics.lock().unwrap().incr("rejected");
@@ -414,6 +533,150 @@ fn accept_loop(
     drop(pool);
 }
 
+/// What one bounded-read poll produced.
+enum LineEvent {
+    /// A complete line is ready in the reader's buffer.
+    Line,
+    /// The line overran the cap; it was discarded through its newline
+    /// and the connection is clean for the next request.
+    TooLong,
+    /// Orderly end of stream.
+    Eof,
+    /// The socket's read timeout elapsed — nothing was lost; a partial
+    /// line stays buffered for the next poll.
+    TimedOut,
+}
+
+/// Bounded, timeout-tolerant line reader. Replaces raw
+/// `BufReader::read_line`, whose `String` grows without limit on a
+/// newline-free stream — the pooled `buf` here never exceeds `cap`
+/// bytes, and over-cap lines are skipped (not stored) through their
+/// terminating newline, surviving poll timeouts mid-skip.
+struct LineReader {
+    reader: BufReader<TcpStream>,
+    buf: Vec<u8>,
+    cap: usize,
+    /// Mid-discard of an over-cap line.
+    skipping: bool,
+    /// Last poll returned a whole line; clear `buf` before the next.
+    fresh: bool,
+}
+
+impl LineReader {
+    fn new(stream: TcpStream, cap: usize) -> LineReader {
+        LineReader {
+            reader: BufReader::new(stream),
+            buf: Vec::new(),
+            cap,
+            skipping: false,
+            fresh: false,
+        }
+    }
+
+    /// The completed line after a [`LineEvent::Line`].
+    fn line(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Advance by at most one socket read-timeout window.
+    fn poll_line(&mut self) -> io::Result<LineEvent> {
+        if self.fresh {
+            self.buf.clear();
+            self.fresh = false;
+        }
+        loop {
+            let chunk = match self.reader.fill_buf() {
+                Ok(c) => c,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(LineEvent::TimedOut);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                return Ok(LineEvent::Eof);
+            }
+            let newline = chunk.iter().position(|&b| b == b'\n');
+            if self.skipping {
+                match newline {
+                    Some(pos) => {
+                        self.reader.consume(pos + 1);
+                        self.skipping = false;
+                        self.buf.clear();
+                        return Ok(LineEvent::TooLong);
+                    }
+                    None => {
+                        let n = chunk.len();
+                        self.reader.consume(n);
+                    }
+                }
+                continue;
+            }
+            match newline {
+                Some(pos) => {
+                    if self.buf.len() + pos > self.cap {
+                        self.reader.consume(pos + 1);
+                        self.buf.clear();
+                        return Ok(LineEvent::TooLong);
+                    }
+                    self.buf.extend_from_slice(&chunk[..pos]);
+                    self.reader.consume(pos + 1);
+                    self.fresh = true;
+                    return Ok(LineEvent::Line);
+                }
+                None => {
+                    let n = chunk.len();
+                    if self.buf.len() + n > self.cap {
+                        self.reader.consume(n);
+                        self.buf.clear();
+                        self.skipping = true;
+                        continue;
+                    }
+                    self.buf.extend_from_slice(chunk);
+                    self.reader.consume(n);
+                }
+            }
+        }
+    }
+}
+
+/// Nonblocking probe: has the peer closed (or errored) its side?
+/// Toggles `O_NONBLOCK` around a 1-byte `peek`; pipelined request bytes
+/// and an empty-but-open socket both count as alive.
+fn client_gone(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let mut probe = [0u8; 1];
+    let gone = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+/// Releases the session slot and the live count even if the handler
+/// unwinds — a panicking handler must never leak its slot.
+struct SlotGuard<'a> {
+    shared: &'a Shared,
+    slot: usize,
+}
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        self.shared.release_slot(self.slot);
+        self.shared.live.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// Per-connection request loop (runs on a pool worker pinned to `slot`).
 /// All per-request scratch (parsed observation, response line) is pooled
 /// per connection; the spike/action payloads live in the slot cell.
@@ -424,7 +687,12 @@ fn handle_connection(
     encoder: Arc<PopulationEncoder>,
     seed: u64,
     jobs: Option<Arc<JobManager>>,
+    opts: ConnOptions,
 ) {
+    let _guard = SlotGuard {
+        shared: &shared,
+        slot,
+    };
     if let Ok(peer) = stream.peer_addr() {
         crate::log_info!("connection from {peer} → session slot {slot}");
     }
@@ -437,19 +705,64 @@ fn handle_connection(
     let mut resp = String::new();
 
     let run = (|| -> std::io::Result<()> {
-        let mut reader = BufReader::new(stream.try_clone()?);
+        // Blocked reads wake every READ_POLL to check the drain flag
+        // and the connection's idle budget; SO_RCVTIMEO is shared with
+        // the writer clone, which is fine — responses are never parked.
+        let poll = opts.read_timeout.map_or(READ_POLL, |t| t.min(READ_POLL));
+        stream.set_read_timeout(Some(poll))?;
+        let mut lr = LineReader::new(stream.try_clone()?, opts.max_line);
         let mut writer = stream;
-        let mut line = String::new();
+        let mut last_activity = Instant::now();
         loop {
-            line.clear();
-            if reader.read_line(&mut line)? == 0 {
+            match lr.poll_line()? {
+                LineEvent::Eof => break,
+                LineEvent::TimedOut => {
+                    if shared.drain.is_draining() {
+                        let _ = writer.write_all(b"ERR shutting-down\n");
+                        break;
+                    }
+                    if let Some(limit) = opts.read_timeout {
+                        if last_activity.elapsed() >= limit {
+                            crate::log_info!(
+                                "session slot {slot}: idle past {limit:?}, disconnecting"
+                            );
+                            break;
+                        }
+                    }
+                    continue;
+                }
+                LineEvent::TooLong => {
+                    last_activity = Instant::now();
+                    shared.metrics.lock().unwrap().incr("bad_requests");
+                    resp.clear();
+                    let _ = write!(resp, "ERR line-too-long cap={} bytes", opts.max_line);
+                    writer.write_all(resp.as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    continue;
+                }
+                LineEvent::Line => {}
+            }
+            last_activity = Instant::now();
+            let Ok(line) = std::str::from_utf8(lr.line()) else {
+                shared.metrics.lock().unwrap().incr("bad_requests");
+                writer.write_all(b"ERR bad-utf8 request line is not valid UTF-8\n")?;
+                continue;
+            };
+            let line = line.trim();
+            if shared.drain.is_draining() && line != "SHUTDOWN" {
+                let _ = writer.write_all(b"ERR shutting-down\n");
                 break;
             }
-            let line = line.trim();
             let started = Instant::now();
             resp.clear();
             if line == "PING" {
                 resp.push_str("PONG");
+            } else if line == "SHUTDOWN" {
+                // Begin the graceful drain; this connection closes
+                // after the acknowledgement.
+                shared.drain.drain();
+                writer.write_all(b"OK draining\n")?;
+                break;
             } else if line == "RESET" {
                 shared.submit_and_wait(slot, SlotRequest::Reset);
                 shared.metrics.lock().unwrap().incr("resets");
@@ -503,8 +816,12 @@ fn handle_connection(
                     Some(mgr) => {
                         // Job verbs run inline on this pinned worker
                         // (never through the stepper queue); RESULTS
-                        // streams its own lines.
-                        handle_job_request(rest, mgr, &mut writer, &mut resp)?;
+                        // streams its own lines. `false` = the client
+                        // vanished mid-stream: end this connection (the
+                        // job keeps running for other subscribers).
+                        if !handle_job_request(rest, mgr, &shared, &mut writer, &mut resp)? {
+                            break;
+                        }
                         continue;
                     }
                     None => {
@@ -526,21 +843,22 @@ fn handle_connection(
     if let Err(e) = run {
         crate::log_info!("session slot {slot}: connection ended with {e}");
     }
-
-    shared.release_slot(slot);
-    shared.live.fetch_sub(1, Ordering::SeqCst);
+    // SlotGuard releases the slot and the live count (also on unwind).
 }
 
 /// Handle one `JOB <verb> ...` request (everything after `JOB `),
 /// writing every response line (the streamed `RESULTS` rows included)
 /// to `writer` directly. `resp` is the connection's pooled line
-/// buffer.
+/// buffer. Returns `false` when the client vanished mid `RESULTS`
+/// stream: the caller ends the connection (releasing its slot) while
+/// the job itself keeps running.
 fn handle_job_request(
     rest: &str,
     jobs: &Arc<JobManager>,
+    shared: &Shared,
     writer: &mut TcpStream,
     resp: &mut String,
-) -> std::io::Result<()> {
+) -> std::io::Result<bool> {
     resp.clear();
     if let Some(payload) = rest.strip_prefix("SUBMIT ") {
         let outcome = match parse_submit(payload) {
@@ -578,10 +896,46 @@ fn handle_job_request(
                 let _ = write!(resp, "JOB RESULTS id={id} total={}", st.total);
                 writer.write_all(resp.as_bytes())?;
                 writer.write_all(b"\n")?;
-                // Stream rows as sub-batches finish; wait_row blocks
-                // until row `index` exists or the job is terminal.
+                // Stream rows as sub-batches finish. Bounded waits: a
+                // slow sweep must not park this handler slot on the
+                // condvar for its whole lifetime — every ROW_POLL the
+                // streamer probes the client and the drain flag, so a
+                // vanished subscriber frees the slot while the job
+                // runs on, and a drain ends the stream promptly.
+                let plan = jobs.fault_plan();
                 let mut index = 0usize;
-                while let Ok(Some(row)) = jobs.wait_row(id, index) {
+                loop {
+                    let step = match jobs.wait_row_for(id, index, ROW_POLL) {
+                        Ok(step) => step,
+                        Err(_) => break,
+                    };
+                    let row = match step {
+                        Err(WouldBlock) => {
+                            if client_gone(writer) {
+                                crate::log_info!(
+                                    "JOB RESULTS {id}: client left mid-stream at row {index}; \
+                                     job continues"
+                                );
+                                return Ok(false);
+                            }
+                            if shared.drain.is_draining() {
+                                let _ = writer.write_all(b"ERR shutting-down\n");
+                                return Ok(false);
+                            }
+                            continue;
+                        }
+                        Ok(None) => break,
+                        Ok(Some(row)) => row,
+                    };
+                    // Injected fault: the peer drops mid-stream. A
+                    // both-ways shutdown makes this write (or the next)
+                    // fail exactly like a real vanished client.
+                    if plan
+                        .as_ref()
+                        .is_some_and(|p| p.fire(FaultSite::StreamCut))
+                    {
+                        let _ = writer.shutdown(Shutdown::Both);
+                    }
                     resp.clear();
                     write_job_row(resp, &row);
                     writer.write_all(resp.as_bytes())?;
@@ -621,7 +975,7 @@ fn handle_job_request(
     }
     writer.write_all(resp.as_bytes())?;
     writer.write_all(b"\n")?;
-    Ok(())
+    Ok(true)
 }
 
 fn parse_job_id(s: &str) -> Result<u64, JobError> {
@@ -794,6 +1148,7 @@ mod tests {
                 ServerConfig {
                     max_sessions,
                     seed: 1,
+                    ..ServerConfig::default()
                 },
             );
             server.serve(&addr.to_string(), Some(max_connections)).unwrap();
@@ -910,12 +1265,14 @@ mod tests {
                 ServerConfig {
                     max_sessions: 2,
                     seed: 1,
+                    ..ServerConfig::default()
                 },
             );
             let jobs = Arc::new(JobManager::with_metrics(
                 JobManagerConfig {
                     queue_cap: 2,
                     runners: 1,
+                    ..JobManagerConfig::default()
                 },
                 server.metrics(),
             ));
@@ -984,6 +1341,67 @@ mod tests {
         let mut c = Client::connect(addr);
         assert!(c.round_trip("JOB STATUS 1").starts_with("ERR job-disabled"));
         drop(c);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_line_is_rejected_but_connection_survives() {
+        let (addr, handle) = spawn_server(1, 1);
+        let mut c = Client::connect(addr);
+        // ~80 KB of observation floats: past the default 64 KiB cap.
+        let long = "OBS ".to_string() + &"9,".repeat(40_000) + "9";
+        let resp = c.round_trip(&long);
+        assert!(resp.starts_with("ERR line-too-long cap=65536"), "{resp}");
+        // The same connection still serves normal requests.
+        assert_eq!(c.round_trip("PING"), "PONG");
+        assert!(c.round_trip("OBS 0.1,0.2,0.3,0.4,0.5,1.0").starts_with("ACT "));
+        drop(c);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn non_utf8_line_is_typed_error() {
+        let (addr, handle) = spawn_server(1, 1);
+        let mut c = Client::connect(addr);
+        c.writer.write_all(b"PING \xff\xfe\n").unwrap();
+        c.line.clear();
+        c.reader.read_line(&mut c.line).unwrap();
+        assert!(c.line.starts_with("ERR bad-utf8"), "{}", c.line);
+        assert_eq!(c.round_trip("PING"), "PONG");
+        drop(c);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_verb_drains_the_server() {
+        // No max_connections: only the drain can end this serve loop.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let handle = std::thread::spawn(move || {
+            let mut server = ControlServer::with_config(
+                test_backend(),
+                6,
+                6,
+                ServerConfig {
+                    max_sessions: 2,
+                    seed: 1,
+                    ..ServerConfig::default()
+                },
+            );
+            server.serve(&addr.to_string(), None).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        let mut keeper = Client::connect(addr);
+        assert_eq!(keeper.round_trip("PING"), "PONG");
+        let mut c = Client::connect(addr);
+        assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+        // The still-connected sibling is told the server is going away
+        // (its next request or poll tick answers ERR shutting-down).
+        let bye = keeper.round_trip("PING");
+        assert!(bye.starts_with("ERR shutting-down"), "{bye}");
+        drop(c);
+        drop(keeper);
         handle.join().unwrap();
     }
 

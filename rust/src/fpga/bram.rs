@@ -28,6 +28,8 @@ pub enum Bank {
     SpikeBuf,
 }
 
+/// Every bank, in [`Bank::index`] order (the arbiter's bitmask
+/// universe).
 pub const ALL_BANKS: [Bank; 10] = [
     Bank::Weights(0),
     Bank::Weights(1),
@@ -56,6 +58,7 @@ impl Bank {
         }
     }
 
+    /// Human-readable bank label for the traffic report.
     pub fn name(self) -> String {
         match self {
             Bank::Weights(l) => format!("W{}", l + 1),
@@ -75,7 +78,9 @@ impl Bank {
 /// hottest path (§Perf).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Access {
+    /// Banks read this cycle (bit i = `ALL_BANKS[i]`).
     pub read_mask: u16,
+    /// Banks written this cycle (bit i = `ALL_BANKS[i]`).
     pub write_mask: u16,
 }
 
@@ -84,10 +89,12 @@ fn mask_of(banks: &[Bank]) -> u16 {
 }
 
 impl Access {
+    /// An idle cycle: no bank is touched.
     pub fn none() -> Self {
         Access::default()
     }
 
+    /// Pure reads of `banks`.
     pub fn read(banks: &[Bank]) -> Self {
         Access {
             read_mask: mask_of(banks),
@@ -95,6 +102,7 @@ impl Access {
         }
     }
 
+    /// Reads of `reads` plus writes of `writes` in one cycle.
     pub fn rw(reads: &[Bank], writes: &[Bank]) -> Self {
         Access {
             read_mask: mask_of(reads),
@@ -102,14 +110,17 @@ impl Access {
         }
     }
 
+    /// Whether the access reads or writes `bank`.
     pub fn touches(&self, bank: Bank) -> bool {
         (self.read_mask | self.write_mask) & (1 << bank.index()) != 0
     }
 
+    /// Whether the access reads `bank`.
     pub fn reads_bank(&self, bank: Bank) -> bool {
         self.read_mask & (1 << bank.index()) != 0
     }
 
+    /// Whether the access writes `bank`.
     pub fn writes_bank(&self, bank: Bank) -> bool {
         self.write_mask & (1 << bank.index()) != 0
     }
@@ -118,8 +129,11 @@ impl Access {
 /// Per-bank traffic statistics.
 #[derive(Clone, Debug, Default)]
 pub struct BankStats {
+    /// Committed read accesses.
     pub reads: u64,
+    /// Committed write accesses.
     pub writes: u64,
+    /// Cycles an engine stalled on this bank (write priority).
     pub conflicts: u64,
 }
 
@@ -136,6 +150,7 @@ impl Default for MemorySystem {
 }
 
 impl MemorySystem {
+    /// A memory system with zeroed traffic counters.
     pub fn new() -> Self {
         MemorySystem {
             stats: vec![BankStats::default(); ALL_BANKS.len()],
@@ -203,18 +218,23 @@ impl MemorySystem {
         }
     }
 
+    /// Traffic counters for one bank.
     pub fn stats(&self, bank: Bank) -> &BankStats {
         &self.stats[bank.index()]
     }
 
+    /// Total stall cycles across all banks.
     pub fn total_conflicts(&self) -> u64 {
         self.stats.iter().map(|s| s.conflicts).sum()
     }
 
+    /// Total committed reads + writes across all banks (feeds the
+    /// dynamic-power activity factors).
     pub fn total_accesses(&self) -> u64 {
         self.stats.iter().map(|s| s.reads + s.writes).sum()
     }
 
+    /// Zero every counter (between timed regions).
     pub fn reset(&mut self) {
         for s in self.stats.iter_mut() {
             *s = BankStats::default();

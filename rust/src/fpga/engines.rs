@@ -30,9 +30,12 @@ pub enum Action {
     Bubble,
 }
 
+/// One cycle of engine work: the banks it touches and what it retires.
 #[derive(Clone, Debug)]
 pub struct MicroOp {
+    /// Bank read/write masks presented to the memory arbiter.
     pub access: Access,
+    /// Architectural effect when the op retires.
     pub action: Action,
 }
 

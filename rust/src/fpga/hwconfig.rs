@@ -3,6 +3,7 @@
 //! Defaults model the paper's implementation: Cmod A7-35T (Artix-7
 //! XC7A35T), 16 PEs for the Dual Engine, 200 MHz target clock (§IV-A).
 
+/// Architecture parameters of one accelerator instance.
 #[derive(Clone, Debug)]
 pub struct HwConfig {
     /// Processing elements per engine lane group (paper: 16).

@@ -30,19 +30,27 @@ mod coeff {
 /// Breakdown of the estimate.
 #[derive(Clone, Debug)]
 pub struct PowerBreakdown {
+    /// Device static power (leakage).
     pub static_w: f64,
+    /// Clock-tree dynamic power.
     pub clock_w: f64,
+    /// Logic + signal dynamic power.
     pub logic_w: f64,
+    /// Block-RAM dynamic power.
     pub bram_w: f64,
+    /// DSP-slice dynamic power.
     pub dsp_w: f64,
+    /// I/O dynamic power (UART/GPIO).
     pub io_w: f64,
 }
 
 impl PowerBreakdown {
+    /// Sum of every term — the headline wattage.
     pub fn total(&self) -> f64 {
         self.static_w + self.clock_w + self.logic_w + self.bram_w + self.dsp_w + self.io_w
     }
 
+    /// One-line human-readable breakdown (report_power style).
     pub fn render(&self) -> String {
         format!(
             "static {:.3} W | clocks {:.3} W | logic+signals {:.3} W | BRAM {:.3} W | DSP {:.3} W | I/O {:.3} W | TOTAL {:.3} W",
@@ -88,14 +96,17 @@ impl Activity {
 
 /// The power model over a resource report + activity point.
 pub struct PowerModel {
+    /// Per-module resource usage the dynamic terms scale with.
     pub report: ResourceReport,
 }
 
 impl PowerModel {
+    /// Model over a built resource report.
     pub fn new(report: ResourceReport) -> Self {
         PowerModel { report }
     }
 
+    /// Power at one activity point.
     pub fn estimate(&self, act: &Activity) -> PowerBreakdown {
         let t: Resources = self.report.total();
         // Engine activity splits: forward modules are rows 0/2, update

@@ -30,13 +30,18 @@ use super::hwconfig::HwConfig;
 /// Resource vector (LUTs, registers, RAMB36-equivalents, DSP48 slices).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Resources {
+    /// 6-input LUTs.
     pub luts: f64,
+    /// Flip-flop registers.
     pub regs: f64,
+    /// RAMB36-equivalents (a RAMB18 counts 0.5).
     pub brams: f64,
+    /// DSP48 slices.
     pub dsps: f64,
 }
 
 impl Resources {
+    /// Element-wise sum of two resource vectors.
     pub fn add(&self, o: &Resources) -> Resources {
         Resources {
             luts: self.luts + o.luts,
@@ -89,8 +94,11 @@ mod unit {
 /// Network geometry the hardware instance is sized for.
 #[derive(Clone, Copy, Debug)]
 pub struct NetGeometry {
+    /// Input-population size.
     pub n_in: usize,
+    /// Hidden-population size.
     pub n_hidden: usize,
+    /// Output-population size.
     pub n_out: usize,
 }
 
@@ -151,14 +159,18 @@ fn theta_bram(hw: &HwConfig, geo: &NetGeometry) -> f64 {
 /// One named row of the report.
 #[derive(Clone, Debug)]
 pub struct ModuleRow {
+    /// Table I component label.
     pub name: &'static str,
+    /// The module's resource usage.
     pub res: Resources,
 }
 
 /// Full resource report (Table I shape).
 #[derive(Clone, Debug)]
 pub struct ResourceReport {
+    /// Per-module rows in Table I order.
     pub rows: Vec<ModuleRow>,
+    /// Capacity of the target device (utilization denominator).
     pub device: Resources,
 }
 
@@ -212,6 +224,7 @@ impl ResourceReport {
         }
     }
 
+    /// Sum over every module row (the report's Total line).
     pub fn total(&self) -> Resources {
         self.rows
             .iter()

@@ -41,28 +41,40 @@ use crate::util::fp16::F16;
 /// FP16 arithmetic-operation counters (dynamic-power activity factors).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OpCounts {
+    /// FP16 multiplies retired.
     pub mul: u64,
+    /// FP16 adds/subtracts retired.
     pub add: u64,
+    /// FP16 compares (threshold, clamp) retired.
     pub cmp: u64,
 }
 
 /// Cycle accounting per pipeline region.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CycleCounts {
+    /// All cycles consumed (regions below sum to this).
     pub total: u64,
+    /// First L1 forward pass before the main loop.
     pub prologue: u64,
+    /// L1 update ∥ L2 forward cycles.
     pub phase_a: u64,
+    /// L2 update ∥ L1 forward cycles.
     pub phase_b: u64,
+    /// Final L2 update flushed by [`FpgaSim::finish`].
     pub epilogue: u64,
+    /// Timesteps executed.
     pub steps: u64,
-    /// Busy (non-stalled, non-bubble) cycles per engine.
+    /// Busy (non-stalled, non-bubble) forward-engine cycles.
     pub fwd_busy: u64,
+    /// Busy (non-stalled, non-bubble) plasticity-engine cycles.
     pub plast_busy: u64,
 }
 
 /// The simulated accelerator.
 pub struct FpgaSim {
+    /// Architecture parameters the instance was built with.
     pub hw: HwConfig,
+    /// Network geometry and neuron/plasticity constants.
     pub cfg: SnnConfig,
     rule: Option<(RuleParams, RuleParams)>,
     // Architectural state (bit-accurate FP16).
@@ -85,8 +97,11 @@ pub struct FpgaSim {
     fwd_ops: Vec<MicroOp>,
     plast_ops: Vec<MicroOp>,
     active_scratch: Vec<usize>,
+    /// Banked memory system (traffic + conflict counters).
     pub mem: MemorySystem,
+    /// Cycle accounting per pipeline region.
     pub cycles: CycleCounts,
+    /// FP16 arithmetic-op counters.
     pub ops: OpCounts,
 }
 

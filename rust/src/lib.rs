@@ -23,15 +23,14 @@
 #![warn(missing_docs)]
 
 // Documentation debt: the serving surface (snn, backend, coordinator),
-// the environments (env), the ES optimizers (es), the runtime and the
-// whole util foundation are fully documented; the modules below still
-// opt out and are tracked as an open item in ROADMAP.md.
+// the environments (env), the ES optimizers (es), the FPGA model (fpga),
+// the runtime and the whole util foundation are fully documented; only
+// mnist and baselines still opt out (tracked in ROADMAP.md).
 pub mod util;
 
 pub mod snn;
 pub mod env;
 pub mod es;
-#[allow(missing_docs)]
 pub mod fpga;
 pub mod runtime;
 pub mod backend;

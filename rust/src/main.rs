@@ -123,6 +123,26 @@ fn parser() -> Parser {
                  live control ticks",
                 "8",
             ),
+            opt(
+                "job-dir",
+                "durable job checkpoint directory: every job persists its \
+                 batch-aligned progress here (atomic writes) and interrupted \
+                 sweeps resume bit-identically after a restart; empty = \
+                 in-memory only",
+                "",
+            ),
+            opt(
+                "line-cap",
+                "max request-line bytes; longer lines get `ERR line-too-long` \
+                 and the connection survives",
+                "65536",
+            ),
+            opt(
+                "read-timeout-ms",
+                "disconnect a client idle for this many milliseconds \
+                 (0 = never; the session slot is reclaimed either way)",
+                "0",
+            ),
         ],
     )
     .command(
@@ -557,6 +577,7 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
         }
         Box::new(ReplicatedBackend::from_instances(instances))
     };
+    let read_timeout_ms = args.get_usize("read-timeout-ms", 0);
     let mut server = ControlServer::with_config(
         backend,
         obs_dim,
@@ -564,6 +585,9 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
         ServerConfig {
             max_sessions: sessions,
             seed,
+            max_line: args.get_usize("line-cap", 64 * 1024).max(16),
+            read_timeout: (read_timeout_ms > 0)
+                .then(|| std::time::Duration::from_millis(read_timeout_ms as u64)),
         },
     );
     // Adaptation-as-a-service: JOB verbs run grid sweeps on dedicated
@@ -571,10 +595,20 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
     // the subsystem detached and the verbs answer `ERR job-disabled`.
     let job_threads = args.get_usize("job-threads", 1);
     if job_threads > 0 {
+        let job_dir = args.get_or("job-dir", "");
+        let job_dir = (!job_dir.is_empty()).then(|| std::path::PathBuf::from(job_dir));
+        if let Some(dir) = &job_dir {
+            if let Err(e) = std::fs::create_dir_all(dir) {
+                eprintln!("job-dir {}: {e}", dir.display());
+                return 1;
+            }
+        }
         let jobs = Arc::new(JobManager::with_metrics(
             JobManagerConfig {
                 queue_cap: args.get_usize("job-queue", 8).max(1),
                 runners: job_threads,
+                job_dir,
+                ..Default::default()
             },
             server.metrics(),
         ));
@@ -595,6 +629,22 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
             Err(err) => {
                 eprintln!("{err}");
                 return 1;
+            }
+        }
+        // Crash recovery: re-admit interrupted sweeps from --job-dir
+        // (each checkpoint carries its own θ snapshot, independent of
+        // the model installed above). Corrupt files are quarantined as
+        // `.corrupt`, never a panic.
+        if jobs.job_dir().is_some() {
+            let report = jobs.recover();
+            if !report.resumed.is_empty() || report.quarantined > 0 || report.rejected > 0 {
+                eprintln!(
+                    "job recovery: resumed {} job(s) {:?}, quarantined {}, rejected {}",
+                    report.resumed.len(),
+                    report.resumed,
+                    report.quarantined,
+                    report.rejected,
+                );
             }
         }
         server.attach_jobs(jobs);

@@ -1,0 +1,178 @@
+//! Deterministic fault injection for the robustness suite (ISSUE 7;
+//! DESIGN.md §Durability-and-Faults).
+//!
+//! A [`FaultPlan`] names *sites* (places in the job/serving planes that
+//! agreed to be breakable) and, per site, the exact occurrence indices
+//! at which the fault fires. Hook code calls [`FaultPlan::fire`] at the
+//! site; the plan counts the visit and answers whether this particular
+//! visit is the one that fails. Plans are either spelled out explicitly
+//! ([`FaultPlan::at`], the conformance tests' mode — "kill after the
+//! k-th checkpoint") or derived from a seed ([`FaultPlan::seeded`],
+//! soak-style sweeps) — both fully deterministic, so a failing fault
+//! run reproduces from its seed alone.
+//!
+//! Production code paths carry an `Option<Arc<FaultPlan>>` that is
+//! `None` outside tests/benches; the hook then costs one branch on a
+//! runner/handler thread (never the serving hot path).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::util::rng::Pcg64;
+
+/// A place that agreed to be breakable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Panic inside a job runner right before the sweep's engine work
+    /// (exercises `catch_unwind` → typed `Failed` containment).
+    RunnerPanic = 0,
+    /// IO error out of a durable checkpoint write (exercises the
+    /// degrade-to-in-memory path).
+    CheckpointWrite = 1,
+    /// Server drops the connection mid `JOB RESULTS` stream (exercises
+    /// slot reclamation with the job left running).
+    StreamCut = 2,
+    /// Job runner halts (state `Interrupted`) right after persisting a
+    /// batch-aligned checkpoint — the crash-recovery conformance
+    /// tests' deterministic "kill -9 at the k-th batch boundary".
+    InterruptAfterBatch = 3,
+}
+
+const N_SITES: usize = 4;
+
+const ALL_SITES: [FaultSite; N_SITES] = [
+    FaultSite::RunnerPanic,
+    FaultSite::CheckpointWrite,
+    FaultSite::StreamCut,
+    FaultSite::InterruptAfterBatch,
+];
+
+#[derive(Debug, Default)]
+struct SiteState {
+    /// Sorted occurrence indices at which the site fires.
+    at: Vec<usize>,
+    /// Visits so far (every `fire` call, firing or not).
+    hits: AtomicUsize,
+    /// Visits that actually fired.
+    fired: AtomicUsize,
+}
+
+/// A deterministic schedule of injected faults. Cheap to share behind
+/// an `Arc`; all counters are atomic, so concurrent runners hitting the
+/// same site each observe a unique occurrence index.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    sites: [SiteState; N_SITES],
+}
+
+impl FaultPlan {
+    /// A plan that never fires (hooks still count visits).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Builder: fire `site` at exactly these occurrence indices
+    /// (0-based over that site's `fire` calls).
+    pub fn at(mut self, site: FaultSite, occurrences: &[usize]) -> FaultPlan {
+        let st = &mut self.sites[site as usize];
+        st.at.extend_from_slice(occurrences);
+        st.at.sort_unstable();
+        st.at.dedup();
+        self
+    }
+
+    /// A seeded plan: each site independently fires each of its first
+    /// `horizon` occurrences with probability `rate`, from its own
+    /// deterministic stream — same seed, same plan, every run.
+    pub fn seeded(seed: u64, horizon: usize, rate: f64) -> FaultPlan {
+        let mut plan = FaultPlan::new();
+        for site in ALL_SITES {
+            let mut rng = Pcg64::new(seed, 0xFA17 ^ site as u64);
+            let at: Vec<usize> = (0..horizon).filter(|_| rng.bernoulli(rate)).collect();
+            plan = plan.at(site, &at);
+        }
+        plan
+    }
+
+    /// Visit `site`: record the hit and return whether this occurrence
+    /// is scheduled to fail. The caller performs the actual fault
+    /// (panic, `Err`, disconnect) so the blast shape stays in the code
+    /// under test, not in the plan.
+    pub fn fire(&self, site: FaultSite) -> bool {
+        let st = &self.sites[site as usize];
+        let k = st.hits.fetch_add(1, Ordering::SeqCst);
+        let hit = st.at.binary_search(&k).is_ok();
+        if hit {
+            st.fired.fetch_add(1, Ordering::SeqCst);
+        }
+        hit
+    }
+
+    /// Total visits to `site` so far.
+    pub fn hits(&self, site: FaultSite) -> usize {
+        self.sites[site as usize].hits.load(Ordering::SeqCst)
+    }
+
+    /// Visits to `site` that fired.
+    pub fn fired(&self, site: FaultSite) -> usize {
+        self.sites[site as usize].fired.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_plan_fires_exactly_at_scheduled_occurrences() {
+        let plan = FaultPlan::new().at(FaultSite::RunnerPanic, &[0, 2, 2, 5]);
+        let fired: Vec<bool> = (0..8).map(|_| plan.fire(FaultSite::RunnerPanic)).collect();
+        assert_eq!(
+            fired,
+            [true, false, true, false, false, true, false, false]
+        );
+        assert_eq!(plan.hits(FaultSite::RunnerPanic), 8);
+        assert_eq!(plan.fired(FaultSite::RunnerPanic), 3);
+        // Other sites are untouched.
+        assert!(!plan.fire(FaultSite::CheckpointWrite));
+        assert_eq!(plan.fired(FaultSite::CheckpointWrite), 0);
+    }
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let plan = FaultPlan::new();
+        assert!((0..100).all(|_| !plan.fire(FaultSite::StreamCut)));
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_seed_sensitive() {
+        let a = FaultPlan::seeded(11, 1000, 0.1);
+        let b = FaultPlan::seeded(11, 1000, 0.1);
+        let c = FaultPlan::seeded(12, 1000, 0.1);
+        let series = |p: &FaultPlan| -> Vec<bool> {
+            (0..1000).map(|_| p.fire(FaultSite::CheckpointWrite)).collect()
+        };
+        let (sa, sb, sc) = (series(&a), series(&b), series(&c));
+        assert_eq!(sa, sb, "same seed must give the same fault schedule");
+        assert_ne!(sa, sc, "different seeds must diverge");
+        let rate = sa.iter().filter(|&&f| f).count() as f64 / 1000.0;
+        assert!((0.05..0.2).contains(&rate), "rate {rate} far from 0.1");
+    }
+
+    #[test]
+    fn concurrent_fire_counts_every_visit_once() {
+        let plan = std::sync::Arc::new(FaultPlan::new().at(FaultSite::RunnerPanic, &[10, 20, 30]));
+        let total_fired: usize = std::thread::scope(|s| {
+            (0..4)
+                .map(|_| {
+                    let plan = std::sync::Arc::clone(&plan);
+                    s.spawn(move || (0..25).filter(|_| plan.fire(FaultSite::RunnerPanic)).count())
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .sum()
+        });
+        assert_eq!(plan.hits(FaultSite::RunnerPanic), 100);
+        assert_eq!(total_fired, 3, "each scheduled occurrence fires exactly once");
+    }
+}

@@ -4,8 +4,10 @@
 //! purpose-built module here).
 
 pub mod argparse;
+pub mod binio;
 pub mod config;
 pub mod csvio;
+pub mod faults;
 pub mod fp16;
 pub mod logging;
 pub mod proptest;

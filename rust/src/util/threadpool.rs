@@ -31,6 +31,12 @@
 //! jobs ([`ThreadPool::execute`] / [`ThreadPool::execute_on`]) still box
 //! into a per-worker queue — that path serves connection handlers and ES
 //! generations, not per-tick dispatch.
+//!
+//! Two panic policies exist for queued jobs: the loud default
+//! ([`ThreadPool::new`] — a dead worker fails later dispatch, the
+//! compute pools' bug-surfacing contract) and self-healing
+//! ([`ThreadPool::respawning`] — a panicking job's worker is replaced on
+//! the same mailbox, the serving plane's containment contract).
 
 use std::alloc::Layout;
 use std::any::Any;
@@ -216,6 +222,14 @@ struct PoolShared {
     /// Guards the one-scope-at-a-time contract (scope state is pooled,
     /// not per-scope, so dispatch stays allocation-free).
     scope_active: AtomicBool,
+    /// `true` = a worker whose queued job panics is replaced by a fresh
+    /// thread on the same mailbox ([`ThreadPool::respawning`]) instead
+    /// of poisoning dispatch. The loud default stays for compute pools,
+    /// where a panicking job is a bug the caller must see.
+    respawn: bool,
+    /// Join handles of respawned replacement threads (the initial
+    /// workers' handles live on the [`ThreadPool`] itself).
+    extra: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 /// Persistent pool for repeated dispatch without re-spawning threads
@@ -228,8 +242,26 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
-    /// Spawn a pool of `workers` named threads (at least one).
+    /// Spawn a pool of `workers` named threads (at least one). A queued
+    /// job that panics kills its worker **loudly**: later dispatch to
+    /// that worker panics too (the compute pools' contract — a
+    /// panicking rollout is a bug, not an operational event).
     pub fn new(workers: usize) -> Self {
+        Self::with_respawn(workers, false)
+    }
+
+    /// Like [`new`], but a worker whose queued job panics is replaced
+    /// by a fresh thread serving the same mailbox — queued and pinned
+    /// jobs keep flowing. The serving plane uses this for connection
+    /// handlers: one bad handler costs its own connection, never a
+    /// session slot for the server's lifetime.
+    ///
+    /// [`new`]: ThreadPool::new
+    pub fn respawning(workers: usize) -> Self {
+        Self::with_respawn(workers, true)
+    }
+
+    fn with_respawn(workers: usize, respawn: bool) -> Self {
         let workers = workers.max(1);
         let shared = Arc::new(PoolShared {
             workers: (0..workers)
@@ -252,19 +284,12 @@ impl ThreadPool {
                 cv: Condvar::new(),
             },
             scope_active: AtomicBool::new(false),
+            respawn,
+            extra: Mutex::new(Vec::new()),
         });
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
-            let shared = Arc::clone(&shared);
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("fireflyp-worker-{w}"))
-                    .spawn(move || {
-                        let guard = DeadFlag { shared, w };
-                        worker_loop(&guard.shared, w);
-                    })
-                    .expect("spawn worker"),
-            );
+            handles.push(spawn_worker(Arc::clone(&shared), w).expect("spawn worker"));
         }
         ThreadPool {
             shared,
@@ -424,7 +449,35 @@ impl Drop for ThreadPool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        // Respawned replacements too. Once every shutdown flag is set no
+        // new respawn passes its check, so the drain loop terminates; a
+        // replacement racing the final drain exits on its own when it
+        // reads the flag (its handle is merely dropped, not joined).
+        loop {
+            let extra: Vec<_> = std::mem::take(
+                &mut *self.shared.extra.lock().unwrap_or_else(|e| e.into_inner()),
+            );
+            if extra.is_empty() {
+                break;
+            }
+            for h in extra {
+                let _ = h.join();
+            }
+        }
     }
+}
+
+/// Spawn the worker thread serving mailbox `w`.
+fn spawn_worker(
+    shared: Arc<PoolShared>,
+    w: usize,
+) -> std::io::Result<std::thread::JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(format!("fireflyp-worker-{w}"))
+        .spawn(move || {
+            let guard = DeadFlag { shared, w };
+            worker_loop(&guard.shared, w);
+        })
 }
 
 /// Unwind guard installed on every worker thread: if a queued `'static`
@@ -447,6 +500,36 @@ impl Drop for DeadFlag {
             return;
         }
         let ws = &self.shared.workers[self.w];
+        if self.shared.respawn {
+            // Replace the dying thread on the same mailbox: queued jobs
+            // (and any scope task deposited during the unwind) are
+            // served by the successor, so nothing orphans and `dead`
+            // stays false. Skipped once shutdown is underway, and on
+            // the (pathological) failure to spawn we fall through to
+            // the loud-dead path below.
+            let draining = ws.mx.lock().map(|st| st.shutdown).unwrap_or(true);
+            if !draining {
+                match spawn_worker(Arc::clone(&self.shared), self.w) {
+                    Ok(handle) => {
+                        crate::log_warn!(
+                            "pool worker {} died on a panicking job; respawned",
+                            self.w
+                        );
+                        self.shared
+                            .extra
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .push(handle);
+                        return;
+                    }
+                    Err(e) => {
+                        crate::log_warn!("could not respawn pool worker {}: {e}", self.w);
+                    }
+                }
+            } else {
+                return;
+            }
+        }
         let orphan = match ws.mx.lock() {
             Ok(mut st) => {
                 st.dead = true;
@@ -825,6 +908,35 @@ mod tests {
         let (tx, rx) = std::sync::mpsc::channel::<u32>();
         pool.execute_on(1, move || tx.send(7).unwrap());
         assert_eq!(rx.recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn respawning_pool_survives_queued_job_panic() {
+        let pool = ThreadPool::respawning(2);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        pool.execute_on(0, move || {
+            let _tx = tx; // dropped during unwind → rx disconnects
+            panic!("handler boom");
+        });
+        let _ = rx.recv(); // the worker is at least mid-unwind now
+        // Dispatch to the same mailbox keeps working: the replacement
+        // thread drains it. (Never panics, unlike the loud default.)
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        pool.execute_on(0, move || tx.send(41).unwrap());
+        assert_eq!(
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(),
+            41,
+            "respawned worker must serve its mailbox"
+        );
+        // Jobs queued *behind* a panicking job survive the handoff.
+        let (tx, rx) = std::sync::mpsc::channel::<u32>();
+        pool.execute_on(1, || panic!("again"));
+        pool.execute_on(1, move || tx.send(42).unwrap());
+        assert_eq!(
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(),
+            42
+        );
+        drop(pool); // must join replacements without hanging
     }
 
     #[test]

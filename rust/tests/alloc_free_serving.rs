@@ -31,7 +31,11 @@
 //! thread. The allocator splits its accounting — the serving thread
 //! marks itself via a thread-local flag, so job-thread allocations
 //! (engine/env construction at sub-batch boundaries) are measured
-//! separately and never pollute the serving-path count.
+//! separately and never pollute the serving-path count. Since ISSUE 7
+//! the job in that test also runs **durable** (`--job-dir`): checkpoint
+//! encoding and atomic file writes happen on the runner thread at every
+//! sub-batch boundary, and the serving path must STILL count zero —
+//! durability is free where latency matters.
 //!
 //! The allocator counts process-wide, so the tests serialize their
 //! armed windows through a mutex; no allocation from the other tests
@@ -480,9 +484,17 @@ fn serving_stays_alloc_free_while_grid_job_runs() {
     let mut flat = vec![0.0f32; job_cfg.n_rule_params()];
     rng.fill_normal_f32(&mut flat, 0.05);
     let job_rule = NetworkRule::from_flat(&job_cfg, &flat);
+    // Durable job checkpoints (ISSUE 7): the runner persists its
+    // batch-aligned cursor to disk while the serving path stays at
+    // zero allocations — disk IO lives on the runner thread only.
+    let job_dir = std::env::temp_dir().join(format!("ffp-alloc-jobs-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&job_dir);
+    std::fs::create_dir_all(&job_dir).unwrap();
     let mgr = JobManager::new(JobManagerConfig {
         queue_cap: 2,
         runners: 1,
+        job_dir: Some(job_dir.clone()),
+        ..JobManagerConfig::default()
     });
     mgr.install_model("cheetah-vel", JobModel::plastic(job_cfg, job_rule))
         .unwrap();
@@ -583,13 +595,21 @@ fn serving_stays_alloc_free_while_grid_job_runs() {
     );
     assert_eq!(
         serving_allocs, 0,
-        "serving path allocated {serving_allocs} times while a grid job ran \
-         (job thread accounted {} separately)",
+        "serving path allocated {serving_allocs} times while a durable grid \
+         job ran (job thread accounted {} separately)",
         total_allocs - serving_allocs
+    );
+    // Durability really happened alongside the armed window: the
+    // running job's checkpoint is on disk (persisted from cursor 0 the
+    // moment the runner picked it up).
+    assert!(
+        job_dir.join(format!("job-{id}.ckpt")).exists(),
+        "durable job left no checkpoint behind"
     );
 
     // Shut the runner down *inside* the gate so its allocations cannot
     // land in another test's armed window.
     mgr.cancel(id).unwrap();
     mgr.shutdown();
+    let _ = std::fs::remove_dir_all(&job_dir);
 }

@@ -1,0 +1,432 @@
+//! Fault-injection suite for the serving plane (ISSUE 7): every
+//! injected failure is *contained* — it costs exactly its own job or
+//! its own connection, never the server.
+//!
+//! Faults come from the deterministic [`FaultPlan`] (see
+//! `util::faults`): the plan names the site and the exact occurrence
+//! index, the code under test performs the actual panic / IO error /
+//! disconnect, so a failing run reproduces from its plan alone.
+//!
+//! Pinned here, over real TCP:
+//! - An injected **runner panic** fails only its own job (typed
+//!   `state=failed`); the runner is replaced and later jobs — and OBS
+//!   control ticks throughout — are unaffected.
+//! - An injected **checkpoint-write IO error** degrades that job to
+//!   in-memory checkpoints with a counted metric; the sweep still
+//!   finishes `done` and serving never notices.
+//! - An injected **mid-stream disconnect** (`JOB RESULTS`) frees the
+//!   session slot for the next client while the job runs to
+//!   completion.
+//! - An **idle client** past `--read-timeout-ms` is disconnected and
+//!   its slot reclaimed.
+//! - An **oversized request line** gets a typed `ERR line-too-long`
+//!   and the connection survives.
+//! - **`SHUTDOWN`** drains gracefully: in-flight sweeps are
+//!   interrupted at a batch-aligned cursor with their checkpoint
+//!   persisted to `--job-dir`, `serve()` returns, and a fresh manager
+//!   resumes the sweep from disk.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use firefly_p::backend::NativeBackend;
+use firefly_p::coordinator::jobs::{
+    GridKind, JobManager, JobManagerConfig, JobModel, JobSpec, JobState, Precision,
+};
+use firefly_p::coordinator::server::{ControlServer, ServerConfig};
+use firefly_p::env::{make_env, Perturbation};
+use firefly_p::es::eval::NEURONS_PER_DIM;
+use firefly_p::snn::{NetworkRule, SnnConfig};
+use firefly_p::util::faults::{FaultPlan, FaultSite};
+use firefly_p::util::rng::Pcg64;
+
+const ENV: &str = "cheetah-vel";
+const DEADLINE: Duration = Duration::from_secs(180);
+
+fn control_cfg() -> SnnConfig {
+    let e = make_env(ENV).unwrap();
+    let mut cfg = SnnConfig::control(e.obs_dim() * NEURONS_PER_DIM, 2 * e.act_dim());
+    cfg.n_hidden = 8;
+    cfg
+}
+
+fn rule_for(cfg: &SnnConfig, seed: u64) -> NetworkRule {
+    let mut rng = Pcg64::new(seed, 0);
+    let mut flat = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut flat, 0.05);
+    NetworkRule::from_flat(cfg, &flat)
+}
+
+/// A quick train-grid job (8 sessions, batch 2) — enough batches for a
+/// mid-sweep fault to land somewhere interesting.
+fn quick_spec(seed: u64) -> JobSpec {
+    let mut spec = JobSpec::new(ENV);
+    spec.grid = GridKind::Train;
+    spec.budget = Some(6);
+    spec.seed = seed;
+    spec.batch = 2;
+    spec.threads = 1;
+    spec.prec = Precision::F32;
+    spec
+}
+
+/// A long eval sweep (72 sessions) that keeps a runner busy while a
+/// fault or a drain lands.
+fn long_spec() -> JobSpec {
+    let mut spec = JobSpec::new(ENV);
+    spec.grid = GridKind::Eval;
+    spec.schedule = vec![(Some(Perturbation::leg_failure(vec![0])), 8), (None, 0)];
+    spec.budget = Some(60);
+    spec.seed = 0x7C;
+    spec.batch = 4;
+    spec.threads = 1;
+    spec.prec = Precision::F32;
+    spec
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ffp-faults-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Serving stack with the job subsystem attached. The server thread
+/// returns the final values of the named metric counters after
+/// `serve()` ends.
+fn spawn_server(
+    server_cfg: ServerConfig,
+    job_cfg: JobManagerConfig,
+    max_connections: Option<usize>,
+    report: &'static [&'static str],
+) -> (std::net::SocketAddr, std::thread::JoinHandle<Vec<u64>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+    let handle = std::thread::spawn(move || {
+        let cfg = control_cfg();
+        let rule = rule_for(&cfg, 3);
+        let e = make_env(ENV).unwrap();
+        let backend = Box::new(NativeBackend::plastic(cfg.clone(), rule.clone()));
+        let mut server = ControlServer::with_config(backend, e.obs_dim(), e.act_dim(), server_cfg);
+        let jobs = Arc::new(JobManager::with_metrics(job_cfg, server.metrics()));
+        jobs.install_model(ENV, JobModel::plastic(cfg, rule)).unwrap();
+        server.attach_jobs(jobs);
+        server.serve(&addr.to_string(), max_connections).unwrap();
+        let metrics = server.metrics();
+        let m = metrics.lock().unwrap();
+        report.iter().map(|name| m.count(name)).collect()
+    });
+    std::thread::sleep(Duration::from_millis(150));
+    (addr, handle)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    line: String,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+            line: String::new(),
+        }
+    }
+
+    fn send(&mut self, req: &str) {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+    }
+
+    /// One response line; empty string on EOF.
+    fn recv(&mut self) -> String {
+        self.line.clear();
+        self.reader.read_line(&mut self.line).unwrap();
+        self.line.trim().to_string()
+    }
+
+    fn round_trip(&mut self, req: &str) -> String {
+        self.send(req);
+        self.recv()
+    }
+
+    fn submit(&mut self, spec: &JobSpec) -> u64 {
+        let ok = self.round_trip(&format!("JOB SUBMIT {}", spec.encode()));
+        assert!(ok.starts_with("JOB OK id="), "{ok}");
+        kv(&ok, "id").parse().unwrap()
+    }
+
+    /// Poll `JOB STATUS` until `pred(state, done)` holds.
+    fn wait_status(&mut self, id: u64, pred: impl Fn(&str, usize) -> bool) -> String {
+        let deadline = Instant::now() + DEADLINE;
+        loop {
+            let st = self.round_trip(&format!("JOB STATUS {id}"));
+            assert!(st.starts_with("JOB STATUS "), "{st}");
+            let state = kv(&st, "state").to_string();
+            let done: usize = kv(&st, "done").parse().unwrap();
+            if pred(&state, done) {
+                return st;
+            }
+            assert!(Instant::now() < deadline, "job {id} stuck at {st}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+fn kv<'a>(line: &'a str, key: &str) -> &'a str {
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key).and_then(|v| v.strip_prefix('=')))
+        .unwrap_or_else(|| panic!("no {key}= field in {line:?}"))
+}
+
+const OBS: &str = "OBS 0.1,0.2,0.3,-0.4,0.5,1.0";
+
+// ----------------------------------------------------------- the suite
+
+#[test]
+fn runner_panic_fails_only_its_own_job_and_serving_survives() {
+    let (addr, server) = spawn_server(
+        ServerConfig {
+            max_sessions: 2,
+            seed: 1,
+            ..ServerConfig::default()
+        },
+        JobManagerConfig {
+            queue_cap: 4,
+            runners: 1,
+            faults: Some(Arc::new(FaultPlan::new().at(FaultSite::RunnerPanic, &[0]))),
+            ..JobManagerConfig::default()
+        },
+        Some(1),
+        &["jobs_failed", "jobs_completed"],
+    );
+    let mut c = Client::connect(addr);
+
+    // The first job hits the injected panic and must land `failed` —
+    // a typed terminal state, not a hung handler or a dead server.
+    let doomed = c.submit(&quick_spec(1));
+    let st = c.wait_status(doomed, |state, _| state == "failed");
+    assert_eq!(kv(&st, "state"), "failed", "{st}");
+
+    // Control ticks round-trip straight through the wreckage...
+    for _ in 0..5 {
+        let act = c.round_trip(OBS);
+        assert!(act.starts_with("ACT "), "{act}");
+    }
+    // ...and the next job on the SAME runner lane completes: the
+    // panicking sweep cost exactly itself.
+    let sibling = c.submit(&quick_spec(2));
+    c.wait_status(sibling, |state, _| state == "done");
+
+    drop(c);
+    let counts = server.join().unwrap();
+    assert_eq!(counts, vec![1, 1], "jobs_failed=1, jobs_completed=1");
+}
+
+#[test]
+fn checkpoint_write_fault_degrades_to_in_memory_and_job_finishes() {
+    let dir = tmp_dir("degrade");
+    let (addr, server) = spawn_server(
+        ServerConfig {
+            max_sessions: 1,
+            seed: 2,
+            ..ServerConfig::default()
+        },
+        JobManagerConfig {
+            queue_cap: 4,
+            runners: 1,
+            job_dir: Some(dir.clone()),
+            faults: Some(Arc::new(
+                // The very first durable write fails: the job must fall
+                // back to in-memory checkpoints for its whole life.
+                FaultPlan::new().at(FaultSite::CheckpointWrite, &[0]),
+            )),
+        },
+        Some(1),
+        &["jobs_ckpt_write_errors", "jobs_ckpt_writes", "jobs_completed"],
+    );
+    let mut c = Client::connect(addr);
+    let id = c.submit(&quick_spec(3));
+    c.wait_status(id, |state, _| state == "done");
+    drop(c);
+    let counts = server.join().unwrap();
+    assert_eq!(counts[0], 1, "exactly one failed checkpoint write");
+    assert_eq!(counts[1], 0, "degraded: no further durable writes");
+    assert_eq!(counts[2], 1, "the sweep still finished");
+    assert!(
+        !dir.join("job-1.ckpt").exists(),
+        "a degraded job leaves no (possibly stale) checkpoint behind"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stream_cut_mid_results_frees_the_slot_while_the_job_runs_on() {
+    // One session slot, two connections allowed: if the cut stream did
+    // NOT release its slot, the second client could never get in.
+    let (addr, server) = spawn_server(
+        ServerConfig {
+            max_sessions: 1,
+            seed: 3,
+            ..ServerConfig::default()
+        },
+        JobManagerConfig {
+            queue_cap: 4,
+            runners: 1,
+            faults: Some(Arc::new(FaultPlan::new().at(FaultSite::StreamCut, &[2]))),
+            ..JobManagerConfig::default()
+        },
+        Some(2),
+        &["jobs_completed"],
+    );
+    let mut c = Client::connect(addr);
+    let id = c.submit(&long_spec());
+    c.send(&format!("JOB RESULTS {id}"));
+    let header = c.recv();
+    assert!(header.starts_with("JOB RESULTS id="), "{header}");
+    // The injected cut closes the server side of this socket around the
+    // third row: reads end (empty line = EOF) after at most a few rows.
+    let mut rows = 0usize;
+    loop {
+        let line = c.recv();
+        if line.is_empty() {
+            break; // EOF — the server hung up mid-stream
+        }
+        assert!(line.starts_with("ROW "), "{line}");
+        rows += 1;
+        assert!(rows < 72, "stream was never cut");
+    }
+    drop(c);
+
+    // The slot came back: a fresh client connects, serves ticks, and
+    // watches the orphaned job run to completion.
+    let mut c2 = Client::connect(addr);
+    assert_eq!(c2.round_trip("PING"), "PONG");
+    for _ in 0..3 {
+        let act = c2.round_trip(OBS);
+        assert!(act.starts_with("ACT "), "{act}");
+    }
+    let st = c2.wait_status(id, |state, _| state == "done");
+    assert_eq!(kv(&st, "done"), "72", "{st}");
+    drop(c2);
+    assert_eq!(server.join().unwrap(), vec![1]);
+}
+
+#[test]
+fn idle_client_is_disconnected_and_its_slot_reclaimed() {
+    let (addr, server) = spawn_server(
+        ServerConfig {
+            max_sessions: 1,
+            seed: 4,
+            read_timeout: Some(Duration::from_millis(300)),
+            ..ServerConfig::default()
+        },
+        JobManagerConfig::default(),
+        Some(2),
+        &[],
+    );
+    let mut idler = Client::connect(addr);
+    assert_eq!(idler.round_trip("PING"), "PONG");
+    // Go idle past the budget: the server hangs up (EOF on our side)
+    // instead of holding the only session slot forever.
+    assert_eq!(idler.recv(), "", "expected EOF from the idle disconnect");
+    drop(idler);
+
+    let mut c2 = Client::connect(addr);
+    assert_eq!(c2.round_trip("PING"), "PONG");
+    let act = c2.round_trip(OBS);
+    assert!(act.starts_with("ACT "), "{act}");
+    drop(c2);
+    server.join().unwrap();
+}
+
+#[test]
+fn oversized_request_line_is_typed_and_survivable_over_tcp() {
+    let (addr, server) = spawn_server(
+        ServerConfig {
+            max_sessions: 1,
+            seed: 5,
+            max_line: 256,
+            ..ServerConfig::default()
+        },
+        JobManagerConfig::default(),
+        Some(1),
+        &[],
+    );
+    let mut c = Client::connect(addr);
+    let flood = format!("OBS {}", "9,".repeat(4000));
+    assert_eq!(c.round_trip(&flood), "ERR line-too-long cap=256 bytes");
+    // The over-cap line was discarded through its newline: the very
+    // next request parses cleanly on the same connection.
+    assert_eq!(c.round_trip("PING"), "PONG");
+    let act = c.round_trip(OBS);
+    assert!(act.starts_with("ACT "), "{act}");
+    drop(c);
+    server.join().unwrap();
+}
+
+#[test]
+fn shutdown_drains_interrupts_jobs_and_persists_their_checkpoints() {
+    let dir = tmp_dir("drain");
+    let (addr, server) = spawn_server(
+        ServerConfig {
+            max_sessions: 2,
+            seed: 6,
+            ..ServerConfig::default()
+        },
+        JobManagerConfig {
+            queue_cap: 4,
+            runners: 1,
+            job_dir: Some(dir.clone()),
+            faults: None,
+        },
+        None, // drain — not a connection budget — ends this serve()
+        &["jobs_interrupted"],
+    );
+    let spec = long_spec();
+    let mut c = Client::connect(addr);
+    let id = c.submit(&spec);
+    // Let the sweep make real progress so the persisted cursor is
+    // mid-flight (and provably batch-aligned).
+    c.wait_status(id, |state, done| state == "running" && done >= 4);
+    assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+    drop(c);
+
+    // serve() returns on its own: drain stops the accept loop, the
+    // handler pool winds down, and the manager interrupts + persists
+    // the in-flight sweep.
+    let counts = server.join().unwrap();
+    assert_eq!(counts, vec![1], "one in-flight job interrupted");
+    let ckpt = dir.join(format!("job-{id}.ckpt"));
+    assert!(ckpt.exists(), "drain must persist the interrupted sweep");
+
+    // The checkpoint alone resumes the sweep on a fresh manager (a
+    // restarted `serve --job-dir`, as far as the subsystem can tell).
+    let mgr = JobManager::new(JobManagerConfig {
+        job_dir: Some(dir.clone()),
+        ..JobManagerConfig::default()
+    });
+    let report = mgr.recover();
+    assert_eq!(report.resumed.len(), 1, "{report:?}");
+    let id2 = report.resumed[0];
+    let deadline = Instant::now() + DEADLINE;
+    let st = loop {
+        let st = mgr.status(id2).unwrap();
+        if st.state.is_terminal() {
+            break st;
+        }
+        assert!(Instant::now() < deadline, "resumed job stuck");
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert_eq!(st.state, JobState::Done);
+    assert_eq!(st.done, 72);
+    assert_eq!(st.done % spec.batch, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -54,7 +54,11 @@ fn rule_for(cfg: &SnnConfig, seed: u64) -> NetworkRule {
 }
 
 fn manager(queue_cap: usize, runners: usize, rule_seed: u64) -> JobManager {
-    let mgr = JobManager::new(JobManagerConfig { queue_cap, runners });
+    let mgr = JobManager::new(JobManagerConfig {
+        queue_cap,
+        runners,
+        ..JobManagerConfig::default()
+    });
     let cfg = control_cfg(8);
     let rule = rule_for(&cfg, rule_seed);
     mgr.install_model(ENV, JobModel::plastic(cfg, rule)).unwrap();
@@ -206,10 +210,15 @@ fn spawn_server(
             ServerConfig {
                 max_sessions,
                 seed: 9,
+                ..ServerConfig::default()
             },
         );
         let jobs = Arc::new(JobManager::with_metrics(
-            JobManagerConfig { queue_cap, runners },
+            JobManagerConfig {
+                queue_cap,
+                runners,
+                ..JobManagerConfig::default()
+            },
             server.metrics(),
         ));
         jobs.install_model(ENV, JobModel::plastic(cfg, rule)).unwrap();
@@ -399,6 +408,7 @@ fn shutdown_checkpoints_in_flight_and_resumes_on_fresh_manager() {
     let mgr2 = JobManager::new(JobManagerConfig {
         queue_cap: 2,
         runners: 1,
+        ..JobManagerConfig::default()
     });
     let id2 = mgr2.resume_from(ckpt).unwrap();
     let logs = collect_rows(&mgr2, id2, 72);
