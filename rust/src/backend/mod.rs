@@ -124,6 +124,18 @@ pub trait SnnBackend {
         out.clear();
         out.extend_from_slice(&self.output_traces_session(session));
     }
+
+    /// Runtime plasticity gate (serving-plane overload shedding,
+    /// DESIGN.md §Durability-and-Faults): `false` freezes plastic-mode
+    /// weight updates while forward stepping continues unchanged;
+    /// `true` resumes online updates from the frozen per-session
+    /// weights. Returns whether the backend actually honours the toggle
+    /// — the default is a no-op returning `false` (fixed-weight and
+    /// single-session stub backends have nothing to shed). The shared
+    /// rule θ is read-only either way, so shedding can never corrupt it.
+    fn set_plasticity_enabled(&mut self, _on: bool) -> bool {
+        false
+    }
 }
 
 /// Which backend to instantiate (CLI-facing).
@@ -240,6 +252,14 @@ impl SnnBackend for ReplicatedBackend {
 
     fn output_traces_session(&self, session: usize) -> Vec<f32> {
         self.instances[session].output_traces()
+    }
+
+    fn set_plasticity_enabled(&mut self, on: bool) -> bool {
+        let mut honoured = false;
+        for inst in self.instances.iter_mut() {
+            honoured |= inst.set_plasticity_enabled(on);
+        }
+        honoured
     }
 }
 

@@ -194,6 +194,12 @@ impl<S: Scalar> SnnBackend for TypedNativeBackend<S> {
     fn output_traces_session_into(&self, session: usize, out: &mut Vec<f32>) {
         self.net.output_traces_session_into(session, out);
     }
+
+    fn set_plasticity_enabled(&mut self, on: bool) -> bool {
+        self.net.set_plasticity_enabled(on);
+        // Honoured only when there are plastic weights to freeze.
+        self.net.rule().is_some()
+    }
 }
 
 #[cfg(test)]
@@ -296,6 +302,55 @@ mod tests {
                 "F16 trace mismatch session {s}"
             );
         }
+    }
+
+    #[test]
+    fn plasticity_gate_freezes_weights_and_restores_bit_identically() {
+        // Overload shedding's backend contract: gate closed ⇒ weights
+        // freeze at their current values while forward stepping (and
+        // traces) continue; gate reopened ⇒ updates resume from the
+        // frozen weights. θ is behind an Arc and read-only throughout.
+        let cfg = SnnConfig::tiny();
+        let mut rng = Pcg64::new(51, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.3);
+        let rule = NetworkRule::from_flat(&cfg, &flat);
+        let mut b = NativeBackend::plastic(cfg.clone(), rule);
+        assert!(b.network().plasticity_enabled());
+
+        let mut input_rng = Pcg64::new(52, 0);
+        let mut step = |b: &mut NativeBackend| {
+            let spikes: Vec<bool> = (0..cfg.n_in).map(|_| input_rng.bernoulli(0.6)).collect();
+            b.step(&spikes);
+        };
+        for _ in 0..10 {
+            step(&mut b);
+        }
+        let live_mean = b.network().weight_mean_abs();
+        assert!(live_mean > 0.0, "plastic stepping must move weights");
+
+        // Shed: weights freeze exactly, traces keep evolving.
+        assert!(b.set_plasticity_enabled(false));
+        let frozen_w1 = b.network().w1.clone();
+        let traces_before = b.output_traces();
+        for _ in 0..10 {
+            step(&mut b);
+        }
+        assert_eq!(b.network().w1, frozen_w1, "shed step must not touch weights");
+        assert_eq!(b.network().plasticity_rows_visited, [0, 0]);
+        assert_ne!(b.output_traces(), traces_before, "forward pass must continue");
+
+        // Restore: updates resume from the frozen values.
+        assert!(b.set_plasticity_enabled(true));
+        for _ in 0..5 {
+            step(&mut b);
+        }
+        assert_ne!(b.network().w1, frozen_w1, "restored plasticity must resume");
+
+        // Fixed-weight deployments report the toggle unhonoured.
+        let weights = vec![0.1f32; cfg.n_weights()];
+        let mut fixed = NativeBackend::fixed(cfg.clone(), &weights);
+        assert!(!fixed.set_plasticity_enabled(false));
     }
 
     #[test]

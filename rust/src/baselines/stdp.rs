@@ -19,7 +19,9 @@ use crate::util::rng::Pcg64;
 /// Classic pair-based STDP (Table II rows [35], [37]).
 #[derive(Clone, Copy, Debug)]
 pub struct PairStdpRule {
+    /// Potentiation gain on a postsynaptic spike.
     pub a_plus: f32,
+    /// Depression gain on a presynaptic spike.
     pub a_minus: f32,
 }
 
@@ -62,8 +64,11 @@ impl PairStdpRule {
 /// postsynaptic trace so potentiation depends on post-spike history.
 #[derive(Clone, Debug)]
 pub struct TripletStdpRule {
+    /// Pair-term potentiation gain.
     pub a2_plus: f32,
+    /// Pair-term depression gain.
     pub a2_minus: f32,
+    /// Triplet-term potentiation gain (scaled by the slow trace).
     pub a3_plus: f32,
     /// Slow postsynaptic trace state (per neuron) and its decay.
     pub lambda_slow: f32,
@@ -71,6 +76,7 @@ pub struct TripletStdpRule {
 }
 
 impl TripletStdpRule {
+    /// Reference operating point with `n_post` slow postsynaptic traces.
     pub fn new(n_post: usize) -> TripletStdpRule {
         TripletStdpRule {
             a2_plus: 0.5,
@@ -88,6 +94,8 @@ impl TripletStdpRule {
         }
     }
 
+    /// Event-gated update for one synapse onto postsynaptic neuron
+    /// `i_post`.
     #[inline]
     pub fn delta(
         &self,

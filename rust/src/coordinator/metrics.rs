@@ -98,6 +98,42 @@ impl Metrics {
         }
     }
 
+    /// Job-counter consistency invariant (DESIGN.md
+    /// §Durability-and-Faults), checked at quiescence (no job queued or
+    /// running): every admitted job must have reached exactly one
+    /// terminal state —
+    /// `jobs_submitted == jobs_completed + jobs_failed + jobs_cancelled
+    /// + jobs_interrupted` — and checkpoint write attempts must bound
+    /// their errors: `jobs_ckpt_writes ≥ jobs_ckpt_write_errors`.
+    /// Returns `Err` with a diagnostic naming the violated relation so
+    /// soak harnesses can assert it as one reusable check.
+    pub fn job_counters_consistent(&self) -> Result<(), String> {
+        let submitted = self.count("jobs_submitted");
+        let terminal = self.count("jobs_completed")
+            + self.count("jobs_failed")
+            + self.count("jobs_cancelled")
+            + self.count("jobs_interrupted");
+        if submitted != terminal {
+            return Err(format!(
+                "jobs_submitted={submitted} != terminal sum {terminal} \
+                 (completed={} failed={} cancelled={} interrupted={})",
+                self.count("jobs_completed"),
+                self.count("jobs_failed"),
+                self.count("jobs_cancelled"),
+                self.count("jobs_interrupted"),
+            ));
+        }
+        let writes = self.count("jobs_ckpt_writes");
+        let errors = self.count("jobs_ckpt_write_errors");
+        if writes < errors {
+            return Err(format!(
+                "jobs_ckpt_writes={writes} < jobs_ckpt_write_errors={errors} \
+                 (attempts must bound errors)"
+            ));
+        }
+        Ok(())
+    }
+
     /// Stable text report of every series, distribution and counter.
     pub fn report(&self) -> String {
         use std::fmt::Write;
@@ -198,6 +234,35 @@ mod tests {
         for p in [0.0, 25.0, 50.0, 90.0, 100.0] {
             assert_eq!(a.percentile("ttr", p), b.percentile("ttr", p));
         }
+    }
+
+    #[test]
+    fn job_counter_invariant_accepts_balanced_books() {
+        let mut m = Metrics::new();
+        assert!(m.job_counters_consistent().is_ok(), "all-zero is balanced");
+        m.add("jobs_submitted", 10);
+        m.add("jobs_completed", 6);
+        m.add("jobs_failed", 1);
+        m.add("jobs_cancelled", 2);
+        m.add("jobs_interrupted", 1);
+        m.add("jobs_ckpt_writes", 8);
+        m.add("jobs_ckpt_write_errors", 3);
+        assert!(m.job_counters_consistent().is_ok());
+    }
+
+    #[test]
+    fn job_counter_invariant_names_the_violated_relation() {
+        let mut m = Metrics::new();
+        m.add("jobs_submitted", 5);
+        m.add("jobs_completed", 4);
+        let err = m.job_counters_consistent().unwrap_err();
+        assert!(err.contains("jobs_submitted=5"), "got: {err}");
+
+        let mut m = Metrics::new();
+        m.add("jobs_ckpt_writes", 1);
+        m.add("jobs_ckpt_write_errors", 2);
+        let err = m.job_counters_consistent().unwrap_err();
+        assert!(err.contains("jobs_ckpt_writes=1"), "got: {err}");
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //!   on dedicated job-runner threads with admission control, per-job θ
 //!   snapshots, and checkpoint/resume, bit-identical to the CLI
 //!   `adapt --grid` path.
+//! - [`soak`]: the chaos-soak harness — the full serving + jobs +
+//!   streaming stack driven through seeded composed-fault schedules
+//!   (subscriber cuts, checkpoint IO errors, interrupts, scheduler
+//!   stalls, serving overload), asserting stitched multi-subscriber
+//!   streams stay bit-identical to a fault-free witness.
 //! - [`metrics`]: lightweight named metrics registry for all of the
 //!   above.
 
@@ -30,6 +35,7 @@ pub mod jobs;
 pub mod metrics;
 pub mod offline;
 pub mod server;
+pub mod soak;
 
 pub use adapt_loop::{run_adaptation, AdaptConfig, AdaptLog};
 pub use batch_adapt::{
@@ -44,3 +50,4 @@ pub use jobs::{
 pub use metrics::Metrics;
 pub use offline::{train_rule, TrainConfig, TrainResult};
 pub use server::{ControlServer, ServerConfig};
+pub use soak::{run_soak, SoakConfig, SoakReport};

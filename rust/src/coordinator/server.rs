@@ -16,7 +16,7 @@
 //! ← ERR <reason>               malformed input / server full
 //! ```
 //!
-//! With a [`JobManager`] attached (`serve --job-threads ≥ 1`), four
+//! With a [`JobManager`] attached (`serve --job-threads ≥ 1`), five
 //! more verbs expose adaptation-as-a-service (DESIGN.md §Batched-
 //! Serving, "Grid jobs"); handlers run them inline on their own pool
 //! worker and job sweeps execute on the manager's dedicated runner
@@ -25,8 +25,10 @@
 //! ```text
 //! → JOB SUBMIT family=<f> [grid=task|train|eval] [schedule=<spec@t;...>]
 //!              [budget=<n>] [seed=<n>] [batch=<n>] [threads=<n>]
-//!              [task=<n>] [prec=f32|f16]     (or: JOB SUBMIT resume=<id>)
+//!              [task=<n>] [prec=f32|f16] [client=<name>] [weight=<n>]
+//!                                        (or: JOB SUBMIT resume=<id>)
 //! ← JOB OK id=<id> total=<n> done=<k>
+//! ← ERR overloaded retry-ms=<n> oldest-ms=<n>   (deadline-aware admission)
 //! → JOB STATUS <id>
 //! ← JOB STATUS id=<id> state=<s> done=<k> total=<n>
 //! → JOB CANCEL <id>
@@ -37,9 +39,37 @@
 //!       pre=<v> shock=<v> final=<v> recovery=<v> ttr=<n|none>   (streamed)
 //! ← JOB END id=<id> state=<s> sessions=<n> perturbed=<n> recovered=<n>
 //!       mean_reward=<v> mean_recovery=<v> ttr_p50=<v>
+//! → JOB SUBSCRIBE <id> [from=<row>]
+//! ← JOB SUBSCRIBE id=<id> total=<n> from=<k>
+//! ← ROW <i> ...                (pushed rows, starting at row k)
+//! ← JOB END id=<id> ...        (then the server closes the connection)
 //! ← ERR <job-error-code> <detail>          typed rejection (e.g.
 //!                                          job-queue-full = backpressure)
 //! ```
+//!
+//! # Push streaming (`JOB SUBSCRIBE`, DESIGN.md §Durability-and-Faults)
+//!
+//! `RESULTS` and `SUBSCRIBE` streams are served by a single **stream
+//! hub** thread, not by the connection's pinned handler: the handler
+//! validates the request, writes the header line, hands the socket to
+//! the hub, and returns — releasing its session slot and pool worker
+//! immediately. The hub sleeps on the job manager's progress epoch
+//! ([`JobManager::wait_progress_for`]), bulk-copies newly completed
+//! rows ([`JobManager::copy_rows`]) and pushes them to every follower
+//! with nonblocking writes (a slow subscriber carries its unsent tail;
+//! it never stalls the others). Consequences:
+//!
+//! - N clients can follow one job — or N jobs — while occupying zero
+//!   handler slots; a 1-slot server keeps serving `OBS` ticks mid-
+//!   stream (`results_streaming_frees_the_slot_for_interleaved_requests`).
+//! - A cut subscriber reconnects and resumes with `from=<row>`; rows
+//!   are indexed, so the stitched stream is bit-identical.
+//! - After a `RESULTS` stream ends, the hub re-dispatches the
+//!   connection through the accept path (read-ahead bytes carried
+//!   over), so the connection stays usable — its serving session is
+//!   re-allocated and reset like any recycled slot.
+//! - `SUBSCRIBE` consumes the connection: after `JOB END` the server
+//!   closes it.
 //!
 //! `ROW` floats use Rust's shortest round-trip `Display`, so parsing
 //! them back yields bit-identical `f64`s — the wire preserves the
@@ -57,9 +87,17 @@
 //! - `--read-timeout-ms` disconnects idle clients; their session slots
 //!   are reclaimed cleanly (a `SlotGuard` releases the slot even if a
 //!   handler panics).
-//! - A client that vanishes mid `JOB RESULTS` stream frees its handler
-//!   slot while the job keeps running (bounded row waits + a
-//!   nonblocking liveness probe).
+//! - A client that vanishes mid-stream (`RESULTS` or `SUBSCRIBE`) is
+//!   dropped by the hub on its first failed write while the job keeps
+//!   running for every other follower.
+//! - With `--tick-deadline-us`, the stepper watches its own batch
+//!   latency: after [`SHED_AFTER`] consecutive deadline overruns it
+//!   **sheds load** by freezing plasticity
+//!   ([`crate::backend::SnnBackend::set_plasticity_enabled`]) — serving
+//!   continues on fixed weights, θ is read-only either way, and after
+//!   [`RESTORE_AFTER`] clean ticks plasticity is restored. Transitions
+//!   are logged and counted (`serve_shed_transitions`,
+//!   `serve_shed_restores`, `serve_shed_ticks`).
 //! - `SHUTDOWN` (or [`ControlServer::drain_handle`]) drains gracefully:
 //!   `OK draining` to the caller, `ERR shutting-down` to every further
 //!   request, accept loop stops, and once handlers finish the attached
@@ -123,13 +161,14 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::backend::SnnBackend;
+use crate::coordinator::batch_adapt::GridSummary;
 use crate::coordinator::jobs::{
-    parse_submit, JobError, JobManager, JobRow, JobStatus, SubmitRequest, WouldBlock,
+    parse_submit, JobError, JobManager, JobRow, JobStatus, SubmitRequest,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::es::eval::NEURONS_PER_DIM;
 use crate::snn::encoding::{PopulationEncoder, TraceDecoder};
-use crate::util::faults::FaultSite;
+use crate::util::faults::{FaultPlan, FaultSite};
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::ThreadPool;
 
@@ -151,6 +190,13 @@ pub struct ServerConfig {
     /// --read-timeout-ms`; `None` = never). The slot is reclaimed
     /// cleanly either way.
     pub read_timeout: Option<Duration>,
+    /// Serving-tick latency budget (`serve --tick-deadline-us`;
+    /// `None` = never shed). After [`SHED_AFTER`] consecutive batch
+    /// ticks over this budget the stepper freezes plasticity and
+    /// serves on fixed weights until [`RESTORE_AFTER`] clean ticks
+    /// pass. θ is read-only either way — shedding can never corrupt
+    /// the learned rule.
+    pub tick_deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -160,6 +206,7 @@ impl Default for ServerConfig {
             seed: 42,
             max_line: 64 * 1024,
             read_timeout: None,
+            tick_deadline: None,
         }
     }
 }
@@ -168,9 +215,21 @@ impl Default for ServerConfig {
 /// (and its own idle budget). Bounds drain latency per handler.
 const READ_POLL: Duration = Duration::from_millis(200);
 
-/// How long a `JOB RESULTS` streamer waits for the next row before
-/// probing whether its client is still connected.
-const ROW_POLL: Duration = Duration::from_millis(100);
+/// How long the stream hub sleeps on the job progress epoch before
+/// re-checking its followers (and the stop flag) anyway.
+const HUB_POLL: Duration = Duration::from_millis(50);
+
+/// Rows fetched per [`JobManager::copy_rows`] span in the hub's pump —
+/// one lock per span, not per row.
+const HUB_SPAN: usize = 64;
+
+/// Consecutive over-deadline serving ticks before the stepper sheds
+/// load by freezing plasticity (see [`ServerConfig::tick_deadline`]).
+pub const SHED_AFTER: u32 = 3;
+
+/// Consecutive within-deadline serving ticks before shed plasticity is
+/// restored.
+pub const RESTORE_AFTER: u32 = 8;
 
 /// Cloneable signal that asks a running [`ControlServer::serve`] loop
 /// to drain: stop accepting, answer every subsequent request with
@@ -320,6 +379,257 @@ impl Shared {
     }
 }
 
+/// What the stream hub does with a follower's connection once its
+/// stream is fully delivered.
+enum StreamMode {
+    /// `JOB SUBSCRIBE`: write `JOB END`, close the connection.
+    Subscribe,
+    /// `JOB RESULTS` hand-off: write `JOB END`, then give the
+    /// connection back to the accept path — carrying the handler's
+    /// read-ahead bytes — so it stays usable for further requests.
+    Results {
+        /// Bytes the handler had read past the `JOB RESULTS` line.
+        residual: Vec<u8>,
+    },
+}
+
+/// One connection being pushed rows by the stream hub.
+struct Follower {
+    stream: TcpStream,
+    job: u64,
+    /// Next row index to fetch.
+    cursor: usize,
+    /// Formatted-but-unsent bytes (pooled; a slow client carries its
+    /// tail here instead of stalling the other followers).
+    out: Vec<u8>,
+    /// Prefix of `out` already written to the socket.
+    sent: usize,
+    mode: StreamMode,
+    /// The `JOB END` line is queued in `out`; once it drains, finish.
+    end_queued: bool,
+}
+
+/// Outcome of one pump pass over a follower.
+enum Pump {
+    /// Keep following.
+    Keep,
+    /// Stream complete — `JOB END` flushed.
+    Finished,
+    /// The client vanished or its socket errored: drop the follower
+    /// (the job keeps running for everyone else).
+    Dead,
+}
+
+/// Intake/handoff queues between the connection handlers, the hub
+/// thread and the accept thread.
+#[derive(Default)]
+struct HubInner {
+    /// Followers handed off by handlers, not yet adopted by the pump.
+    incoming: Vec<Follower>,
+    /// Finished `RESULTS` connections awaiting re-dispatch by the
+    /// accept thread (stream + residual read-ahead).
+    ready: Vec<(TcpStream, Vec<u8>)>,
+    /// Followers currently held by the hub thread.
+    active: usize,
+}
+
+/// Push-stream hub (see the module docs): one thread serves every
+/// `RESULTS`/`SUBSCRIBE` follower so streaming never occupies a
+/// session slot. Handlers [`add`](StreamHub::add) followers, the hub
+/// pumps rows to them as the job manager's progress epoch advances,
+/// and the accept thread re-dispatches finished `RESULTS` connections
+/// from [`take_ready`](StreamHub::take_ready).
+struct StreamHub {
+    jobs: Arc<JobManager>,
+    plan: Option<Arc<FaultPlan>>,
+    metrics: Arc<Mutex<Metrics>>,
+    inner: Mutex<HubInner>,
+    stop: AtomicBool,
+}
+
+impl StreamHub {
+    /// Spawn the hub thread; the accept loop joins the handle after
+    /// drain.
+    fn spawn(
+        jobs: Arc<JobManager>,
+        metrics: Arc<Mutex<Metrics>>,
+    ) -> (Arc<StreamHub>, std::thread::JoinHandle<()>) {
+        let hub = Arc::new(StreamHub {
+            plan: jobs.fault_plan(),
+            jobs,
+            metrics,
+            inner: Mutex::new(HubInner::default()),
+            stop: AtomicBool::new(false),
+        });
+        let h = Arc::clone(&hub);
+        let handle = std::thread::Builder::new()
+            .name("fireflyp-stream-hub".into())
+            .spawn(move || h.run())
+            .expect("spawn stream hub thread");
+        (hub, handle)
+    }
+
+    /// Hand a connection to the hub. The calling handler has already
+    /// written the stream header; it returns (freeing its session
+    /// slot and pool worker) right after this call.
+    fn add(&self, stream: TcpStream, job: u64, cursor: usize, mode: StreamMode) {
+        // Nonblocking from here on: a slow client gets WouldBlock and
+        // carries its unsent tail; it never stalls the hub.
+        let _ = stream.set_nonblocking(true);
+        self.metrics.lock().unwrap().incr("job_stream_followers");
+        self.inner.lock().unwrap().incoming.push(Follower {
+            stream,
+            job,
+            cursor,
+            out: Vec::new(),
+            sent: 0,
+            mode,
+            end_queued: false,
+        });
+    }
+
+    /// Finished `RESULTS` connections for the accept thread to
+    /// re-dispatch.
+    fn take_ready(&self) -> Vec<(TcpStream, Vec<u8>)> {
+        std::mem::take(&mut self.inner.lock().unwrap().ready)
+    }
+
+    /// Put a finished connection back when no session slot freed up;
+    /// the accept thread retries on its next poll.
+    fn requeue_ready(&self, stream: TcpStream, residual: Vec<u8>) {
+        self.inner.lock().unwrap().ready.push((stream, residual));
+    }
+
+    /// No follower in flight anywhere (intake, pump, or ready queue).
+    /// The drain path waits for `live == 0 && hub.idle()`.
+    fn idle(&self) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.incoming.is_empty() && inner.ready.is_empty() && inner.active == 0
+    }
+
+    /// Stop the hub: in-flight followers are closed, not completed
+    /// (drain-time subscribers see EOF and reconnect elsewhere).
+    fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    fn run(&self) {
+        let mut followers: Vec<Follower> = Vec::new();
+        let mut rows: Vec<JobRow> = Vec::new();
+        let mut line = String::new();
+        let mut seen = self.jobs.progress_epoch();
+        loop {
+            let stopping = self.stop.load(Ordering::SeqCst);
+            {
+                let mut inner = self.inner.lock().unwrap();
+                followers.append(&mut inner.incoming);
+                inner.active = followers.len();
+            }
+            if stopping {
+                // Dropping the streams closes them mid-push.
+                followers.clear();
+                let mut inner = self.inner.lock().unwrap();
+                inner.incoming.clear();
+                inner.ready.clear();
+                inner.active = 0;
+                break;
+            }
+            let mut finished: Vec<(TcpStream, Vec<u8>)> = Vec::new();
+            let mut i = 0;
+            while i < followers.len() {
+                match self.pump(&mut followers[i], &mut rows, &mut line) {
+                    Pump::Keep => i += 1,
+                    Pump::Finished => {
+                        let f = followers.swap_remove(i);
+                        if let StreamMode::Results { residual } = f.mode {
+                            let _ = f.stream.set_nonblocking(false);
+                            finished.push((f.stream, residual));
+                        }
+                        // Subscribe mode: drop = close, as documented.
+                    }
+                    Pump::Dead => {
+                        self.metrics.lock().unwrap().incr("job_stream_drops");
+                        followers.swap_remove(i);
+                    }
+                }
+            }
+            {
+                let mut inner = self.inner.lock().unwrap();
+                inner.ready.append(&mut finished);
+                inner.active = followers.len();
+            }
+            seen = self.jobs.wait_progress_for(seen, HUB_POLL);
+        }
+    }
+
+    /// Refill the follower's out-buffer from newly completed rows and
+    /// flush as much of it as the socket accepts right now.
+    fn pump(&self, f: &mut Follower, rows: &mut Vec<JobRow>, line: &mut String) -> Pump {
+        if !f.end_queued {
+            match self.jobs.copy_rows(f.job, f.cursor, HUB_SPAN, rows) {
+                Ok(status) => {
+                    for row in rows.iter() {
+                        // Injected fault: the peer drops mid-push. A
+                        // both-ways shutdown makes the next write fail
+                        // exactly like a real vanished client.
+                        let site = match f.mode {
+                            StreamMode::Subscribe => FaultSite::SubscriberCut,
+                            StreamMode::Results { .. } => FaultSite::StreamCut,
+                        };
+                        if self.plan.as_ref().is_some_and(|p| p.fire(site)) {
+                            let _ = f.stream.shutdown(Shutdown::Both);
+                        }
+                        line.clear();
+                        write_job_row(line, row);
+                        line.push('\n');
+                        f.out.extend_from_slice(line.as_bytes());
+                        f.cursor += 1;
+                    }
+                    // Every row a terminal job will ever have is out:
+                    // queue the END summary (status and rows came from
+                    // one lock, so this snapshot is consistent).
+                    if status.state.is_terminal() && f.cursor >= status.done {
+                        line.clear();
+                        match self.jobs.summary(f.job) {
+                            Ok((st, sum)) => write_job_end(line, f.job, &st, &sum),
+                            Err(e) => {
+                                let _ = write!(line, "ERR {e}");
+                            }
+                        }
+                        line.push('\n');
+                        f.out.extend_from_slice(line.as_bytes());
+                        f.end_queued = true;
+                    }
+                }
+                Err(e) => {
+                    line.clear();
+                    let _ = write!(line, "ERR {e}");
+                    line.push('\n');
+                    f.out.extend_from_slice(line.as_bytes());
+                    f.end_queued = true;
+                }
+            }
+        }
+        while f.sent < f.out.len() {
+            match f.stream.write(&f.out[f.sent..]) {
+                Ok(0) => return Pump::Dead,
+                Ok(n) => f.sent += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return Pump::Dead,
+            }
+        }
+        if f.sent == f.out.len() {
+            f.out.clear();
+            f.sent = 0;
+            if f.end_queued {
+                return Pump::Finished;
+            }
+        }
+        Pump::Keep
+    }
+}
+
 /// Session-managed TCP control server multiplexing many concurrent
 /// client connections onto batched SNN steps.
 pub struct ControlServer {
@@ -442,7 +752,14 @@ impl ControlServer {
             })
             .expect("spawn accept thread");
 
-        stepper_loop(self.backend.as_mut(), &self.decoder, &shared);
+        let plan = self.jobs.as_ref().and_then(|j| j.fault_plan());
+        stepper_loop(
+            self.backend.as_mut(),
+            &self.decoder,
+            &shared,
+            self.cfg.tick_deadline,
+            plan,
+        );
 
         accept.join().expect("accept thread panicked");
         // Drained (or connection budget exhausted): stop the job
@@ -481,13 +798,52 @@ fn accept_loop(
     // pool respawns a worker whose job panicked, so one bad handler
     // costs its own connection, not a session slot forever.
     let pool = ThreadPool::respawning(shared.cells.len());
+    // Stream hub (only with a job subsystem): RESULTS/SUBSCRIBE
+    // followers are pushed rows off-slot, and finished RESULTS
+    // connections come back through `take_ready` for re-dispatch.
+    let (hub, hub_join) = match &jobs {
+        Some(j) => {
+            let (h, join) = StreamHub::spawn(Arc::clone(j), Arc::clone(&shared.metrics));
+            (Some(h), Some(join))
+        }
+        None => (None, None),
+    };
     let mut served = 0usize;
     if listener.set_nonblocking(true).is_err() {
         crate::log_warn!("listener refused nonblocking mode; drain may lag one accept");
     }
+    // Allocate a slot and hand the connection (with any carried
+    // read-ahead bytes) to its pinned worker; gives the pair back if
+    // the server is full so the caller can refuse or requeue it.
+    let dispatch = |stream: TcpStream, carry: Vec<u8>| -> Result<(), (TcpStream, Vec<u8>)> {
+        match shared.try_alloc_slot() {
+            Some(slot) => {
+                shared.live.fetch_add(1, Ordering::SeqCst);
+                let sh = Arc::clone(&shared);
+                let enc = Arc::clone(&encoder);
+                let jb = jobs.clone();
+                let hb = hub.clone();
+                pool.execute_on(slot, move || {
+                    handle_connection(stream, carry, slot, sh, enc, seed, jb, hb, opts)
+                });
+                Ok(())
+            }
+            None => Err((stream, carry)),
+        }
+    };
     loop {
         if shared.drain.is_draining() {
             break;
+        }
+        // Re-dispatch connections whose RESULTS stream the hub
+        // finished; if the server is momentarily full, requeue and
+        // retry on a later pass.
+        if let Some(hub) = &hub {
+            for (stream, residual) in hub.take_ready() {
+                if let Err((s, r)) = dispatch(stream, residual) {
+                    hub.requeue_ready(s, r);
+                }
+            }
         }
         let stream = match listener.accept() {
             Ok((s, _)) => s,
@@ -501,21 +857,9 @@ fn accept_loop(
         // not be (handlers use timeout-bounded blocking reads).
         let _ = stream.set_nonblocking(false);
         served += 1;
-        match shared.try_alloc_slot() {
-            Some(slot) => {
-                shared.live.fetch_add(1, Ordering::SeqCst);
-                let sh = Arc::clone(&shared);
-                let enc = Arc::clone(&encoder);
-                let jb = jobs.clone();
-                pool.execute_on(slot, move || {
-                    handle_connection(stream, slot, sh, enc, seed, jb, opts)
-                });
-            }
-            None => {
-                shared.metrics.lock().unwrap().incr("rejected");
-                let mut s = stream;
-                let _ = s.write_all(b"ERR server full\n");
-            }
+        if let Err((mut s, _)) = dispatch(stream, Vec::new()) {
+            shared.metrics.lock().unwrap().incr("rejected");
+            let _ = s.write_all(b"ERR server full\n");
         }
         if let Some(max) = max_connections {
             if served >= max {
@@ -523,9 +867,32 @@ fn accept_loop(
             }
         }
     }
-    // Drain: wait for every live handler to finish, then stop the stepper.
-    while shared.live.load(Ordering::SeqCst) > 0 {
+    // Drain: let the hub finish in-flight streams (re-dispatching
+    // RESULTS connections as slots free up) and wait for every live
+    // handler. A real drain signal force-stops the hub instead —
+    // followers see EOF; a connection-budget exit lets streams finish.
+    loop {
+        if let Some(hub) = &hub {
+            if shared.drain.is_draining() {
+                hub.shutdown();
+            }
+            for (stream, residual) in hub.take_ready() {
+                if let Err((s, r)) = dispatch(stream, residual) {
+                    hub.requeue_ready(s, r);
+                }
+            }
+        }
+        let hub_idle = hub.as_ref().is_none_or(|h| h.idle());
+        if shared.live.load(Ordering::SeqCst) == 0 && hub_idle {
+            break;
+        }
         std::thread::sleep(Duration::from_millis(2));
+    }
+    if let Some(hub) = &hub {
+        hub.shutdown();
+    }
+    if let Some(join) = hub_join {
+        let _ = join.join();
     }
     shared.state.lock().unwrap().shutdown = true;
     shared.work_cv.notify_all();
@@ -556,6 +923,10 @@ struct LineReader {
     reader: BufReader<TcpStream>,
     buf: Vec<u8>,
     cap: usize,
+    /// Read-ahead bytes carried over from a previous reader on the
+    /// same connection (hub re-dispatch); consumed before the socket.
+    carry: Vec<u8>,
+    carry_pos: usize,
     /// Mid-discard of an over-cap line.
     skipping: bool,
     /// Last poll returned a whole line; clear `buf` before the next.
@@ -564,10 +935,18 @@ struct LineReader {
 
 impl LineReader {
     fn new(stream: TcpStream, cap: usize) -> LineReader {
+        LineReader::with_carry(stream, cap, Vec::new())
+    }
+
+    /// A reader that replays `carry` (bytes a previous reader had
+    /// already pulled off this connection) before touching the socket.
+    fn with_carry(stream: TcpStream, cap: usize, carry: Vec<u8>) -> LineReader {
         LineReader {
             reader: BufReader::new(stream),
             buf: Vec::new(),
             cap,
+            carry,
+            carry_pos: 0,
             skipping: false,
             fresh: false,
         }
@@ -578,11 +957,70 @@ impl LineReader {
         &self.buf
     }
 
+    /// Every byte this reader has pulled off the connection but not
+    /// yet handed out as a line: unconsumed carry plus the
+    /// `BufReader`'s read-ahead. Used when the connection is handed to
+    /// the stream hub so no pipelined request bytes are lost.
+    fn take_residual(&mut self) -> Vec<u8> {
+        let mut residual = self.carry.split_off(self.carry_pos);
+        self.carry.clear();
+        self.carry_pos = 0;
+        residual.extend_from_slice(self.reader.buffer());
+        residual
+    }
+
     /// Advance by at most one socket read-timeout window.
     fn poll_line(&mut self) -> io::Result<LineEvent> {
         if self.fresh {
             self.buf.clear();
             self.fresh = false;
+        }
+        // Replay carried read-ahead first; it mirrors the socket path
+        // below minus the timeout handling (carry never blocks).
+        while self.carry_pos < self.carry.len() {
+            let chunk = &self.carry[self.carry_pos..];
+            let newline = chunk.iter().position(|&b| b == b'\n');
+            if self.skipping {
+                match newline {
+                    Some(pos) => {
+                        self.carry_pos += pos + 1;
+                        self.skipping = false;
+                        self.buf.clear();
+                        return Ok(LineEvent::TooLong);
+                    }
+                    None => self.carry_pos = self.carry.len(),
+                }
+                continue;
+            }
+            match newline {
+                Some(pos) => {
+                    if self.buf.len() + pos > self.cap {
+                        self.carry_pos += pos + 1;
+                        self.buf.clear();
+                        return Ok(LineEvent::TooLong);
+                    }
+                    self.buf.extend_from_slice(&self.carry[self.carry_pos..self.carry_pos + pos]);
+                    self.carry_pos += pos + 1;
+                    self.fresh = true;
+                    return Ok(LineEvent::Line);
+                }
+                None => {
+                    let n = chunk.len();
+                    if self.buf.len() + n > self.cap {
+                        self.carry_pos = self.carry.len();
+                        self.buf.clear();
+                        self.skipping = true;
+                        continue;
+                    }
+                    let start = self.carry_pos;
+                    self.buf.extend_from_slice(&self.carry[start..start + n]);
+                    self.carry_pos = self.carry.len();
+                }
+            }
+        }
+        if !self.carry.is_empty() {
+            self.carry = Vec::new();
+            self.carry_pos = 0;
         }
         loop {
             let chunk = match self.reader.fill_buf() {
@@ -645,24 +1083,6 @@ impl LineReader {
     }
 }
 
-/// Nonblocking probe: has the peer closed (or errored) its side?
-/// Toggles `O_NONBLOCK` around a 1-byte `peek`; pipelined request bytes
-/// and an empty-but-open socket both count as alive.
-fn client_gone(stream: &TcpStream) -> bool {
-    if stream.set_nonblocking(true).is_err() {
-        return false;
-    }
-    let mut probe = [0u8; 1];
-    let gone = match stream.peek(&mut probe) {
-        Ok(0) => true,
-        Ok(_) => false,
-        Err(e) if e.kind() == io::ErrorKind::WouldBlock => false,
-        Err(_) => true,
-    };
-    let _ = stream.set_nonblocking(false);
-    gone
-}
-
 /// Releases the session slot and the live count even if the handler
 /// unwinds — a panicking handler must never leak its slot.
 struct SlotGuard<'a> {
@@ -680,13 +1100,18 @@ impl Drop for SlotGuard<'_> {
 /// Per-connection request loop (runs on a pool worker pinned to `slot`).
 /// All per-request scratch (parsed observation, response line) is pooled
 /// per connection; the spike/action payloads live in the slot cell.
+/// `carry` replays read-ahead bytes for connections re-dispatched by
+/// the stream hub (empty for fresh accepts).
+#[allow(clippy::too_many_arguments)]
 fn handle_connection(
     stream: TcpStream,
+    carry: Vec<u8>,
     slot: usize,
     shared: Arc<Shared>,
     encoder: Arc<PopulationEncoder>,
     seed: u64,
     jobs: Option<Arc<JobManager>>,
+    hub: Option<Arc<StreamHub>>,
     opts: ConnOptions,
 ) {
     let _guard = SlotGuard {
@@ -710,7 +1135,7 @@ fn handle_connection(
         // the writer clone, which is fine — responses are never parked.
         let poll = opts.read_timeout.map_or(READ_POLL, |t| t.min(READ_POLL));
         stream.set_read_timeout(Some(poll))?;
-        let mut lr = LineReader::new(stream.try_clone()?, opts.max_line);
+        let mut lr = LineReader::with_carry(stream.try_clone()?, opts.max_line, carry);
         let mut writer = stream;
         let mut last_activity = Instant::now();
         loop {
@@ -815,11 +1240,21 @@ fn handle_connection(
                 match &jobs {
                     Some(mgr) => {
                         // Job verbs run inline on this pinned worker
-                        // (never through the stepper queue); RESULTS
-                        // streams its own lines. `false` = the client
-                        // vanished mid-stream: end this connection (the
-                        // job keeps running for other subscribers).
-                        if !handle_job_request(rest, mgr, &shared, &mut writer, &mut resp)? {
+                        // (never through the stepper queue). The owned
+                        // copy releases the reader borrow: RESULTS and
+                        // SUBSCRIBE hand the connection (with the
+                        // reader's residual bytes) to the stream hub
+                        // and return `false` — end this handler, which
+                        // frees its slot while rows are pushed off-slot.
+                        let req = rest.to_string();
+                        if !handle_job_request(
+                            &req,
+                            mgr,
+                            hub.as_ref(),
+                            &mut lr,
+                            &mut writer,
+                            &mut resp,
+                        )? {
                             break;
                         }
                         continue;
@@ -847,15 +1282,17 @@ fn handle_connection(
 }
 
 /// Handle one `JOB <verb> ...` request (everything after `JOB `),
-/// writing every response line (the streamed `RESULTS` rows included)
-/// to `writer` directly. `resp` is the connection's pooled line
-/// buffer. Returns `false` when the client vanished mid `RESULTS`
-/// stream: the caller ends the connection (releasing its slot) while
-/// the job itself keeps running.
+/// writing every response line to `writer` directly. `resp` is the
+/// connection's pooled line buffer. Returns `false` when the
+/// connection left this handler: `RESULTS`/`SUBSCRIBE` write their
+/// header inline, then hand the socket (plus `lr`'s residual
+/// read-ahead) to the stream hub — the caller ends the handler,
+/// freeing its slot, while the hub pushes rows off-slot.
 fn handle_job_request(
     rest: &str,
     jobs: &Arc<JobManager>,
-    shared: &Shared,
+    hub: Option<&Arc<StreamHub>>,
+    lr: &mut LineReader,
     writer: &mut TcpStream,
     resp: &mut String,
 ) -> std::io::Result<bool> {
@@ -896,72 +1333,38 @@ fn handle_job_request(
                 let _ = write!(resp, "JOB RESULTS id={id} total={}", st.total);
                 writer.write_all(resp.as_bytes())?;
                 writer.write_all(b"\n")?;
-                // Stream rows as sub-batches finish. Bounded waits: a
-                // slow sweep must not park this handler slot on the
-                // condvar for its whole lifetime — every ROW_POLL the
-                // streamer probes the client and the drain flag, so a
-                // vanished subscriber frees the slot while the job
-                // runs on, and a drain ends the stream promptly.
-                let plan = jobs.fault_plan();
-                let mut index = 0usize;
-                loop {
-                    let step = match jobs.wait_row_for(id, index, ROW_POLL) {
-                        Ok(step) => step,
-                        Err(_) => break,
-                    };
-                    let row = match step {
-                        Err(WouldBlock) => {
-                            if client_gone(writer) {
-                                crate::log_info!(
-                                    "JOB RESULTS {id}: client left mid-stream at row {index}; \
-                                     job continues"
-                                );
-                                return Ok(false);
-                            }
-                            if shared.drain.is_draining() {
-                                let _ = writer.write_all(b"ERR shutting-down\n");
-                                return Ok(false);
-                            }
-                            continue;
-                        }
-                        Ok(None) => break,
-                        Ok(Some(row)) => row,
-                    };
-                    // Injected fault: the peer drops mid-stream. A
-                    // both-ways shutdown makes this write (or the next)
-                    // fail exactly like a real vanished client.
-                    if plan
-                        .as_ref()
-                        .is_some_and(|p| p.fire(FaultSite::StreamCut))
-                    {
-                        let _ = writer.shutdown(Shutdown::Both);
-                    }
-                    resp.clear();
-                    write_job_row(resp, &row);
-                    writer.write_all(resp.as_bytes())?;
-                    writer.write_all(b"\n")?;
-                    index += 1;
-                }
-                resp.clear();
-                match jobs.summary(id) {
-                    Ok((st, sum)) => {
-                        let _ = write!(
-                            resp,
-                            "JOB END id={id} state={} sessions={} perturbed={} recovered={} \
-                             mean_reward={} mean_recovery={} ttr_p50={}",
-                            st.state.as_str(),
-                            sum.sessions,
-                            sum.perturbed,
-                            sum.recovered,
-                            sum.mean_total_reward,
-                            sum.mean_recovery_ratio,
-                            sum.time_to_recover_p50
-                        );
-                    }
-                    Err(e) => {
-                        let _ = write!(resp, "ERR {e}");
-                    }
-                }
+                // Hand the connection to the stream hub: rows are
+                // pushed off-slot, and after `JOB END` the connection
+                // re-enters the accept path (carrying any pipelined
+                // request bytes) so follow-up verbs keep working.
+                let hub = hub.expect("stream hub runs whenever jobs are attached");
+                let residual = lr.take_residual();
+                hub.add(writer.try_clone()?, id, 0, StreamMode::Results { residual });
+                return Ok(false);
+            }
+            Err(e) => {
+                let _ = write!(resp, "ERR {e}");
+            }
+        }
+    } else if let Some(arg) = rest.strip_prefix("SUBSCRIBE ") {
+        match parse_subscribe(arg).and_then(|(id, from)| jobs.status(id).map(|st| (id, st, from))) {
+            Ok((id, st, from)) if from > st.total => {
+                let _ = write!(
+                    resp,
+                    "ERR job-bad-spec from={from} exceeds total={}",
+                    st.total
+                );
+            }
+            Ok((id, st, from)) => {
+                let _ = write!(resp, "JOB SUBSCRIBE id={id} total={} from={from}", st.total);
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n")?;
+                // Pure push stream: the hub owns the connection from
+                // here and closes it after `JOB END`. A reconnecting
+                // subscriber resumes bit-identically via `from=`.
+                let hub = hub.expect("stream hub runs whenever jobs are attached");
+                hub.add(writer.try_clone()?, id, from, StreamMode::Subscribe);
+                return Ok(false);
             }
             Err(e) => {
                 let _ = write!(resp, "ERR {e}");
@@ -970,7 +1373,7 @@ fn handle_job_request(
     } else {
         let _ = write!(
             resp,
-            "ERR job-bad-verb want SUBMIT | STATUS | CANCEL | RESULTS (got {rest:?})"
+            "ERR job-bad-verb want SUBMIT | STATUS | CANCEL | RESULTS | SUBSCRIBE (got {rest:?})"
         );
     }
     writer.write_all(resp.as_bytes())?;
@@ -984,6 +1387,33 @@ fn parse_job_id(s: &str) -> Result<u64, JobError> {
         .map_err(|e| JobError::BadSpec(format!("bad job id: {e}")))
 }
 
+/// Parse `JOB SUBSCRIBE` arguments: `<id> [from=<row>]`.
+fn parse_subscribe(s: &str) -> Result<(u64, usize), JobError> {
+    let mut it = s.split_whitespace();
+    let id = it
+        .next()
+        .ok_or_else(|| JobError::BadSpec("missing job id".into()))?;
+    let id: u64 = id
+        .parse()
+        .map_err(|e| JobError::BadSpec(format!("bad job id: {e}")))?;
+    let mut from = 0usize;
+    for tok in it {
+        match tok.strip_prefix("from=") {
+            Some(v) => {
+                from = v
+                    .parse()
+                    .map_err(|e| JobError::BadSpec(format!("bad from: {e}")))?;
+            }
+            None => {
+                return Err(JobError::BadSpec(format!(
+                    "unknown SUBSCRIBE arg {tok:?} (want from=<row>)"
+                )));
+            }
+        }
+    }
+    Ok((id, from))
+}
+
 fn write_job_status(resp: &mut String, prefix: &str, st: &JobStatus) {
     let _ = write!(
         resp,
@@ -992,6 +1422,23 @@ fn write_job_status(resp: &mut String, prefix: &str, st: &JobStatus) {
         st.state.as_str(),
         st.done,
         st.total
+    );
+}
+
+/// The `JOB END` trailer of a results stream (shared by the hub's
+/// `RESULTS` and `SUBSCRIBE` modes).
+fn write_job_end(resp: &mut String, id: u64, st: &JobStatus, sum: &GridSummary) {
+    let _ = write!(
+        resp,
+        "JOB END id={id} state={} sessions={} perturbed={} recovered={} \
+         mean_reward={} mean_recovery={} ttr_p50={}",
+        st.state.as_str(),
+        sum.sessions,
+        sum.perturbed,
+        sum.recovered,
+        sum.mean_total_reward,
+        sum.mean_recovery_ratio,
+        sum.time_to_recover_p50
     );
 }
 
@@ -1029,14 +1476,31 @@ fn write_job_row(resp: &mut String, row: &JobRow) {
 /// pending session in one batched call per tick. Every buffer the loop
 /// touches — the drained queue, the session/input staging, the trace
 /// and action scratch — is pooled, so the steady state allocates
-/// nothing.
-fn stepper_loop(backend: &mut dyn SnnBackend, decoder: &TraceDecoder, shared: &Shared) {
+/// nothing (the shed watchdog is counters and a clock read per tick).
+///
+/// With `tick_deadline` set, the loop watches its own batch latency:
+/// [`SHED_AFTER`] consecutive overruns freeze plasticity (serving
+/// degrades to fixed weights — θ itself is read-only either way, so
+/// shedding can never corrupt the rule), [`RESTORE_AFTER`] clean ticks
+/// restore it. A scheduled [`FaultSite::OverloadBurst`] makes a tick
+/// count as overrun regardless of the wall clock — the deterministic
+/// overload the chaos soak leans on.
+fn stepper_loop(
+    backend: &mut dyn SnnBackend,
+    decoder: &TraceDecoder,
+    shared: &Shared,
+    tick_deadline: Option<Duration>,
+    plan: Option<Arc<FaultPlan>>,
+) {
     let n_out = backend.config().n_out;
     let mut slots: Vec<usize> = Vec::new();
     let mut inputs: Vec<bool> = Vec::new();
     let mut out_spikes: Vec<bool> = Vec::new();
     let mut traces: Vec<f32> = Vec::new();
     let mut drained: Vec<(usize, SlotRequest)> = Vec::new();
+    let mut overruns = 0u32;
+    let mut clean = 0u32;
+    let mut shedding = false;
     loop {
         {
             let mut st = shared.state.lock().unwrap();
@@ -1050,6 +1514,7 @@ fn stepper_loop(backend: &mut dyn SnnBackend, decoder: &TraceDecoder, shared: &S
             // stepper drains without holding the lock.
             std::mem::swap(&mut st.requests, &mut drained);
         }
+        let tick_start = Instant::now();
 
         slots.clear();
         inputs.clear();
@@ -1089,6 +1554,40 @@ fn stepper_loop(backend: &mut dyn SnnBackend, decoder: &TraceDecoder, shared: &S
         let mut m = shared.metrics.lock().unwrap();
         m.incr("batch_steps");
         m.observe("batch_size", slots.len() as f64);
+        drop(m);
+
+        if let Some(deadline) = tick_deadline {
+            // A fired OverloadBurst is a synthetic overrun: the soak
+            // drives shed/restore deterministically through it.
+            let burst = plan
+                .as_ref()
+                .is_some_and(|p| p.fire(FaultSite::OverloadBurst));
+            if burst || tick_start.elapsed() > deadline {
+                overruns += 1;
+                clean = 0;
+            } else {
+                clean += 1;
+                overruns = 0;
+            }
+            if !shedding && overruns >= SHED_AFTER {
+                shedding = true;
+                let honoured = backend.set_plasticity_enabled(false);
+                shared.metrics.lock().unwrap().incr("serve_shed_transitions");
+                crate::log_warn!(
+                    "tick deadline overrun ×{overruns}: shedding load — plasticity {} \
+                     (θ untouched; serving continues on fixed weights)",
+                    if honoured { "frozen" } else { "not present (fixed backend)" }
+                );
+            } else if shedding && clean >= RESTORE_AFTER {
+                shedding = false;
+                backend.set_plasticity_enabled(true);
+                shared.metrics.lock().unwrap().incr("serve_shed_restores");
+                crate::log_info!("tick deadline clean ×{clean}: plasticity restored");
+            }
+            if shedding {
+                shared.metrics.lock().unwrap().incr("serve_shed_ticks");
+            }
+        }
     }
 }
 
@@ -1403,6 +1902,232 @@ mod tests {
         drop(c);
         drop(keeper);
         handle.join().unwrap();
+    }
+
+    /// Job-enabled server on an ephemeral port; the join handle yields
+    /// the shared metrics registry for post-mortem assertions.
+    fn spawn_job_server(
+        max_sessions: usize,
+        max_connections: Option<usize>,
+        tick_deadline: Option<Duration>,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> (
+        std::net::SocketAddr,
+        std::thread::JoinHandle<Arc<Mutex<Metrics>>>,
+    ) {
+        use crate::coordinator::jobs::{JobManagerConfig, JobModel};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let handle = std::thread::spawn(move || {
+            let mut server = ControlServer::with_config(
+                test_backend(),
+                6,
+                6,
+                ServerConfig {
+                    max_sessions,
+                    seed: 1,
+                    tick_deadline,
+                    ..ServerConfig::default()
+                },
+            );
+            let jobs = Arc::new(JobManager::with_metrics(
+                JobManagerConfig {
+                    queue_cap: 4,
+                    runners: 1,
+                    faults,
+                    ..JobManagerConfig::default()
+                },
+                server.metrics(),
+            ));
+            let cfg = {
+                let mut cfg = crate::snn::SnnConfig::control(48, 12);
+                cfg.n_hidden = 16;
+                cfg
+            };
+            let mut rng = Pcg64::new(0, 7);
+            let mut genome = vec![0.0f32; cfg.n_rule_params()];
+            rng.fill_normal_f32(&mut genome, 0.05);
+            let rule = NetworkRule::from_flat(&cfg, &genome);
+            jobs.install_model("cheetah-vel", JobModel::plastic(cfg, rule))
+                .unwrap();
+            server.attach_jobs(jobs);
+            server.serve(&addr.to_string(), max_connections).unwrap();
+            server.metrics()
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        (addr, handle)
+    }
+
+    /// `JOB SUBMIT` line for a small 8-scenario training grid.
+    fn small_grid_spec() -> String {
+        use crate::coordinator::jobs::{GridKind, JobSpec};
+        let mut s = JobSpec::new("cheetah-vel");
+        s.grid = GridKind::Train;
+        s.budget = Some(5);
+        s.batch = 4;
+        s.encode()
+    }
+
+    /// Read `total` ROW lines then the END line off a streaming reader.
+    fn read_rows(c: &mut Client, total: usize) -> Vec<String> {
+        let mut rows = Vec::new();
+        for i in 0..total {
+            c.line.clear();
+            c.reader.read_line(&mut c.line).unwrap();
+            assert!(c.line.starts_with(&format!("ROW {i} ")), "{}", c.line);
+            rows.push(c.line.trim().to_string());
+        }
+        c.line.clear();
+        c.reader.read_line(&mut c.line).unwrap();
+        assert!(c.line.starts_with("JOB END "), "{}", c.line);
+        rows.push(c.line.trim().to_string());
+        rows
+    }
+
+    #[test]
+    fn subscribe_streams_rows_then_closes() {
+        let (addr, handle) = spawn_job_server(2, None, None, None);
+        let mut c = Client::connect(addr);
+        let ok = c.round_trip(&format!("JOB SUBMIT {}", small_grid_spec()));
+        assert!(ok.starts_with("JOB OK id=1 total=8"), "{ok}");
+
+        let mut s = Client::connect(addr);
+        s.writer.write_all(b"JOB SUBSCRIBE 1\n").unwrap();
+        s.line.clear();
+        s.reader.read_line(&mut s.line).unwrap();
+        assert!(
+            s.line.starts_with("JOB SUBSCRIBE id=1 total=8 from=0"),
+            "{}",
+            s.line
+        );
+        let rows = read_rows(&mut s, 8);
+        assert!(rows[8].starts_with("JOB END id=1 state=done"), "{}", rows[8]);
+        // The hub closes a SUBSCRIBE connection after END.
+        s.line.clear();
+        let n = s.reader.read_line(&mut s.line).unwrap();
+        assert_eq!(n, 0, "expected EOF after JOB END, got {:?}", s.line);
+
+        assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+        drop(c);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn subscribe_resumes_from_a_cursor_bit_identically() {
+        let (addr, handle) = spawn_job_server(2, None, None, None);
+        let mut c = Client::connect(addr);
+        let ok = c.round_trip(&format!("JOB SUBMIT {}", small_grid_spec()));
+        assert!(ok.starts_with("JOB OK id=1"), "{ok}");
+
+        // Follower A sees the whole stream.
+        let mut a = Client::connect(addr);
+        a.writer.write_all(b"JOB SUBSCRIBE 1\n").unwrap();
+        a.line.clear();
+        a.reader.read_line(&mut a.line).unwrap();
+        let full = read_rows(&mut a, 8);
+
+        // Follower B joins late with a cursor — as a cut subscriber
+        // would on reconnect — and must see the identical tail bytes.
+        let mut b = Client::connect(addr);
+        b.writer.write_all(b"JOB SUBSCRIBE 1 from=5\n").unwrap();
+        b.line.clear();
+        b.reader.read_line(&mut b.line).unwrap();
+        assert!(
+            b.line.starts_with("JOB SUBSCRIBE id=1 total=8 from=5"),
+            "{}",
+            b.line
+        );
+        for i in 5..8 {
+            b.line.clear();
+            b.reader.read_line(&mut b.line).unwrap();
+            assert_eq!(b.line.trim(), full[i], "resumed row {i} must be bit-identical");
+        }
+        b.line.clear();
+        b.reader.read_line(&mut b.line).unwrap();
+        assert_eq!(b.line.trim(), full[8], "END summary must be bit-identical");
+
+        // A cursor past the grid is a typed error, not a hang.
+        let mut bad = Client::connect(addr);
+        let err = bad.round_trip("JOB SUBSCRIBE 1 from=99");
+        assert!(err.starts_with("ERR job-bad-spec from=99"), "{err}");
+        assert!(bad
+            .round_trip("JOB SUBSCRIBE 1 extra=1")
+            .starts_with("ERR job-bad-spec"));
+        drop(bad);
+
+        assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+        drop(c);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn results_streaming_frees_the_slot_for_interleaved_requests() {
+        // ONE session slot: before the stream hub, `JOB RESULTS` parked
+        // the handler (and its slot) for the whole stream, so any other
+        // client bounced off `ERR server full` until the job finished.
+        let (addr, handle) = spawn_job_server(1, None, None, None);
+        let mut c1 = Client::connect(addr);
+        let ok = c1.round_trip(&format!("JOB SUBMIT {}", small_grid_spec()));
+        assert!(ok.starts_with("JOB OK id=1 total=8"), "{ok}");
+        c1.writer.write_all(b"JOB RESULTS 1\n").unwrap();
+        c1.line.clear();
+        c1.reader.read_line(&mut c1.line).unwrap();
+        assert!(c1.line.starts_with("JOB RESULTS id=1 total=8"), "{}", c1.line);
+
+        // The streaming connection holds no slot: a second client gets
+        // the single slot and full service mid-stream.
+        let mut c2 = Client::connect(addr);
+        assert_eq!(c2.round_trip("PING"), "PONG");
+        assert!(c2
+            .round_trip("OBS 0.1,0.2,0.3,0.4,0.5,1.0")
+            .starts_with("ACT "));
+        assert!(c2
+            .round_trip("JOB STATUS 1")
+            .starts_with("JOB STATUS id=1"));
+        drop(c2);
+
+        // c1 still receives every row + END…
+        let rows = read_rows(&mut c1, 8);
+        assert!(rows[8].starts_with("JOB END id=1 state=done"), "{}", rows[8]);
+        // …and the connection is re-dispatched (read-ahead carried), so
+        // follow-up verbs keep working on it.
+        let status = c1.round_trip("JOB STATUS 1");
+        assert!(status.starts_with("JOB STATUS id=1 state=done"), "{status}");
+        assert_eq!(c1.round_trip("SHUTDOWN"), "OK draining");
+        drop(c1);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn tick_deadline_overruns_shed_then_restore_plasticity() {
+        // Synthetic overload: OverloadBurst fires on the first three
+        // serving ticks (= SHED_AFTER), then never again, so eight
+        // clean ticks later plasticity is restored. The 1s deadline is
+        // never genuinely overrun — the schedule is fully explicit.
+        let plan = Arc::new(FaultPlan::new().at(FaultSite::OverloadBurst, &[0, 1, 2]));
+        let (addr, handle) = spawn_job_server(
+            2,
+            None,
+            Some(Duration::from_secs(1)),
+            Some(Arc::clone(&plan)),
+        );
+        let mut c = Client::connect(addr);
+        for _ in 0..15 {
+            assert!(c
+                .round_trip("OBS 0.1,0.2,0.3,0.4,0.5,1.0")
+                .starts_with("ACT "));
+        }
+        assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+        drop(c);
+        let metrics = handle.join().unwrap();
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.count("serve_shed_transitions"), 1, "one shed transition");
+        assert_eq!(m.count("serve_shed_restores"), 1, "one restore");
+        // Shed from tick 3 (the transition tick counts) through tick 10
+        // (the restore happens before tick 11 is counted).
+        assert_eq!(m.count("serve_shed_ticks"), 8);
+        plan.assert_exhausted();
     }
 
     #[test]

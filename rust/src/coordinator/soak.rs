@@ -1,0 +1,597 @@
+//! Chaos-soak harness (DESIGN.md §Durability-and-Faults): the whole
+//! serving + jobs + streaming stack, end to end over real TCP, driven
+//! through a long **seeded composed-fault schedule** — and held to the
+//! strictest contract the system makes: *faults may cost latency,
+//! never data*.
+//!
+//! A soak runs in two phases:
+//!
+//! 1. **Witness** — the same job specs on a fault-free server, one
+//!    subscriber per job. Its streamed `ROW`/`JOB END` lines are the
+//!    ground truth.
+//! 2. **Chaos** — the same specs again with the caller's [`FaultPlan`]
+//!    armed: subscriber cuts mid-push, checkpoint-write IO errors,
+//!    scheduler stalls, mid-sweep interrupts (each resumed from its
+//!    batch-aligned checkpoint), and synthetic serving-tick overruns
+//!    that trip the load-shedding watchdog. Every follower that is cut
+//!    reconnects with `JOB SUBSCRIBE <id> from=<row>` and stitches its
+//!    transcript back together.
+//!
+//! [`run_soak`] then asserts, in one place:
+//!
+//! - **No lost or duplicated rows**: every subscriber's row indices
+//!   arrive strictly sequentially from its cursor (checked on the fly),
+//!   across any number of cuts and resumes.
+//! - **Bit-identity**: each job's stitched chaos transcript — row bytes
+//!   *and* the final `JOB END` summary — equals the fault-free witness
+//!   exactly, and all subscribers of a job agree.
+//! - **Slot reclamation**: after the streams finish, the full session
+//!   table is allocatable again by concurrent fresh clients.
+//! - **Counter consistency**: [`Metrics::job_counters_consistent`]
+//!   holds at quiescence, with every scheduled fault actually fired
+//!   ([`FaultPlan::assert_exhausted`]).
+//!
+//! The serving-path zero-allocation pin for soak windows lives with the
+//! counting allocator in `tests/alloc_free_serving.rs`; the composed
+//! scenario itself is exercised by `tests/soak_composed_faults.rs`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::backend::NativeBackend;
+use crate::coordinator::jobs::{
+    GridKind, JobManager, JobManagerConfig, JobModel, JobSpec, Precision,
+};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::server::{ControlServer, ServerConfig};
+use crate::env::make_env;
+use crate::es::eval::NEURONS_PER_DIM;
+use crate::snn::{NetworkRule, SnnConfig};
+use crate::util::faults::FaultPlan;
+use crate::util::rng::Pcg64;
+
+/// Environment family every soak job sweeps (8-task training grid).
+const ENV: &str = "cheetah-vel";
+
+/// A serving-plane request the orchestrator interleaves with the chaos.
+const OBS_LINE: &str = "OBS 0.1,0.2,0.3,-0.4,0.5,1.0";
+
+/// Hard wall-clock bound per phase — a stuck subscriber or job is a
+/// failure, not a hang.
+const PHASE_DEADLINE: Duration = Duration::from_secs(120);
+
+/// Shape of one soak run. The [`Default`] matches the acceptance floor
+/// of the composed-fault suite: 8 concurrent jobs, 3 subscribers each,
+/// fair-share scheduling on.
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    /// Base seed: job specs derive per-job seeds from it.
+    pub seed: u64,
+    /// Concurrent grid jobs (each an 8-scenario training sweep).
+    pub jobs: usize,
+    /// `JOB SUBSCRIBE` followers per job.
+    pub subscribers_per_job: usize,
+    /// Env steps per scenario (small keeps a soak CI-sized).
+    pub budget: usize,
+    /// Sub-batch width — the checkpoint/interrupt granularity.
+    pub batch: usize,
+    /// Job-runner threads.
+    pub runners: usize,
+    /// Serving session slots.
+    pub max_sessions: usize,
+    /// Fair-share runner scheduling (`JobManagerConfig::fair_share`).
+    pub fair_share: bool,
+    /// Deadline-aware admission bound. Generous by default: the soak
+    /// exercises the gate's bookkeeping without rejecting its own jobs.
+    pub admission_wait: Option<Duration>,
+    /// Serving-tick deadline: needed for the chaos phase to drive the
+    /// load-shedding watchdog via `FaultSite::OverloadBurst`.
+    pub tick_deadline: Option<Duration>,
+    /// Serving `OBS` ticks the orchestrator interleaves (each is one
+    /// stepper tick — the overload schedule counts these).
+    pub obs_ticks: usize,
+    /// The composed fault schedule (chaos phase only; the witness phase
+    /// always runs clean).
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Durable checkpoint directory for the chaos phase.
+    pub job_dir: Option<PathBuf>,
+}
+
+impl Default for SoakConfig {
+    fn default() -> Self {
+        SoakConfig {
+            seed: 42,
+            jobs: 8,
+            subscribers_per_job: 3,
+            budget: 5,
+            batch: 4,
+            runners: 2,
+            max_sessions: 8,
+            fair_share: true,
+            admission_wait: Some(Duration::from_secs(30)),
+            tick_deadline: None,
+            obs_ticks: 0,
+            faults: None,
+            job_dir: None,
+        }
+    }
+}
+
+/// What a soak run survived — the test suite asserts on top of the
+/// invariants [`run_soak`] has already enforced internally.
+#[derive(Debug, Default)]
+pub struct SoakReport {
+    /// Logical jobs driven to `done` (through any interrupts).
+    pub jobs: usize,
+    /// Verified transcript lines across all jobs (rows + END lines).
+    pub rows: usize,
+    /// Subscribe streams opened in the chaos phase (incl. reconnects).
+    pub streams: usize,
+    /// Streams that ended early (cut or interrupted) and were resumed
+    /// from their cursor.
+    pub reconnects: usize,
+    /// Interrupted jobs resumed from their batch-aligned checkpoint.
+    pub resumes: usize,
+    /// Load-shed transitions observed on the serving plane.
+    pub shed_transitions: u64,
+    /// Plasticity restores after shedding.
+    pub shed_restores: u64,
+    /// Followers the stream hub dropped on a dead socket.
+    pub stream_drops: u64,
+}
+
+/// Everything one phase (witness or chaos) produced.
+struct PhaseOutcome {
+    /// Stitched, verified transcript per logical job (8 `ROW` lines +
+    /// the final `JOB END`).
+    rows_per_job: Vec<Vec<String>>,
+    streams: usize,
+    reconnects: usize,
+    resumes: usize,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+/// Run the two-phase soak and enforce every invariant listed in the
+/// module docs. Panics with a diagnostic on any violation — callers
+/// only see a [`SoakReport`] for a run that held the full contract.
+pub fn run_soak(cfg: &SoakConfig) -> SoakReport {
+    let mut witness_cfg = cfg.clone();
+    witness_cfg.faults = None;
+    witness_cfg.tick_deadline = None;
+    witness_cfg.obs_ticks = 0;
+    witness_cfg.subscribers_per_job = 1;
+    witness_cfg.job_dir = None;
+    let witness = run_phase(&witness_cfg);
+
+    let chaos = run_phase(cfg);
+
+    // The headline invariant: chaos cost latency, not data.
+    assert_eq!(witness.rows_per_job.len(), chaos.rows_per_job.len());
+    for (j, (w, c)) in witness.rows_per_job.iter().zip(&chaos.rows_per_job).enumerate() {
+        assert_eq!(w, c, "job {j}: stitched chaos transcript differs from the witness");
+    }
+    // Every scheduled fault must actually have fired — a plan the run
+    // outpaced would soak nothing.
+    if let Some(plan) = &cfg.faults {
+        plan.assert_exhausted();
+    }
+    let m = chaos.metrics.lock().unwrap();
+    SoakReport {
+        jobs: cfg.jobs,
+        rows: chaos.rows_per_job.iter().map(|r| r.len()).sum(),
+        streams: chaos.streams,
+        reconnects: chaos.reconnects,
+        resumes: chaos.resumes,
+        shed_transitions: m.count("serve_shed_transitions"),
+        shed_restores: m.count("serve_shed_restores"),
+        stream_drops: m.count("job_stream_drops"),
+    }
+}
+
+/// The spec of logical job `j` — identical between phases (that is the
+/// point), spread over three fair-share clients and weights.
+fn job_spec(cfg: &SoakConfig, j: usize) -> JobSpec {
+    let mut s = JobSpec::new(ENV);
+    s.grid = GridKind::Train;
+    s.budget = Some(cfg.budget);
+    s.seed = cfg.seed ^ (j as u64).wrapping_mul(0x9E37_79B9);
+    s.batch = cfg.batch;
+    s.threads = 1;
+    s.prec = Precision::F32;
+    s.client = format!("client-{}", j % 3);
+    s.weight = 1 + (j % 3) as u32;
+    s
+}
+
+/// One serving stack, `cfg.jobs` submissions, all subscribers driven to
+/// a `done` END, then a clean drain. Asserts row sequencing, intra-job
+/// transcript agreement, slot reclamation and counter consistency.
+fn run_phase(cfg: &SoakConfig) -> PhaseOutcome {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind soak listener");
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+
+    // The backend (and thus the server) is not Send — build the whole
+    // stack on the server thread and hand the metrics handle back when
+    // serve() returns after the orchestrator's SHUTDOWN.
+    let server_thread = {
+        let cfg = cfg.clone();
+        std::thread::Builder::new()
+            .name("soak-server".into())
+            .spawn(move || {
+                let env = make_env(ENV).expect("soak env");
+                let mut net_cfg =
+                    SnnConfig::control(env.obs_dim() * NEURONS_PER_DIM, 2 * env.act_dim());
+                net_cfg.n_hidden = 8;
+                let rule = {
+                    let mut rng = Pcg64::new(cfg.seed, 0x50AC);
+                    let mut flat = vec![0.0f32; net_cfg.n_rule_params()];
+                    rng.fill_normal_f32(&mut flat, 0.05);
+                    NetworkRule::from_flat(&net_cfg, &flat)
+                };
+                let backend = Box::new(NativeBackend::plastic(net_cfg.clone(), rule.clone()));
+                let mut server = ControlServer::with_config(
+                    backend,
+                    env.obs_dim(),
+                    env.act_dim(),
+                    ServerConfig {
+                        max_sessions: cfg.max_sessions,
+                        seed: cfg.seed,
+                        tick_deadline: cfg.tick_deadline,
+                        ..ServerConfig::default()
+                    },
+                );
+                let jobs = Arc::new(JobManager::with_metrics(
+                    JobManagerConfig {
+                        queue_cap: cfg.jobs + 4,
+                        runners: cfg.runners,
+                        job_dir: cfg.job_dir.clone(),
+                        faults: cfg.faults.clone(),
+                        fair_share: cfg.fair_share,
+                        admission_wait: cfg.admission_wait,
+                    },
+                    server.metrics(),
+                ));
+                jobs.install_model(ENV, JobModel::plastic(net_cfg, rule))
+                    .expect("install soak model");
+                server.attach_jobs(jobs);
+                server.serve(&addr.to_string(), None).expect("soak serve");
+                server.metrics()
+            })
+            .expect("spawn soak server")
+    };
+
+    // The orchestrator holds one session for submissions, resumes and
+    // interleaved control ticks.
+    let mut orch = Client::connect_retry(addr);
+
+    // current[j] = the wire id logical job j lives under right now
+    // (resume re-admits an interrupted sweep under a fresh id).
+    let current: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    {
+        let mut ids = current.lock().unwrap();
+        for j in 0..cfg.jobs {
+            let id = orch.submit_with_retry(&job_spec(cfg, j));
+            ids.push(id);
+        }
+    }
+
+    let streams = Arc::new(AtomicUsize::new(0));
+    let reconnects = Arc::new(AtomicUsize::new(0));
+    let mut subs = Vec::new();
+    for j in 0..cfg.jobs {
+        for s in 0..cfg.subscribers_per_job {
+            let current = Arc::clone(&current);
+            let streams = Arc::clone(&streams);
+            let reconnects = Arc::clone(&reconnects);
+            subs.push(
+                std::thread::Builder::new()
+                    .name(format!("soak-sub-{j}-{s}"))
+                    .spawn(move || follow_job(addr, j, &current, &streams, &reconnects))
+                    .expect("spawn soak subscriber"),
+            );
+        }
+    }
+
+    // Serving plane under load: each tick is one stepper batch, which
+    // is what the OverloadBurst schedule (and the shed watchdog)
+    // counts.
+    for _ in 0..cfg.obs_ticks {
+        let act = orch.round_trip(OBS_LINE);
+        assert!(act.starts_with("ACT "), "soak OBS tick failed: {act}");
+    }
+
+    // Drive every logical job to `done`, resuming interrupts as they
+    // land. Failed/cancelled jobs are a soak violation — the composed
+    // schedule only contains recoverable faults.
+    let deadline = Instant::now() + PHASE_DEADLINE;
+    let mut resumes = 0usize;
+    loop {
+        let mut all_done = true;
+        for j in 0..cfg.jobs {
+            let id = current.lock().unwrap()[j];
+            let st = orch.round_trip(&format!("JOB STATUS {id}"));
+            assert!(st.starts_with("JOB OK id="), "{st}");
+            match kv(&st, "state") {
+                "done" => {}
+                "interrupted" => {
+                    all_done = false;
+                    let ok = orch.round_trip(&format!("JOB SUBMIT resume={id}"));
+                    if let Some(rest) = ok.strip_prefix("JOB OK id=") {
+                        let new_id = rest.split_whitespace().next().unwrap().parse().unwrap();
+                        current.lock().unwrap()[j] = new_id;
+                        resumes += 1;
+                    } else {
+                        assert!(
+                            ok.starts_with("ERR overloaded"),
+                            "soak resume of job {j} (id {id}) refused: {ok}"
+                        );
+                    }
+                }
+                "queued" | "running" => all_done = false,
+                other => panic!("soak job {j} (id {id}) reached {other}: {st}"),
+            }
+        }
+        if all_done {
+            break;
+        }
+        assert!(Instant::now() < deadline, "soak jobs stuck past the phase deadline");
+        std::thread::sleep(Duration::from_millis(3));
+    }
+
+    // Collect and cross-check the transcripts: all subscribers of a
+    // job must have stitched the identical byte sequence.
+    let mut transcripts: Vec<Vec<String>> = Vec::new();
+    for handle in subs {
+        transcripts.push(handle.join().expect("soak subscriber panicked"));
+    }
+    let mut rows_per_job = Vec::with_capacity(cfg.jobs);
+    for j in 0..cfg.jobs {
+        let base = &transcripts[j * cfg.subscribers_per_job];
+        for s in 1..cfg.subscribers_per_job {
+            assert_eq!(
+                base,
+                &transcripts[j * cfg.subscribers_per_job + s],
+                "job {j}: subscriber {s} stitched a different transcript"
+            );
+        }
+        rows_per_job.push(base.clone());
+    }
+
+    // Slot reclamation: with the streams gone, the rest of the session
+    // table must be allocatable concurrently (the orchestrator still
+    // holds one slot).
+    let fresh: Vec<Client> = (0..cfg.max_sessions - 1)
+        .map(|_| Client::connect_retry(addr))
+        .collect();
+    for mut c in fresh {
+        assert_eq!(c.round_trip("PING"), "PONG", "slot not reclaimed after soak");
+    }
+
+    // Graceful wire shutdown: serve() returns once the orchestrator's
+    // connection (the last live one) closes, and hands metrics back.
+    assert_eq!(orch.round_trip("SHUTDOWN"), "OK draining");
+    drop(orch);
+    let metrics = server_thread.join().expect("soak server thread panicked");
+
+    metrics
+        .lock()
+        .unwrap()
+        .job_counters_consistent()
+        .expect("soak job counters inconsistent at quiescence");
+
+    PhaseOutcome {
+        rows_per_job,
+        streams: streams.load(Ordering::SeqCst),
+        reconnects: reconnects.load(Ordering::SeqCst),
+        resumes,
+        metrics,
+    }
+}
+
+/// One subscriber: follow logical job `j` to a `done` END, reconnecting
+/// from its cursor across cuts, interrupts and id changes. Returns the
+/// stitched transcript and asserts strict row sequencing on the way.
+fn follow_job(
+    addr: std::net::SocketAddr,
+    j: usize,
+    current: &Mutex<Vec<u64>>,
+    streams: &AtomicUsize,
+    reconnects: &AtomicUsize,
+) -> Vec<String> {
+    let deadline = Instant::now() + PHASE_DEADLINE;
+    let mut rows: Vec<String> = Vec::new();
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "subscriber of job {j} stuck at row {} past the phase deadline",
+            rows.len()
+        );
+        let id = current.lock().unwrap()[j];
+        let mut c = match Client::try_connect(addr) {
+            Some(c) => c,
+            None => {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+        };
+        let header = c.round_trip(&format!("JOB SUBSCRIBE {id} from={}", rows.len()));
+        if header.starts_with("ERR server full") || header.is_empty() {
+            // All slots briefly busy with handshakes — try again.
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        assert!(
+            header.starts_with(&format!("JOB SUBSCRIBE id={id} total=")),
+            "job {j}: bad subscribe header {header:?}"
+        );
+        streams.fetch_add(1, Ordering::SeqCst);
+        let interrupted = loop {
+            let line = c.recv();
+            if line.is_empty() {
+                // Cut mid-push (or server-side drop): stitch from the
+                // cursor on a fresh connection.
+                break true;
+            }
+            if let Some(rest) = line.strip_prefix("ROW ") {
+                let idx: usize = rest
+                    .split_whitespace()
+                    .next()
+                    .and_then(|t| t.parse().ok())
+                    .unwrap_or_else(|| panic!("job {j}: unparseable row {line:?}"));
+                assert_eq!(
+                    idx,
+                    rows.len(),
+                    "job {j}: row lost or duplicated (got {idx}, expected {})",
+                    rows.len()
+                );
+                rows.push(line);
+            } else if line.starts_with("JOB END ") {
+                if kv(&line, "state") == "done" {
+                    rows.push(line);
+                    return rows;
+                }
+                // Interrupted mid-sweep: the orchestrator resumes it
+                // under a new id; re-subscribe from the cursor.
+                break true;
+            } else {
+                panic!("job {j}: unexpected stream line {line:?}");
+            }
+        };
+        if interrupted {
+            reconnects.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}
+
+/// `key=value` field extraction from a wire line.
+fn kv<'a>(line: &'a str, key: &str) -> &'a str {
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key).and_then(|v| v.strip_prefix('=')))
+        .unwrap_or_else(|| panic!("no {key}= field in {line:?}"))
+}
+
+/// Minimal line-oriented client for the soak's own traffic.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    line: String,
+}
+
+impl Client {
+    fn try_connect(addr: std::net::SocketAddr) -> Option<Client> {
+        let stream = TcpStream::connect(addr).ok()?;
+        Some(Client {
+            reader: BufReader::new(stream.try_clone().ok()?),
+            writer: stream,
+            line: String::new(),
+        })
+    }
+
+    /// Connect, retrying through bind/accept races at startup.
+    fn connect_retry(addr: std::net::SocketAddr) -> Client {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if let Some(c) = Client::try_connect(addr) {
+                return c;
+            }
+            assert!(Instant::now() < deadline, "soak server never came up");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// One response line; empty string on EOF or a connection error.
+    fn recv(&mut self) -> String {
+        self.line.clear();
+        match self.reader.read_line(&mut self.line) {
+            Ok(_) => self.line.trim().to_string(),
+            Err(_) => String::new(),
+        }
+    }
+
+    fn round_trip(&mut self, req: &str) -> String {
+        if self.writer.write_all(req.as_bytes()).is_err()
+            || self.writer.write_all(b"\n").is_err()
+        {
+            return String::new();
+        }
+        self.recv()
+    }
+
+    /// Submit a spec, honouring `ERR overloaded retry-ms=<n>` hints.
+    fn submit_with_retry(&mut self, spec: &JobSpec) -> u64 {
+        let deadline = Instant::now() + PHASE_DEADLINE;
+        loop {
+            let ok = self.round_trip(&format!("JOB SUBMIT {}", spec.encode()));
+            if let Some(rest) = ok.strip_prefix("JOB OK id=") {
+                return rest.split_whitespace().next().unwrap().parse().unwrap();
+            }
+            assert!(
+                ok.starts_with("ERR overloaded") || ok.starts_with("ERR job-queue-full"),
+                "soak submit refused: {ok}"
+            );
+            assert!(Instant::now() < deadline, "soak submit stuck on admission");
+            let retry = ok
+                .split_whitespace()
+                .find_map(|tok| tok.strip_prefix("retry-ms="))
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(5);
+            std::thread::sleep(Duration::from_millis(retry));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::faults::FaultSite;
+
+    /// Smallest meaningful soak: clean witness + clean "chaos" (no
+    /// faults) must agree with itself — the harness's own plumbing
+    /// (submission, subscription, stitching, drain) is what's under
+    /// test here. The composed-fault runs live in
+    /// `tests/soak_composed_faults.rs`.
+    #[test]
+    fn clean_soak_round_trips_and_reports() {
+        let cfg = SoakConfig {
+            jobs: 2,
+            subscribers_per_job: 2,
+            budget: 3,
+            batch: 4,
+            max_sessions: 4,
+            ..SoakConfig::default()
+        };
+        let report = run_soak(&cfg);
+        assert_eq!(report.jobs, 2);
+        // 8 rows + 1 END per job.
+        assert_eq!(report.rows, 2 * 9);
+        assert_eq!(report.resumes, 0);
+        assert_eq!(report.reconnects, 0);
+        assert_eq!(report.streams, 2 * 2);
+    }
+
+    /// One targeted cut: the subscriber must reconnect from its cursor
+    /// and still stitch the witness-identical transcript.
+    #[test]
+    fn single_subscriber_cut_is_stitched_over() {
+        let plan = Arc::new(FaultPlan::new().at(FaultSite::SubscriberCut, &[1]));
+        let cfg = SoakConfig {
+            jobs: 1,
+            subscribers_per_job: 1,
+            budget: 3,
+            batch: 4,
+            max_sessions: 4,
+            faults: Some(Arc::clone(&plan)),
+            ..SoakConfig::default()
+        };
+        let report = run_soak(&cfg);
+        assert_eq!(report.rows, 9);
+        assert!(report.reconnects >= 1, "the cut must have forced a resume");
+        assert_eq!(report.stream_drops, 1, "the hub dropped the cut follower");
+    }
+}

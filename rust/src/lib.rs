@@ -16,16 +16,11 @@
 //! See `DESIGN.md` for the architecture inventory and `EXPERIMENTS.md`
 //! for the paper-vs-measured record.
 
-// Public API documentation is enforced crate-wide. Modules that still
-// carry documentation debt opt out locally with an explicit
-// `#![allow(missing_docs)]` + debt note; `snn/` and `backend/` (the
-// serving surface) are fully documented.
+// Public API documentation is enforced crate-wide, with no module-level
+// opt-outs left: the documentation debt burn-down finished with mnist
+// and baselines.
 #![warn(missing_docs)]
 
-// Documentation debt: the serving surface (snn, backend, coordinator),
-// the environments (env), the ES optimizers (es), the FPGA model (fpga),
-// the runtime and the whole util foundation are fully documented; only
-// mnist and baselines still opt out (tracked in ROADMAP.md).
 pub mod util;
 
 pub mod snn;
@@ -35,8 +30,6 @@ pub mod fpga;
 pub mod runtime;
 pub mod backend;
 pub mod coordinator;
-#[allow(missing_docs)]
 pub mod mnist;
-#[allow(missing_docs)]
 pub mod baselines;
 

@@ -143,6 +143,27 @@ fn parser() -> Parser {
                  (0 = never; the session slot is reclaimed either way)",
                 "0",
             ),
+            flag(
+                "fair-share",
+                "weighted start-time fair queuing across (family, client) \
+                 lanes for job runners instead of strict FIFO; per-spec \
+                 weight=<n> scales a lane's share",
+            ),
+            opt(
+                "admission-wait-ms",
+                "deadline-aware job admission: refuse JOB SUBMIT with a typed \
+                 `ERR overloaded retry-ms=<n>` when the queue's projected \
+                 wait exceeds this bound (0 = admit until --job-queue fills)",
+                "0",
+            ),
+            opt(
+                "tick-deadline-us",
+                "serving-tick deadline in microseconds: sustained overruns \
+                 shed plasticity (fixed-weights serving) until the stepper \
+                 catches up, then restore automatically; 0 disables the \
+                 watchdog",
+                "0",
+            ),
         ],
     )
     .command(
@@ -578,6 +599,7 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
         Box::new(ReplicatedBackend::from_instances(instances))
     };
     let read_timeout_ms = args.get_usize("read-timeout-ms", 0);
+    let tick_deadline_us = args.get_usize("tick-deadline-us", 0);
     let mut server = ControlServer::with_config(
         backend,
         obs_dim,
@@ -588,6 +610,8 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
             max_line: args.get_usize("line-cap", 64 * 1024).max(16),
             read_timeout: (read_timeout_ms > 0)
                 .then(|| std::time::Duration::from_millis(read_timeout_ms as u64)),
+            tick_deadline: (tick_deadline_us > 0)
+                .then(|| std::time::Duration::from_micros(tick_deadline_us as u64)),
         },
     );
     // Adaptation-as-a-service: JOB verbs run grid sweeps on dedicated
@@ -603,11 +627,15 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
                 return 1;
             }
         }
+        let admission_wait_ms = args.get_usize("admission-wait-ms", 0);
         let jobs = Arc::new(JobManager::with_metrics(
             JobManagerConfig {
                 queue_cap: args.get_usize("job-queue", 8).max(1),
                 runners: job_threads,
                 job_dir,
+                fair_share: args.flag("fair-share"),
+                admission_wait: (admission_wait_ms > 0)
+                    .then(|| std::time::Duration::from_millis(admission_wait_ms as u64)),
                 ..Default::default()
             },
             server.metrics(),

@@ -9,8 +9,11 @@
 
 use crate::util::rng::Pcg64;
 
+/// Rendered image side length (MNIST-shaped: 28×28).
 pub const IMG_SIDE: usize = 28;
+/// Pixels per image — the SNN input dimensionality (784).
 pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+/// Digit classes (0–9).
 pub const N_CLASSES: usize = 10;
 
 /// 7×7 glyph templates ('#' = stroke).
@@ -40,7 +43,9 @@ const TEMPLATES: [&str; 10] = [
 /// One labeled image.
 #[derive(Clone, Debug)]
 pub struct Sample {
-    pub pixels: Vec<f32>, // 784, in [0, 1]
+    /// [`IMG_PIXELS`] intensities in `[0, 1]`, row-major.
+    pub pixels: Vec<f32>,
+    /// Digit class in `0..N_CLASSES`.
     pub label: usize,
 }
 

@@ -25,10 +25,18 @@ use crate::util::rng::Pcg64;
 pub enum UpdateRule {
     /// FireFly-P: four shared coefficients per layer
     /// `[α, β, γ, δ]` (L1) + `[α, β, γ, δ]` (L2).
-    Learnable { theta: [f32; 8] },
+    Learnable {
+        /// The 8 learned coefficients, L1 then L2.
+        theta: [f32; 8],
+    },
     /// Classic pair-based STDP (the [35]/[37]-style baseline):
     /// Δw = a_plus·S_j·s_i − a_minus·S_i·s_j.
-    PairStdp { a_plus: f32, a_minus: f32 },
+    PairStdp {
+        /// Potentiation gain on a postsynaptic spike.
+        a_plus: f32,
+        /// Depression gain on a presynaptic spike.
+        a_minus: f32,
+    },
 }
 
 impl UpdateRule {
@@ -49,6 +57,7 @@ impl UpdateRule {
         }
     }
 
+    /// The hand-tuned pair-STDP baseline operating point.
     pub fn pair_stdp_default() -> UpdateRule {
         UpdateRule::PairStdp {
             a_plus: 0.6,
@@ -57,13 +66,17 @@ impl UpdateRule {
     }
 }
 
+/// Geometry and learning hyper-parameters of the online classifier.
 #[derive(Clone, Debug)]
 pub struct MnistConfig {
+    /// Hidden-layer width (paper: 1024).
     pub hidden: usize,
     /// Timesteps per image presentation (paper's 32-FPS figure implies
     /// ~31 timesteps/frame at the measured per-step latency).
     pub t_present: usize,
+    /// Peak Poisson rate of the pixel-intensity encoder.
     pub max_rate: f64,
+    /// Feature-layer (L1) learning rate.
     pub eta: f32,
     /// Readout learning rate (L2) — much smaller than eta: the
     /// presynaptic-depression term touches *every* class column on
@@ -85,9 +98,11 @@ pub struct MnistConfig {
     /// co-active hidden units must land near threshold, not blow past
     /// it (otherwise every class saturates and ties).
     pub w_clip2: f32,
+    /// Hidden-layer spike threshold.
     pub v_th: f32,
+    /// Trace decay factor shared by all three trace vectors.
     pub lambda: f32,
-    /// Teacher current strength (spikes forced on the label neuron).
+    /// RNG seed (weight init + Poisson encoding + epoch shuffling).
     pub seed: u64,
 }
 
@@ -111,6 +126,7 @@ impl Default for MnistConfig {
 }
 
 impl MnistConfig {
+    /// A 128-hidden instance small enough for unit tests.
     pub fn small_test() -> Self {
         MnistConfig {
             hidden: 128,
@@ -126,7 +142,9 @@ impl MnistConfig {
 /// takes an external teaching signal — on the FPGA this is just another
 /// spike line into the Trace Update Unit).
 pub struct OnlineMnist {
+    /// The hyper-parameters this instance was built with.
     pub cfg: MnistConfig,
+    /// The active synaptic-update rule.
     pub rule: UpdateRule,
     w1: Vec<f32>, // 784 × hidden
     w2: Vec<f32>, // hidden × 10
@@ -137,10 +155,12 @@ pub struct OnlineMnist {
     t_out: Vec<f32>,
     encoder: RateEncoder,
     rng: Pcg64,
+    /// Images presented so far (training and test alike).
     pub images_seen: u64,
 }
 
 impl OnlineMnist {
+    /// Build a trainer with seeded sparse random receptive fields.
     pub fn new(cfg: MnistConfig, rule: UpdateRule) -> OnlineMnist {
         let h = cfg.hidden;
         let mut rng = Pcg64::new(cfg.seed, 0x33);
@@ -407,6 +427,7 @@ impl OnlineMnist {
         }
     }
 
+    /// Classification accuracy over `test` (teacher off).
     pub fn accuracy(&mut self, test: &[Sample]) -> f64 {
         if test.is_empty() {
             return 0.0;
@@ -493,17 +514,22 @@ mod tests {
 }
 
 impl OnlineMnist {
-    /// Debug helpers (used by examples/diagnostics).
+    /// Mean hidden-trace activity — a spiking-rate diagnostic.
     pub fn dbg_hidden_rate(&self) -> f32 {
         self.t_hid.iter().sum::<f32>() / self.t_hid.len() as f32
     }
+    /// Largest |w| in the feature layer (clip-saturation diagnostic).
     pub fn dbg_w1_absmax(&self) -> f32 {
         self.w1.iter().fold(0.0f32, |a, &w| a.max(w.abs()))
     }
+    /// Largest |w| in the readout layer (clip-saturation diagnostic).
     pub fn dbg_w2_absmax(&self) -> f32 {
         self.w2.iter().fold(0.0f32, |a, &w| a.max(w.abs()))
     }
-    pub fn dbg_w2(&self) -> &[f32] { &self.w2 }
+    /// Raw readout weights (hidden × 10, row-major).
+    pub fn dbg_w2(&self) -> &[f32] {
+        &self.w2
+    }
 }
 
 impl OnlineMnist {

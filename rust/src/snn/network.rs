@@ -233,6 +233,11 @@ pub struct SnnNetwork<S: Scalar> {
     /// unless event-driven gating
     /// ([`PlasticityConfig::presyn_gate`]) skipped silent rows.
     pub plasticity_rows_visited: [usize; 2],
+    /// Runtime plasticity gate (overload shedding): when `false`, a
+    /// plastic-mode step skips the rule sweep entirely — the per-session
+    /// weights freeze at their current values — while the forward pass,
+    /// membranes and traces step unchanged. Ignored in [`Mode::Fixed`].
+    plasticity_enabled: bool,
 }
 
 impl<S: Scalar> SnnNetwork<S> {
@@ -278,10 +283,28 @@ impl<S: Scalar> SnnNetwork<S> {
             out_bools: vec![false; n_o * batch],
             steps: 0,
             plasticity_rows_visited: [0, 0],
+            plasticity_enabled: true,
             batch,
             cfg,
             mode,
         }
+    }
+
+    /// Toggle the runtime plasticity gate (overload shedding, DESIGN.md
+    /// §Durability-and-Faults): `false` freezes the per-session weights
+    /// at their current values — the plastic rule sweep is skipped
+    /// entirely — while the forward pass, membranes and traces step
+    /// unchanged; `true` (the default) resumes online updates from the
+    /// frozen weights. The shared rule θ is read-only either way, so
+    /// toggling can never corrupt it. No effect in [`Mode::Fixed`].
+    pub fn set_plasticity_enabled(&mut self, on: bool) {
+        self.plasticity_enabled = on;
+    }
+
+    /// Whether the runtime plasticity gate is open (see
+    /// [`SnnNetwork::set_plasticity_enabled`]).
+    pub fn plasticity_enabled(&self) -> bool {
+        self.plasticity_enabled
     }
 
     /// Whether `w1`/`w2` are stored once and shared by every session
@@ -501,7 +524,7 @@ impl<S: Scalar> SnnNetwork<S> {
             .step_trace_masked(&self.cur_out, &mut self.trace_out, &self.active_words);
 
         // --- Plasticity (per-session weights, shared θ, word mask) ----
-        if let Mode::Plastic(rule) = &self.mode {
+        if let (Mode::Plastic(rule), true) = (&self.mode, self.plasticity_enabled) {
             // L1's pre-traces are the lazy input traces: their hot masks
             // (exact after the materialize_hot above) prefilter the gate
             // so fully-cold rows skip in one AND per word. L2's
@@ -532,6 +555,9 @@ impl<S: Scalar> SnnNetwork<S> {
                 &self.trace_out.values,
             );
             self.plasticity_rows_visited = [v1, v2];
+        } else {
+            // Gate closed (or fixed mode): no rows swept this tick.
+            self.plasticity_rows_visited = [0, 0];
         }
 
         self.steps += 1;

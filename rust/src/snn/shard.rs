@@ -175,6 +175,9 @@ impl<S: Scalar> ShardedNetwork<S> {
                 let cfg = self.shards[0].cfg.clone();
                 let mode = self.shards[0].mode.clone();
                 let mut fresh = SnnNetwork::new_batched(cfg, mode, lb);
+                // Late-materialized shards inherit the runtime
+                // plasticity gate so a shed server grows consistently.
+                fresh.set_plasticity_enabled(self.shards[0].plasticity_enabled());
                 if fresh.weights_shared() {
                     // Fixed mode stores one session-invariant weight
                     // copy per shard: a newly materialized shard
@@ -198,6 +201,22 @@ impl<S: Scalar> ShardedNetwork<S> {
             self.pool = Some(ThreadPool::new(self.stripes));
         }
         self.batch = new_batch;
+    }
+
+    /// Toggle the runtime plasticity gate on every shard (overload
+    /// shedding; see [`SnnNetwork::set_plasticity_enabled`]). Shards
+    /// materialized by a later [`ShardedNetwork::grow_batch`] inherit
+    /// the current setting.
+    pub fn set_plasticity_enabled(&mut self, on: bool) {
+        for shard in self.shards.iter_mut() {
+            shard.set_plasticity_enabled(on);
+        }
+    }
+
+    /// Whether the runtime plasticity gate is open (uniform across
+    /// shards by construction).
+    pub fn plasticity_enabled(&self) -> bool {
+        self.shards[0].plasticity_enabled()
     }
 
     /// Install fixed weights (baseline mode) from flat `[W1 ‖ W2]` into

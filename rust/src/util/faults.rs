@@ -35,15 +35,32 @@ pub enum FaultSite {
     /// batch-aligned checkpoint — the crash-recovery conformance
     /// tests' deterministic "kill -9 at the k-th batch boundary".
     InterruptAfterBatch = 3,
+    /// Server drops a `JOB SUBSCRIBE` follower mid-push (exercises the
+    /// cursor-resume path: the cut subscriber reconnects with
+    /// `from=<cursor>` and must see the remaining rows bit-identically,
+    /// with nothing lost or duplicated).
+    SubscriberCut = 4,
+    /// Serving stepper treats the tick as a deadline overrun even if the
+    /// wall clock was fine (exercises the load-shedding state machine —
+    /// drop to fixed-weights stepping, then restore — deterministically,
+    /// independent of host speed).
+    OverloadBurst = 5,
+    /// Runner-pool scheduler stalls briefly before dispatching the next
+    /// job (exercises queue aging / deadline-aware admission under a
+    /// slow scheduler).
+    SchedulerDelay = 6,
 }
 
-const N_SITES: usize = 4;
+const N_SITES: usize = 7;
 
 const ALL_SITES: [FaultSite; N_SITES] = [
     FaultSite::RunnerPanic,
     FaultSite::CheckpointWrite,
     FaultSite::StreamCut,
     FaultSite::InterruptAfterBatch,
+    FaultSite::SubscriberCut,
+    FaultSite::OverloadBurst,
+    FaultSite::SchedulerDelay,
 ];
 
 #[derive(Debug, Default)]
@@ -116,6 +133,32 @@ impl FaultPlan {
     pub fn fired(&self, site: FaultSite) -> usize {
         self.sites[site as usize].fired.load(Ordering::SeqCst)
     }
+
+    /// Sites with scheduled occurrences that have not all fired yet,
+    /// with how many remain unfired per site. A soak plan that drains
+    /// to the empty vec proved every scheduled fault actually executed;
+    /// anything left over means the schedule silently outran the run.
+    pub fn unexhausted(&self) -> Vec<(FaultSite, usize)> {
+        ALL_SITES
+            .iter()
+            .filter_map(|&site| {
+                let scheduled = self.sites[site as usize].at.len();
+                let fired = self.fired(site);
+                (fired < scheduled).then_some((site, scheduled - fired))
+            })
+            .collect()
+    }
+
+    /// Occurrence-exhaustion guard: panic unless every scheduled fault
+    /// fired. Soak tests call this at the end of the run so a plan that
+    /// never reaches its last site is a test failure, not a silent pass.
+    pub fn assert_exhausted(&self) {
+        let left = self.unexhausted();
+        assert!(
+            left.is_empty(),
+            "fault plan not exhausted — unfired occurrences remain: {left:?}"
+        );
+    }
 }
 
 #[cfg(test)]
@@ -156,6 +199,48 @@ mod tests {
         assert_ne!(sa, sc, "different seeds must diverge");
         let rate = sa.iter().filter(|&&f| f).count() as f64 / 1000.0;
         assert!((0.05..0.2).contains(&rate), "rate {rate} far from 0.1");
+    }
+
+    #[test]
+    fn exhaustion_guard_flags_unfired_occurrences() {
+        let plan = FaultPlan::new()
+            .at(FaultSite::SubscriberCut, &[0, 3])
+            .at(FaultSite::SchedulerDelay, &[1]);
+        assert_eq!(
+            plan.unexhausted(),
+            [(FaultSite::SubscriberCut, 2), (FaultSite::SchedulerDelay, 1)]
+        );
+        // Fire SubscriberCut through occurrence 3 but never visit
+        // SchedulerDelay enough: still unexhausted.
+        for _ in 0..4 {
+            plan.fire(FaultSite::SubscriberCut);
+        }
+        assert_eq!(plan.unexhausted(), [(FaultSite::SchedulerDelay, 1)]);
+        plan.fire(FaultSite::SchedulerDelay); // occurrence 0: not scheduled
+        assert_eq!(plan.unexhausted(), [(FaultSite::SchedulerDelay, 1)]);
+        plan.fire(FaultSite::SchedulerDelay); // occurrence 1: fires
+        assert!(plan.unexhausted().is_empty());
+        plan.assert_exhausted();
+    }
+
+    #[test]
+    #[should_panic(expected = "fault plan not exhausted")]
+    fn assert_exhausted_panics_on_unfired_plan() {
+        let plan = FaultPlan::new().at(FaultSite::OverloadBurst, &[5]);
+        plan.fire(FaultSite::OverloadBurst);
+        plan.assert_exhausted();
+    }
+
+    #[test]
+    fn new_sites_do_not_perturb_existing_seeded_streams() {
+        // Each site derives its stream from `seed ^ (0xFA17 ^ site)`,
+        // so growing the site list must leave the original four sites'
+        // schedules byte-identical (crash-recovery seeds stay valid).
+        let plan = FaultPlan::seeded(11, 1000, 0.1);
+        let mut rng = Pcg64::new(11, 0xFA17 ^ FaultSite::CheckpointWrite as u64);
+        let expect: Vec<bool> = (0..1000).map(|_| rng.bernoulli(0.1)).collect();
+        let got: Vec<bool> = (0..1000).map(|_| plan.fire(FaultSite::CheckpointWrite)).collect();
+        assert_eq!(got, expect);
     }
 
     #[test]

@@ -37,6 +37,12 @@
 //! sub-batch boundary, and the serving path must STILL count zero —
 //! durability is free where latency matters.
 //!
+//! The last test extends the split-accounting contract to the ISSUE 8
+//! chaos soak: the serving pipeline stays zero-alloc on its marked
+//! thread **while an entire composed-fault soak** — TCP server, job
+//! runners, stream hub, cut-and-reconnecting subscribers — churns on
+//! unmarked background threads for the whole armed window.
+//!
 //! The allocator counts process-wide, so the tests serialize their
 //! armed windows through a mutex; no allocation from the other tests
 //! can land inside an armed window (tests that spawn background
@@ -612,4 +618,121 @@ fn serving_stays_alloc_free_while_grid_job_runs() {
     mgr.cancel(id).unwrap();
     mgr.shutdown();
     let _ = std::fs::remove_dir_all(&job_dir);
+}
+
+#[test]
+fn serving_stays_alloc_free_during_chaos_soak() {
+    use firefly_p::coordinator::soak::{run_soak, SoakConfig};
+    use firefly_p::util::faults::{FaultPlan, FaultSite};
+
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // The ISSUE 8 acceptance: the serving path is held to zero
+    // allocations while a full chaos soak — witness phase, then a
+    // faulted phase with subscriber cuts forcing cursor reconnects —
+    // runs on background threads. Every soak thread (server accept
+    // loop, stepper, job runners, stream hub, subscribers) is
+    // unmarked, so the split accounting isolates the serving count.
+    let soak = std::thread::spawn(|| {
+        let plan = Arc::new(FaultPlan::new().at(FaultSite::SubscriberCut, &[3, 11]));
+        let cfg = SoakConfig {
+            seed: 0x50A6,
+            jobs: 2,
+            subscribers_per_job: 2,
+            budget: 4,
+            batch: 4,
+            max_sessions: 4,
+            faults: Some(plan),
+            ..SoakConfig::default()
+        };
+        run_soak(&cfg)
+    });
+
+    // The serving pipeline of the first test, on this (marked) thread.
+    let mut cfg = SnnConfig::control(48, 12);
+    cfg.n_hidden = 32;
+    let mut rng = Pcg64::new(17, 0);
+    let mut genome = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut genome, 0.1);
+    let rule = NetworkRule::from_flat(&cfg, &genome);
+    let mut backend = NativeBackend::plastic(cfg, rule);
+    let sessions = 8usize;
+    assert_eq!(backend.ensure_sessions(sessions), sessions);
+    let encoder = PopulationEncoder::symmetric(6, 8, 3.0);
+    let decoder = TraceDecoder::new(6, 0.5);
+
+    let slots: Vec<usize> = (0..sessions).collect();
+    let obs_lines: Vec<String> = (0..sessions)
+        .map(|s| format!("0.1,-0.2,0.3,{:.2},0.5,-0.6", (s as f32) / 9.0))
+        .collect();
+    let mut rngs: Vec<Pcg64> = (0..sessions).map(|s| Pcg64::new(8, s as u64)).collect();
+
+    let mut obs: Vec<f32> = Vec::new();
+    let mut inbufs: Vec<Vec<bool>> = (0..sessions).map(|_| Vec::new()).collect();
+    let mut inputs: Vec<bool> = Vec::new();
+    let mut out_spikes: Vec<bool> = Vec::new();
+    let mut traces: Vec<f32> = Vec::new();
+    let mut action: Vec<f32> = Vec::new();
+    let mut resp = String::new();
+
+    for _ in 0..50 {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+    }
+
+    // Armed window spans the entire remaining soak: keep ticking until
+    // the soak thread is done (and at least 300 ticks regardless, so
+    // the window is never trivially short). run_soak enforces its own
+    // hard phase deadlines, so a stuck soak fails loudly here too.
+    IS_SERVING.with(|c| c.set(true));
+    SERVING_ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    let mut ticks = 0u64;
+    loop {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+        ticks += 1;
+        if ticks >= 300 && soak.is_finished() {
+            break;
+        }
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    IS_SERVING.with(|c| c.set(false));
+    let serving_allocs = SERVING_ALLOCS.load(Ordering::SeqCst);
+
+    // Joined *inside* the gate: the soak's teardown allocations cannot
+    // land in another test's armed window.
+    let report = soak.join().expect("chaos soak panicked");
+    assert_eq!(report.rows, 2 * 9, "soak transcripts incomplete");
+    assert!(report.reconnects >= 2, "the armed cuts must have bitten");
+    assert_eq!(
+        serving_allocs, 0,
+        "serving path allocated {serving_allocs} times across {ticks} ticks \
+         while a chaos soak ran"
+    );
 }

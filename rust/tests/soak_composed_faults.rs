@@ -1,0 +1,134 @@
+//! Composed-fault chaos soak (ISSUE 8 tentpole): the whole serving +
+//! jobs + streaming stack, over real TCP, through a single seeded
+//! [`FaultPlan`] that arms **five fault sites at once** — subscriber
+//! cuts mid-push, checkpoint-write IO errors, mid-sweep interrupts,
+//! scheduler stalls, and synthetic serving-tick overruns that trip the
+//! load-shedding watchdog.
+//!
+//! The harness itself ([`firefly_p::coordinator::soak`]) already
+//! enforces the hard invariants internally: strict row sequencing on
+//! every stream (no lost or duplicated rows), every subscriber of a
+//! job stitching the identical transcript, bit-identity of all chaos
+//! transcripts against a fault-free witness run, slot reclamation at
+//! quiescence, metrics-counter consistency, and full exhaustion of the
+//! fault schedule. This file composes the scenario at acceptance scale
+//! (8 concurrent jobs × 3 subscribers, ≥3 fault sites) and asserts the
+//! *visible* shape of the run on top: the cuts forced reconnects, the
+//! interrupts forced resumes, the bursts forced one shed/restore
+//! cycle.
+//!
+//! Everything is seeded and bounded — the run is CI-sized (the harness
+//! enforces a hard per-phase deadline) and reproduces from its plan
+//! alone.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use firefly_p::coordinator::soak::{run_soak, SoakConfig};
+use firefly_p::util::faults::{FaultPlan, FaultSite};
+
+/// A scratch `--job-dir` unique to this test process.
+fn scratch_job_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fireflyp-soak-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create soak job dir");
+    dir
+}
+
+/// The acceptance scenario: 8 jobs, 3 subscribers each, five fault
+/// sites composed in one plan, fair-share scheduling and the admission
+/// gate armed, serving load interleaved throughout.
+#[test]
+fn composed_fault_soak_is_bit_identical_to_witness() {
+    // Occurrence indices are 0-based visit counts per site, sized well
+    // inside each site's visit budget so the plan provably exhausts:
+    // - SubscriberCut: ~192 base row-visits (8 jobs x 3 subs x 8 rows)
+    // - CheckpointWrite: 16 base persists (2 batches x 8 jobs)
+    // - InterruptAfterBatch: 16 base batch boundaries
+    // - SchedulerDelay: 10 dispatches (8 submits + 2 resumes)
+    // - OverloadBurst: 40 interleaved OBS ticks
+    let plan = Arc::new(
+        FaultPlan::new()
+            .at(FaultSite::SubscriberCut, &[5, 23, 47])
+            .at(FaultSite::CheckpointWrite, &[2, 13])
+            .at(FaultSite::InterruptAfterBatch, &[3, 9])
+            .at(FaultSite::SchedulerDelay, &[1, 4])
+            .at(FaultSite::OverloadBurst, &[4, 5, 6]),
+    );
+    let job_dir = scratch_job_dir("composed");
+    let cfg = SoakConfig {
+        seed: 0xC1A05,
+        jobs: 8,
+        subscribers_per_job: 3,
+        budget: 5,
+        batch: 4,
+        runners: 2,
+        max_sessions: 8,
+        fair_share: true,
+        admission_wait: Some(Duration::from_secs(30)),
+        tick_deadline: Some(Duration::from_secs(1)),
+        obs_ticks: 40,
+        faults: Some(Arc::clone(&plan)),
+        job_dir: Some(job_dir.clone()),
+    };
+
+    // run_soak panics on any invariant violation (lost/dup rows,
+    // witness divergence, stuck jobs, counter drift, unexhausted plan).
+    let report = run_soak(&cfg);
+
+    assert_eq!(report.jobs, 8);
+    // 8 training-grid rows + 1 END line per job, all witness-verified.
+    assert_eq!(report.rows, 8 * 9, "every stitched transcript is complete");
+    // Three cuts each killed a live follower: the hub counted the
+    // drops and every victim reconnected from its cursor.
+    assert!(
+        report.stream_drops >= 3,
+        "3 armed cuts must drop followers (got {})",
+        report.stream_drops
+    );
+    assert!(
+        report.reconnects >= 3,
+        "every cut forces a cursor reconnect (got {})",
+        report.reconnects
+    );
+    // Both armed interrupts were resumed from their batch-aligned
+    // checkpoint under fresh wire ids.
+    assert_eq!(report.resumes, 2, "one resume per armed interrupt");
+    // The burst tripped the serving watchdog once, and plasticity came
+    // back on its own.
+    assert!(report.shed_transitions >= 1, "overload bursts must shed");
+    assert!(report.shed_restores >= 1, "shedding must restore");
+    // More streams than subscribers: the reconnects are visible.
+    assert!(report.streams > 8 * 3);
+
+    let _ = std::fs::remove_dir_all(&job_dir);
+}
+
+/// Same harness, faults aimed only at the streaming plane, durable
+/// checkpoints off: cuts alone must not cost a byte — and must leave
+/// no other trace (no resumes, no shedding).
+#[test]
+fn stream_only_faults_cost_latency_not_data() {
+    let plan = Arc::new(FaultPlan::new().at(FaultSite::SubscriberCut, &[0, 7, 19, 33]));
+    let cfg = SoakConfig {
+        seed: 7,
+        jobs: 4,
+        subscribers_per_job: 3,
+        budget: 4,
+        batch: 4,
+        runners: 2,
+        max_sessions: 6,
+        fair_share: true,
+        admission_wait: None,
+        tick_deadline: None,
+        obs_ticks: 0,
+        faults: Some(Arc::clone(&plan)),
+        job_dir: None,
+    };
+    let report = run_soak(&cfg);
+    assert_eq!(report.rows, 4 * 9);
+    assert!(report.reconnects >= 4);
+    assert_eq!(report.resumes, 0, "no interrupts were armed");
+    assert_eq!(report.shed_transitions, 0, "no bursts were armed");
+    assert_eq!(report.stream_drops, 4);
+}
