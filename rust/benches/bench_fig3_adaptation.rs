@@ -17,6 +17,14 @@
 //! shard — so the extra `step_threads = 2` row at B = 64 documents that
 //! step sharding only engages past the word boundary.
 //!
+//! The precision dimension (fixed-point tentpole) re-runs the deployed
+//! rule through the chunked engine at B = 64 for each `--prec` scalar
+//! domain — f32, f16, and the hardware-parity Q5.10 `qfx` lane — and
+//! emits `results/fig3_precision.csv` with schema
+//! `family,prec,batch,steps_per_s,time_to_recover_p50`: throughput per
+//! domain plus whether closed-loop recovery survives the coarser
+//! arithmetic.
+//!
 //! The `engine_threads` dimension (ISSUE 5) sweeps the
 //! scenario-sharded chunked engine at B = 256 × T ∈ {1, 2, 4, 8} per
 //! env family: T per-core chunks, each owning its own backend + envs
@@ -46,6 +54,8 @@ use firefly_p::env::{family_of, Perturbation, TaskParam};
 use firefly_p::es::eval::{rollout_fitness, EvalSpec, GenomeKind};
 use firefly_p::snn::NetworkRule;
 use firefly_p::util::csvio::CsvWriter;
+use firefly_p::util::fixed::Qfx;
+use firefly_p::util::fp16::F16;
 
 fn envvar(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -80,6 +90,11 @@ fn main() {
             "steps_per_s",
             "time_to_recover_p50",
         ],
+    )
+    .unwrap();
+    let mut prec_csv = CsvWriter::create(
+        "results/fig3_precision.csv",
+        &["family", "prec", "batch", "steps_per_s", "time_to_recover_p50"],
     )
     .unwrap();
 
@@ -230,10 +245,54 @@ fn main() {
                 ])
                 .unwrap();
         }
+
+        // Precision dimension (fixed-point tentpole): the same deployed
+        // rule through the same chunked engine at the three `--prec`
+        // scalar domains, B = 64, T = 1. qfx is the hardware-parity
+        // Q5.10 integer lane (bit-exact vs the FPGA simulator per
+        // `tests/fixed_point_conformance.rs`); the interesting read is
+        // steps/s *and* whether recovery survives the coarser domain.
+        let batch = 64usize;
+        let tasks: Vec<TaskParam> = (0..batch).map(|s| novel[s % novel.len()].clone()).collect();
+        let scenarios = scenarios_for_grid(&tasks, &schedule, 42);
+        for prec in ["f32", "f16", "qfx"] {
+            let spec = ChunkBackendSpec::Plastic(Arc::clone(&rule));
+            let t0 = std::time::Instant::now();
+            let logs = match prec {
+                "f32" => run_chunked_adaptation::<f32>(&net_cfg, spec, &bcfg, &scenarios, 1),
+                "f16" => run_chunked_adaptation::<F16>(&net_cfg, spec, &bcfg, &scenarios, 1),
+                _ => run_chunked_adaptation::<Qfx>(&net_cfg, spec, &bcfg, &scenarios, 1),
+            };
+            let dt = t0.elapsed().as_secs_f64();
+            let total_steps: usize = logs.iter().map(|l| l.rewards.len()).sum();
+            let grid = GridSummary::from_logs(&logs);
+            let sps = total_steps as f64 / dt.max(1e-9);
+            println!(
+                "  batch-adapt B={batch:<3} prec={prec}: {sps:>9.0} session-steps/s  \
+                 recovered {}/{}  ttr_p50 {:.1}",
+                grid.recovered, grid.perturbed, grid.time_to_recover_p50
+            );
+            prec_csv
+                .row(&[
+                    &env,
+                    &prec,
+                    &batch,
+                    &format!("{sps:.1}"),
+                    &format!("{:.1}", grid.time_to_recover_p50),
+                ])
+                .unwrap();
+        }
         println!();
     }
     let p1 = curves.finish().unwrap();
     let p2 = summary.finish().unwrap();
     let p3 = batch_csv.finish().unwrap();
-    println!("csv: {}, {} and {}", p1.display(), p2.display(), p3.display());
+    let p4 = prec_csv.finish().unwrap();
+    println!(
+        "csv: {}, {}, {} and {}",
+        p1.display(),
+        p2.display(),
+        p3.display(),
+        p4.display()
+    );
 }

@@ -24,6 +24,11 @@
 //!   `gated`/`ungated` rows measure event-driven plasticity, with
 //!   `trace_sparsity` reporting the measured fraction of presynaptic
 //!   rows the gate skipped.
+//! - Fixed-point tentpole: `prec-f32`/`prec-f16`/`prec-qfx` rows sweep
+//!   the `--prec` scalar domain at B=64 across the same firing rates —
+//!   steps/s of the hardware-parity Q5.10 integer lane (bit-exact
+//!   against the FPGA simulator per `tests/fixed_point_conformance.rs`)
+//!   vs native f32 and software binary16.
 //!
 //! CSV schema (since ISSUE 3):
 //! `layer,batch,threads,firing_rate,trace_sparsity,steps_per_s,speedup,p50_us,p99_us`
@@ -38,8 +43,10 @@ use std::time::{Duration, Instant};
 use firefly_p::backend::{NativeBackend, SnnBackend};
 use firefly_p::coordinator::server::{ControlServer, ServerConfig};
 use firefly_p::snn::reference::DenseBatchedNetwork;
-use firefly_p::snn::{Mode, NetworkRule, SnnConfig, SnnNetwork};
+use firefly_p::snn::{Mode, NetworkRule, Scalar, SnnConfig, SnnNetwork};
 use firefly_p::util::csvio::CsvWriter;
+use firefly_p::util::fixed::Qfx;
+use firefly_p::util::fp16::F16;
 use firefly_p::util::rng::Pcg64;
 use firefly_p::util::stats;
 
@@ -145,6 +152,30 @@ fn bench_packed_vs_dense(batch: usize, rate: f64, ticks: usize) -> (f64, f64) {
     let dense_sps = (batch * ticks) as f64 / t0.elapsed().as_secs_f64();
 
     (packed_sps, dense_sps)
+}
+
+/// Precision sweep: the packed plastic network instantiated at scalar
+/// domain `S` (`--prec f32|f16|qfx`), identical rule and input stream
+/// per arm. The generic pipeline is shared — only the arithmetic lane
+/// differs (f32 native, F16 round-trip-per-op binary16, Qfx Q5.10
+/// integer with RNE requantize + saturating accumulate). Returns
+/// session-steps/s.
+fn bench_precision<S: Scalar>(batch: usize, rate: f64, ticks: usize) -> f64 {
+    let cfg = geometry();
+    let rule = make_rule(&cfg, 3);
+    let active = vec![true; batch];
+    let frames: Vec<Vec<bool>> = (0..16)
+        .map(|k| random_inputs(&cfg, batch, rate, 300 + k as u64))
+        .collect();
+    let mut net = SnnNetwork::<S>::new_batched(cfg, Mode::Plastic(rule.into()), batch);
+    for f in frames.iter().take(5) {
+        net.step_spikes_masked(f, &active);
+    }
+    let t0 = Instant::now();
+    for t in 0..ticks {
+        net.step_spikes_masked(&frames[t % frames.len()], &active);
+    }
+    (batch * ticks) as f64 / t0.elapsed().as_secs_f64()
 }
 
 /// Core-count scaling: the sharded batched stepper at `threads` 64-lane
@@ -422,6 +453,38 @@ fn main() {
             .unwrap();
         csv.row(&[&"dense", &batch, &1, &rate, &0.0, &dense_sps, &1.0, &0.0, &0.0])
             .unwrap();
+    }
+
+    println!("\n--- engine: precision sweep (f32 / f16 / qfx), sparsity sweep ---");
+    for &rate in &[0.05f64, 0.20, 0.50] {
+        let batch = 64;
+        let ticks = 200;
+        let f32_sps = bench_precision::<f32>(batch, rate, ticks);
+        let arms = [
+            ("f32", f32_sps),
+            ("f16", bench_precision::<F16>(batch, rate, ticks)),
+            ("qfx", bench_precision::<Qfx>(batch, rate, ticks)),
+        ];
+        for (prec, sps) in arms {
+            let speedup = sps / f32_sps;
+            println!(
+                "B={batch:<3} fire={:>4.0}%  prec={prec}  {sps:>12.0} steps/s   \
+                 vs f32 {speedup:>5.2}×",
+                rate * 100.0
+            );
+            csv.row(&[
+                &format!("prec-{prec}"),
+                &batch,
+                &1,
+                &rate,
+                &0.0,
+                &sps,
+                &speedup,
+                &0.0,
+                &0.0,
+            ])
+            .unwrap();
+        }
     }
 
     println!("\n--- engine: sharded stepping, core-count × sparsity sweep (B=512) ---");

@@ -70,6 +70,7 @@ use crate::es::eval::NEURONS_PER_DIM;
 use crate::snn::{NetworkRule, PlasticityConfig, Scalar, SnnConfig};
 use crate::util::binio::{self, BinError, BinReader, BinWriter};
 use crate::util::faults::{FaultPlan, FaultSite};
+use crate::util::fixed::Qfx;
 use crate::util::fp16::F16;
 use crate::util::threadpool::available_cores;
 
@@ -118,15 +119,21 @@ pub enum Precision {
     F32,
     /// FPGA-faithful fp16 chunks ([`crate::util::fp16::F16`]).
     F16,
+    /// Hardware-parity Q5.10 integer fixed-point chunks
+    /// ([`crate::util::fixed::Qfx`]) — the datapath
+    /// `tests/fixed_point_conformance.rs` pins bit-exact against the
+    /// FPGA simulator's fixed-point lane.
+    Qfx,
 }
 
 impl Precision {
-    /// Parse the wire token (`f32 | f16`).
+    /// Parse the wire token (`f32 | f16 | qfx`).
     pub fn parse(s: &str) -> Result<Precision, String> {
         match s {
             "f32" => Ok(Precision::F32),
             "f16" => Ok(Precision::F16),
-            other => Err(format!("prec must be f32 | f16 (got {other:?})")),
+            "qfx" => Ok(Precision::Qfx),
+            other => Err(format!("prec must be f32 | f16 | qfx (got {other:?})")),
         }
     }
 
@@ -135,6 +142,7 @@ impl Precision {
         match self {
             Precision::F32 => "f32",
             Precision::F16 => "f16",
+            Precision::Qfx => "qfx",
         }
     }
 }
@@ -203,7 +211,7 @@ impl JobSpec {
     /// ```text
     /// family=<env> [grid=task|train|eval] [schedule=<spec@t;...>]
     ///              [budget=<n>] [seed=<n>] [batch=<n>] [threads=<n>]
-    ///              [task=<n>] [prec=f32|f16] [client=<name>]
+    ///              [task=<n>] [prec=f32|f16|qfx] [client=<name>]
     ///              [weight=<n>]
     /// ```
     ///
@@ -1659,6 +1667,7 @@ fn run_job(
         let logs = match spec.prec {
             Precision::F32 => run_slice::<f32>(model, &bcfg, slice, threads, cancel, &shared.stop),
             Precision::F16 => run_slice::<F16>(model, &bcfg, slice, threads, cancel, &shared.stop),
+            Precision::Qfx => run_slice::<Qfx>(model, &bcfg, slice, threads, cancel, &shared.stop),
         };
         let Some(logs) = logs else {
             // Abandoned mid-sub-batch: the completed prefix is the
@@ -1896,10 +1905,10 @@ mod tests {
         spec.batch = g.usize_range(1, 64);
         spec.threads = g.usize_range(0, 8);
         spec.task = g.usize_range(0, 8);
-        spec.prec = if g.bool() {
-            Precision::F32
-        } else {
-            Precision::F16
+        spec.prec = match g.usize_range(0, 3) {
+            0 => Precision::F32,
+            1 => Precision::F16,
+            _ => Precision::Qfx,
         };
         spec.client = if g.bool() {
             format!("c{}.client-{}", g.usize_range(0, 10), g.usize_range(0, 10))

@@ -1347,14 +1347,7 @@ fn handle_job_request(
             }
         }
     } else if let Some(arg) = rest.strip_prefix("SUBSCRIBE ") {
-        match parse_subscribe(arg).and_then(|(id, from)| jobs.status(id).map(|st| (id, st, from))) {
-            Ok((id, st, from)) if from > st.total => {
-                let _ = write!(
-                    resp,
-                    "ERR job-bad-spec from={from} exceeds total={}",
-                    st.total
-                );
-            }
+        match parse_subscribe(arg, jobs) {
             Ok((id, st, from)) => {
                 let _ = write!(resp, "JOB SUBSCRIBE id={id} total={} from={from}", st.total);
                 writer.write_all(resp.as_bytes())?;
@@ -1387,8 +1380,15 @@ fn parse_job_id(s: &str) -> Result<u64, JobError> {
         .map_err(|e| JobError::BadSpec(format!("bad job id: {e}")))
 }
 
-/// Parse `JOB SUBSCRIBE` arguments: `<id> [from=<row>]`.
-fn parse_subscribe(s: &str) -> Result<(u64, usize), JobError> {
+/// Parse and validate `JOB SUBSCRIBE` arguments: `<id> [from=<row>]`.
+///
+/// The full request contract lives here, including the `from=` bounds
+/// check against the job's row count (previously an ad-hoc check at the
+/// call site): `from == total` is a valid empty tail — the subscriber
+/// sees no rows, then `JOB END` — while `from > total` is a typed
+/// `job-bad-spec` rejection. Returns the job's status alongside so the
+/// caller never re-fetches (and can't forget to validate).
+fn parse_subscribe(s: &str, jobs: &JobManager) -> Result<(u64, JobStatus, usize), JobError> {
     let mut it = s.split_whitespace();
     let id = it
         .next()
@@ -1411,7 +1411,14 @@ fn parse_subscribe(s: &str) -> Result<(u64, usize), JobError> {
             }
         }
     }
-    Ok((id, from))
+    let st = jobs.status(id)?;
+    if from > st.total {
+        return Err(JobError::BadSpec(format!(
+            "from={from} exceeds total={}",
+            st.total
+        )));
+    }
+    Ok((id, st, from))
 }
 
 fn write_job_status(resp: &mut String, prefix: &str, st: &JobStatus) {
@@ -2047,7 +2054,34 @@ mod tests {
         b.reader.read_line(&mut b.line).unwrap();
         assert_eq!(b.line.trim(), full[8], "END summary must be bit-identical");
 
-        // A cursor past the grid is a typed error, not a hang.
+        // from=total is the valid empty tail: no rows, straight to the
+        // bit-identical END summary.
+        let mut tail = Client::connect(addr);
+        tail.writer.write_all(b"JOB SUBSCRIBE 1 from=8\n").unwrap();
+        tail.line.clear();
+        tail.reader.read_line(&mut tail.line).unwrap();
+        assert!(
+            tail.line.starts_with("JOB SUBSCRIBE id=1 total=8 from=8"),
+            "{}",
+            tail.line
+        );
+        tail.line.clear();
+        tail.reader.read_line(&mut tail.line).unwrap();
+        assert_eq!(
+            tail.line.trim(),
+            full[8],
+            "empty tail must go straight to the END summary"
+        );
+        drop(tail);
+
+        // One row past the end is the typed rejection — the exact
+        // boundary of the bounds check now unified in parse_subscribe.
+        let mut past = Client::connect(addr);
+        let err = past.round_trip("JOB SUBSCRIBE 1 from=9");
+        assert!(err.starts_with("ERR job-bad-spec from=9 exceeds total=8"), "{err}");
+        drop(past);
+
+        // A cursor far past the grid is a typed error, not a hang.
         let mut bad = Client::connect(addr);
         let err = bad.round_trip("JOB SUBSCRIBE 1 from=99");
         assert!(err.starts_with("ERR job-bad-spec from=99"), "{err}");

@@ -8,10 +8,14 @@
 //! 4-coefficient wide fetch → parallel DSP array → adder tree), a shared
 //! dual-port BRAM memory system with **write-priority arbitration** (no
 //! double buffering), and the Scheduler's overlapped Prologue / Phase A /
-//! Phase B / Epilogue dataflow (§III-C). All arithmetic is bit-accurate
-//! IEEE FP16 through the same scalar kernels as the golden model, so the
-//! simulator's spikes and weights are bit-identical to
-//! `SnnNetwork<F16>` by construction — verified in `sim::tests`.
+//! Phase B / Epilogue dataflow (§III-C). All arithmetic runs through the
+//! same generic scalar kernels as the golden model, so the simulator's
+//! spikes and weights are bit-identical to `SnnNetwork<S>` by
+//! construction — verified in `sim::tests`. [`FpgaSim`] is the published
+//! bit-accurate IEEE FP16 datapath; [`TypedFpgaSim`]`<Qfx>` runs the
+//! identical cycle model at Q5.10 integer fixed point (the
+//! hardware-parity lane `tests/fixed_point_conformance.rs` pins the
+//! batched backend against).
 
 pub mod bram;
 pub mod engines;
@@ -25,4 +29,4 @@ pub use bram::{Bank, MemorySystem};
 pub use hwconfig::HwConfig;
 pub use power::PowerModel;
 pub use resources::{ResourceReport, Resources};
-pub use sim::FpgaSim;
+pub use sim::{FpgaSim, TypedFpgaSim};

@@ -9,7 +9,8 @@
 //! engine that is stalled or gated by absent spikes toggles less.
 
 use super::resources::{ResourceReport, Resources};
-use super::sim::FpgaSim;
+use super::sim::TypedFpgaSim;
+use crate::snn::numeric::Scalar;
 
 /// Calibrated coefficients (W at 200 MHz and activity = 1.0).
 mod coeff {
@@ -82,8 +83,9 @@ impl Activity {
         }
     }
 
-    /// Measure from a finished simulation.
-    pub fn from_sim(sim: &FpgaSim) -> Activity {
+    /// Measure from a finished simulation (any arithmetic lane — the
+    /// busy/stall accounting is datapath-width-agnostic).
+    pub fn from_sim<S: Scalar>(sim: &TypedFpgaSim<S>) -> Activity {
         let total = sim.cycles.total.max(1) as f64;
         let banks = super::bram::ALL_BANKS.len() as f64;
         Activity {
@@ -177,6 +179,7 @@ mod tests {
 
     #[test]
     fn activity_from_sim_is_bounded() {
+        use super::super::sim::FpgaSim;
         use crate::snn::plasticity::RuleParams;
         use crate::snn::SnnConfig;
         use crate::util::rng::Pcg64;

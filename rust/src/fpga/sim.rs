@@ -14,9 +14,17 @@
 //! The `step()` API delivers the output spikes for timestep `t`, so each
 //! call internally runs *Phase B of the previous iteration* (bringing in
 //! the new input) followed by *Phase A of this iteration*. Functional
-//! semantics are bit-identical to the golden `SnnNetwork<F16>` — the
+//! semantics are bit-identical to the golden `SnnNetwork<S>` — the
 //! equivalence test below checks spikes, membrane potentials, traces and
 //! weights bit-for-bit over random episodes.
+//!
+//! The simulator is generic over the arithmetic domain
+//! ([`TypedFpgaSim<S>`]): [`FpgaSim`] is the published FP16 datapath
+//! (§III-A), while `TypedFpgaSim<Qfx>` is the same cycle model running
+//! the Q5.10 integer DSP arithmetic of [`crate::util::fixed`] — the lane
+//! `tests/fixed_point_conformance.rs` pins the batched fixed-point
+//! backend against. The cycle/op accounting is datapath-width-agnostic
+//! (op counts weight the power model per domain downstream).
 //!
 //! Hazard note: in Phase B the Plasticity Engine (L2 update, needing the
 //! *stable* timestep-`t` hidden traces, §III-C) shares the hidden-trace
@@ -38,14 +46,15 @@ use crate::snn::plasticity::{update_synapse, RuleParams, COEFFS_PER_SYNAPSE};
 use crate::snn::trace::trace_step_scalar;
 use crate::util::fp16::F16;
 
-/// FP16 arithmetic-operation counters (dynamic-power activity factors).
+/// Arithmetic-operation counters (dynamic-power activity factors) —
+/// FP16 FPU ops in the published datapath, DSP-slice ops in the Qfx lane.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OpCounts {
-    /// FP16 multiplies retired.
+    /// Multiplies retired.
     pub mul: u64,
-    /// FP16 adds/subtracts retired.
+    /// Adds/subtracts retired.
     pub add: u64,
-    /// FP16 compares (threshold, clamp) retired.
+    /// Compares (threshold, clamp) retired.
     pub cmp: u64,
 }
 
@@ -60,7 +69,7 @@ pub struct CycleCounts {
     pub phase_a: u64,
     /// L2 update ∥ L1 forward cycles.
     pub phase_b: u64,
-    /// Final L2 update flushed by [`FpgaSim::finish`].
+    /// Final L2 update flushed by [`TypedFpgaSim::finish`].
     pub epilogue: u64,
     /// Timesteps executed.
     pub steps: u64,
@@ -70,28 +79,30 @@ pub struct CycleCounts {
     pub plast_busy: u64,
 }
 
-/// The simulated accelerator.
-pub struct FpgaSim {
+/// The simulated accelerator, generic over its arithmetic domain `S`
+/// (the cycle model — scheduler, arbitration, op accounting — is shared;
+/// only the datapath scalars change).
+pub struct TypedFpgaSim<S: Scalar> {
     /// Architecture parameters the instance was built with.
     pub hw: HwConfig,
     /// Network geometry and neuron/plasticity constants.
     pub cfg: SnnConfig,
     rule: Option<(RuleParams, RuleParams)>,
-    // Architectural state (bit-accurate FP16).
-    w: [Vec<F16>; 2],
-    v: [Vec<F16>; 2],
-    traces: [Vec<F16>; 3],
+    // Architectural state (bit-accurate in the domain `S`).
+    w: [Vec<S>; 2],
+    v: [Vec<S>; 2],
+    traces: [Vec<S>; 3],
     spikes: [Vec<bool>; 3], // input, hidden, output
-    psum: [Vec<F16>; 2],
+    psum: [Vec<S>; 2],
     // Quantized rule constants.
-    eta: F16,
-    w_lo: F16,
-    w_hi: F16,
-    lambda: F16,
-    v_th: F16,
+    eta: S,
+    w_lo: S,
+    w_hi: S,
+    lambda: S,
+    v_th: S,
     // Phase-B trace snapshot for the L2 plasticity burst.
-    hid_trace_snapshot: Vec<F16>,
-    out_trace_snapshot: Vec<F16>,
+    hid_trace_snapshot: Vec<S>,
+    out_trace_snapshot: Vec<S>,
     pending_l2_update: bool,
     // Reused micro-op stream buffers (no allocation in the steady state).
     fwd_ops: Vec<MicroOp>,
@@ -101,11 +112,15 @@ pub struct FpgaSim {
     pub mem: MemorySystem,
     /// Cycle accounting per pipeline region.
     pub cycles: CycleCounts,
-    /// FP16 arithmetic-op counters.
+    /// Arithmetic-op counters.
     pub ops: OpCounts,
 }
 
-impl FpgaSim {
+/// The published FP16 accelerator (§III-A) — the default instantiation
+/// of [`TypedFpgaSim`].
+pub type FpgaSim = TypedFpgaSim<F16>;
+
+impl<S: Scalar> TypedFpgaSim<S> {
     /// Build a plastic (FireFly-P mode) instance: zero weights, rule θ.
     pub fn new_plastic(cfg: SnnConfig, l1: RuleParams, l2: RuleParams, hw: HwConfig) -> Self {
         assert_eq!(l1.pre, cfg.n_in);
@@ -122,39 +137,39 @@ impl FpgaSim {
         let split = sim.cfg.l1_synapses();
         assert_eq!(weights_flat.len(), split + sim.cfg.l2_synapses());
         for (w, &x) in sim.w[0].iter_mut().zip(&weights_flat[..split]) {
-            *w = F16::from_f32(x);
+            *w = S::from_f32(x);
         }
         for (w, &x) in sim.w[1].iter_mut().zip(&weights_flat[split..]) {
-            *w = F16::from_f32(x);
+            *w = S::from_f32(x);
         }
         sim
     }
 
     fn build(cfg: SnnConfig, rule: Option<(RuleParams, RuleParams)>, hw: HwConfig) -> Self {
-        FpgaSim {
+        TypedFpgaSim {
             w: [
-                vec![F16::ZERO; cfg.n_in * cfg.n_hidden],
-                vec![F16::ZERO; cfg.n_hidden * cfg.n_out],
+                vec![S::ZERO; cfg.n_in * cfg.n_hidden],
+                vec![S::ZERO; cfg.n_hidden * cfg.n_out],
             ],
-            v: [vec![F16::ZERO; cfg.n_hidden], vec![F16::ZERO; cfg.n_out]],
+            v: [vec![S::ZERO; cfg.n_hidden], vec![S::ZERO; cfg.n_out]],
             traces: [
-                vec![F16::ZERO; cfg.n_in],
-                vec![F16::ZERO; cfg.n_hidden],
-                vec![F16::ZERO; cfg.n_out],
+                vec![S::ZERO; cfg.n_in],
+                vec![S::ZERO; cfg.n_hidden],
+                vec![S::ZERO; cfg.n_out],
             ],
             spikes: [
                 vec![false; cfg.n_in],
                 vec![false; cfg.n_hidden],
                 vec![false; cfg.n_out],
             ],
-            psum: [vec![F16::ZERO; cfg.n_hidden], vec![F16::ZERO; cfg.n_out]],
-            eta: F16::from_f32(cfg.plasticity.eta),
-            w_lo: F16::from_f32(-cfg.plasticity.w_clip),
-            w_hi: F16::from_f32(cfg.plasticity.w_clip),
-            lambda: F16::from_f32(cfg.lambda),
-            v_th: F16::from_f32(cfg.v_th),
-            hid_trace_snapshot: vec![F16::ZERO; cfg.n_hidden],
-            out_trace_snapshot: vec![F16::ZERO; cfg.n_out],
+            psum: [vec![S::ZERO; cfg.n_hidden], vec![S::ZERO; cfg.n_out]],
+            eta: S::from_f32(cfg.plasticity.eta),
+            w_lo: S::from_f32(-cfg.plasticity.w_clip),
+            w_hi: S::from_f32(cfg.plasticity.w_clip),
+            lambda: S::from_f32(cfg.lambda),
+            v_th: S::from_f32(cfg.v_th),
+            hid_trace_snapshot: vec![S::ZERO; cfg.n_hidden],
+            out_trace_snapshot: vec![S::ZERO; cfg.n_out],
             pending_l2_update: false,
             fwd_ops: Vec::new(),
             plast_ops: Vec::new(),
@@ -335,7 +350,7 @@ impl FpgaSim {
                         lif_step_scalar(self.v[layer][i], self.psum[layer][i], self.v_th, true);
                     self.v[layer][i] = nv;
                     self.spikes[pop][i] = sp;
-                    self.psum[layer][i] = F16::ZERO; // psum registers cleared
+                    self.psum[layer][i] = S::ZERO; // psum registers cleared
                     self.ops.add += 3; // two halvings (shift-adds) + reset-subtract path
                     self.ops.cmp += 1;
                 }
@@ -360,10 +375,10 @@ impl FpgaSim {
                     let i = s % n_post;
                     let k = s * COEFFS_PER_SYNAPSE;
                     let coeffs = [
-                        F16::from_f32(params.theta[k]),
-                        F16::from_f32(params.theta[k + 1]),
-                        F16::from_f32(params.theta[k + 2]),
-                        F16::from_f32(params.theta[k + 3]),
+                        S::from_f32(params.theta[k]),
+                        S::from_f32(params.theta[k + 1]),
+                        S::from_f32(params.theta[k + 2]),
+                        S::from_f32(params.theta[k + 3]),
                     ];
                     // Phase B (layer 1) reads the snapshot traces; Phase A
                     // (layer 0) reads live current-timestep traces.
@@ -387,14 +402,17 @@ impl FpgaSim {
     /// Steady-state latency of one full inference-and-learning timestep,
     /// in cycles (excludes prologue/epilogue).
     pub fn steady_state_cycles_per_step(&self) -> f64 {
-        if self.cycles.steps <= 1 {
-            return (self.cycles.prologue + self.cycles.phase_a) as f64;
+        if self.cycles.steps == 0 {
+            return 0.0;
         }
-        let main = self.cycles.phase_a + self.cycles.phase_b;
+        if self.cycles.steps == 1 {
+            // One step has run only the prologue (the first-step Phase B,
+            // excluded per this function's contract) and one Phase A.
+            return self.cycles.phase_a as f64;
+        }
         // phase_a accumulates from step 0, phase_b from step 1.
         let a = self.cycles.phase_a as f64 / self.cycles.steps as f64;
         let b = self.cycles.phase_b as f64 / (self.cycles.steps - 1) as f64;
-        let _ = main;
         a + b
     }
 
@@ -413,21 +431,34 @@ impl FpgaSim {
         self.w[layer].iter().map(|x| x.to_f32()).collect()
     }
 
-    /// Mirror golden-model state for the equivalence test.
-    pub fn state_fingerprint(&self) -> (Vec<u16>, Vec<u16>, Vec<u16>) {
-        let w: Vec<u16> = self.w[0].iter().chain(self.w[1].iter()).map(|x| x.to_bits()).collect();
-        let v: Vec<u16> = self.v[0].iter().chain(self.v[1].iter()).map(|x| x.to_bits()).collect();
-        let t: Vec<u16> = self
+    /// Mirror golden-model state for the equivalence tests: the raw
+    /// storage bits ([`Scalar::bit_pattern`]) of (weights, membranes,
+    /// traces) — domain-agnostic, so FP16 and Qfx lanes pin identically.
+    pub fn state_fingerprint(&self) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let w: Vec<u32> = self
+            .w[0]
+            .iter()
+            .chain(self.w[1].iter())
+            .map(|x| x.bit_pattern())
+            .collect();
+        let v: Vec<u32> = self
+            .v[0]
+            .iter()
+            .chain(self.v[1].iter())
+            .map(|x| x.bit_pattern())
+            .collect();
+        let t: Vec<u32> = self
             .traces
             .iter()
-            .flat_map(|tr| tr.iter().map(|x| x.to_bits()))
+            .flat_map(|tr| tr.iter().map(|x| x.bit_pattern()))
             .collect();
         (w, v, t)
     }
 }
 
-/// Build the golden-model twin of a plastic simulator instance.
-pub fn golden_twin(cfg: &SnnConfig, l1: &RuleParams, l2: &RuleParams) -> SnnNetwork<F16> {
+/// Build the golden-model twin of a plastic simulator instance in the
+/// same arithmetic domain.
+pub fn golden_twin<S: Scalar>(cfg: &SnnConfig, l1: &RuleParams, l2: &RuleParams) -> SnnNetwork<S> {
     let rule = crate::snn::network::NetworkRule {
         l1: l1.clone(),
         l2: l2.clone(),
@@ -448,36 +479,32 @@ mod tests {
         )
     }
 
-    fn golden_fingerprint(net: &SnnNetwork<F16>) -> (Vec<u16>, Vec<u16>, Vec<u16>) {
-        let w: Vec<u16> = net.w1.iter().chain(net.w2.iter()).map(|x| x.to_bits()).collect();
-        let v: Vec<u16> = net
+    fn golden_fingerprint<S: Scalar>(net: &SnnNetwork<S>) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let w: Vec<u32> = net.w1.iter().chain(net.w2.iter()).map(|x| x.bit_pattern()).collect();
+        let v: Vec<u32> = net
             .hidden
             .v
             .iter()
             .chain(net.output.v.iter())
-            .map(|x| x.to_bits())
+            .map(|x| x.bit_pattern())
             .collect();
-        let t: Vec<u16> = net
+        let t: Vec<u32> = net
             .trace_in
             .values
             .iter()
             .chain(net.trace_hidden.values.iter())
             .chain(net.trace_out.values.iter())
-            .map(|x| x.to_bits())
+            .map(|x| x.bit_pattern())
             .collect();
         (w, v, t)
     }
 
-    /// The headline correctness result: the cycle-accurate simulator is
-    /// bit-identical to the golden FP16 network over a random episode —
-    /// output spikes every step, and full (weights, V, traces) state at
-    /// the end.
-    #[test]
-    fn bit_exact_equivalence_with_golden_model() {
+    fn run_twin_episode<S: Scalar>(seed: u64) {
         let cfg = SnnConfig::tiny();
-        let (l1, l2) = random_rule(&cfg, 42);
-        let mut sim = FpgaSim::new_plastic(cfg.clone(), l1.clone(), l2.clone(), HwConfig::default());
-        let mut gold = golden_twin(&cfg, &l1, &l2);
+        let (l1, l2) = random_rule(&cfg, seed);
+        let mut sim =
+            TypedFpgaSim::<S>::new_plastic(cfg.clone(), l1.clone(), l2.clone(), HwConfig::default());
+        let mut gold = golden_twin::<S>(&cfg, &l1, &l2);
         let mut rng = Pcg64::new(7, 0);
         for t in 0..120 {
             let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(0.4)).collect();
@@ -487,6 +514,24 @@ mod tests {
         }
         sim.finish();
         assert_eq!(sim.state_fingerprint(), golden_fingerprint(&gold));
+    }
+
+    /// The headline correctness result: the cycle-accurate simulator is
+    /// bit-identical to the golden FP16 network over a random episode —
+    /// output spikes every step, and full (weights, V, traces) state at
+    /// the end.
+    #[test]
+    fn bit_exact_equivalence_with_golden_model() {
+        run_twin_episode::<F16>(42);
+    }
+
+    /// The same twin property in the fixed-point lane: the Q5.10 DSP
+    /// datapath of `TypedFpgaSim<Qfx>` is bit-identical to the golden
+    /// `SnnNetwork<Qfx>` (the deep batched conformance grid lives in
+    /// `tests/fixed_point_conformance.rs`).
+    #[test]
+    fn bit_exact_equivalence_with_golden_model_qfx() {
+        run_twin_episode::<crate::util::fixed::Qfx>(42);
     }
 
     #[test]
@@ -543,6 +588,36 @@ mod tests {
         // cycles must be conserved: regions sum to total
         let c = &sim.cycles;
         assert_eq!(c.prologue + c.phase_a + c.phase_b + c.epilogue, c.total);
+    }
+
+    /// Regression pin for `steady_state_cycles_per_step`'s short-run
+    /// branches: the doc contract excludes prologue/epilogue, but the
+    /// 1-step branch used to return `prologue + phase_a`.
+    #[test]
+    fn steady_state_excludes_prologue_in_short_runs() {
+        let cfg = SnnConfig::tiny();
+        let (l1, l2) = random_rule(&cfg, 11);
+        let mut sim = FpgaSim::new_plastic(cfg.clone(), l1, l2, HwConfig::default());
+        // No steps yet: nothing to report.
+        assert_eq!(sim.steady_state_cycles_per_step(), 0.0);
+        let mut rng = Pcg64::new(12, 0);
+        let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(0.6)).collect();
+        sim.step(&spikes);
+        // One step: its Phase B is the prologue (excluded), so the
+        // steady-state estimate is exactly the lone Phase A.
+        assert!(sim.cycles.prologue > 0, "first-step Phase B must land in prologue");
+        assert_eq!(sim.steady_state_cycles_per_step(), sim.cycles.phase_a as f64);
+        // N steps: the documented per-region averages.
+        for _ in 1..10 {
+            let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(0.6)).collect();
+            sim.step(&spikes);
+        }
+        let c = &sim.cycles;
+        let expect =
+            c.phase_a as f64 / c.steps as f64 + c.phase_b as f64 / (c.steps - 1) as f64;
+        assert_eq!(sim.steady_state_cycles_per_step(), expect);
+        // And the prologue stays excluded however long the run is.
+        assert!(sim.steady_state_cycles_per_step() > 0.0);
     }
 
     #[test]

@@ -9,8 +9,12 @@
 //!   artifacts     list AOT artifacts the runtime can load
 
 use firefly_p::backend::{
-    BackendKind, FpgaBackend, NativeBackend, ReplicatedBackend, SnnBackend, XlaBackend,
+    BackendKind, FpgaBackend, NativeBackend, ReplicatedBackend, SnnBackend, TypedNativeBackend,
+    XlaBackend,
 };
+use firefly_p::coordinator::jobs::Precision;
+use firefly_p::util::fixed::Qfx;
+use firefly_p::util::fp16::F16;
 use std::sync::Arc;
 
 use firefly_p::coordinator::adapt_loop::{run_adaptation, AdaptConfig};
@@ -77,6 +81,14 @@ fn parser() -> Parser {
                 "",
             ),
             opt(
+                "prec",
+                "backend arithmetic: f32 | f16 (bit-accurate binary16) | qfx \
+                 (hardware-parity Q5.10 integer fixed point, pinned bit-exact \
+                 against the FPGA simulator). Native backend only — xla/fpga \
+                 fix their own datapath",
+                "f32",
+            ),
+            opt(
                 "adapt-threads",
                 "scenario chunks stepped in parallel on pinned workers, each chunk \
                  owning its own backend + envs (plant AND network; 0 = all CPU \
@@ -101,6 +113,13 @@ fn parser() -> Parser {
                 "sessions",
                 "max concurrent client sessions (native batches them; xla/fpga replicate)",
                 "16",
+            ),
+            opt(
+                "prec",
+                "serving arithmetic: f32 | f16 | qfx (hardware-parity Q5.10 \
+                 fixed point). Native backend only; JOB SUBMIT picks its own \
+                 prec per submission",
+                "f32",
             ),
             opt(
                 "step-threads",
@@ -300,6 +319,12 @@ fn deployed_rule(cfg: &firefly_p::snn::SnnConfig, plastic: bool, genome: &[f32])
     }
 }
 
+/// The `--prec` arithmetic domain (defaults to f32 when the command
+/// doesn't declare the option).
+fn parse_prec(args: &Args) -> Result<Precision, String> {
+    Precision::parse(&args.get_or("prec", "f32"))
+}
+
 fn load_backend(
     args: &Args,
     env: &str,
@@ -307,15 +332,46 @@ fn load_backend(
 ) -> Result<Box<dyn SnnBackend>, String> {
     let kind = BackendKind::parse(&args.get_or("backend", "native"))
         .ok_or("backend must be native | xla | fpga")?;
+    let prec = parse_prec(args)?;
+    if prec != Precision::F32 && kind != BackendKind::Native {
+        return Err(format!(
+            "--prec {} applies to --backend native only (xla/fpga fix their own datapath)",
+            prec.as_str()
+        ));
+    }
     let (cfg, plastic, genome) = load_model(args, env)?;
     let rule = deployed_rule(&cfg, plastic, &genome);
     let backend: Box<dyn SnnBackend> = match (kind, plastic) {
-        (BackendKind::Native, true) => {
-            Box::new(NativeBackend::plastic_with_threads(cfg, rule, step_threads))
-        }
-        (BackendKind::Native, false) => {
-            Box::new(NativeBackend::fixed_with_threads(cfg, &genome, step_threads))
-        }
+        (BackendKind::Native, true) => match prec {
+            Precision::F32 => Box::new(NativeBackend::plastic_with_threads(cfg, rule, step_threads)),
+            Precision::F16 => Box::new(TypedNativeBackend::<F16>::plastic_with_threads(
+                cfg,
+                rule,
+                step_threads,
+            )),
+            Precision::Qfx => Box::new(TypedNativeBackend::<Qfx>::plastic_with_threads(
+                cfg,
+                rule,
+                step_threads,
+            )),
+        },
+        (BackendKind::Native, false) => match prec {
+            Precision::F32 => Box::new(NativeBackend::fixed_with_threads(
+                cfg,
+                &genome,
+                step_threads,
+            )),
+            Precision::F16 => Box::new(TypedNativeBackend::<F16>::fixed_with_threads(
+                cfg,
+                &genome,
+                step_threads,
+            )),
+            Precision::Qfx => Box::new(TypedNativeBackend::<Qfx>::fixed_with_threads(
+                cfg,
+                &genome,
+                step_threads,
+            )),
+        },
         (BackendKind::Fpga, true) => Box::new(FpgaBackend::plastic(cfg, rule, HwConfig::default())),
         (BackendKind::Fpga, false) => {
             Box::new(FpgaBackend::fixed(cfg, &genome, HwConfig::default()))
@@ -331,6 +387,13 @@ fn cmd_adapt(args: &Args, seed: u64) -> i32 {
     let batch = args.get_usize("batch", 1).max(1);
     let grid = args.get_or("grid", "task");
     let kind = BackendKind::parse(&args.get_or("backend", "native"));
+    let prec = match parse_prec(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("bad --prec: {e}");
+            return 2;
+        }
+    };
     // Adaptation parallelizes by *scenario chunk* (plant + network per
     // chunk), not by step: --adapt-threads picks the chunk count for
     // the native backend's chunked engine (0 = all CPU cores).
@@ -480,13 +543,31 @@ fn cmd_adapt(args: &Args, seed: u64) -> i32 {
         // from exactly the state the old reused-backend loop produced
         // via per-session resets.
         for chunk in scenarios.chunks(batch) {
-            let run = run_chunked_adaptation::<f32>(
-                &net_cfg,
-                spec.clone(),
-                &cfg,
-                chunk,
-                effective_threads,
-            );
+            // --prec selects the chunk backends' scalar domain; the
+            // engine and schedule are identical across all three.
+            let run = match prec {
+                Precision::F32 => run_chunked_adaptation::<f32>(
+                    &net_cfg,
+                    spec.clone(),
+                    &cfg,
+                    chunk,
+                    effective_threads,
+                ),
+                Precision::F16 => run_chunked_adaptation::<F16>(
+                    &net_cfg,
+                    spec.clone(),
+                    &cfg,
+                    chunk,
+                    effective_threads,
+                ),
+                Precision::Qfx => run_chunked_adaptation::<Qfx>(
+                    &net_cfg,
+                    spec.clone(),
+                    &cfg,
+                    chunk,
+                    effective_threads,
+                ),
+            };
             // Per-run registries merge in chunk order: the aggregate
             // report is independent of batch size and thread count.
             let mut m = Metrics::new();
@@ -541,9 +622,10 @@ fn cmd_adapt(args: &Args, seed: u64) -> i32 {
     let total_steps: usize = logs.iter().map(|l| l.rewards.len()).sum();
     let summary = GridSummary::from_logs(&logs);
     println!(
-        "env={env} backend={backend_name} grid={grid} sessions={} batch={batch} \
+        "env={env} backend={backend_name} prec={} grid={grid} sessions={} batch={batch} \
          adapt_threads={effective_threads} steps_per_s={:.0} mean_reward={:.2} \
          mean_recovery={:.3} recovered={}/{} time_to_recover_p50={:.1}",
+        prec.as_str(),
         summary.sessions,
         total_steps as f64 / elapsed.max(1e-9),
         summary.mean_total_reward,

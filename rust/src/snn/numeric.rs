@@ -1,12 +1,36 @@
-//! Numeric abstraction over the two arithmetic domains the system runs
-//! in: host `f32` (ES rollouts, XLA artifact) and bit-accurate IEEE
-//! binary16 [`F16`] (the FPGA datapath, §III-A of the paper).
+//! Numeric abstraction over the three arithmetic domains the system runs
+//! in: host `f32` (ES rollouts, XLA artifact), bit-accurate IEEE binary16
+//! [`F16`] (the FPGA datapath, §III-A of the paper), and integer Q5.10
+//! fixed-point [`Qfx`] (the hardware-parity DSP datapath,
+//! [`crate::util::fixed`]).
 //!
 //! Every operation on [`Scalar`] rounds like a native ALU of that width:
 //! for `F16` each op converts to f32, computes, and rounds back with RNE —
-//! exactly one rounding per operation, matching a hardware FP16 FPU.
+//! exactly one rounding per operation, matching a hardware FP16 FPU. For
+//! `Qfx` each op is exact double-width integer arithmetic with a single
+//! RNE requantization (multiplies) and saturation (adds) — a DSP slice.
+//!
+//! ## The non-finite contract (identical in every domain)
+//!
+//! [`Scalar::saturating_add`] guards weight accumulation, so its edge
+//! behaviour is part of the cross-domain contract:
+//!
+//! - an overflowing or infinite sum **saturates** to the domain's largest
+//!   finite magnitude (±[`f32::MAX`], ±65504 for `F16`,
+//!   [`Qfx::MAX`]/[`Qfx::MIN`]);
+//! - a NaN sum (NaN operand, or ∞ − ∞) collapses to **`ZERO`** — the one
+//!   value every domain represents that keeps the weight finite and the
+//!   poisoned update inert. `Qfx` satisfies this by construction: NaN
+//!   cannot enter the domain ([`Qfx::from_f32`] quantizes NaN to zero),
+//!   so its adder never sees one.
+//!
+//! The f32 impl originally propagated NaN here (`clamp` on NaN returns
+//! NaN) while F16 returned its NaN encoding — the domains disagreed and
+//! neither kept weights finite; the contract above is pinned by the
+//! `saturating_add_*` tests below.
 
-use crate::util::fp16::F16;
+use crate::util::fixed::Qfx;
+use crate::util::fp16::{F16, F16_MAX};
 
 /// A scalar the SNN core can compute in.
 pub trait Scalar: Copy + Clone + PartialOrd + std::fmt::Debug + Send + Sync + 'static {
@@ -38,6 +62,10 @@ pub trait Scalar: Copy + Clone + PartialOrd + std::fmt::Debug + Send + Sync + 's
 
     /// Saturating add used for weight accumulation (hardware saturates
     /// rather than overflowing to ±inf).
+    ///
+    /// Edge contract, identical across domains (see the module docs):
+    /// an overflowing/infinite sum saturates to the largest finite
+    /// magnitude; a NaN sum collapses to `ZERO`.
     fn saturating_add(self, rhs: Self) -> Self;
 
     /// Clamp into `[lo, hi]` (the weight-clip backstop).
@@ -45,6 +73,33 @@ pub trait Scalar: Copy + Clone + PartialOrd + std::fmt::Debug + Send + Sync + 's
 
     /// False for NaN/±inf (stability diagnostics).
     fn is_finite(self) -> bool;
+
+    /// The raw storage bits, zero-extended to `u32` — the canonical
+    /// fingerprint for bit-exactness conformance (f32: the IEEE bit
+    /// pattern; F16: the `u16` pattern; Qfx: the two's-complement
+    /// payload reinterpreted as `u16`).
+    fn bit_pattern(self) -> u32;
+
+    /// Quantize a **positive gate threshold** (the plasticity ε of
+    /// `PlasticityConfig::trace_eps`), rounding *up* to the domain's next
+    /// representable value instead of to-nearest.
+    ///
+    /// Rationale: the ε-gate skips a synapse row only when every active
+    /// presynaptic trace is *below* ε. RNE quantization of a sub-quantum
+    /// threshold would round it to zero, and `trace < 0` never holds — the
+    /// gate would silently disengage in coarse domains (Qfx's quantum is
+    /// 2⁻¹⁰; the FP16-aware default ε = 2⁻²⁴ is far below it) while the
+    /// lazy-trace hot-mask prefilter, which tests the f32 ε, kept
+    /// skipping — the two gate tiers would disagree. Ceiling quantization
+    /// floors ε at the smallest positive representable value, so "below
+    /// ε" degrades to exactly "no representable drive at this domain's
+    /// granularity": in Qfx a skipped row is one whose traces are all
+    /// *exactly* zero — precisely the rows the hot-mask prefilter skips,
+    /// and lossless for γ = δ = 0 rules. For thresholds the domain
+    /// represents exactly (ε = 2⁻²⁴ in f32 and F16) this is the identity,
+    /// so the FP16 ε-tolerance contract of `PlasticityConfig` is
+    /// unchanged.
+    fn quantize_threshold(x: f32) -> Self;
 }
 
 impl Scalar for f32 {
@@ -82,6 +137,11 @@ impl Scalar for f32 {
     #[inline]
     fn saturating_add(self, rhs: f32) -> f32 {
         let s = self + rhs;
+        if s.is_nan() {
+            // NaN sum → ZERO (cross-domain contract; `clamp` would
+            // propagate the NaN).
+            return 0.0;
+        }
         s.clamp(f32::MIN, f32::MAX)
     }
     #[inline]
@@ -91,6 +151,14 @@ impl Scalar for f32 {
     #[inline]
     fn is_finite(self) -> bool {
         f32::is_finite(self)
+    }
+    #[inline]
+    fn bit_pattern(self) -> u32 {
+        self.to_bits()
+    }
+    #[inline]
+    fn quantize_threshold(x: f32) -> f32 {
+        x
     }
 }
 
@@ -131,7 +199,13 @@ impl Scalar for F16 {
     }
     #[inline]
     fn saturating_add(self, rhs: F16) -> F16 {
-        F16::from_f32_saturating(self.to_f32() + rhs.to_f32())
+        let s = self.to_f32() + rhs.to_f32();
+        if s.is_nan() {
+            // NaN sum → ZERO (cross-domain contract; `from_f32_saturating`
+            // would return the NaN encoding).
+            return <F16 as Scalar>::ZERO;
+        }
+        F16::from_f32_saturating(s)
     }
     #[inline]
     fn clamp(self, lo: F16, hi: F16) -> F16 {
@@ -140,6 +214,91 @@ impl Scalar for F16 {
     #[inline]
     fn is_finite(self) -> bool {
         F16::is_finite(self)
+    }
+    #[inline]
+    fn bit_pattern(self) -> u32 {
+        self.0 as u32
+    }
+    #[inline]
+    fn quantize_threshold(x: f32) -> F16 {
+        // Ceiling quantization for positive thresholds: if RNE rounded
+        // below x, bump one ulp (stopping at the largest finite value).
+        let q = F16::from_f32_saturating(x);
+        if x > 0.0 && q.to_f32() < x && q.0 < F16_MAX.0 {
+            F16(q.0 + 1)
+        } else {
+            q
+        }
+    }
+}
+
+impl Scalar for Qfx {
+    const ZERO: Qfx = Qfx::ZERO;
+    const ONE: Qfx = Qfx::ONE;
+
+    #[inline]
+    fn from_f32(x: f32) -> Qfx {
+        Qfx::from_f32(x)
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        Qfx::to_f32(self)
+    }
+    #[inline]
+    fn add(self, rhs: Qfx) -> Qfx {
+        // The DSP adder always saturates — there is no wrapping variant
+        // in the datapath, so plain add and saturating_add coincide.
+        self.sat_add(rhs)
+    }
+    #[inline]
+    fn sub(self, rhs: Qfx) -> Qfx {
+        self.sat_sub(rhs)
+    }
+    #[inline]
+    fn mul(self, rhs: Qfx) -> Qfx {
+        self.sat_mul(rhs)
+    }
+    #[inline]
+    fn mul_add(self, a: Qfx, b: Qfx) -> Qfx {
+        Qfx::mul_add(self, a, b)
+    }
+    #[inline]
+    fn half(self) -> Qfx {
+        // The hardware leak unit is an arithmetic shift with RNE on the
+        // dropped bit — identical to multiplying by the exact 0.5.
+        self.sat_mul(Qfx::HALF)
+    }
+    #[inline]
+    fn saturating_add(self, rhs: Qfx) -> Qfx {
+        self.sat_add(rhs)
+    }
+    #[inline]
+    fn clamp(self, lo: Qfx, hi: Qfx) -> Qfx {
+        Qfx(self.0.clamp(lo.0, hi.0))
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        true
+    }
+    #[inline]
+    fn bit_pattern(self) -> u32 {
+        (self.0 as u16) as u32
+    }
+    #[inline]
+    fn quantize_threshold(x: f32) -> Qfx {
+        if x.is_nan() {
+            return Qfx::ZERO;
+        }
+        // Ceiling onto the Q5.10 grid: a sub-quantum positive ε floors
+        // at one quantum, so the gate never silently disengages.
+        let scaled = ((x as f64) * Qfx::SCALE as f64).ceil();
+        if scaled >= i16::MAX as f64 {
+            return Qfx::MAX;
+        }
+        if scaled <= i16::MIN as f64 {
+            return Qfx::MIN;
+        }
+        Qfx(scaled as i16)
     }
 }
 
@@ -201,5 +360,112 @@ mod tests {
         for (a, b) in xs.iter().zip(back.iter()) {
             assert!((a - b).abs() / a.abs().max(1.0) < 1e-3);
         }
+    }
+
+    #[test]
+    fn saturating_add_nan_sum_collapses_to_zero() {
+        // Regression (cross-domain contract): the f32 impl used to
+        // propagate NaN (`clamp` on NaN returns NaN) and the F16 impl
+        // returned its NaN encoding — both must yield ZERO.
+        assert_eq!(Scalar::saturating_add(f32::NAN, 1.0f32).to_bits(), 0.0f32.to_bits());
+        assert_eq!(Scalar::saturating_add(1.0f32, f32::NAN).to_bits(), 0.0f32.to_bits());
+        assert_eq!(
+            Scalar::saturating_add(f32::INFINITY, f32::NEG_INFINITY).to_bits(),
+            0.0f32.to_bits()
+        );
+        let f16_nan = F16::from_f32(f32::NAN);
+        assert_eq!(Scalar::saturating_add(f16_nan, <F16 as Scalar>::ONE).to_bits(), 0x0000);
+        assert_eq!(Scalar::saturating_add(<F16 as Scalar>::ONE, f16_nan).to_bits(), 0x0000);
+        let f16_inf = F16::from_f32(f32::INFINITY);
+        assert_eq!(Scalar::saturating_add(f16_inf, -f16_inf).to_bits(), 0x0000);
+        // Qfx holds the contract by construction: NaN never enters the
+        // domain, so the adder cannot see one.
+        assert_eq!(Qfx::from_f32(f32::NAN), Qfx::ZERO);
+    }
+
+    #[test]
+    fn saturating_add_infinite_sum_saturates() {
+        assert_eq!(Scalar::saturating_add(f32::INFINITY, 1.0f32), f32::MAX);
+        assert_eq!(Scalar::saturating_add(f32::NEG_INFINITY, -1.0f32), f32::MIN);
+        let f16_inf = F16::from_f32(f32::INFINITY);
+        assert_eq!(Scalar::saturating_add(f16_inf, <F16 as Scalar>::ONE).to_bits(), F16_MAX.0);
+        assert_eq!(
+            Scalar::saturating_add(-f16_inf, <F16 as Scalar>::ONE).to_bits(),
+            (-F16_MAX).to_bits()
+        );
+        assert_eq!(Scalar::saturating_add(Qfx::MAX, Qfx::ONE), Qfx::MAX);
+        assert_eq!(Scalar::saturating_add(Qfx::MIN, -Qfx::ONE), Qfx::MIN);
+    }
+
+    #[test]
+    fn saturating_add_cross_domain_property() {
+        // For every domain and any inputs (including NaN/±inf injected at
+        // quantization): the result of saturating_add is finite. This is
+        // the whole point of the op — a weight can never leave the finite
+        // range however poisoned the update is.
+        fn probe<S: Scalar>(a: f32, b: f32, seed: u64) {
+            let r = S::from_f32(a).saturating_add(S::from_f32(b));
+            assert!(r.is_finite(), "saturating_add({a}, {b}) = {r:?} not finite (seed {seed:#x})");
+        }
+        crate::util::proptest::check(256, |g| {
+            let pick = |g: &mut crate::util::proptest::Gen| match g.rng.below(5) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                _ => g.edgy_f32(),
+            };
+            let a = pick(g);
+            let b = pick(g);
+            probe::<f32>(a, b, g.seed);
+            probe::<F16>(a, b, g.seed);
+            probe::<Qfx>(a, b, g.seed);
+        });
+    }
+
+    #[test]
+    fn qfx_scalar_matches_network_constants() {
+        // The paper constants must be exactly representable so the Qfx
+        // pipeline quantizes configs without drift.
+        for exact in [0.5f32, 1.0, 2.0, 4.0, -4.0, 0.0] {
+            assert_eq!(<Qfx as Scalar>::from_f32(exact).to_f32(), exact);
+        }
+        assert_eq!(<Qfx as Scalar>::ONE.half(), Qfx::HALF);
+    }
+
+    #[test]
+    fn quantize_threshold_never_rounds_to_zero() {
+        // The FP16-aware default ε = 2⁻²⁴ is sub-quantum in Qfx: ceiling
+        // quantization floors it at one quantum instead of disengaging
+        // the gate.
+        let eps = 2f32.powi(-24);
+        assert_eq!(<Qfx as Scalar>::quantize_threshold(eps), Qfx::EPSILON);
+        // Exactly representable thresholds are unchanged in f32/F16
+        // (2⁻²⁴ is the smallest F16 subnormal).
+        assert_eq!(<f32 as Scalar>::quantize_threshold(eps), eps);
+        assert_eq!(<F16 as Scalar>::quantize_threshold(eps).to_bits(), 0x0001);
+        // A sub-subnormal threshold rounds *up* in F16 too.
+        assert_eq!(<F16 as Scalar>::quantize_threshold(2f32.powi(-26)).to_bits(), 0x0001);
+        // On-grid Qfx thresholds are identity.
+        assert_eq!(<Qfx as Scalar>::quantize_threshold(0.25).to_f32(), 0.25);
+        // Ceiling property: result is never below the requested threshold
+        // unless saturated at the top of the domain.
+        crate::util::proptest::check(128, |g| {
+            let x = g.f32_range(1e-9, 8.0);
+            let q = <Qfx as Scalar>::quantize_threshold(x);
+            assert!(
+                q.to_f32() >= x || q == Qfx::MAX,
+                "threshold rounded down: {x} -> {q:?} (seed {:#x})",
+                g.seed
+            );
+            assert!(q > Qfx::ZERO, "positive threshold collapsed to zero (seed {:#x})", g.seed);
+        });
+    }
+
+    #[test]
+    fn bit_pattern_is_storage_exact() {
+        assert_eq!(1.0f32.bit_pattern(), 1.0f32.to_bits());
+        assert_eq!(<F16 as Scalar>::ONE.bit_pattern(), 0x3C00);
+        assert_eq!(Qfx::ONE.bit_pattern(), 1 << Qfx::FRAC);
+        assert_eq!(Qfx(-1).bit_pattern(), 0xFFFF);
     }
 }

@@ -144,6 +144,17 @@ pub struct PlasticityConfig {
     /// gate consistently ("FP16-aware"). Traces are non-negative; a row
     /// is skipped iff every active lane's pre-trace is `< trace_eps`.
     /// Setting `0.0` makes the gate a no-op (nothing is below zero).
+    ///
+    /// **Coarse-domain extension (Qfx):** the threshold is quantized into
+    /// the scalar domain with *ceiling* rounding
+    /// ([`crate::snn::numeric::Scalar::quantize_threshold`]), never
+    /// to-nearest. In f32/F16 the default ε is exactly representable and
+    /// nothing changes; in Q5.10 fixed point ε floors at one quantum
+    /// (2⁻¹⁰), so a skipped row is one whose pre-traces are all *exactly
+    /// zero* — the same rows the lazy hot-mask prefilter skips, and the
+    /// same lossless γ = δ = 0 guarantee the FP16 sub-ε case gives:
+    /// sub-quantum traces don't exist in Qfx, a decayed trace is exactly
+    /// zero, so the gate drops only terms such a rule never produces.
     pub trace_eps: f32,
 }
 
@@ -270,7 +281,11 @@ pub fn apply_update_batch<S: Scalar>(
     let eta = S::from_f32(cfg.eta);
     let lo = S::from_f32(-cfg.w_clip);
     let hi = S::from_f32(cfg.w_clip);
-    let eps = S::from_f32(cfg.trace_eps);
+    // Ceiling ε quantization (identical in the dense oracle): a positive
+    // threshold never rounds down to zero in a coarse domain, so the
+    // value scan below and the hot-mask prefilter above agree on which
+    // rows carry no representable drive.
+    let eps = S::quantize_threshold(cfg.trace_eps);
     // Full-batch ticks (the serving steady state) take a mask-free inner
     // loop: a branchless contiguous sweep over the session lanes that
     // the compiler can keep in SIMD registers.

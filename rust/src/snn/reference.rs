@@ -129,7 +129,9 @@ pub fn apply_update_batch_dense<S: Scalar>(
     let eta = S::from_f32(cfg.eta);
     let lo = S::from_f32(-cfg.w_clip);
     let hi = S::from_f32(cfg.w_clip);
-    let eps = S::from_f32(cfg.trace_eps);
+    // Ceiling ε quantization — must match `apply_update_batch` exactly
+    // (see `Scalar::quantize_threshold` for the coarse-domain rationale).
+    let eps = S::quantize_threshold(cfg.trace_eps);
     let mut visited = 0usize;
     for j in 0..params.pre {
         let pre_row = &pre_trace[j * batch..(j + 1) * batch];

@@ -101,13 +101,30 @@ impl FaultPlan {
     /// `horizon` occurrences with probability `rate`, from its own
     /// deterministic stream — same seed, same plan, every run.
     pub fn seeded(seed: u64, horizon: usize, rate: f64) -> FaultPlan {
-        let mut plan = FaultPlan::new();
-        for site in ALL_SITES {
+        FaultPlan::new().seeded_at(seed, horizon, rate, &ALL_SITES)
+    }
+
+    /// Builder: seed only the listed `sites`, each from the same
+    /// per-site stream [`FaultPlan::seeded`] uses (`Pcg64::new(seed,
+    /// 0xFA17 ^ site)`), so restricting the site list never perturbs the
+    /// surviving sites' schedules. Soak harnesses use this to randomize
+    /// only the sites they can actually recover from, with per-site
+    /// horizons (chain calls) matched to each site's visit budget —
+    /// a schedule that outruns a site's visits would trip
+    /// [`FaultPlan::assert_exhausted`].
+    pub fn seeded_at(
+        mut self,
+        seed: u64,
+        horizon: usize,
+        rate: f64,
+        sites: &[FaultSite],
+    ) -> FaultPlan {
+        for &site in sites {
             let mut rng = Pcg64::new(seed, 0xFA17 ^ site as u64);
             let at: Vec<usize> = (0..horizon).filter(|_| rng.bernoulli(rate)).collect();
-            plan = plan.at(site, &at);
+            self = self.at(site, &at);
         }
-        plan
+        self
     }
 
     /// Visit `site`: record the hit and return whether this occurrence
@@ -241,6 +258,30 @@ mod tests {
         let expect: Vec<bool> = (0..1000).map(|_| rng.bernoulli(0.1)).collect();
         let got: Vec<bool> = (0..1000).map(|_| plan.fire(FaultSite::CheckpointWrite)).collect();
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn seeded_subset_matches_full_seeded_streams_and_leaves_rest_unarmed() {
+        // A site-restricted seeded plan must schedule the listed sites
+        // byte-identically to the all-sites plan (per-site streams are
+        // independent) and leave every unlisted site empty.
+        let full = FaultPlan::seeded(11, 200, 0.15);
+        let sub = FaultPlan::new().seeded_at(
+            11,
+            200,
+            0.15,
+            &[FaultSite::SubscriberCut, FaultSite::SchedulerDelay],
+        );
+        for site in [FaultSite::SubscriberCut, FaultSite::SchedulerDelay] {
+            let a: Vec<bool> = (0..200).map(|_| full.fire(site)).collect();
+            let b: Vec<bool> = (0..200).map(|_| sub.fire(site)).collect();
+            assert_eq!(a, b, "{site:?} schedule diverged from FaultPlan::seeded");
+        }
+        assert!(
+            (0..200).all(|_| !sub.fire(FaultSite::RunnerPanic)),
+            "unlisted sites must never fire"
+        );
+        sub.assert_exhausted();
     }
 
     #[test]

@@ -1,0 +1,376 @@
+//! Integer Q-format fixed-point arithmetic — the hardware-parity scalar
+//! domain (ROADMAP "fixed-point quantized batched backend").
+//!
+//! FireFly-P's published datapath computes in FP16, but the packed-integer
+//! engineering that FireFly (arXiv:2301.01905) and FireFly v2
+//! (arXiv:2309.16158) earn their throughput from is narrow *fixed-point*:
+//! 16-bit lanes double effective SIMD width over f32 and halve the
+//! working set, and a DSP slice's multiply-accumulate is an integer
+//! operation with one requantization at the end. [`Qfx`] is that
+//! arithmetic as a software scalar: an `i16` Q5.10 value (1 sign bit,
+//! 5 integer bits, [`Qfx::FRAC`] = 10 fraction bits) on which **every
+//! operation rounds like a DSP ALU** —
+//!
+//! - add/sub **saturate** to the representable range ([`Qfx::MIN`],
+//!   [`Qfx::MAX`]) instead of wrapping or overflowing to ±inf,
+//! - multiply computes the exact double-width integer product and
+//!   **requantizes once with round-to-nearest-even** (RNE) back to the
+//!   Q5.10 grid, saturating on overflow,
+//! - [`Qfx::mul_add`] keeps the product in the wide accumulator, aligns
+//!   the addend, and performs a **single terminal RNE requantization** —
+//!   the DSP48-style fused multiply-accumulate,
+//! - [`Qfx::from_f32`] quantizes with RNE and saturates; there is no NaN
+//!   or infinity in the format (`NaN` quantizes to zero — see
+//!   [`Qfx::from_f32`]).
+//!
+//! The Q5.10 split is chosen by the network's value ranges: the paper
+//! constants λ = 0.5, v_th = 1.0, w_clip = 4.0 and input gain 2.0 are all
+//! exactly representable, the λ = 0.5 trace saturation 1/(1−λ) = 2 sits
+//! well inside the ±32 span, and the 2⁻¹⁰ quantum resolves the default
+//! η = 0.05 learning-rate scale to 51 quanta. Deeper fraction widths
+//! trade psum headroom for weight resolution; the width is a single
+//! constant ([`Qfx::FRAC`]) so a different Q-format is one edit plus a
+//! conformance re-run.
+//!
+//! Mirroring the FP16 contract in [`crate::snn::numeric`]: exactly one
+//! rounding per operation, so the simulator lane and the batched backend
+//! agree bit-for-bit by construction (`tests/fixed_point_conformance.rs`).
+//! λ = 0.5 decay is RNE halving of the raw value — every value decays to
+//! exactly 0 in at most 16 steps, giving the lazy-trace machinery its
+//! decay fixed point, and a drained lane is *exactly* zero (the cold
+//! invariant the plasticity gate's hot-mask prefilter relies on).
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Mul, Neg, Sub};
+
+/// Q5.10 fixed-point value, stored as its raw scaled integer: the
+/// represented value is `raw / 2^FRAC`.
+#[derive(Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Qfx(
+    /// Raw two's-complement payload (value × 2¹⁰).
+    pub i16,
+);
+
+impl Qfx {
+    /// Fraction width of the Q-format (Q5.10: 1 sign + 5 integer +
+    /// `FRAC` fraction bits).
+    pub const FRAC: u32 = 10;
+    /// Scale factor `2^FRAC` relating raw payloads to values.
+    pub const SCALE: i32 = 1 << Self::FRAC;
+    /// Additive identity.
+    pub const ZERO: Qfx = Qfx(0);
+    /// Multiplicative identity (raw `2^FRAC`).
+    pub const ONE: Qfx = Qfx(1 << Self::FRAC);
+    /// One half — the λ = 0.5 decay constant (raw `2^(FRAC−1)`).
+    pub const HALF: Qfx = Qfx(1 << (Self::FRAC - 1));
+    /// Largest representable value: `(2^15 − 1) / 2^10` ≈ 31.999.
+    pub const MAX: Qfx = Qfx(i16::MAX);
+    /// Most negative representable value: `−2^15 / 2^10` = −32.
+    pub const MIN: Qfx = Qfx(i16::MIN);
+    /// One quantum, `2^−FRAC` — the resolution of the grid.
+    pub const EPSILON: Qfx = Qfx(1);
+
+    /// Construct from a raw scaled payload.
+    #[inline]
+    pub const fn from_bits(bits: i16) -> Self {
+        Qfx(bits)
+    }
+
+    /// Raw scaled payload.
+    #[inline]
+    pub const fn to_bits(self) -> i16 {
+        self.0
+    }
+
+    /// Quantize an f32 onto the Q5.10 grid with round-to-nearest-even,
+    /// saturating to [`Qfx::MIN`]/[`Qfx::MAX`] (±inf included — the
+    /// format has no infinities). `NaN` quantizes to [`Qfx::ZERO`]: a
+    /// fixed-point datapath has no non-numeric encoding, so the
+    /// non-finite contract ([`crate::snn::numeric::Scalar::saturating_add`])
+    /// maps NaN to the additive identity in every domain.
+    pub fn from_f32(x: f32) -> Self {
+        if x.is_nan() {
+            return Qfx::ZERO;
+        }
+        // ×2^FRAC is exact in f64 for every finite f32 (pure exponent
+        // shift), so the RNE below is the only rounding performed.
+        let scaled = (x as f64) * Self::SCALE as f64;
+        if scaled >= i16::MAX as f64 {
+            return Qfx::MAX;
+        }
+        if scaled <= i16::MIN as f64 {
+            return Qfx::MIN;
+        }
+        let floor = scaled.floor();
+        let rem = scaled - floor;
+        let mut n = floor as i32;
+        if rem > 0.5 || (rem == 0.5 && (n & 1) == 1) {
+            n += 1;
+        }
+        Qfx(sat16(n))
+    }
+
+    /// Widen to f32 — exact: every Q5.10 value is an integer multiple of
+    /// 2⁻¹⁰ with ≤ 15 significant bits.
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / Self::SCALE as f32
+    }
+
+    /// Saturating addition (the DSP adder never wraps).
+    #[inline]
+    pub fn sat_add(self, rhs: Qfx) -> Qfx {
+        Qfx(sat16(self.0 as i32 + rhs.0 as i32))
+    }
+
+    /// Saturating subtraction.
+    #[inline]
+    pub fn sat_sub(self, rhs: Qfx) -> Qfx {
+        Qfx(sat16(self.0 as i32 - rhs.0 as i32))
+    }
+
+    /// Multiply: exact 32-bit product, one RNE requantization back to the
+    /// Q5.10 grid, saturate on overflow.
+    #[inline]
+    pub fn sat_mul(self, rhs: Qfx) -> Qfx {
+        Qfx(sat16(rne_shr(self.0 as i32 * rhs.0 as i32, Self::FRAC)))
+    }
+
+    /// Fused multiply-add `self·a + b`, DSP-style: the double-width
+    /// product stays in the wide accumulator, `b` is aligned up to the
+    /// product's fraction width, and a **single** terminal RNE
+    /// requantization (then saturation) produces the result — matching
+    /// the one-rounding profile of [`crate::util::fp16::F16::mul_add`].
+    #[inline]
+    pub fn mul_add(self, a: Qfx, b: Qfx) -> Qfx {
+        let wide = self.0 as i32 * a.0 as i32 + ((b.0 as i32) << Self::FRAC);
+        Qfx(sat16(rne_shr(wide, Self::FRAC)))
+    }
+
+    /// Absolute value (saturating: `|MIN|` clamps to [`Qfx::MAX`]).
+    #[inline]
+    pub fn abs(self) -> Qfx {
+        Qfx(sat16((self.0 as i32).abs()))
+    }
+
+    /// True for every `Qfx` — the format has no NaN or infinities.
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        true
+    }
+}
+
+/// Saturate a 32-bit intermediate to the i16 payload range.
+#[inline]
+fn sat16(x: i32) -> i16 {
+    x.clamp(i16::MIN as i32, i16::MAX as i32) as i16
+}
+
+/// Arithmetic shift right by `shift` with round-to-nearest-even on the
+/// dropped bits — the requantization step of every multiply. Works for
+/// negative values too: `>>` on `i32` floors, leaving a non-negative
+/// remainder to round.
+#[inline]
+fn rne_shr(x: i32, shift: u32) -> i32 {
+    let floor = x >> shift;
+    let rem = x - (floor << shift);
+    let half = 1i32 << (shift - 1);
+    if rem > half || (rem == half && (floor & 1) == 1) {
+        floor + 1
+    } else {
+        floor
+    }
+}
+
+impl Add for Qfx {
+    type Output = Qfx;
+    #[inline]
+    fn add(self, rhs: Qfx) -> Qfx {
+        self.sat_add(rhs)
+    }
+}
+
+impl AddAssign for Qfx {
+    #[inline]
+    fn add_assign(&mut self, rhs: Qfx) {
+        *self = self.sat_add(rhs);
+    }
+}
+
+impl Sub for Qfx {
+    type Output = Qfx;
+    #[inline]
+    fn sub(self, rhs: Qfx) -> Qfx {
+        self.sat_sub(rhs)
+    }
+}
+
+impl Mul for Qfx {
+    type Output = Qfx;
+    #[inline]
+    fn mul(self, rhs: Qfx) -> Qfx {
+        self.sat_mul(rhs)
+    }
+}
+
+impl Neg for Qfx {
+    type Output = Qfx;
+    #[inline]
+    fn neg(self) -> Qfx {
+        Qfx(sat16(-(self.0 as i32)))
+    }
+}
+
+impl fmt::Debug for Qfx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Qfx({}={:#06x})", self.to_f32(), self.0 as u16)
+    }
+}
+
+impl fmt::Display for Qfx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+impl From<f32> for Qfx {
+    fn from(x: f32) -> Qfx {
+        Qfx::from_f32(x)
+    }
+}
+
+impl From<Qfx> for f32 {
+    fn from(x: Qfx) -> f32 {
+        x.to_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_are_exact() {
+        assert_eq!(Qfx::from_f32(0.0).to_bits(), 0);
+        assert_eq!(Qfx::from_f32(1.0), Qfx::ONE);
+        assert_eq!(Qfx::from_f32(0.5), Qfx::HALF);
+        assert_eq!(Qfx::from_f32(4.0).to_bits(), 4 << Qfx::FRAC);
+        assert_eq!(Qfx::from_f32(2.0).to_bits(), 2 << Qfx::FRAC);
+        assert_eq!(Qfx::from_f32(-4.0).to_bits(), -(4 << Qfx::FRAC) as i16);
+    }
+
+    #[test]
+    fn exhaustive_round_trip_qfx_f32_qfx() {
+        // Every raw payload must survive the f32 round trip exactly
+        // (to_f32 is exact, from_f32 rounds a grid point to itself).
+        for bits in i16::MIN..=i16::MAX {
+            let q = Qfx(bits);
+            assert_eq!(Qfx::from_f32(q.to_f32()).to_bits(), bits, "round-trip failed at {bits}");
+        }
+    }
+
+    #[test]
+    fn from_f32_rounds_to_nearest_even() {
+        let quantum = 1.0 / Qfx::SCALE as f32;
+        // exact midpoint between raw 0 and raw 1 → ties to even → 0
+        assert_eq!(Qfx::from_f32(quantum * 0.5).to_bits(), 0);
+        // midpoint between raw 1 and raw 2 → ties to even → 2
+        assert_eq!(Qfx::from_f32(quantum * 1.5).to_bits(), 2);
+        // just above a midpoint rounds up
+        assert_eq!(Qfx::from_f32(quantum * 0.5 + 1e-6).to_bits(), 1);
+        // negative midpoints tie to even as well
+        assert_eq!(Qfx::from_f32(-quantum * 0.5).to_bits(), 0);
+        assert_eq!(Qfx::from_f32(-quantum * 1.5).to_bits(), -2);
+    }
+
+    #[test]
+    fn from_f32_saturates_nonfinite_and_out_of_range() {
+        assert_eq!(Qfx::from_f32(1e9), Qfx::MAX);
+        assert_eq!(Qfx::from_f32(-1e9), Qfx::MIN);
+        assert_eq!(Qfx::from_f32(f32::INFINITY), Qfx::MAX);
+        assert_eq!(Qfx::from_f32(f32::NEG_INFINITY), Qfx::MIN);
+        assert_eq!(Qfx::from_f32(f32::NAN), Qfx::ZERO);
+        // value just past the positive edge rounds into saturation
+        assert_eq!(Qfx::from_f32(32.0), Qfx::MAX);
+    }
+
+    #[test]
+    fn add_sub_saturate() {
+        assert_eq!(Qfx::MAX + Qfx::ONE, Qfx::MAX);
+        assert_eq!(Qfx::MIN - Qfx::ONE, Qfx::MIN);
+        assert_eq!(Qfx::MAX + Qfx::MAX, Qfx::MAX);
+        assert_eq!((Qfx::from_f32(1.5) + Qfx::from_f32(2.25)).to_f32(), 3.75);
+        assert_eq!((Qfx::from_f32(2.25) - Qfx::from_f32(1.5)).to_f32(), 0.75);
+        assert_eq!(-Qfx::MIN, Qfx::MAX, "negating MIN saturates");
+    }
+
+    #[test]
+    fn mul_requantizes_with_rne() {
+        // 1.5 × 2.25 = 3.375: exactly on the grid, no rounding.
+        assert_eq!((Qfx::from_f32(1.5) * Qfx::from_f32(2.25)).to_f32(), 3.375);
+        // quantum × 0.5 = half a quantum → ties to even → 0
+        assert_eq!((Qfx::EPSILON * Qfx::HALF).to_bits(), 0);
+        // 3 quanta × 0.5 = 1.5 quanta → ties to even → 2
+        assert_eq!((Qfx(3) * Qfx::HALF).to_bits(), 2);
+        // overflow saturates instead of wrapping
+        assert_eq!(Qfx::from_f32(8.0) * Qfx::from_f32(8.0), Qfx::MAX);
+        assert_eq!(Qfx::from_f32(-8.0) * Qfx::from_f32(8.0), Qfx::MIN);
+    }
+
+    #[test]
+    fn rne_shr_floors_negatives_correctly() {
+        // −1 quantum halved: −0.5 quanta → ties to even → 0
+        assert_eq!((Qfx(-1) * Qfx::HALF).to_bits(), 0);
+        // −3 quanta halved: −1.5 → ties to even → −2
+        assert_eq!((Qfx(-3) * Qfx::HALF).to_bits(), -2);
+        // −2 quanta halved: exact −1
+        assert_eq!((Qfx(-2) * Qfx::HALF).to_bits(), -1);
+    }
+
+    #[test]
+    fn every_value_decays_to_exactly_zero() {
+        // λ = 0.5 decay must reach the 0 fixed point for every starting
+        // value — the lazy-trace cold invariant (a drained lane is
+        // *exactly* zero) and the decay-horizon bound.
+        for start in [Qfx::MAX, Qfx::ONE, Qfx(3), Qfx::EPSILON, Qfx(-7), Qfx::MIN] {
+            let mut v = start;
+            let mut steps = 0;
+            while v != Qfx::ZERO {
+                let nv = v * Qfx::HALF;
+                assert_ne!(nv, v, "stuck at {v:?} (non-zero fixed point)");
+                v = nv;
+                steps += 1;
+                assert!(steps <= 16, "decay horizon exceeded from {start:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_add_single_terminal_rounding() {
+        // Choose operands where the separate mul would round away a
+        // half-quantum that the fused path keeps: 1.5 quanta product.
+        let a = Qfx(3);
+        let b = Qfx::HALF;
+        let c = Qfx(5);
+        // wide product = 3·512 = 1536 = 1.5 quanta; + c aligned (5120)
+        // → 6656 → RNE(>>10) = 6.5 → ties to even → 6
+        assert_eq!(a.mul_add(b, c).to_bits(), 6);
+        // separate ops: (3·0.5 → RNE → 2) + 5 = 7 — one extra rounding
+        assert_eq!((a * b + c).to_bits(), 7);
+    }
+
+    #[test]
+    fn ordering_matches_values() {
+        assert!(Qfx::from_f32(-1.0) < Qfx::ZERO);
+        assert!(Qfx::ZERO < Qfx::EPSILON);
+        assert!(Qfx::from_f32(1.0) < Qfx::from_f32(2.0));
+        assert_eq!(Qfx::from_f32(0.25).partial_cmp(&Qfx::from_f32(0.25)), Some(Ordering::Equal));
+    }
+
+    #[test]
+    fn abs_saturates_min() {
+        assert_eq!(Qfx(-5).abs(), Qfx(5));
+        assert_eq!(Qfx::MIN.abs(), Qfx::MAX);
+    }
+}

@@ -8,6 +8,7 @@ pub mod binio;
 pub mod config;
 pub mod csvio;
 pub mod faults;
+pub mod fixed;
 pub mod fp16;
 pub mod logging;
 pub mod proptest;

@@ -54,7 +54,7 @@ use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use firefly_p::backend::{NativeBackend, SnnBackend};
+use firefly_p::backend::{NativeBackend, SnnBackend, TypedNativeBackend};
 use firefly_p::coordinator::batch_adapt::{
     BatchAdaptConfig, BatchAdaptEngine, ChunkBackendSpec, ChunkedAdaptEngine, Scenario,
 };
@@ -62,6 +62,7 @@ use firefly_p::coordinator::server::parse_floats_into;
 use firefly_p::env::{train_grid, Perturbation, TaskFamily};
 use firefly_p::snn::encoding::{PopulationEncoder, TraceDecoder};
 use firefly_p::snn::{NetworkRule, SnnConfig};
+use firefly_p::util::fixed::Qfx;
 use firefly_p::util::rng::Pcg64;
 
 /// Serializes the armed windows of the tests in this binary.
@@ -122,7 +123,7 @@ static ALLOCATOR: CountingAlloc = CountingAlloc;
 /// gather, batched step, per-slot trace fetch + decode + ACT format.
 #[allow(clippy::too_many_arguments)]
 fn serve_tick(
-    backend: &mut NativeBackend,
+    backend: &mut dyn SnnBackend,
     encoder: &PopulationEncoder,
     decoder: &TraceDecoder,
     slots: &[usize],
@@ -241,6 +242,91 @@ fn steady_state_obs_requests_allocate_nothing() {
     assert_eq!(
         allocs, 0,
         "steady-state serving loop allocated {allocs} times over 300 ticks × {sessions} sessions"
+    );
+}
+
+#[test]
+fn steady_state_qfx_serving_allocates_nothing() {
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // The hardware-parity fixed-point backend (`--prec qfx`) serves
+    // through the exact same generic pipeline as f32 — same pooled
+    // buffers, same lazy traces — so its steady state must be just as
+    // allocation-free. Q5.10 packs state 2× denser than f32; what this
+    // pins is that nothing in the Qfx arithmetic lane (RNE requantize,
+    // saturating accumulate, trace materialization) reaches for the
+    // heap.
+    let mut cfg = SnnConfig::control(48, 12);
+    cfg.n_hidden = 32;
+    let mut rng = Pcg64::new(18, 0);
+    let mut genome = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut genome, 0.1);
+    let rule = NetworkRule::from_flat(&cfg, &genome);
+
+    let mut backend = TypedNativeBackend::<Qfx>::plastic(cfg, rule);
+    let sessions = 8usize;
+    assert_eq!(backend.ensure_sessions(sessions), sessions);
+    let encoder = PopulationEncoder::symmetric(6, 8, 3.0);
+    let decoder = TraceDecoder::new(6, 0.5);
+
+    let slots: Vec<usize> = (0..sessions).collect();
+    let obs_lines: Vec<String> = (0..sessions)
+        .map(|s| format!("0.1,-0.2,0.3,{:.2},0.5,-0.6", (s as f32) / 9.0))
+        .collect();
+    let mut rngs: Vec<Pcg64> = (0..sessions).map(|s| Pcg64::new(9, s as u64)).collect();
+
+    let mut obs: Vec<f32> = Vec::new();
+    let mut inbufs: Vec<Vec<bool>> = (0..sessions).map(|_| Vec::new()).collect();
+    let mut inputs: Vec<bool> = Vec::new();
+    let mut out_spikes: Vec<bool> = Vec::new();
+    let mut traces: Vec<f32> = Vec::new();
+    let mut action: Vec<f32> = Vec::new();
+    let mut resp = String::new();
+
+    // Warmup: size every pooled buffer and let the backend settle.
+    for _ in 0..50 {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+    }
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for _ in 0..300 {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        allocs, 0,
+        "steady-state qfx serving loop allocated {allocs} times over \
+         300 ticks × {sessions} sessions"
     );
 }
 

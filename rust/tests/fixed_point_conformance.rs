@@ -1,0 +1,345 @@
+//! Hardware-parity conformance of the Q5.10 fixed-point lane: the
+//! batched serving backend at `Qfx` is pinned **bit-for-bit** against
+//! the cycle-accurate FPGA simulator running the same integer datapath.
+//!
+//! Three layers of pinning, in the style of `packed_equivalence.rs` /
+//! `golden_twin`:
+//!
+//! 1. `TypedFpgaSim<Qfx>` ≡ single-session `SnnNetwork<Qfx>` — the
+//!    fixed-point arithmetic lane of the simulator is the golden model
+//!    in a coarser domain, same spikes in, identical state bits out.
+//! 2. `TypedNativeBackend<Qfx>` ≡ one `TypedFpgaSim<Qfx>` per session,
+//!    lane-for-lane, across batch sizes B ∈ {1, 63, 64, 65, 128}
+//!    (word-aligned, sub-word, straddling) and shard stripe counts
+//!    T ∈ {1, 2, 4}: every per-tick output spike and every final
+//!    weight / membrane / trace **storage bit** ([`Scalar::bit_pattern`])
+//!    must match what the hardware simulator computes for that session.
+//! 3. Event-driven serving configuration — lazy input traces plus the
+//!    presynaptic ε-gate — against the identically-gated dense oracle
+//!    (`DenseBatchedNetwork<Qfx>`), including the gate *decisions*
+//!    (`plasticity_rows_visited`) and the lazy-vs-eager trace values.
+//!
+//! The ε-tolerance contract extension this suite enforces (documented at
+//! `PlasticityConfig::trace_eps`): thresholds enter the Qfx domain via
+//! *ceiling* quantization, so the default FP16-subnormal ε floors at one
+//! quantum (2⁻¹⁰) instead of rounding to zero — a skipped Qfx row is one
+//! whose pre-traces are all exactly zero, which is also exactly the set
+//! of rows the lazy hot-mask prefilter skips. Gate decisions therefore
+//! agree bit-for-bit between the lazy packed path and the value-scanning
+//! dense oracle.
+
+use firefly_p::backend::{SnnBackend, TypedNativeBackend};
+use firefly_p::fpga::sim::golden_twin;
+use firefly_p::fpga::{HwConfig, TypedFpgaSim};
+use firefly_p::snn::reference::DenseBatchedNetwork;
+use firefly_p::snn::shard::{local_batch, locate};
+use firefly_p::snn::{
+    Mode, NetworkRule, PlasticityConfig, RuleParams, Scalar, SnnConfig, SnnNetwork,
+};
+use firefly_p::util::fixed::Qfx;
+use firefly_p::util::proptest::{check, Gen};
+use firefly_p::util::rng::Pcg64;
+
+/// Batch sizes the backend-vs-simulator grid sweeps: the ISSUE's pinned
+/// set — single session, word-straddling, word-aligned, and multi-word.
+const GRID_BATCHES: [usize; 5] = [1, 63, 64, 65, 128];
+/// Shard stripe counts (serving `--step-threads`) the grid sweeps.
+const GRID_THREADS: [usize; 3] = [1, 2, 4];
+
+fn random_rule(cfg: &SnnConfig, seed: u64) -> (RuleParams, RuleParams) {
+    let mut rng = Pcg64::new(seed, 0);
+    (
+        RuleParams::random(cfg.n_in, cfg.n_hidden, 0.2, &mut rng),
+        RuleParams::random(cfg.n_hidden, cfg.n_out, 0.2, &mut rng),
+    )
+}
+
+/// Storage bits of a single-session golden network's full state, in the
+/// simulator's `state_fingerprint` layout: (weights L1‖L2, membranes
+/// hidden‖out, traces in‖hidden‖out).
+fn golden_bits<S: Scalar>(net: &SnnNetwork<S>) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+    let w: Vec<u32> = net.w1.iter().chain(net.w2.iter()).map(|x| x.bit_pattern()).collect();
+    let v: Vec<u32> = net
+        .hidden
+        .v
+        .iter()
+        .chain(net.output.v.iter())
+        .map(|x| x.bit_pattern())
+        .collect();
+    let t: Vec<u32> = net
+        .trace_in
+        .values
+        .iter()
+        .chain(net.trace_hidden.values.iter())
+        .chain(net.trace_out.values.iter())
+        .map(|x| x.bit_pattern())
+        .collect();
+    (w, v, t)
+}
+
+/// Storage bits of one session's state inside a (possibly sharded)
+/// batched backend, in the same layout as [`golden_bits`] /
+/// `TypedFpgaSim::state_fingerprint`. Sessions map to shards via the
+/// migration-free word-stripe layout (`snn::shard::locate`); trace reads
+/// go through `TraceVector::value`, which materializes lazy lanes
+/// on the fly without mutating state.
+fn session_bits(backend: &TypedNativeBackend<Qfx>, s: usize) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+    let cfg = backend.config();
+    let stripes = backend.step_threads();
+    let total = backend.sessions();
+    let (k, lane) = locate(s, stripes);
+    let lb = local_batch(k, stripes, total);
+    let net = backend.shard(k);
+
+    let w: Vec<u32> = (0..cfg.l1_synapses())
+        .map(|i| net.w1[i * lb + lane].bit_pattern())
+        .chain((0..cfg.l2_synapses()).map(|i| net.w2[i * lb + lane].bit_pattern()))
+        .collect();
+    let v: Vec<u32> = (0..cfg.n_hidden)
+        .map(|i| net.hidden.v[i * lb + lane].bit_pattern())
+        .chain((0..cfg.n_out).map(|o| net.output.v[o * lb + lane].bit_pattern()))
+        .collect();
+    let t: Vec<u32> = (0..cfg.n_in)
+        .map(|j| net.trace_in.value(j, lane).bit_pattern())
+        .chain((0..cfg.n_hidden).map(|i| net.trace_hidden.value(i, lane).bit_pattern()))
+        .chain((0..cfg.n_out).map(|o| net.trace_out.value(o, lane).bit_pattern()))
+        .collect();
+    (w, v, t)
+}
+
+/// Layer 1: the simulator's fixed-point arithmetic lane is bit-identical
+/// to the Qfx golden model — the same pin `fpga::sim::tests` holds for
+/// FP16, asserted here at integration level as the anchor the grid test
+/// builds on.
+#[test]
+fn qfx_sim_matches_golden_twin_bit_exact() {
+    let cfg = SnnConfig::tiny();
+    let (l1, l2) = random_rule(&cfg, 0x0F1C);
+    let mut sim =
+        TypedFpgaSim::<Qfx>::new_plastic(cfg.clone(), l1.clone(), l2.clone(), HwConfig::default());
+    let mut gold = golden_twin::<Qfx>(&cfg, &l1, &l2);
+    let mut rng = Pcg64::new(0x0F1D, 0);
+    for t in 0..150 {
+        let spikes: Vec<bool> = (0..cfg.n_in).map(|_| rng.bernoulli(0.35)).collect();
+        let out_sim = sim.step(&spikes);
+        let out_gold: Vec<bool> = gold.step_spikes(&spikes).to_vec();
+        assert_eq!(out_sim, out_gold, "Qfx sim vs golden spikes diverged at t={t}");
+    }
+    sim.finish();
+    assert_eq!(sim.state_fingerprint(), golden_bits(&gold), "Qfx sim vs golden state bits");
+}
+
+/// Layer 2 (the tentpole pin): `TypedNativeBackend<Qfx>` against one
+/// fixed-point FPGA simulator per session, lane-for-lane, over the full
+/// B × T grid. The simulators run once per batch size; every stripe
+/// count must reproduce their exact state bits.
+#[test]
+fn qfx_batched_backend_matches_fpga_sim_lane_for_lane() {
+    let cfg = SnnConfig::tiny();
+    const TICKS: usize = 25;
+
+    for &batch in &GRID_BATCHES {
+        let (l1, l2) = random_rule(&cfg, 0xF1C5 ^ batch as u64);
+        let rule = NetworkRule { l1: l1.clone(), l2: l2.clone() };
+
+        // Session-major input matrix for every tick, shared verbatim by
+        // the simulators and every backend instantiation.
+        let mut in_rng = Pcg64::new(0xF00D + batch as u64, 0);
+        let inmats: Vec<Vec<bool>> = (0..TICKS)
+            .map(|_| (0..batch * cfg.n_in).map(|_| in_rng.bernoulli(0.4)).collect())
+            .collect();
+
+        // Hardware reference: one fixed-point simulator per session.
+        let mut sims: Vec<TypedFpgaSim<Qfx>> = (0..batch)
+            .map(|_| {
+                TypedFpgaSim::<Qfx>::new_plastic(
+                    cfg.clone(),
+                    l1.clone(),
+                    l2.clone(),
+                    HwConfig::default(),
+                )
+            })
+            .collect();
+        let mut sim_outs: Vec<Vec<bool>> = Vec::with_capacity(TICKS);
+        for inmat in &inmats {
+            let mut tick_out = Vec::with_capacity(batch * cfg.n_out);
+            for (s, sim) in sims.iter_mut().enumerate() {
+                let chunk = &inmat[s * cfg.n_in..(s + 1) * cfg.n_in];
+                tick_out.extend(sim.step(chunk));
+            }
+            sim_outs.push(tick_out);
+        }
+        let sim_bits: Vec<_> = sims
+            .iter_mut()
+            .map(|sim| {
+                sim.finish();
+                sim.state_fingerprint()
+            })
+            .collect();
+
+        for &threads in &GRID_THREADS {
+            let mut backend =
+                TypedNativeBackend::<Qfx>::plastic_with_threads(cfg.clone(), rule.clone(), threads);
+            assert_eq!(backend.ensure_sessions(batch), batch);
+            let mut out = Vec::new();
+            for (tick, inmat) in inmats.iter().enumerate() {
+                backend.step_batch(batch, inmat, &mut out);
+                assert_eq!(
+                    out, sim_outs[tick],
+                    "B={batch} T={threads}: backend vs sim spikes diverged at tick {tick}"
+                );
+            }
+            for (s, expect) in sim_bits.iter().enumerate() {
+                assert_eq!(
+                    &session_bits(&backend, s),
+                    expect,
+                    "B={batch} T={threads}: session {s} state bits differ from the FPGA sim"
+                );
+            }
+        }
+    }
+}
+
+fn gated_cfg(g: &mut Gen) -> SnnConfig {
+    SnnConfig {
+        n_in: g.usize_range(2, 10),
+        n_hidden: g.usize_range(2, 12),
+        n_out: g.usize_range(1, 6),
+        lambda: 0.5,
+        v_th: 1.0,
+        input_gain: 2.0,
+        plasticity: PlasticityConfig { presyn_gate: true, ..PlasticityConfig::default() },
+    }
+}
+
+/// Layer 3: the event-driven serving configuration at Qfx — lazy input
+/// traces plus the presynaptic gate — against the identically-gated
+/// dense oracle: spikes, gate decisions, final weights, and the
+/// lazy-vs-eager trace values, all bit-for-bit.
+fn run_gated_case(g: &mut Gen) {
+    let cfg = gated_cfg(g);
+    let batches = [1usize, 2, 5, 31, 63, 64, 65];
+    let batch = batches[g.usize_range(0, batches.len())];
+
+    let mut theta_rng = Pcg64::new(g.u64(), 0);
+    let mut flat = vec![0.0f32; cfg.n_rule_params()];
+    theta_rng.fill_normal_f32(&mut flat, 0.3);
+    let mode = Mode::Plastic(NetworkRule::from_flat(&cfg, &flat).into());
+
+    let mut packed = SnnNetwork::<Qfx>::new_batched(cfg.clone(), mode.clone(), batch);
+    let mut dense = DenseBatchedNetwork::<Qfx>::new(cfg.clone(), mode, batch);
+    assert!(packed.trace_in.is_lazy(), "gated network must use lazy input traces");
+
+    // Sparse per-session rates so λ = 0.5 actually drains lanes to the
+    // exact-zero state the Qfx gate keys on (≤ 16 decays from any value).
+    let rates: Vec<f64> = (0..batch).map(|_| g.f64_range(0.02, 0.35)).collect();
+    let ticks = g.usize_range(8, 20);
+    for tick in 0..ticks {
+        let active: Vec<bool> = (0..batch).map(|_| g.rng.bernoulli(0.7)).collect();
+        let mut inmat = vec![false; cfg.n_in * batch];
+        for j in 0..cfg.n_in {
+            for (b, &rate) in rates.iter().enumerate() {
+                inmat[j * batch + b] = g.rng.bernoulli(rate);
+            }
+        }
+        packed.step_spikes_masked(&inmat, &active);
+        dense.step_spikes_masked(&inmat, &active);
+
+        assert_eq!(
+            packed.plasticity_rows_visited, dense.plasticity_rows_visited,
+            "seed {:#x}: Qfx gate decisions diverged at tick {tick}",
+            g.seed
+        );
+        for b in 0..batch {
+            for o in 0..cfg.n_out {
+                assert_eq!(
+                    packed.output.spikes.get(o, b),
+                    dense.spikes_out[o * batch + b],
+                    "seed {:#x}: gated Qfx spike mismatch, session {b} neuron {o}",
+                    g.seed
+                );
+            }
+        }
+    }
+
+    // Lazy-vs-eager: the on-read materialized view of every lazy lane
+    // must equal the eager oracle's stored value, bit-for-bit...
+    for j in 0..cfg.n_in {
+        for b in 0..batch {
+            assert_eq!(
+                packed.trace_in.value(j, b).to_bits(),
+                dense.trace_in[j * batch + b].to_bits(),
+                "seed {:#x}: lazy trace view, neuron {j} session {b}",
+                g.seed
+            );
+        }
+    }
+    // ...and so must the stored values after a full materialization.
+    packed.trace_in.materialize_hot();
+    for (idx, (p, d)) in packed.trace_in.values.iter().zip(dense.trace_in.iter()).enumerate() {
+        assert_eq!(
+            p.to_bits(),
+            d.to_bits(),
+            "seed {:#x}: materialized lazy trace, index {idx}",
+            g.seed
+        );
+    }
+
+    // Final per-session weights and membranes.
+    for (idx, (p, d)) in packed.w1.iter().zip(dense.w1.iter()).enumerate() {
+        assert_eq!(p.to_bits(), d.to_bits(), "seed {:#x}: w1 index {idx}", g.seed);
+    }
+    for (idx, (p, d)) in packed.w2.iter().zip(dense.w2.iter()).enumerate() {
+        assert_eq!(p.to_bits(), d.to_bits(), "seed {:#x}: w2 index {idx}", g.seed);
+    }
+    for (idx, (p, d)) in packed.hidden.v.iter().zip(dense.v_hidden.iter()).enumerate() {
+        assert_eq!(p.to_bits(), d.to_bits(), "seed {:#x}: hidden V index {idx}", g.seed);
+    }
+}
+
+#[test]
+fn qfx_gated_lazy_path_matches_dense_oracle() {
+    check(24, run_gated_case);
+}
+
+/// The gate must actually engage at Qfx — the ceiling-quantized ε means
+/// silent (exactly-zero) rows are skipped, so with sparse input the L1
+/// sweep visits strictly fewer rows than `n_in` on some ticks while the
+/// state stays pinned to the oracle (vacuity guard for the test above).
+#[test]
+fn qfx_gate_skips_silent_rows() {
+    let cfg = SnnConfig {
+        plasticity: PlasticityConfig { presyn_gate: true, ..PlasticityConfig::default() },
+        ..SnnConfig::tiny()
+    };
+    let batch = 64;
+    let mut rng = Pcg64::new(0x9A7E, 0);
+    let mut flat = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut flat, 0.25);
+    let mode = Mode::Plastic(NetworkRule::from_flat(&cfg, &flat).into());
+    let mut packed = SnnNetwork::<Qfx>::new_batched(cfg.clone(), mode.clone(), batch);
+    let mut dense = DenseBatchedNetwork::<Qfx>::new(cfg.clone(), mode, batch);
+
+    let active = vec![true; batch];
+    let mut visited = 0usize;
+    let mut ticks_with_skips = 0usize;
+    for _ in 0..30 {
+        // One hot input row; the other 7 stay silent and drain to zero.
+        let mut inmat = vec![false; cfg.n_in * batch];
+        for slot in inmat.iter_mut().take(batch) {
+            *slot = rng.bernoulli(0.8); // row j = 0 only
+        }
+        packed.step_spikes_masked(&inmat, &active);
+        dense.step_spikes_masked(&inmat, &active);
+        assert_eq!(packed.plasticity_rows_visited, dense.plasticity_rows_visited);
+        visited += packed.plasticity_rows_visited[0];
+        ticks_with_skips += (packed.plasticity_rows_visited[0] < cfg.n_in) as usize;
+    }
+    assert!(
+        ticks_with_skips > 0,
+        "gate never skipped an L1 row: visited {visited} rows over 30 ticks"
+    );
+    for (p, d) in packed.w1.iter().zip(dense.w1.iter()) {
+        assert_eq!(p.to_bits(), d.to_bits(), "gated-with-skips weights diverged");
+    }
+}
