@@ -31,6 +31,7 @@ pub use native::{NativeBackend, TypedNativeBackend};
 pub use xla::XlaBackend;
 
 use crate::snn::SnnConfig;
+use crate::util::binio::{BinError, BinReader, BinWriter};
 
 /// One SNN controller engine stepping one timestep at a time, hosting
 /// one or more independent controller sessions.
@@ -135,6 +136,38 @@ pub trait SnnBackend {
     /// rule θ is read-only either way, so shedding can never corrupt it.
     fn set_plasticity_enabled(&mut self, _on: bool) -> bool {
         false
+    }
+
+    /// Append a durable snapshot of this backend's **complete session
+    /// state** — per-session plastic weights, membrane lanes, packed
+    /// spike words, trace lanes (lazy-decay clocks included), step
+    /// counters, the plasticity gate, and the deployed rule θ — to `w`
+    /// as one checksummed [`binio`](crate::util::binio) frame
+    /// ([`crate::snn::snapshot::SESSION_STATE_FRAME_KIND`]). Returns
+    /// `true` when the backend supports snapshots. The default writes
+    /// nothing and returns `false`: single-session stub backends (XLA,
+    /// FPGA, replicated) carry no durable serving state, and a server
+    /// configured with `--state-dir` over one degrades to in-memory
+    /// serving with a logged warning. Implementations must stay
+    /// allocation-free once `w`'s buffer is warm — the serving stepper
+    /// encodes on the hot path (`tests/alloc_free_serving.rs`).
+    fn save_session_state(&self, _w: &mut BinWriter) -> bool {
+        false
+    }
+
+    /// Restore a snapshot written by [`SnnBackend::save_session_state`]
+    /// from the reader's cursor, growing the session table if the
+    /// snapshot carries more sessions than are provisioned. Any
+    /// mismatch (precision, geometry, shard layout, deployed θ) or
+    /// corruption is a typed [`BinError`] — never a panic. **Not
+    /// transactional**: on error the backend may hold partial state and
+    /// must be [`SnnBackend::reset`] before serving. The default is a
+    /// typed error for backends without snapshot support.
+    fn restore_session_state(&mut self, _r: &mut BinReader<'_>) -> Result<(), BinError> {
+        Err(BinError::Malformed(format!(
+            "backend {:?} does not support session snapshots",
+            self.name()
+        )))
     }
 }
 
@@ -339,5 +372,16 @@ mod tests {
         let mut out = Vec::new();
         b.step_sessions(&[0], &inputs, &mut out);
         assert_eq!(out.len(), cfg.n_out);
+
+        // Snapshot defaults: unsupported backends decline the save and
+        // return a typed error on restore — never a panic.
+        let mut w = BinWriter::new();
+        assert!(!b.save_session_state(&mut w));
+        assert!(w.is_empty());
+        let mut r = BinReader::new(&[]);
+        assert!(matches!(
+            b.restore_session_state(&mut r),
+            Err(BinError::Malformed(_))
+        ));
     }
 }

@@ -13,8 +13,43 @@
 //! ← STATS requests=<n> sessions=<live> batch_mean=<b> mean_latency_us=<x>
 //! → PING                       liveness
 //! ← PONG
+//! → TOKEN                      mint/fetch this session's resume token
+//! ← TOKEN <n>
+//! → RESUME <token>             re-attach to a snapshot-restored session
+//! ← OK resumed tick=<t>        (or ERR resume-unknown-token)
 //! ← ERR <reason>               malformed input / server full
 //! ```
+//!
+//! # Durable serving snapshots (`--state-dir`, ISSUE 10 tentpole)
+//!
+//! With [`ServerConfig::state_dir`] set, the stepper double-buffers the
+//! **complete serving state** — the backend's session blob
+//! ([`crate::backend::SnnBackend::save_session_state`]: per-session
+//! plastic weights, membranes, packed spike words, trace lanes with
+//! their lazy-decay clocks, and the deployed θ) plus the serving-plane
+//! metadata (tick counter, resume-token table, per-session encoder RNG
+//! states) — into a preallocated shadow buffer every
+//! [`ServerConfig::snapshot_every`] ticks and hands it to a dedicated
+//! snapshotter thread, which lands it as `state-<tick>.snap` via
+//! tmp+fsync+rename ([`crate::util::binio::write_atomic`]). The stepper
+//! hot path stays **zero-alloc** while snapshots are written
+//! (`tests/alloc_free_serving.rs`), and a snapshot-write IO error
+//! degrades that server to in-memory serving with a logged warning and
+//! a `serve_snapshot_write_errors` count — never a panic, never a
+//! stalled stepper.
+//!
+//! On startup, recovery rebuilds sessions from the newest valid
+//! snapshot: corrupt/torn files are quarantined as `*.corrupt` behind
+//! typed errors (same policy as job recovery), a stale-deployment
+//! mismatch (precision/geometry/θ) is *rejected* — logged, served
+//! fresh, file left in place — and restored sessions are **parked**
+//! under their resume tokens. A client re-attaches with
+//! `RESUME <token>` (on a fresh connection, or — when every slot is
+//! parked — on a resume-only connection the accept path spawns off-pool)
+//! and continues **bit-exact** from the snapshot tick
+//! (`tests/snapshot_warm_restart.rs`): the per-session encoder RNG is
+//! part of the snapshot, so an unacknowledged request replayed after
+//! recovery re-encodes with the identical spike draw.
 //!
 //! With a [`JobManager`] attached (`serve --job-threads ≥ 1`), five
 //! more verbs expose adaptation-as-a-service (DESIGN.md §Batched-
@@ -153,10 +188,14 @@
 //! observations/actions; spike coding stays an implementation detail of
 //! the accelerator — as it would on the real robot bus.
 
+use std::cell::Cell;
+use std::collections::HashMap;
 use std::fmt::Write as _;
+use std::fs;
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -168,8 +207,9 @@ use crate::coordinator::jobs::{
 use crate::coordinator::metrics::Metrics;
 use crate::es::eval::NEURONS_PER_DIM;
 use crate::snn::encoding::{PopulationEncoder, TraceDecoder};
+use crate::util::binio::{self, BinError, BinReader, BinWriter};
 use crate::util::faults::{FaultPlan, FaultSite};
-use crate::util::rng::Pcg64;
+use crate::util::rng::{Pcg64, PcgState};
 use crate::util::threadpool::ThreadPool;
 
 /// Tuning knobs of the multi-session server.
@@ -197,6 +237,21 @@ pub struct ServerConfig {
     /// pass. θ is read-only either way — shedding can never corrupt
     /// the learned rule.
     pub tick_deadline: Option<Duration>,
+    /// Directory for durable serving-state snapshots (`serve
+    /// --state-dir`; `None` = in-memory serving only). On startup the
+    /// newest valid `state-<tick>.snap` in it rebuilds every session;
+    /// corrupt/torn files are quarantined as `*.corrupt`.
+    pub state_dir: Option<PathBuf>,
+    /// Write a serving snapshot every this many batch ticks
+    /// (`serve --snapshot-every-ticks`, only meaningful with
+    /// [`state_dir`](ServerConfig::state_dir)).
+    pub snapshot_every: u64,
+    /// Byte cap on one `JOB SUBSCRIBE`/`RESULTS` follower's buffered
+    /// outbound backlog. A follower whose unsent tail reaches the cap
+    /// is evicted with `ERR lagged next=<row>` (counted as
+    /// `job_stream_lag_drops`) so it can re-subscribe from its cursor —
+    /// one stalled socket never grows hub memory or delays the others.
+    pub follower_lag_cap: usize,
 }
 
 impl Default for ServerConfig {
@@ -207,6 +262,9 @@ impl Default for ServerConfig {
             max_line: 64 * 1024,
             read_timeout: None,
             tick_deadline: None,
+            state_dir: None,
+            snapshot_every: 16,
+            follower_lag_cap: 1 << 20,
         }
     }
 }
@@ -222,6 +280,21 @@ const HUB_POLL: Duration = Duration::from_millis(50);
 /// Rows fetched per [`JobManager::copy_rows`] span in the hub's pump —
 /// one lock per span, not per row.
 const HUB_SPAN: usize = 64;
+
+/// Outer frame kind of a durable serving snapshot file
+/// (`state-<tick>.snap`): tick counter, resume-token table and
+/// per-session encoder RNG states, then the backend's nested
+/// session-state frame ([`crate::snn::snapshot`]). `0x5356` = `"SV"`.
+pub const SERVE_SNAPSHOT_FRAME_KIND: u16 = 0x5356;
+
+/// Snapshot files retained in `--state-dir`; older ones are pruned by
+/// the snapshotter after each successful write. More than one so a torn
+/// newest file still leaves an intact predecessor to recover from.
+const SNAPSHOT_KEEP: usize = 3;
+
+/// Minimum encoded bytes per slot entry in a serving snapshot's token
+/// table (presence byte + PCG state); bounds `get_len` preallocation.
+const SLOT_ENTRY_MIN_BYTES: usize = 34;
 
 /// Consecutive over-deadline serving ticks before the stepper sheds
 /// load by freezing plasticity (see [`ServerConfig::tick_deadline`]).
@@ -279,6 +352,14 @@ struct SlotCell {
     inbuf: Mutex<Vec<bool>>,
     /// Pooled decoded action vector (stepper → handler).
     actbuf: Mutex<Vec<f32>>,
+    /// The handler's encoder-RNG state *after* the encode staged in
+    /// `inbuf` (written strictly before the request is enqueued). The
+    /// stepper copies it into its snapshot shadow when it processes the
+    /// request, so a snapshot always pairs the backend state after tick
+    /// *t* with the RNG state that will encode request *t+1* — the key
+    /// to bit-exact `RESUME` even with an unacknowledged request lost
+    /// in a crash.
+    rng: Mutex<PcgState>,
 }
 
 /// State shared between the accept thread, the connection handlers and
@@ -296,6 +377,55 @@ struct Shared {
     metrics: Arc<Mutex<Metrics>>,
     /// Graceful-drain signal (see [`DrainHandle`]).
     drain: DrainHandle,
+    /// Resume token bound to each slot (`TOKEN` verb mints one; a clean
+    /// disconnect clears it). Snapshotted so a crash-survived token can
+    /// `RESUME` the slot's restored session.
+    tokens: Mutex<Vec<Option<u64>>>,
+    /// Next resume token to mint (monotonic, never reused; persisted in
+    /// snapshots so recovery cannot re-mint a parked token).
+    next_token: AtomicU64,
+    /// Snapshot-restored sessions awaiting a `RESUME <token>` claim.
+    /// Their slots are excluded from `free_slots` so a fresh connection
+    /// can never reset them.
+    parked: Mutex<HashMap<u64, ParkedSession>>,
+    /// Tick the recovered snapshot was taken at (0 on a fresh start);
+    /// echoed in the `OK resumed tick=<t>` acknowledgement.
+    resume_tick: u64,
+}
+
+/// A snapshot-restored session waiting for its client to `RESUME`.
+struct ParkedSession {
+    /// Session slot holding the restored backend state.
+    slot: usize,
+    /// Encoder-RNG state the resumed handler continues from.
+    rng: PcgState,
+}
+
+/// Recovered (or fresh) serving-plane metadata [`Shared`] starts from.
+struct ServingInit {
+    /// Per-slot resume tokens; `Some` entries are parked on startup.
+    tokens: Vec<Option<u64>>,
+    /// Per-slot encoder-RNG states (fresh formula or snapshot).
+    rngs: Vec<PcgState>,
+    /// First resume token to mint.
+    next_token: u64,
+    /// Tick of the recovered snapshot (0 = fresh).
+    tick: u64,
+}
+
+impl ServingInit {
+    /// Fresh serving plane: no tokens, every slot's RNG at the state a
+    /// new handler derives (`Pcg64::new(seed, 0x5E ^ slot)`).
+    fn fresh(slots: usize, seed: u64) -> ServingInit {
+        ServingInit {
+            tokens: vec![None; slots],
+            rngs: (0..slots)
+                .map(|s| Pcg64::new(seed, 0x5E ^ s as u64).export_state())
+                .collect(),
+            next_token: 1,
+            tick: 0,
+        }
+    }
 }
 
 struct QueueState {
@@ -304,26 +434,63 @@ struct QueueState {
 }
 
 impl Shared {
-    fn new(slots: usize, metrics: Arc<Mutex<Metrics>>, drain: DrainHandle) -> Shared {
+    fn new(
+        slots: usize,
+        metrics: Arc<Mutex<Metrics>>,
+        drain: DrainHandle,
+        init: ServingInit,
+    ) -> Shared {
+        debug_assert_eq!(init.tokens.len(), slots);
+        debug_assert_eq!(init.rngs.len(), slots);
+        // Token-bearing slots hold restored sessions: park them (claimed
+        // only via RESUME) and keep them out of the free pool.
+        let parked: HashMap<u64, ParkedSession> = init
+            .tokens
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, tok)| {
+                tok.map(|t| {
+                    (
+                        t,
+                        ParkedSession {
+                            slot,
+                            rng: init.rngs[slot],
+                        },
+                    )
+                })
+            })
+            .collect();
         Shared {
             state: Mutex::new(QueueState {
                 requests: Vec::new(),
                 shutdown: false,
             }),
             work_cv: Condvar::new(),
-            cells: (0..slots)
-                .map(|_| SlotCell {
+            cells: init
+                .rngs
+                .iter()
+                .map(|&rng| SlotCell {
                     ready: Mutex::new(None),
                     cv: Condvar::new(),
                     inbuf: Mutex::new(Vec::new()),
                     actbuf: Mutex::new(Vec::new()),
+                    rng: Mutex::new(rng),
                 })
                 .collect(),
-            free_slots: Mutex::new((0..slots).rev().collect()),
+            free_slots: Mutex::new(
+                (0..slots)
+                    .rev()
+                    .filter(|&s| init.tokens[s].is_none())
+                    .collect(),
+            ),
             slot_cv: Condvar::new(),
             live: AtomicUsize::new(0),
             metrics,
             drain,
+            tokens: Mutex::new(init.tokens),
+            next_token: AtomicU64::new(init.next_token.max(1)),
+            parked: Mutex::new(parked),
+            resume_tick: init.tick,
         }
     }
 
@@ -400,13 +567,22 @@ struct Follower {
     /// Next row index to fetch.
     cursor: usize,
     /// Formatted-but-unsent bytes (pooled; a slow client carries its
-    /// tail here instead of stalling the other followers).
+    /// tail here instead of stalling the other followers). Bounded by
+    /// the hub's `lag_cap`: at the cap the follower is evicted with
+    /// `ERR lagged next=<row>` instead of growing further.
     out: Vec<u8>,
     /// Prefix of `out` already written to the socket.
     sent: usize,
+    /// Highest cursor whose rows have *fully drained* to the socket —
+    /// the safe `next=` hint on a lag eviction (re-subscribing from it
+    /// re-sends at most the buffered tail, which is bit-identical).
+    acked: usize,
     mode: StreamMode,
     /// The `JOB END` line is queued in `out`; once it drains, finish.
     end_queued: bool,
+    /// Injected [`FaultSite::FollowerStall`]: skip socket writes so the
+    /// backlog grows as if the client stopped reading.
+    stalled: bool,
 }
 
 /// Outcome of one pump pass over a follower.
@@ -418,6 +594,9 @@ enum Pump {
     /// The client vanished or its socket errored: drop the follower
     /// (the job keeps running for everyone else).
     Dead,
+    /// The follower's unsent backlog hit the lag cap: evicted with
+    /// `ERR lagged next=<row>` so it can re-subscribe from its cursor.
+    Lagged,
 }
 
 /// Intake/handoff queues between the connection handlers, the hub
@@ -445,6 +624,9 @@ struct StreamHub {
     metrics: Arc<Mutex<Metrics>>,
     inner: Mutex<HubInner>,
     stop: AtomicBool,
+    /// Byte cap on one follower's unsent backlog
+    /// ([`ServerConfig::follower_lag_cap`]).
+    lag_cap: usize,
 }
 
 impl StreamHub {
@@ -453,6 +635,7 @@ impl StreamHub {
     fn spawn(
         jobs: Arc<JobManager>,
         metrics: Arc<Mutex<Metrics>>,
+        lag_cap: usize,
     ) -> (Arc<StreamHub>, std::thread::JoinHandle<()>) {
         let hub = Arc::new(StreamHub {
             plan: jobs.fault_plan(),
@@ -460,6 +643,7 @@ impl StreamHub {
             metrics,
             inner: Mutex::new(HubInner::default()),
             stop: AtomicBool::new(false),
+            lag_cap: lag_cap.max(1),
         });
         let h = Arc::clone(&hub);
         let handle = std::thread::Builder::new()
@@ -477,14 +661,23 @@ impl StreamHub {
         // carries its unsent tail; it never stalls the hub.
         let _ = stream.set_nonblocking(true);
         self.metrics.lock().unwrap().incr("job_stream_followers");
+        // Injected fault: this follower never drains its socket — the
+        // deterministic slow consumer the lag-eviction path is pinned
+        // against.
+        let stalled = self
+            .plan
+            .as_ref()
+            .is_some_and(|p| p.fire(FaultSite::FollowerStall));
         self.inner.lock().unwrap().incoming.push(Follower {
             stream,
             job,
             cursor,
             out: Vec::new(),
             sent: 0,
+            acked: cursor,
             mode,
             end_queued: false,
+            stalled,
         });
     }
 
@@ -551,6 +744,14 @@ impl StreamHub {
                         self.metrics.lock().unwrap().incr("job_stream_drops");
                         followers.swap_remove(i);
                     }
+                    Pump::Lagged => {
+                        // Evicted for lag, not death: counted apart from
+                        // vanished clients so the soak's drop ledger
+                        // stays exact. Dropping the stream closes it
+                        // right after the `ERR lagged` hint.
+                        self.metrics.lock().unwrap().incr("job_stream_lag_drops");
+                        followers.swap_remove(i);
+                    }
                 }
             }
             {
@@ -563,9 +764,12 @@ impl StreamHub {
     }
 
     /// Refill the follower's out-buffer from newly completed rows and
-    /// flush as much of it as the socket accepts right now.
+    /// flush as much of it as the socket accepts right now. Refill is
+    /// gated on the unsent backlog staying under the lag cap, and a
+    /// follower still at the cap after the flush attempt is evicted —
+    /// backpressure first, then a typed cut, never unbounded memory.
     fn pump(&self, f: &mut Follower, rows: &mut Vec<JobRow>, line: &mut String) -> Pump {
-        if !f.end_queued {
+        if !f.end_queued && f.out.len() - f.sent < self.lag_cap {
             match self.jobs.copy_rows(f.job, f.cursor, HUB_SPAN, rows) {
                 Ok(status) => {
                     for row in rows.iter() {
@@ -610,7 +814,7 @@ impl StreamHub {
                 }
             }
         }
-        while f.sent < f.out.len() {
+        while !f.stalled && f.sent < f.out.len() {
             match f.stream.write(&f.out[f.sent..]) {
                 Ok(0) => return Pump::Dead,
                 Ok(n) => f.sent += n,
@@ -622,9 +826,23 @@ impl StreamHub {
         if f.sent == f.out.len() {
             f.out.clear();
             f.sent = 0;
+            // Everything fetched so far has reached the socket: safe
+            // resume point for a later lag eviction.
+            f.acked = f.cursor;
             if f.end_queued {
                 return Pump::Finished;
             }
+        } else if f.out.len() - f.sent >= self.lag_cap {
+            // Still at the cap after flushing: this client can't keep
+            // up. Tell it where to re-subscribe from (rows are indexed
+            // and bit-identical, so `from=<next>` stitches an identical
+            // stream) and cut it loose — its memory is reclaimed and
+            // the other followers never waited on it.
+            line.clear();
+            let _ = write!(line, "ERR lagged next={}", f.acked);
+            line.push('\n');
+            let _ = f.stream.write(line.as_bytes());
+            return Pump::Lagged;
         }
         Pump::Keep
     }
@@ -719,11 +937,78 @@ impl ControlServer {
     /// backend); an accept thread hands connections to pool workers
     /// pinned per session slot.
     pub fn serve(&mut self, addr: &str, max_connections: Option<usize>) -> std::io::Result<()> {
-        let provisioned = self
-            .backend
-            .ensure_sessions(self.cfg.max_sessions)
-            .min(self.cfg.max_sessions)
-            .max(1);
+        let plan = self.jobs.as_ref().and_then(|j| j.fault_plan());
+
+        // Durable serving plane (--state-dir): recover the newest valid
+        // snapshot into the backend, then stand up the double-buffered
+        // snapshotter. Every failure path here degrades to plain
+        // in-memory serving — durability is additive, never load-bearing.
+        //
+        // Recovery runs BEFORE session provisioning: the restore codec
+        // only grows the backend batch, so a snapshot taken under a
+        // smaller session table than this config asks for must land in
+        // the pre-growth backend (provisioning then grows over it,
+        // state-preserving).
+        let mut recovered: Option<RecoveredServing> = None;
+        let mut state_dir: Option<PathBuf> = None;
+        if let Some(dir) = self.cfg.state_dir.clone() {
+            if let Err(e) = fs::create_dir_all(&dir) {
+                crate::log_warn!(
+                    "--state-dir {}: {e}; serving in-memory",
+                    dir.display()
+                );
+            } else {
+                recovered = recover_serving(self.backend.as_mut(), &dir, &self.metrics);
+                state_dir = Some(dir);
+            }
+        }
+        // The snapshot may carry more sessions than this config asks
+        // for; the serving plane must cover every restored slot or a
+        // parked RESUME would index past the cells.
+        let want = self
+            .cfg
+            .max_sessions
+            .max(recovered.as_ref().map_or(0, |r| r.tokens.len()));
+        let provisioned = self.backend.ensure_sessions(want).min(want).max(1);
+        let init = match recovered {
+            Some(rec) => rec.into_init(provisioned, self.cfg.seed),
+            None => ServingInit::fresh(provisioned, self.cfg.seed),
+        };
+        let mut plumbing: Option<Arc<SnapshotPlumbing>> = None;
+        if let Some(dir) = state_dir {
+            // Probe snapshot support; a successful probe encode
+            // doubles as the shadow-buffer warmup, so steady-state
+            // snapshots reuse its allocation.
+            let mut probe = BinWriter::new();
+            if self.backend.save_session_state(&mut probe) {
+                // The probe holds only the backend blob; reserve
+                // room for the outer frame + per-slot token table
+                // so the first real snapshot encode on the stepper
+                // thread is already allocation-free.
+                let mut warm = probe.into_bytes();
+                warm.reserve(256 + provisioned * 48);
+                plumbing = Some(Arc::new(SnapshotPlumbing::new(
+                    dir,
+                    warm,
+                    self.cfg.snapshot_every.max(1),
+                )));
+            } else {
+                crate::log_warn!(
+                    "backend {} has no session-snapshot support; serving in-memory",
+                    self.backend.name()
+                );
+            }
+        }
+        let snapshotter = plumbing.as_ref().map(|pl| {
+            let pl = Arc::clone(pl);
+            let metrics = Arc::clone(&self.metrics);
+            let plan = plan.clone();
+            std::thread::Builder::new()
+                .name("fireflyp-snapshotter".into())
+                .spawn(move || snapshotter_loop(&pl, &metrics, plan.as_deref()))
+                .expect("spawn snapshotter thread")
+        });
+
         let listener = TcpListener::bind(addr)?;
         crate::log_info!(
             "control server listening on {} ({provisioned} session slots, backend {})",
@@ -731,10 +1016,16 @@ impl ControlServer {
             self.backend.name()
         );
 
+        let snap_state = plumbing.as_ref().map(|pl| StepperSnapshots {
+            plumbing: Arc::clone(pl),
+            tick: init.tick,
+            shadow: init.rngs.clone(),
+        });
         let shared = Arc::new(Shared::new(
             provisioned,
             Arc::clone(&self.metrics),
             self.drain.clone(),
+            init,
         ));
         let accept_shared = Arc::clone(&shared);
         let encoder = Arc::clone(&self.encoder);
@@ -744,24 +1035,41 @@ impl ControlServer {
             max_line: self.cfg.max_line.max(16),
             read_timeout: self.cfg.read_timeout,
         };
+        let lag_cap = self.cfg.follower_lag_cap;
 
         let accept = std::thread::Builder::new()
             .name("fireflyp-accept".into())
             .spawn(move || {
-                accept_loop(listener, accept_shared, encoder, seed, jobs, opts, max_connections)
+                accept_loop(
+                    listener,
+                    accept_shared,
+                    encoder,
+                    seed,
+                    jobs,
+                    opts,
+                    lag_cap,
+                    max_connections,
+                )
             })
             .expect("spawn accept thread");
 
-        let plan = self.jobs.as_ref().and_then(|j| j.fault_plan());
         stepper_loop(
             self.backend.as_mut(),
             &self.decoder,
             &shared,
             self.cfg.tick_deadline,
             plan,
+            snap_state,
         );
 
         accept.join().expect("accept thread panicked");
+        if let Some(pl) = &plumbing {
+            pl.stop.store(true, Ordering::SeqCst);
+            pl.pending_cv.notify_all();
+        }
+        if let Some(handle) = snapshotter {
+            let _ = handle.join();
+        }
         // Drained (or connection budget exhausted): stop the job
         // subsystem too. Its shutdown interrupts in-flight sweeps at
         // their next tick and persists every resumable checkpoint to
@@ -770,6 +1078,311 @@ impl ControlServer {
             jobs.shutdown();
         }
         Ok(())
+    }
+}
+
+/// Double-buffer plumbing between the stepper (encode side) and the
+/// snapshotter thread (disk side). One warm buffer circulates: the
+/// stepper takes it from `spare`, encodes into it, parks it sealed in
+/// `pending`; the snapshotter lands it on disk and puts it back. If
+/// the snapshotter is still writing when the next boundary arrives, the
+/// stepper *skips* that snapshot (`serve_snapshot_skipped`) — slow disk
+/// costs snapshot freshness, never stepper latency.
+struct SnapshotPlumbing {
+    dir: PathBuf,
+    /// Snapshot cadence in batch ticks.
+    every: u64,
+    /// Warm buffer awaiting the next encode.
+    spare: Mutex<Option<Vec<u8>>>,
+    /// Sealed snapshot awaiting the snapshotter: `(tick, bytes)`.
+    pending: Mutex<Option<(u64, Vec<u8>)>>,
+    pending_cv: Condvar,
+    /// Cleared on the first snapshot write error: the server degrades
+    /// to in-memory serving (further encodes stop) with a logged
+    /// warning — never a panic, never a stalled stepper.
+    disk_ok: AtomicBool,
+    stop: AtomicBool,
+}
+
+impl SnapshotPlumbing {
+    fn new(dir: PathBuf, warm: Vec<u8>, every: u64) -> SnapshotPlumbing {
+        SnapshotPlumbing {
+            dir,
+            every,
+            spare: Mutex::new(Some(warm)),
+            pending: Mutex::new(None),
+            pending_cv: Condvar::new(),
+            disk_ok: AtomicBool::new(true),
+            stop: AtomicBool::new(false),
+        }
+    }
+}
+
+/// The stepper's snapshot-side state (present iff `--state-dir` is
+/// set and the backend supports session snapshots).
+struct StepperSnapshots {
+    plumbing: Arc<SnapshotPlumbing>,
+    /// Batch ticks stepped so far (resumes from the recovered
+    /// snapshot's tick so filenames stay monotonic across restarts).
+    tick: u64,
+    /// Stepper-owned copy of each slot's encoder-RNG state, refreshed
+    /// from the slot cell as each request is *processed* — so the
+    /// snapshot pairs backend-after-tick-t with the RNG that encodes
+    /// request t+1, regardless of what handlers race ahead to.
+    shadow: Vec<PcgState>,
+}
+
+/// Serving-plane metadata decoded from a snapshot file.
+struct RecoveredServing {
+    tick: u64,
+    next_token: u64,
+    tokens: Vec<Option<u64>>,
+    rngs: Vec<PcgState>,
+}
+
+impl RecoveredServing {
+    /// Pad the recovered tables out to `slots` entries (fresh defaults
+    /// for slots the snapshot didn't cover) and repackage as the
+    /// serving plane's init state.
+    fn into_init(mut self, slots: usize, seed: u64) -> ServingInit {
+        while self.tokens.len() < slots {
+            let s = self.tokens.len();
+            self.tokens.push(None);
+            self.rngs.push(Pcg64::new(seed, 0x5E ^ s as u64).export_state());
+        }
+        // A backend that could not provision every restored slot strands
+        // the tail sessions (their tokens become unclaimable) — stay
+        // total rather than indexing past the slot table.
+        self.tokens.truncate(slots);
+        self.rngs.truncate(slots);
+        ServingInit {
+            tokens: self.tokens,
+            rngs: self.rngs,
+            next_token: self.next_token,
+            tick: self.tick,
+        }
+    }
+}
+
+/// Append a [`PcgState`] (128-bit words as lo/hi u64 pairs, then the
+/// optional cached Box–Muller output). Fixed-size, allocation-free.
+fn put_pcg(w: &mut BinWriter, s: &PcgState) {
+    w.put_u64(s.state as u64);
+    w.put_u64((s.state >> 64) as u64);
+    w.put_u64(s.inc as u64);
+    w.put_u64((s.inc >> 64) as u64);
+    match s.cached_normal {
+        Some(v) => {
+            w.put_u8(1);
+            w.put_f64(v);
+        }
+        None => w.put_u8(0),
+    }
+}
+
+/// Mirror of [`put_pcg`]; total (every failure is a typed [`BinError`]).
+fn get_pcg(r: &mut BinReader<'_>) -> Result<PcgState, BinError> {
+    let state_lo = r.get_u64()?;
+    let state_hi = r.get_u64()?;
+    let inc_lo = r.get_u64()?;
+    let inc_hi = r.get_u64()?;
+    let cached_normal = match r.get_u8()? {
+        0 => None,
+        1 => Some(r.get_f64()?),
+        t => {
+            return Err(BinError::Malformed(format!(
+                "bad cached-normal presence tag {t}"
+            )));
+        }
+    };
+    Ok(PcgState {
+        state: (state_lo as u128) | ((state_hi as u128) << 64),
+        inc: (inc_lo as u128) | ((inc_hi as u128) << 64),
+        cached_normal,
+    })
+}
+
+/// Decode one serving snapshot: outer frame → tick, token mint cursor,
+/// per-slot token/RNG table, then the backend's nested session-state
+/// frame. Total decoding — corrupt or foreign bytes come back as a
+/// typed [`BinError`], never a panic. On error the backend may hold a
+/// partial restore; the caller resets it before trying an older file.
+fn decode_serve_snapshot(
+    backend: &mut dyn SnnBackend,
+    bytes: &[u8],
+) -> Result<RecoveredServing, BinError> {
+    let mut outer = BinReader::new(bytes);
+    let mut r = outer.get_frame(SERVE_SNAPSHOT_FRAME_KIND)?;
+    let tick = r.get_u64()?;
+    let next_token = r.get_u64()?;
+    let n = r.get_len(SLOT_ENTRY_MIN_BYTES)?;
+    let mut tokens = Vec::with_capacity(n);
+    let mut rngs = Vec::with_capacity(n);
+    for _ in 0..n {
+        tokens.push(match r.get_u8()? {
+            0 => None,
+            1 => Some(r.get_u64()?),
+            t => {
+                return Err(BinError::Malformed(format!(
+                    "bad token presence tag {t}"
+                )));
+            }
+        });
+        rngs.push(get_pcg(&mut r)?);
+    }
+    backend.restore_session_state(&mut r)?;
+    r.finish()?;
+    outer.finish()?;
+    Ok(RecoveredServing {
+        tick,
+        next_token,
+        tokens,
+        rngs,
+    })
+}
+
+/// `state-<tick>.snap` files in `dir`, newest tick first.
+fn list_snapshots(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let mut out = Vec::new();
+    let Ok(rd) = fs::read_dir(dir) else {
+        return out;
+    };
+    for entry in rd.flatten() {
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        let Some(tick) = name
+            .strip_prefix("state-")
+            .and_then(|r| r.strip_suffix(".snap"))
+            .and_then(|t| t.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        out.push((tick, path));
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    out
+}
+
+/// Warm-restart recovery: walk `state-<tick>.snap` files newest-first,
+/// restore the first one that decodes cleanly. Corrupt/torn files are
+/// quarantined as `*.corrupt` behind their typed error (same policy as
+/// job recovery); a structurally-sound snapshot from a *different
+/// deployment* (precision/geometry/θ mismatch → [`BinError::Malformed`])
+/// is rejected but left in place for the operator. Either way the
+/// backend is reset before the next candidate — restore is not
+/// transactional.
+fn recover_serving(
+    backend: &mut dyn SnnBackend,
+    dir: &Path,
+    metrics: &Arc<Mutex<Metrics>>,
+) -> Option<RecoveredServing> {
+    for (tick, path) in list_snapshots(dir) {
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) => {
+                crate::log_warn!("snapshot {}: unreadable ({e}); skipping", path.display());
+                continue;
+            }
+        };
+        match decode_serve_snapshot(backend, &bytes) {
+            Ok(rec) => {
+                metrics.lock().unwrap().incr("serve_snapshot_recoveries");
+                crate::log_info!(
+                    "recovered serving state from {} (tick {tick}, {} resumable session(s))",
+                    path.display(),
+                    rec.tokens.iter().flatten().count()
+                );
+                return Some(rec);
+            }
+            Err(BinError::Malformed(why)) => {
+                metrics.lock().unwrap().incr("serve_snapshot_rejected");
+                crate::log_warn!(
+                    "snapshot {} rejected ({why}); serving fresh state",
+                    path.display()
+                );
+                backend.reset();
+            }
+            Err(e) => {
+                metrics.lock().unwrap().incr("serve_snapshot_quarantined");
+                let mut q = path.clone().into_os_string();
+                q.push(".corrupt");
+                let quarantined = PathBuf::from(q);
+                crate::log_warn!(
+                    "snapshot {} corrupt ({e}); quarantined as {}",
+                    path.display(),
+                    quarantined.display()
+                );
+                let _ = fs::rename(&path, &quarantined);
+                backend.reset();
+            }
+        }
+    }
+    None
+}
+
+/// Keep the newest [`SNAPSHOT_KEEP`] snapshot files, best-effort delete
+/// the rest (runs on the snapshotter thread after each landed write).
+fn prune_snapshots(dir: &Path) {
+    let snaps = list_snapshots(dir);
+    for (_, path) in snaps.into_iter().skip(SNAPSHOT_KEEP) {
+        let _ = fs::remove_file(path);
+    }
+}
+
+/// Dedicated snapshot-writer thread: lands each sealed buffer as
+/// `state-<tick>.snap` via tmp+fsync+rename, prunes old files, and
+/// returns the buffer warm for the next encode. Fault sites:
+/// [`FaultSite::SnapshotWrite`] injects a write error (→ degrade to
+/// in-memory serving, `serve_snapshot_write_errors`);
+/// [`FaultSite::SnapshotTorn`] simulates a crash mid-write by leaving a
+/// truncated file at the final path — recovery must quarantine it and
+/// fall back to the previous intact snapshot.
+fn snapshotter_loop(
+    pl: &SnapshotPlumbing,
+    metrics: &Mutex<Metrics>,
+    plan: Option<&FaultPlan>,
+) {
+    loop {
+        let (tick, buf) = {
+            let mut pending = pl.pending.lock().unwrap();
+            loop {
+                if let Some(x) = pending.take() {
+                    break x;
+                }
+                if pl.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                pending = pl.pending_cv.wait(pending).unwrap();
+            }
+        };
+        let path = pl.dir.join(format!("state-{tick:020}.snap"));
+        let result = if plan.is_some_and(|p| p.fire(FaultSite::SnapshotWrite)) {
+            Err(io::Error::other("injected snapshot write fault"))
+        } else if plan.is_some_and(|p| p.fire(FaultSite::SnapshotTorn)) {
+            // Torn write: a bare truncated file at the final path, no
+            // atomic dance — exactly what a crash between write and
+            // fsync leaves behind.
+            fs::write(&path, &buf[..buf.len() / 3])
+        } else {
+            binio::write_atomic(&path, &buf)
+        };
+        match result {
+            Ok(()) => {
+                metrics.lock().unwrap().incr("serve_snapshots");
+                prune_snapshots(&pl.dir);
+            }
+            Err(e) => {
+                metrics.lock().unwrap().incr("serve_snapshot_write_errors");
+                pl.disk_ok.store(false, Ordering::SeqCst);
+                crate::log_warn!(
+                    "snapshot write {} failed ({e}); degrading to in-memory serving",
+                    path.display()
+                );
+            }
+        }
+        *pl.spare.lock().unwrap() = Some(buf);
     }
 }
 
@@ -784,6 +1397,7 @@ struct ConnOptions {
 /// Accept connections, allocate session slots, dispatch handlers.
 /// Polls a nonblocking listener so a [`DrainHandle`] can stop the
 /// accept side promptly even with no connection in flight.
+#[allow(clippy::too_many_arguments)]
 fn accept_loop(
     listener: TcpListener,
     shared: Arc<Shared>,
@@ -791,6 +1405,7 @@ fn accept_loop(
     seed: u64,
     jobs: Option<Arc<JobManager>>,
     opts: ConnOptions,
+    lag_cap: usize,
     max_connections: Option<usize>,
 ) {
     // One pool worker per session slot; handlers are pinned so a live
@@ -803,11 +1418,16 @@ fn accept_loop(
     // connections come back through `take_ready` for re-dispatch.
     let (hub, hub_join) = match &jobs {
         Some(j) => {
-            let (h, join) = StreamHub::spawn(Arc::clone(j), Arc::clone(&shared.metrics));
+            let (h, join) =
+                StreamHub::spawn(Arc::clone(j), Arc::clone(&shared.metrics), lag_cap);
             (Some(h), Some(join))
         }
         None => (None, None),
     };
+    // Off-pool resume-only connections (spawned when the server is full
+    // but parked sessions exist); joined before the stepper shutdown so
+    // none can submit to a dead queue.
+    let mut resume_joins: Vec<std::thread::JoinHandle<()>> = Vec::new();
     let mut served = 0usize;
     if listener.set_nonblocking(true).is_err() {
         crate::log_warn!("listener refused nonblocking mode; drain may lag one accept");
@@ -824,7 +1444,7 @@ fn accept_loop(
                 let jb = jobs.clone();
                 let hb = hub.clone();
                 pool.execute_on(slot, move || {
-                    handle_connection(stream, carry, slot, sh, enc, seed, jb, hb, opts)
+                    handle_connection(stream, carry, slot, sh, enc, seed, jb, hb, opts, None)
                 });
                 Ok(())
             }
@@ -858,8 +1478,27 @@ fn accept_loop(
         let _ = stream.set_nonblocking(false);
         served += 1;
         if let Err((mut s, _)) = dispatch(stream, Vec::new()) {
-            shared.metrics.lock().unwrap().incr("rejected");
-            let _ = s.write_all(b"ERR server full\n");
+            // Full — but parked sessions (snapshot-restored, awaiting
+            // RESUME) don't occupy pool workers, so give the client one
+            // off-pool chance to claim one. Crucial when a server
+            // restarts at capacity: every slot is parked, and without
+            // this path no RESUME could ever get through.
+            if !shared.parked.lock().unwrap().is_empty() {
+                let sh = Arc::clone(&shared);
+                let enc = Arc::clone(&encoder);
+                let jb = jobs.clone();
+                let hb = hub.clone();
+                let handle = std::thread::Builder::new()
+                    .name("fireflyp-resume".into())
+                    .spawn(move || {
+                        handle_resume_only_connection(s, sh, enc, seed, jb, hb, opts)
+                    })
+                    .expect("spawn resume handler thread");
+                resume_joins.push(handle);
+            } else {
+                shared.metrics.lock().unwrap().incr("rejected");
+                let _ = s.write_all(b"ERR server full\n");
+            }
         }
         if let Some(max) = max_connections {
             if served >= max {
@@ -893,6 +1532,12 @@ fn accept_loop(
     }
     if let Some(join) = hub_join {
         let _ = join.join();
+    }
+    // Off-pool resume handlers must finish before the stepper queue
+    // shuts down (their first-line wait is poll-bounded and drain-aware,
+    // so this join is short).
+    for handle in resume_joins {
+        let _ = handle.join();
     }
     shared.state.lock().unwrap().shutdown = true;
     shared.work_cv.notify_all();
@@ -1083,16 +1728,33 @@ impl LineReader {
     }
 }
 
-/// Releases the session slot and the live count even if the handler
-/// unwinds — a panicking handler must never leak its slot.
+/// Releases the session slot(s) and the live count even if the handler
+/// unwinds — a panicking handler must never leak a slot. Clears any
+/// resume token bound to the released slots: a cleanly-disconnected
+/// session's slot is recycled (and reset) for the next client, so its
+/// token must stop resolving; only a *crash* leaves tokens live in the
+/// last snapshot for `RESUME` after restart.
 struct SlotGuard<'a> {
     shared: &'a Shared,
     slot: usize,
+    /// A second slot claimed mid-connection via `RESUME` (the restored
+    /// session); released and token-cleared alongside.
+    extra: Cell<Option<usize>>,
 }
 
 impl Drop for SlotGuard<'_> {
     fn drop(&mut self) {
+        {
+            let mut tokens = self.shared.tokens.lock().unwrap();
+            tokens[self.slot] = None;
+            if let Some(extra) = self.extra.get() {
+                tokens[extra] = None;
+            }
+        }
         self.shared.release_slot(self.slot);
+        if let Some(extra) = self.extra.get() {
+            self.shared.release_slot(extra);
+        }
         self.shared.live.fetch_sub(1, Ordering::SeqCst);
     }
 }
@@ -1113,19 +1775,36 @@ fn handle_connection(
     jobs: Option<Arc<JobManager>>,
     hub: Option<Arc<StreamHub>>,
     opts: ConnOptions,
+    resumed: Option<PcgState>,
 ) {
-    let _guard = SlotGuard {
+    let guard = SlotGuard {
         shared: &shared,
         slot,
+        extra: Cell::new(None),
     };
     if let Ok(peer) = stream.peer_addr() {
         crate::log_info!("connection from {peer} → session slot {slot}");
     }
-    // The slot may be recycled from an earlier client: start from a
-    // clean controller state before serving any request.
-    shared.submit_and_wait(slot, SlotRequest::Reset);
+    let mut rng = match resumed {
+        // Re-attached to a snapshot-restored session: continue the
+        // encoder RNG exactly where the snapshot left it — the spike
+        // draws after RESUME match the uninterrupted run's bit-for-bit.
+        Some(state) => Pcg64::restore(state),
+        None => Pcg64::new(seed, 0x5E ^ slot as u64),
+    };
+    // Publish the RNG state before the first request can reach the
+    // stepper, so its snapshot shadow never reads a stale slot.
+    *shared.cells[slot].rng.lock().unwrap() = rng.export_state();
+    if resumed.is_none() {
+        // The slot may be recycled from an earlier client: start from a
+        // clean controller state before serving any request. (A resumed
+        // session must NOT be reset — its restored state is the point.)
+        shared.submit_and_wait(slot, SlotRequest::Reset);
+    }
 
-    let mut rng = Pcg64::new(seed, 0x5E ^ slot as u64);
+    // The slot this connection currently serves on; `RESUME` switches
+    // it to the restored session's slot mid-connection.
+    let mut active = slot;
     let mut obs = Vec::with_capacity(encoder.dims);
     let mut resp = String::new();
 
@@ -1189,9 +1868,65 @@ fn handle_connection(
                 writer.write_all(b"OK draining\n")?;
                 break;
             } else if line == "RESET" {
-                shared.submit_and_wait(slot, SlotRequest::Reset);
+                shared.submit_and_wait(active, SlotRequest::Reset);
                 shared.metrics.lock().unwrap().incr("resets");
                 resp.push_str("OK");
+            } else if line == "TOKEN" {
+                // Mint (or re-read) this session's resume token. It
+                // rides every snapshot from here on; after a crash,
+                // `RESUME <token>` re-attaches to the restored session.
+                let mut tokens = shared.tokens.lock().unwrap();
+                let t = match tokens[active] {
+                    Some(t) => t,
+                    None => {
+                        let t = shared.next_token.fetch_add(1, Ordering::SeqCst);
+                        tokens[active] = Some(t);
+                        t
+                    }
+                };
+                drop(tokens);
+                let _ = write!(resp, "TOKEN {t}");
+            } else if let Some(arg) = line.strip_prefix("RESUME ") {
+                match arg.trim().parse::<u64>() {
+                    Err(e) => {
+                        let _ = write!(resp, "ERR resume-bad-token {e}");
+                    }
+                    Ok(tok) => {
+                        let claimed = shared.parked.lock().unwrap().remove(&tok);
+                        match claimed {
+                            None => {
+                                resp.push_str(
+                                    "ERR resume-unknown-token no parked session \
+                                     under that token",
+                                );
+                            }
+                            Some(p) if active != slot => {
+                                // Already bound to a resumed session;
+                                // re-park the claim untouched.
+                                shared.parked.lock().unwrap().insert(tok, p);
+                                resp.push_str("ERR resume-already-bound");
+                            }
+                            Some(p) => {
+                                // Switch this connection onto the
+                                // restored session. The scratch slot
+                                // stays held (the pool worker is pinned
+                                // to it) and is released with the
+                                // resumed one when the handler ends.
+                                guard.extra.set(Some(p.slot));
+                                active = p.slot;
+                                rng = Pcg64::restore(p.rng);
+                                *shared.cells[active].rng.lock().unwrap() = p.rng;
+                                shared.metrics.lock().unwrap().incr("serve_resumes");
+                                crate::log_info!(
+                                    "session slot {active}: resumed via token {tok} \
+                                     (snapshot tick {})",
+                                    shared.resume_tick
+                                );
+                                let _ = write!(resp, "OK resumed tick={}", shared.resume_tick);
+                            }
+                        }
+                    }
+                }
             } else if line == "STATS" {
                 let m = shared.metrics.lock().unwrap();
                 let _ = write!(
@@ -1208,18 +1943,24 @@ fn handle_connection(
                         {
                             // Encode straight into the slot's pooled
                             // buffer — no per-request spike clone.
-                            let mut ib = shared.cells[slot].inbuf.lock().unwrap();
+                            let mut ib = shared.cells[active].inbuf.lock().unwrap();
                             ib.resize(encoder.n_neurons(), false);
                             encoder.encode(&obs, &mut rng, ib.as_mut_slice());
                         }
-                        match shared.submit_and_wait(slot, SlotRequest::Step) {
+                        // Publish the post-encode RNG state strictly
+                        // before the request is visible to the stepper:
+                        // its snapshot shadow picks it up when it
+                        // processes this request, pairing backend state
+                        // and encoder RNG exactly (see SlotCell::rng).
+                        *shared.cells[active].rng.lock().unwrap() = rng.export_state();
+                        match shared.submit_and_wait(active, SlotRequest::Step) {
                             SlotResponse::Action => {
                                 let mut m = shared.metrics.lock().unwrap();
                                 m.incr("requests");
                                 m.observe("latency_us", started.elapsed().as_secs_f64() * 1e6);
                                 drop(m);
                                 resp.push_str("ACT ");
-                                let ab = shared.cells[slot].actbuf.lock().unwrap();
+                                let ab = shared.cells[active].actbuf.lock().unwrap();
                                 for (i, a) in ab.iter().enumerate() {
                                     if i > 0 {
                                         resp.push(',');
@@ -1278,7 +2019,90 @@ fn handle_connection(
     if let Err(e) = run {
         crate::log_info!("session slot {slot}: connection ended with {e}");
     }
-    // SlotGuard releases the slot and the live count (also on unwind).
+    // SlotGuard releases the slot(s) and the live count (also on unwind).
+}
+
+/// Off-pool handler for a connection accepted while the server was
+/// full but parked (snapshot-restored) sessions existed. It reads
+/// exactly one line on a short, drain-aware budget: a valid
+/// `RESUME <token>` claims the parked slot and continues as a normal
+/// session handler on it (no initial reset — the restored state is the
+/// point); anything else is answered `ERR server full` and closed.
+fn handle_resume_only_connection(
+    mut stream: TcpStream,
+    shared: Arc<Shared>,
+    encoder: Arc<PopulationEncoder>,
+    seed: u64,
+    jobs: Option<Arc<JobManager>>,
+    hub: Option<Arc<StreamHub>>,
+    opts: ConnOptions,
+) {
+    let poll = opts.read_timeout.map_or(READ_POLL, |t| t.min(READ_POLL));
+    if stream.set_read_timeout(Some(poll)).is_err() {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut lr = LineReader::new(read_half, opts.max_line);
+    let budget = opts.read_timeout.unwrap_or(Duration::from_secs(5));
+    let deadline = Instant::now() + budget;
+    loop {
+        match lr.poll_line() {
+            Ok(LineEvent::Line) => break,
+            Ok(LineEvent::TimedOut) => {
+                if shared.drain.is_draining() || Instant::now() >= deadline {
+                    let _ = stream.write_all(b"ERR server full\n");
+                    return;
+                }
+            }
+            Ok(LineEvent::TooLong) => {
+                let _ = stream.write_all(b"ERR server full\n");
+                return;
+            }
+            Ok(LineEvent::Eof) | Err(_) => return,
+        }
+    }
+    let claimed = std::str::from_utf8(lr.line())
+        .ok()
+        .map(str::trim)
+        .and_then(|line| line.strip_prefix("RESUME "))
+        .and_then(|arg| arg.trim().parse::<u64>().ok())
+        .and_then(|tok| shared.parked.lock().unwrap().remove(&tok).map(|p| (tok, p)));
+    let Some((tok, parked)) = claimed else {
+        shared.metrics.lock().unwrap().incr("rejected");
+        let _ = stream.write_all(b"ERR server full\n");
+        return;
+    };
+    // From here this is an ordinary session handler on the parked slot
+    // (counted live; its SlotGuard releases the slot and clears the
+    // token on exit).
+    shared.live.fetch_add(1, Ordering::SeqCst);
+    shared.metrics.lock().unwrap().incr("serve_resumes");
+    crate::log_info!(
+        "session slot {}: resumed off-pool via token {tok} (snapshot tick {})",
+        parked.slot,
+        shared.resume_tick
+    );
+    let mut resp = String::new();
+    let _ = write!(resp, "OK resumed tick={}", shared.resume_tick);
+    resp.push('\n');
+    // Even if this write fails the handler below still runs: its
+    // SlotGuard is what releases the claimed slot cleanly.
+    let _ = stream.write_all(resp.as_bytes());
+    let residual = lr.take_residual();
+    handle_connection(
+        stream,
+        residual,
+        parked.slot,
+        shared,
+        encoder,
+        seed,
+        jobs,
+        hub,
+        opts,
+        Some(parked.rng),
+    );
 }
 
 /// Handle one `JOB <verb> ...` request (everything after `JOB `),
@@ -1479,6 +2303,51 @@ fn write_job_row(resp: &mut String, row: &JobRow) {
     }
 }
 
+/// Encode the full serving state into the warm shadow buffer and park
+/// it for the snapshotter thread. Runs at a tick boundary on the
+/// stepper thread; every field is a fixed-size put into the
+/// probe-warmed buffer, so the steady state allocates nothing. Skips
+/// (counting `serve_snapshot_skipped`) when the snapshotter still
+/// holds the buffer, and stops entirely once a write error degraded
+/// the server to in-memory serving — the stepper never blocks on disk.
+fn maybe_snapshot(backend: &mut dyn SnnBackend, shared: &Shared, s: &mut StepperSnapshots) {
+    let pl = &*s.plumbing;
+    if !pl.disk_ok.load(Ordering::SeqCst) {
+        return;
+    }
+    let Some(buf) = pl.spare.lock().unwrap().take() else {
+        shared.metrics.lock().unwrap().incr("serve_snapshot_skipped");
+        return;
+    };
+    let mut w = BinWriter::from_vec(buf);
+    let start = w.begin_frame(SERVE_SNAPSHOT_FRAME_KIND);
+    w.put_u64(s.tick);
+    w.put_u64(shared.next_token.load(Ordering::SeqCst));
+    {
+        let tokens = shared.tokens.lock().unwrap();
+        w.put_usize(tokens.len());
+        for (tok, rng) in tokens.iter().zip(s.shadow.iter()) {
+            match tok {
+                Some(t) => {
+                    w.put_u8(1);
+                    w.put_u64(*t);
+                }
+                None => w.put_u8(0),
+            }
+            put_pcg(&mut w, rng);
+        }
+    }
+    if !backend.save_session_state(&mut w) {
+        // Unreachable in practice (support is probed at startup), but
+        // stay total: give the buffer back and carry on serving.
+        *pl.spare.lock().unwrap() = Some(w.into_bytes());
+        return;
+    }
+    w.seal_frame(start);
+    *pl.pending.lock().unwrap() = Some((s.tick, w.into_bytes()));
+    pl.pending_cv.notify_one();
+}
+
 /// Drain the request queue forever (until shutdown), stepping every
 /// pending session in one batched call per tick. Every buffer the loop
 /// touches — the drained queue, the session/input staging, the trace
@@ -1492,12 +2361,22 @@ fn write_job_row(resp: &mut String, row: &JobRow) {
 /// restore it. A scheduled [`FaultSite::OverloadBurst`] makes a tick
 /// count as overrun regardless of the wall clock — the deterministic
 /// overload the chaos soak leans on.
+///
+/// With `snap` present (`--state-dir`), every [`SnapshotPlumbing::every`]
+/// batch ticks the loop encodes the full serving state into the warm
+/// shadow buffer and parks it for the snapshotter thread — strictly
+/// *between* decoding a tick's actions and delivering them, so no
+/// handler can race a new encode into the cut. The encode reuses the
+/// probe-warmed buffer and fixed-size puts only, keeping the hot path
+/// zero-alloc (`tests/alloc_free_serving.rs`); a busy snapshotter or a
+/// prior write error skips the snapshot, never blocks the tick.
 fn stepper_loop(
     backend: &mut dyn SnnBackend,
     decoder: &TraceDecoder,
     shared: &Shared,
     tick_deadline: Option<Duration>,
     plan: Option<Arc<FaultPlan>>,
+    mut snap: Option<StepperSnapshots>,
 ) {
     let n_out = backend.config().n_out;
     let mut slots: Vec<usize> = Vec::new();
@@ -1526,6 +2405,12 @@ fn stepper_loop(
         slots.clear();
         inputs.clear();
         for &(slot, req) in &drained {
+            // Adopt the handler's published RNG state for every request
+            // this tick processes: the snapshot shadow stays paired
+            // with exactly the requests the backend has absorbed.
+            if let Some(s) = snap.as_mut() {
+                s.shadow[slot] = *shared.cells[slot].rng.lock().unwrap();
+            }
             match req {
                 SlotRequest::Reset => {
                     backend.reset_session(slot);
@@ -1547,14 +2432,25 @@ fn stepper_loop(
         backend.step_sessions(&slots, &inputs, &mut out_spikes);
         debug_assert_eq!(out_spikes.len(), slots.len() * n_out);
 
+        // Decode every action first; responses are delivered only after
+        // the snapshot boundary below, so a snapshot can never capture
+        // an encode racing in from a client we already answered.
         for &slot in &slots {
             backend.output_traces_session_into(slot, &mut traces);
-            {
-                let mut ab = shared.cells[slot].actbuf.lock().unwrap();
-                ab.clear();
-                ab.resize(decoder.action_dims, 0.0);
-                decoder.decode(&traces, ab.as_mut_slice());
+            let mut ab = shared.cells[slot].actbuf.lock().unwrap();
+            ab.clear();
+            ab.resize(decoder.action_dims, 0.0);
+            decoder.decode(&traces, ab.as_mut_slice());
+        }
+
+        if let Some(s) = snap.as_mut() {
+            s.tick += 1;
+            if s.tick % s.plumbing.every == 0 {
+                maybe_snapshot(backend, shared, s);
             }
+        }
+
+        for &slot in &slots {
             shared.deliver(slot, SlotResponse::Action);
         }
 
@@ -2162,6 +3058,211 @@ mod tests {
         // (the restore happens before tick 11 is counted).
         assert_eq!(m.count("serve_shed_ticks"), 8);
         plan.assert_exhausted();
+    }
+
+    #[test]
+    fn lagging_follower_is_evicted_with_cursor_and_restitches() {
+        use crate::coordinator::jobs::{JobManager, JobManagerConfig, JobModel};
+        // The first follower the hub admits never drains its socket.
+        let plan = Arc::new(FaultPlan::new().at(FaultSite::FollowerStall, &[0]));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let server_plan = Arc::clone(&plan);
+        let handle = std::thread::spawn(move || {
+            let mut server = ControlServer::with_config(
+                test_backend(),
+                6,
+                6,
+                ServerConfig {
+                    max_sessions: 2,
+                    seed: 1,
+                    // ~one row line: the stalled follower hits the cap
+                    // long before the job's 9-line stream completes.
+                    follower_lag_cap: 64,
+                    ..ServerConfig::default()
+                },
+            );
+            let jobs = Arc::new(JobManager::with_metrics(
+                JobManagerConfig {
+                    queue_cap: 4,
+                    runners: 1,
+                    faults: Some(server_plan),
+                    ..JobManagerConfig::default()
+                },
+                server.metrics(),
+            ));
+            let cfg = {
+                let mut cfg = crate::snn::SnnConfig::control(48, 12);
+                cfg.n_hidden = 16;
+                cfg
+            };
+            let mut rng = Pcg64::new(0, 7);
+            let mut genome = vec![0.0f32; cfg.n_rule_params()];
+            rng.fill_normal_f32(&mut genome, 0.05);
+            let rule = NetworkRule::from_flat(&cfg, &genome);
+            jobs.install_model("cheetah-vel", JobModel::plastic(cfg, rule))
+                .unwrap();
+            server.attach_jobs(jobs);
+            server.serve(&addr.to_string(), None).unwrap();
+            server.metrics()
+        });
+        std::thread::sleep(Duration::from_millis(100));
+
+        let mut c = Client::connect(addr);
+        let ok = c.round_trip(&format!("JOB SUBMIT {}", small_grid_spec()));
+        assert!(ok.starts_with("JOB OK id=1 total=8"), "{ok}");
+
+        // The stalled subscriber's backlog grows past the cap: the hub
+        // must cut it loose with its resume cursor instead of buffering
+        // forever (or delaying anyone else).
+        let mut s = Client::connect(addr);
+        s.writer.write_all(b"JOB SUBSCRIBE 1\n").unwrap();
+        s.line.clear();
+        s.reader.read_line(&mut s.line).unwrap();
+        assert!(
+            s.line.starts_with("JOB SUBSCRIBE id=1 total=8 from=0"),
+            "{}",
+            s.line
+        );
+        s.line.clear();
+        s.reader.read_line(&mut s.line).unwrap();
+        assert!(s.line.starts_with("ERR lagged next=0"), "{}", s.line);
+        // …and the evicted stream is closed right after the hint.
+        s.line.clear();
+        assert_eq!(s.reader.read_line(&mut s.line).unwrap(), 0, "{:?}", s.line);
+        drop(s);
+
+        // Re-subscribing from the advertised cursor stitches the whole
+        // stream — the eviction cost latency, never data.
+        let mut s2 = Client::connect(addr);
+        s2.writer.write_all(b"JOB SUBSCRIBE 1 from=0\n").unwrap();
+        s2.line.clear();
+        s2.reader.read_line(&mut s2.line).unwrap();
+        assert!(
+            s2.line.starts_with("JOB SUBSCRIBE id=1 total=8 from=0"),
+            "{}",
+            s2.line
+        );
+        let rows = read_rows(&mut s2, 8);
+        assert!(rows[8].starts_with("JOB END id=1 state=done"), "{}", rows[8]);
+        drop(s2);
+
+        assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+        drop(c);
+        let metrics = handle.join().unwrap();
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.count("job_stream_lag_drops"), 1, "exactly one lag eviction");
+        assert_eq!(
+            m.count("job_stream_drops"),
+            0,
+            "lag evictions must not masquerade as dead-socket drops"
+        );
+        drop(m);
+        plan.assert_exhausted();
+    }
+
+    /// TOKEN → crash → recover → RESUME smoke on one precision (the
+    /// kill-at-every-boundary sweep across precisions/shards lives in
+    /// `tests/snapshot_warm_restart.rs`). `snapshot_every = 6` lands
+    /// exactly one snapshot — at the tick right after the 4th OBS
+    /// (connect-reset + RESET are ticks 1–2) — so the recovery point is
+    /// deterministic.
+    #[test]
+    fn warm_restart_resume_continues_bit_exact() {
+        fn tmp_dir(tag: &str) -> PathBuf {
+            let d = std::env::temp_dir()
+                .join(format!("ffp-serve-{tag}-{}", std::process::id()));
+            let _ = fs::remove_dir_all(&d);
+            fs::create_dir_all(&d).unwrap();
+            d
+        }
+        fn spawn(
+            dir: PathBuf,
+        ) -> (
+            std::net::SocketAddr,
+            std::thread::JoinHandle<Arc<Mutex<Metrics>>>,
+        ) {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            drop(listener);
+            let handle = std::thread::spawn(move || {
+                let mut server = ControlServer::with_config(
+                    test_backend(),
+                    6,
+                    6,
+                    ServerConfig {
+                        max_sessions: 2,
+                        seed: 1,
+                        state_dir: Some(dir),
+                        snapshot_every: 6,
+                        ..ServerConfig::default()
+                    },
+                );
+                server.serve(&addr.to_string(), None).unwrap();
+                server.metrics()
+            });
+            std::thread::sleep(Duration::from_millis(100));
+            (addr, handle)
+        }
+        let obs = |i: usize| format!("OBS 0.{i},0.2,0.3,-0.4,0.5,1.0");
+
+        // Witness: one uninterrupted 8-tick session.
+        let wdir = tmp_dir("witness");
+        let (addr, handle) = spawn(wdir.clone());
+        let mut w = Client::connect(addr);
+        assert_eq!(w.round_trip("RESET"), "OK");
+        assert_eq!(w.round_trip("TOKEN"), "TOKEN 1");
+        let witness: Vec<String> = (0..8).map(|i| w.round_trip(&obs(i))).collect();
+        assert!(witness.iter().all(|a| a.starts_with("ACT ")), "{witness:?}");
+        assert_eq!(w.round_trip("SHUTDOWN"), "OK draining");
+        drop(w);
+        handle.join().unwrap();
+
+        // Crash run: identical prefix, gone after 4 OBS ticks. SHUTDOWN
+        // acks without a stepper tick, so the newest snapshot on disk
+        // stays the tick-6 one carrying the token — the crash point.
+        let dir = tmp_dir("resume");
+        let (addr, handle) = spawn(dir.clone());
+        let mut c = Client::connect(addr);
+        assert_eq!(c.round_trip("RESET"), "OK");
+        assert_eq!(c.round_trip("TOKEN"), "TOKEN 1");
+        // Token minting is idempotent per session.
+        assert_eq!(c.round_trip("TOKEN"), "TOKEN 1");
+        for (i, expect) in witness.iter().enumerate().take(4) {
+            assert_eq!(&c.round_trip(&obs(i)), expect, "prefix diverged at tick {i}");
+        }
+        assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+        drop(c);
+        let metrics = handle.join().unwrap();
+        assert_eq!(metrics.lock().unwrap().count("serve_snapshots"), 1);
+
+        // Warm restart over the same state dir: the session is parked
+        // under its token; RESUME re-attaches and the tail must match
+        // the witness bit for bit — the snapshot carries the encoder
+        // RNG, so even the spike draws line up.
+        let (addr, handle) = spawn(dir.clone());
+        let mut r = Client::connect(addr);
+        assert!(r.round_trip("RESUME nope").starts_with("ERR resume-bad-token"));
+        assert!(r
+            .round_trip("RESUME 99")
+            .starts_with("ERR resume-unknown-token"));
+        assert_eq!(r.round_trip("RESUME 1"), "OK resumed tick=6");
+        // The claim is single-use.
+        assert!(r.round_trip("RESUME 1").starts_with("ERR resume-"));
+        for (i, expect) in witness.iter().enumerate().skip(4) {
+            assert_eq!(&r.round_trip(&obs(i)), expect, "resumed tick {i} diverged");
+        }
+        assert_eq!(r.round_trip("SHUTDOWN"), "OK draining");
+        drop(r);
+        let metrics = handle.join().unwrap();
+        {
+            let m = metrics.lock().unwrap();
+            assert_eq!(m.count("serve_snapshot_recoveries"), 1);
+            assert_eq!(m.count("serve_resumes"), 1);
+        }
+        let _ = fs::remove_dir_all(&wdir);
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -99,6 +99,13 @@ pub struct SoakConfig {
     pub faults: Option<Arc<FaultPlan>>,
     /// Durable checkpoint directory for the chaos phase.
     pub job_dir: Option<PathBuf>,
+    /// Durable serving-snapshot directory for the chaos phase. Without
+    /// it the snapshotter never runs, so a plan containing
+    /// `FaultSite::SnapshotWrite` could never exhaust.
+    pub state_dir: Option<PathBuf>,
+    /// Serving-snapshot cadence in stepper ticks (only meaningful with
+    /// [`SoakConfig::state_dir`]; `obs_ticks` is what drives the ticks).
+    pub snapshot_every: u64,
 }
 
 impl Default for SoakConfig {
@@ -117,6 +124,8 @@ impl Default for SoakConfig {
             obs_ticks: 0,
             faults: None,
             job_dir: None,
+            state_dir: None,
+            snapshot_every: 16,
         }
     }
 }
@@ -142,6 +151,10 @@ pub struct SoakReport {
     pub shed_restores: u64,
     /// Followers the stream hub dropped on a dead socket.
     pub stream_drops: u64,
+    /// Followers the hub evicted for lagging past the outbound cap.
+    pub stream_lag_drops: u64,
+    /// Serving-snapshot write failures absorbed (degrade, not panic).
+    pub snapshot_write_errors: u64,
 }
 
 /// Everything one phase (witness or chaos) produced.
@@ -165,6 +178,7 @@ pub fn run_soak(cfg: &SoakConfig) -> SoakReport {
     witness_cfg.obs_ticks = 0;
     witness_cfg.subscribers_per_job = 1;
     witness_cfg.job_dir = None;
+    witness_cfg.state_dir = None;
     let witness = run_phase(&witness_cfg);
 
     let chaos = run_phase(cfg);
@@ -189,6 +203,8 @@ pub fn run_soak(cfg: &SoakConfig) -> SoakReport {
         shed_transitions: m.count("serve_shed_transitions"),
         shed_restores: m.count("serve_shed_restores"),
         stream_drops: m.count("job_stream_drops"),
+        stream_lag_drops: m.count("job_stream_lag_drops"),
+        snapshot_write_errors: m.count("serve_snapshot_write_errors"),
     }
 }
 
@@ -242,6 +258,8 @@ fn run_phase(cfg: &SoakConfig) -> PhaseOutcome {
                         max_sessions: cfg.max_sessions,
                         seed: cfg.seed,
                         tick_deadline: cfg.tick_deadline,
+                        state_dir: cfg.state_dir.clone(),
+                        snapshot_every: cfg.snapshot_every,
                         ..ServerConfig::default()
                     },
                 );
@@ -321,8 +339,10 @@ fn run_phase(cfg: &SoakConfig) -> PhaseOutcome {
                 "interrupted" => {
                     all_done = false;
                     let ok = orch.round_trip(&format!("JOB SUBMIT resume={id}"));
-                    if let Some(rest) = ok.strip_prefix("JOB OK id=") {
-                        let new_id = rest.split_whitespace().next().unwrap().parse().unwrap();
+                    if ok.starts_with("JOB OK") {
+                        let new_id = parse_job_ok_id(&ok).unwrap_or_else(|e| {
+                            panic!("soak resume of job {j} (id {id}): {e}")
+                        });
                         current.lock().unwrap()[j] = new_id;
                         resumes += 1;
                     } else {
@@ -469,6 +489,43 @@ fn follow_job(
     }
 }
 
+/// A server reply that violated the wire grammar the soak depends on.
+///
+/// Both `JOB SUBMIT` ack parses route through this instead of an
+/// `unwrap()` chain, so a garbled line fails the soak with the
+/// offending bytes in the diagnostic rather than a bare `Option`
+/// panic pointing at nothing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct WireParseError {
+    /// The grammar the harness expected, e.g. `JOB OK id=<u64>`.
+    expected: &'static str,
+    /// The full reply line as received.
+    line: String,
+}
+
+impl std::fmt::Display for WireParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "malformed server reply: expected {}, got {:?}",
+            self.expected, self.line
+        )
+    }
+}
+
+impl std::error::Error for WireParseError {}
+
+/// Parse the id out of a `JOB OK id=<n> ...` ack line.
+fn parse_job_ok_id(line: &str) -> Result<u64, WireParseError> {
+    line.strip_prefix("JOB OK id=")
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|tok| tok.parse().ok())
+        .ok_or_else(|| WireParseError {
+            expected: "JOB OK id=<u64>",
+            line: line.to_string(),
+        })
+}
+
 /// `key=value` field extraction from a wire line.
 fn kv<'a>(line: &'a str, key: &str) -> &'a str {
     line.split_whitespace()
@@ -528,8 +585,9 @@ impl Client {
         let deadline = Instant::now() + PHASE_DEADLINE;
         loop {
             let ok = self.round_trip(&format!("JOB SUBMIT {}", spec.encode()));
-            if let Some(rest) = ok.strip_prefix("JOB OK id=") {
-                return rest.split_whitespace().next().unwrap().parse().unwrap();
+            if ok.starts_with("JOB OK") {
+                return parse_job_ok_id(&ok)
+                    .unwrap_or_else(|e| panic!("soak submit ack garbled: {e}"));
             }
             assert!(
                 ok.starts_with("ERR overloaded") || ok.starts_with("ERR job-queue-full"),
@@ -573,6 +631,32 @@ mod tests {
         assert_eq!(report.resumes, 0);
         assert_eq!(report.reconnects, 0);
         assert_eq!(report.streams, 2 * 2);
+    }
+
+    /// Regression: a garbled `JOB OK` ack used to die inside an
+    /// `unwrap()` chain with no trace of the offending line. The parse
+    /// is now total and the error carries the bytes.
+    #[test]
+    fn garbled_job_ack_yields_typed_error_with_the_line() {
+        assert_eq!(parse_job_ok_id("JOB OK id=17 state=queued"), Ok(17));
+        assert_eq!(parse_job_ok_id("JOB OK id=0"), Ok(0));
+        for bad in [
+            "JOB OK id=",
+            "JOB OK id= 7",
+            "JOB OK id=banana",
+            "JOB OK id=-3",
+            "JOB OK",
+            "JOB OKid=7",
+            "",
+        ] {
+            let err = parse_job_ok_id(bad).expect_err(bad);
+            assert_eq!(err.line, bad, "error must carry the offending line");
+            let msg = err.to_string();
+            assert!(
+                msg.contains("JOB OK id=<u64>") && msg.contains(&format!("{bad:?}")),
+                "diagnostic must name grammar and bytes: {msg}"
+            );
+        }
     }
 
     /// One targeted cut: the subscriber must reconnect from its cursor

@@ -183,6 +183,27 @@ fn parser() -> Parser {
                  watchdog",
                 "0",
             ),
+            opt(
+                "state-dir",
+                "durable serving-state directory: full session snapshots \
+                 (weights, membranes, traces, resume tokens) land here \
+                 atomically at tick boundaries, and on restart the newest \
+                 valid one warm-starts the server — clients re-attach with \
+                 RESUME <token> bit-exactly; empty = in-memory only",
+                "",
+            ),
+            opt(
+                "snapshot-every-ticks",
+                "serving ticks between durable snapshots (with --state-dir)",
+                "16",
+            ),
+            opt(
+                "stream-lag-cap",
+                "byte cap on one JOB SUBSCRIBE/RESULTS follower's unsent \
+                 backlog; at the cap the follower is cut with a typed \
+                 `ERR lagged next=<row>` and can re-subscribe from there",
+                "1048576",
+            ),
         ],
     )
     .command(
@@ -682,6 +703,17 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
     };
     let read_timeout_ms = args.get_usize("read-timeout-ms", 0);
     let tick_deadline_us = args.get_usize("tick-deadline-us", 0);
+    // Durable serving plane: snapshots land in --state-dir at tick
+    // boundaries; on restart the newest valid one warm-starts every
+    // session and clients re-attach with RESUME <token>.
+    let state_dir = args.get_or("state-dir", "");
+    let state_dir = (!state_dir.is_empty()).then(|| std::path::PathBuf::from(state_dir));
+    if let Some(dir) = &state_dir {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("state-dir {}: {e}", dir.display());
+            return 1;
+        }
+    }
     let mut server = ControlServer::with_config(
         backend,
         obs_dim,
@@ -694,6 +726,9 @@ fn cmd_serve(args: &Args, seed: u64) -> i32 {
                 .then(|| std::time::Duration::from_millis(read_timeout_ms as u64)),
             tick_deadline: (tick_deadline_us > 0)
                 .then(|| std::time::Duration::from_micros(tick_deadline_us as u64)),
+            state_dir,
+            snapshot_every: args.get_usize("snapshot-every-ticks", 16).max(1) as u64,
+            follower_lag_cap: args.get_usize("stream-lag-cap", 1 << 20).max(1),
         },
     );
     // Adaptation-as-a-service: JOB verbs run grid sweeps on dedicated

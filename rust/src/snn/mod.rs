@@ -29,6 +29,7 @@ pub mod numeric;
 pub mod plasticity;
 pub mod reference;
 pub mod shard;
+pub mod snapshot;
 pub mod spike;
 pub mod trace;
 

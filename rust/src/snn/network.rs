@@ -463,6 +463,14 @@ impl<S: Scalar> SnnNetwork<S> {
         &mut self.in_spikes
     }
 
+    /// Read-only view of the packed input staging words (serving
+    /// snapshots capture them so a restored network re-encodes
+    /// bit-identically).
+    #[inline]
+    pub fn input(&self) -> &SpikeWords {
+        &self.in_spikes
+    }
+
     /// Step using input spikes previously staged through
     /// [`SnnNetwork::input_mut`], advancing only the sessions flagged in
     /// `active`. Returns the packed output spike words.

@@ -80,6 +80,18 @@ pub trait Scalar: Copy + Clone + PartialOrd + std::fmt::Debug + Send + Sync + 's
     /// payload reinterpreted as `u16`).
     fn bit_pattern(self) -> u32;
 
+    /// Exact inverse of [`Scalar::bit_pattern`]: reconstruct the scalar
+    /// from its zero-extended storage bits. Round-trips every value of
+    /// the domain bit-for-bit (serving-snapshot durability relies on
+    /// this); bits outside the domain's storage width are ignored, the
+    /// way narrowing stores behave in hardware.
+    fn from_bit_pattern(bits: u32) -> Self;
+
+    /// Wire tag identifying this scalar domain in serialized state
+    /// (serving snapshots refuse to restore across domains): `0x0F32`
+    /// for f32, `0x0F16` for F16, `0x05A0` for Q5.10 Qfx.
+    const PREC_TAG: u16;
+
     /// Quantize a **positive gate threshold** (the plasticity ε of
     /// `PlasticityConfig::trace_eps`), rounding *up* to the domain's next
     /// representable value instead of to-nearest.
@@ -157,6 +169,11 @@ impl Scalar for f32 {
         self.to_bits()
     }
     #[inline]
+    fn from_bit_pattern(bits: u32) -> f32 {
+        f32::from_bits(bits)
+    }
+    const PREC_TAG: u16 = 0x0F32;
+    #[inline]
     fn quantize_threshold(x: f32) -> f32 {
         x
     }
@@ -219,6 +236,11 @@ impl Scalar for F16 {
     fn bit_pattern(self) -> u32 {
         self.0 as u32
     }
+    #[inline]
+    fn from_bit_pattern(bits: u32) -> F16 {
+        F16(bits as u16)
+    }
+    const PREC_TAG: u16 = 0x0F16;
     #[inline]
     fn quantize_threshold(x: f32) -> F16 {
         // Ceiling quantization for positive thresholds: if RNE rounded
@@ -284,6 +306,11 @@ impl Scalar for Qfx {
     fn bit_pattern(self) -> u32 {
         (self.0 as u16) as u32
     }
+    #[inline]
+    fn from_bit_pattern(bits: u32) -> Qfx {
+        Qfx((bits as u16) as i16)
+    }
+    const PREC_TAG: u16 = 0x05A0;
     #[inline]
     fn quantize_threshold(x: f32) -> Qfx {
         if x.is_nan() {
@@ -467,5 +494,26 @@ mod tests {
         assert_eq!(<F16 as Scalar>::ONE.bit_pattern(), 0x3C00);
         assert_eq!(Qfx::ONE.bit_pattern(), 1 << Qfx::FRAC);
         assert_eq!(Qfx(-1).bit_pattern(), 0xFFFF);
+    }
+
+    #[test]
+    fn from_bit_pattern_round_trips_every_domain() {
+        // The snapshot format stores every lane as its bit pattern;
+        // restore must be the exact inverse — including non-canonical
+        // encodings (negative zero, NaN payloads) that arithmetic could
+        // have produced before the snapshot landed.
+        for x in [0.0f32, -0.0, 1.5, -3.25, f32::MAX, f32::MIN_POSITIVE] {
+            assert_eq!(f32::from_bit_pattern(x.bit_pattern()).to_bits(), x.to_bits());
+        }
+        // Exhaustive for the 16-bit domains: every u16 pattern survives.
+        for bits in 0..=u16::MAX {
+            let h = F16(bits);
+            assert_eq!(F16::from_bit_pattern(h.bit_pattern()).0, bits);
+            let q = Qfx(bits as i16);
+            assert_eq!(Qfx::from_bit_pattern(q.bit_pattern()).0, bits as i16);
+        }
+        // High bits outside the storage width are ignored.
+        assert_eq!(F16::from_bit_pattern(0xFFFF_3C00).0, 0x3C00);
+        assert_eq!(Qfx::from_bit_pattern(0xABCD_0400).0, 0x0400);
     }
 }

@@ -148,6 +148,16 @@ impl<S: Scalar> ShardedNetwork<S> {
         &self.shards[k]
     }
 
+    /// Mutably borrow one shard's network — the restore path of serving
+    /// snapshots writes captured per-shard state back through this.
+    /// Callers must preserve the shard invariants (geometry, batch
+    /// layout, padding-lane zeros); the snapshot codec does so by
+    /// construction because it only restores state captured from an
+    /// identically-shaped network.
+    pub fn shard_mut(&mut self, k: usize) -> &mut SnnNetwork<S> {
+        &mut self.shards[k]
+    }
+
     /// The shared frozen rule θ behind every shard's [`Mode::Plastic`]
     /// (`None` in fixed mode). Chunked multi-engine deployments pass
     /// clones of one `Arc` into every chunk's backend, so *all* shards

@@ -1,0 +1,496 @@
+//! Durable serving-state snapshots of a sharded network (ISSUE 10
+//! tentpole; DESIGN.md §Durability-and-Faults).
+//!
+//! Serializes the **complete dynamic state** of a [`ShardedNetwork`] —
+//! per-session plastic weights, membrane lanes, packed spike words,
+//! trace lanes (including the lazy-decay clocks), step counters, the
+//! runtime plasticity gate, and the deployed rule θ — into a
+//! checksummed [`binio`](crate::util::binio) frame, and restores it
+//! bit-exactly into a freshly constructed network of the same geometry.
+//!
+//! Scalar lanes travel as `u32` bit patterns
+//! ([`Scalar::bit_pattern`] / [`Scalar::from_bit_pattern`]) so the
+//! codec is one implementation across all three precisions (f32,
+//! binary16, Q5.10) and round-trips are bit-exact by construction.
+//!
+//! Decoding is *total* and defensive: every length is validated against
+//! the live network before any state is touched, a precision/geometry/
+//! θ mismatch is a typed [`BinError::Malformed`] (the serving recovery
+//! path treats it as "rejected: serve fresh", distinct from a corrupt
+//! file, which is quarantined), and restore is **not transactional** —
+//! on error the caller must reset the network before serving.
+//!
+//! Encoding appends frames in place through
+//! [`BinWriter::begin_frame`] / [`BinWriter::seal_frame`], so on a
+//! warm double-buffered `Vec` the serving stepper re-encodes a
+//! snapshot with **zero heap allocations** (pinned by
+//! `tests/alloc_free_serving.rs`).
+
+use crate::snn::{spike, Scalar, ShardedNetwork, SnnNetwork};
+use crate::util::binio::{BinError, BinReader, BinWriter};
+
+/// Frame kind of one backend's full session-state blob ("SS").
+pub const SESSION_STATE_FRAME_KIND: u16 = 0x5353;
+
+/// Frame kind of one shard's state within a session-state blob ("SH").
+pub const SHARD_FRAME_KIND: u16 = 0x5348;
+
+/// Append one scalar lane vector as `u32` bit patterns (length-prefixed,
+/// identical bytes to `put_u32s` — but loops over the scalars directly
+/// so the hot encode path never materializes a temporary `Vec<u32>`).
+fn put_lanes<S: Scalar>(w: &mut BinWriter, xs: &[S]) {
+    w.put_usize(xs.len());
+    for x in xs {
+        w.put_u32(x.bit_pattern());
+    }
+}
+
+/// Read a scalar lane vector written by [`put_lanes`] directly into
+/// `dst`, rejecting a length mismatch before any element is written.
+fn read_lanes_into<S: Scalar>(
+    r: &mut BinReader<'_>,
+    dst: &mut [S],
+    what: &str,
+) -> Result<(), BinError> {
+    let n = r.get_len(4)?;
+    if n != dst.len() {
+        return Err(BinError::Malformed(format!(
+            "{what}: {n} lanes in snapshot, {} live",
+            dst.len()
+        )));
+    }
+    for slot in dst.iter_mut() {
+        *slot = S::from_bit_pattern(r.get_u32()?);
+    }
+    Ok(())
+}
+
+/// Read a `u64` vector, rejecting a length mismatch.
+fn read_words(r: &mut BinReader<'_>, expect: usize, what: &str) -> Result<Vec<u64>, BinError> {
+    let words = r.get_u64s()?;
+    if words.len() != expect {
+        return Err(BinError::Malformed(format!(
+            "{what}: {} words in snapshot, {expect} live",
+            words.len()
+        )));
+    }
+    Ok(words)
+}
+
+/// Validate the packed-spike padding invariant: session lanes at or
+/// beyond `batch` must be zero in every row's final word, or masked
+/// stepping and trace accumulation would silently read ghost sessions.
+fn check_padding(words: &[u64], batch: usize, what: &str) -> Result<(), BinError> {
+    let tail = batch % 64;
+    if tail == 0 {
+        return Ok(());
+    }
+    let wpr = spike::words_for(batch);
+    let mask = !0u64 << tail;
+    for (row, chunk) in words.chunks(wpr).enumerate() {
+        if chunk[wpr - 1] & mask != 0 {
+            return Err(BinError::Malformed(format!(
+                "{what}: nonzero padding lanes in row {row}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn put_shard<S: Scalar>(w: &mut BinWriter, net: &SnnNetwork<S>) {
+    let start = w.begin_frame(SHARD_FRAME_KIND);
+    w.put_u64(net.steps);
+    put_lanes(w, &net.w1);
+    put_lanes(w, &net.w2);
+    put_lanes(w, &net.hidden.v);
+    w.put_u64s(net.hidden.spikes.words());
+    put_lanes(w, &net.output.v);
+    w.put_u64s(net.output.spikes.words());
+    w.put_u64s(net.input().words());
+    for trace in [&net.trace_in, &net.trace_hidden, &net.trace_out] {
+        put_lanes(w, &trace.values);
+        match trace.lazy_state() {
+            Some((clock, last, hot)) => {
+                w.put_bool(true);
+                w.put_u64s(clock);
+                w.put_u64s(last);
+                w.put_u64s(hot);
+            }
+            None => w.put_bool(false),
+        }
+    }
+    w.seal_frame(start);
+}
+
+fn read_shard<S: Scalar>(r: &mut BinReader<'_>, net: &mut SnnNetwork<S>) -> Result<(), BinError> {
+    let mut r = r.get_frame(SHARD_FRAME_KIND)?;
+    let batch = net.batch;
+    net.steps = r.get_u64()?;
+    read_lanes_into(&mut r, &mut net.w1, "w1")?;
+    read_lanes_into(&mut r, &mut net.w2, "w2")?;
+    read_lanes_into(&mut r, &mut net.hidden.v, "hidden.v")?;
+    let words = read_words(&mut r, net.hidden.spikes.words().len(), "hidden spikes")?;
+    check_padding(&words, batch, "hidden spikes")?;
+    net.hidden.spikes.copy_words_from(&words);
+    read_lanes_into(&mut r, &mut net.output.v, "output.v")?;
+    let words = read_words(&mut r, net.output.spikes.words().len(), "output spikes")?;
+    check_padding(&words, batch, "output spikes")?;
+    net.output.spikes.copy_words_from(&words);
+    let words = read_words(&mut r, net.input().words().len(), "input staging")?;
+    check_padding(&words, batch, "input staging")?;
+    net.input_mut().copy_words_from(&words);
+    for (trace, what) in [
+        (&mut net.trace_in, "trace_in"),
+        (&mut net.trace_hidden, "trace_hidden"),
+        (&mut net.trace_out, "trace_out"),
+    ] {
+        read_lanes_into(&mut r, &mut trace.values, what)?;
+        let lazy_in_snap = r.get_bool()?;
+        match (lazy_in_snap, trace.lazy_state().is_some()) {
+            (true, true) => {
+                let clock = read_words(&mut r, batch, &format!("{what} lazy clock"))?;
+                let (_, last_live, hot_live) = trace.lazy_state().expect("checked lazy");
+                let (n_last, n_hot) = (last_live.len(), hot_live.len());
+                let last = read_words(&mut r, n_last, &format!("{what} lazy last"))?;
+                let hot = read_words(&mut r, n_hot, &format!("{what} lazy hot"))?;
+                trace.restore_lazy_state(&clock, &last, &hot);
+            }
+            (false, false) => {}
+            (snap, _) => {
+                return Err(BinError::Malformed(format!(
+                    "{what}: snapshot is {} but live trace is {}",
+                    if snap { "lazy" } else { "eager" },
+                    if snap { "eager" } else { "lazy" },
+                )))
+            }
+        }
+    }
+    r.finish()
+}
+
+/// Append the complete dynamic state of `net` to `w` as one
+/// [`SESSION_STATE_FRAME_KIND`] frame. Allocation-free once `w`'s
+/// buffer is warm.
+pub fn encode_session_state<S: Scalar>(net: &ShardedNetwork<S>, w: &mut BinWriter) {
+    let cfg = net.cfg();
+    let start = w.begin_frame(SESSION_STATE_FRAME_KIND);
+    w.put_u32(S::PREC_TAG as u32);
+    w.put_usize(cfg.n_in);
+    w.put_usize(cfg.n_hidden);
+    w.put_usize(cfg.n_out);
+    w.put_bool(cfg.plasticity.presyn_gate);
+    w.put_usize(net.batch());
+    w.put_usize(net.stripes());
+    w.put_bool(net.plasticity_enabled());
+    match net.rule() {
+        Some(rule) => {
+            w.put_u8(1);
+            // θ travels inline (the deployed rule is part of the
+            // session state), written field-by-field so the warm
+            // encode path avoids `to_flat`'s temporary Vec.
+            w.put_usize(rule.l1.theta.len() + rule.l2.theta.len());
+            for &x in &rule.l1.theta {
+                w.put_f32(x);
+            }
+            for &x in &rule.l2.theta {
+                w.put_f32(x);
+            }
+        }
+        None => w.put_u8(0),
+    }
+    for k in 0..net.shard_count() {
+        put_shard(w, net.shard(k));
+    }
+    w.seal_frame(start);
+}
+
+/// Restore a [`SESSION_STATE_FRAME_KIND`] frame (read from `r` at the
+/// cursor) into `net`, growing its batch if the snapshot carries more
+/// sessions. The snapshot must match the live network's precision,
+/// geometry, shard layout, and deployed θ bit-for-bit — any mismatch is
+/// a typed [`BinError::Malformed`], which the serving recovery path
+/// reports as "rejected" (stale deployment: serve fresh, don't
+/// quarantine). **Not transactional**: on error the network may hold
+/// partial state and must be reset before serving.
+pub fn decode_session_state<S: Scalar>(
+    net: &mut ShardedNetwork<S>,
+    r: &mut BinReader<'_>,
+) -> Result<(), BinError> {
+    let mut r = r.get_frame(SESSION_STATE_FRAME_KIND)?;
+    let tag = r.get_u32()?;
+    if tag != S::PREC_TAG as u32 {
+        return Err(BinError::Malformed(format!(
+            "precision tag {tag:#06x} in snapshot, live backend is {:#06x}",
+            S::PREC_TAG
+        )));
+    }
+    let (n_in, n_hidden, n_out) = (r.get_usize()?, r.get_usize()?, r.get_usize()?);
+    let cfg = net.cfg();
+    if (n_in, n_hidden, n_out) != (cfg.n_in, cfg.n_hidden, cfg.n_out) {
+        return Err(BinError::Malformed(format!(
+            "geometry {n_in}x{n_hidden}x{n_out} in snapshot, live is {}x{}x{}",
+            cfg.n_in, cfg.n_hidden, cfg.n_out
+        )));
+    }
+    let presyn_gate = r.get_bool()?;
+    if presyn_gate != cfg.plasticity.presyn_gate {
+        return Err(BinError::Malformed(
+            "presyn_gate (lazy-trace layout) differs from live config".into(),
+        ));
+    }
+    let batch = r.get_usize()?;
+    let stripes = r.get_usize()?;
+    if stripes != net.stripes() {
+        return Err(BinError::Malformed(format!(
+            "{stripes} stripes in snapshot, live has {} (shard layout differs)",
+            net.stripes()
+        )));
+    }
+    if batch < net.batch() {
+        return Err(BinError::Malformed(format!(
+            "{batch} sessions in snapshot, live already has {} (batch only grows)",
+            net.batch()
+        )));
+    }
+    let plasticity_enabled = r.get_bool()?;
+    match r.get_u8()? {
+        1 => {
+            let rule = net.rule().ok_or_else(|| {
+                BinError::Malformed("plastic snapshot, live backend is fixed-weight".into())
+            })?;
+            let n = r.get_len(4)?;
+            if n != rule.l1.theta.len() + rule.l2.theta.len() {
+                return Err(BinError::Malformed(format!(
+                    "rule theta length {n} differs from deployed rule"
+                )));
+            }
+            for &live in rule.l1.theta.iter().chain(&rule.l2.theta) {
+                if r.get_f32()?.to_bits() != live.to_bits() {
+                    return Err(BinError::Malformed(
+                        "rule theta differs bit-for-bit from deployed rule".into(),
+                    ));
+                }
+            }
+        }
+        0 => {
+            if net.rule().is_some() {
+                return Err(BinError::Malformed(
+                    "fixed-weight snapshot, live backend is plastic".into(),
+                ));
+            }
+        }
+        other => return Err(BinError::Malformed(format!("bad mode tag {other}"))),
+    }
+    if batch > net.batch() {
+        net.grow_batch(batch);
+    }
+    for k in 0..net.shard_count() {
+        read_shard(&mut r, net.shard_mut(k))?;
+    }
+    r.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{Mode, NetworkRule, SnnConfig};
+    use crate::util::fixed::Qfx;
+    use crate::util::fp16::F16;
+    use crate::util::rng::Pcg64;
+
+    fn tiny_rule(cfg: &SnnConfig, seed: u64) -> NetworkRule {
+        let mut rng = Pcg64::new(seed, 0);
+        let mut flat = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut flat, 0.25);
+        NetworkRule::from_flat(cfg, &flat)
+    }
+
+    fn drive<S: Scalar>(net: &mut ShardedNetwork<S>, seed: u64, ticks: usize) {
+        let cfg = net.cfg().clone();
+        let mut rng = Pcg64::new(seed, 1);
+        let batch = net.batch();
+        let mut spikes = vec![false; cfg.n_in];
+        for _ in 0..ticks {
+            net.begin_tick();
+            for s in 0..batch {
+                for b in spikes.iter_mut() {
+                    *b = rng.bernoulli(0.5);
+                }
+                net.stage_session(s, &spikes);
+            }
+            net.step_staged();
+        }
+    }
+
+    fn encode<S: Scalar>(net: &ShardedNetwork<S>) -> Vec<u8> {
+        let mut w = BinWriter::new();
+        encode_session_state(net, &mut w);
+        w.into_bytes()
+    }
+
+    fn round_trip_case<S: Scalar>(lazy: bool, stripes: usize, batch: usize) {
+        let mut cfg = SnnConfig::tiny();
+        cfg.plasticity.presyn_gate = lazy;
+        let rule = tiny_rule(&cfg, 0xA0);
+        let mut live = ShardedNetwork::<S>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), stripes);
+        live.grow_batch(batch);
+        drive(&mut live, 0xB0, 9);
+        let bytes = encode(&live);
+
+        let mut restored =
+            ShardedNetwork::<S>::new(cfg.clone(), Mode::Plastic(rule.into()), stripes);
+        decode_session_state(&mut restored, &mut BinReader::new(&bytes)).unwrap();
+        assert_eq!(restored.batch(), batch);
+
+        // Bit-identical re-encode, and bit-identical continuation.
+        assert_eq!(encode(&restored), bytes, "re-encode differs");
+        drive(&mut live, 0xC0, 7);
+        drive(&mut restored, 0xC0, 7);
+        assert_eq!(encode(&restored), encode(&live), "continuation diverged");
+    }
+
+    #[test]
+    fn round_trips_bit_exactly_across_precisions_shards_and_trace_modes() {
+        for &lazy in &[false, true] {
+            for &(stripes, batch) in &[(1usize, 5usize), (2, 70), (4, 130)] {
+                round_trip_case::<f32>(lazy, stripes, batch);
+                round_trip_case::<F16>(lazy, stripes, batch);
+                round_trip_case::<Qfx>(lazy, stripes, batch);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_mode_round_trips() {
+        let cfg = SnnConfig::tiny();
+        let weights = vec![0.125f32; cfg.n_weights()];
+        let mut live = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Fixed, 1);
+        live.load_weights(&weights);
+        live.grow_batch(3);
+        drive(&mut live, 7, 6);
+        let bytes = encode(&live);
+        let mut restored = ShardedNetwork::<f32>::new(cfg, Mode::Fixed, 1);
+        restored.load_weights(&weights);
+        decode_session_state(&mut restored, &mut BinReader::new(&bytes)).unwrap();
+        assert_eq!(encode(&restored), bytes);
+    }
+
+    #[test]
+    fn plasticity_gate_travels() {
+        let cfg = SnnConfig::tiny();
+        let rule = tiny_rule(&cfg, 0xD0);
+        let mut live = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), 1);
+        live.set_plasticity_enabled(false);
+        let bytes = encode(&live);
+        let mut restored = ShardedNetwork::<f32>::new(cfg, Mode::Plastic(rule.into()), 1);
+        assert!(restored.plasticity_enabled());
+        decode_session_state(&mut restored, &mut BinReader::new(&bytes)).unwrap();
+        assert!(!restored.plasticity_enabled());
+    }
+
+    #[test]
+    fn mismatches_are_typed_rejections() {
+        let cfg = SnnConfig::tiny();
+        let rule = tiny_rule(&cfg, 0xE0);
+        let live = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), 1);
+        let bytes = encode(&live);
+
+        // Wrong precision.
+        let mut f16 = ShardedNetwork::<F16>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), 1);
+        let err = decode_session_state(&mut f16, &mut BinReader::new(&bytes)).unwrap_err();
+        assert!(matches!(err, BinError::Malformed(_)), "{err:?}");
+
+        // Wrong geometry.
+        let mut big_cfg = cfg.clone();
+        big_cfg.n_hidden += 1;
+        let big_rule = tiny_rule(&big_cfg, 0xE0);
+        let mut big =
+            ShardedNetwork::<f32>::new(big_cfg, Mode::Plastic(big_rule.into()), 1);
+        let err = decode_session_state(&mut big, &mut BinReader::new(&bytes)).unwrap_err();
+        assert!(matches!(err, BinError::Malformed(_)), "{err:?}");
+
+        // Wrong shard layout.
+        let mut striped = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), 2);
+        striped.grow_batch(70);
+        let err = decode_session_state(&mut striped, &mut BinReader::new(&bytes)).unwrap_err();
+        assert!(matches!(err, BinError::Malformed(_)), "{err:?}");
+
+        // Different deployed θ.
+        let other_rule = tiny_rule(&cfg, 0xE1);
+        let mut other =
+            ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(other_rule.into()), 1);
+        let err = decode_session_state(&mut other, &mut BinReader::new(&bytes)).unwrap_err();
+        assert!(matches!(err, BinError::Malformed(_)), "{err:?}");
+
+        // Fixed-vs-plastic mode clash.
+        let mut fixed = ShardedNetwork::<f32>::new(cfg, Mode::Fixed, 1);
+        let err = decode_session_state(&mut fixed, &mut BinReader::new(&bytes)).unwrap_err();
+        assert!(matches!(err, BinError::Malformed(_)), "{err:?}");
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_typed_never_panic() {
+        let cfg = SnnConfig::tiny();
+        let rule = tiny_rule(&cfg, 0xF0);
+        let mut live = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), 1);
+        live.grow_batch(5);
+        drive(&mut live, 0xF1, 5);
+        let bytes = encode(&live);
+
+        for cut in (0..bytes.len()).step_by(7) {
+            let mut net = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), 1);
+            assert!(
+                decode_session_state(&mut net, &mut BinReader::new(&bytes[..cut])).is_err(),
+                "cut at {cut} must not decode"
+            );
+        }
+        for byte in (0..bytes.len()).step_by(11) {
+            let mut bad = bytes.clone();
+            bad[byte] ^= 0x40;
+            let mut net = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), 1);
+            assert!(
+                decode_session_state(&mut net, &mut BinReader::new(&bad)).is_err(),
+                "flip at {byte} must not decode"
+            );
+        }
+    }
+
+    #[test]
+    fn nonzero_padding_lanes_are_rejected() {
+        // batch 5 leaves 59 padding lanes per word; a snapshot that sets
+        // one must be rejected, or ghost sessions would leak into masked
+        // stepping after restore.
+        let cfg = SnnConfig::tiny();
+        let rule = tiny_rule(&cfg, 0x11);
+        let mut live = ShardedNetwork::<f32>::new(cfg.clone(), Mode::Plastic(rule.clone().into()), 1);
+        live.grow_batch(5);
+        drive(&mut live, 0x12, 3);
+        live.shard_mut(0).hidden.spikes.row_mut(0)[0] |= 1u64 << 63;
+        let bytes = encode(&live);
+        let mut net = ShardedNetwork::<f32>::new(cfg, Mode::Plastic(rule.into()), 1);
+        let err = decode_session_state(&mut net, &mut BinReader::new(&bytes)).unwrap_err();
+        assert!(
+            matches!(&err, BinError::Malformed(m) if m.contains("padding")),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn encode_into_warm_buffer_reuses_allocation() {
+        let cfg = SnnConfig::tiny();
+        let rule = tiny_rule(&cfg, 0x21);
+        let mut live = ShardedNetwork::<f32>::new(cfg, Mode::Plastic(rule.into()), 1);
+        live.grow_batch(8);
+        drive(&mut live, 0x22, 4);
+        let mut w = BinWriter::new();
+        encode_session_state(&live, &mut w);
+        let first = w.into_bytes();
+        let cap = first.capacity();
+        let ptr = first.as_ptr();
+        let mut w = BinWriter::from_vec(first);
+        encode_session_state(&live, &mut w);
+        let second = w.into_bytes();
+        assert_eq!(second.capacity(), cap);
+        assert_eq!(second.as_ptr(), ptr, "warm re-encode must not reallocate");
+    }
+}

@@ -154,6 +154,22 @@ impl SpikeWords {
         &mut self.words[neuron * self.words_per_row..(neuron + 1) * self.words_per_row]
     }
 
+    /// The whole packed word buffer (`neurons × words_per_row`,
+    /// row-major) — the serialization view used by serving snapshots.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Overwrite the packed word buffer from a snapshot taken at the
+    /// same `(neurons, batch)` geometry. The source must honour the
+    /// padding invariant (lanes `>= batch` zero) — true of any buffer
+    /// produced by [`SpikeWords::words`] at matching geometry.
+    pub fn copy_words_from(&mut self, words: &[u64]) {
+        assert_eq!(words.len(), self.words.len(), "spike word count mismatch");
+        self.words.copy_from_slice(words);
+    }
+
     /// Spike bit of (`neuron`, `session`).
     #[inline]
     pub fn get(&self, neuron: usize, session: usize) -> bool {

@@ -361,6 +361,33 @@ impl<S: Scalar> TraceVector<S> {
         debug_assert!(self.lazy, "hot_rows on an eager TraceVector");
         &self.hot
     }
+
+    /// Lazy bookkeeping as `(clock, last, hot)` slices, or `None` for an
+    /// eager vector — the serialization view used by serving snapshots.
+    /// The stored `values` are *stale* in lazy mode; a snapshot must
+    /// carry all three arrays alongside them to reproduce the deferred
+    /// decay bit-for-bit.
+    pub fn lazy_state(&self) -> Option<(&[u64], &[u64], &[u64])> {
+        if self.lazy {
+            Some((&self.clock, &self.last, &self.hot))
+        } else {
+            None
+        }
+    }
+
+    /// Restore lazy bookkeeping captured by [`TraceVector::lazy_state`]
+    /// at the same `(neurons, batch)` geometry. Panics if the vector is
+    /// eager or any array length mismatches — callers validate geometry
+    /// through the snapshot's typed decode before reaching here.
+    pub fn restore_lazy_state(&mut self, clock: &[u64], last: &[u64], hot: &[u64]) {
+        assert!(self.lazy, "restore_lazy_state on an eager TraceVector");
+        assert_eq!(clock.len(), self.clock.len(), "lazy clock length mismatch");
+        assert_eq!(last.len(), self.last.len(), "lazy last length mismatch");
+        assert_eq!(hot.len(), self.hot.len(), "lazy hot-mask length mismatch");
+        self.clock.copy_from_slice(clock);
+        self.last.copy_from_slice(last);
+        self.hot.copy_from_slice(hot);
+    }
 }
 
 /// Apply `steps` sequential λ-multiplies with the scalar domain's

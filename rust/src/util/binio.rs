@@ -199,9 +199,54 @@ impl BinWriter {
         BinWriter { buf: Vec::new() }
     }
 
+    /// A writer that reuses `buf`'s allocation (cleared first) — the
+    /// zero-alloc double-buffering idiom of the serving snapshotter:
+    /// once the buffer has grown to steady-state size, re-encoding a
+    /// snapshot into it allocates nothing.
+    pub fn from_vec(mut buf: Vec<u8>) -> BinWriter {
+        buf.clear();
+        BinWriter { buf }
+    }
+
     /// The accumulated payload bytes.
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
+    }
+
+    /// Bytes accumulated so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Open a frame of the given `kind` in place: appends the header
+    /// with a zero length placeholder and returns the frame's start
+    /// offset for [`BinWriter::seal_frame`]. Frames opened this way can
+    /// nest and concatenate inside one buffer without the intermediate
+    /// payload `Vec` that [`encode_frame`] costs — this is how the
+    /// serving snapshotter stays allocation-free on the stepper thread.
+    pub fn begin_frame(&mut self, kind: u16) -> usize {
+        let start = self.buf.len();
+        self.buf.extend_from_slice(&MAGIC);
+        self.buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        self.buf.extend_from_slice(&kind.to_le_bytes());
+        self.buf.extend_from_slice(&0u64.to_le_bytes());
+        start
+    }
+
+    /// Close a frame opened by [`BinWriter::begin_frame`]: patches the
+    /// declared length and appends the CRC32 trailer over everything
+    /// written since `start`. The resulting bytes are exactly what
+    /// [`encode_frame`] would have produced.
+    pub fn seal_frame(&mut self, start: usize) {
+        let payload_len = (self.buf.len() - start - HEADER_LEN) as u64;
+        self.buf[start + 8..start + 16].copy_from_slice(&payload_len.to_le_bytes());
+        let crc = crc32(&self.buf[start..]);
+        self.buf.extend_from_slice(&crc.to_le_bytes());
     }
 
     /// Append one byte.
@@ -269,6 +314,24 @@ impl BinWriter {
         self.put_usize(xs.len());
         for &x in xs {
             self.put_f64(x);
+        }
+    }
+
+    /// Append a length-prefixed `u32` slice (little-endian each) — the
+    /// scalar bit-pattern lanes of serving snapshots.
+    pub fn put_u32s(&mut self, xs: &[u32]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_u32(x);
+        }
+    }
+
+    /// Append a length-prefixed `u64` slice (little-endian each) —
+    /// packed spike words and lazy-decay clocks.
+    pub fn put_u64s(&mut self, xs: &[u64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_u64(x);
         }
     }
 }
@@ -398,6 +461,57 @@ impl<'a> BinReader<'a> {
             out.push(self.get_f64()?);
         }
         Ok(out)
+    }
+
+    /// Read a length-prefixed `u32` vector.
+    pub fn get_u32s(&mut self) -> Result<Vec<u32>, BinError> {
+        let n = self.get_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_u32()?);
+        }
+        Ok(out)
+    }
+
+    /// Read a length-prefixed `u64` vector.
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>, BinError> {
+        let n = self.get_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_u64()?);
+        }
+        Ok(out)
+    }
+
+    /// Decode a nested frame of the given `kind` starting at the cursor
+    /// and return a reader over its payload, advancing past the frame.
+    /// The declared length is validated against the remaining bytes
+    /// before anything is trusted, then the full [`decode_frame`]
+    /// battery (magic, version, kind, length, CRC32) runs on the slice —
+    /// a torn or corrupt nested frame is a typed error, never a panic.
+    pub fn get_frame(&mut self, kind: u16) -> Result<BinReader<'a>, BinError> {
+        if self.remaining() < HEADER_LEN + TRAILER_LEN {
+            return Err(BinError::Truncated {
+                need: HEADER_LEN + TRAILER_LEN,
+                have: self.remaining(),
+            });
+        }
+        let declared =
+            u64::from_le_bytes(self.buf[self.pos + 8..self.pos + 16].try_into().unwrap());
+        let total = usize::try_from(declared)
+            .ok()
+            .and_then(|p| p.checked_add(HEADER_LEN + TRAILER_LEN))
+            .ok_or_else(|| {
+                BinError::Malformed(format!("nested frame length overflow: {declared}"))
+            })?;
+        if total > self.remaining() {
+            return Err(BinError::Truncated {
+                need: total,
+                have: self.remaining(),
+            });
+        }
+        let bytes = self.take(total)?;
+        Ok(BinReader::new(decode_frame(bytes, kind)?))
     }
 
     /// Assert the payload is fully consumed (trailing garbage inside a
@@ -573,6 +687,96 @@ mod tests {
         assert!(r.get_f64s().is_err());
         let mut r = BinReader::new(&bytes);
         assert!(r.get_str().is_err());
+    }
+
+    #[test]
+    fn in_place_frames_match_encode_frame_and_nest() {
+        // begin/seal produces the exact bytes of encode_frame.
+        let mut w = BinWriter::new();
+        let start = w.begin_frame(9);
+        w.put_str("payload");
+        w.put_u64s(&[1, u64::MAX, 42]);
+        w.seal_frame(start);
+        let mut payload = BinWriter::new();
+        payload.put_str("payload");
+        payload.put_u64s(&[1, u64::MAX, 42]);
+        assert_eq!(w.into_bytes(), encode_frame(9, &payload.into_bytes()));
+
+        // Nested frames: an outer frame carrying two inner frames plus
+        // scalar fields, decoded through get_frame.
+        let mut w = BinWriter::from_vec(Vec::with_capacity(64));
+        let outer = w.begin_frame(1);
+        w.put_u64(7);
+        let inner_a = w.begin_frame(2);
+        w.put_u32s(&[0xDEAD_BEEF, 0]);
+        w.seal_frame(inner_a);
+        let inner_b = w.begin_frame(3);
+        w.put_bool(true);
+        w.seal_frame(inner_b);
+        w.seal_frame(outer);
+        let bytes = w.into_bytes();
+
+        let payload = decode_frame(&bytes, 1).unwrap();
+        let mut r = BinReader::new(payload);
+        assert_eq!(r.get_u64().unwrap(), 7);
+        let mut a = r.get_frame(2).unwrap();
+        assert_eq!(a.get_u32s().unwrap(), vec![0xDEAD_BEEF, 0]);
+        a.finish().unwrap();
+        let mut b = r.get_frame(3).unwrap();
+        assert!(b.get_bool().unwrap());
+        b.finish().unwrap();
+        r.finish().unwrap();
+
+        // Wrong nested kind and flipped nested bytes are typed errors.
+        let mut r = BinReader::new(payload);
+        let _ = r.get_u64().unwrap();
+        assert!(matches!(
+            r.get_frame(5),
+            Err(BinError::BadKind { expected: 5, found: 2 })
+        ));
+        let mut bad = bytes.clone();
+        let flip = HEADER_LEN + 8 + HEADER_LEN + 2; // inside inner frame a
+        bad[flip] ^= 0x10;
+        // The outer CRC covers everything, so the outer decode already
+        // rejects; a caller that skipped it still gets a typed nested
+        // error, never a panic.
+        assert!(decode_frame(&bad, 1).is_err());
+
+        // from_vec reuses capacity without reallocating.
+        let recycled = BinWriter::from_vec(bytes);
+        assert!(recycled.is_empty());
+    }
+
+    #[test]
+    fn truncated_nested_frame_is_typed() {
+        let mut w = BinWriter::new();
+        let inner = w.begin_frame(4);
+        w.put_f32s(&[1.0, 2.0]);
+        w.seal_frame(inner);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = BinReader::new(&bytes[..cut]);
+            assert!(r.get_frame(4).is_err(), "cut at {cut} must not decode");
+        }
+        let mut r = BinReader::new(&bytes);
+        let mut f = r.get_frame(4).unwrap();
+        assert_eq!(f.get_f32s().unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn u32s_u64s_round_trip() {
+        check(100, |g| {
+            let u32s: Vec<u32> = (0..g.usize_range(0, 24)).map(|_| g.u64() as u32).collect();
+            let u64s: Vec<u64> = (0..g.usize_range(0, 24)).map(|_| g.u64()).collect();
+            let mut w = BinWriter::new();
+            w.put_u32s(&u32s);
+            w.put_u64s(&u64s);
+            let bytes = w.into_bytes();
+            let mut r = BinReader::new(&bytes);
+            assert_eq!(r.get_u32s().unwrap(), u32s);
+            assert_eq!(r.get_u64s().unwrap(), u64s);
+            r.finish().unwrap();
+        });
     }
 
     #[test]

@@ -49,9 +49,25 @@ pub enum FaultSite {
     /// job (exercises queue aging / deadline-aware admission under a
     /// slow scheduler).
     SchedulerDelay = 6,
+    /// IO error out of a durable serving-snapshot write (exercises the
+    /// serving plane's degrade-to-in-memory path: snapshotting disables
+    /// itself with a logged warning and a `serve_snapshot_write_errors`
+    /// count, the stepper never stalls).
+    SnapshotWrite = 7,
+    /// Serving-snapshot write lands torn: only a truncated prefix of
+    /// the frame reaches disk (simulating a crash mid-write on a
+    /// filesystem without atomic rename semantics). Recovery must
+    /// quarantine the torn file as `*.corrupt` and fall back to the
+    /// newest intact snapshot.
+    SnapshotTorn = 8,
+    /// A `JOB SUBSCRIBE` follower stops draining its socket (exercises
+    /// hub-side flow control: the bounded outbound queue overflows and
+    /// the hub evicts the follower with `ERR lagged next=<row>` instead
+    /// of buffering without bound or delaying its siblings).
+    FollowerStall = 9,
 }
 
-const N_SITES: usize = 7;
+const N_SITES: usize = 10;
 
 const ALL_SITES: [FaultSite; N_SITES] = [
     FaultSite::RunnerPanic,
@@ -61,6 +77,9 @@ const ALL_SITES: [FaultSite; N_SITES] = [
     FaultSite::SubscriberCut,
     FaultSite::OverloadBurst,
     FaultSite::SchedulerDelay,
+    FaultSite::SnapshotWrite,
+    FaultSite::SnapshotTorn,
+    FaultSite::FollowerStall,
 ];
 
 #[derive(Debug, Default)]

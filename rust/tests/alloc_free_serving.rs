@@ -37,11 +37,17 @@
 //! sub-batch boundary, and the serving path must STILL count zero —
 //! durability is free where latency matters.
 //!
-//! The last test extends the split-accounting contract to the ISSUE 8
-//! chaos soak: the serving pipeline stays zero-alloc on its marked
-//! thread **while an entire composed-fault soak** — TCP server, job
-//! runners, stream hub, cut-and-reconnecting subscribers — churns on
-//! unmarked background threads for the whole armed window.
+//! The last tests extend the split-accounting contract. One covers the
+//! ISSUE 8 chaos soak: the serving pipeline stays zero-alloc on its
+//! marked thread **while an entire composed-fault soak** — TCP server,
+//! job runners, stream hub, cut-and-reconnecting subscribers — churns
+//! on unmarked background threads for the whole armed window. The
+//! other pins the ISSUE 10 durability contract: the serving thread
+//! itself encodes full session snapshots (`--state-dir`) into the
+//! probe-warmed shadow buffer at tick boundaries — serving-plane
+//! metadata, RNG lanes, and `save_session_state` are all fixed-size
+//! puts — and hands them to a snapshotter thread that lands them on
+//! disk, with the serving count held to zero throughout.
 //!
 //! The allocator counts process-wide, so the tests serialize their
 //! armed windows through a mutex; no allocation from the other tests
@@ -704,6 +710,228 @@ fn serving_stays_alloc_free_while_grid_job_runs() {
     mgr.cancel(id).unwrap();
     mgr.shutdown();
     let _ = std::fs::remove_dir_all(&job_dir);
+}
+
+#[test]
+fn serving_stays_alloc_free_while_snapshots_are_written() {
+    use firefly_p::coordinator::server::SERVE_SNAPSHOT_FRAME_KIND;
+    use firefly_p::util::binio::BinWriter;
+    use std::sync::Condvar;
+
+    let _gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // The ISSUE 10 acceptance: with `--state-dir` armed, the stepper
+    // encodes the *entire* serving state — tick, token table, per-slot
+    // encoder-RNG lanes, and the backend's full session-state frame —
+    // into the circulating warm buffer at every snapshot boundary, and
+    // that encode must cost the serving thread nothing once the probe
+    // has sized the buffer. This drives the exact double-buffering
+    // protocol of `SnapshotPlumbing`: spare → encode-in-place → pending
+    // → disk (snapshotter thread) → spare, with the disk side free to
+    // allocate (paths, syscall buffers) on its unmarked thread.
+    struct Plumbing {
+        spare: Mutex<Option<Vec<u8>>>,
+        pending: Mutex<Option<(u64, Vec<u8>)>>,
+        cv: Condvar,
+        stop: AtomicBool,
+    }
+
+    /// The stepper-side encode of `maybe_snapshot`, byte-layout and
+    /// allocation-profile faithful: outer frame, serving-plane
+    /// metadata, nested backend session-state frame — fixed-size puts
+    /// into the reused buffer only.
+    fn encode_snapshot(
+        backend: &mut dyn SnnBackend,
+        tick: u64,
+        rngs: &[Pcg64],
+        buf: Vec<u8>,
+    ) -> Vec<u8> {
+        let mut w = BinWriter::from_vec(buf);
+        let start = w.begin_frame(SERVE_SNAPSHOT_FRAME_KIND);
+        w.put_u64(tick);
+        w.put_u64(1); // next_token
+        w.put_usize(rngs.len());
+        for rng in rngs {
+            let st = rng.export_state();
+            w.put_u8(0); // slot carries no session token
+            w.put_u64(st.state as u64);
+            w.put_u64((st.state >> 64) as u64);
+            w.put_u64(st.inc as u64);
+            w.put_u64((st.inc >> 64) as u64);
+            match st.cached_normal {
+                Some(v) => {
+                    w.put_u8(1);
+                    w.put_f64(v);
+                }
+                None => w.put_u8(0),
+            }
+        }
+        assert!(backend.save_session_state(&mut w));
+        w.seal_frame(start);
+        w.into_bytes()
+    }
+
+    let dir = std::env::temp_dir().join(format!("ffp-alloc-snap-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // The serving pipeline of the first test, on this (marked) thread.
+    let mut cfg = SnnConfig::control(48, 12);
+    cfg.n_hidden = 32;
+    let mut rng = Pcg64::new(19, 0);
+    let mut genome = vec![0.0f32; cfg.n_rule_params()];
+    rng.fill_normal_f32(&mut genome, 0.1);
+    let rule = NetworkRule::from_flat(&cfg, &genome);
+    let mut backend = NativeBackend::plastic(cfg, rule);
+    let sessions = 8usize;
+    assert_eq!(backend.ensure_sessions(sessions), sessions);
+    let encoder = PopulationEncoder::symmetric(6, 8, 3.0);
+    let decoder = TraceDecoder::new(6, 0.5);
+
+    let slots: Vec<usize> = (0..sessions).collect();
+    let obs_lines: Vec<String> = (0..sessions)
+        .map(|s| format!("0.1,-0.2,0.3,{:.2},0.5,-0.6", (s as f32) / 9.0))
+        .collect();
+    let mut rngs: Vec<Pcg64> = (0..sessions).map(|s| Pcg64::new(10, s as u64)).collect();
+
+    let mut obs: Vec<f32> = Vec::new();
+    let mut inbufs: Vec<Vec<bool>> = (0..sessions).map(|_| Vec::new()).collect();
+    let mut inputs: Vec<bool> = Vec::new();
+    let mut out_spikes: Vec<bool> = Vec::new();
+    let mut traces: Vec<f32> = Vec::new();
+    let mut action: Vec<f32> = Vec::new();
+    let mut resp = String::new();
+
+    // Warmup: size the pooled serving buffers…
+    for _ in 0..50 {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+    }
+    // …then probe-warm the shadow buffer with one full outer-frame
+    // encode (exactly what serve() does at startup). Session state is
+    // fixed-size; the only variance is the optional cached Box–Muller
+    // half per RNG lane, so reserve the same headroom serve() does.
+    let mut warm = encode_snapshot(&mut backend, 0, &rngs, Vec::new());
+    warm.reserve(256 + sessions * 48);
+    let pl = Arc::new(Plumbing {
+        spare: Mutex::new(Some(warm)),
+        pending: Mutex::new(None),
+        cv: Condvar::new(),
+        stop: AtomicBool::new(false),
+    });
+
+    // Disk side: park → atomic tmp+rename land → hand the buffer back.
+    let snapshotter = {
+        let pl = Arc::clone(&pl);
+        let dir = dir.clone();
+        std::thread::spawn(move || -> u32 {
+            let mut written = 0u32;
+            loop {
+                let mut g = pl.pending.lock().unwrap();
+                let item = loop {
+                    if let Some(it) = g.take() {
+                        break Some(it);
+                    }
+                    if pl.stop.load(Ordering::SeqCst) {
+                        break None;
+                    }
+                    g = pl.cv.wait(g).unwrap();
+                };
+                drop(g);
+                let Some((tick, bytes)) = item else {
+                    return written;
+                };
+                let tmp = dir.join("state.tmp");
+                std::fs::write(&tmp, &bytes).unwrap();
+                std::fs::rename(&tmp, dir.join(format!("state-{tick:020}.snap"))).unwrap();
+                written += 1;
+                *pl.spare.lock().unwrap() = Some(bytes);
+            }
+        })
+    };
+
+    const EVERY: u64 = 4;
+    IS_SERVING.with(|c| c.set(true));
+    ALLOCS.store(0, Ordering::SeqCst);
+    SERVING_ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    let mut encoded = 0u32;
+    let mut skipped = 0u32;
+    for tick in 1..=300u64 {
+        serve_tick(
+            &mut backend,
+            &encoder,
+            &decoder,
+            &slots,
+            &obs_lines,
+            &mut rngs,
+            &mut obs,
+            &mut inbufs,
+            &mut inputs,
+            &mut out_spikes,
+            &mut traces,
+            &mut action,
+            &mut resp,
+        );
+        if tick % EVERY == 0 {
+            // The stepper-side boundary: take the spare (or skip — a
+            // busy snapshotter never blocks the tick), encode, park.
+            let buf = pl.spare.lock().unwrap().take();
+            match buf {
+                Some(buf) => {
+                    let bytes = encode_snapshot(&mut backend, tick, &rngs, buf);
+                    *pl.pending.lock().unwrap() = Some((tick, bytes));
+                    pl.cv.notify_one();
+                    encoded += 1;
+                }
+                None => skipped += 1,
+            }
+        }
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    IS_SERVING.with(|c| c.set(false));
+    let serving_allocs = SERVING_ALLOCS.load(Ordering::SeqCst);
+    let total_allocs = ALLOCS.load(Ordering::SeqCst);
+
+    // Drain + shut the snapshotter down *inside* the gate.
+    while pl.pending.lock().unwrap().is_some() {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    pl.stop.store(true, Ordering::SeqCst);
+    pl.cv.notify_one();
+    let written = snapshotter.join().unwrap();
+
+    // The very first boundary always finds the spare, so at least one
+    // snapshot was encoded inside the armed window — and every encode
+    // reached disk.
+    assert!(encoded >= 1, "no snapshot encoded inside the armed window");
+    assert_eq!(written, encoded, "snapshotter lost a parked snapshot");
+    let snaps = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().to_string_lossy().ends_with(".snap"))
+        .count() as u32;
+    assert_eq!(snaps, written, "snapshot files missing from the state dir");
+    assert_eq!(
+        serving_allocs, 0,
+        "serving thread allocated {serving_allocs} times across 300 ticks \
+         with {encoded} snapshots encoded ({skipped} skipped; disk side \
+         accounted {} separately)",
+        total_allocs - serving_allocs
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

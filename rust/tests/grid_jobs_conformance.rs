@@ -15,13 +15,14 @@
 //! 72 eval tasks exactly once with results bit-identical to a run that
 //! was never interrupted.
 //!
-//! **Crash recovery (ISSUE 7):** with `--job-dir` durability, a sweep
-//! killed right after ANY persisted batch boundary (every interior
-//! boundary, for batch ∈ {1, 4, 8, 64}) resumes on a fresh manager
-//! from its on-disk checkpoint alone, and the stitched rows are
-//! bit-identical to the uninterrupted sweep. Corrupt checkpoint files
-//! are quarantined as `.corrupt` — a typed error path, never a panic —
-//! without blocking valid siblings.
+//! **Crash recovery (ISSUE 7, extended by ISSUE 10):** with
+//! `--job-dir` durability, a sweep killed right after ANY persisted
+//! batch boundary (every interior boundary, for batch ∈ {1, 4, 8, 64},
+//! and across all three arithmetic lanes prec ∈ {f32, f16, qfx} at
+//! batch 8) resumes on a fresh manager from its on-disk checkpoint
+//! alone, and the stitched rows are bit-identical to the uninterrupted
+//! sweep. Corrupt checkpoint files are quarantined as `.corrupt` — a
+//! typed error path, never a panic — without blocking valid siblings.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -491,8 +492,8 @@ fn assert_log_bits(a: &AdaptLog, b: &AdaptLog, what: &str) {
     assert_f64_bits(a.final_rate, b.final_rate, &format!("{what}: final"));
 }
 
-fn recovery_spec(batch: usize) -> JobSpec {
-    let mut spec = job_spec("cheetah-vel", 1, Precision::F32);
+fn recovery_spec(batch: usize, prec: Precision) -> JobSpec {
+    let mut spec = job_spec("cheetah-vel", 1, prec);
     spec.batch = batch;
     spec.budget = Some(4); // short sweeps: the property runs many times
     spec
@@ -507,7 +508,12 @@ fn install_cheetah(mgr: &JobManager) {
 /// Interrupt a durable sweep right after its `k`-th persisted batch
 /// (the deterministic "kill -9 at a batch boundary"), then recover on
 /// a fresh manager and return the full stitched row set.
-fn interrupt_then_recover(dir: &std::path::Path, batch: usize, k: usize) -> Vec<JobRow> {
+fn interrupt_then_recover(
+    dir: &std::path::Path,
+    batch: usize,
+    k: usize,
+    prec: Precision,
+) -> Vec<JobRow> {
     let expect_done = (k * batch).min(72);
     {
         let mgr = JobManager::new(JobManagerConfig {
@@ -518,10 +524,10 @@ fn interrupt_then_recover(dir: &std::path::Path, batch: usize, k: usize) -> Vec<
             ..JobManagerConfig::default()
         });
         install_cheetah(&mgr);
-        let id = mgr.submit(recovery_spec(batch)).unwrap();
+        let id = mgr.submit(recovery_spec(batch, prec)).unwrap();
         let st = wait_terminal(&mgr, id);
-        assert_eq!(st.state, JobState::Interrupted, "batch={batch} k={k}");
-        assert_eq!(st.done, expect_done, "batch={batch} k={k}: cursor");
+        assert_eq!(st.state, JobState::Interrupted, "batch={batch} k={k} {prec:?}");
+        assert_eq!(st.done, expect_done, "batch={batch} k={k} {prec:?}: cursor");
     }
     // A fresh manager is all a restarted `serve --job-dir` process has:
     // the checkpoint alone (spec + θ snapshot + result prefix) must
@@ -531,26 +537,33 @@ fn interrupt_then_recover(dir: &std::path::Path, batch: usize, k: usize) -> Vec<
         ..JobManagerConfig::default()
     });
     let report = mgr.recover();
-    assert_eq!(report.resumed.len(), 1, "batch={batch} k={k}: {report:?}");
+    assert_eq!(report.resumed.len(), 1, "batch={batch} k={k} {prec:?}: {report:?}");
     assert_eq!(
         (report.quarantined, report.rejected),
         (0, 0),
-        "batch={batch} k={k}: {report:?}"
+        "batch={batch} k={k} {prec:?}: {report:?}"
     );
     let id = report.resumed[0];
     let rows = collect_rows(&mgr, id);
-    assert_eq!(wait_terminal(&mgr, id).state, JobState::Done, "batch={batch} k={k}");
+    assert_eq!(
+        wait_terminal(&mgr, id).state,
+        JobState::Done,
+        "batch={batch} k={k} {prec:?}"
+    );
     rows
 }
 
-/// The property itself, for one sub-batch width: every interior batch
-/// boundary of the 72-task eval sweep is a valid crash point.
-fn assert_crash_recovery_bit_identical(batch: usize) {
+/// The property itself, for one sub-batch width × arithmetic lane:
+/// every interior batch boundary of the 72-task eval sweep is a valid
+/// crash point. The checkpoint carries the precision tag, so the
+/// recovered tail reruns in the same lane — f16 and qfx results only
+/// stitch bit-identically if recovery restores that too.
+fn assert_crash_recovery_bit_identical(batch: usize, prec: Precision) {
     // Reference: the identical spec, uninterrupted, in-memory only.
     let reference = {
         let mgr = JobManager::new(JobManagerConfig::default());
         install_cheetah(&mgr);
-        let id = mgr.submit(recovery_spec(batch)).unwrap();
+        let id = mgr.submit(recovery_spec(batch, prec)).unwrap();
         let rows = collect_rows(&mgr, id);
         assert_eq!(wait_terminal(&mgr, id).state, JobState::Done);
         rows
@@ -558,12 +571,12 @@ fn assert_crash_recovery_bit_identical(batch: usize) {
     assert_eq!(reference.len(), 72);
 
     let n_batches = 72usize.div_ceil(batch);
-    let dir = tmp_dir(&format!("crash-b{batch}"));
+    let dir = tmp_dir(&format!("crash-b{batch}-{prec:?}"));
     for k in 1..n_batches {
-        let rows = interrupt_then_recover(&dir, batch, k);
-        assert_eq!(rows.len(), 72, "batch={batch} k={k}");
+        let rows = interrupt_then_recover(&dir, batch, k, prec);
+        assert_eq!(rows.len(), 72, "batch={batch} k={k} {prec:?}");
         for (row, reference_row) in rows.iter().zip(&reference) {
-            let what = format!("batch={batch} k={k} row {}", row.index);
+            let what = format!("batch={batch} k={k} {prec:?} row {}", row.index);
             assert_eq!(row.index, reference_row.index, "{what}: index");
             assert_eq!(row.task, reference_row.task, "{what}: task order");
             assert_log_bits(&row.log, &reference_row.log, &what);
@@ -574,22 +587,32 @@ fn assert_crash_recovery_bit_identical(batch: usize) {
 
 #[test]
 fn crash_recovery_bit_identical_batch_1() {
-    assert_crash_recovery_bit_identical(1);
+    assert_crash_recovery_bit_identical(1, Precision::F32);
 }
 
 #[test]
 fn crash_recovery_bit_identical_batch_4() {
-    assert_crash_recovery_bit_identical(4);
+    assert_crash_recovery_bit_identical(4, Precision::F32);
 }
 
 #[test]
 fn crash_recovery_bit_identical_batch_8() {
-    assert_crash_recovery_bit_identical(8);
+    assert_crash_recovery_bit_identical(8, Precision::F32);
 }
 
 #[test]
 fn crash_recovery_bit_identical_batch_64() {
-    assert_crash_recovery_bit_identical(64);
+    assert_crash_recovery_bit_identical(64, Precision::F32);
+}
+
+#[test]
+fn crash_recovery_bit_identical_f16_batch_8() {
+    assert_crash_recovery_bit_identical(8, Precision::F16);
+}
+
+#[test]
+fn crash_recovery_bit_identical_qfx_batch_8() {
+    assert_crash_recovery_bit_identical(8, Precision::Qfx);
 }
 
 /// A corrupt checkpoint in the scan set is quarantined as `.corrupt`
@@ -607,7 +630,7 @@ fn recovery_quarantines_corrupt_files_and_resumes_valid_ones() {
             ..JobManagerConfig::default()
         });
         install_cheetah(&mgr);
-        let id = mgr.submit(recovery_spec(8)).unwrap();
+        let id = mgr.submit(recovery_spec(8, Precision::F32)).unwrap();
         assert_eq!(wait_terminal(&mgr, id).state, JobState::Interrupted);
     }
     // Plant garbage next to the valid file: random bytes, a torn copy,

@@ -35,6 +35,7 @@ fn server_thread(
             ServerConfig {
                 max_sessions: CLIENTS,
                 seed: 9,
+                ..ServerConfig::default()
             },
         );
         server

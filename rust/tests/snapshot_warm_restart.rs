@@ -1,0 +1,379 @@
+//! Kill-at-every-snapshot-boundary warm-restart conformance (ISSUE 10
+//! tentpole pin).
+//!
+//! Each case runs an uninterrupted **witness** session, then replays
+//! the identical request stream through a **chain of crashes**: the
+//! server is killed at *every* snapshot boundary it reaches, restarted
+//! over the same `--state-dir`, and the client re-attaches with
+//! `RESUME <token>`. Every action line the resumed trajectory produces
+//! must equal the witness bit for bit — the snapshot carries the
+//! per-session encoder RNG alongside membranes, traces, lazy-decay
+//! clocks and plastic weights, so even the stochastic spike encodes
+//! line up.
+//!
+//! The sweep covers `prec ∈ {f32, f16, qfx}` × sharded step threads
+//! `T ∈ {1, 2, 4}` × lazy-vs-eager traces. Alongside it: corrupt and
+//! torn snapshots are quarantined as `*.corrupt` (recovery falls back
+//! to the next-newest valid file), and an injected snapshot-write IO
+//! error degrades the server to in-memory serving — counted, logged,
+//! never a panic, never a stalled stepper.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use firefly_p::backend::TypedNativeBackend;
+use firefly_p::coordinator::jobs::{JobManager, JobManagerConfig};
+use firefly_p::coordinator::metrics::Metrics;
+use firefly_p::coordinator::server::{ControlServer, ServerConfig};
+use firefly_p::snn::{NetworkRule, Scalar, SnnConfig};
+use firefly_p::util::faults::{FaultPlan, FaultSite};
+use firefly_p::util::fixed::Qfx;
+use firefly_p::util::fp16::F16;
+use firefly_p::util::rng::Pcg64;
+
+/// Snapshot cadence in stepper ticks. With a single sequential client,
+/// connect-reset (tick 1) + `RESET` (tick 2) put the boundaries at
+/// ticks 4, 8, 12, … — and each server generation reaches exactly one
+/// boundary before it is killed, so the snapshot is never skipped and
+/// every resume tick is deterministic.
+const EVERY: u64 = 4;
+
+/// OBS ticks in the full trajectory (three boundaries crossed).
+const TICKS: usize = 12;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ffp-warm-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic per-tick observation line.
+fn obs_line(i: usize) -> String {
+    format!(
+        "OBS {:.3},{:.3},0.3,-0.4,0.5,1.0",
+        (i as f32) * 0.07 - 0.3,
+        (i as f32) * 0.05
+    )
+}
+
+/// Spawn a serving stack for one case. The backend is built on the
+/// server thread (it is not `Send`); `faults`, when given, ride in via
+/// an attached (model-less) job manager, which is where the serving
+/// plane sources its fault plan from.
+fn spawn_server<S: Scalar>(
+    dir: PathBuf,
+    lazy: bool,
+    threads: usize,
+    faults: Option<Arc<FaultPlan>>,
+) -> (
+    std::net::SocketAddr,
+    std::thread::JoinHandle<Arc<Mutex<Metrics>>>,
+) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    drop(listener);
+    let handle = std::thread::spawn(move || {
+        let mut cfg = SnnConfig::control(48, 12);
+        cfg.n_hidden = 16;
+        cfg.plasticity.presyn_gate = lazy;
+        let mut rng = Pcg64::new(0, 0);
+        let mut genome = vec![0.0f32; cfg.n_rule_params()];
+        rng.fill_normal_f32(&mut genome, 0.05);
+        let rule = NetworkRule::from_flat(&cfg, &genome);
+        let backend = Box::new(TypedNativeBackend::<S>::plastic_with_threads(
+            cfg, rule, threads,
+        ));
+        let mut server = ControlServer::with_config(
+            backend,
+            6,
+            6,
+            ServerConfig {
+                max_sessions: 2,
+                seed: 11,
+                state_dir: Some(dir),
+                snapshot_every: EVERY,
+                ..ServerConfig::default()
+            },
+        );
+        if let Some(plan) = faults {
+            server.attach_jobs(Arc::new(JobManager::with_metrics(
+                JobManagerConfig {
+                    queue_cap: 1,
+                    runners: 1,
+                    faults: Some(plan),
+                    ..JobManagerConfig::default()
+                },
+                server.metrics(),
+            )));
+        }
+        server.serve(&addr.to_string(), None).unwrap();
+        server.metrics()
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    (addr, handle)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    line: String,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+            line: String::new(),
+        }
+    }
+
+    fn round_trip(&mut self, req: &str) -> String {
+        self.writer.write_all(req.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.line.clear();
+        self.reader.read_line(&mut self.line).unwrap();
+        self.line.trim().to_string()
+    }
+}
+
+/// The uninterrupted witness: one session, `TICKS` observations.
+fn witness_run<S: Scalar>(lazy: bool, threads: usize, tag: &str) -> Vec<String> {
+    let dir = tmp_dir(&format!("{tag}-witness"));
+    let (addr, handle) = spawn_server::<S>(dir.clone(), lazy, threads, None);
+    let mut c = Client::connect(addr);
+    assert_eq!(c.round_trip("RESET"), "OK");
+    assert_eq!(c.round_trip("TOKEN"), "TOKEN 1");
+    let acts: Vec<String> = (0..TICKS).map(|i| c.round_trip(&obs_line(i))).collect();
+    assert!(acts.iter().all(|a| a.starts_with("ACT ")), "{acts:?}");
+    assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+    drop(c);
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    acts
+}
+
+/// Kill the server at every snapshot boundary along the witness
+/// trajectory, restarting and `RESUME`-ing each time; the stitched
+/// action sequence must equal the witness bit for bit.
+fn kill_at_every_boundary_case<S: Scalar>(lazy: bool, threads: usize, tag: &str) {
+    let witness = witness_run::<S>(lazy, threads, tag);
+
+    let dir = tmp_dir(&format!("{tag}-chain"));
+    // Generation 0: connect-reset (tick 1) + RESET (tick 2), then OBS
+    // up to the first boundary at tick EVERY.
+    let (addr, handle) = spawn_server::<S>(dir.clone(), lazy, threads, None);
+    let mut c = Client::connect(addr);
+    assert_eq!(c.round_trip("RESET"), "OK");
+    assert_eq!(c.round_trip("TOKEN"), "TOKEN 1");
+    let mut done = 0usize; // witness index of the next OBS to send
+    let mut tick = 2u64; // stepper ticks so far
+    while tick < EVERY {
+        assert_eq!(c.round_trip(&obs_line(done)), witness[done], "{tag}: tick {done}");
+        done += 1;
+        tick += 1;
+    }
+    // The boundary snapshot (tick EVERY) is the newest on disk; kill.
+    assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+    drop(c);
+    let metrics = handle.join().unwrap();
+    assert_eq!(metrics.lock().unwrap().count("serve_snapshots"), 1, "{tag}");
+
+    // Each restarted generation: connect-reset costs one tick, RESUME
+    // re-attaches, then OBS up to the next boundary (or the end).
+    let mut resume_tick = tick;
+    while done < TICKS {
+        let (addr, handle) = spawn_server::<S>(dir.clone(), lazy, threads, None);
+        let mut c = Client::connect(addr);
+        let ok = c.round_trip("RESUME 1");
+        assert_eq!(ok, format!("OK resumed tick={resume_tick}"), "{tag}");
+        tick = resume_tick + 1; // this generation's connect-reset
+        let boundary = resume_tick + EVERY;
+        while done < TICKS && tick < boundary {
+            assert_eq!(
+                c.round_trip(&obs_line(done)),
+                witness[done],
+                "{tag}: resumed trajectory diverged at witness tick {done}"
+            );
+            done += 1;
+            tick += 1;
+        }
+        let finished = done >= TICKS && tick < boundary;
+        assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+        drop(c);
+        let metrics = handle.join().unwrap();
+        {
+            let m = metrics.lock().unwrap();
+            assert_eq!(m.count("serve_snapshot_recoveries"), 1, "{tag}");
+            assert_eq!(m.count("serve_resumes"), 1, "{tag}");
+            assert_eq!(m.count("serve_snapshot_quarantined"), 0, "{tag}");
+            assert_eq!(m.count("serve_snapshot_rejected"), 0, "{tag}");
+        }
+        if finished {
+            break;
+        }
+        resume_tick = boundary;
+    }
+    assert_eq!(done, TICKS, "{tag}: chain ended early");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_at_every_boundary_f32() {
+    for &lazy in &[false, true] {
+        for &threads in &[1usize, 2, 4] {
+            let tag = format!("f32-t{threads}-lazy{lazy}");
+            kill_at_every_boundary_case::<f32>(lazy, threads, &tag);
+        }
+    }
+}
+
+#[test]
+fn kill_at_every_boundary_f16() {
+    for &lazy in &[false, true] {
+        for &threads in &[1usize, 2, 4] {
+            let tag = format!("f16-t{threads}-lazy{lazy}");
+            kill_at_every_boundary_case::<F16>(lazy, threads, &tag);
+        }
+    }
+}
+
+#[test]
+fn kill_at_every_boundary_qfx() {
+    for &lazy in &[false, true] {
+        for &threads in &[1usize, 2, 4] {
+            let tag = format!("qfx-t{threads}-lazy{lazy}");
+            kill_at_every_boundary_case::<Qfx>(lazy, threads, &tag);
+        }
+    }
+}
+
+/// A corrupt newest snapshot is quarantined as `*.corrupt` and recovery
+/// falls back to the next-newest valid file — the parked session is
+/// still resumable from the older boundary.
+#[test]
+fn corrupt_newest_snapshot_is_quarantined_with_fallback() {
+    let witness = witness_run::<f32>(false, 1, "quarantine");
+
+    let dir = tmp_dir("quarantine-chain");
+    let (addr, handle) = spawn_server::<f32>(dir.clone(), false, 1, None);
+    let mut c = Client::connect(addr);
+    assert_eq!(c.round_trip("RESET"), "OK");
+    assert_eq!(c.round_trip("TOKEN"), "TOKEN 1");
+    // Cross two boundaries: snapshots at ticks 4 and 8 land on disk.
+    for (i, expect) in witness.iter().enumerate().take(6) {
+        assert_eq!(&c.round_trip(&obs_line(i)), expect);
+    }
+    assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+    drop(c);
+    let metrics = handle.join().unwrap();
+    assert_eq!(metrics.lock().unwrap().count("serve_snapshots"), 2);
+
+    // Tear the newest snapshot (truncation: what a crash mid-write
+    // would leave if the atomic rename dance were skipped).
+    let newest = dir.join(format!("state-{:020}.snap", 8));
+    let bytes = std::fs::read(&newest).unwrap();
+    std::fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+
+    let (addr, handle) = spawn_server::<f32>(dir.clone(), false, 1, None);
+    let mut c = Client::connect(addr);
+    // Recovery fell back to the tick-4 snapshot: resume from there and
+    // the rest of the witness still lines up bit for bit.
+    assert_eq!(c.round_trip("RESUME 1"), "OK resumed tick=4");
+    for (i, expect) in witness.iter().enumerate().skip(2) {
+        assert_eq!(&c.round_trip(&obs_line(i)), expect, "tick {i} after fallback");
+    }
+    assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+    drop(c);
+    let metrics = handle.join().unwrap();
+    {
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.count("serve_snapshot_quarantined"), 1);
+        assert_eq!(m.count("serve_snapshot_recoveries"), 1);
+    }
+    assert!(
+        dir.join(format!("state-{:020}.snap.corrupt", 8)).exists(),
+        "torn file must be renamed aside, not deleted"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `FaultSite::SnapshotTorn` writes a truncated file straight to the
+/// final path (no atomic dance): the next restart quarantines it and
+/// serves fresh — a typed degradation, not a panic.
+#[test]
+fn torn_snapshot_write_is_quarantined_on_restart() {
+    let dir = tmp_dir("torn");
+    let plan = Arc::new(FaultPlan::new().at(FaultSite::SnapshotTorn, &[0]));
+    let (addr, handle) = spawn_server::<f32>(dir.clone(), false, 1, Some(Arc::clone(&plan)));
+    let mut c = Client::connect(addr);
+    assert_eq!(c.round_trip("RESET"), "OK");
+    assert_eq!(c.round_trip("TOKEN"), "TOKEN 1");
+    for i in 0..2 {
+        assert!(c.round_trip(&obs_line(i)).starts_with("ACT "));
+    }
+    assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+    drop(c);
+    handle.join().unwrap();
+    plan.assert_exhausted();
+
+    let (addr, handle) = spawn_server::<f32>(dir.clone(), false, 1, None);
+    let mut c = Client::connect(addr);
+    // Nothing valid to recover: the token is unknown, but serving works.
+    assert!(c
+        .round_trip("RESUME 1")
+        .starts_with("ERR resume-unknown-token"));
+    assert!(c.round_trip(&obs_line(0)).starts_with("ACT "));
+    assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+    drop(c);
+    let metrics = handle.join().unwrap();
+    {
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.count("serve_snapshot_quarantined"), 1);
+        assert_eq!(m.count("serve_snapshot_recoveries"), 0);
+    }
+    assert!(
+        dir.join(format!("state-{:020}.snap.corrupt", 4)).exists(),
+        "torn snapshot must be quarantined"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `FaultSite::SnapshotWrite`: the write IO error degrades that server
+/// to in-memory serving — counted and logged; the stepper keeps
+/// answering requests and never attempts another write.
+#[test]
+fn snapshot_write_error_degrades_to_in_memory_serving() {
+    let dir = tmp_dir("degrade");
+    let plan = Arc::new(FaultPlan::new().at(FaultSite::SnapshotWrite, &[0]));
+    let (addr, handle) = spawn_server::<f32>(dir.clone(), false, 1, Some(Arc::clone(&plan)));
+    let mut c = Client::connect(addr);
+    assert_eq!(c.round_trip("RESET"), "OK");
+    // Cross several would-be boundaries: only the first attempt fires
+    // the fault; after the degrade no further writes are attempted, and
+    // serving carries on undisturbed.
+    for i in 0..TICKS {
+        assert!(c.round_trip(&obs_line(i)).starts_with("ACT "), "tick {i}");
+    }
+    assert_eq!(c.round_trip("SHUTDOWN"), "OK draining");
+    drop(c);
+    let metrics = handle.join().unwrap();
+    {
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.count("serve_snapshot_write_errors"), 1);
+        assert_eq!(m.count("serve_snapshots"), 0, "no write may land after the degrade");
+    }
+    plan.assert_exhausted();
+    let snaps = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().to_string_lossy().ends_with(".snap"))
+        .count();
+    assert_eq!(snaps, 0, "no snapshot file may exist after a degraded run");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,9 +1,10 @@
 //! Composed-fault chaos soak (ISSUE 8 tentpole): the whole serving +
 //! jobs + streaming stack, over real TCP, through a single seeded
-//! [`FaultPlan`] that arms **five fault sites at once** — subscriber
+//! [`FaultPlan`] that arms **six fault sites at once** — subscriber
 //! cuts mid-push, checkpoint-write IO errors, mid-sweep interrupts,
-//! scheduler stalls, and synthetic serving-tick overruns that trip the
-//! load-shedding watchdog.
+//! scheduler stalls, synthetic serving-tick overruns that trip the
+//! load-shedding watchdog, and (since ISSUE 10) serving-snapshot write
+//! failures that degrade durable serving back to in-memory.
 //!
 //! The harness itself ([`firefly_p::coordinator::soak`]) already
 //! enforces the hard invariants internally: strict row sequencing on
@@ -27,7 +28,8 @@ use std::time::Duration;
 use firefly_p::coordinator::soak::{run_soak, SoakConfig};
 use firefly_p::util::faults::{FaultPlan, FaultSite};
 
-/// A scratch `--job-dir` unique to this test process.
+/// A scratch durable-state directory (`--job-dir` / `--state-dir`)
+/// unique to this test process.
 fn scratch_job_dir(tag: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("fireflyp-soak-{tag}-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
@@ -35,9 +37,10 @@ fn scratch_job_dir(tag: &str) -> std::path::PathBuf {
     dir
 }
 
-/// The acceptance scenario: 8 jobs, 3 subscribers each, five fault
+/// The acceptance scenario: 8 jobs, 3 subscribers each, six fault
 /// sites composed in one plan, fair-share scheduling and the admission
-/// gate armed, serving load interleaved throughout.
+/// gate armed, serving load (with durable snapshots) interleaved
+/// throughout.
 #[test]
 fn composed_fault_soak_is_bit_identical_to_witness() {
     // Occurrence indices are 0-based visit counts per site, sized well
@@ -50,15 +53,21 @@ fn composed_fault_soak_is_bit_identical_to_witness() {
     // - InterruptAfterBatch: 16 base batch boundaries
     // - SchedulerDelay: 10 dispatches (8 submits + 2 resumes)
     // - OverloadBurst: 40 interleaved OBS ticks
+    // - SnapshotWrite: one-shot at the FIRST write attempt, for the
+    //   same latch reason as CheckpointWrite — the fired error degrades
+    //   the server to in-memory serving, so no later attempt exists.
+    //   40 OBS ticks at cadence 8 guarantee that first attempt.
     let plan = Arc::new(
         FaultPlan::new()
             .at(FaultSite::SubscriberCut, &[5, 23, 47])
             .at(FaultSite::CheckpointWrite, &[2])
             .at(FaultSite::InterruptAfterBatch, &[3, 9])
             .at(FaultSite::SchedulerDelay, &[1, 4])
-            .at(FaultSite::OverloadBurst, &[4, 5, 6]),
+            .at(FaultSite::OverloadBurst, &[4, 5, 6])
+            .at(FaultSite::SnapshotWrite, &[0]),
     );
     let job_dir = scratch_job_dir("composed");
+    let state_dir = scratch_job_dir("composed-state");
     let cfg = SoakConfig {
         seed: 0xC1A05,
         jobs: 8,
@@ -73,6 +82,8 @@ fn composed_fault_soak_is_bit_identical_to_witness() {
         obs_ticks: 40,
         faults: Some(Arc::clone(&plan)),
         job_dir: Some(job_dir.clone()),
+        state_dir: Some(state_dir.clone()),
+        snapshot_every: 8,
     };
 
     // run_soak panics on any invariant violation (lost/dup rows,
@@ -103,8 +114,17 @@ fn composed_fault_soak_is_bit_identical_to_witness() {
     assert!(report.shed_restores >= 1, "shedding must restore");
     // More streams than subscribers: the reconnects are visible.
     assert!(report.streams > 8 * 3);
+    // The armed snapshot-write error degraded durable serving to
+    // in-memory — absorbed as a counter, with the transcripts above
+    // still bit-identical to the witness (chaos cost durability
+    // freshness, never data, never the stepper).
+    assert_eq!(
+        report.snapshot_write_errors, 1,
+        "the one-shot SnapshotWrite fault must fire exactly once"
+    );
 
     let _ = std::fs::remove_dir_all(&job_dir);
+    let _ = std::fs::remove_dir_all(&state_dir);
 }
 
 /// Same harness, faults aimed only at the streaming plane, durable
@@ -127,6 +147,8 @@ fn stream_only_faults_cost_latency_not_data() {
         obs_ticks: 0,
         faults: Some(Arc::clone(&plan)),
         job_dir: None,
+        state_dir: None,
+        snapshot_every: 16,
     };
     let report = run_soak(&cfg);
     assert_eq!(report.rows, 4 * 9);
@@ -209,6 +231,8 @@ fn randomized_seeded_faults_hold_the_soak_contract() {
         obs_ticks: 24,
         faults: Some(Arc::clone(&plan)),
         job_dir: Some(job_dir.clone()),
+        state_dir: None,
+        snapshot_every: 16,
     };
 
     // run_soak enforces the invariant battery internally (sequencing,
